@@ -1,0 +1,41 @@
+//! Multi-task workload (paper Fig. 10): six models on the 46-server
+//! fleet, evaluated under all four systems, with the paper's headline
+//! "who wins and by how much" comparison.
+//!
+//! Run: `cargo run --release --example multi_task`
+
+use hulk::cluster::Fleet;
+use hulk::models::ModelSpec;
+use hulk::systems::{evaluate_all, HulkSplitterKind, SystemKind};
+
+fn main() -> anyhow::Result<()> {
+    let fleet = Fleet::paper_evaluation(0);
+    println!("fleet: {} servers / {} GPUs / {:.1} TB",
+             fleet.len(), fleet.total_gpus(),
+             fleet.total_memory_gb() / 1e3);
+
+    let workload = ModelSpec::paper_six();
+    let eval = evaluate_all(&fleet, &workload, HulkSplitterKind::Oracle)?;
+    println!("\n{}", eval.render());
+
+    // Per-system aggregate over the feasible subset.
+    println!("aggregate totals (feasible models only):");
+    for (s, kind) in SystemKind::ALL.iter().enumerate() {
+        let total: f64 = eval
+            .costs
+            .iter()
+            .map(|row| row[s].total_ms())
+            .filter(|t| t.is_finite())
+            .sum();
+        let feasible = eval
+            .costs
+            .iter()
+            .filter(|row| row[s].is_feasible())
+            .count();
+        println!("  {:<22} {:>12.0} ms/iter  ({feasible}/{} models)",
+                 kind.name(), total, eval.models.len());
+    }
+    println!("\nHulk improvement over best baseline: {:.1}% \
+              (paper: >20%)", eval.hulk_improvement() * 100.0);
+    Ok(())
+}

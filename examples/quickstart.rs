@@ -1,0 +1,46 @@
+//! Quickstart: build the paper's Fig. 1 eight-node cluster graph, embed
+//! features, and split it for two training tasks (GPT-2 vs BERT-large —
+//! the paper's §5.1 walkthrough / Fig. 5).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hulk::cluster::Fleet;
+use hulk::graph::{node_features, ClusterGraph, FEATURE_DIM};
+use hulk::models::ModelSpec;
+use hulk::scheduler::{oracle_partition, OracleOptions};
+
+fn main() -> anyhow::Result<()> {
+    // 1. The Fig. 1 toy fleet: 8 machines over 8 regions.
+    let fleet = Fleet::paper_toy(0);
+    println!("fleet:");
+    for m in &fleet.machines {
+        println!("  node {} {}", m.id, m.label());
+    }
+
+    // 2. Graph representation (§3): weighted adjacency + node features.
+    let graph = ClusterGraph::from_fleet(&fleet);
+    println!("\nedges (ms per 64 B):");
+    for i in 0..graph.n {
+        for j in (i + 1)..graph.n {
+            if graph.has_edge(i, j) {
+                println!("  {i} ↔ {j}: {:.1}", graph.weight(i, j));
+            }
+        }
+    }
+    let feats = node_features(&fleet.machines, &graph, graph.n);
+    println!("\nnode 0 features ({} dims): {:?}", FEATURE_DIM,
+             &feats[..FEATURE_DIM]);
+
+    // 3. Two-task split (paper §5.1: GPT-2 : BERT ≈ 4.4 : 1).
+    let tasks = vec![ModelSpec::gpt2_xl(), ModelSpec::bert_large()];
+    let assignment = oracle_partition(&fleet, &graph, &tasks,
+                                      &OracleOptions::default());
+    println!("\n{}", assignment.render_table(&tasks));
+    assignment
+        .validate_memory(&fleet, &tasks)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("assignment is memory-feasible ✓");
+    println!("intra-group comm cost: {:.0}",
+             assignment.total_cost(&graph));
+    Ok(())
+}

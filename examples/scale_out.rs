@@ -1,0 +1,67 @@
+//! Scalability (paper §5.2 / Fig. 6): add machines to a live system —
+//! including the paper's node 45 {Rome, 7, 384} — and watch incremental
+//! re-assignment; then scale one back in.
+//!
+//! Run: `cargo run --release --example scale_out`
+
+use hulk::cluster::paper_data::fig6_node_45;
+use hulk::cluster::{Fleet, GpuModel, Region};
+use hulk::coordinator::{scale_in, scale_out};
+use hulk::graph::ClusterGraph;
+use hulk::models::ModelSpec;
+use hulk::scheduler::{oracle_partition, OracleOptions};
+
+fn main() -> anyhow::Result<()> {
+    // Start from a 45-machine system (leave room for the paper's id 45).
+    let mut fleet = Fleet::paper_evaluation(0);
+    fleet.remove_machine(45);
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let mut tasks = ModelSpec::paper_four();
+    tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+    let mut assignment = oracle_partition(&fleet, &graph, &tasks,
+                                          &OracleOptions::default());
+    println!("initial assignment over {} machines:", fleet.len());
+    for (t, g) in assignment.groups.iter().enumerate() {
+        println!("  {}: {} machines", tasks[t].name, g.len());
+    }
+
+    // Fig. 6: join node 45.
+    let spec = fig6_node_45();
+    let (id, placed) = scale_out(&mut fleet, &mut assignment, &tasks,
+                                 spec.region, spec.gpu, spec.n_gpus);
+    println!("\n+ machine {id} {} joined", spec.label());
+    match placed {
+        Some(t) => println!("  → task {t} ({})", tasks[t].name),
+        None => println!("  → spare pool"),
+    }
+
+    // Add two more machines in different regions.
+    for (region, gpu) in [(Region::California, GpuModel::A100),
+                          (Region::Brasilia, GpuModel::TitanXp)] {
+        let (id, placed) = scale_out(&mut fleet, &mut assignment, &tasks,
+                                     region, gpu, 8);
+        println!("+ machine {id} {{{}, {}, {}}} joined → {:?}",
+                 region.name(), gpu.compute_capability(),
+                 (gpu.memory_gb() * 8.0) as i64,
+                 placed.map(|t| tasks[t].name));
+    }
+
+    assignment
+        .validate_disjoint(fleet.len())
+        .map_err(|e| anyhow::anyhow!(e))?;
+    assignment
+        .validate_memory(&fleet, &tasks)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("\nassignment valid after scale-out ✓");
+
+    // Scale one machine back in (graceful departure).
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let victim = assignment.groups[3][0];
+    let action = scale_in(&fleet, &graph, &mut assignment, &tasks, victim);
+    println!("- machine {victim} departed → {action:?}");
+    assignment
+        .validate_disjoint(fleet.len())
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("assignment valid after scale-in ✓");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time Python package for Hulk (L1 Pallas kernels + L2 JAX model).
+
+Nothing in this package is imported at runtime: ``aot.py`` lowers the model
+to HLO text once (``make artifacts``) and the Rust coordinator loads the
+artifacts through PJRT.
+"""

@@ -1,0 +1,126 @@
+"""AOT lowering: JAX model → HLO *text* artifacts for the Rust runtime.
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged). Python
+never runs on the request path — the Rust binary is self-contained once
+``artifacts/`` exists.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 crate binds) rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Artifacts:
+  gcn_forward.hlo.txt    (params[P], adj[N,N], feats[N,F], mask[N])
+                         → (probs[N,C],)
+  gcn_train_step.hlo.txt (params[P], m[P], v[P], step[1], adj[N,N],
+                          feats[N,F], labels[N]i32, mask[N], lr[1])
+                         → (params'[P], m'[P], v'[P], loss[], acc[])
+  manifest.kv            shape contract consumed by rust (runtime::artifact)
+  init_params.f32        deterministic init vector, little-endian f32
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import DEFAULT_CONFIG, ModelConfig, init_params, forward, train_step
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_forward(cfg: ModelConfig) -> str:
+    def fn(params, adj, feats, mask):
+        return (forward(cfg, params, adj, feats, mask),)
+
+    specs = (
+        jax.ShapeDtypeStruct((cfg.n_params,), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n, cfg.n), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n, cfg.f), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n,), jnp.float32),
+    )
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def lower_train_step(cfg: ModelConfig) -> str:
+    def fn(params, m, v, step, adj, feats, labels, mask, lr):
+        # step/lr arrive as [1] f32 buffers (simplest rust marshalling).
+        p, m2, v2, loss, acc = train_step(
+            cfg, params, m, v, step[0], adj, feats, labels, mask, lr[0])
+        return (p, m2, v2, loss, acc)
+
+    pshape = jax.ShapeDtypeStruct((cfg.n_params,), jnp.float32)
+    specs = (
+        pshape, pshape, pshape,
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n, cfg.n), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n, cfg.f), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n,), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.n,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def write_manifest(cfg: ModelConfig, out_dir: str) -> None:
+    """Plain key-value manifest (offline registry has no serde; rust parses
+    this with util::kv)."""
+    lines = [
+        "format 1",
+        f"n {cfg.n}",
+        f"f {cfg.f}",
+        f"h {cfg.h}",
+        f"h2 {cfg.h2}",
+        f"c {cfg.c}",
+        f"p {cfg.n_params}",
+        "forward gcn_forward.hlo.txt",
+        "train_step gcn_train_step.hlo.txt",
+        "init_params init_params.f32",
+    ]
+    with open(os.path.join(out_dir, "manifest.kv"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    cfg = DEFAULT_CONFIG
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    fwd = lower_forward(cfg)
+    with open(os.path.join(args.out_dir, "gcn_forward.hlo.txt"), "w") as f:
+        f.write(fwd)
+    print(f"gcn_forward.hlo.txt: {len(fwd)} chars")
+
+    ts = lower_train_step(cfg)
+    with open(os.path.join(args.out_dir, "gcn_train_step.hlo.txt"), "w") as f:
+        f.write(ts)
+    print(f"gcn_train_step.hlo.txt: {len(ts)} chars")
+
+    params = np.asarray(init_params(cfg, seed=args.seed), dtype="<f4")
+    params.tofile(os.path.join(args.out_dir, "init_params.f32"))
+    print(f"init_params.f32: {params.size} f32 ({cfg.n_params} expected)")
+    assert params.size == cfg.n_params
+
+    write_manifest(cfg, args.out_dir)
+    print("manifest.kv written")
+
+
+if __name__ == "__main__":
+    main()

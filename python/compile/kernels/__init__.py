@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for the Hulk GCN.
+
+All kernels run under ``interpret=True`` (the CPU PJRT plugin cannot execute
+Mosaic custom-calls); they lower into the same HLO module as the surrounding
+L2 jax model, so the Rust runtime sees a single artifact per entry point.
+
+Each kernel is wrapped in ``jax.custom_vjp`` — Pallas calls have no automatic
+transpose rule, and the backward passes are small dense expressions that XLA
+fuses well, so they are written in plain jnp (documented per kernel).
+"""
+
+from .edge_pool import edge_aggregate
+from .gcn_layer import gcn_layer
+from .softmax_xent import masked_softmax_xent
+
+__all__ = ["edge_aggregate", "gcn_layer", "masked_softmax_xent"]

@@ -1,0 +1,96 @@
+"""Fused GCN layer as a Pallas kernel: ``act(a_hat @ (x @ w) + b)``.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the two chained GEMMs of a
+GCN layer are fused into one kernel so the intermediate ``x @ w`` block never
+leaves VMEM. The grid tiles the *output-feature* dimension; per grid step the
+kernel holds
+
+    x      [N, Din]    (node-feature block, VMEM-resident)
+    w      [Din, T]    (weight column tile → MXU)
+    a_hat  [N, N]      (normalized connectivity, reused across tiles)
+    out    [N, T]
+
+For the repo's shapes (N=64, Din≤256, T=128) that is ≈0.42 MiB — far under
+VMEM, so HBM traffic is exactly one read per operand and one write of the
+output, which an unfused XLA lowering does not guarantee (it spills the
+intermediate between the two dots).
+
+Backward pass: a ``jax.custom_vjp`` in plain jnp (Pallas has no transpose
+rule); the expressions are three small GEMMs that XLA fuses on its own.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_tile(dout: int) -> int:
+    """Output-feature tile: 128 (MXU lane width) when divisible, else the
+    whole dimension (head layers have Dout = C = 8)."""
+    return 128 if dout % 128 == 0 else dout
+
+
+def _gcn_kernel(a_ref, x_ref, w_ref, ws_ref, b_ref, o_ref, *, relu: bool):
+    x = x_ref[...]
+    xw = jnp.dot(x, w_ref[...], preferred_element_type=jnp.float32)
+    out = jnp.dot(a_ref[...], xw, preferred_element_type=jnp.float32)
+    out = out + jnp.dot(x, ws_ref[...], preferred_element_type=jnp.float32)
+    out = out + b_ref[...]
+    if relu:
+        out = jnp.maximum(out, 0.0)
+    o_ref[...] = out
+
+
+def _gcn_forward(a_hat, x, w, w_self, b, relu: bool):
+    n, din = x.shape
+    dout = w.shape[1]
+    t = _pick_tile(dout)
+    grid = (dout // t,)
+    return pl.pallas_call(
+        functools.partial(_gcn_kernel, relu=relu),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda j: (0, 0)),        # a_hat: reused
+            pl.BlockSpec((n, din), lambda j: (0, 0)),      # x: reused
+            pl.BlockSpec((din, t), lambda j: (0, j)),      # w: column tile
+            pl.BlockSpec((din, t), lambda j: (0, j)),      # w_self tile
+            pl.BlockSpec((1, t), lambda j: (0, j)),        # b: column tile
+        ],
+        out_specs=pl.BlockSpec((n, t), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, dout), jnp.float32),
+        interpret=True,
+    )(a_hat, x, w, w_self, b.reshape(1, dout))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def gcn_layer(a_hat, x, w, w_self, b, relu: bool = True):
+    """One residual GCN layer (Eq. 1 + self path), Pallas-fused:
+    ``act(Â (x w) + x w_self + b)``. Differentiable in ``x``, ``w``,
+    ``w_self``, ``b`` (``a_hat`` is data — the cluster topology)."""
+    return _gcn_forward(a_hat, x, w, w_self, b, relu)
+
+
+def _gcn_fwd(a_hat, x, w, w_self, b, relu: bool):
+    out = _gcn_forward(a_hat, x, w, w_self, b, relu)
+    return out, (a_hat, x, w, w_self, out)
+
+
+def _gcn_bwd(relu: bool, res, g):
+    a_hat, x, w, w_self, out = res
+    if relu:
+        g = g * (out > 0).astype(g.dtype)
+    # out = a @ (x @ w) + x @ ws + b  (a treated as constant)
+    atg = a_hat.T @ g                    # [N, Dout]
+    dx = atg @ w.T + g @ w_self.T        # [N, Din]
+    dw = x.T @ atg                       # [Din, Dout]
+    dws = x.T @ g                        # [Din, Dout]
+    db = jnp.sum(g, axis=0)              # [Dout] (bias added after the a@ ·)
+    da = jnp.zeros_like(a_hat)           # topology carries no gradient
+    return da, dx, dw, dws, db
+
+
+gcn_layer.defvjp(_gcn_fwd, _gcn_bwd)

@@ -1,0 +1,103 @@
+"""Pure-jnp oracle implementations of every Pallas kernel.
+
+These are the single source of truth for kernel semantics: pytest asserts
+``kernel(x) ≈ ref(x)`` over shape/dtype/value sweeps (see
+``python/tests/test_kernels.py``), and the L2 model exposes a ``*_ref``
+forward built from these ops so model-level divergence can be bisected to a
+kernel.
+
+Conventions shared with the kernels:
+- ``adj`` is the weighted adjacency matrix, entry = WAN latency in ms per
+  64-byte message (paper Table 1); ``0`` means "no edge / cannot
+  communicate"; the diagonal is 0.
+- ``mask`` is a float vector, 1.0 for a real machine, 0.0 for a padded slot.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def edge_aggregate_ref(adj: jnp.ndarray, x: jnp.ndarray):
+    """Neighborhood aggregation for the edge-pooling layer (paper Eq. 4).
+
+    Returns ``(nbr_sum, deg, wsum)``:
+      nbr_sum[v] = sum_{u in N(v)} x[u]        (shape [N, F])
+      deg[v]     = |N(v)|                      (shape [N, 1])
+      wsum[v]    = sum_{u in N(v)} adj[v, u]   (shape [N, 1], total latency)
+    """
+    mask = (adj > 0).astype(x.dtype)
+    nbr_sum = mask @ x
+    deg = jnp.sum(mask, axis=1, keepdims=True)
+    wsum = jnp.sum(adj, axis=1, keepdims=True).astype(x.dtype)
+    return nbr_sum, deg, wsum
+
+
+def gcn_layer_ref(a_hat: jnp.ndarray, x: jnp.ndarray, w: jnp.ndarray,
+                  w_self: jnp.ndarray, b: jnp.ndarray,
+                  relu: bool = True) -> jnp.ndarray:
+    """One residual GCN layer (paper Eq. 1 + self path):
+    ``act(a_hat @ (x @ w) + x @ w_self + b)``.
+
+    The ``x @ w_self`` residual keeps node identity through depth: with
+    strong intra-region affinities, pure aggregation makes same-region
+    rows of ``a_hat @ (·)`` nearly identical after one layer, and the
+    network collapses to the label marginal (observed empirically; see
+    EXPERIMENTS.md §Fig4).
+    """
+    out = a_hat @ (x @ w) + x @ w_self + b
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def masked_softmax_xent_ref(logits: jnp.ndarray, labels: jnp.ndarray,
+                            mask: jnp.ndarray):
+    """Masked softmax cross-entropy (paper Eq. 5) + accuracy + probs.
+
+    Padded rows (mask == 0) contribute neither to the loss mean nor to the
+    accuracy. Returns ``(loss, acc, probs)`` with scalar loss/acc.
+    """
+    z = logits - jnp.max(logits, axis=1, keepdims=True)
+    ez = jnp.exp(z)
+    probs = ez / jnp.sum(ez, axis=1, keepdims=True)
+    n = logits.shape[0]
+    onehot = (labels[:, None] == jnp.arange(logits.shape[1])[None, :])
+    onehot = onehot.astype(logits.dtype)
+    logp = z - jnp.log(jnp.sum(ez, axis=1, keepdims=True))
+    nvalid = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = -jnp.sum(mask * jnp.sum(onehot * logp, axis=1)) / nvalid
+    pred = jnp.argmax(logits, axis=1)
+    acc = jnp.sum(mask * (pred == labels).astype(logits.dtype)) / nvalid
+    del n
+    return loss, acc, probs
+
+
+# Latency (ms) at which a neighbor counts as much as the node itself.
+# Self-loops get affinity 1.0 (= a hypothetical 10 ms loopback), an intra-
+# region 30 ms link gets 0.33, a cross-continent 300 ms link 0.033 — so the
+# aggregation is dominated by low-latency neighbors, which is the paper's
+# "edge information is crucial" requirement, and node identity survives even
+# on a complete graph (a purely binary connectivity matrix would make all
+# rows of Â identical there and oversmooth every layer).
+AFFINITY_REF_LAT_MS = 10.0
+
+
+def sym_normalize_ref(adj: jnp.ndarray) -> jnp.ndarray:
+    """Latency-affinity GCN normalization: ``D^{-1/2} (S + I) D^{-1/2}``
+    with ``S_uv = min(AFFINITY_REF_LAT_MS / adj_uv, 1)`` on edges, 0
+    elsewhere. The clamp caps any neighbor at the self-loop's weight —
+    an unclamped 1 ms intra-region link would out-weigh self 10:1 and
+    oversmooth the region into a single point.
+
+    Spectral radius ≤ 1 (sym-normalized non-negative symmetric matrix), and
+    an isolated node keeps Â_vv = 1.
+    """
+    edge = adj > 0
+    s = jnp.where(
+        edge,
+        jnp.minimum(AFFINITY_REF_LAT_MS / jnp.maximum(adj, 1e-6), 1.0),
+        0.0)
+    n = s.shape[0]
+    s = s + jnp.eye(n, dtype=jnp.float32)
+    d = jnp.sum(s, axis=1)
+    dinv = 1.0 / jnp.sqrt(jnp.maximum(d, 1e-12))
+    return (dinv[:, None] * s * dinv[None, :]).astype(jnp.float32)

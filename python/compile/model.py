@@ -1,0 +1,232 @@
+"""Layer-2 JAX model: the Hulk GCN (paper §3–§4).
+
+Architecture (paper Fig. 2–3):
+  edge-pool layer (Eq. 4)  F  → H     folds WAN-latency edge data into nodes
+  GCN layer 1     (Eq. 1)  H  → H
+  GCN layer 2     (Eq. 1)  H  → H
+  GCN layer 3     (Eq. 1)  H  → H2
+  GCN head        (Eq. 1)  H2 → C     logits, no activation
+  masked softmax cross-entropy (Eq. 5)
+
+Every GCN layer carries a residual self path (``x @ w_self``): without
+it, strong intra-region affinities make same-region rows of the
+aggregation identical and the network collapses to the label marginal
+(EXPERIMENTS.md Fig4 notes). Default dims (N=64 node slots, F=16, H=192,
+H2=96, C=8) give 192,872 parameters — the paper reports "188k"; the
+small delta is the paper not specifying layer widths. Optimizer: Adam(lr=0.01) per the paper's learning
+rate; Fig. 4's "99% accuracy by step 6" reproduces under these settings
+(see EXPERIMENTS.md).
+
+All hot ops route through the L1 Pallas kernels; the only jnp glue is the
+edge-pool linear combine and the Adam update (pure element-wise, XLA fuses
+them into the surrounding kernels' HLO).
+
+Parameters travel as ONE flat f32 vector so the Rust runtime manages a
+single device buffer; ``param_layout()`` is the offset contract and is
+emitted into ``artifacts/manifest.kv``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import edge_aggregate, gcn_layer, masked_softmax_xent
+from .kernels import ref as _ref  # noqa: F401  (re-exported for tests)
+from .kernels.ref import (edge_aggregate_ref, gcn_layer_ref,
+                          masked_softmax_xent_ref, sym_normalize_ref)
+
+# Latencies are O(100) ms; this keeps the edge-pool latency channel O(1).
+WSUM_SCALE = 0.01
+
+# Adam hyper-parameters (paper specifies only lr = 0.01).
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape contract shared with the Rust runtime."""
+    n: int = 64    # node slots (46-server fleet + scale-out headroom)
+    f: int = 16    # input features per node (graph::features in rust)
+    h: int = 192   # hidden width
+    h2: int = 96   # pre-head width
+    c: int = 8     # task classes (max concurrent tasks)
+
+    def param_layout(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """(name, shape) in flat-vector order. The Rust side mirrors this
+        only through the total length P; slicing happens here."""
+        f, h, h2, c = self.f, self.h, self.h2, self.c
+        return [
+            ("ep_w_self", (f, h)),
+            ("ep_w_nbr", (f, h)),
+            ("ep_w_e", (1, h)),
+            ("ep_b", (h,)),
+            ("g1_w", (h, h)),
+            ("g1_ws", (h, h)),
+            ("g1_b", (h,)),
+            ("g2_w", (h, h)),
+            ("g2_ws", (h, h)),
+            ("g2_b", (h,)),
+            ("g3_w", (h, h2)),
+            ("g3_ws", (h, h2)),
+            ("g3_b", (h2,)),
+            ("hd_w", (h2, c)),
+            ("hd_ws", (h2, c)),
+            ("hd_b", (c,)),
+        ]
+
+    @property
+    def n_params(self) -> int:
+        total = 0
+        for _, shape in self.param_layout():
+            size = 1
+            for d in shape:
+                size *= d
+            total += size
+        return total
+
+
+DEFAULT_CONFIG = ModelConfig()
+
+
+def unflatten_params(cfg: ModelConfig, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Slice the flat parameter vector into named tensors (static offsets —
+    lowers to HLO slices, no gather)."""
+    out: Dict[str, jnp.ndarray] = {}
+    off = 0
+    for name, shape in cfg.param_layout():
+        size = 1
+        for d in shape:
+            size *= d
+        out[name] = flat[off:off + size].reshape(shape)
+        off += size
+    assert off == cfg.n_params
+    return out
+
+
+def flatten_params(cfg: ModelConfig, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in cfg.param_layout()])
+
+
+def init_params(cfg: ModelConfig = DEFAULT_CONFIG, seed: int = 0) -> jnp.ndarray:
+    """Glorot-uniform weights (head scaled 0.1× so initial logits stay near
+    zero → initial loss ≈ ln C), zero biases. Deterministic in ``seed`` —
+    the same vector is serialized to ``artifacts/init_params.f32`` for
+    Rust."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in cfg.param_layout():
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            parts.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in, fan_out = shape[0], shape[-1]
+            bound = jnp.sqrt(6.0 / (fan_in + fan_out))
+            if name in ("hd_w", "hd_ws"):
+                bound = bound * 0.1
+            parts.append(
+                jax.random.uniform(sub, shape, jnp.float32, -bound, bound)
+                .reshape(-1))
+    return jnp.concatenate([p.reshape(-1) for p in parts])
+
+
+def _edge_pool(p: Dict[str, jnp.ndarray], adj, x, mask):
+    """Paper Eq. 4 with mean normalization (the 1/c_{u,v} of Eq. 1):
+    h_v = relu(W_s x_v + W_n mean_{u∈N(v)} x_u + w_e · latsum_v + b)."""
+    nbr_sum, deg, wsum = edge_aggregate(adj, x)
+    degc = jnp.maximum(deg, 1.0)
+    nbr_mean = nbr_sum / degc
+    wmean = (wsum / degc) * WSUM_SCALE
+    h = (x @ p["ep_w_self"] + nbr_mean @ p["ep_w_nbr"]
+         + wmean @ p["ep_w_e"] + p["ep_b"])
+    return jnp.maximum(h, 0.0) * mask[:, None]
+
+
+def forward(cfg: ModelConfig, flat_params, adj, feats, mask) -> jnp.ndarray:
+    """Full forward pass → class probabilities [N, C]."""
+    p = unflatten_params(cfg, flat_params)
+    a_hat = sym_normalize_ref(adj)
+    h0 = _edge_pool(p, adj, feats, mask)
+    h1 = gcn_layer(a_hat, h0, p["g1_w"], p["g1_ws"], p["g1_b"], True) * mask[:, None]
+    h2 = gcn_layer(a_hat, h1, p["g2_w"], p["g2_ws"], p["g2_b"], True) * mask[:, None]
+    h3 = gcn_layer(a_hat, h2, p["g3_w"], p["g3_ws"], p["g3_b"], True) * mask[:, None]
+    logits = gcn_layer(a_hat, h3, p["hd_w"], p["hd_ws"], p["hd_b"], False)
+    z = logits - jnp.max(logits, axis=1, keepdims=True)
+    ez = jnp.exp(z)
+    return ez / jnp.sum(ez, axis=1, keepdims=True)
+
+
+def _logits(cfg: ModelConfig, flat_params, adj, feats, mask):
+    p = unflatten_params(cfg, flat_params)
+    a_hat = sym_normalize_ref(adj)
+    h0 = _edge_pool(p, adj, feats, mask)
+    h1 = gcn_layer(a_hat, h0, p["g1_w"], p["g1_ws"], p["g1_b"], True) * mask[:, None]
+    h2 = gcn_layer(a_hat, h1, p["g2_w"], p["g2_ws"], p["g2_b"], True) * mask[:, None]
+    h3 = gcn_layer(a_hat, h2, p["g3_w"], p["g3_ws"], p["g3_b"], True) * mask[:, None]
+    return gcn_layer(a_hat, h3, p["hd_w"], p["hd_ws"], p["hd_b"], False)
+
+
+def loss_fn(cfg: ModelConfig, flat_params, adj, feats, labels, mask):
+    """Masked cross-entropy (Eq. 5). Returns (loss, (acc, probs))."""
+    logits = _logits(cfg, flat_params, adj, feats, mask)
+    loss, acc, probs = masked_softmax_xent(logits, labels, mask)
+    return loss, (acc, probs)
+
+
+def train_step(cfg: ModelConfig, flat_params, m, v, step, adj, feats,
+               labels, mask, lr):
+    """One Adam step. ``step`` is the 1-based step counter as f32 (bias
+    correction). Returns (params', m', v', loss, acc)."""
+    (loss, (acc, _)), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, adj, feats, labels, mask),
+        has_aux=True)(flat_params)
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * grads
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * grads * grads
+    mhat = m / (1.0 - ADAM_B1 ** step)
+    vhat = v / (1.0 - ADAM_B2 ** step)
+    new_params = flat_params - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return new_params, m, v, loss, acc
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp reference model (same math through ref.py ops) — used by pytest to
+# bisect model-level divergence down to a kernel.
+# ---------------------------------------------------------------------------
+
+def forward_ref(cfg: ModelConfig, flat_params, adj, feats, mask):
+    p = unflatten_params(cfg, flat_params)
+    a_hat = sym_normalize_ref(adj)
+    nbr_sum, deg, wsum = edge_aggregate_ref(adj, feats)
+    degc = jnp.maximum(deg, 1.0)
+    h0 = (feats @ p["ep_w_self"] + (nbr_sum / degc) @ p["ep_w_nbr"]
+          + (wsum / degc) * WSUM_SCALE @ p["ep_w_e"] + p["ep_b"])
+    h0 = jnp.maximum(h0, 0.0) * mask[:, None]
+    h1 = gcn_layer_ref(a_hat, h0, p["g1_w"], p["g1_ws"], p["g1_b"], True) * mask[:, None]
+    h2 = gcn_layer_ref(a_hat, h1, p["g2_w"], p["g2_ws"], p["g2_b"], True) * mask[:, None]
+    h3 = gcn_layer_ref(a_hat, h2, p["g3_w"], p["g3_ws"], p["g3_b"], True) * mask[:, None]
+    logits = gcn_layer_ref(a_hat, h3, p["hd_w"], p["hd_ws"], p["hd_b"], False)
+    z = logits - jnp.max(logits, axis=1, keepdims=True)
+    ez = jnp.exp(z)
+    return ez / jnp.sum(ez, axis=1, keepdims=True)
+
+
+def loss_ref(cfg: ModelConfig, flat_params, adj, feats, labels, mask):
+    p = unflatten_params(cfg, flat_params)
+    a_hat = sym_normalize_ref(adj)
+    nbr_sum, deg, wsum = edge_aggregate_ref(adj, feats)
+    degc = jnp.maximum(deg, 1.0)
+    h0 = (feats @ p["ep_w_self"] + (nbr_sum / degc) @ p["ep_w_nbr"]
+          + (wsum / degc) * WSUM_SCALE @ p["ep_w_e"] + p["ep_b"])
+    h0 = jnp.maximum(h0, 0.0) * mask[:, None]
+    h1 = gcn_layer_ref(a_hat, h0, p["g1_w"], p["g1_ws"], p["g1_b"], True) * mask[:, None]
+    h2 = gcn_layer_ref(a_hat, h1, p["g2_w"], p["g2_ws"], p["g2_b"], True) * mask[:, None]
+    h3 = gcn_layer_ref(a_hat, h2, p["g3_w"], p["g3_ws"], p["g3_b"], True) * mask[:, None]
+    logits = gcn_layer_ref(a_hat, h3, p["hd_w"], p["hd_ws"], p["hd_b"], False)
+    loss, acc, probs = masked_softmax_xent_ref(logits, labels, mask)
+    return loss, (acc, probs)

@@ -1,0 +1,30 @@
+"""Shared fixtures: random cluster-like graphs at configurable sizes."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+
+def make_graph(n_slots: int, n_real: int, n_feat: int, seed: int,
+               density: float = 0.6):
+    """Random weighted graph shaped like a Hulk cluster: symmetric latency
+    weights in [20, 400) ms, zero diagonal, padded to ``n_slots``."""
+    rng = np.random.default_rng(seed)
+    adj = np.zeros((n_slots, n_slots), np.float32)
+    for i in range(n_real):
+        for j in range(i + 1, n_real):
+            if rng.random() < density:
+                w = np.float32(rng.uniform(20.0, 400.0))
+                adj[i, j] = w
+                adj[j, i] = w
+    feats = np.zeros((n_slots, n_feat), np.float32)
+    feats[:n_real] = rng.normal(0.0, 1.0, size=(n_real, n_feat))
+    mask = np.zeros((n_slots,), np.float32)
+    mask[:n_real] = 1.0
+    return adj, feats, mask, rng
+
+
+@pytest.fixture
+def small_graph():
+    return make_graph(n_slots=16, n_real=9, n_feat=8, seed=7)

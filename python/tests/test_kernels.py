@@ -1,0 +1,262 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes (within the kernels' tiling constraints), seeds and
+value distributions; assert_allclose is the contract. These tests are the
+core correctness signal for the whole stack — the Rust runtime executes the
+HLO these kernels lower into.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import edge_aggregate, gcn_layer, masked_softmax_xent
+from compile.kernels.ref import (edge_aggregate_ref, gcn_layer_ref,
+                                 masked_softmax_xent_ref, sym_normalize_ref)
+
+from .conftest import make_graph
+
+# Shape sets honoring the kernels' constraints (output dim tiles at 128 when
+# divisible, otherwise a single tile).
+NS = [4, 8, 16, 64]
+FS = [4, 8, 16]
+DOUTS = [8, 16, 128, 256]
+
+
+def _rand(rng, *shape):
+    return rng.normal(0.0, 1.0, size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------- edge
+@settings(max_examples=40, deadline=None)
+@given(n=st.sampled_from(NS), f=st.sampled_from(FS),
+       seed=st.integers(0, 2**31 - 1),
+       density=st.floats(0.0, 1.0))
+def test_edge_aggregate_matches_ref(n, f, seed, density):
+    adj, feats, _, _ = make_graph(n, n, f, seed, density)
+    got = edge_aggregate(adj, feats)
+    want = edge_aggregate_ref(jnp.asarray(adj), jnp.asarray(feats))
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-5)
+
+
+def test_edge_aggregate_empty_graph():
+    adj = np.zeros((8, 8), np.float32)
+    x = np.ones((8, 4), np.float32)
+    nbr, deg, wsum = edge_aggregate(adj, x)
+    assert np.all(np.asarray(nbr) == 0)
+    assert np.all(np.asarray(deg) == 0)
+    assert np.all(np.asarray(wsum) == 0)
+
+
+def test_edge_aggregate_complete_graph():
+    n, f = 8, 4
+    adj = np.full((n, n), 100.0, np.float32)
+    np.fill_diagonal(adj, 0.0)
+    x = np.arange(n * f, dtype=np.float32).reshape(n, f)
+    nbr, deg, wsum = edge_aggregate(adj, x)
+    assert_allclose(np.asarray(deg)[:, 0], np.full(n, n - 1.0))
+    assert_allclose(np.asarray(wsum)[:, 0], np.full(n, 100.0 * (n - 1)))
+    total = x.sum(axis=0)
+    for v in range(n):
+        assert_allclose(np.asarray(nbr)[v], total - x[v], rtol=1e-6)
+
+
+def test_edge_aggregate_grad_matches_ref():
+    adj, feats, _, _ = make_graph(8, 8, 4, seed=3)
+
+    def f_kernel(x):
+        nbr, _, _ = edge_aggregate(adj, x)
+        return jnp.sum(nbr ** 2)
+
+    def f_ref(x):
+        nbr, _, _ = edge_aggregate_ref(jnp.asarray(adj), x)
+        return jnp.sum(nbr ** 2)
+
+    g1 = jax.grad(f_kernel)(jnp.asarray(feats))
+    g2 = jax.grad(f_ref)(jnp.asarray(feats))
+    assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------- gcn
+@settings(max_examples=40, deadline=None)
+@given(n=st.sampled_from(NS), din=st.sampled_from([8, 16, 128, 256]),
+       dout=st.sampled_from(DOUTS), relu=st.booleans(),
+       seed=st.integers(0, 2**31 - 1))
+def test_gcn_layer_matches_ref(n, din, dout, relu, seed):
+    rng = np.random.default_rng(seed)
+    adj, _, _, _ = make_graph(n, n, 4, seed)
+    a_hat = np.asarray(sym_normalize_ref(jnp.asarray(adj)))
+    x = _rand(rng, n, din)
+    w = _rand(rng, din, dout)
+    b = _rand(rng, dout)
+    ws = _rand(rng, din, dout)
+    got = gcn_layer(a_hat, x, w, ws, b, relu)
+    want = gcn_layer_ref(a_hat, x, w, ws, b, relu)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_gcn_layer_identity_adjacency():
+    """Â = I reduces the layer to a dense layer."""
+    rng = np.random.default_rng(0)
+    n, din, dout = 8, 16, 8
+    x = _rand(rng, n, din)
+    w = _rand(rng, din, dout)
+    b = np.zeros(dout, np.float32)
+    ws = np.zeros((din, dout), np.float32)
+    got = gcn_layer(np.eye(n, dtype=np.float32), x, w, ws, b, False)
+    assert_allclose(np.asarray(got), x @ w, rtol=1e-5, atol=1e-5)
+
+
+def test_gcn_layer_grads_match_ref():
+    rng = np.random.default_rng(1)
+    n, din, dout = 8, 16, 8
+    adj, _, _, _ = make_graph(n, n, 4, seed=2)
+    a_hat = np.asarray(sym_normalize_ref(jnp.asarray(adj)))
+    x = _rand(rng, n, din)
+    w = _rand(rng, din, dout)
+    b = _rand(rng, dout)
+
+    ws = _rand(rng, din, dout)
+
+    def f_kernel(x, w, ws, b):
+        return jnp.sum(gcn_layer(a_hat, x, w, ws, b, True) ** 2)
+
+    def f_ref(x, w, ws, b):
+        return jnp.sum(gcn_layer_ref(a_hat, x, w, ws, b, True) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2, 3))(x, w, ws, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2, 3))(x, w, ws, b)
+    for a, c in zip(gk, gr):
+        assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-4, atol=1e-4)
+
+
+def test_gcn_layer_relu_gradient_gate():
+    """Gradient must be zero where relu clipped the forward."""
+    n = 4
+    a_hat = np.eye(n, dtype=np.float32)
+    x = np.array([[-1.0], [2.0], [-3.0], [4.0]], np.float32)
+    w = np.ones((1, 8), np.float32)
+    ws = np.zeros((1, 8), np.float32)
+    b = np.zeros(8, np.float32)
+    g = jax.grad(
+        lambda x: jnp.sum(gcn_layer(a_hat, x, w, ws, b, True)))(x)
+    g = np.asarray(g)
+    assert np.all(g[0] == 0) and np.all(g[2] == 0)
+    assert np.all(g[1] == 8) and np.all(g[3] == 8)
+
+
+# ---------------------------------------------------------------------- xent
+@settings(max_examples=40, deadline=None)
+@given(n=st.sampled_from(NS), c=st.sampled_from([2, 4, 8]),
+       n_real=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_softmax_xent_matches_ref(n, c, n_real, seed):
+    n_real = min(n_real, n)
+    rng = np.random.default_rng(seed)
+    logits = _rand(rng, n, c) * 3.0
+    labels = rng.integers(0, c, size=n).astype(np.int32)
+    mask = np.zeros(n, np.float32)
+    mask[:n_real] = 1.0
+    got = masked_softmax_xent(logits, labels, mask)
+    want = masked_softmax_xent_ref(jnp.asarray(logits), jnp.asarray(labels),
+                                   jnp.asarray(mask))
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_xent_perfect_prediction():
+    n, c = 8, 4
+    labels = np.arange(n, dtype=np.int32) % c
+    logits = np.full((n, c), -20.0, np.float32)
+    logits[np.arange(n), labels] = 20.0
+    mask = np.ones(n, np.float32)
+    loss, acc, _ = masked_softmax_xent(logits, labels, mask)
+    assert float(loss) < 1e-3
+    assert float(acc) == 1.0
+
+
+def test_softmax_xent_mask_excludes_padding():
+    """Padded rows must not change loss/acc no matter their logits."""
+    n, c = 8, 4
+    rng = np.random.default_rng(5)
+    logits = _rand(rng, n, c)
+    labels = rng.integers(0, c, n).astype(np.int32)
+    mask = np.zeros(n, np.float32)
+    mask[:5] = 1.0
+    l1, a1, _ = masked_softmax_xent(logits, labels, mask)
+    logits2 = logits.copy()
+    logits2[5:] = 1e4  # garbage in the padding
+    l2, a2, _ = masked_softmax_xent(logits2, labels, mask)
+    assert_allclose(float(l1), float(l2), rtol=1e-6)
+    assert float(a1) == float(a2)
+
+
+def test_softmax_xent_grad_matches_ref():
+    n, c = 8, 4
+    rng = np.random.default_rng(9)
+    logits = _rand(rng, n, c)
+    labels = rng.integers(0, c, n).astype(np.int32)
+    mask = np.ones(n, np.float32)
+    mask[6:] = 0.0
+
+    def f_kernel(z):
+        loss, _, _ = masked_softmax_xent(z, labels, mask)
+        return loss
+
+    def f_ref(z):
+        loss, _, _ = masked_softmax_xent_ref(z, jnp.asarray(labels),
+                                             jnp.asarray(mask))
+        return loss
+
+    gk = jax.grad(f_kernel)(jnp.asarray(logits))
+    gr = jax.grad(f_ref)(jnp.asarray(logits))
+    assert_allclose(np.asarray(gk), np.asarray(gr), rtol=1e-5, atol=1e-6)
+    # Padded rows carry no gradient.
+    assert np.all(np.asarray(gk)[6:] == 0)
+
+
+def test_softmax_xent_grad_finite_differences():
+    """Kernel VJP vs central finite differences (the ground truth)."""
+    n, c = 4, 3
+    rng = np.random.default_rng(11)
+    logits = _rand(rng, n, c)
+    labels = rng.integers(0, c, n).astype(np.int32)
+    mask = np.ones(n, np.float32)
+
+    def f(z):
+        loss, _, _ = masked_softmax_xent(z, labels, mask)
+        return float(loss)
+
+    g = np.asarray(jax.grad(
+        lambda z: masked_softmax_xent(z, labels, mask)[0])(jnp.asarray(logits)))
+    eps = 1e-3
+    for i in range(n):
+        for j in range(c):
+            zp = logits.copy(); zp[i, j] += eps
+            zm = logits.copy(); zm[i, j] -= eps
+            fd = (f(zp) - f(zm)) / (2 * eps)
+            assert abs(fd - g[i, j]) < 5e-3, (i, j, fd, g[i, j])
+
+
+# ----------------------------------------------------------------- normalize
+@settings(max_examples=25, deadline=None)
+@given(n=st.sampled_from(NS), seed=st.integers(0, 2**31 - 1))
+def test_sym_normalize_rows_bounded(n, seed):
+    adj, _, _, _ = make_graph(n, n, 4, seed)
+    a_hat = np.asarray(sym_normalize_ref(jnp.asarray(adj)))
+    assert a_hat.shape == (n, n)
+    assert np.all(a_hat >= 0)
+    # Spectral radius of sym-normalized adjacency-with-self-loops is <= 1.
+    eig = np.max(np.abs(np.linalg.eigvalsh(a_hat)))
+    assert eig <= 1.0 + 1e-5
+
+
+def test_sym_normalize_isolated_node_keeps_self_loop():
+    adj = np.zeros((4, 4), np.float32)
+    a_hat = np.asarray(sym_normalize_ref(jnp.asarray(adj)))
+    assert_allclose(a_hat, np.eye(4), atol=1e-6)

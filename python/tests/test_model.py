@@ -1,0 +1,191 @@
+"""L2 model tests: shapes, kernel-vs-ref agreement at model level, gradient
+checks, masking invariants, parameter plumbing."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.model import (DEFAULT_CONFIG, ModelConfig, flatten_params,
+                           forward, forward_ref, init_params, loss_fn,
+                           loss_ref, train_step, unflatten_params)
+
+from .conftest import make_graph
+
+SMALL = ModelConfig(n=16, f=8, h=32, h2=16, c=4)
+
+
+def _graph(cfg, n_real, seed=0):
+    adj, feats, mask, rng = make_graph(cfg.n, n_real, cfg.f, seed)
+    labels = np.zeros(cfg.n, np.int32)
+    labels[:n_real] = rng.integers(0, cfg.c, n_real)
+    return adj, feats, mask, labels
+
+
+def test_param_layout_roundtrip():
+    flat = init_params(SMALL, seed=1)
+    assert flat.shape == (SMALL.n_params,)
+    named = unflatten_params(SMALL, flat)
+    back = flatten_params(SMALL, named)
+    assert_allclose(np.asarray(flat), np.asarray(back))
+
+
+def test_default_param_count_matches_paper_scale():
+    # Paper: "The parameters of GCNs are 188k."
+    assert DEFAULT_CONFIG.n_params == 192_872
+    assert abs(DEFAULT_CONFIG.n_params - 188_000) / 188_000 < 0.1
+
+
+def test_init_deterministic():
+    a = init_params(SMALL, seed=3)
+    b = init_params(SMALL, seed=3)
+    c = init_params(SMALL, seed=4)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_forward_shapes_and_simplex():
+    adj, feats, mask, _ = _graph(SMALL, n_real=9)
+    params = init_params(SMALL)
+    probs = np.asarray(forward(SMALL, params, adj, feats, mask))
+    assert probs.shape == (SMALL.n, SMALL.c)
+    assert_allclose(probs.sum(axis=1), np.ones(SMALL.n), rtol=1e-5)
+    assert np.all(probs >= 0)
+
+
+def test_forward_matches_ref_model():
+    adj, feats, mask, _ = _graph(SMALL, n_real=11, seed=5)
+    params = init_params(SMALL, seed=5)
+    a = np.asarray(forward(SMALL, params, adj, feats, mask))
+    b = np.asarray(forward_ref(SMALL, params, adj, feats, mask))
+    assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_loss_matches_ref_model():
+    adj, feats, mask, labels = _graph(SMALL, n_real=11, seed=6)
+    params = init_params(SMALL, seed=6)
+    l1, (a1, _) = loss_fn(SMALL, params, adj, feats, labels, mask)
+    l2, (a2, _) = loss_ref(SMALL, params, adj, feats, labels, mask)
+    assert_allclose(float(l1), float(l2), rtol=1e-4)
+    assert float(a1) == pytest.approx(float(a2))
+
+
+def test_initial_loss_near_log_c():
+    adj, feats, mask, labels = _graph(SMALL, n_real=12, seed=7)
+    params = init_params(SMALL, seed=7)
+    loss, _ = loss_fn(SMALL, params, adj, feats, labels, mask)
+    assert abs(float(loss) - np.log(SMALL.c)) < 0.5
+
+
+def test_grad_matches_ref_model():
+    adj, feats, mask, labels = _graph(SMALL, n_real=10, seed=8)
+    params = init_params(SMALL, seed=8)
+    gk = jax.grad(lambda p: loss_fn(SMALL, p, adj, feats, labels, mask)[0])(params)
+    gr = jax.grad(lambda p: loss_ref(SMALL, p, adj, feats, labels, mask)[0])(params)
+    assert_allclose(np.asarray(gk), np.asarray(gr), rtol=1e-3, atol=1e-5)
+
+
+def test_grad_finite_differences_spotcheck():
+    """VJP through the full kernelized model vs central differences on a
+    random subset of coordinates."""
+    cfg = ModelConfig(n=8, f=4, h=8, h2=8, c=2)
+    adj, feats, mask, labels = _graph(cfg, n_real=6, seed=9)
+    params = np.asarray(init_params(cfg, seed=9)).astype(np.float64)
+
+    def f(p):
+        loss, _ = loss_fn(cfg, jnp.asarray(p, jnp.float32), adj, feats,
+                          labels, mask)
+        return float(loss)
+
+    g = np.asarray(jax.grad(
+        lambda p: loss_fn(cfg, p, adj, feats, labels, mask)[0])(
+            jnp.asarray(params, jnp.float32)))
+    rng = np.random.default_rng(0)
+    idx = rng.choice(cfg.n_params, size=12, replace=False)
+    eps = 1e-2
+    for i in idx:
+        pp = params.copy(); pp[i] += eps
+        pm = params.copy(); pm[i] -= eps
+        fd = (f(pp) - f(pm)) / (2 * eps)
+        assert abs(fd - g[i]) < 2e-2, (i, fd, g[i])
+
+
+def test_padding_rows_do_not_affect_real_nodes():
+    """Garbage in padded feature rows must not change real nodes' outputs
+    (they are masked out of every layer and disconnected in adj)."""
+    adj, feats, mask, _ = _graph(SMALL, n_real=9, seed=10)
+    params = init_params(SMALL, seed=10)
+    p1 = np.asarray(forward(SMALL, params, adj, feats, mask))
+    feats2 = feats.copy()
+    feats2[9:] = 1e3
+    p2 = np.asarray(forward(SMALL, params, adj, feats2, mask))
+    assert_allclose(p1[:9], p2[:9], rtol=1e-5, atol=1e-6)
+
+
+def test_train_step_decreases_loss():
+    adj, feats, mask, labels = _graph(SMALL, n_real=12, seed=11)
+    p = init_params(SMALL, seed=11)
+    m = jnp.zeros(SMALL.n_params)
+    v = jnp.zeros(SMALL.n_params)
+    losses = []
+    accs = []
+    for s in range(1, 61):
+        p, m, v, loss, acc = train_step(SMALL, p, m, v, float(s), adj, feats,
+                                        labels, mask, 0.01)
+        losses.append(float(loss))
+        accs.append(float(acc))
+    assert min(losses) < losses[0] * 0.5
+    assert max(accs) >= 0.75
+
+
+def test_train_step_overfits_structured_labels():
+    """Region-coherent labels (what the oracle emits) should reach ~100%
+    quickly — this is the Fig 4 regime."""
+    cfg = SMALL
+    rng = np.random.default_rng(12)
+    n_real = 12
+    adj = np.zeros((cfg.n, cfg.n), np.float32)
+    labels = np.zeros(cfg.n, np.int32)
+    feats = np.zeros((cfg.n, cfg.f), np.float32)
+    # Two latency cliques: intra 30ms, inter 300ms; features carry the clique.
+    for i in range(n_real):
+        labels[i] = 0 if i < 6 else 1
+        feats[i, labels[i]] = 1.0
+        feats[i, 2:] = rng.normal(0, 0.1, cfg.f - 2)
+    for i in range(n_real):
+        for j in range(i + 1, n_real):
+            w = 30.0 if labels[i] == labels[j] else 300.0
+            adj[i, j] = w
+            adj[j, i] = w
+    mask = np.zeros(cfg.n, np.float32)
+    mask[:n_real] = 1.0
+    p = init_params(cfg, seed=12)
+    m = jnp.zeros(cfg.n_params)
+    v = jnp.zeros(cfg.n_params)
+    accs = []
+    for s in range(1, 41):
+        p, m, v, loss, acc = train_step(cfg, p, m, v, float(s), adj, feats,
+                                        labels, mask, 0.01)
+        accs.append(float(acc))
+    # Paper Fig 4 reaches 99% by step 6 on its (unreleased) data; on this
+    # synthetic two-clique graph the same model/optimizer separates by ~30
+    # Adam steps at the paper's lr. EXPERIMENTS.md discusses the delta.
+    assert max(accs) >= 0.99
+
+
+def test_train_step_ignores_padding_gradient():
+    """Params must receive no gradient from padded rows: two train steps on
+    graphs differing only in padding content give identical params."""
+    adj, feats, mask, labels = _graph(SMALL, n_real=9, seed=13)
+    p0 = init_params(SMALL, seed=13)
+    z = jnp.zeros(SMALL.n_params)
+    feats2 = feats.copy()
+    feats2[9:] = 123.0
+    labels2 = labels.copy()
+    labels2[9:] = 3
+    p1, *_ = train_step(SMALL, p0, z, z, 1.0, adj, feats, labels, mask, 0.01)
+    p2, *_ = train_step(SMALL, p0, z, z, 1.0, adj, feats2, labels2, mask, 0.01)
+    assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5, atol=1e-7)

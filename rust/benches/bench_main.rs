@@ -1,0 +1,22 @@
+//! `cargo bench` entry point (harness = false; criterion is not in the
+//! offline registry — `hulk::benchkit` provides the measurement
+//! discipline). Runs every paper table/figure reproduction plus the
+//! microbenchmarks; pass names to filter, e.g.
+//! `cargo bench --bench bench_main -- fig8 micro`.
+
+use hulk::cli::Cli;
+
+#[path = "../src/bench_impl.rs"]
+mod bench_impl;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // cargo passes `--bench`; drop flags it injects.
+    let names: Vec<String> = args
+        .iter()
+        .filter(|a| !a.starts_with("--"))
+        .cloned()
+        .collect();
+    let cli = Cli::parse(&["bench".to_string()])?;
+    bench_impl::run(&names, &cli)
+}

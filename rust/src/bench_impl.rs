@@ -1,0 +1,421 @@
+//! Benchmark/reproduction entry points — one per paper table/figure
+//! (DESIGN.md experiment index). Shared by `hulk bench <name>` and
+//! `cargo bench` (rust/benches/bench_main.rs).
+
+use anyhow::Result;
+
+use hulk::benchkit::{BenchConfig, Bencher};
+use hulk::cli::Cli;
+use hulk::cluster::paper_data::{fig6_node_45, TABLE1_MS, TABLE1_RECEIVERS,
+                                TABLE1_SENDERS};
+use hulk::cluster::{Fleet, WanModel};
+use hulk::coordinator::{recover, RecoveryAction};
+use hulk::gnn::{make_dataset, train_gcn, TrainerOptions};
+use hulk::graph::ClusterGraph;
+use hulk::models::ModelSpec;
+use hulk::parallel::{pipeline_cost, PipelinePlan};
+use hulk::runtime::client::TrainState;
+use hulk::runtime::{GcnRuntime, Manifest};
+use hulk::scheduler::{oracle_partition, OracleOptions};
+use hulk::sim::simulate_pipeline;
+use hulk::systems::{evaluate_all, HulkSplitterKind};
+use hulk::util::rng::Rng;
+use hulk::util::table::{fmt_ms, fmt_params, Table};
+
+pub fn run(names: &[String], cli: &Cli) -> Result<()> {
+    let list: Vec<&str> = if names.is_empty()
+        || names.iter().any(|n| n == "all")
+    {
+        vec!["table1", "logs", "fig4", "fig5", "fig6", "table2", "fig8",
+             "fig9", "fig10", "ablation", "sweep", "micro"]
+    } else {
+        names.iter().map(String::as_str).collect()
+    };
+    for name in list {
+        println!("\n================ {name} ================");
+        match name {
+            "table1" => table1(cli)?,
+            "table2" => table2(cli)?,
+            "logs" => logs(cli)?,
+            "fig4" => fig4(cli)?,
+            "fig5" => fig5(cli)?,
+            "fig6" => fig6(cli)?,
+            "fig8" => fig8(cli)?,
+            "fig9" => fig9()?,
+            "fig10" => fig10(cli)?,
+            "ablation" => ablation(cli)?,
+            "sweep" => sweep(cli)?,
+            "micro" => micro(cli)?,
+            other => anyhow::bail!("unknown bench {other:?}"),
+        }
+    }
+    Ok(())
+}
+
+/// The paper's raw-measurement path: 3 months of synthetic communication
+/// logs per Table 1 pair → trimmed-mean estimate → compare to the
+/// measured value the table reports.
+fn logs(cli: &Cli) -> Result<()> {
+    use hulk::cluster::logs::{estimate_latency, generate_logs, log_summary};
+    let wan = WanModel::new(cli.flag_u64("seed", 0)?);
+    let days = cli.flag_u64("days", 90)? as usize;
+    let samples = cli.flag_u64("samples", 2000)? as usize;
+    let mut t = Table::new(&["pair", "log mean", "log p95", "trimmed est",
+                             "Table 1"]);
+    for &sender in TABLE1_SENDERS.iter() {
+        for &receiver in TABLE1_RECEIVERS.iter() {
+            let Some(series) =
+                generate_logs(&wan, sender, receiver, days, samples)
+            else {
+                t.row(&[format!("{sender} → {receiver}"), "-".into(),
+                        "-".into(), "-".into(), "blocked".into()]);
+                continue;
+            };
+            let s = log_summary(&series);
+            let est = estimate_latency(&series);
+            let table1 = wan.latency_ms(sender, receiver).unwrap();
+            t.row(&[
+                format!("{sender} → {receiver}"),
+                format!("{:.1}", s.mean),
+                format!("{:.1}", s.p95),
+                format!("{est:.1}"),
+                format!("{table1:.1}"),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("({days} days, {samples} probes/pair; trimmed mean drops the \
+              top 5% congestion spikes — the estimates recover Table 1)");
+    Ok(())
+}
+
+/// DESIGN.md ablation sweeps: fleet size, microbatches, WAN degradation.
+fn sweep(cli: &Cli) -> Result<()> {
+    use hulk::systems::{fleet_size_sweep, microbatch_sweep,
+                        wan_degradation_sweep};
+    let seed = cli.flag_u64("seed", 0)?;
+
+    println!("— fleet-size sweep (Hulk improvement vs best baseline) —");
+    let mut t = Table::new(&["servers", "improvement"]);
+    for p in fleet_size_sweep(seed, &[12, 16, 24, 32, 46],
+                              &ModelSpec::paper_four())? {
+        t.row(&[format!("{:.0}", p.x),
+                format!("{:.1}%", p.improvement * 100.0)]);
+    }
+    println!("{}", t.render());
+
+    println!("— microbatch sweep (GPT-2 Hulk group, per-iter total) —");
+    let mut t = Table::new(&["K", "iter total"]);
+    for p in microbatch_sweep(seed, &ModelSpec::gpt2_xl(),
+                              &[1, 2, 4, 8, 16, 32])? {
+        t.row(&[format!("{:.0}", p.x), fmt_ms(p.improvement)]);
+    }
+    println!("{}", t.render());
+
+    println!("— WAN degradation sweep (all inter-region latencies ×f) —");
+    let mut t = Table::new(&["factor", "improvement"]);
+    for p in wan_degradation_sweep(seed, &[1.0, 2.0, 4.0, 8.0],
+                                   &ModelSpec::paper_four())? {
+        t.row(&[format!("×{:.0}", p.x),
+                format!("{:.1}%", p.improvement * 100.0)]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Table 1: ms per 64-byte message, averaged over 10 sampled
+/// communications per pair (the paper's measurement procedure), plus the
+/// measured seed values for comparison.
+fn table1(cli: &Cli) -> Result<()> {
+    let wan = WanModel::new(cli.flag_u64("seed", 0)?);
+    let mut t = Table::new(&["Regions", "California", "Tokyo", "Berlin",
+                             "London", "New Delhi", "Paris", "Rome",
+                             "Brasilia"]);
+    for (r, &sender) in TABLE1_SENDERS.iter().enumerate() {
+        let mut row = vec![sender.name().to_string()];
+        for (c, &receiver) in TABLE1_RECEIVERS.iter().enumerate() {
+            let cell = match wan.latency_ms(sender, receiver) {
+                None => "-".to_string(),
+                Some(_) => {
+                    let mean: f64 = (0..10)
+                        .map(|trial| {
+                            wan.sample_latency_ms(sender, receiver, trial)
+                                .unwrap()
+                        })
+                        .sum::<f64>()
+                        / 10.0;
+                    let paper = TABLE1_MS[r][c]
+                        .map(|v| format!(" (paper {v})"))
+                        .unwrap_or_default();
+                    format!("{mean:.1}{paper}")
+                }
+            };
+            row.push(cell);
+        }
+        t.row(&row);
+    }
+    println!("{}", t.render());
+    println!("(sampled mean of 10 trials; 'paper' = Table 1 measured seed)");
+    Ok(())
+}
+
+/// Table 2 / Fig. 7: node allocation of the 46-server fleet for the
+/// four-model workload.
+fn table2(cli: &Cli) -> Result<()> {
+    let fleet = Fleet::paper_evaluation(cli.flag_u64("seed", 0)?);
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let mut tasks = ModelSpec::paper_four();
+    tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+    let a = oracle_partition(&fleet, &graph, &tasks,
+                             &OracleOptions::default());
+    println!("{}", a.render_table(&tasks));
+    let spares = a.spares(fleet.len());
+    println!("spares (recovery pool): {spares:?}");
+    println!("total intra-group comm cost: {:.0} ms·edges",
+             a.total_cost(&graph));
+    println!("(paper Table 2 allocates 39 of 46 nodes across the 4 models)");
+    Ok(())
+}
+
+/// Fig. 4: GCN loss/accuracy over 10 training steps (lr 0.01, ~188k
+/// params) — trained from Rust through the PJRT train_step artifact.
+fn fig4(cli: &Cli) -> Result<()> {
+    let rt = GcnRuntime::load(&Manifest::default_dir())?;
+    println!("PJRT platform {}; {} params (paper: 188k); lr 0.01",
+             rt.platform(), rt.manifest.p);
+    let seed = cli.flag_u64("seed", 0)?;
+    // Paper Fig. 4 shows 10 steps to 99%; our features are weaker than
+    // whatever the authors hand-labeled against (their data is
+    // unreleased), so the same curve stretches to ~60 steps. The default
+    // shows the full convergence; pass --steps 10 for the paper's window.
+    let steps = cli.flag_u64("steps", 60)? as u32;
+    // Fig. 4 trains on "this data" — the single labeled cluster graph
+    // (§3–§4), i.e. the supervised overfit regime, not a corpus.
+    let fleet = Fleet::paper_evaluation(seed);
+    let dataset = vec![hulk::gnn::LabeledGraph::from_fleet(
+        &fleet, &ModelSpec::paper_four(), rt.manifest.n)];
+    let mut state = TrainState::fresh(rt.manifest.load_init_params()?);
+    let opts = TrainerOptions { steps, lr: 0.01, log_every: 0 };
+    let t0 = std::time::Instant::now();
+    let curve = train_gcn(&rt, &mut state, &dataset, &opts)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut t = Table::new(&["step", "loss", "accuracy"]);
+    for p in &curve {
+        t.row(&[p.step.to_string(), format!("{:.4}", p.loss),
+                format!("{:.3}", p.acc)]);
+    }
+    println!("{}", t.render());
+    let best = curve.iter().map(|p| p.acc).fold(0.0f32, f32::max);
+    println!("best acc {best:.3} in {steps} steps \
+              ({:.1} ms/step wall)", wall * 1e3 / steps as f64);
+    println!("(paper Fig. 4 peaks at 99% by step 6 on its unreleased \
+              labeled data; see EXPERIMENTS.md)");
+    Ok(())
+}
+
+/// Fig. 5: the 8-node toy graph grouped for GPT-2 vs BERT-large.
+fn fig5(cli: &Cli) -> Result<()> {
+    let fleet = Fleet::paper_toy(cli.flag_u64("seed", 0)?);
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let tasks = vec![ModelSpec::gpt2_xl(), ModelSpec::bert_large()];
+    let a = oracle_partition(&fleet, &graph, &tasks,
+                             &OracleOptions::default());
+    println!("{}", a.render_table(&tasks));
+    for (t, group) in a.groups.iter().enumerate() {
+        let labels: Vec<String> = group
+            .iter()
+            .map(|&m| format!("{}:{}", m, fleet.machines[m].label()))
+            .collect();
+        println!("task {t} ({}) group: {}", tasks[t].name,
+                 labels.join("  "));
+    }
+    println!("(paper Fig. 5: left = GPT-2 group, right = BERT-large group; \
+              sizes track the 4.4:1 parameter ratio)");
+    Ok(())
+}
+
+/// Fig. 6: scale-out — node 45 {Rome, 7, 384} joins and gets assigned.
+fn fig6(cli: &Cli) -> Result<()> {
+    let seed = cli.flag_u64("seed", 0)?;
+    let mut fleet = Fleet::paper_evaluation(seed);
+    fleet.remove_machine(45);
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let mut tasks = ModelSpec::paper_four();
+    tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+    let mut a = oracle_partition(&fleet, &graph, &tasks,
+                                 &OracleOptions::default());
+    let before_cost = a.total_cost(&graph);
+    let spec = fig6_node_45();
+    let (id, placed) = hulk::coordinator::scale_out(
+        &mut fleet, &mut a, &tasks, spec.region, spec.gpu, spec.n_gpus);
+    let graph2 = ClusterGraph::from_fleet(&fleet);
+    println!("joined machine {id} {}", spec.label());
+    match placed {
+        Some(t) => println!("→ assigned to task {t} ({})", tasks[t].name),
+        None => println!("→ kept as spare (recovery pool)"),
+    }
+    a.validate_disjoint(fleet.len()).map_err(|e| anyhow::anyhow!(e))?;
+    a.validate_memory(&fleet, &tasks).map_err(|e| anyhow::anyhow!(e))?;
+    println!("assignment still valid ✓ (intra-group cost {:.0} → {:.0})",
+             before_cost, a.total_cost(&graph2));
+    Ok(())
+}
+
+fn eval_workload(cli: &Cli, workload: Vec<ModelSpec>) -> Result<()> {
+    let fleet = Fleet::paper_evaluation(cli.flag_u64("seed", 0)?);
+    let eval = if cli.flag_bool("gnn") {
+        let rt = GcnRuntime::load(&Manifest::default_dir())?;
+        let mut state = TrainState::fresh(rt.manifest.load_init_params()?);
+        let dataset = make_dataset(16, rt.manifest.n, 0);
+        train_gcn(&rt, &mut state, &dataset,
+                  &TrainerOptions { steps: 60, lr: 0.01, log_every: 0 })?;
+        let params = state.params.clone();
+        let classifier = hulk::gnn::Classifier::Runtime(rt);
+        evaluate_all(&fleet, &workload,
+                     HulkSplitterKind::Gnn { classifier: &classifier,
+                                             params: &params })?
+    } else {
+        evaluate_all(&fleet, &workload, HulkSplitterKind::Oracle)?
+    };
+    println!("{}", eval.render());
+    println!("Hulk total-time improvement over best feasible baseline: \
+              {:.1}% (paper claims >20%)",
+             eval.hulk_improvement() * 100.0);
+    Ok(())
+}
+
+/// Fig. 8: comm + comp time, 4 models × 4 systems.
+fn fig8(cli: &Cli) -> Result<()> {
+    eval_workload(cli, ModelSpec::paper_four())
+}
+
+/// Fig. 9: parameter counts of the six models.
+fn fig9() -> Result<()> {
+    let mut t = Table::new(&["model", "parameters"]);
+    for m in ModelSpec::paper_six() {
+        t.row(&[m.name.to_string(), fmt_params(m.params)]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Fig. 10: comm + comp time, 6 models × 4 systems.
+fn fig10(cli: &Cli) -> Result<()> {
+    eval_workload(cli, ModelSpec::paper_six())
+}
+
+/// Ablations called out in DESIGN.md: analytic vs simulated pipeline
+/// model; locality-aware chain order vs id order; recovery actions.
+fn ablation(cli: &Cli) -> Result<()> {
+    let seed = cli.flag_u64("seed", 0)?;
+    let fleet = Fleet::paper_evaluation(seed);
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let mut tasks = ModelSpec::paper_four();
+    tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+    let a = oracle_partition(&fleet, &graph, &tasks,
+                             &OracleOptions::default());
+
+    println!("— analytic vs discrete-event pipeline model —");
+    let mut t = Table::new(&["model", "analytic total", "sim makespan",
+                             "ratio"]);
+    for (i, task) in tasks.iter().enumerate() {
+        let ordered = hulk::systems::hulk::chain_order(&graph, a.group(i));
+        let stages: Vec<usize> =
+            ordered.into_iter().take(task.layers).collect();
+        let plan = PipelinePlan::proportional(&fleet, stages, task);
+        let analytic = pipeline_cost(&fleet, &plan, task);
+        let sim = simulate_pipeline(&fleet, &plan, task, false, None);
+        t.row(&[
+            task.name.to_string(),
+            fmt_ms(analytic.total_ms()),
+            fmt_ms(sim.makespan_ms),
+            format!("{:.2}", sim.makespan_ms / analytic.total_ms()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("— chain order (locality) vs id order, Hulk groups —");
+    let mut t = Table::new(&["model", "id-order comm", "chain comm",
+                             "gain"]);
+    for (i, task) in tasks.iter().enumerate() {
+        let group = a.group(i).to_vec();
+        let n_stages = group.len().min(task.layers);
+        let id_plan = PipelinePlan::proportional(
+            &fleet, group[..n_stages].to_vec(), task);
+        let ordered = hulk::systems::hulk::chain_order(&graph, &group);
+        let chain_plan = PipelinePlan::proportional(
+            &fleet, ordered[..n_stages].to_vec(), task);
+        let c_id = pipeline_cost(&fleet, &id_plan, task);
+        let c_chain = pipeline_cost(&fleet, &chain_plan, task);
+        t.row(&[
+            task.name.to_string(),
+            fmt_ms(c_id.comm_ms),
+            fmt_ms(c_chain.comm_ms),
+            format!("{:.2}×", c_id.comm_ms / c_chain.comm_ms.max(1e-9)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("— recovery actions over 20 random failures —");
+    let mut rng = Rng::new(seed ^ 0xFA11);
+    let mut counts = [0usize; 4];
+    for _ in 0..20 {
+        let mut a2 = a.clone();
+        let victim = rng.below(fleet.len());
+        let action = recover(&fleet, &graph, &mut a2, &tasks, victim);
+        let idx = match action {
+            RecoveryAction::PromoteSpare { .. } => 0,
+            RecoveryAction::ShrinkGroup { .. } => 1,
+            RecoveryAction::Requeue { .. } => 2,
+            RecoveryAction::NoOp => 3,
+        };
+        counts[idx] += 1;
+    }
+    println!("promote-spare {} | shrink {} | requeue {} | noop(spare) {}",
+             counts[0], counts[1], counts[2], counts[3]);
+    Ok(())
+}
+
+/// Microbenchmarks of the L3 hot paths (benchkit).
+fn micro(cli: &Cli) -> Result<()> {
+    let seed = cli.flag_u64("seed", 0)?;
+    let fleet = Fleet::paper_evaluation(seed);
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let tasks = {
+        let mut t = ModelSpec::paper_four();
+        t.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+        t
+    };
+    let mut b = Bencher::new(BenchConfig::default());
+    b.bench("graph_from_fleet_46", || ClusterGraph::from_fleet(&fleet));
+    b.bench("oracle_partition_46x4", || {
+        oracle_partition(&fleet, &graph, &tasks, &OracleOptions::default())
+    });
+    let a = oracle_partition(&fleet, &graph, &tasks,
+                             &OracleOptions::default());
+    b.bench("chain_order_largest_group", || {
+        hulk::systems::hulk::chain_order(&graph, a.group(0))
+    });
+    let ordered = hulk::systems::hulk::chain_order(&graph, a.group(0));
+    let plan = PipelinePlan::proportional(
+        &fleet, ordered[..a.group(0).len().min(tasks[0].layers)].to_vec(),
+        &tasks[0]);
+    b.bench("pipeline_cost_opt_group", || {
+        pipeline_cost(&fleet, &plan, &tasks[0])
+    });
+    b.bench("simulate_pipeline_opt_group", || {
+        simulate_pipeline(&fleet, &plan, &tasks[0], false, None)
+    });
+    b.bench("evaluate_all_fig8", || {
+        evaluate_all(&fleet, &tasks, HulkSplitterKind::Oracle).unwrap()
+    });
+    // DES event throughput.
+    let sim = simulate_pipeline(&fleet, &plan, &tasks[0], false, None);
+    let r = b.bench("sim_events_per_run", || {
+        simulate_pipeline(&fleet, &plan, &tasks[0], false, None)
+            .events_processed
+    });
+    println!("≈ {:.0} events/ms in the DES engine",
+             sim.events_processed as f64 / r.summary.mean);
+    Ok(())
+}

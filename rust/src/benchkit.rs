@@ -1,0 +1,137 @@
+//! Criterion-substitute micro/macro benchmark harness (the offline vendored
+//! registry has no criterion). Same discipline: warmup, fixed sample count,
+//! mean/p50/p95/stddev, and a one-line-per-benchmark report. Used by
+//! `rust/benches/bench_main.rs` (`cargo bench`) and the `hulk bench` CLI.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+use crate::util::table::Table;
+
+/// Configuration for a measurement run.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    /// Inner iterations per sample for fast functions (amortizes timer
+    /// overhead; per-op time is reported).
+    pub iters_per_sample: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, samples: 20, iters_per_sample: 1 }
+    }
+}
+
+/// One benchmark result (times in milliseconds per operation).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} mean {:>10.4} ms  p50 {:>10.4}  p95 {:>10.4}  sd {:>8.4}  (n={})",
+            self.name,
+            self.summary.mean,
+            self.summary.p50,
+            self.summary.p95,
+            self.summary.stddev,
+            self.summary.n
+        )
+    }
+}
+
+/// Collects results; renders a criterion-like report at the end.
+#[derive(Default)]
+pub struct Bencher {
+    pub config: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(config: BenchConfig) -> Bencher {
+        Bencher { config, results: Vec::new() }
+    }
+
+    /// Measure `f`, which must do one unit of work per call. The return
+    /// value is folded into a black-box sink so the optimizer cannot elide
+    /// the work.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        for _ in 0..self.config.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let start = Instant::now();
+            for _ in 0..self.config.iters_per_sample {
+                std::hint::black_box(f());
+            }
+            let elapsed = start.elapsed().as_secs_f64() * 1_000.0;
+            samples.push(elapsed / self.config.iters_per_sample as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            summary: Summary::of(&samples),
+        };
+        println!("{}", result.line());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Render all collected results as a table (for report files).
+    pub fn report(&self) -> String {
+        let mut t = Table::new(&["benchmark", "mean_ms", "p50_ms", "p95_ms",
+                                 "stddev_ms", "n"]);
+        for r in &self.results {
+            t.row(&[
+                r.name.clone(),
+                format!("{:.4}", r.summary.mean),
+                format!("{:.4}", r.summary.p50),
+                format!("{:.4}", r.summary.p95),
+                format!("{:.4}", r.summary.stddev),
+                r.summary.n.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_positive_times() {
+        let mut b = Bencher::new(BenchConfig {
+            warmup_iters: 1,
+            samples: 5,
+            iters_per_sample: 10,
+        });
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(r.summary.mean > 0.0);
+        assert_eq!(r.summary.n, 5);
+    }
+
+    #[test]
+    fn report_contains_all_rows() {
+        let mut b = Bencher::new(BenchConfig {
+            warmup_iters: 0,
+            samples: 3,
+            iters_per_sample: 1,
+        });
+        b.bench("a", || 1);
+        b.bench("b", || 2);
+        let rep = b.report();
+        assert!(rep.contains("a") && rep.contains("b"));
+    }
+}

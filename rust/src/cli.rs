@@ -1,0 +1,121 @@
+//! Hand-rolled CLI parsing (clap is not in the offline registry).
+//!
+//! ```text
+//! hulk info                         fleet + model inventory
+//! hulk assign [--seed S] [--tasks 4|6] [--gnn]
+//! hulk train-gnn [--steps N] [--lr F] [--dataset N]
+//! hulk simulate [--failures N] [--seed S]
+//! hulk bench <table1|table2|fig4|fig5|fig6|fig8|fig9|fig10|ablation|micro|all>
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: subcommand + flags.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cli {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Cli {
+    /// Parse `args` (without argv[0]). Flags are `--key value` or
+    /// `--key=value`; bare `--key` is a boolean `true`.
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        let Some(command) = args.first() else {
+            bail!("usage: hulk <info|assign|train-gnn|simulate|bench> …");
+        };
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 1;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < args.len()
+                    && !args[i + 1].starts_with("--")
+                {
+                    flags.insert(key.to_string(), args[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Cli { command: command.clone(), positional, flags })
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn flag_bool(&self, key: &str) -> bool {
+        matches!(self.flag(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn flag_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, \
+                                              got {v:?}")),
+        }
+    }
+
+    pub fn flag_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, \
+                                              got {v:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let cli = Cli::parse(&argv("assign --seed 7 --tasks=6 --gnn")).unwrap();
+        assert_eq!(cli.command, "assign");
+        assert_eq!(cli.flag("seed"), Some("7"));
+        assert_eq!(cli.flag("tasks"), Some("6"));
+        assert!(cli.flag_bool("gnn"));
+        assert!(!cli.flag_bool("missing"));
+    }
+
+    #[test]
+    fn positional_arguments_collected() {
+        let cli = Cli::parse(&argv("bench fig8 fig10 --seed 1")).unwrap();
+        assert_eq!(cli.positional, vec!["fig8", "fig10"]);
+        assert_eq!(cli.flag_u64("seed", 0).unwrap(), 1);
+    }
+
+    #[test]
+    fn typed_flags_validate() {
+        let cli = Cli::parse(&argv("train-gnn --steps ten")).unwrap();
+        assert!(cli.flag_u64("steps", 10).is_err());
+        let cli = Cli::parse(&argv("train-gnn --lr 0.01")).unwrap();
+        assert_eq!(cli.flag_f64("lr", 0.1).unwrap(), 0.01);
+        assert_eq!(cli.flag_f64("other", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn empty_args_error() {
+        assert!(Cli::parse(&[]).is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! Fleet construction: the paper's 46-server / 368-GPU evaluation fleet
+//! (§6.1) plus randomized fleets for GNN training-data generation.
+
+use super::gpu::GpuModel;
+use super::machine::Machine;
+use super::paper_data::fig1_toy_fleet;
+use super::region::Region;
+use super::wan::WanModel;
+use crate::util::rng::Rng;
+
+/// A fleet: machines + the WAN connecting their regions.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub machines: Vec<Machine>,
+    pub wan: WanModel,
+}
+
+impl Fleet {
+    pub fn new(machines: Vec<Machine>, wan: WanModel) -> Fleet {
+        // ids must be dense 0..n so they can index matrices directly.
+        for (i, m) in machines.iter().enumerate() {
+            assert_eq!(m.id, i, "machine ids must be dense");
+        }
+        Fleet { machines, wan }
+    }
+
+    pub fn len(&self) -> usize {
+        self.machines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.machines.is_empty()
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.machines.iter().map(|m| m.n_gpus).sum()
+    }
+
+    pub fn total_memory_gb(&self) -> f64 {
+        self.machines.iter().map(|m| m.total_memory_gb()).sum()
+    }
+
+    /// Latency between two machines (ms per 64 B); `None` if their regions
+    /// cannot communicate.
+    pub fn latency_ms(&self, a: usize, b: usize) -> Option<f64> {
+        self.wan
+            .latency_ms(self.machines[a].region, self.machines[b].region)
+    }
+
+    /// Append a machine (Fig. 6 scale-out); returns its id.
+    pub fn add_machine(&mut self, region: Region, gpu: GpuModel,
+                       n_gpus: usize) -> usize
+    {
+        let id = self.machines.len();
+        self.machines.push(Machine::new(id, region, gpu, n_gpus));
+        id
+    }
+
+    /// Remove a machine by id (failure / scale-in). Remaining ids are
+    /// re-densified; returns the removed machine.
+    pub fn remove_machine(&mut self, id: usize) -> Machine {
+        let removed = self.machines.remove(id);
+        for (i, m) in self.machines.iter_mut().enumerate() {
+            m.id = i;
+        }
+        removed
+    }
+
+    /// A copy with the WAN degraded by `factor` (systems::sweep).
+    pub fn with_wan_scaled(&self, factor: f64) -> Fleet {
+        Fleet { machines: self.machines.clone(),
+                wan: self.wan.scaled(factor) }
+    }
+
+    /// The Fig. 1 eight-node toy fleet.
+    pub fn paper_toy(seed: u64) -> Fleet {
+        Fleet::new(fig1_toy_fleet(), WanModel::new(seed))
+    }
+
+    /// The §6.1 evaluation fleet: 46 servers, 8 GPUs each = 368 GPUs,
+    /// spread over all ten regions with a region-correlated GPU mix
+    /// (datacenter parts cluster in the large regions, consumer parts in
+    /// the long tail — matching the paper's mixed inventory).
+    pub fn paper_evaluation(seed: u64) -> Fleet {
+        let mut rng = Rng::new(seed ^ 0x464C_4545_5421); // "FLEET!"
+        // (region, #servers): totals 46.
+        let plan: [(Region, usize); 10] = [
+            (Region::Beijing, 6),
+            (Region::Nanjing, 5),
+            (Region::California, 8),
+            (Region::Tokyo, 5),
+            (Region::Berlin, 4),
+            (Region::London, 4),
+            (Region::NewDelhi, 4),
+            (Region::Paris, 4),
+            (Region::Rome, 3),
+            (Region::Brasilia, 3),
+        ];
+        // Region-weighted GPU pools.
+        let rich: &[GpuModel] = &[
+            GpuModel::A100,
+            GpuModel::A100,
+            GpuModel::A40,
+            GpuModel::V100,
+            GpuModel::Rtx3090,
+        ];
+        let mixed: &[GpuModel] = &[
+            GpuModel::A40,
+            GpuModel::V100,
+            GpuModel::RtxA5000,
+            GpuModel::Rtx3090,
+            GpuModel::Gtx1080Ti,
+        ];
+        let lean: &[GpuModel] = &[
+            GpuModel::V100,
+            GpuModel::RtxA5000,
+            GpuModel::Gtx1080Ti,
+            GpuModel::TitanXp,
+        ];
+        let mut machines = Vec::new();
+        for (region, count) in plan {
+            let pool = match region {
+                Region::California | Region::Beijing | Region::Tokyo => rich,
+                Region::Nanjing | Region::Berlin | Region::London
+                | Region::Paris => mixed,
+                _ => lean,
+            };
+            for _ in 0..count {
+                let gpu = *rng.choice(pool);
+                machines.push(Machine::new(machines.len(), region, gpu, 8));
+            }
+        }
+        assert_eq!(machines.len(), 46);
+        Fleet::new(machines, WanModel::new(seed))
+    }
+
+    /// Random fleet for GNN training-set generation: `n` servers over a
+    /// random subset of regions, 4–12 GPUs each.
+    pub fn random(n: usize, seed: u64) -> Fleet {
+        let mut rng = Rng::new(seed ^ 0x524E_444F_4D46); // "RNDOMF"
+        let n_regions = 2 + rng.below(Region::ALL.len() - 1);
+        let region_idx = rng.sample_indices(Region::ALL.len(), n_regions);
+        let regions: Vec<Region> =
+            region_idx.iter().map(|&i| Region::ALL[i]).collect();
+        let mut machines = Vec::new();
+        for id in 0..n {
+            let region = *rng.choice(&regions);
+            let gpu = *rng.choice(&GpuModel::ALL);
+            let n_gpus = [4, 8, 8, 8, 12][rng.below(5)];
+            machines.push(Machine::new(id, region, gpu, n_gpus));
+        }
+        Fleet::new(machines, WanModel::new(seed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evaluation_fleet_matches_paper_inventory() {
+        let fleet = Fleet::paper_evaluation(0);
+        assert_eq!(fleet.len(), 46);
+        assert_eq!(fleet.total_gpus(), 368); // 46 servers × 8 GPUs (§6.1)
+    }
+
+    #[test]
+    fn evaluation_fleet_is_deterministic() {
+        let a = Fleet::paper_evaluation(3);
+        let b = Fleet::paper_evaluation(3);
+        assert_eq!(a.machines, b.machines);
+    }
+
+    #[test]
+    fn toy_fleet_is_fig1() {
+        let fleet = Fleet::paper_toy(0);
+        assert_eq!(fleet.len(), 8);
+        assert_eq!(fleet.machines[0].region, Region::Beijing);
+    }
+
+    #[test]
+    fn latency_uses_machine_regions() {
+        let fleet = Fleet::paper_toy(0);
+        // node0 Beijing, node2 California → Table 1 measured value.
+        assert_eq!(fleet.latency_ms(0, 2), Some(89.1));
+    }
+
+    #[test]
+    fn add_and_remove_keep_ids_dense() {
+        let mut fleet = Fleet::paper_toy(0);
+        let id = fleet.add_machine(Region::Rome, GpuModel::V100, 12);
+        assert_eq!(id, 8);
+        assert_eq!(fleet.len(), 9);
+        let removed = fleet.remove_machine(3);
+        assert_eq!(removed.region, Region::Tokyo);
+        for (i, m) in fleet.machines.iter().enumerate() {
+            assert_eq!(m.id, i);
+        }
+    }
+
+    #[test]
+    fn random_fleets_vary_with_seed() {
+        let a = Fleet::random(12, 1);
+        let b = Fleet::random(12, 2);
+        assert_eq!(a.len(), 12);
+        assert_ne!(a.machines, b.machines);
+    }
+
+    #[test]
+    #[should_panic(expected = "dense")]
+    fn non_dense_ids_rejected() {
+        let machines = vec![Machine::new(1, Region::Rome, GpuModel::V100, 8)];
+        Fleet::new(machines, WanModel::new(0));
+    }
+}

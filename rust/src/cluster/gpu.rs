@@ -1,0 +1,119 @@
+//! The paper's GPU catalog (§6.1): NVIDIA A100, A40, V100, RTX A5000,
+//! GeForce GTX 1080 Ti, GeForce RTX 3090, TITAN Xp.
+//!
+//! Compute capability values follow NVIDIA's CUDA GPUs table (the paper's
+//! footnote 6); memory is the per-board memory; throughput is the dense
+//! mixed-precision training throughput used by the computation-time model
+//! (tensor-core FP16 where the part has tensor cores, FP32 otherwise —
+//! pre-Volta parts gain nothing from FP16 math for training).
+
+/// GPU model in the fleet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GpuModel {
+    A100,
+    A40,
+    V100,
+    RtxA5000,
+    Gtx1080Ti,
+    Rtx3090,
+    TitanXp,
+}
+
+impl GpuModel {
+    pub const ALL: [GpuModel; 7] = [
+        GpuModel::A100,
+        GpuModel::A40,
+        GpuModel::V100,
+        GpuModel::RtxA5000,
+        GpuModel::Gtx1080Ti,
+        GpuModel::Rtx3090,
+        GpuModel::TitanXp,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuModel::A100 => "NVIDIA A100",
+            GpuModel::A40 => "NVIDIA A40",
+            GpuModel::V100 => "NVIDIA V100",
+            GpuModel::RtxA5000 => "RTX A5000",
+            GpuModel::Gtx1080Ti => "GeForce GTX 1080 Ti",
+            GpuModel::Rtx3090 => "GeForce RTX 3090",
+            GpuModel::TitanXp => "NVIDIA TITAN Xp",
+        }
+    }
+
+    /// NVIDIA compute capability (paper Fig. 1 node feature).
+    pub fn compute_capability(self) -> f64 {
+        match self {
+            GpuModel::A100 => 8.0,
+            GpuModel::A40 => 8.6,
+            GpuModel::V100 => 7.0,
+            GpuModel::RtxA5000 => 8.6,
+            GpuModel::Gtx1080Ti => 6.1,
+            GpuModel::Rtx3090 => 8.6,
+            GpuModel::TitanXp => 6.1,
+        }
+    }
+
+    /// Per-board memory in GB.
+    pub fn memory_gb(self) -> f64 {
+        match self {
+            GpuModel::A100 => 80.0,
+            GpuModel::A40 => 48.0,
+            GpuModel::V100 => 32.0,
+            GpuModel::RtxA5000 => 24.0,
+            GpuModel::Gtx1080Ti => 11.0,
+            GpuModel::Rtx3090 => 24.0,
+            GpuModel::TitanXp => 12.0,
+        }
+    }
+
+    /// Effective dense training throughput in TFLOP/s (tensor-core FP16
+    /// for Volta+, FP32 otherwise). These feed the computation-time model;
+    /// only ratios matter for the reproduced figures.
+    pub fn tflops(self) -> f64 {
+        match self {
+            GpuModel::A100 => 312.0,
+            GpuModel::A40 => 150.0,
+            GpuModel::V100 => 125.0,
+            GpuModel::RtxA5000 => 111.0,
+            GpuModel::Gtx1080Ti => 11.3,
+            GpuModel::Rtx3090 => 142.0,
+            GpuModel::TitanXp => 12.1,
+        }
+    }
+}
+
+impl std::fmt::Display for GpuModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_covers_paper_section_6_1() {
+        assert_eq!(GpuModel::ALL.len(), 7);
+    }
+
+    #[test]
+    fn compute_capabilities_match_nvidia_table() {
+        assert_eq!(GpuModel::A100.compute_capability(), 8.0);
+        assert_eq!(GpuModel::A40.compute_capability(), 8.6);
+        assert_eq!(GpuModel::V100.compute_capability(), 7.0);
+        assert_eq!(GpuModel::TitanXp.compute_capability(), 6.1);
+    }
+
+    #[test]
+    fn throughput_ordering_is_sane() {
+        // Datacenter parts beat consumer parts of the same era.
+        assert!(GpuModel::A100.tflops() > GpuModel::A40.tflops());
+        assert!(GpuModel::V100.tflops() > GpuModel::Gtx1080Ti.tflops());
+        for g in GpuModel::ALL {
+            assert!(g.tflops() > 0.0 && g.memory_gb() > 0.0);
+        }
+    }
+}

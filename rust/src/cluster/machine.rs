@@ -1,0 +1,80 @@
+//! A machine (server) in the fleet: region + homogeneous GPU complement.
+//! The paper's node representation is `v = {City, ComputeCapability,
+//! Memory}` (Fig. 1); `Machine` carries the underlying inventory those
+//! features derive from.
+
+use super::gpu::GpuModel;
+use super::region::Region;
+
+/// One server. GPUs within a machine are homogeneous (as in the paper's
+/// fleet: "eight servers … 368 GPUs of various models").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Machine {
+    pub id: usize,
+    pub region: Region,
+    pub gpu: GpuModel,
+    pub n_gpus: usize,
+}
+
+impl Machine {
+    pub fn new(id: usize, region: Region, gpu: GpuModel, n_gpus: usize)
+        -> Machine
+    {
+        assert!(n_gpus > 0, "machine {id} with zero GPUs");
+        Machine { id, region, gpu, n_gpus }
+    }
+
+    /// Paper feature: NVIDIA compute capability of the machine's GPUs.
+    pub fn compute_capability(&self) -> f64 {
+        self.gpu.compute_capability()
+    }
+
+    /// Paper feature: "memory refers to the total memory across all GPUs
+    /// on each machine" (Fig. 1 caption).
+    pub fn total_memory_gb(&self) -> f64 {
+        self.gpu.memory_gb() * self.n_gpus as f64
+    }
+
+    /// Aggregate training throughput (TFLOP/s) across the machine's GPUs,
+    /// derated for intra-machine scaling inefficiency.
+    pub fn total_tflops(&self) -> f64 {
+        const INTRA_MACHINE_SCALING: f64 = 0.9; // NVLink/PCIe sync overhead
+        self.gpu.tflops() * self.n_gpus as f64 * INTRA_MACHINE_SCALING
+    }
+
+    /// Paper Fig. 1 node label, e.g. `{'Beijing', 8.6, 152}`.
+    pub fn label(&self) -> String {
+        format!(
+            "{{{}, {}, {}}}",
+            self.region.name(),
+            self.compute_capability(),
+            self.total_memory_gb() as i64
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_scale_with_gpu_count() {
+        let m = Machine::new(0, Region::Beijing, GpuModel::A40, 4);
+        assert_eq!(m.total_memory_gb(), 192.0);
+        let m8 = Machine::new(1, Region::Beijing, GpuModel::A40, 8);
+        assert_eq!(m8.total_memory_gb(), 384.0);
+        assert!(m8.total_tflops() > m.total_tflops());
+    }
+
+    #[test]
+    fn label_matches_paper_format() {
+        let m = Machine::new(45, Region::Rome, GpuModel::V100, 12);
+        assert_eq!(m.label(), "{Rome, 7, 384}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_gpus_rejected() {
+        Machine::new(0, Region::Rome, GpuModel::V100, 0);
+    }
+}

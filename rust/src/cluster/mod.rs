@@ -1,0 +1,28 @@
+//! Cluster substrate: the paper's 46-server / 368-GPU geo-distributed
+//! testbed, rebuilt as a deterministic model (DESIGN.md §Substitutions).
+//!
+//! - [`region`] — the ten regions of paper Table 1 with coordinates.
+//! - [`gpu`] — the paper's GPU catalog (§6.1) with NVIDIA compute
+//!   capability, per-GPU memory and throughput.
+//! - [`machine`] — a server: region + GPU model + count.
+//! - [`wan`] — inter-region latency/bandwidth model seeded with Table 1's
+//!   measured values; unmeasured pairs synthesized from great-circle
+//!   distance; policy blocks (the `-` entries) preserved.
+//! - [`fleet`] — fleet construction: the 46-server evaluation fleet,
+//!   random fleets for GNN training data.
+//! - [`paper_data`] — verbatim constants from the paper (Table 1 matrix,
+//!   the Fig. 1 eight-node toy graph, Fig. 6's node 45).
+
+pub mod fleet;
+pub mod logs;
+pub mod gpu;
+pub mod machine;
+pub mod paper_data;
+pub mod region;
+pub mod wan;
+
+pub use fleet::Fleet;
+pub use gpu::GpuModel;
+pub use machine::Machine;
+pub use region::Region;
+pub use wan::WanModel;

@@ -1,0 +1,126 @@
+//! Constants reproduced verbatim from the paper.
+//!
+//! - Table 1: measured communication time (ms per 64-byte message) between
+//!   three sender sites and eight receiver regions; `None` is the paper's
+//!   `-` (Beijing→Paris blocked by network policy).
+//! - Fig. 1: the eight-node toy graph used throughout §3–§5.
+//! - Fig. 6: node 45 `{Rome, 7, 384}` joined during the scalability demo.
+
+use super::gpu::GpuModel;
+use super::machine::Machine;
+use super::region::Region;
+
+/// Sender sites of Table 1, in row order.
+pub const TABLE1_SENDERS: [Region; 3] =
+    [Region::Beijing, Region::Nanjing, Region::California];
+
+/// Receiver regions of Table 1, in column order.
+pub const TABLE1_RECEIVERS: [Region; 8] = [
+    Region::California,
+    Region::Tokyo,
+    Region::Berlin,
+    Region::London,
+    Region::NewDelhi,
+    Region::Paris,
+    Region::Rome,
+    Region::Brasilia,
+];
+
+/// Table 1 cells: ms to send 64 bytes; `None` = unreachable (`-`).
+pub const TABLE1_MS: [[Option<f64>; 8]; 3] = [
+    // Beijing
+    [Some(89.1), Some(74.3), Some(250.5), Some(229.8), Some(341.9), None,
+     Some(296.0), Some(341.8)],
+    // Nanjing
+    [Some(97.9), Some(173.8), Some(213.7), Some(176.7), Some(236.3),
+     Some(265.1), Some(741.3), Some(351.3)],
+    // California (1 ms to itself: intra-region hop)
+    [Some(1.0), Some(118.8), Some(144.8), Some(132.3), Some(197.0),
+     Some(133.9), Some(158.6), Some(158.6)],
+];
+
+/// Look up a Table 1 measurement for an ordered (sender, receiver) pair.
+pub fn table1_lookup(a: Region, b: Region) -> Option<Option<f64>> {
+    let row = TABLE1_SENDERS.iter().position(|&r| r == a)?;
+    let col = TABLE1_RECEIVERS.iter().position(|&r| r == b)?;
+    Some(TABLE1_MS[row][col])
+}
+
+/// The Fig. 1 eight-node toy graph. The paper gives node 0 as
+/// `{'Beijing', 8.6, 152}` and leaves the rest to the figure; we
+/// instantiate a concrete fleet with the same regions/feature ranges
+/// (DESIGN.md §Substitutions).
+pub fn fig1_toy_fleet() -> Vec<Machine> {
+    vec![
+        Machine::new(0, Region::Beijing, GpuModel::A40, 4),
+        Machine::new(1, Region::Nanjing, GpuModel::V100, 8),
+        Machine::new(2, Region::California, GpuModel::A100, 8),
+        Machine::new(3, Region::Tokyo, GpuModel::Rtx3090, 8),
+        Machine::new(4, Region::Berlin, GpuModel::RtxA5000, 8),
+        Machine::new(5, Region::London, GpuModel::V100, 4),
+        Machine::new(6, Region::NewDelhi, GpuModel::Gtx1080Ti, 8),
+        Machine::new(7, Region::Rome, GpuModel::TitanXp, 8),
+    ]
+}
+
+/// Fig. 6: "the machine with id 45 {Rome, 7, 384}" added to the system.
+pub fn fig6_node_45() -> Machine {
+    Machine::new(45, Region::Rome, GpuModel::V100, 12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_dimensions() {
+        assert_eq!(TABLE1_MS.len(), 3);
+        for row in &TABLE1_MS {
+            assert_eq!(row.len(), 8);
+        }
+    }
+
+    #[test]
+    fn beijing_paris_is_blocked() {
+        assert_eq!(table1_lookup(Region::Beijing, Region::Paris), Some(None));
+    }
+
+    #[test]
+    fn spot_values_match_paper() {
+        assert_eq!(
+            table1_lookup(Region::Beijing, Region::California),
+            Some(Some(89.1))
+        );
+        assert_eq!(
+            table1_lookup(Region::Nanjing, Region::Rome),
+            Some(Some(741.3))
+        );
+        assert_eq!(
+            table1_lookup(Region::California, Region::California),
+            Some(Some(1.0))
+        );
+    }
+
+    #[test]
+    fn non_sender_rows_absent() {
+        assert_eq!(table1_lookup(Region::Rome, Region::Paris), None);
+    }
+
+    #[test]
+    fn toy_fleet_shape() {
+        let fleet = fig1_toy_fleet();
+        assert_eq!(fleet.len(), 8);
+        assert_eq!(fleet[0].label(), "{Beijing, 8.6, 192}");
+        // ids are dense 0..8
+        for (i, m) in fleet.iter().enumerate() {
+            assert_eq!(m.id, i);
+        }
+    }
+
+    #[test]
+    fn node_45_matches_figure() {
+        let m = fig6_node_45();
+        assert_eq!(m.id, 45);
+        assert_eq!(m.label(), "{Rome, 7, 384}");
+    }
+}

@@ -1,0 +1,143 @@
+//! The ten regions appearing in paper Table 1 / §6, with coordinates for
+//! great-circle latency synthesis of pairs the paper did not measure.
+
+/// A geographic region hosting machines. The paper's node feature vector is
+/// `{City, ComputeCapability, Memory}`; `Region` is the city component.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Region {
+    Beijing,
+    Nanjing,
+    California,
+    Tokyo,
+    Berlin,
+    London,
+    NewDelhi,
+    Paris,
+    Rome,
+    Brasilia,
+}
+
+impl Region {
+    pub const ALL: [Region; 10] = [
+        Region::Beijing,
+        Region::Nanjing,
+        Region::California,
+        Region::Tokyo,
+        Region::Berlin,
+        Region::London,
+        Region::NewDelhi,
+        Region::Paris,
+        Region::Rome,
+        Region::Brasilia,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Region::Beijing => "Beijing",
+            Region::Nanjing => "Nanjing",
+            Region::California => "California",
+            Region::Tokyo => "Tokyo",
+            Region::Berlin => "Berlin",
+            Region::London => "London",
+            Region::NewDelhi => "New Delhi",
+            Region::Paris => "Paris",
+            Region::Rome => "Rome",
+            Region::Brasilia => "Brasilia",
+        }
+    }
+
+    /// Index into one-hot feature encodings (graph::features) — stable,
+    /// part of the artifact contract with the GCN.
+    pub fn index(self) -> usize {
+        Region::ALL.iter().position(|&r| r == self).unwrap()
+    }
+
+    pub fn from_index(i: usize) -> Option<Region> {
+        Region::ALL.get(i).copied()
+    }
+
+    /// (latitude, longitude) in degrees — representative city centers.
+    pub fn coords(self) -> (f64, f64) {
+        match self {
+            Region::Beijing => (39.90, 116.41),
+            Region::Nanjing => (32.06, 118.80),
+            Region::California => (37.39, -122.08),
+            Region::Tokyo => (35.68, 139.69),
+            Region::Berlin => (52.52, 13.40),
+            Region::London => (51.51, -0.13),
+            Region::NewDelhi => (28.61, 77.21),
+            Region::Paris => (48.86, 2.35),
+            Region::Rome => (41.90, 12.50),
+            Region::Brasilia => (-15.79, -47.88),
+        }
+    }
+
+    /// Great-circle distance to `other` in kilometres (haversine).
+    pub fn distance_km(self, other: Region) -> f64 {
+        if self == other {
+            return 0.0;
+        }
+        let (la1, lo1) = self.coords();
+        let (la2, lo2) = other.coords();
+        let (la1, lo1, la2, lo2) = (
+            la1.to_radians(),
+            lo1.to_radians(),
+            la2.to_radians(),
+            lo2.to_radians(),
+        );
+        let dla = la2 - la1;
+        let dlo = lo2 - lo1;
+        let a = (dla / 2.0).sin().powi(2)
+            + la1.cos() * la2.cos() * (dlo / 2.0).sin().powi(2);
+        2.0 * 6371.0 * a.sqrt().asin()
+    }
+}
+
+impl std::fmt::Display for Region {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_are_dense_and_stable() {
+        for (i, r) in Region::ALL.iter().enumerate() {
+            assert_eq!(r.index(), i);
+            assert_eq!(Region::from_index(i), Some(*r));
+        }
+        assert_eq!(Region::from_index(10), None);
+    }
+
+    #[test]
+    fn distance_is_symmetric_and_zero_on_diagonal() {
+        for &a in &Region::ALL {
+            assert_eq!(a.distance_km(a), 0.0);
+            for &b in &Region::ALL {
+                let d1 = a.distance_km(b);
+                let d2 = b.distance_km(a);
+                assert!((d1 - d2).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn known_distances_roughly_correct() {
+        // Beijing–Tokyo ≈ 2,100 km; Beijing–California ≈ 9,500 km;
+        // London–Paris ≈ 340 km.
+        let bt = Region::Beijing.distance_km(Region::Tokyo);
+        assert!((1_900.0..2_300.0).contains(&bt), "{bt}");
+        let bc = Region::Beijing.distance_km(Region::California);
+        assert!((9_000.0..10_100.0).contains(&bc), "{bc}");
+        let lp = Region::London.distance_km(Region::Paris);
+        assert!((300.0..400.0).contains(&lp), "{lp}");
+    }
+
+    #[test]
+    fn display_matches_name() {
+        assert_eq!(Region::NewDelhi.to_string(), "New Delhi");
+    }
+}

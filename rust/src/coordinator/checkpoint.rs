@@ -1,0 +1,171 @@
+//! Leader-state checkpointing: serialize the coordinator's task table and
+//! assignment to a `util::kv` file so a restarted leader resumes where
+//! the old one died — the control-plane half of the paper's disaster-
+//! recovery story (the data plane recovers via `recovery::recover`).
+//!
+//! Format (kv, one key per line):
+//! ```text
+//! format        1
+//! n_tasks       3
+//! task.0.model  GPT-2 (1.5B)
+//! task.0.state  running
+//! task.0.done   17
+//! task.0.target 100
+//! task.0.machines 4,7,9
+//! …
+//! ```
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::models::ModelSpec;
+use crate::util::kv::KvFile;
+
+use super::tasks::{TaskState, TrainingTask};
+
+/// Serialize tasks to the checkpoint format.
+pub fn render_checkpoint(tasks: &[TrainingTask]) -> String {
+    let mut out = String::from("format 1\n");
+    out.push_str(&format!("n_tasks {}\n", tasks.len()));
+    for t in tasks {
+        let state = match &t.state {
+            TaskState::Queued => "queued".to_string(),
+            TaskState::Running => "running".to_string(),
+            TaskState::Recovering => "recovering".to_string(),
+            TaskState::Completed => "completed".to_string(),
+            TaskState::Failed(msg) => {
+                format!("failed:{}", msg.replace(['\n', ' '], "_"))
+            }
+        };
+        let machines = t
+            .machines
+            .iter()
+            .map(|m| m.to_string())
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push_str(&format!("task.{}.model {}\n", t.id, t.model.name));
+        out.push_str(&format!("task.{}.state {}\n", t.id, state));
+        out.push_str(&format!("task.{}.done {}\n", t.id, t.iterations_done));
+        out.push_str(&format!("task.{}.target {}\n", t.id,
+                              t.iterations_target));
+        out.push_str(&format!("task.{}.machines {}\n", t.id,
+                              if machines.is_empty() { "-" } else { &machines }));
+    }
+    out
+}
+
+fn model_by_name(name: &str) -> Result<ModelSpec> {
+    ModelSpec::paper_six()
+        .into_iter()
+        .find(|m| m.name == name)
+        .with_context(|| format!("unknown model in checkpoint: {name:?}"))
+}
+
+/// Parse a checkpoint back into tasks.
+pub fn parse_checkpoint(text: &str) -> Result<Vec<TrainingTask>> {
+    let kv = KvFile::parse(text)?;
+    if kv.get("format")? != "1" {
+        bail!("unsupported checkpoint format");
+    }
+    let n = kv.get_usize("n_tasks")?;
+    let mut tasks = Vec::with_capacity(n);
+    for id in 0..n {
+        let model = model_by_name(kv.get(&format!("task.{id}.model"))?)?;
+        let state = match kv.get(&format!("task.{id}.state"))? {
+            "queued" => TaskState::Queued,
+            "running" => TaskState::Running,
+            "recovering" => TaskState::Recovering,
+            "completed" => TaskState::Completed,
+            s if s.starts_with("failed:") => {
+                TaskState::Failed(s["failed:".len()..].to_string())
+            }
+            other => bail!("bad task state {other:?}"),
+        };
+        let done = kv.get_usize(&format!("task.{id}.done"))? as u64;
+        let target = kv.get_usize(&format!("task.{id}.target"))? as u64;
+        let machines_raw = kv.get(&format!("task.{id}.machines"))?;
+        let machines: Vec<usize> = if machines_raw == "-" {
+            Vec::new()
+        } else {
+            machines_raw
+                .split(',')
+                .map(|s| s.parse().context("bad machine id"))
+                .collect::<Result<_>>()?
+        };
+        let mut task = TrainingTask::new(id, model, target);
+        task.state = state;
+        task.iterations_done = done;
+        task.machines = machines;
+        tasks.push(task);
+    }
+    Ok(tasks)
+}
+
+/// Write a checkpoint file.
+pub fn save_checkpoint(path: &Path, tasks: &[TrainingTask]) -> Result<()> {
+    std::fs::write(path, render_checkpoint(tasks))
+        .with_context(|| format!("writing checkpoint {}", path.display()))
+}
+
+/// Load a checkpoint file.
+pub fn load_checkpoint(path: &Path) -> Result<Vec<TrainingTask>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    parse_checkpoint(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_tasks() -> Vec<TrainingTask> {
+        let mut a = TrainingTask::new(0, ModelSpec::gpt2_xl(), 100);
+        a.state = TaskState::Running;
+        a.iterations_done = 17;
+        a.machines = vec![4, 7, 9];
+        let mut b = TrainingTask::new(1, ModelSpec::bert_large(), 50);
+        b.state = TaskState::Queued;
+        let mut c = TrainingTask::new(2, ModelSpec::t5_11b(), 10);
+        c.state = TaskState::Failed("machine 3 died".into());
+        vec![a, b, c]
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let tasks = sample_tasks();
+        let text = render_checkpoint(&tasks);
+        let back = parse_checkpoint(&text).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[0].machines, vec![4, 7, 9]);
+        assert_eq!(back[0].iterations_done, 17);
+        assert_eq!(back[0].state, TaskState::Running);
+        assert_eq!(back[1].state, TaskState::Queued);
+        assert!(back[1].machines.is_empty());
+        assert!(matches!(back[2].state, TaskState::Failed(_)));
+        assert_eq!(back[0].model.name, "GPT-2 (1.5B)");
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let tasks = sample_tasks();
+        let path = std::env::temp_dir().join("hulk_ckpt_test.kv");
+        save_checkpoint(&path, &tasks).unwrap();
+        let back = load_checkpoint(&path).unwrap();
+        assert_eq!(back.len(), tasks.len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let text = "format 1\nn_tasks 1\ntask.0.model Mystery\n\
+                    task.0.state queued\ntask.0.done 0\ntask.0.target 1\n\
+                    task.0.machines -\n";
+        assert!(parse_checkpoint(text).is_err());
+    }
+
+    #[test]
+    fn bad_format_rejected() {
+        assert!(parse_checkpoint("format 2\nn_tasks 0\n").is_err());
+    }
+}

@@ -1,0 +1,436 @@
+//! The leader event loop.
+//!
+//! The core (`Coordinator::handle`) is synchronous and fully testable;
+//! `Coordinator::spawn` runs it on a thread behind std mpsc channels
+//! (tokio is not in the offline registry — DESIGN.md §Substitutions).
+//! Request routing, batching of task admissions, and failure handling all
+//! happen here; GCN inference is consulted through the planner injected
+//! at construction.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::cluster::{Fleet, GpuModel, Region};
+use crate::graph::ClusterGraph;
+use crate::models::ModelSpec;
+use crate::parallel::{pipeline_cost, PipelinePlan};
+use crate::scheduler::Assignment;
+use crate::systems::hulk::chain_order;
+
+use super::metrics::Metrics;
+use super::recovery::{recover, RecoveryAction};
+use super::scale::scale_out;
+use super::tasks::{TaskState, TrainingTask};
+
+/// Events the leader reacts to.
+#[derive(Clone, Debug)]
+pub enum CoordinatorEvent {
+    /// Admit a new training task.
+    Submit { model: ModelSpec, iterations: u64 },
+    /// A machine died.
+    MachineFailed { machine: usize },
+    /// Fig. 6 scale-out.
+    ScaleOut { region: Region, gpu: GpuModel, n_gpus: usize },
+    /// Advance simulated training by `iterations` on every running task.
+    Tick { iterations: u64 },
+    /// Graceful stop; the thread replies with final metrics and exits.
+    Shutdown,
+}
+
+/// Replies the leader emits (one per event).
+#[derive(Clone, Debug)]
+pub enum CoordinatorReply {
+    Admitted { task_id: usize, machines: Vec<usize> },
+    Queued { task_id: usize },
+    Recovered { action: String },
+    ScaledOut { machine_id: usize, joined_task: Option<usize> },
+    Ticked { completed: Vec<usize> },
+    Stopped { metrics_render: String },
+}
+
+/// The leader state machine.
+pub struct Coordinator {
+    pub fleet: Fleet,
+    pub tasks: Vec<TrainingTask>,
+    pub assignment: Assignment,
+    pub metrics: Metrics,
+    failed_machines: Vec<usize>,
+}
+
+impl Coordinator {
+    pub fn new(fleet: Fleet) -> Coordinator {
+        Coordinator {
+            fleet,
+            tasks: Vec::new(),
+            assignment: Assignment::new(Vec::new()),
+            metrics: Metrics::new(),
+            failed_machines: Vec::new(),
+        }
+    }
+
+    fn active_models(&self) -> Vec<ModelSpec> {
+        self.tasks
+            .iter()
+            .filter(|t| t.is_active())
+            .map(|t| t.model.clone())
+            .collect()
+    }
+
+    fn graph(&self) -> ClusterGraph {
+        let mut g = ClusterGraph::from_fleet(&self.fleet);
+        // Failed machines lose their edges (paper §5.2: removal = edge
+        // deletion).
+        for &m in &self.failed_machines {
+            for j in 0..g.n {
+                g.adj[m * g.n + j] = 0.0;
+                g.adj[j * g.n + m] = 0.0;
+            }
+        }
+        g
+    }
+
+    /// Pool of machines not assigned to an active task and not failed.
+    fn free_pool(&self) -> Vec<usize> {
+        (0..self.fleet.len())
+            .filter(|&m| !self.failed_machines.contains(&m))
+            .filter(|&m| {
+                self.tasks
+                    .iter()
+                    .filter(|t| t.is_active())
+                    .all(|t| !t.machines.contains(&m))
+            })
+            .collect()
+    }
+
+    /// Admit a task: grow a group from the free pool greedily by
+    /// latency, honoring the memory threshold (the single-task special
+    /// case of Algorithm 1, which the paper notes "can also be used to
+    /// determine superiority if there is only one task").
+    fn admit(&mut self, model: &ModelSpec) -> Option<Vec<usize>> {
+        let graph = self.graph();
+        let pool = self.free_pool();
+        if pool.is_empty() {
+            return None;
+        }
+        // Seed: biggest-memory machine in the pool.
+        let seed = *pool.iter().max_by(|&&a, &&b| {
+            self.fleet.machines[a]
+                .total_memory_gb()
+                .partial_cmp(&self.fleet.machines[b].total_memory_gb())
+                .unwrap()
+        })?;
+        let mut group = vec![seed];
+        let mut mem = self.fleet.machines[seed].total_memory_gb();
+        while mem < model.train_gb() * 1.1 {
+            let next = pool
+                .iter()
+                .copied()
+                .filter(|m| !group.contains(m))
+                .filter(|&m| group.iter().any(|&j| graph.has_edge(m, j)))
+                .min_by(|&a, &b| {
+                    let cost = |i: usize| -> f64 {
+                        group
+                            .iter()
+                            .map(|&j| {
+                                let w = graph.weight(i, j);
+                                if w > 0.0 { w as f64 } else { 2e3 }
+                            })
+                            .sum()
+                    };
+                    cost(a).partial_cmp(&cost(b)).unwrap()
+                });
+            match next {
+                Some(m) => {
+                    mem += self.fleet.machines[m].total_memory_gb();
+                    group.push(m);
+                }
+                None => return None, // pool exhausted / unreachable
+            }
+        }
+        group.sort_unstable();
+        Some(group)
+    }
+
+    /// Estimated per-iteration time of a task on its group (drives Tick
+    /// accounting).
+    pub fn task_iter_ms(&self, task: &TrainingTask) -> Option<f64> {
+        if task.machines.is_empty() {
+            return None;
+        }
+        let graph = self.graph();
+        let ordered = chain_order(&graph, &task.machines);
+        let stages: Vec<usize> =
+            ordered.into_iter().take(task.model.layers).collect();
+        let plan = PipelinePlan::proportional(&self.fleet, stages,
+                                              &task.model);
+        let cost = pipeline_cost(&self.fleet, &plan, &task.model);
+        cost.is_feasible().then(|| cost.total_ms())
+    }
+
+    /// Synchronous event handler — the heart of the leader.
+    pub fn handle(&mut self, event: CoordinatorEvent) -> CoordinatorReply {
+        match event {
+            CoordinatorEvent::Submit { model, iterations } => {
+                let id = self.tasks.len();
+                let mut task = TrainingTask::new(id, model, iterations);
+                self.metrics.inc("tasks_submitted");
+                match self.admit(&task.model) {
+                    Some(group) => {
+                        task.machines = group.clone();
+                        task.state = TaskState::Running;
+                        self.tasks.push(task);
+                        self.sync_assignment();
+                        self.metrics.inc("tasks_admitted");
+                        CoordinatorReply::Admitted { task_id: id,
+                                                     machines: group }
+                    }
+                    None => {
+                        task.state = TaskState::Queued;
+                        self.tasks.push(task);
+                        self.metrics.inc("tasks_queued");
+                        CoordinatorReply::Queued { task_id: id }
+                    }
+                }
+            }
+            CoordinatorEvent::MachineFailed { machine } => {
+                self.failed_machines.push(machine);
+                self.metrics.inc("machine_failures");
+                let graph = self.graph();
+                let models = self.active_models();
+                let action = recover(&self.fleet, &graph,
+                                     &mut self.assignment, &models, machine);
+                // Mirror the assignment back into task state.
+                self.apply_assignment(&action);
+                CoordinatorReply::Recovered {
+                    action: format!("{action:?}"),
+                }
+            }
+            CoordinatorEvent::ScaleOut { region, gpu, n_gpus } => {
+                let models = self.active_models();
+                let (id, joined) = scale_out(&mut self.fleet,
+                                             &mut self.assignment, &models,
+                                             region, gpu, n_gpus);
+                if let Some(t) = joined {
+                    if let Some(task) =
+                        self.tasks.iter_mut().filter(|t| t.is_active()).nth(t)
+                    {
+                        task.machines.push(id);
+                        task.machines.sort_unstable();
+                    }
+                }
+                self.metrics.inc("scale_out_events");
+                CoordinatorReply::ScaledOut { machine_id: id,
+                                              joined_task: joined }
+            }
+            CoordinatorEvent::Tick { iterations } => {
+                let mut completed = Vec::new();
+                for i in 0..self.tasks.len() {
+                    if !matches!(self.tasks[i].state, TaskState::Running) {
+                        continue;
+                    }
+                    self.tasks[i].iterations_done = (self.tasks[i]
+                        .iterations_done
+                        + iterations)
+                        .min(self.tasks[i].iterations_target);
+                    if self.tasks[i].iterations_done
+                        >= self.tasks[i].iterations_target
+                    {
+                        self.tasks[i].state = TaskState::Completed;
+                        completed.push(i);
+                    }
+                }
+                self.metrics.add("iterations_ticked", iterations);
+                // Completed tasks release machines → try the queue.
+                if !completed.is_empty() {
+                    self.retry_queue();
+                }
+                CoordinatorReply::Ticked { completed }
+            }
+            CoordinatorEvent::Shutdown => CoordinatorReply::Stopped {
+                metrics_render: self.metrics.render(),
+            },
+        }
+    }
+
+    fn retry_queue(&mut self) {
+        for i in 0..self.tasks.len() {
+            if self.tasks[i].state != TaskState::Queued {
+                continue;
+            }
+            let model = self.tasks[i].model.clone();
+            if let Some(group) = self.admit(&model) {
+                self.tasks[i].machines = group;
+                self.tasks[i].state = TaskState::Running;
+                self.metrics.inc("tasks_admitted");
+            }
+        }
+        self.sync_assignment();
+    }
+
+    fn sync_assignment(&mut self) {
+        self.assignment = Assignment::new(
+            self.tasks
+                .iter()
+                .filter(|t| t.is_active())
+                .map(|t| t.machines.clone())
+                .collect(),
+        );
+    }
+
+    fn apply_assignment(&mut self, action: &RecoveryAction) {
+        let active: Vec<usize> = (0..self.tasks.len())
+            .filter(|&i| self.tasks[i].is_active())
+            .collect();
+        for (slot, &task_idx) in active.iter().enumerate() {
+            if slot < self.assignment.groups.len() {
+                self.tasks[task_idx].machines =
+                    self.assignment.groups[slot].clone();
+            }
+        }
+        if let RecoveryAction::Requeue { task } = action {
+            if let Some(&idx) = active.get(*task) {
+                self.tasks[idx].state = TaskState::Queued;
+                self.tasks[idx].machines.clear();
+                self.sync_assignment();
+            }
+        }
+    }
+
+    /// Run the leader on a thread. Send events in, receive one reply per
+    /// event; the thread exits after `Shutdown`.
+    pub fn spawn(mut self)
+        -> (Sender<CoordinatorEvent>, Receiver<CoordinatorReply>,
+            JoinHandle<()>)
+    {
+        let (tx_in, rx_in) = channel::<CoordinatorEvent>();
+        let (tx_out, rx_out) = channel::<CoordinatorReply>();
+        let handle = std::thread::spawn(move || {
+            while let Ok(event) = rx_in.recv() {
+                let stop = matches!(event, CoordinatorEvent::Shutdown);
+                let reply = self.handle(event);
+                if tx_out.send(reply).is_err() {
+                    break;
+                }
+                if stop {
+                    break;
+                }
+            }
+        });
+        (tx_in, rx_out, handle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coordinator() -> Coordinator {
+        Coordinator::new(Fleet::paper_evaluation(0))
+    }
+
+    #[test]
+    fn submit_admits_feasible_task() {
+        let mut c = coordinator();
+        let reply = c.handle(CoordinatorEvent::Submit {
+            model: ModelSpec::gpt2_xl(),
+            iterations: 100,
+        });
+        match reply {
+            CoordinatorReply::Admitted { task_id, machines } => {
+                assert_eq!(task_id, 0);
+                assert!(!machines.is_empty());
+            }
+            other => panic!("expected admission, got {other:?}"),
+        }
+        assert_eq!(c.metrics.counter("tasks_admitted"), 1);
+    }
+
+    #[test]
+    fn groups_of_concurrent_tasks_are_disjoint() {
+        let mut c = coordinator();
+        for model in ModelSpec::paper_four() {
+            c.handle(CoordinatorEvent::Submit { model, iterations: 10 });
+        }
+        c.assignment.validate_disjoint(c.fleet.len()).unwrap();
+    }
+
+    #[test]
+    fn tick_completes_tasks_and_unblocks_queue() {
+        let mut c = coordinator();
+        // Fill the fleet with big tasks until one queues.
+        let mut queued = None;
+        for i in 0..8 {
+            let reply = c.handle(CoordinatorEvent::Submit {
+                model: ModelSpec::t5_11b(),
+                iterations: 5,
+            });
+            if matches!(reply, CoordinatorReply::Queued { .. }) {
+                queued = Some(i);
+                break;
+            }
+        }
+        let Some(_) = queued else {
+            return; // fleet fit everything; nothing to assert
+        };
+        // Complete everything running.
+        let reply = c.handle(CoordinatorEvent::Tick { iterations: 5 });
+        match reply {
+            CoordinatorReply::Ticked { completed } => {
+                assert!(!completed.is_empty());
+            }
+            other => panic!("{other:?}"),
+        }
+        // The queued task should now be running.
+        assert!(c.tasks.iter().any(|t| t.state == TaskState::Running));
+    }
+
+    #[test]
+    fn machine_failure_triggers_recovery() {
+        let mut c = coordinator();
+        c.handle(CoordinatorEvent::Submit {
+            model: ModelSpec::gpt2_xl(),
+            iterations: 100,
+        });
+        let victim = c.tasks[0].machines[0];
+        let reply = c.handle(CoordinatorEvent::MachineFailed {
+            machine: victim });
+        match reply {
+            CoordinatorReply::Recovered { action } => {
+                assert!(!action.contains("NoOp"), "action {action}");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(c.metrics.counter("machine_failures"), 1);
+        assert!(!c.tasks[0].machines.contains(&victim)
+                || c.tasks[0].state == TaskState::Queued);
+    }
+
+    #[test]
+    fn spawn_roundtrip_over_channels() {
+        let c = coordinator();
+        let (tx, rx, handle) = c.spawn();
+        tx.send(CoordinatorEvent::Submit {
+            model: ModelSpec::bert_large(),
+            iterations: 1,
+        })
+        .unwrap();
+        let reply = rx.recv().unwrap();
+        assert!(matches!(reply, CoordinatorReply::Admitted { .. }));
+        tx.send(CoordinatorEvent::Shutdown).unwrap();
+        let stopped = rx.recv().unwrap();
+        assert!(matches!(stopped, CoordinatorReply::Stopped { .. }));
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn task_iter_ms_is_finite_for_running_tasks() {
+        let mut c = coordinator();
+        c.handle(CoordinatorEvent::Submit {
+            model: ModelSpec::bert_large(),
+            iterations: 10,
+        });
+        let t = &c.tasks[0];
+        let ms = c.task_iter_ms(t).expect("running task has iter time");
+        assert!(ms > 0.0);
+    }
+}

@@ -1,0 +1,101 @@
+//! Leader metrics: counters and timers exported by the coordinator (and
+//! printed by `hulk simulate`).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Monotone counters + gauges. BTreeMap for stable rendering order.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn inc(&mut self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Machine-readable dump.
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters.set(k, Json::Num(*v as f64));
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges.set(k, Json::Num(*v));
+        }
+        obj.set("counters", counters);
+        obj.set("gauges", gauges);
+        obj
+    }
+
+    /// Human-readable dump.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("{k:<32} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("{k:<32} {v:.3}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Metrics::new();
+        m.inc("tasks_admitted");
+        m.inc("tasks_admitted");
+        m.add("iterations", 10);
+        assert_eq!(m.counter("tasks_admitted"), 2);
+        assert_eq!(m.counter("iterations"), 10);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let mut m = Metrics::new();
+        m.set_gauge("fleet_util", 0.5);
+        m.set_gauge("fleet_util", 0.75);
+        assert_eq!(m.gauge("fleet_util"), Some(0.75));
+    }
+
+    #[test]
+    fn json_dump_contains_everything() {
+        let mut m = Metrics::new();
+        m.inc("a");
+        m.set_gauge("g", 1.5);
+        let s = m.to_json().render();
+        assert!(s.contains("\"a\":1"));
+        assert!(s.contains("\"g\":1.5"));
+    }
+}

@@ -1,0 +1,25 @@
+//! The multi-task coordinator: the long-running leader that owns the
+//! fleet state, admits training tasks, reacts to machine failures
+//! (disaster recovery, §1) and scale-out/in events (Fig. 6), and keeps
+//! per-task metrics.
+//!
+//! - [`tasks`] — task specs, queue and lifecycle states.
+//! - [`metrics`] — counters/timers the leader exports.
+//! - [`recovery`] — failure handling: spare promotion or group re-plan.
+//! - [`scale`] — add/remove machines with incremental re-assignment.
+//! - [`leader`] — the event loop (std threads + channels; tokio is not in
+//!   the offline registry — DESIGN.md §Substitutions).
+
+pub mod checkpoint;
+pub mod leader;
+pub mod metrics;
+pub mod recovery;
+pub mod scale;
+pub mod tasks;
+
+pub use checkpoint::{load_checkpoint, parse_checkpoint, render_checkpoint, save_checkpoint};
+pub use leader::{Coordinator, CoordinatorEvent, CoordinatorReply};
+pub use metrics::Metrics;
+pub use recovery::{recover, RecoveryAction};
+pub use scale::{scale_in, scale_out};
+pub use tasks::{TaskState, TrainingTask};

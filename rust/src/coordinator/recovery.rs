@@ -1,0 +1,176 @@
+//! Disaster recovery (paper §1, Contribution "Disaster Recovery"):
+//! "Since GCNs are utilized to assign tasks ... it becomes evident which
+//! tasks each machine is responsible for. In the event of a machine
+//! failure, the system can quickly recover the entire computation."
+//!
+//! Policy: on machine failure, (1) promote the nearest memory-sufficient
+//! spare into the failed machine's group, else (2) re-plan the affected
+//! group from the remaining pool. The rest of the fleet is untouched —
+//! this is the recovery-locality advantage of group-wise assignment over
+//! global schemes, quantified by the recovery bench.
+
+use crate::cluster::Fleet;
+use crate::graph::ClusterGraph;
+use crate::models::ModelSpec;
+use crate::scheduler::Assignment;
+
+/// Outcome of a recovery attempt.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RecoveryAction {
+    /// Spare machine `spare` replaces `failed` in task `task`.
+    PromoteSpare { task: usize, failed: usize, spare: usize },
+    /// The group absorbed the loss (still memory-feasible without a
+    /// replacement).
+    ShrinkGroup { task: usize, failed: usize },
+    /// No spare and the group is infeasible: the task must be re-queued.
+    Requeue { task: usize },
+    /// The failed machine held no task — nothing to do.
+    NoOp,
+}
+
+/// Handle the failure of `failed` under `assignment`. Mutates the
+/// assignment in place to reflect the action taken.
+pub fn recover(fleet: &Fleet, graph: &ClusterGraph,
+               assignment: &mut Assignment, tasks: &[ModelSpec],
+               failed: usize) -> RecoveryAction
+{
+    let Some(task) = assignment.task_of(failed) else {
+        return RecoveryAction::NoOp;
+    };
+    // Remove the failed machine from its group.
+    assignment.groups[task].retain(|&m| m != failed);
+    let group = assignment.groups[task].clone();
+
+    let group_gb = |g: &[usize]| -> f64 {
+        g.iter().map(|&i| fleet.machines[i].total_memory_gb()).sum()
+    };
+
+    // Option 1: group still feasible → shrink.
+    if group_gb(&group) >= tasks[task].train_gb()
+        && graph.subset_connected(&group)
+        && !group.is_empty()
+    {
+        return RecoveryAction::ShrinkGroup { task, failed };
+    }
+
+    // Option 2: promote the best spare (lowest added latency, reachable,
+    // not the failed machine itself).
+    let spares = assignment.spares(fleet.len());
+    let candidate = spares
+        .iter()
+        .copied()
+        .filter(|&s| s != failed)
+        .filter(|&s| group.iter().any(|&j| graph.has_edge(s, j))
+                     || group.is_empty())
+        .min_by(|&a, &b| {
+            let cost = |i: usize| -> f64 {
+                group
+                    .iter()
+                    .map(|&j| {
+                        let w = graph.weight(i, j);
+                        if w > 0.0 { w as f64 } else { 2e3 }
+                    })
+                    .sum::<f64>()
+                    - fleet.machines[i].total_memory_gb() * 0.1
+            };
+            cost(a).partial_cmp(&cost(b)).unwrap()
+        });
+    if let Some(spare) = candidate {
+        assignment.groups[task].push(spare);
+        assignment.groups[task].sort_unstable();
+        let new_group = assignment.groups[task].clone();
+        if group_gb(&new_group) >= tasks[task].train_gb() {
+            return RecoveryAction::PromoteSpare { task, failed, spare };
+        }
+        // Even with the spare it doesn't fit → undo and requeue.
+        assignment.groups[task].retain(|&m| m != spare);
+    }
+    RecoveryAction::Requeue { task }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{oracle_partition, OracleOptions};
+
+    fn setup() -> (Fleet, ClusterGraph, Assignment, Vec<ModelSpec>) {
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let tasks = ModelSpec::paper_four();
+        let a = oracle_partition(&fleet, &graph, &tasks,
+                                 &OracleOptions::default());
+        (fleet, graph, a, tasks)
+    }
+
+    #[test]
+    fn noop_for_spare_failure() {
+        let (fleet, graph, mut a, tasks) = setup();
+        let spares = a.spares(fleet.len());
+        if let Some(&s) = spares.first() {
+            let action = recover(&fleet, &graph, &mut a, &tasks, s);
+            assert_eq!(action, RecoveryAction::NoOp);
+        }
+    }
+
+    #[test]
+    fn failure_in_small_group_recovers() {
+        let (fleet, graph, mut a, tasks) = setup();
+        // Fail a machine in the BERT group (task 3, smallest model).
+        let victim = a.groups[3][0];
+        let before = a.groups[3].len();
+        let action = recover(&fleet, &graph, &mut a, &tasks, victim);
+        match action {
+            RecoveryAction::ShrinkGroup { task, failed } => {
+                assert_eq!((task, failed), (3, victim));
+                assert_eq!(a.groups[3].len(), before - 1);
+            }
+            RecoveryAction::PromoteSpare { task, failed, spare } => {
+                assert_eq!((task, failed), (3, victim));
+                assert!(a.groups[3].contains(&spare));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // Post-recovery the group must be memory-feasible.
+        a.validate_memory(&fleet, &tasks).unwrap();
+        a.validate_disjoint(fleet.len()).unwrap();
+    }
+
+    #[test]
+    fn opt_group_failure_promotes_or_requeues() {
+        let (fleet, graph, mut a, tasks) = setup();
+        // OPT (task 0) runs close to its memory floor: failing its largest
+        // member forces a spare promotion or a requeue, not a silent
+        // infeasible state.
+        let victim = *a.groups[0]
+            .iter()
+            .max_by(|&&x, &&y| {
+                fleet.machines[x]
+                    .total_memory_gb()
+                    .partial_cmp(&fleet.machines[y].total_memory_gb())
+                    .unwrap()
+            })
+            .unwrap();
+        let action = recover(&fleet, &graph, &mut a, &tasks, victim);
+        match action {
+            RecoveryAction::Requeue { task } => assert_eq!(task, 0),
+            RecoveryAction::PromoteSpare { task, .. }
+            | RecoveryAction::ShrinkGroup { task, .. } => {
+                assert_eq!(task, 0);
+                a.validate_memory(&fleet, &tasks).unwrap();
+            }
+            RecoveryAction::NoOp => panic!("victim held a task"),
+        }
+    }
+
+    #[test]
+    fn recovery_touches_only_the_affected_group() {
+        let (fleet, graph, mut a, tasks) = setup();
+        let before: Vec<Vec<usize>> = a.groups.clone();
+        let victim = a.groups[3][0];
+        recover(&fleet, &graph, &mut a, &tasks, victim);
+        for t in 0..3 {
+            assert_eq!(a.groups[t], before[t],
+                       "group {t} must be untouched");
+        }
+    }
+}

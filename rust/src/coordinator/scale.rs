@@ -1,0 +1,162 @@
+//! Scalability (paper §5.2, Fig. 6): "If we need to add one or more
+//! machines to this system, we can simply define their {City, Compute
+//! Capability, Memory} and connect them to the existing nodes"; removal
+//! "simply removes the corresponding edge information".
+//!
+//! Scale-out places the new machine into the task group where it reduces
+//! the marginal cost the most (or leaves it as a spare); scale-in is a
+//! recovery-style departure.
+
+use crate::cluster::{Fleet, GpuModel, Region};
+use crate::graph::ClusterGraph;
+use crate::models::ModelSpec;
+use crate::scheduler::Assignment;
+
+use super::recovery::{recover, RecoveryAction};
+
+/// Add a machine to the fleet and decide its placement. Returns
+/// `(machine_id, Some(task))` if it joined a group, `(id, None)` if it
+/// became a spare.
+pub fn scale_out(fleet: &mut Fleet, assignment: &mut Assignment,
+                 tasks: &[ModelSpec], region: Region, gpu: GpuModel,
+                 n_gpus: usize) -> (usize, Option<usize>)
+{
+    let id = fleet.add_machine(region, gpu, n_gpus);
+    let graph = ClusterGraph::from_fleet(fleet);
+
+    // Marginal placement score per task: added intra-group latency per
+    // unit of group need (groups running nearer their memory floor value
+    // the machine more).
+    let mut best: Option<(usize, f64)> = None;
+    for (t, group) in assignment.groups.iter().enumerate() {
+        if group.is_empty() {
+            continue;
+        }
+        if !group.iter().any(|&j| graph.has_edge(id, j)) {
+            continue; // unreachable group
+        }
+        let added_lat: f64 = group
+            .iter()
+            .map(|&j| {
+                let w = graph.weight(id, j);
+                if w > 0.0 { w as f64 } else { 2e3 }
+            })
+            .sum::<f64>()
+            / group.len() as f64;
+        let group_gb: f64 = group
+            .iter()
+            .map(|&i| fleet.machines[i].total_memory_gb())
+            .sum();
+        let pressure = tasks[t].train_gb() / group_gb; // >→ needier
+        let score = added_lat / pressure.max(1e-3);
+        if best.map_or(true, |(_, s)| score < s) {
+            best = Some((t, score));
+        }
+    }
+
+    // Join only if the best group is "close": mean added latency below
+    // the fleet-wide mean edge latency (otherwise stay a spare — joining
+    // a far group would degrade its communication time).
+    if let Some((t, score)) = best {
+        let mean_lat = mean_edge_latency(&graph);
+        let group_gb: f64 = assignment.groups[t]
+            .iter()
+            .map(|&i| fleet.machines[i].total_memory_gb())
+            .sum();
+        let pressure = tasks[t].train_gb() / group_gb;
+        let added = score * pressure.max(1e-3);
+        if added <= mean_lat {
+            assignment.groups[t].push(id);
+            assignment.groups[t].sort_unstable();
+            return (id, Some(t));
+        }
+    }
+    (id, None)
+}
+
+/// Remove a machine (graceful scale-in = the same path as a failure, but
+/// the caller chose the victim). Returns the action taken. NOTE: the
+/// machine stays in the fleet (ids stay dense); it simply holds no task —
+/// matching the paper's "remove the corresponding edge information".
+pub fn scale_in(fleet: &Fleet, graph: &ClusterGraph,
+                assignment: &mut Assignment, tasks: &[ModelSpec],
+                machine: usize) -> RecoveryAction
+{
+    recover(fleet, graph, assignment, tasks, machine)
+}
+
+fn mean_edge_latency(graph: &ClusterGraph) -> f64 {
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for i in 0..graph.n {
+        for j in (i + 1)..graph.n {
+            let w = graph.weight(i, j);
+            if w > 0.0 {
+                sum += w as f64;
+                count += 1;
+            }
+        }
+    }
+    if count == 0 { 0.0 } else { sum / count as f64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::paper_data::fig6_node_45;
+    use crate::scheduler::{oracle_partition, OracleOptions};
+
+    #[test]
+    fn fig6_node45_joins_the_system() {
+        // Reproduce Fig. 6: 45-machine fleet + node 45 {Rome, 7, 384}.
+        let mut fleet = Fleet::paper_evaluation(0);
+        fleet.remove_machine(45); // make room: ids 0..45
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let tasks = ModelSpec::paper_four();
+        let mut a = oracle_partition(&fleet, &graph, &tasks,
+                                     &OracleOptions::default());
+        let spec = fig6_node_45();
+        let (id, placed) = scale_out(&mut fleet, &mut a, &tasks,
+                                     spec.region, spec.gpu, spec.n_gpus);
+        assert_eq!(id, 45);
+        // Either it joined a group or became a spare — both are "works
+        // fine" per the paper; the assignment must stay valid.
+        a.validate_disjoint(fleet.len()).unwrap();
+        a.validate_memory(&fleet, &tasks).unwrap();
+        if let Some(t) = placed {
+            assert!(a.groups[t].contains(&45));
+        } else {
+            assert!(a.spares(fleet.len()).contains(&45));
+        }
+    }
+
+    #[test]
+    fn scale_out_prefers_near_groups() {
+        let mut fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let tasks = ModelSpec::paper_four();
+        let mut a = oracle_partition(&fleet, &graph, &tasks,
+                                     &OracleOptions::default());
+        let (id, placed) = scale_out(&mut fleet, &mut a, &tasks,
+                                     Region::California, GpuModel::A100, 8);
+        if let Some(t) = placed {
+            // The chosen group must actually be reachable & mostly near.
+            let graph2 = ClusterGraph::from_fleet(&fleet);
+            assert!(a.groups[t].iter().any(|&j| j != id
+                && graph2.has_edge(id, j)));
+        }
+    }
+
+    #[test]
+    fn scale_in_keeps_assignment_valid() {
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let tasks = ModelSpec::paper_four();
+        let mut a = oracle_partition(&fleet, &graph, &tasks,
+                                     &OracleOptions::default());
+        let victim = a.groups[1][0];
+        let action = scale_in(&fleet, &graph, &mut a, &tasks, victim);
+        assert_ne!(action, RecoveryAction::NoOp);
+        a.validate_disjoint(fleet.len()).unwrap();
+    }
+}

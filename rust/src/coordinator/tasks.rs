@@ -1,0 +1,80 @@
+//! Training-task lifecycle.
+
+use crate::models::ModelSpec;
+
+/// Lifecycle of a submitted task.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TaskState {
+    /// Waiting for resources (Algorithm 1 line 17).
+    Queued,
+    /// Machines assigned, training in progress.
+    Running,
+    /// A participating machine failed; recovery in progress.
+    Recovering,
+    /// Finished (the simulated run completed its iterations).
+    Completed,
+    /// Permanently failed (no recovery possible).
+    Failed(String),
+}
+
+/// A submitted training task.
+#[derive(Clone, Debug)]
+pub struct TrainingTask {
+    pub id: usize,
+    pub model: ModelSpec,
+    pub state: TaskState,
+    /// Machines currently assigned (empty while queued).
+    pub machines: Vec<usize>,
+    /// Iterations completed so far (simulated progress).
+    pub iterations_done: u64,
+    pub iterations_target: u64,
+}
+
+impl TrainingTask {
+    pub fn new(id: usize, model: ModelSpec, iterations: u64) -> TrainingTask {
+        TrainingTask {
+            id,
+            model,
+            state: TaskState::Queued,
+            machines: Vec::new(),
+            iterations_done: 0,
+            iterations_target: iterations,
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        matches!(self.state, TaskState::Running | TaskState::Recovering)
+    }
+
+    pub fn progress(&self) -> f64 {
+        if self.iterations_target == 0 {
+            return 1.0;
+        }
+        self.iterations_done as f64 / self.iterations_target as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_flags() {
+        let mut t = TrainingTask::new(0, ModelSpec::bert_large(), 100);
+        assert_eq!(t.state, TaskState::Queued);
+        assert!(!t.is_active());
+        t.state = TaskState::Running;
+        assert!(t.is_active());
+        t.state = TaskState::Failed("boom".into());
+        assert!(!t.is_active());
+    }
+
+    #[test]
+    fn progress_fraction() {
+        let mut t = TrainingTask::new(1, ModelSpec::gpt2_xl(), 200);
+        t.iterations_done = 50;
+        assert!((t.progress() - 0.25).abs() < 1e-12);
+        let z = TrainingTask::new(2, ModelSpec::gpt2_xl(), 0);
+        assert_eq!(z.progress(), 1.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Training data for the GCN: random fleets labeled by the oracle
+//! partitioner (the paper's "sparsely label this subgraph to enable the
+//! neural network to learn ... in a supervised manner", §3).
+//!
+//! Labels: machine → class = task index in the sampled workload
+//! (largest model = class 0, …); spare machines get [`SPARE_CLASS`].
+
+use crate::cluster::Fleet;
+use crate::graph::{node_features, ClusterGraph};
+use crate::models::ModelSpec;
+use crate::scheduler::{oracle_partition, OracleOptions};
+use crate::util::rng::Rng;
+
+/// Class id for machines the oracle leaves unassigned. Must be <
+/// manifest `c` (8).
+pub const SPARE_CLASS: i32 = 7;
+
+/// One labeled, padded training example.
+#[derive(Clone, Debug)]
+pub struct LabeledGraph {
+    /// Row-major `[slots, slots]`.
+    pub adj: Vec<f32>,
+    /// Row-major `[slots, FEATURE_DIM]`.
+    pub feats: Vec<f32>,
+    /// `[slots]`, class ids (padding rows are 0 and masked out).
+    pub labels: Vec<i32>,
+    /// `[slots]`, 1.0 = real machine.
+    pub mask: Vec<f32>,
+    /// Real machine count.
+    pub n_real: usize,
+}
+
+impl LabeledGraph {
+    /// Build from a fleet + tasks via the oracle.
+    pub fn from_fleet(fleet: &Fleet, tasks: &[ModelSpec], slots: usize)
+        -> LabeledGraph
+    {
+        let graph = ClusterGraph::from_fleet(fleet);
+        let assignment = oracle_partition(fleet, &graph, tasks,
+                                          &OracleOptions::default());
+        let mut labels = vec![0i32; slots];
+        for m in 0..fleet.len() {
+            labels[m] = match assignment.task_of(m) {
+                Some(t) => t as i32,
+                None => SPARE_CLASS,
+            };
+        }
+        LabeledGraph {
+            adj: graph.padded_adj(slots),
+            feats: node_features(&fleet.machines, &graph, slots),
+            labels,
+            mask: graph.padded_mask(slots),
+            n_real: fleet.len(),
+        }
+    }
+}
+
+/// Sample a workload of 2–3 *distinct-scale* tasks, sized to be trainable
+/// on the fleet. Near-identical model sizes (BERT 340M vs RoBERTa 355M vs
+/// XLNet 340M) are excluded from the training catalog: the oracle labels
+/// either grouping arbitrarily, which puts an irreducible noise floor on
+/// supervised accuracy — distinct scales keep the imitation target
+/// well-defined. (Inference generalizes to same-size tasks regardless:
+/// Algorithm 1 consumes classes by rank, not identity.)
+fn sample_tasks(rng: &mut Rng, fleet_gb: f64) -> Vec<ModelSpec> {
+    let catalog = [
+        ModelSpec::t5_11b(),    // 176 GB
+        ModelSpec::gpt2_xl(),   // 24 GB
+        ModelSpec::bert_large(), // 5.4 GB
+    ];
+    let n_tasks = 2 + rng.below(2);
+    let pick = rng.sample_indices(catalog.len(), n_tasks.min(catalog.len()));
+    let mut tasks: Vec<ModelSpec> = Vec::new();
+    let mut budget = fleet_gb * 0.8;
+    for &i in &pick {
+        let t = catalog[i].clone();
+        if t.train_gb() <= budget {
+            budget -= t.train_gb();
+            tasks.push(t);
+        }
+    }
+    if tasks.is_empty() {
+        tasks.push(ModelSpec::bert_large());
+    }
+    // Largest first — class 0 is always the biggest model, matching how
+    // systems::hulk feeds Algorithm 1.
+    tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+    tasks
+}
+
+/// Generate `count` labeled graphs with `slots` node slots.
+pub fn make_dataset(count: usize, slots: usize, seed: u64)
+    -> Vec<LabeledGraph>
+{
+    let mut rng = Rng::new(seed ^ 0x4441_5441); // "DATA"
+    (0..count)
+        .map(|i| {
+            let n = 8 + rng.below(slots.min(46) - 7); // 8..=min(46,slots)
+            let fleet = Fleet::random(n, seed.wrapping_add(i as u64 * 977));
+            let tasks = sample_tasks(&mut rng, fleet.total_memory_gb());
+            LabeledGraph::from_fleet(&fleet, &tasks, slots)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::FEATURE_DIM;
+
+    #[test]
+    fn shapes_are_padded_consistently() {
+        let ds = make_dataset(5, 64, 0);
+        assert_eq!(ds.len(), 5);
+        for g in &ds {
+            assert_eq!(g.adj.len(), 64 * 64);
+            assert_eq!(g.feats.len(), 64 * FEATURE_DIM);
+            assert_eq!(g.labels.len(), 64);
+            assert_eq!(g.mask.len(), 64);
+            assert_eq!(g.mask.iter().sum::<f32>() as usize, g.n_real);
+        }
+    }
+
+    #[test]
+    fn labels_are_valid_classes() {
+        let ds = make_dataset(10, 64, 1);
+        for g in &ds {
+            for i in 0..g.n_real {
+                let l = g.labels[i];
+                assert!((0..=SPARE_CLASS).contains(&l), "label {l}");
+            }
+            // At least two distinct classes among real nodes (it's a
+            // partition of ≥2 tasks or tasks+spares).
+            let mut classes: Vec<i32> =
+                g.labels[..g.n_real].to_vec();
+            classes.sort_unstable();
+            classes.dedup();
+            assert!(!classes.is_empty());
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = make_dataset(3, 64, 42);
+        let b = make_dataset(3, 64, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.labels, y.labels);
+            assert_eq!(x.adj, y.adj);
+        }
+    }
+
+    #[test]
+    fn paper_fleet_example_has_class_zero_for_opt() {
+        let fleet = Fleet::paper_evaluation(0);
+        let g = LabeledGraph::from_fleet(&fleet, &ModelSpec::paper_four(), 64);
+        assert_eq!(g.n_real, 46);
+        // Class 0 (OPT) must be populated with multiple machines.
+        let opt_count =
+            g.labels[..46].iter().filter(|&&l| l == 0).count();
+        assert!(opt_count >= 8, "OPT group has {opt_count} machines");
+    }
+}

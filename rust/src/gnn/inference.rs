@@ -1,0 +1,161 @@
+//! GCN inference for Algorithm 1: classify machines into task classes.
+//!
+//! Two backends behind one enum: the PJRT `forward` artifact (production
+//! path) and the pure-Rust reference forward (artifact-free tests, CI
+//! without the python toolchain).
+
+use anyhow::Result;
+
+use crate::cluster::Fleet;
+use crate::graph::{node_features, ClusterGraph};
+use crate::models::ModelSpec;
+use crate::runtime::GcnRuntime;
+use crate::scheduler::TaskSplitter;
+
+use super::reference::RefGcn;
+
+/// A classification backend.
+pub enum Classifier {
+    /// AOT-compiled GCN through PJRT.
+    Runtime(GcnRuntime),
+    /// Pure-Rust reference forward (same math).
+    Reference(RefGcn),
+}
+
+impl Classifier {
+    pub fn slots(&self) -> usize {
+        match self {
+            Classifier::Runtime(rt) => rt.manifest.n,
+            Classifier::Reference(r) => r.cfg.n,
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            Classifier::Runtime(rt) => rt.manifest.c,
+            Classifier::Reference(r) => r.cfg.c,
+        }
+    }
+
+    /// Class probabilities, row-major `[slots, c]`.
+    pub fn probs(&self, params: &[f32], adj: &[f32], feats: &[f32],
+                 mask: &[f32]) -> Result<Vec<f32>>
+    {
+        match self {
+            Classifier::Runtime(rt) => rt.forward(params, adj, feats, mask),
+            Classifier::Reference(r) => {
+                Ok(r.forward(adj, feats, mask).data)
+            }
+        }
+    }
+}
+
+/// Classify every real machine of a fleet: returns per-machine class ids.
+pub fn classify(classifier: &Classifier, params: &[f32], fleet: &Fleet)
+    -> Result<Vec<usize>>
+{
+    let slots = classifier.slots();
+    let graph = ClusterGraph::from_fleet(fleet);
+    let adj = graph.padded_adj(slots);
+    let feats = node_features(&fleet.machines, &graph, slots);
+    let mask = graph.padded_mask(slots);
+    let probs = classifier.probs(params, &adj, &feats, &mask)?;
+    let c = classifier.n_classes();
+    Ok((0..fleet.len())
+        .map(|i| {
+            let row = &probs[i * c..(i + 1) * c];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(k, _)| k)
+                .unwrap()
+        })
+        .collect())
+}
+
+/// The trained-GNN splitter `F` for Algorithm 1: rank the remaining
+/// machines by class-`i` probability and take the top slice that clears
+/// the task's memory threshold.
+pub struct GnnSplitter<'a> {
+    pub classifier: &'a Classifier,
+    pub params: &'a [f32],
+}
+
+impl TaskSplitter for GnnSplitter<'_> {
+    fn split(&self, fleet: &Fleet, graph: &ClusterGraph,
+             remaining: &[usize], task: &ModelSpec, class_idx: usize)
+        -> Vec<usize>
+    {
+        let slots = self.classifier.slots();
+        let adj = graph.padded_adj(slots);
+        let feats = node_features(&fleet.machines, &graph, slots);
+        let mask = graph.padded_mask(slots);
+        let Ok(probs) =
+            self.classifier.probs(self.params, &adj, &feats, &mask)
+        else {
+            return Vec::new();
+        };
+        let c = self.classifier.n_classes();
+        let mut ranked: Vec<usize> = remaining.to_vec();
+        ranked.sort_by(|&a, &b| {
+            let pa = probs[a * c + class_idx];
+            let pb = probs[b * c + class_idx];
+            pb.partial_cmp(&pa).unwrap()
+        });
+        // Take machines until the memory threshold Mₙ is cleared, with
+        // 20% headroom, then stop — Algorithm 1 wants "the smaller graph".
+        let mut group = Vec::new();
+        let mut mem = 0.0;
+        for &m in &ranked {
+            group.push(m);
+            mem += fleet.machines[m].total_memory_gb();
+            if mem >= task.train_gb() * 1.2 && group.len() >= 2 {
+                break;
+            }
+        }
+        group
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gnn::reference::RefGcnConfig;
+    use crate::util::rng::Rng;
+
+    fn reference_classifier() -> (Classifier, Vec<f32>) {
+        let cfg = RefGcnConfig { n: 64, f: 16, h: 16, h2: 8, c: 8 };
+        let mut rng = Rng::new(11);
+        let params: Vec<f32> =
+            (0..cfg.n_params()).map(|_| (rng.normal() * 0.1) as f32).collect();
+        (Classifier::Reference(RefGcn::new(cfg, &params)), params)
+    }
+
+    #[test]
+    fn classify_returns_one_class_per_machine() {
+        let (clf, params) = reference_classifier();
+        let fleet = Fleet::paper_toy(0);
+        let classes = classify(&clf, &params, &fleet).unwrap();
+        assert_eq!(classes.len(), 8);
+        assert!(classes.iter().all(|&c| c < clf.n_classes()));
+    }
+
+    #[test]
+    fn gnn_splitter_respects_remaining_pool() {
+        let (clf, params) = reference_classifier();
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let splitter = GnnSplitter { classifier: &clf, params: &params };
+        let remaining: Vec<usize> = (10..30).collect();
+        let group = splitter.split(&fleet, &graph, &remaining,
+                                   &ModelSpec::gpt2_xl(), 0);
+        assert!(!group.is_empty());
+        assert!(group.iter().all(|m| remaining.contains(m)));
+        // Memory threshold reached.
+        let mem: f64 = group
+            .iter()
+            .map(|&m| fleet.machines[m].total_memory_gb())
+            .sum();
+        assert!(mem >= ModelSpec::gpt2_xl().train_gb());
+    }
+}

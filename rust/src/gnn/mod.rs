@@ -1,0 +1,23 @@
+//! The Hulk GCN on the Rust side.
+//!
+//! - [`reference`] — pure-Rust mirror of the JAX forward pass (same math
+//!   as `python/compile/model.py`), used for artifact-free tests and as a
+//!   CPU fallback when `artifacts/` is absent.
+//! - [`dataset`] — synthetic labeled graphs: random fleets partitioned by
+//!   the `scheduler::oracle` (the paper's "sparse labels").
+//! - [`trainer`] — the Fig. 4 training loop, driven from Rust through the
+//!   PJRT `train_step` artifact.
+//! - [`inference`] — node classification for Algorithm 1, via the PJRT
+//!   `forward` artifact or the reference forward.
+
+pub mod dataset;
+pub mod quality;
+pub mod inference;
+pub mod reference;
+pub mod trainer;
+
+pub use dataset::{make_dataset, LabeledGraph};
+pub use quality::{assignment_quality, cost_vs_random, AssignmentQuality};
+pub use inference::{classify, Classifier};
+pub use reference::{RefGcn, RefGcnConfig};
+pub use trainer::{train_gcn, TrainCurvePoint, TrainerOptions};

@@ -1,0 +1,148 @@
+//! Assignment-quality metrics: how good is a grouping *operationally*,
+//! independent of exact label match?
+//!
+//! Exact-match accuracy under-credits the GCN: machines with identical
+//! `{region, GPU}` are interchangeable and the oracle breaks ties
+//! arbitrarily (EXPERIMENTS.md §Fig4). What the system actually cares
+//! about is the quality of the groups Algorithm 1 produces — measured
+//! here as intra-group communication cost, memory slack and feasibility,
+//! comparable across splitters (GNN vs oracle vs random).
+
+use crate::cluster::Fleet;
+use crate::graph::ClusterGraph;
+use crate::models::ModelSpec;
+use crate::scheduler::Assignment;
+use crate::util::rng::Rng;
+
+/// Quality metrics for one assignment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AssignmentQuality {
+    /// Σ intra-group pairwise latency (the Hulk objective; lower=better).
+    pub comm_cost: f64,
+    /// Min over tasks of group-memory / required-memory (≥1 = feasible).
+    pub min_memory_slack: f64,
+    /// Are all groups connected subgraphs?
+    pub all_connected: bool,
+    /// Number of spare machines (recovery pool).
+    pub spares: usize,
+}
+
+/// Compute quality of `assignment` for `tasks`.
+pub fn assignment_quality(fleet: &Fleet, graph: &ClusterGraph,
+                          assignment: &Assignment, tasks: &[ModelSpec])
+    -> AssignmentQuality
+{
+    let comm_cost = assignment.total_cost(graph);
+    let mut min_slack = f64::INFINITY;
+    for (t, group) in assignment.groups.iter().enumerate() {
+        let mem: f64 = group
+            .iter()
+            .map(|&m| fleet.machines[m].total_memory_gb())
+            .sum();
+        min_slack = min_slack.min(mem / tasks[t].train_gb());
+    }
+    AssignmentQuality {
+        comm_cost,
+        min_memory_slack: min_slack,
+        all_connected: assignment.validate_connected(graph).is_ok(),
+        spares: assignment.spares(fleet.len()).len(),
+    }
+}
+
+/// Baseline: random assignment with the same group sizes (averaged over
+/// `trials` shuffles). Returns the mean comm cost — the denominator for
+/// a "how much better than chance" ratio.
+pub fn random_baseline_cost(fleet: &Fleet, graph: &ClusterGraph,
+                            sizes: &[usize], seed: u64, trials: usize)
+    -> f64
+{
+    let mut rng = Rng::new(seed ^ 0x5155_414C); // "QUAL"
+    let mut total = 0.0;
+    for _ in 0..trials {
+        let mut ids: Vec<usize> = (0..fleet.len()).collect();
+        rng.shuffle(&mut ids);
+        let mut off = 0;
+        let mut groups = Vec::with_capacity(sizes.len());
+        for &s in sizes {
+            let end = (off + s).min(ids.len());
+            groups.push(ids[off..end].to_vec());
+            off = end;
+        }
+        total += Assignment::new(groups).total_cost(graph);
+    }
+    total / trials as f64
+}
+
+/// Comm-cost ratio of an assignment vs the random baseline with matched
+/// group sizes (0 = perfect co-location, 1 = no better than chance).
+pub fn cost_vs_random(fleet: &Fleet, graph: &ClusterGraph,
+                      assignment: &Assignment, seed: u64) -> f64
+{
+    let sizes: Vec<usize> =
+        assignment.groups.iter().map(Vec::len).collect();
+    let baseline = random_baseline_cost(fleet, graph, &sizes, seed, 16);
+    if baseline <= 0.0 {
+        return 0.0;
+    }
+    assignment.total_cost(graph) / baseline
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::{oracle_partition, OracleOptions};
+
+    fn setup() -> (Fleet, ClusterGraph, Assignment, Vec<ModelSpec>) {
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let mut tasks = ModelSpec::paper_four();
+        tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+        let a = oracle_partition(&fleet, &graph, &tasks,
+                                 &OracleOptions::default());
+        (fleet, graph, a, tasks)
+    }
+
+    #[test]
+    fn oracle_quality_is_feasible_and_connected() {
+        let (fleet, graph, a, tasks) = setup();
+        let q = assignment_quality(&fleet, &graph, &a, &tasks);
+        assert!(q.min_memory_slack >= 1.0, "slack {}", q.min_memory_slack);
+        assert!(q.all_connected);
+        assert!(q.comm_cost > 0.0);
+    }
+
+    #[test]
+    fn oracle_beats_random_baseline() {
+        let (fleet, graph, a, _) = setup();
+        let ratio = cost_vs_random(&fleet, &graph, &a, 1);
+        assert!(ratio < 0.9, "oracle/random cost ratio {ratio}");
+    }
+
+    #[test]
+    fn random_baseline_is_deterministic_per_seed() {
+        let (fleet, graph, a, _) = setup();
+        let sizes: Vec<usize> = a.groups.iter().map(Vec::len).collect();
+        let x = random_baseline_cost(&fleet, &graph, &sizes, 5, 8);
+        let y = random_baseline_cost(&fleet, &graph, &sizes, 5, 8);
+        assert_eq!(x, y);
+        let z = random_baseline_cost(&fleet, &graph, &sizes, 6, 8);
+        assert_ne!(x, z);
+    }
+
+    #[test]
+    fn worse_assignment_scores_worse() {
+        let (fleet, graph, a, tasks) = setup();
+        // Scatter the first two groups' members across each other.
+        let mut bad = a.clone();
+        let k = bad.groups[0].len().min(bad.groups[1].len()) / 2;
+        for i in 0..k {
+            let x = bad.groups[0][i];
+            bad.groups[0][i] = bad.groups[1][i];
+            bad.groups[1][i] = x;
+        }
+        let qa = assignment_quality(&fleet, &graph, &a, &tasks);
+        let qb = assignment_quality(&fleet, &graph, &bad, &tasks);
+        assert!(qb.comm_cost >= qa.comm_cost,
+                "swap should not reduce the oracle's optimized cost");
+    }
+}

@@ -1,0 +1,264 @@
+//! Pure-Rust reference GCN forward pass — a line-for-line mirror of
+//! `python/compile/model.py::forward` (edge pool → 3 GCN layers → GCN
+//! head → masked softmax) over the flat parameter vector laid out by
+//! `ModelConfig.param_layout()`.
+//!
+//! Used (a) to unit-test the marshalling path without the python
+//! toolchain, (b) to cross-check the PJRT artifact numerics in
+//! integration tests, (c) as an inference fallback when `artifacts/` is
+//! missing. Training always goes through PJRT (there is deliberately no
+//! Rust backward pass — the paper's training math lives in L2).
+
+use crate::util::MatF32;
+use crate::graph::normalize::sym_normalize;
+
+/// Must match `WSUM_SCALE` in model.py.
+pub const WSUM_SCALE: f32 = 0.01;
+
+/// Shape contract (mirrors python `ModelConfig`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RefGcnConfig {
+    pub n: usize,
+    pub f: usize,
+    pub h: usize,
+    pub h2: usize,
+    pub c: usize,
+}
+
+impl RefGcnConfig {
+    /// Default artifact dims (manifest.kv).
+    pub fn default_artifact() -> RefGcnConfig {
+        RefGcnConfig { n: 64, f: 16, h: 192, h2: 96, c: 8 }
+    }
+
+    /// (name, rows, cols) layout in flat-vector order; biases are 1×d.
+    pub fn param_layout(&self) -> Vec<(&'static str, usize, usize)> {
+        vec![
+            ("ep_w_self", self.f, self.h),
+            ("ep_w_nbr", self.f, self.h),
+            ("ep_w_e", 1, self.h),
+            ("ep_b", 1, self.h),
+            ("g1_w", self.h, self.h),
+            ("g1_ws", self.h, self.h),
+            ("g1_b", 1, self.h),
+            ("g2_w", self.h, self.h),
+            ("g2_ws", self.h, self.h),
+            ("g2_b", 1, self.h),
+            ("g3_w", self.h, self.h2),
+            ("g3_ws", self.h, self.h2),
+            ("g3_b", 1, self.h2),
+            ("hd_w", self.h2, self.c),
+            ("hd_ws", self.h2, self.c),
+            ("hd_b", 1, self.c),
+        ]
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_layout().iter().map(|(_, r, c)| r * c).sum()
+    }
+}
+
+/// The reference model: config + sliced parameter matrices.
+pub struct RefGcn {
+    pub cfg: RefGcnConfig,
+    params: Vec<MatF32>,
+}
+
+impl RefGcn {
+    pub fn new(cfg: RefGcnConfig, flat: &[f32]) -> RefGcn {
+        assert_eq!(flat.len(), cfg.n_params(), "param vector length");
+        let mut params = Vec::new();
+        let mut off = 0;
+        for (_, r, c) in cfg.param_layout() {
+            params.push(MatF32::from_vec(r, c, flat[off..off + r * c].to_vec()));
+            off += r * c;
+        }
+        RefGcn { cfg, params }
+    }
+
+    fn p(&self, idx: usize) -> &MatF32 {
+        &self.params[idx]
+    }
+
+    /// Forward pass → probabilities [n, c]. Inputs are padded row-major
+    /// tensors exactly as fed to the PJRT artifact.
+    pub fn forward(&self, adj: &[f32], feats: &[f32], mask: &[f32]) -> MatF32 {
+        let (n, f) = (self.cfg.n, self.cfg.f);
+        assert_eq!(adj.len(), n * n);
+        assert_eq!(feats.len(), n * f);
+        assert_eq!(mask.len(), n);
+        let x = MatF32::from_vec(n, f, feats.to_vec());
+        let a_hat = sym_normalize(adj, n);
+
+        // Edge pooling (model.py::_edge_pool).
+        let mut nbr_sum = MatF32::zeros(n, f);
+        let mut deg = vec![0.0f32; n];
+        let mut wsum = vec![0.0f32; n];
+        for i in 0..n {
+            for j in 0..n {
+                let w = adj[i * n + j];
+                if w > 0.0 {
+                    deg[i] += 1.0;
+                    wsum[i] += w;
+                    for k in 0..f {
+                        let v = nbr_sum.at(i, k) + x.at(j, k);
+                        nbr_sum.set(i, k, v);
+                    }
+                }
+            }
+        }
+        let degc: Vec<f32> = deg.iter().map(|&d| d.max(1.0)).collect();
+        let mut h0 = x.matmul(self.p(0)); // ep_w_self
+        let mut nbr_mean = nbr_sum;
+        nbr_mean.scale_rows(&degc.iter().map(|d| 1.0 / d).collect::<Vec<_>>());
+        let nbr_term = nbr_mean.matmul(self.p(1)); // ep_w_nbr
+        let w_e = self.p(2); // 1 × h
+        for i in 0..n {
+            let wmean = wsum[i] / degc[i] * WSUM_SCALE;
+            for k in 0..self.cfg.h {
+                let v = h0.at(i, k)
+                    + nbr_term.at(i, k)
+                    + wmean * w_e.at(0, k)
+                    + self.p(3).at(0, k); // ep_b
+                h0.set(i, k, v);
+            }
+        }
+        h0.relu_inplace();
+        h0.scale_rows(mask);
+
+        // GCN stack (gcn_layer: act(Â (X W) + X W_self + b) · mask).
+        let h1 = self.gcn_layer(&a_hat, &h0, 4, 5, 6, true, mask);
+        let h2 = self.gcn_layer(&a_hat, &h1, 7, 8, 9, true, mask);
+        let h3 = self.gcn_layer(&a_hat, &h2, 10, 11, 12, true, mask);
+        let logits =
+            self.gcn_layer(&a_hat, &h3, 13, 14, 15, false, &vec![1.0; n]);
+
+        // Row softmax.
+        let mut probs = logits;
+        for i in 0..n {
+            let row_max = probs.row(i).iter().cloned().fold(f32::MIN, f32::max);
+            let mut denom = 0.0;
+            for k in 0..self.cfg.c {
+                let e = (probs.at(i, k) - row_max).exp();
+                probs.set(i, k, e);
+                denom += e;
+            }
+            for k in 0..self.cfg.c {
+                probs.set(i, k, probs.at(i, k) / denom);
+            }
+        }
+        probs
+    }
+
+    fn gcn_layer(&self, a_hat: &MatF32, x: &MatF32, w_idx: usize,
+                 ws_idx: usize, b_idx: usize, relu: bool, mask: &[f32])
+        -> MatF32
+    {
+        let xw = x.matmul(self.p(w_idx));
+        let mut out = a_hat.matmul(&xw);
+        let self_term = x.matmul(self.p(ws_idx));
+        for (o, s) in out.data.iter_mut().zip(&self_term.data) {
+            *o += s;
+        }
+        out.add_row_bias(self.p(b_idx).row(0));
+        if relu {
+            out.relu_inplace();
+        }
+        out.scale_rows(mask);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> RefGcnConfig {
+        RefGcnConfig { n: 8, f: 16, h: 8, h2: 4, c: 2 }
+    }
+
+    fn rand_params(cfg: &RefGcnConfig, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..cfg.n_params())
+            .map(|_| (r.normal() * 0.2) as f32)
+            .collect()
+    }
+
+    fn toy_inputs(cfg: &RefGcnConfig) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let n = cfg.n;
+        let mut adj = vec![0.0f32; n * n];
+        for i in 0..5 {
+            for j in (i + 1)..5 {
+                let w = 30.0 + 10.0 * (i + j) as f32;
+                adj[i * n + j] = w;
+                adj[j * n + i] = w;
+            }
+        }
+        let mut feats = vec![0.0f32; n * cfg.f];
+        for i in 0..5 {
+            feats[i * cfg.f + i] = 1.0;
+            feats[i * cfg.f + 15] = 1.0;
+        }
+        let mut mask = vec![0.0f32; n];
+        for m in &mut mask[..5] {
+            *m = 1.0;
+        }
+        (adj, feats, mask)
+    }
+
+    #[test]
+    fn default_param_count_matches_manifest() {
+        assert_eq!(RefGcnConfig::default_artifact().n_params(), 192_872);
+    }
+
+    #[test]
+    fn forward_outputs_probability_rows() {
+        let cfg = tiny_cfg();
+        let gcn = RefGcn::new(cfg, &rand_params(&cfg, 1));
+        let (adj, feats, mask) = toy_inputs(&cfg);
+        let probs = gcn.forward(&adj, &feats, &mask);
+        assert_eq!((probs.rows, probs.cols), (cfg.n, cfg.c));
+        for i in 0..cfg.n {
+            let s: f32 = probs.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row {i} sums to {s}");
+            assert!(probs.row(i).iter().all(|&p| p >= 0.0));
+        }
+    }
+
+    #[test]
+    fn padded_garbage_does_not_leak_into_real_rows() {
+        let cfg = tiny_cfg();
+        let gcn = RefGcn::new(cfg, &rand_params(&cfg, 2));
+        let (adj, mut feats, mask) = toy_inputs(&cfg);
+        let base = gcn.forward(&adj, &feats, &mask);
+        for i in 5..8 {
+            for k in 0..cfg.f {
+                feats[i * cfg.f + k] = 999.0;
+            }
+        }
+        let poked = gcn.forward(&adj, &feats, &mask);
+        for i in 0..5 {
+            for k in 0..cfg.c {
+                assert!((base.at(i, k) - poked.at(i, k)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_forward() {
+        let cfg = tiny_cfg();
+        let params = rand_params(&cfg, 3);
+        let (adj, feats, mask) = toy_inputs(&cfg);
+        let a = RefGcn::new(cfg, &params).forward(&adj, &feats, &mask);
+        let b = RefGcn::new(cfg, &params).forward(&adj, &feats, &mask);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "param vector length")]
+    fn wrong_param_length_panics() {
+        let cfg = tiny_cfg();
+        RefGcn::new(cfg, &[0.0; 10]);
+    }
+}

@@ -1,0 +1,243 @@
+//! The cluster graph: weighted adjacency over a fleet (paper §3, Fig. 1/7).
+
+use crate::cluster::Fleet;
+
+/// Multiplicative spread of per-machine-pair path variation around the
+/// regional latency (±10%). Two machines in the same region sit in
+/// different DCs/racks, so their pairwise latencies differ slightly —
+/// without this, same-region machines have *identical* adjacency rows and
+/// are mathematically indistinguishable to the GCN (and to any scheduler)
+/// even though the oracle must split them across groups.
+const MACHINE_JITTER: f32 = 0.10;
+
+/// Deterministic pair jitter in [1−J, 1+J], symmetric in (i, j).
+fn pair_jitter(i: usize, j: usize) -> f32 {
+    let (a, b) = if i < j { (i, j) } else { (j, i) };
+    let mut h = (a as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(b as u64)
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h ^= h >> 31;
+    let u = (h >> 11) as f32 / (1u64 << 53) as f32; // [0, 1)
+    1.0 - MACHINE_JITTER + 2.0 * MACHINE_JITTER * u
+}
+
+/// Dense weighted adjacency. `adj[i][j]` is the latency in ms per 64-byte
+/// message between machines i and j; `0.0` means no edge (unreachable or
+/// self). Symmetric, zero diagonal — exactly the paper's adjacency-matrix
+/// representation (§3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterGraph {
+    pub n: usize,
+    /// Row-major n×n.
+    pub adj: Vec<f32>,
+}
+
+impl ClusterGraph {
+    /// Build from a fleet: edge iff the two machines' regions can
+    /// communicate; weight = regional WAN latency × per-pair path jitter.
+    pub fn from_fleet(fleet: &Fleet) -> ClusterGraph {
+        let n = fleet.len();
+        let mut adj = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if let Some(lat) = fleet.latency_ms(i, j) {
+                    let w = lat as f32 * pair_jitter(i, j);
+                    adj[i * n + j] = w;
+                    adj[j * n + i] = w;
+                }
+            }
+        }
+        ClusterGraph { n, adj }
+    }
+
+    #[inline]
+    pub fn weight(&self, i: usize, j: usize) -> f32 {
+        self.adj[i * self.n + j]
+    }
+
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        self.weight(i, j) > 0.0
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        (0..self.n).filter(|&j| self.has_edge(i, j)).count()
+    }
+
+    pub fn neighbors(&self, i: usize) -> Vec<usize> {
+        (0..self.n).filter(|&j| self.has_edge(i, j)).collect()
+    }
+
+    /// Mean latency of i's incident edges (∞-free: None if isolated).
+    pub fn mean_latency(&self, i: usize) -> Option<f32> {
+        let nbrs = self.neighbors(i);
+        if nbrs.is_empty() {
+            return None;
+        }
+        Some(nbrs.iter().map(|&j| self.weight(i, j)).sum::<f32>()
+            / nbrs.len() as f32)
+    }
+
+    pub fn min_latency(&self, i: usize) -> Option<f32> {
+        self.neighbors(i)
+            .iter()
+            .map(|&j| self.weight(i, j))
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Total edge weight inside a node subset — the objective Hulk
+    /// minimizes per task group (intra-group communication cost).
+    pub fn subset_cost(&self, nodes: &[usize]) -> f64 {
+        let mut cost = 0.0;
+        for (k, &i) in nodes.iter().enumerate() {
+            for &j in &nodes[k + 1..] {
+                cost += self.weight(i, j) as f64;
+            }
+        }
+        cost
+    }
+
+    /// Is the induced subgraph on `nodes` connected? (A task group must be
+    /// able to pipeline across its members.)
+    pub fn subset_connected(&self, nodes: &[usize]) -> bool {
+        if nodes.is_empty() {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![nodes[0]];
+        seen[nodes[0]] = true;
+        let in_set: Vec<bool> = {
+            let mut v = vec![false; self.n];
+            for &i in nodes {
+                v[i] = true;
+            }
+            v
+        };
+        let mut count = 0;
+        while let Some(i) = stack.pop() {
+            count += 1;
+            for j in 0..self.n {
+                if in_set[j] && !seen[j] && self.has_edge(i, j) {
+                    seen[j] = true;
+                    stack.push(j);
+                }
+            }
+        }
+        count == nodes.len()
+    }
+
+    /// Pad to `slots` node slots (the GCN artifact's fixed N): returns the
+    /// padded row-major adjacency. Padded slots are isolated.
+    pub fn padded_adj(&self, slots: usize) -> Vec<f32> {
+        assert!(slots >= self.n, "graph larger than artifact slots");
+        let mut out = vec![0.0f32; slots * slots];
+        for i in 0..self.n {
+            for j in 0..self.n {
+                out[i * slots + j] = self.adj[i * self.n + j];
+            }
+        }
+        out
+    }
+
+    /// Node mask for `slots` slots: 1.0 for real nodes, 0.0 for padding.
+    pub fn padded_mask(&self, slots: usize) -> Vec<f32> {
+        assert!(slots >= self.n);
+        let mut m = vec![0.0f32; slots];
+        for v in &mut m[..self.n] {
+            *v = 1.0;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Fleet, Region};
+
+    #[test]
+    fn from_fleet_is_symmetric_zero_diagonal() {
+        let g = ClusterGraph::from_fleet(&Fleet::paper_toy(0));
+        assert_eq!(g.n, 8);
+        for i in 0..g.n {
+            assert_eq!(g.weight(i, i), 0.0);
+            for j in 0..g.n {
+                assert_eq!(g.weight(i, j), g.weight(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_pair_has_no_edge() {
+        // Build a fleet with Beijing and Paris machines: Table 1 blocks
+        // that pair.
+        let mut fleet = Fleet::paper_toy(0);
+        let paris = fleet.add_machine(
+            Region::Paris,
+            crate::cluster::GpuModel::V100,
+            8,
+        );
+        let g = ClusterGraph::from_fleet(&fleet);
+        assert!(!g.has_edge(0, paris)); // node0 is Beijing
+        assert!(g.has_edge(1, paris)); // Nanjing–Paris measured 265.1
+    }
+
+    #[test]
+    fn degree_and_neighbors_consistent() {
+        let g = ClusterGraph::from_fleet(&Fleet::paper_evaluation(0));
+        for i in 0..g.n {
+            assert_eq!(g.degree(i), g.neighbors(i).len());
+        }
+    }
+
+    #[test]
+    fn subset_cost_counts_each_pair_once() {
+        let g = ClusterGraph {
+            n: 3,
+            adj: vec![0.0, 10.0, 20.0, 10.0, 0.0, 30.0, 20.0, 30.0, 0.0],
+        };
+        assert_eq!(g.subset_cost(&[0, 1, 2]), 60.0);
+        assert_eq!(g.subset_cost(&[0, 1]), 10.0);
+        assert_eq!(g.subset_cost(&[0]), 0.0);
+    }
+
+    #[test]
+    fn connectivity_detects_split_groups() {
+        // 0-1 connected, 2 isolated.
+        let g = ClusterGraph {
+            n: 3,
+            adj: vec![0.0, 5.0, 0.0, 5.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+        };
+        assert!(g.subset_connected(&[0, 1]));
+        assert!(!g.subset_connected(&[0, 2]));
+        assert!(g.subset_connected(&[2]));
+        assert!(g.subset_connected(&[]));
+    }
+
+    #[test]
+    fn padding_preserves_content_and_masks() {
+        let g = ClusterGraph::from_fleet(&Fleet::paper_toy(0));
+        let padded = g.padded_adj(16);
+        let mask = g.padded_mask(16);
+        assert_eq!(padded.len(), 256);
+        assert_eq!(mask.iter().sum::<f32>(), 8.0);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(padded[i * 16 + j], g.weight(i, j));
+            }
+        }
+        // Padded rows are all zero.
+        for i in 8..16 {
+            for j in 0..16 {
+                assert_eq!(padded[i * 16 + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn padding_smaller_than_graph_panics() {
+        let g = ClusterGraph::from_fleet(&Fleet::paper_toy(0));
+        g.padded_adj(4);
+    }
+}

@@ -1,0 +1,116 @@
+//! Node feature embedding (paper §3, Eq. 2): machine → f32 vector.
+//!
+//! This is the ONLY definition of the feature encoding — Python receives
+//! `feats[N, F]` as data and never re-derives it, so Rust and the GCN
+//! artifact cannot drift. Layout (F = 16):
+//!
+//! | idx   | feature                                             |
+//! |-------|-----------------------------------------------------|
+//! | 0–9   | region one-hot (`Region::index`)                    |
+//! | 10    | compute capability / 10                             |
+//! | 11    | log2(total GPU memory GB) / 10                      |
+//! | 12    | degree / n                                          |
+//! | 13    | mean incident latency / 1000 (0 if isolated)        |
+//! | 14    | min incident latency / 1000 (0 if isolated)         |
+//! | 15    | constant 1.0 (bias channel)                         |
+//!
+//! Scalings keep every channel O(1) so the GCN's Glorot init sees a
+//! well-conditioned input.
+
+use super::adjacency::ClusterGraph;
+use crate::cluster::Machine;
+
+/// Feature dimension; must equal `f` in artifacts/manifest.kv.
+pub const FEATURE_DIM: usize = 16;
+
+/// Features for every machine, padded to `slots` rows (row-major
+/// `[slots, FEATURE_DIM]`). Padded rows are all-zero.
+pub fn node_features(machines: &[Machine], graph: &ClusterGraph,
+                     slots: usize) -> Vec<f32>
+{
+    assert_eq!(machines.len(), graph.n, "fleet/graph size mismatch");
+    assert!(slots >= graph.n);
+    let mut out = vec![0.0f32; slots * FEATURE_DIM];
+    for (i, m) in machines.iter().enumerate() {
+        let row = &mut out[i * FEATURE_DIM..(i + 1) * FEATURE_DIM];
+        row[m.region.index()] = 1.0;
+        row[10] = (m.compute_capability() / 10.0) as f32;
+        row[11] = (m.total_memory_gb().max(1.0).log2() / 10.0) as f32;
+        row[12] = graph.degree(i) as f32 / graph.n.max(1) as f32;
+        row[13] = graph.mean_latency(i).unwrap_or(0.0) / 1000.0;
+        row[14] = graph.min_latency(i).unwrap_or(0.0) / 1000.0;
+        row[15] = 1.0;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Fleet, GpuModel, Region};
+
+    fn toy() -> (Fleet, ClusterGraph) {
+        let fleet = Fleet::paper_toy(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        (fleet, graph)
+    }
+
+    #[test]
+    fn shape_and_padding() {
+        let (fleet, graph) = toy();
+        let f = node_features(&fleet.machines, &graph, 16);
+        assert_eq!(f.len(), 16 * FEATURE_DIM);
+        // Padded rows all-zero.
+        for i in 8..16 {
+            assert!(f[i * FEATURE_DIM..(i + 1) * FEATURE_DIM]
+                .iter()
+                .all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn one_hot_region_is_exclusive() {
+        let (fleet, graph) = toy();
+        let f = node_features(&fleet.machines, &graph, 8);
+        for (i, m) in fleet.machines.iter().enumerate() {
+            let row = &f[i * FEATURE_DIM..(i + 1) * FEATURE_DIM];
+            let ones: Vec<usize> = (0..10).filter(|&k| row[k] == 1.0).collect();
+            assert_eq!(ones, vec![m.region.index()]);
+        }
+    }
+
+    #[test]
+    fn channels_are_order_one() {
+        let (fleet, graph) = toy();
+        let f = node_features(&fleet.machines, &graph, 8);
+        for (i, _) in fleet.machines.iter().enumerate() {
+            let row = &f[i * FEATURE_DIM..(i + 1) * FEATURE_DIM];
+            for (k, &v) in row.iter().enumerate() {
+                assert!((0.0..=1.5).contains(&v), "feature {k} = {v}");
+            }
+            assert_eq!(row[15], 1.0);
+        }
+    }
+
+    #[test]
+    fn compute_and_memory_channels_differ_between_machines() {
+        let (fleet, graph) = toy();
+        let f = node_features(&fleet.machines, &graph, 8);
+        // node2 is 8×A100 (640 GB), node6 is 8×1080Ti (88 GB).
+        let mem2 = f[2 * FEATURE_DIM + 11];
+        let mem6 = f[6 * FEATURE_DIM + 11];
+        assert!(mem2 > mem6);
+        let cc2 = f[2 * FEATURE_DIM + 10];
+        assert!((cc2 - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn isolated_node_gets_zero_latency_channels() {
+        let machines = vec![Machine::new(0, Region::Rome, GpuModel::V100, 8)];
+        let graph = ClusterGraph { n: 1, adj: vec![0.0] };
+        let f = node_features(&machines, &graph, 4);
+        assert_eq!(f[13], 0.0);
+        assert_eq!(f[14], 0.0);
+        assert_eq!(f[12], 0.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Graph representation of a fleet (paper §3): nodes = machines with
+//! `{City, ComputeCapability, Memory}`-derived feature vectors, edges =
+//! pairwise WAN latency (ms per 64-byte message), 0 = unreachable.
+//!
+//! This module is the single definition of the adjacency/feature encoding
+//! on both sides of the PJRT boundary: the Rust coordinator builds these
+//! tensors and the AOT-compiled GCN consumes them (shape contract in
+//! `artifacts/manifest.kv`).
+
+pub mod adjacency;
+pub mod features;
+pub mod normalize;
+
+pub use adjacency::ClusterGraph;
+pub use features::{node_features, FEATURE_DIM};
+pub use normalize::sym_normalize;

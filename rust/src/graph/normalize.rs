@@ -1,0 +1,135 @@
+//! Latency-affinity symmetric normalization — the Rust mirror of
+//! `python/compile/kernels/ref.py::sym_normalize_ref`, used by the
+//! pure-Rust reference GCN (`gnn::reference`) and its parity tests.
+//!
+//! Â = D^{-1/2} (S + I) D^{-1/2},  S_uv = REF_LAT / latency_uv on edges.
+//!
+//! Aggregation weight decays with latency so low-latency neighbors
+//! dominate; a binary connectivity matrix would oversmooth dense graphs
+//! (identical Â rows on a complete graph) — see ref.py for the discussion.
+
+use crate::util::MatF32;
+
+/// Must equal `AFFINITY_REF_LAT_MS` in ref.py.
+pub const AFFINITY_REF_LAT_MS: f32 = 10.0;
+
+/// Compute Â from a row-major weighted adjacency (`0` = no edge).
+pub fn sym_normalize(adj: &[f32], n: usize) -> MatF32 {
+    assert_eq!(adj.len(), n * n);
+    let mut s = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let w = adj[i * n + j];
+            s[i * n + j] = if i == j {
+                1.0
+            } else if w > 0.0 {
+                // Clamp at the self-loop weight: a 1 ms intra-region link
+                // must not out-weigh self 10:1 (oversmoothing; ref.py).
+                (AFFINITY_REF_LAT_MS / w.max(1e-6)).min(1.0)
+            } else {
+                0.0
+            };
+        }
+    }
+    let deg: Vec<f32> = (0..n)
+        .map(|i| s[i * n..(i + 1) * n].iter().sum::<f32>())
+        .collect();
+    let dinv: Vec<f32> =
+        deg.iter().map(|&d| 1.0 / d.max(1e-12).sqrt()).collect();
+    for i in 0..n {
+        for j in 0..n {
+            s[i * n + j] *= dinv[i] * dinv[j];
+        }
+    }
+    MatF32::from_vec(n, n, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isolated_node_keeps_identity() {
+        let a = sym_normalize(&[0.0; 9], 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((a.at(i, j) - want).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_output() {
+        let adj = vec![0.0, 30.0, 300.0, 30.0, 0.0, 0.0, 300.0, 0.0, 0.0];
+        let a = sym_normalize(&adj, 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((a.at(i, j) - a.at(j, i)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn low_latency_neighbor_weighs_more() {
+        // node0 connects to node1 (30 ms) and node2 (300 ms).
+        let adj = vec![0.0, 30.0, 300.0, 30.0, 0.0, 0.0, 300.0, 0.0, 0.0];
+        let a = sym_normalize(&adj, 3);
+        assert!(a.at(0, 1) > a.at(0, 2));
+        assert!(a.at(0, 0) > a.at(0, 1)); // self dominates
+    }
+
+    #[test]
+    fn rows_do_not_collapse_on_complete_graph() {
+        // Two latency cliques inside a complete graph: rows must differ
+        // (this is the degeneracy the affinity weighting exists to avoid).
+        let n = 4;
+        let mut adj = vec![0.0f32; n * n];
+        let w = |i: usize, j: usize| -> f32 {
+            if (i < 2) == (j < 2) { 30.0 } else { 300.0 }
+        };
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    adj[i * n + j] = w(i, j);
+                }
+            }
+        }
+        let a = sym_normalize(&adj, n);
+        let row0: Vec<f32> = (0..n).map(|j| a.at(0, j)).collect();
+        let row2: Vec<f32> = (0..n).map(|j| a.at(2, j)).collect();
+        let diff: f32 =
+            row0.iter().zip(&row2).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 0.05, "rows collapsed: {row0:?} vs {row2:?}");
+    }
+
+    #[test]
+    fn spectral_radius_at_most_one() {
+        // Power iteration on a random-ish symmetric normalized matrix.
+        let adj = vec![
+            0.0, 30.0, 0.0, 120.0,
+            30.0, 0.0, 55.0, 0.0,
+            0.0, 55.0, 0.0, 200.0,
+            120.0, 0.0, 200.0, 0.0,
+        ];
+        let a = sym_normalize(&adj, 4);
+        let mut v = vec![1.0f32, 0.5, -0.5, 0.25];
+        let mut lambda = 0.0f32;
+        for _ in 0..200 {
+            let mut w = vec![0.0f32; 4];
+            for i in 0..4 {
+                for j in 0..4 {
+                    w[i] += a.at(i, j) * v[j];
+                }
+            }
+            lambda = w.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if lambda > 0.0 {
+                for x in &mut w {
+                    *x /= lambda;
+                }
+            }
+            v = w;
+        }
+        assert!(lambda <= 1.0 + 1e-4, "spectral radius {lambda}");
+    }
+}

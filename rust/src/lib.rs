@@ -1,0 +1,37 @@
+//! # Hulk — GNN-driven scheduling for regionally distributed training
+//!
+//! Reproduction of *"Hulk: Graph Neural Networks for Optimizing Regionally
+//! Distributed Computing Systems"* (Yuan et al., 2023) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the coordinator: cluster/WAN modelling, the
+//!   labeling oracle, the paper's Algorithm 1 task assignment, baseline
+//!   Systems A/B/C, the Hulk system, a discrete-event execution simulator,
+//!   disaster recovery and the multi-task leader loop. The GCN is *trained
+//!   and served from Rust* through PJRT.
+//! - **Layer 2 (python/compile/model.py, build-time only)** — the Hulk GCN
+//!   (edge pooling + GCN stack + masked softmax head), AOT-lowered to HLO
+//!   text artifacts.
+//! - **Layer 1 (python/compile/kernels/, build-time only)** — Pallas
+//!   kernels for the hot ops, verified against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the model
+//! once; the `hulk` binary is self-contained afterwards.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod benchkit;
+pub mod cli;
+pub mod cluster;
+pub mod coordinator;
+pub mod gnn;
+pub mod graph;
+pub mod models;
+pub mod parallel;
+pub mod prop;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod systems;
+pub mod util;

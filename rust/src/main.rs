@@ -1,0 +1,172 @@
+//! `hulk` — the Layer-3 coordinator binary.
+//!
+//! Subcommands:
+//! - `info`      — fleet inventory + model catalog.
+//! - `assign`    — run Hulk task assignment (Table 2), oracle or GNN.
+//! - `train-gnn` — train the GCN from Rust through PJRT (Fig. 4).
+//! - `simulate`  — multi-task leader-loop simulation with failures.
+//! - `bench`     — regenerate any paper table/figure (see benches/).
+
+use anyhow::Result;
+
+use hulk::cli::Cli;
+use hulk::cluster::Fleet;
+use hulk::coordinator::{Coordinator, CoordinatorEvent, CoordinatorReply};
+use hulk::gnn::{make_dataset, train_gcn, TrainerOptions};
+use hulk::graph::ClusterGraph;
+use hulk::models::ModelSpec;
+use hulk::runtime::{GcnRuntime, Manifest};
+use hulk::runtime::client::TrainState;
+use hulk::systems::{evaluate_all, HulkSplitterKind};
+use hulk::util::rng::Rng;
+use hulk::util::table::{fmt_params, Table};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::parse(&args)?;
+    match cli.command.as_str() {
+        "info" => cmd_info(&cli),
+        "assign" => cmd_assign(&cli),
+        "train-gnn" => cmd_train_gnn(&cli),
+        "simulate" => cmd_simulate(&cli),
+        "bench" => hulk_benches::run(&cli.positional, &cli),
+        other => anyhow::bail!("unknown subcommand {other:?}"),
+    }
+}
+
+fn cmd_info(cli: &Cli) -> Result<()> {
+    let seed = cli.flag_u64("seed", 0)?;
+    let fleet = Fleet::paper_evaluation(seed);
+    println!("Hulk evaluation fleet (seed {seed}): {} servers, {} GPUs, \
+              {:.1} TB total GPU memory",
+             fleet.len(), fleet.total_gpus(),
+             fleet.total_memory_gb() / 1e3);
+    let mut t = Table::new(&["id", "region", "gpu", "n", "mem GB",
+                             "TFLOP/s"]);
+    for m in &fleet.machines {
+        t.row(&[
+            m.id.to_string(),
+            m.region.name().to_string(),
+            m.gpu.name().to_string(),
+            m.n_gpus.to_string(),
+            format!("{:.0}", m.total_memory_gb()),
+            format!("{:.0}", m.total_tflops()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("Model catalog:");
+    let mut t = Table::new(&["model", "params", "layers", "train GB"]);
+    for m in ModelSpec::paper_six() {
+        t.row(&[
+            m.name.to_string(),
+            fmt_params(m.params),
+            m.layers.to_string(),
+            format!("{:.0}", m.train_gb()),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_assign(cli: &Cli) -> Result<()> {
+    let seed = cli.flag_u64("seed", 0)?;
+    let n_tasks = cli.flag_u64("tasks", 4)?;
+    let fleet = Fleet::paper_evaluation(seed);
+    let workload = match n_tasks {
+        4 => ModelSpec::paper_four(),
+        6 => ModelSpec::paper_six(),
+        n => anyhow::bail!("--tasks must be 4 or 6, got {n}"),
+    };
+    let eval = if cli.flag_bool("gnn") {
+        let rt = GcnRuntime::load(&Manifest::default_dir())?;
+        let params = load_or_train_params(&rt, cli)?;
+        let classifier = hulk::gnn::Classifier::Runtime(rt);
+        evaluate_all(&fleet, &workload,
+                     HulkSplitterKind::Gnn { classifier: &classifier,
+                                             params: &params })?
+    } else {
+        evaluate_all(&fleet, &workload, HulkSplitterKind::Oracle)?
+    };
+    println!("{}", eval.render());
+    println!("Hulk total-time improvement over best baseline: {:.1}%",
+             eval.hulk_improvement() * 100.0);
+    Ok(())
+}
+
+/// Train briefly (or reuse `--params <path>`): the GNN splitter needs
+/// trained weights to produce meaningful groups.
+fn load_or_train_params(rt: &GcnRuntime, cli: &Cli) -> Result<Vec<f32>> {
+    let steps = cli.flag_u64("gnn-steps", 60)? as u32;
+    let mut state = TrainState::fresh(rt.manifest.load_init_params()?);
+    let dataset = make_dataset(16, rt.manifest.n, cli.flag_u64("seed", 0)?);
+    let opts = TrainerOptions { steps, lr: 0.01, log_every: 0 };
+    train_gcn(rt, &mut state, &dataset, &opts)?;
+    Ok(state.params)
+}
+
+fn cmd_train_gnn(cli: &Cli) -> Result<()> {
+    let steps = cli.flag_u64("steps", 10)? as u32;
+    let lr = cli.flag_f64("lr", 0.01)? as f32;
+    let n_graphs = cli.flag_u64("dataset", 16)? as usize;
+    let seed = cli.flag_u64("seed", 0)?;
+    let rt = GcnRuntime::load(&Manifest::default_dir())?;
+    println!("PJRT platform: {}; params: {}", rt.platform(),
+             rt.manifest.p);
+    let dataset = make_dataset(n_graphs, rt.manifest.n, seed);
+    let mut state = TrainState::fresh(rt.manifest.load_init_params()?);
+    let opts = TrainerOptions { steps, lr, log_every: 1 };
+    let curve = train_gcn(&rt, &mut state, &dataset, &opts)?;
+    let best = curve
+        .iter()
+        .map(|p| p.acc)
+        .fold(0.0f32, f32::max);
+    println!("best accuracy over {steps} steps: {best:.3}");
+    Ok(())
+}
+
+fn cmd_simulate(cli: &Cli) -> Result<()> {
+    let seed = cli.flag_u64("seed", 0)?;
+    let failures = cli.flag_u64("failures", 2)?;
+    let fleet = Fleet::paper_evaluation(seed);
+    let n = fleet.len();
+    let mut coordinator = Coordinator::new(fleet);
+    let mut rng = Rng::new(seed ^ 0x5349_4D55); // "SIMU"
+
+    println!("submitting paper workload…");
+    for model in ModelSpec::paper_four() {
+        let reply = coordinator.handle(CoordinatorEvent::Submit {
+            model: model.clone(),
+            iterations: 50,
+        });
+        match reply {
+            CoordinatorReply::Admitted { task_id, machines } => {
+                println!("  task {task_id} ({}) → {} machines",
+                         model.name, machines.len());
+            }
+            CoordinatorReply::Queued { task_id } => {
+                println!("  task {task_id} ({}) queued", model.name);
+            }
+            _ => {}
+        }
+    }
+    for _ in 0..failures {
+        let victim = rng.below(n);
+        let reply = coordinator
+            .handle(CoordinatorEvent::MachineFailed { machine: victim });
+        if let CoordinatorReply::Recovered { action } = reply {
+            println!("machine {victim} failed → {action}");
+        }
+    }
+    coordinator.handle(CoordinatorEvent::Tick { iterations: 50 });
+    println!("\nleader metrics:\n{}", coordinator.metrics.render());
+    let graph = ClusterGraph::from_fleet(&coordinator.fleet);
+    coordinator.assignment.validate_disjoint(coordinator.fleet.len())
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let _ = graph;
+    println!("final assignment valid ✓");
+    Ok(())
+}
+
+/// Bench entry points shared with `cargo bench` (rust/benches).
+#[path = "bench_impl.rs"]
+mod hulk_benches;

@@ -1,0 +1,155 @@
+//! Specifications of the language models the paper trains (§6.3, Fig. 9):
+//! OPT-175B, T5-11B, GPT-2 (1.5B), BERT-large, RoBERTa, XLNet.
+//!
+//! The parallelism cost models (`parallel::*`) need, per model: parameter
+//! count, transformer layer count, hidden width, tokens per iteration, and
+//! derived quantities (FLOPs/iter, activation bytes at a pipeline cut,
+//! training memory footprint).
+
+/// A trainable model in the multi-task workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// Total parameters.
+    pub params: f64,
+    /// Transformer blocks (pipeline-partitionable units).
+    pub layers: usize,
+    pub hidden: usize,
+    pub seq_len: usize,
+    /// Sequences per global batch.
+    pub batch: usize,
+}
+
+/// Bytes per parameter during mixed-precision training: fp16 weights +
+/// fp16 grads + fp32 master + fp32 Adam m/v  (2+2+4+4+4).
+pub const TRAIN_BYTES_PER_PARAM: f64 = 16.0;
+
+/// Dense-transformer FLOPs per token ≈ 6 × params (fwd 2× + bwd 4×).
+pub const FLOPS_PER_TOKEN_FACTOR: f64 = 6.0;
+
+impl ModelSpec {
+    pub fn tokens_per_iter(&self) -> f64 {
+        (self.batch * self.seq_len) as f64
+    }
+
+    /// FLOPs for one optimizer iteration over the global batch.
+    pub fn flops_per_iter(&self) -> f64 {
+        FLOPS_PER_TOKEN_FACTOR * self.params * self.tokens_per_iter()
+    }
+
+    /// Training-state footprint of a full replica, bytes.
+    pub fn train_bytes(&self) -> f64 {
+        self.params * TRAIN_BYTES_PER_PARAM
+    }
+
+    pub fn train_gb(&self) -> f64 {
+        self.train_bytes() / 1e9
+    }
+
+    /// Gradient all-reduce volume per iteration (fp16), bytes.
+    pub fn grad_bytes(&self) -> f64 {
+        self.params * 2.0
+    }
+
+    /// Activation tensor crossing a pipeline cut for `micro_batch`
+    /// sequences (fp16), bytes.
+    pub fn activation_bytes(&self, micro_batch: usize) -> f64 {
+        (micro_batch * self.seq_len * self.hidden) as f64 * 2.0
+    }
+
+    // ---------------------------------------------------------- catalog --
+    pub fn opt_175b() -> ModelSpec {
+        ModelSpec { name: "OPT (175B)", params: 175e9, layers: 96,
+                    hidden: 12288, seq_len: 2048, batch: 256 }
+    }
+
+    pub fn t5_11b() -> ModelSpec {
+        // 24 encoder + 24 decoder blocks.
+        ModelSpec { name: "T5 (11B)", params: 11e9, layers: 48,
+                    hidden: 1024, seq_len: 512, batch: 128 }
+    }
+
+    pub fn gpt2_xl() -> ModelSpec {
+        ModelSpec { name: "GPT-2 (1.5B)", params: 1.5e9, layers: 48,
+                    hidden: 1600, seq_len: 1024, batch: 64 }
+    }
+
+    pub fn bert_large() -> ModelSpec {
+        ModelSpec { name: "BERT-large (340M)", params: 340e6, layers: 24,
+                    hidden: 1024, seq_len: 512, batch: 256 }
+    }
+
+    pub fn roberta_large() -> ModelSpec {
+        ModelSpec { name: "RoBERTa (355M)", params: 355e6, layers: 24,
+                    hidden: 1024, seq_len: 512, batch: 256 }
+    }
+
+    pub fn xlnet_large() -> ModelSpec {
+        ModelSpec { name: "XLNet (340M)", params: 340e6, layers: 24,
+                    hidden: 1024, seq_len: 512, batch: 256 }
+    }
+
+    /// Fig. 8 workload: the four-model task set of §6.3.
+    pub fn paper_four() -> Vec<ModelSpec> {
+        vec![
+            ModelSpec::opt_175b(),
+            ModelSpec::t5_11b(),
+            ModelSpec::gpt2_xl(),
+            ModelSpec::bert_large(),
+        ]
+    }
+
+    /// Fig. 10 workload: six models (adds RoBERTa and XLNet; the paper
+    /// substitutes OPT-175B for the closed GPT-3).
+    pub fn paper_six() -> Vec<ModelSpec> {
+        vec![
+            ModelSpec::opt_175b(),
+            ModelSpec::t5_11b(),
+            ModelSpec::gpt2_xl(),
+            ModelSpec::bert_large(),
+            ModelSpec::roberta_large(),
+            ModelSpec::xlnet_large(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_matches_paper_parameter_counts() {
+        // Fig. 9 parameter chart.
+        assert_eq!(ModelSpec::opt_175b().params, 175e9);
+        assert_eq!(ModelSpec::t5_11b().params, 11e9);
+        assert_eq!(ModelSpec::gpt2_xl().params, 1.5e9);
+        assert_eq!(ModelSpec::bert_large().params, 340e6);
+        assert_eq!(ModelSpec::roberta_large().params, 355e6);
+        assert_eq!(ModelSpec::xlnet_large().params, 340e6);
+    }
+
+    #[test]
+    fn gpt2_to_bert_ratio_is_paperlike() {
+        // Paper §5.1: "approximately 4.4:1".
+        let ratio = ModelSpec::gpt2_xl().params / ModelSpec::bert_large().params;
+        assert!((ratio - 4.4).abs() < 0.05, "{ratio}");
+    }
+
+    #[test]
+    fn derived_quantities_positive_and_ordered() {
+        let opt = ModelSpec::opt_175b();
+        let bert = ModelSpec::bert_large();
+        assert!(opt.flops_per_iter() > bert.flops_per_iter());
+        assert!(opt.train_gb() > 1000.0); // 2.8 TB
+        assert!(bert.train_gb() < 10.0);
+        assert!(opt.activation_bytes(1) > 0.0);
+    }
+
+    #[test]
+    fn workload_sets_match_paper() {
+        assert_eq!(ModelSpec::paper_four().len(), 4);
+        assert_eq!(ModelSpec::paper_six().len(), 6);
+        // Fig 8/10 order starts with the largest model.
+        assert_eq!(ModelSpec::paper_four()[0].name, "OPT (175B)");
+    }
+}

@@ -1,0 +1,140 @@
+//! Shared communication-cost primitives.
+
+use crate::cluster::Fleet;
+
+/// Per-iteration cost split, milliseconds. The paper's Figures 8/10 report
+/// exactly this decomposition per (model, system).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct IterCost {
+    pub comm_ms: f64,
+    pub comp_ms: f64,
+}
+
+impl IterCost {
+    pub fn total_ms(&self) -> f64 {
+        self.comm_ms + self.comp_ms
+    }
+
+    pub fn infeasible() -> IterCost {
+        IterCost { comm_ms: f64::INFINITY, comp_ms: f64::INFINITY }
+    }
+
+    pub fn is_feasible(&self) -> bool {
+        self.comm_ms.is_finite() && self.comp_ms.is_finite()
+    }
+}
+
+/// Point-to-point transfer between two machines, ms.
+/// `None` if the pair cannot communicate.
+pub fn p2p_ms(fleet: &Fleet, a: usize, b: usize, bytes: f64) -> Option<f64> {
+    fleet
+        .wan
+        .transfer_ms(fleet.machines[a].region, fleet.machines[b].region, bytes)
+}
+
+/// Ring all-reduce of `bytes` over `nodes` (machine ids), ms.
+///
+/// Standard 2(n−1)-step ring: every step moves a `bytes/n` chunk along each
+/// ring edge concurrently, so a step costs the *slowest* ring edge; the ring
+/// order is the callers' (baselines use naive id order — topology-oblivious,
+/// which is exactly System A/C's weakness the paper exploits).
+///
+/// Returns `None` if any ring edge is unreachable.
+pub fn ring_allreduce_ms(fleet: &Fleet, nodes: &[usize], bytes: f64)
+    -> Option<f64>
+{
+    let n = nodes.len();
+    if n <= 1 {
+        return Some(0.0);
+    }
+    let chunk = bytes / n as f64;
+    let mut step_ms: f64 = 0.0;
+    for k in 0..n {
+        let a = nodes[k];
+        let b = nodes[(k + 1) % n];
+        let t = p2p_ms(fleet, a, b, chunk)?;
+        step_ms = step_ms.max(t);
+    }
+    Some(2.0 * (n as f64 - 1.0) * step_ms)
+}
+
+/// Aggregate throughput of a machine set, TFLOP/s.
+pub fn group_tflops(fleet: &Fleet, nodes: &[usize]) -> f64 {
+    nodes.iter().map(|&i| fleet.machines[i].total_tflops()).sum()
+}
+
+/// Total memory of a machine set, GB.
+pub fn group_memory_gb(fleet: &Fleet, nodes: &[usize]) -> f64 {
+    nodes
+        .iter()
+        .map(|&i| fleet.machines[i].total_memory_gb())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Fleet;
+
+    #[test]
+    fn allreduce_zero_for_single_node() {
+        let fleet = Fleet::paper_toy(0);
+        assert_eq!(ring_allreduce_ms(&fleet, &[2], 1e9), Some(0.0));
+    }
+
+    #[test]
+    fn allreduce_grows_with_bytes() {
+        let fleet = Fleet::paper_toy(0);
+        let nodes = [0, 1, 2, 3];
+        let small = ring_allreduce_ms(&fleet, &nodes, 1e6).unwrap();
+        let big = ring_allreduce_ms(&fleet, &nodes, 1e9).unwrap();
+        assert!(big > small);
+    }
+
+    #[test]
+    fn allreduce_fails_on_blocked_ring_edge() {
+        // Beijing (node 0) and a Paris machine cannot communicate.
+        let mut fleet = Fleet::paper_toy(0);
+        let paris = fleet.add_machine(
+            crate::cluster::Region::Paris,
+            crate::cluster::GpuModel::V100,
+            8,
+        );
+        assert!(ring_allreduce_ms(&fleet, &[0, paris], 1e6).is_none());
+    }
+
+    #[test]
+    fn wan_ring_is_slower_than_regional_ring() {
+        let fleet = Fleet::paper_evaluation(0);
+        // First two Beijing machines vs a Beijing–Brasilia pair.
+        let regional: Vec<usize> = (0..fleet.len())
+            .filter(|&i| fleet.machines[i].region == crate::cluster::Region::Beijing)
+            .take(2)
+            .collect();
+        let wan: Vec<usize> = vec![
+            regional[0],
+            (0..fleet.len())
+                .find(|&i| fleet.machines[i].region == crate::cluster::Region::Brasilia)
+                .unwrap(),
+        ];
+        let t_regional = ring_allreduce_ms(&fleet, &regional, 1e8).unwrap();
+        let t_wan = ring_allreduce_ms(&fleet, &wan, 1e8).unwrap();
+        assert!(t_wan > t_regional * 2.0, "{t_wan} vs {t_regional}");
+    }
+
+    #[test]
+    fn group_aggregates_are_sums() {
+        let fleet = Fleet::paper_toy(0);
+        let all: Vec<usize> = (0..fleet.len()).collect();
+        let total_mem = group_memory_gb(&fleet, &all);
+        assert!((total_mem - fleet.total_memory_gb()).abs() < 1e-9);
+        assert!(group_tflops(&fleet, &all) > 0.0);
+    }
+
+    #[test]
+    fn infeasible_cost_propagates() {
+        let c = IterCost::infeasible();
+        assert!(!c.is_feasible());
+        assert!(c.total_ms().is_infinite());
+    }
+}

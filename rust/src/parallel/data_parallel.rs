@@ -1,0 +1,100 @@
+//! Data-parallel cost model — the paper's System A: "utilizes all
+//! available machines ... while discarding any machine that does not have
+//! sufficient memory to accommodate the entire model", then splits the
+//! batch and all-reduces gradients.
+
+use super::cost::{ring_allreduce_ms, IterCost};
+use crate::cluster::Fleet;
+use crate::models::ModelSpec;
+
+/// Machines (ids) that can hold a full training replica.
+pub fn replica_capable(fleet: &Fleet, model: &ModelSpec) -> Vec<usize> {
+    (0..fleet.len())
+        .filter(|&i| {
+            fleet.machines[i].total_memory_gb() >= model.train_gb()
+        })
+        .collect()
+}
+
+/// One iteration of synchronous data parallelism over `replicas`.
+///
+/// - `comp_ms`: batch split proportionally to throughput; the slowest
+///   replica paces the step (synchronous SGD barrier).
+/// - `comm_ms`: ring all-reduce of fp16 gradients over the replica set in
+///   id order (topology-oblivious, as System A is).
+///
+/// Infeasible when no machine fits the model or the ring is disconnected.
+pub fn data_parallel_cost(fleet: &Fleet, replicas: &[usize],
+                          model: &ModelSpec) -> IterCost
+{
+    if replicas.is_empty() {
+        return IterCost::infeasible();
+    }
+    let total_tflops: f64 = replicas
+        .iter()
+        .map(|&i| fleet.machines[i].total_tflops())
+        .sum();
+    // Proportional batch shares → every replica finishes in the same time
+    // in the ideal case; model stragglers with a 5% sync overhead.
+    let ideal_ms =
+        model.flops_per_iter() / (total_tflops * 1e12) * 1e3;
+    let comp_ms = ideal_ms * 1.05;
+    let comm_ms = match ring_allreduce_ms(fleet, replicas, model.grad_bytes())
+    {
+        Some(t) => t,
+        None => return IterCost::infeasible(),
+    };
+    IterCost { comm_ms, comp_ms }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_model_fits_everywhere_large_fits_nowhere() {
+        let fleet = Fleet::paper_evaluation(0);
+        let bert = ModelSpec::bert_large(); // 5.4 GB training state
+        assert_eq!(replica_capable(&fleet, &bert).len(), fleet.len());
+        let opt = ModelSpec::opt_175b(); // 2.8 TB
+        assert!(replica_capable(&fleet, &opt).is_empty());
+    }
+
+    #[test]
+    fn medium_model_fits_some() {
+        let fleet = Fleet::paper_evaluation(0);
+        let t5 = ModelSpec::t5_11b(); // 176 GB training state
+        let capable = replica_capable(&fleet, &t5);
+        assert!(!capable.is_empty());
+        assert!(capable.len() < fleet.len());
+    }
+
+    #[test]
+    fn cost_infeasible_with_no_replicas() {
+        let fleet = Fleet::paper_evaluation(0);
+        let opt = ModelSpec::opt_175b();
+        let cost =
+            data_parallel_cost(&fleet, &replica_capable(&fleet, &opt), &opt);
+        assert!(!cost.is_feasible());
+    }
+
+    #[test]
+    fn single_replica_has_zero_comm() {
+        let fleet = Fleet::paper_toy(0);
+        let model = ModelSpec::bert_large();
+        let cost = data_parallel_cost(&fleet, &[2], &model);
+        assert!(cost.is_feasible());
+        assert_eq!(cost.comm_ms, 0.0);
+    }
+
+    #[test]
+    fn more_replicas_less_compute_more_comm() {
+        let fleet = Fleet::paper_evaluation(0);
+        let model = ModelSpec::bert_large();
+        let all = replica_capable(&fleet, &model);
+        let one = data_parallel_cost(&fleet, &all[..1], &model);
+        let many = data_parallel_cost(&fleet, &all, &model);
+        assert!(many.comp_ms < one.comp_ms);
+        assert!(many.comm_ms > one.comm_ms);
+    }
+}

@@ -1,0 +1,23 @@
+//! Parallelism cost models (per-iteration communication + computation
+//! time) for the three baselines and Hulk's per-group pipelines:
+//!
+//! - [`data_parallel`] — System A: full replicas + gradient all-reduce.
+//! - [`pipeline`] — System B / Hulk groups: GPipe micro-batch pipelining.
+//! - [`tensor_parallel`] — System C: Megatron-LM tensor parallelism.
+//! - [`cost`] — shared primitives (ring all-reduce over WAN links,
+//!   point-to-point transfer costs).
+//!
+//! Absolute numbers are a simulator's, not the authors' testbed's; the
+//! reproduced quantity is the *shape* of Figures 8/10 (who wins, by what
+//! factor). The analytic models here are cross-validated against the
+//! discrete-event simulator in `sim::` (see tests and the ablation bench).
+
+pub mod cost;
+pub mod data_parallel;
+pub mod pipeline;
+pub mod tensor_parallel;
+
+pub use cost::{ring_allreduce_ms, IterCost};
+pub use data_parallel::data_parallel_cost;
+pub use pipeline::{pipeline_cost, PipelinePlan};
+pub use tensor_parallel::tensor_parallel_cost;

@@ -1,0 +1,289 @@
+//! GPipe-style micro-batch pipeline cost model (paper §2.1 "Gpipe",
+//! System B, and the per-group execution engine of Hulk §6.3).
+//!
+//! A plan assigns each participating machine one pipeline stage (a
+//! contiguous layer range sized proportionally to the machine's
+//! throughput, which is how Hulk "determines which part of the model each
+//! node will handle depending on computational power and memory").
+
+use super::cost::{p2p_ms, IterCost};
+use crate::cluster::Fleet;
+use crate::models::ModelSpec;
+
+/// Micro-batches per iteration (GPipe's K). The paper does not report K;
+/// 8 keeps bubble overhead ≈ (S−1)/K reasonable at the paper's scales.
+pub const DEFAULT_MICROBATCHES: usize = 8;
+
+/// A pipeline plan over a machine group.
+#[derive(Clone, Debug)]
+pub struct PipelinePlan {
+    /// Machine ids in stage order (stage s runs on `stages[s]`).
+    pub stages: Vec<usize>,
+    /// Layers per stage (same length as `stages`, sums to model.layers).
+    pub layers: Vec<usize>,
+    pub microbatches: usize,
+}
+
+impl PipelinePlan {
+    /// Throughput-proportional layer split over `stages`, capped by each
+    /// machine's memory (a fast consumer GPU box must not receive a shard
+    /// bigger than its VRAM — the paper's "depending on the computational
+    /// power *and memory* of each node"). Every stage gets ≥1 layer;
+    /// requires `stages.len() <= model.layers`.
+    pub fn proportional(fleet: &Fleet, stages: Vec<usize>, model: &ModelSpec)
+        -> PipelinePlan
+    {
+        assert!(!stages.is_empty());
+        assert!(
+            stages.len() <= model.layers,
+            "more stages than layers ({} > {})",
+            stages.len(),
+            model.layers
+        );
+        let tflops: Vec<f64> = stages
+            .iter()
+            .map(|&i| fleet.machines[i].total_tflops())
+            .collect();
+        let total: f64 = tflops.iter().sum();
+        // Memory cap per stage: how many layer-shards fit the machine.
+        let bytes_per_layer = model.train_bytes() / model.layers as f64;
+        let caps: Vec<usize> = stages
+            .iter()
+            .map(|&i| {
+                let fit = fleet.machines[i].total_memory_gb() * 1e9
+                    / bytes_per_layer;
+                (fit.floor() as usize).max(1)
+            })
+            .collect();
+        // Largest-remainder apportionment with a 1-layer floor and the
+        // memory caps.
+        let mut layers: Vec<usize> = tflops
+            .iter()
+            .zip(&caps)
+            .map(|(t, &cap)| {
+                let want =
+                    ((t / total) * model.layers as f64).floor() as usize;
+                want.clamp(1, cap)
+            })
+            .collect();
+        let mut assigned: usize = layers.iter().sum();
+        // Shave overshoot from the largest stages.
+        while assigned > model.layers {
+            let imax = (0..layers.len()).max_by_key(|&i| layers[i]).unwrap();
+            if layers[imax] > 1 {
+                layers[imax] -= 1;
+                assigned -= 1;
+            } else {
+                break;
+            }
+        }
+        // Distribute the shortfall to the fastest stages with headroom.
+        let mut order: Vec<usize> = (0..layers.len()).collect();
+        order.sort_by(|&a, &b| tflops[b].partial_cmp(&tflops[a]).unwrap());
+        let mut stuck = 0;
+        let mut k = 0;
+        while assigned < model.layers && stuck < order.len() {
+            let i = order[k % order.len()];
+            if layers[i] < caps[i] {
+                layers[i] += 1;
+                assigned += 1;
+                stuck = 0;
+            } else {
+                stuck += 1;
+            }
+            k += 1;
+        }
+        // If caps block full assignment, the plan is left short and
+        // `memory_feasible`/`pipeline_cost` report infeasibility; callers
+        // (group sizing) guarantee aggregate memory, so this only happens
+        // for adversarial stage subsets.
+        PipelinePlan { stages, layers, microbatches: DEFAULT_MICROBATCHES }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Per-stage training-state bytes (proportional to its layer share).
+    pub fn stage_bytes(&self, model: &ModelSpec, stage: usize) -> f64 {
+        model.train_bytes() * self.layers[stage] as f64
+            / model.layers as f64
+    }
+
+    /// Does every stage's parameter shard fit its machine's memory, and
+    /// does the plan cover the whole model? (A caps-limited split that
+    /// could not place every layer is infeasible, not "a smaller model".)
+    pub fn memory_feasible(&self, fleet: &Fleet, model: &ModelSpec) -> bool {
+        self.layers.iter().sum::<usize>() == model.layers
+            && self.stages.iter().enumerate().all(|(s, &m)| {
+                self.stage_bytes(model, s) / 1e9
+                    <= fleet.machines[m].total_memory_gb()
+            })
+    }
+}
+
+/// Cost of one training iteration under the plan.
+///
+/// - `comp_ms`: pipeline-clocked compute — the bottleneck stage paces the
+///   steady state, plus the fill/drain bubble.
+/// - `comm_ms`: activation + gradient traffic over every stage boundary,
+///   2 crossings (fwd activation, bwd gradient) × K micro-batches each.
+///
+/// Returns `IterCost::infeasible()` if a stage boundary is unreachable or
+/// a stage shard does not fit in machine memory.
+pub fn pipeline_cost(fleet: &Fleet, plan: &PipelinePlan, model: &ModelSpec)
+    -> IterCost
+{
+    if !plan.memory_feasible(fleet, model) {
+        return IterCost::infeasible();
+    }
+    let k = plan.microbatches as f64;
+    let micro_batch = (model.batch as f64 / k).ceil() as usize;
+    let micro_tokens = (micro_batch * model.seq_len) as f64;
+    let act_bytes = model.activation_bytes(micro_batch.max(1));
+
+    // Per-stage per-microbatch compute time.
+    let mut stage_ms = Vec::with_capacity(plan.n_stages());
+    for (s, &m) in plan.stages.iter().enumerate() {
+        let frac = plan.layers[s] as f64 / model.layers as f64;
+        let flops = crate::models::FLOPS_PER_TOKEN_FACTOR
+            * model.params
+            * frac
+            * micro_tokens;
+        let tflops = fleet.machines[m].total_tflops();
+        stage_ms.push(flops / (tflops * 1e12) * 1e3);
+    }
+
+    // Boundary costs (fwd + bwd per microbatch).
+    let mut boundary_ms = Vec::new();
+    for s in 0..plan.n_stages().saturating_sub(1) {
+        let a = plan.stages[s];
+        let b = plan.stages[s + 1];
+        match p2p_ms(fleet, a, b, act_bytes) {
+            Some(t) => boundary_ms.push(t),
+            None => return IterCost::infeasible(),
+        }
+    }
+
+    // Steady-state clock = slowest (stage compute + its inbound edge).
+    let mut clock: f64 = 0.0;
+    for s in 0..plan.n_stages() {
+        let inbound = if s == 0 { 0.0 } else { boundary_ms[s - 1] };
+        clock = clock.max(stage_ms[s] + inbound);
+    }
+    // GPipe: K microbatches through S stages ≈ (K + S − 1) clocks for
+    // forward+backward combined (bwd ≈ 2× fwd is already inside stage_ms
+    // via the 6×params factor).
+    let s = plan.n_stages() as f64;
+    let total_clocks = k + s - 1.0;
+
+    // Decomposition for the figures: compute share vs communication share.
+    let comp_ms = stage_ms.iter().sum::<f64>()
+        + (total_clocks - s) * stage_ms.iter().cloned().fold(0.0, f64::max);
+    let comm_ms =
+        2.0 * k * boundary_ms.iter().sum::<f64>();
+    IterCost { comm_ms, comp_ms }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Fleet, Region};
+
+    fn toy() -> Fleet {
+        Fleet::paper_toy(0)
+    }
+
+    #[test]
+    fn proportional_split_sums_to_layers() {
+        let fleet = toy();
+        let model = ModelSpec::gpt2_xl();
+        let plan =
+            PipelinePlan::proportional(&fleet, (0..8).collect(), &model);
+        assert_eq!(plan.layers.iter().sum::<usize>(), model.layers);
+        assert!(plan.layers.iter().all(|&l| l >= 1));
+    }
+
+    #[test]
+    fn faster_machines_get_more_layers() {
+        let fleet = toy();
+        let model = ModelSpec::gpt2_xl();
+        let plan =
+            PipelinePlan::proportional(&fleet, (0..8).collect(), &model);
+        // node2 = 8×A100 (fastest), node7 = 8×TITAN Xp (slowest).
+        let l2 = plan.layers[2];
+        let l7 = plan.layers[7];
+        assert!(l2 > l7, "layers {l2} vs {l7}");
+    }
+
+    #[test]
+    fn cost_is_finite_for_feasible_plan() {
+        let fleet = toy();
+        let model = ModelSpec::gpt2_xl();
+        let plan =
+            PipelinePlan::proportional(&fleet, (0..8).collect(), &model);
+        let cost = pipeline_cost(&fleet, &plan, &model);
+        assert!(cost.is_feasible());
+        assert!(cost.comm_ms > 0.0 && cost.comp_ms > 0.0);
+    }
+
+    #[test]
+    fn single_stage_has_zero_comm() {
+        let fleet = toy();
+        let model = ModelSpec::bert_large();
+        let plan = PipelinePlan::proportional(&fleet, vec![2], &model);
+        let cost = pipeline_cost(&fleet, &plan, &model);
+        assert_eq!(cost.comm_ms, 0.0);
+        assert!(cost.comp_ms > 0.0);
+    }
+
+    #[test]
+    fn cross_region_pipeline_pays_more_comm() {
+        let fleet = toy();
+        let model = ModelSpec::gpt2_xl();
+        // Same stages, different order: adjacent regional hops vs
+        // worst-case alternating continents.
+        let near = PipelinePlan::proportional(&fleet, vec![0, 1, 3], &model);
+        let far = PipelinePlan::proportional(&fleet, vec![0, 2, 6], &model);
+        let c_near = pipeline_cost(&fleet, &near, &model);
+        let c_far = pipeline_cost(&fleet, &far, &model);
+        assert!(c_far.comm_ms > c_near.comm_ms);
+    }
+
+    #[test]
+    fn infeasible_when_boundary_blocked() {
+        let mut fleet = toy();
+        let paris = fleet.add_machine(
+            Region::Paris,
+            crate::cluster::GpuModel::A100,
+            8,
+        );
+        let model = ModelSpec::gpt2_xl();
+        let plan = PipelinePlan {
+            stages: vec![0, paris], // Beijing → Paris is blocked
+            layers: vec![24, 24],
+            microbatches: 8,
+        };
+        assert!(!pipeline_cost(&fleet, &plan, &model).is_feasible());
+    }
+
+    #[test]
+    fn infeasible_when_stage_exceeds_memory() {
+        let fleet = toy();
+        let model = ModelSpec::opt_175b(); // 2.8 TB training state
+        let plan = PipelinePlan {
+            stages: vec![0, 1], // 192 + 256 GB machines
+            layers: vec![48, 48],
+            microbatches: 8,
+        };
+        assert!(!pipeline_cost(&fleet, &plan, &model).is_feasible());
+    }
+
+    #[test]
+    #[should_panic(expected = "more stages than layers")]
+    fn too_many_stages_rejected() {
+        let fleet = Fleet::paper_evaluation(0);
+        let model = ModelSpec::bert_large(); // 24 layers < 46 stages
+        PipelinePlan::proportional(&fleet, (0..46).collect(), &model);
+    }
+}

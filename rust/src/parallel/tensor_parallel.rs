@@ -1,0 +1,96 @@
+//! Megatron-LM tensor-parallel cost model — the paper's System C:
+//! "employs tensor parallelism with Megatron-LM across the entire system,
+//! requiring all machines to be utilized for model training."
+//!
+//! Megatron splits every transformer layer across the group and pays two
+//! activation all-reduces in forward and two in backward per layer — over
+//! WAN links this is the catastrophic case the paper's Figure 8/10 shows.
+
+use super::cost::{group_memory_gb, group_tflops, ring_allreduce_ms, IterCost};
+use crate::cluster::Fleet;
+use crate::models::ModelSpec;
+
+/// All-reduces per layer per iteration (2 fwd + 2 bwd).
+pub const ALLREDUCES_PER_LAYER: f64 = 4.0;
+
+/// One iteration of tensor parallelism over `nodes`.
+///
+/// - `comp_ms`: perfect FLOP split across the group (optimistic for
+///   System C — its loss is all communication).
+/// - `comm_ms`: `layers × 4` ring all-reduces of the full-batch activation
+///   tensor across every machine in id order.
+pub fn tensor_parallel_cost(fleet: &Fleet, nodes: &[usize],
+                            model: &ModelSpec) -> IterCost
+{
+    if nodes.is_empty() {
+        return IterCost::infeasible();
+    }
+    // Sharded weights must fit the aggregate memory.
+    if group_memory_gb(fleet, nodes) < model.train_gb() {
+        return IterCost::infeasible();
+    }
+    let act_bytes = model.activation_bytes(model.batch);
+    let per_allreduce = match ring_allreduce_ms(fleet, nodes, act_bytes) {
+        Some(t) => t,
+        None => return IterCost::infeasible(),
+    };
+    let comm_ms =
+        model.layers as f64 * ALLREDUCES_PER_LAYER * per_allreduce;
+    let comp_ms = model.flops_per_iter()
+        / (group_tflops(fleet, nodes) * 1e12)
+        * 1e3;
+    IterCost { comm_ms, comp_ms }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feasible_on_full_fleet_for_all_paper_models() {
+        let fleet = Fleet::paper_evaluation(0);
+        let all: Vec<usize> = (0..fleet.len()).collect();
+        for model in ModelSpec::paper_six() {
+            let cost = tensor_parallel_cost(&fleet, &all, &model);
+            assert!(cost.is_feasible(), "{} infeasible", model.name);
+        }
+    }
+
+    #[test]
+    fn comm_dominates_over_wan() {
+        // The defining System C pathology: comm ≫ comp across regions.
+        let fleet = Fleet::paper_evaluation(0);
+        let all: Vec<usize> = (0..fleet.len()).collect();
+        let cost = tensor_parallel_cost(&fleet, &all, &ModelSpec::gpt2_xl());
+        assert!(cost.comm_ms > 10.0 * cost.comp_ms,
+                "comm {} comp {}", cost.comm_ms, cost.comp_ms);
+    }
+
+    #[test]
+    fn comm_scales_with_layer_count() {
+        let fleet = Fleet::paper_evaluation(0);
+        let all: Vec<usize> = (0..fleet.len()).collect();
+        let mut shallow = ModelSpec::bert_large();
+        shallow.layers = 12;
+        let mut deep = ModelSpec::bert_large();
+        deep.layers = 24;
+        let c_shallow = tensor_parallel_cost(&fleet, &all, &shallow);
+        let c_deep = tensor_parallel_cost(&fleet, &all, &deep);
+        assert!((c_deep.comm_ms / c_shallow.comm_ms - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn infeasible_when_memory_insufficient() {
+        let fleet = Fleet::paper_toy(0);
+        // One small machine cannot shard OPT-175B.
+        let cost = tensor_parallel_cost(&fleet, &[7], &ModelSpec::opt_175b());
+        assert!(!cost.is_feasible());
+    }
+
+    #[test]
+    fn empty_group_infeasible() {
+        let fleet = Fleet::paper_toy(0);
+        assert!(!tensor_parallel_cost(&fleet, &[], &ModelSpec::bert_large())
+            .is_feasible());
+    }
+}

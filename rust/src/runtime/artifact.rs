@@ -1,0 +1,156 @@
+//! Artifact manifest: the shape contract between `aot.py` and the Rust
+//! runtime (`artifacts/manifest.kv`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::kv::KvFile;
+
+/// Parsed `manifest.kv` + resolved artifact paths.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    /// Node slots in the compiled GCN (padding target).
+    pub n: usize,
+    /// Feature dim — must equal `graph::FEATURE_DIM`.
+    pub f: usize,
+    pub h: usize,
+    pub h2: usize,
+    /// Task classes.
+    pub c: usize,
+    /// Flat parameter-vector length.
+    pub p: usize,
+    pub forward_hlo: PathBuf,
+    pub train_step_hlo: PathBuf,
+    pub init_params: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.kv`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let kv = KvFile::load(&dir.join("manifest.kv"))?;
+        let format = kv.get("format")?;
+        if format != "1" {
+            bail!("unsupported manifest format {format:?}");
+        }
+        let m = Manifest {
+            dir: dir.to_path_buf(),
+            n: kv.get_usize("n")?,
+            f: kv.get_usize("f")?,
+            h: kv.get_usize("h")?,
+            h2: kv.get_usize("h2")?,
+            c: kv.get_usize("c")?,
+            p: kv.get_usize("p")?,
+            forward_hlo: dir.join(kv.get("forward")?),
+            train_step_hlo: dir.join(kv.get("train_step")?),
+            init_params: dir.join(kv.get("init_params")?),
+        };
+        if m.f != crate::graph::FEATURE_DIM {
+            bail!(
+                "manifest feature dim {} != graph::FEATURE_DIM {} — \
+                 regenerate artifacts",
+                m.f,
+                crate::graph::FEATURE_DIM
+            );
+        }
+        for path in [&m.forward_hlo, &m.train_step_hlo, &m.init_params] {
+            if !path.exists() {
+                bail!("artifact missing: {} (run `make artifacts`)",
+                      path.display());
+            }
+        }
+        Ok(m)
+    }
+
+    /// Default artifact directory: `$HULK_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("HULK_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Load the initial parameter vector (little-endian f32).
+    pub fn load_init_params(&self) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(&self.init_params).with_context(|| {
+            format!("reading {}", self.init_params.display())
+        })?;
+        if bytes.len() != self.p * 4 {
+            bail!(
+                "init_params has {} bytes, expected {} ({} f32)",
+                bytes.len(),
+                self.p * 4,
+                self.p
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn manifest_text() -> &'static str {
+        "format 1\nn 64\nf 16\nh 256\nh2 128\nc 8\np 174216\n\
+         forward gcn_forward.hlo.txt\ntrain_step gcn_train_step.hlo.txt\n\
+         init_params init_params.f32\n"
+    }
+
+    #[test]
+    fn loads_real_artifacts_when_present() {
+        // Integration-style: if `make artifacts` has run, parse the real
+        // manifest. Skipped silently otherwise (unit tests must not
+        // require the python toolchain).
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.kv").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.f, crate::graph::FEATURE_DIM);
+        let params = m.load_init_params().unwrap();
+        assert_eq!(params.len(), m.p);
+        // Glorot init: non-trivial values in a sane range.
+        assert!(params.iter().any(|&v| v != 0.0));
+        assert!(params.iter().all(|v| v.abs() < 1.0));
+    }
+
+    #[test]
+    fn missing_file_reports_helpful_error() {
+        let tmp = std::env::temp_dir().join("hulk_manifest_test_missing");
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.kv"), manifest_text()).unwrap();
+        let err = Manifest::load(&tmp).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn init_param_length_is_validated() {
+        let tmp = std::env::temp_dir().join("hulk_manifest_test_len");
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.kv"), manifest_text()).unwrap();
+        for name in ["gcn_forward.hlo.txt", "gcn_train_step.hlo.txt"] {
+            std::fs::write(tmp.join(name), "HloModule fake").unwrap();
+        }
+        let mut f = std::fs::File::create(tmp.join("init_params.f32")).unwrap();
+        f.write_all(&[0u8; 16]).unwrap(); // wrong length
+        drop(f);
+        let m = Manifest::load(&tmp).unwrap();
+        assert!(m.load_init_params().is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn wrong_format_rejected() {
+        let tmp = std::env::temp_dir().join("hulk_manifest_test_fmt");
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.kv"), "format 2\n").unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

@@ -1,0 +1,63 @@
+//! Literal marshalling helpers: `Vec<f32>`/`Vec<i32>` ⇄ `xla::Literal`
+//! with explicit shapes.
+
+use anyhow::{bail, Result};
+
+/// f32 literal of the given dims (row-major).
+pub fn f32_literal(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    if data.len() as i64 != expect {
+        bail!("literal data {} != dims {:?}", data.len(), dims);
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// i32 literal of the given dims.
+pub fn i32_literal(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let expect: i64 = dims.iter().product();
+    if data.len() as i64 != expect {
+        bail!("literal data {} != dims {:?}", data.len(), dims);
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Extract a scalar f32 from a rank-0 or single-element literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    match v.as_slice() {
+        [x] => Ok(*x),
+        _ => bail!("expected scalar, got {} elements", v.len()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let lit = f32_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(lit.element_count(), 4);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let lit = i32_literal(&[7, 8, 9], &[3]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(f32_literal(&[1.0, 2.0], &[3]).is_err());
+        assert!(i32_literal(&[1], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_extraction() {
+        let lit = f32_literal(&[42.0], &[1]).unwrap();
+        assert_eq!(scalar_f32(&lit).unwrap(), 42.0);
+        let not_scalar = f32_literal(&[1.0, 2.0], &[2]).unwrap();
+        assert!(scalar_f32(&not_scalar).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! This is the ONLY place Rust touches XLA; everything above works with
+//! plain `Vec<f32>` tensors.
+//!
+//! Interchange is HLO *text* (see aot.py / DESIGN.md): the text parser
+//! reassigns instruction ids, avoiding the 64-bit-id protos that
+//! xla_extension 0.5.1 rejects.
+
+pub mod artifact;
+pub mod client;
+pub mod literal;
+
+pub use artifact::Manifest;
+pub use client::GcnRuntime;

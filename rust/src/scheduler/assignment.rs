@@ -1,0 +1,175 @@
+//! Task assignment: which machines train which model (paper Table 2).
+
+use crate::cluster::Fleet;
+use crate::graph::ClusterGraph;
+use crate::models::ModelSpec;
+use crate::util::table::Table;
+
+/// Machines per task. `groups[t]` are the machine ids assigned to task
+/// `t`; machines in no group are spares (available for recovery).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    pub groups: Vec<Vec<usize>>,
+}
+
+impl Assignment {
+    pub fn new(groups: Vec<Vec<usize>>) -> Assignment {
+        Assignment { groups }
+    }
+
+    pub fn n_tasks(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn group(&self, task: usize) -> &[usize] {
+        &self.groups[task]
+    }
+
+    /// Machine → task lookup (`None` = spare).
+    pub fn task_of(&self, machine: usize) -> Option<usize> {
+        self.groups
+            .iter()
+            .position(|g| g.contains(&machine))
+    }
+
+    /// Ids not assigned to any task.
+    pub fn spares(&self, n_machines: usize) -> Vec<usize> {
+        (0..n_machines)
+            .filter(|&m| self.task_of(m).is_none())
+            .collect()
+    }
+
+    /// Groups must be disjoint and ids in range.
+    pub fn validate_disjoint(&self, n_machines: usize) -> Result<(), String> {
+        let mut seen = vec![false; n_machines];
+        for (t, group) in self.groups.iter().enumerate() {
+            for &m in group {
+                if m >= n_machines {
+                    return Err(format!("task {t}: machine {m} out of range"));
+                }
+                if seen[m] {
+                    return Err(format!("machine {m} assigned twice"));
+                }
+                seen[m] = true;
+            }
+        }
+        Ok(())
+    }
+
+    /// Memory feasibility: each group's total memory covers its model's
+    /// training footprint.
+    pub fn validate_memory(&self, fleet: &Fleet, tasks: &[ModelSpec])
+        -> Result<(), String>
+    {
+        assert_eq!(self.groups.len(), tasks.len());
+        for (t, group) in self.groups.iter().enumerate() {
+            let mem: f64 = group
+                .iter()
+                .map(|&m| fleet.machines[m].total_memory_gb())
+                .sum();
+            if mem < tasks[t].train_gb() {
+                return Err(format!(
+                    "task {} ({}) has {:.0} GB < required {:.0} GB",
+                    t, tasks[t].name, mem, tasks[t].train_gb()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Every group's induced subgraph must be connected (a pipeline must
+    /// be able to traverse it).
+    pub fn validate_connected(&self, graph: &ClusterGraph)
+        -> Result<(), String>
+    {
+        for (t, group) in self.groups.iter().enumerate() {
+            if !graph.subset_connected(group) {
+                return Err(format!("task {t} group is disconnected"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total intra-group communication cost (the objective Hulk
+    /// minimizes).
+    pub fn total_cost(&self, graph: &ClusterGraph) -> f64 {
+        self.groups.iter().map(|g| graph.subset_cost(g)).sum()
+    }
+
+    /// Paper Table 2 rendering: model → node list.
+    pub fn render_table(&self, tasks: &[ModelSpec]) -> String {
+        let mut t = Table::new(&["Model", "Nodes"]);
+        for (i, task) in tasks.iter().enumerate() {
+            let mut nodes = self.groups[i].clone();
+            nodes.sort_unstable();
+            let list = nodes
+                .iter()
+                .map(|n| n.to_string())
+                .collect::<Vec<_>>()
+                .join(", ");
+            t.row(&[task.name.to_string(), list]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Fleet;
+
+    #[test]
+    fn disjointness_checked() {
+        let a = Assignment::new(vec![vec![0, 1], vec![2]]);
+        assert!(a.validate_disjoint(3).is_ok());
+        let b = Assignment::new(vec![vec![0, 1], vec![1]]);
+        assert!(b.validate_disjoint(3).is_err());
+        let c = Assignment::new(vec![vec![5]]);
+        assert!(c.validate_disjoint(3).is_err());
+    }
+
+    #[test]
+    fn task_lookup_and_spares() {
+        let a = Assignment::new(vec![vec![0, 2], vec![3]]);
+        assert_eq!(a.task_of(2), Some(0));
+        assert_eq!(a.task_of(3), Some(1));
+        assert_eq!(a.task_of(1), None);
+        assert_eq!(a.spares(5), vec![1, 4]);
+    }
+
+    #[test]
+    fn memory_validation_flags_small_groups() {
+        let fleet = Fleet::paper_toy(0);
+        let tasks = vec![ModelSpec::opt_175b()];
+        // All 8 toy machines ≈ 1.7 TB < 2.8 TB required.
+        let all = Assignment::new(vec![(0..8).collect()]);
+        assert!(all.validate_memory(&fleet, &tasks).is_err());
+        let bert = vec![ModelSpec::bert_large()];
+        let one = Assignment::new(vec![vec![2]]);
+        assert!(one.validate_memory(&fleet, &bert).is_ok());
+    }
+
+    #[test]
+    fn connectivity_validation() {
+        let g = ClusterGraph {
+            n: 3,
+            adj: vec![0.0, 5.0, 0.0, 5.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+        };
+        assert!(Assignment::new(vec![vec![0, 1]])
+            .validate_connected(&g)
+            .is_ok());
+        assert!(Assignment::new(vec![vec![0, 2]])
+            .validate_connected(&g)
+            .is_err());
+    }
+
+    #[test]
+    fn table_rendering_contains_all_models() {
+        let a = Assignment::new(vec![vec![1, 0], vec![2]]);
+        let tasks = vec![ModelSpec::gpt2_xl(), ModelSpec::bert_large()];
+        let out = a.render_table(&tasks);
+        assert!(out.contains("GPT-2"));
+        assert!(out.contains("BERT-large"));
+        assert!(out.contains("0, 1")); // sorted node list
+    }
+}

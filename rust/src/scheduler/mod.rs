@@ -1,0 +1,17 @@
+//! Task assignment: the paper's core scheduling contribution.
+//!
+//! - [`assignment`] — the assignment type + feasibility validation.
+//! - [`oracle`] — communication-aware partitioner (greedy seed + local
+//!   search). Plays two roles: the labeling oracle for GCN training data
+//!   (the paper's "sparsely label this subgraph"), and the strongest
+//!   non-learned baseline for ablations.
+//! - [`algorithm1`] — the paper's Algorithm 1 ("Task Assignments")
+//!   driving a pluggable splitter `F` (GNN or oracle).
+
+pub mod algorithm1;
+pub mod assignment;
+pub mod oracle;
+
+pub use algorithm1::{algorithm1, Algorithm1Error, TaskSplitter};
+pub use assignment::Assignment;
+pub use oracle::{oracle_partition, OracleOptions};

@@ -1,0 +1,329 @@
+//! Communication-aware partitioning oracle.
+//!
+//! Two roles (DESIGN.md §Substitutions):
+//! 1. **Labeling oracle** for GCN training data — the paper "sparsely
+//!    labels the subgraph" by hand; this partitioner plays the human.
+//! 2. **Ablation baseline**: Hulk-with-oracle vs Hulk-with-GNN separates
+//!    the value of the learned model from the value of the grouping
+//!    policy.
+//!
+//! Method: group sizes from memory floors + a log-parameter share (the
+//! paper sizes groups "according to this scale" of parameter ratios,
+//! §5.1), greedy growth minimizing added intra-group latency, then
+//! swap-based local search to a fixed point.
+
+use crate::cluster::Fleet;
+use crate::graph::ClusterGraph;
+use crate::models::ModelSpec;
+
+use super::assignment::Assignment;
+
+/// Oracle tuning knobs.
+#[derive(Clone, Debug)]
+pub struct OracleOptions {
+    /// Local-search sweep limit (each sweep is O(n² · groups)).
+    pub max_sweeps: usize,
+    /// Memory headroom factor over the model's training footprint.
+    pub memory_headroom: f64,
+}
+
+impl Default for OracleOptions {
+    fn default() -> Self {
+        OracleOptions { max_sweeps: 8, memory_headroom: 1.2 }
+    }
+}
+
+/// Group-size targets: memory floor ∨ log-parameter share of the fleet.
+fn target_sizes(fleet: &Fleet, tasks: &[ModelSpec], headroom: f64)
+    -> Vec<usize>
+{
+    let n = fleet.len();
+    let avg_mem =
+        fleet.total_memory_gb() / n as f64;
+    let weights: Vec<f64> = tasks
+        .iter()
+        .map(|t| (t.params.log10() - 7.0).max(0.5)) // 10M → 0.5, 175B → 4.2
+        .collect();
+    let wsum: f64 = weights.iter().sum();
+    tasks
+        .iter()
+        .zip(&weights)
+        .map(|(t, w)| {
+            let mem_floor =
+                (t.train_gb() * headroom / avg_mem).ceil() as usize;
+            let share = ((w / wsum) * n as f64).round() as usize;
+            mem_floor.max(share).max(1).min(t.layers).min(n)
+        })
+        .collect()
+}
+
+/// Grow one task group from a restricted machine pool: seed on the best
+/// (memory × locality) machine, then add the reachable machine with the
+/// least added intra-group latency until the task's memory threshold (with
+/// headroom) is cleared. This is the "smaller graph Gᵢ" a splitter hands
+/// Algorithm 1 — it deliberately does NOT grab the whole pool.
+pub fn grow_group(fleet: &Fleet, graph: &ClusterGraph, pool: &[usize],
+                  task: &ModelSpec, headroom: f64) -> Vec<usize>
+{
+    if pool.is_empty() {
+        return Vec::new();
+    }
+    let seed = *pool
+        .iter()
+        .max_by(|&&a, &&b| {
+            let score = |i: usize| {
+                let mem = fleet.machines[i].total_memory_gb();
+                let loc = graph.mean_latency(i).unwrap_or(1e4) as f64;
+                mem / loc.max(1.0)
+            };
+            score(a).partial_cmp(&score(b)).unwrap()
+        })
+        .unwrap();
+    let mut group = vec![seed];
+    let mut mem = fleet.machines[seed].total_memory_gb();
+    while mem < task.train_gb() * headroom || group.len() < 2 {
+        let next = pool
+            .iter()
+            .copied()
+            .filter(|m| !group.contains(m))
+            .filter(|&m| group.iter().any(|&j| graph.has_edge(m, j)))
+            .min_by(|&a, &b| {
+                let cost = |i: usize| -> f64 {
+                    group
+                        .iter()
+                        .map(|&j| {
+                            let w = graph.weight(i, j);
+                            if w > 0.0 { w as f64 } else { 2e3 }
+                        })
+                        .sum()
+                };
+                cost(a).partial_cmp(&cost(b)).unwrap()
+            });
+        match next {
+            Some(m) => {
+                mem += fleet.machines[m].total_memory_gb();
+                group.push(m);
+            }
+            None => break,
+        }
+    }
+    group.sort_unstable();
+    group
+}
+
+/// Partition `fleet` for `tasks` (largest model first is conventional but
+/// not required). Machines left over become spares.
+pub fn oracle_partition(fleet: &Fleet, graph: &ClusterGraph,
+                        tasks: &[ModelSpec], opts: &OracleOptions)
+    -> Assignment
+{
+    let n = fleet.len();
+    let mut sizes = target_sizes(fleet, tasks, opts.memory_headroom);
+    // Shrink proportionally if oversubscribed.
+    let total: usize = sizes.iter().sum();
+    if total > n {
+        // Largest models keep their memory floors; shave the rest.
+        let mut excess = total - n;
+        for s in sizes.iter_mut().rev() {
+            while excess > 0 && *s > 1 {
+                *s -= 1;
+                excess -= 1;
+            }
+        }
+    }
+
+    let mut assigned: Vec<Option<usize>> = vec![None; n];
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); tasks.len()];
+
+    // Assign tasks in descending parameter order (Algorithm 1 iterates
+    // largest-first so the big model gets the pick of the fleet).
+    let mut order: Vec<usize> = (0..tasks.len()).collect();
+    order.sort_by(|&a, &b| {
+        tasks[b].params.partial_cmp(&tasks[a].params).unwrap()
+    });
+
+    for &t in &order {
+        // Seed: unassigned machine with the best (memory × locality).
+        let seed = (0..n)
+            .filter(|&i| assigned[i].is_none())
+            .max_by(|&a, &b| {
+                let score = |i: usize| {
+                    let mem = fleet.machines[i].total_memory_gb();
+                    let loc = graph.mean_latency(i).unwrap_or(1e4) as f64;
+                    mem / loc.max(1.0)
+                };
+                score(a).partial_cmp(&score(b)).unwrap()
+            });
+        let Some(seed) = seed else { break };
+        assigned[seed] = Some(t);
+        groups[t].push(seed);
+
+        // Grow to the target size (and to memory feasibility), always
+        // adding the reachable machine with the least added latency.
+        loop {
+            let mem: f64 = groups[t]
+                .iter()
+                .map(|&i| fleet.machines[i].total_memory_gb())
+                .sum();
+            let need_more_mem =
+                mem < tasks[t].train_gb() * opts.memory_headroom;
+            if groups[t].len() >= sizes[t] && !need_more_mem {
+                break;
+            }
+            let cand = (0..n)
+                .filter(|&i| assigned[i].is_none())
+                .filter(|&i| {
+                    groups[t].iter().any(|&j| graph.has_edge(i, j))
+                })
+                .min_by(|&a, &b| {
+                    let cost = |i: usize| -> f64 {
+                        groups[t]
+                            .iter()
+                            .map(|&j| {
+                                let w = graph.weight(i, j);
+                                if w > 0.0 { w as f64 } else { 2e3 }
+                            })
+                            .sum()
+                    };
+                    cost(a).partial_cmp(&cost(b)).unwrap()
+                });
+            match cand {
+                Some(i) => {
+                    assigned[i] = Some(t);
+                    groups[t].push(i);
+                }
+                None => break, // nothing reachable left
+            }
+        }
+    }
+
+    // Local search: single-machine swaps between groups that reduce total
+    // intra-group cost while keeping both groups memory-feasible.
+    let feasible = |g: &[usize], t: usize| -> bool {
+        let mem: f64 =
+            g.iter().map(|&i| fleet.machines[i].total_memory_gb()).sum();
+        mem >= tasks[t].train_gb() && graph.subset_connected(g)
+    };
+    for _ in 0..opts.max_sweeps {
+        let mut improved = false;
+        for ta in 0..groups.len() {
+            for tb in (ta + 1)..groups.len() {
+                for ia in 0..groups[ta].len() {
+                    for ib in 0..groups[tb].len() {
+                        let a = groups[ta][ia];
+                        let b = groups[tb][ib];
+                        let before = graph.subset_cost(&groups[ta])
+                            + graph.subset_cost(&groups[tb]);
+                        let mut ga = groups[ta].clone();
+                        let mut gb = groups[tb].clone();
+                        ga[ia] = b;
+                        gb[ib] = a;
+                        let after = graph.subset_cost(&ga)
+                            + graph.subset_cost(&gb);
+                        if after + 1e-9 < before
+                            && feasible(&ga, ta)
+                            && feasible(&gb, tb)
+                        {
+                            groups[ta] = ga;
+                            groups[tb] = gb;
+                            improved = true;
+                        }
+                    }
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+
+    for g in &mut groups {
+        g.sort_unstable();
+    }
+    Assignment::new(groups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval_setup() -> (Fleet, ClusterGraph) {
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        (fleet, graph)
+    }
+
+    #[test]
+    fn partitions_paper_workload_feasibly() {
+        let (fleet, graph) = eval_setup();
+        let tasks = ModelSpec::paper_four();
+        let a = oracle_partition(&fleet, &graph, &tasks,
+                                 &OracleOptions::default());
+        a.validate_disjoint(fleet.len()).unwrap();
+        a.validate_memory(&fleet, &tasks).unwrap();
+        a.validate_connected(&graph).unwrap();
+        // Every task got a non-empty group.
+        for g in &a.groups {
+            assert!(!g.is_empty());
+        }
+    }
+
+    #[test]
+    fn opt_gets_the_largest_group() {
+        let (fleet, graph) = eval_setup();
+        let tasks = ModelSpec::paper_four();
+        let a = oracle_partition(&fleet, &graph, &tasks,
+                                 &OracleOptions::default());
+        let sizes: Vec<usize> = a.groups.iter().map(Vec::len).collect();
+        assert!(sizes[0] >= *sizes.iter().max().unwrap() - 1,
+                "OPT group should be (near-)largest: {sizes:?}");
+        assert!(sizes[0] >= 8, "OPT needs many machines: {sizes:?}");
+    }
+
+    #[test]
+    fn grouping_beats_random_on_comm_cost() {
+        let (fleet, graph) = eval_setup();
+        let tasks = ModelSpec::paper_four();
+        let a = oracle_partition(&fleet, &graph, &tasks,
+                                 &OracleOptions::default());
+        // Random assignment with the same group sizes.
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut ids: Vec<usize> = (0..fleet.len()).collect();
+        rng.shuffle(&mut ids);
+        let mut off = 0;
+        let mut rand_groups = Vec::new();
+        for g in &a.groups {
+            rand_groups.push(ids[off..off + g.len()].to_vec());
+            off += g.len();
+        }
+        let rand = Assignment::new(rand_groups);
+        assert!(a.total_cost(&graph) < rand.total_cost(&graph),
+                "oracle {} vs random {}", a.total_cost(&graph),
+                rand.total_cost(&graph));
+    }
+
+    #[test]
+    fn two_task_toy_split_is_disjoint_and_sized() {
+        // Fig. 5 scenario: GPT-2 vs BERT-large on the 8-node toy graph.
+        let fleet = Fleet::paper_toy(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let tasks = vec![ModelSpec::gpt2_xl(), ModelSpec::bert_large()];
+        let a = oracle_partition(&fleet, &graph, &tasks,
+                                 &OracleOptions::default());
+        a.validate_disjoint(8).unwrap();
+        a.validate_memory(&fleet, &tasks).unwrap();
+        assert!(a.groups[0].len() >= a.groups[1].len(),
+                "GPT-2 (4.4× params) should get at least as many machines");
+    }
+
+    #[test]
+    fn deterministic() {
+        let (fleet, graph) = eval_setup();
+        let tasks = ModelSpec::paper_four();
+        let a = oracle_partition(&fleet, &graph, &tasks,
+                                 &OracleOptions::default());
+        let b = oracle_partition(&fleet, &graph, &tasks,
+                                 &OracleOptions::default());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,161 @@
+//! Discrete-event simulation of a ring all-reduce over WAN links —
+//! validates the closed-form model in `parallel::cost::ring_allreduce_ms`
+//! (Systems A and C are built on it) and exposes the per-step traffic
+//! pattern for the ablation bench.
+//!
+//! Schedule: 2(n−1) steps; in step `s` every node `i` sends chunk
+//! `(i − s) mod n` to node `(i+1) mod n`. Steps are barrier-synchronized
+//! (as in NCCL's ring): the step completes when the slowest link does —
+//! which is precisely why a topology-oblivious ring across regions is
+//! paced by its worst edge.
+
+use super::engine::{Engine, Resource};
+use crate::cluster::Fleet;
+use crate::parallel::cost::p2p_ms;
+
+/// Result of one simulated all-reduce.
+#[derive(Clone, Debug)]
+pub struct AllReduceSimResult {
+    pub makespan_ms: f64,
+    /// Per-step durations (length 2(n−1)).
+    pub step_ms: Vec<f64>,
+    /// Busy time per ring link.
+    pub link_busy_ms: Vec<f64>,
+    pub events_processed: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct TransferDone {
+    step: usize,
+    /// Which ring link completed (kept for trace/debug output).
+    #[allow(dead_code)]
+    link: usize,
+}
+
+/// Simulate a ring all-reduce of `bytes` over `nodes` (machine ids, ring
+/// order as given). Returns `None` if any ring edge is unreachable.
+pub fn simulate_ring_allreduce(fleet: &Fleet, nodes: &[usize], bytes: f64)
+    -> Option<AllReduceSimResult>
+{
+    let n = nodes.len();
+    if n <= 1 {
+        return Some(AllReduceSimResult {
+            makespan_ms: 0.0,
+            step_ms: Vec::new(),
+            link_busy_ms: Vec::new(),
+            events_processed: 0,
+        });
+    }
+    let chunk = bytes / n as f64;
+    // Per-link transfer time for one chunk.
+    let mut link_ms = Vec::with_capacity(n);
+    for k in 0..n {
+        let a = nodes[k];
+        let b = nodes[(k + 1) % n];
+        link_ms.push(p2p_ms(fleet, a, b, chunk)?);
+    }
+
+    let total_steps = 2 * (n - 1);
+    let mut engine: Engine<TransferDone> = Engine::new();
+    let mut links = vec![Resource::default(); n];
+    let mut step_ms = vec![0.0f64; total_steps];
+    let mut pending = n; // transfers outstanding in the current step
+    let mut step = 0usize;
+    let mut step_started = 0.0f64;
+
+    // Kick off step 0 on all links.
+    for (k, &ms) in link_ms.iter().enumerate() {
+        let done = links[k].occupy(0.0, ms);
+        engine.schedule(done, TransferDone { step: 0, link: k });
+    }
+
+    let mut makespan = 0.0;
+    while let Some(ev) = engine.next() {
+        debug_assert_eq!(ev.payload.step, step);
+        pending -= 1;
+        if pending == 0 {
+            // Barrier: step complete.
+            step_ms[step] = engine.now_ms() - step_started;
+            makespan = engine.now_ms();
+            step += 1;
+            if step == total_steps {
+                break;
+            }
+            step_started = engine.now_ms();
+            pending = n;
+            for (k, &ms) in link_ms.iter().enumerate() {
+                let done = links[k].occupy(engine.now_ms(), ms);
+                engine.schedule(done, TransferDone { step, link: k });
+            }
+        }
+    }
+
+    Some(AllReduceSimResult {
+        makespan_ms: makespan,
+        step_ms,
+        link_busy_ms: links.iter().map(|l| l.busy_ms()).collect(),
+        events_processed: engine.events_processed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::ring_allreduce_ms;
+
+    #[test]
+    fn matches_analytic_model_exactly() {
+        // Barrier-synchronized steps paced by the slowest link ⇒ the DES
+        // must equal the closed form 2(n−1)·max_link.
+        let fleet = Fleet::paper_evaluation(0);
+        for k in [2usize, 4, 8, 16] {
+            let nodes: Vec<usize> = (0..k).collect();
+            let bytes = 3.4e8; // BERT-large fp16 grads
+            let sim = simulate_ring_allreduce(&fleet, &nodes, bytes).unwrap();
+            let analytic = ring_allreduce_ms(&fleet, &nodes, bytes).unwrap();
+            assert!((sim.makespan_ms - analytic).abs() / analytic < 1e-9,
+                    "k={k}: sim {} vs analytic {}", sim.makespan_ms,
+                    analytic);
+        }
+    }
+
+    #[test]
+    fn single_node_is_free() {
+        let fleet = Fleet::paper_toy(0);
+        let r = simulate_ring_allreduce(&fleet, &[3], 1e9).unwrap();
+        assert_eq!(r.makespan_ms, 0.0);
+        assert_eq!(r.events_processed, 0);
+    }
+
+    #[test]
+    fn step_count_is_2n_minus_2() {
+        let fleet = Fleet::paper_toy(0);
+        let nodes = [0, 1, 2, 3, 4];
+        let r = simulate_ring_allreduce(&fleet, &nodes, 1e7).unwrap();
+        assert_eq!(r.step_ms.len(), 8);
+        assert!(r.step_ms.iter().all(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn blocked_edge_returns_none() {
+        let mut fleet = Fleet::paper_toy(0);
+        let paris = fleet.add_machine(
+            crate::cluster::Region::Paris,
+            crate::cluster::GpuModel::V100,
+            8,
+        );
+        assert!(simulate_ring_allreduce(&fleet, &[0, paris], 1e6).is_none());
+    }
+
+    #[test]
+    fn every_link_busy_equal_times() {
+        // Each link carries exactly 2(n−1) chunks.
+        let fleet = Fleet::paper_toy(0);
+        let nodes = [0, 1, 2];
+        let r = simulate_ring_allreduce(&fleet, &nodes, 3e6).unwrap();
+        for (k, &busy) in r.link_busy_ms.iter().enumerate() {
+            assert!(busy > 0.0, "link {k} never used");
+        }
+        assert_eq!(r.events_processed as usize, 3 * 4);
+    }
+}

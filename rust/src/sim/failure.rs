@@ -1,0 +1,37 @@
+//! Failure injection for disaster-recovery experiments (paper §1: "How can
+//! we address the issue of disaster recovery in training, such as handling
+//! scenarios where a machine fails during the process?").
+
+/// A planned machine failure during a simulated run.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailurePlan {
+    /// Simulation time at which the machine dies.
+    pub at_ms: f64,
+    /// Machine id (must be one of the participating machines to have any
+    /// effect).
+    pub machine: usize,
+}
+
+/// What the simulator observed about an injected failure.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureOutcome {
+    pub at_ms: f64,
+    pub machine: usize,
+    /// Microbatches fully processed (fwd+bwd) before the failure — the
+    /// work that survives in optimizer state and does not need redoing.
+    pub completed_microbatches: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_plain_data() {
+        let p = FailurePlan { at_ms: 100.0, machine: 3 };
+        assert_eq!(p, p.clone());
+        let o = FailureOutcome { at_ms: 100.0, machine: 3,
+                                 completed_microbatches: 2 };
+        assert_eq!(o.machine, 3);
+    }
+}

@@ -1,0 +1,25 @@
+//! Discrete-event simulation of distributed training execution.
+//!
+//! The analytic cost models in `parallel::` give closed-form per-iteration
+//! times; this module *executes* the schedules event-by-event so that
+//! (a) the analytic models can be cross-validated (ablation bench),
+//! (b) failures can be injected mid-iteration (disaster recovery, §1),
+//! (c) traces can be inspected for utilization/bubble analysis.
+//!
+//! - [`engine`] — generic event queue + clock.
+//! - [`pipeline_sim`] — GPipe schedule execution over WAN links with
+//!   per-link serialization.
+//! - [`failure`] — failure injection plans and outcomes.
+//! - [`trace`] — event traces + utilization summaries.
+
+pub mod allreduce_sim;
+pub mod engine;
+pub mod failure;
+pub mod pipeline_sim;
+pub mod trace;
+
+pub use allreduce_sim::{simulate_ring_allreduce, AllReduceSimResult};
+pub use engine::{Engine, Event};
+pub use failure::{FailureOutcome, FailurePlan};
+pub use pipeline_sim::{simulate_pipeline, PipelineSimResult};
+pub use trace::{Trace, TraceEvent};

@@ -1,0 +1,274 @@
+//! Discrete-event execution of a GPipe schedule over WAN links.
+//!
+//! Differences from the analytic model in `parallel::pipeline`:
+//! transfers genuinely serialize on links, stages genuinely idle during
+//! the flush, and failures can interrupt mid-iteration. The ablation bench
+//! (`hulk bench ablation`) compares the two.
+
+use super::engine::{Engine, Resource};
+use super::failure::{FailureOutcome, FailurePlan};
+use super::trace::{Trace, TraceKind};
+use crate::cluster::Fleet;
+use crate::models::ModelSpec;
+use crate::parallel::cost::p2p_ms;
+use crate::parallel::PipelinePlan;
+
+/// Simulation outcome for one training iteration.
+#[derive(Clone, Debug)]
+pub struct PipelineSimResult {
+    /// Wall-clock of the iteration (∞ if it failed before completing).
+    pub makespan_ms: f64,
+    /// Total busy time across stages (compute).
+    pub comp_busy_ms: f64,
+    /// Total busy time across boundary links (communication).
+    pub comm_busy_ms: f64,
+    /// Mean stage utilization (busy / makespan).
+    pub mean_utilization: f64,
+    /// Set when a failure interrupted the run.
+    pub failure: Option<FailureOutcome>,
+    pub trace: Trace,
+    pub events_processed: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    FwdReady { stage: usize, mb: usize },
+    BwdReady { stage: usize, mb: usize },
+    Fail { machine: usize },
+}
+
+/// Simulate one GPipe iteration of `plan` for `model` on `fleet`.
+///
+/// Panics if the plan's boundaries are unreachable (callers must check
+/// feasibility via `parallel::pipeline_cost` first — the simulator is for
+/// feasible plans).
+pub fn simulate_pipeline(fleet: &Fleet, plan: &PipelinePlan,
+                         model: &ModelSpec, with_trace: bool,
+                         failure: Option<FailurePlan>) -> PipelineSimResult
+{
+    let s = plan.n_stages();
+    let k = plan.microbatches;
+    let micro_batch =
+        ((model.batch as f64 / k as f64).ceil() as usize).max(1);
+    let micro_tokens = (micro_batch * model.seq_len) as f64;
+    let act_bytes = model.activation_bytes(micro_batch);
+
+    // Per-stage fwd/bwd compute times (6×params split 2 fwd : 4 bwd).
+    let mut fwd_ms = Vec::with_capacity(s);
+    let mut bwd_ms = Vec::with_capacity(s);
+    for (i, &m) in plan.stages.iter().enumerate() {
+        let frac = plan.layers[i] as f64 / model.layers as f64;
+        let flops = crate::models::FLOPS_PER_TOKEN_FACTOR
+            * model.params
+            * frac
+            * micro_tokens;
+        let total = flops / (fleet.machines[m].total_tflops() * 1e12) * 1e3;
+        fwd_ms.push(total / 3.0);
+        bwd_ms.push(total * 2.0 / 3.0);
+    }
+    // Per-boundary transfer time for one microbatch activation.
+    let link_ms: Vec<f64> = (0..s.saturating_sub(1))
+        .map(|i| {
+            p2p_ms(fleet, plan.stages[i], plan.stages[i + 1], act_bytes)
+                .expect("simulate_pipeline: unreachable boundary")
+        })
+        .collect();
+
+    let mut engine: Engine<Ev> = Engine::new();
+    let mut stage_res = vec![Resource::default(); s];
+    let mut link_res = vec![Resource::default(); s.saturating_sub(1)];
+    let mut trace = if with_trace { Trace::enabled() } else { Trace::disabled() };
+
+    if let Some(f) = failure {
+        engine.schedule(f.at_ms, Ev::Fail { machine: f.machine });
+    }
+    for mb in 0..k {
+        engine.schedule(0.0, Ev::FwdReady { stage: 0, mb });
+    }
+
+    let mut fwd_done_at_last = 0usize;
+    let mut bwd_done_at_first = 0usize;
+    let mut bwd_completed = vec![false; k];
+    let mut makespan = f64::INFINITY;
+    let mut failed: Option<FailureOutcome> = None;
+
+    while let Some(ev) = engine.next() {
+        let now = ev.time_ms;
+        match ev.payload {
+            Ev::Fail { machine } => {
+                if plan.stages.contains(&machine) {
+                    failed = Some(FailureOutcome {
+                        at_ms: now,
+                        machine,
+                        completed_microbatches: bwd_completed
+                            .iter()
+                            .filter(|&&d| d)
+                            .count(),
+                    });
+                    trace.record(now, TraceKind::Failure { machine });
+                    break;
+                }
+            }
+            Ev::FwdReady { stage, mb } => {
+                let done = stage_res[stage].occupy(now, fwd_ms[stage]);
+                trace.record(done, TraceKind::Compute {
+                    stage, mb, backward: false, dur_ms: fwd_ms[stage] });
+                if stage + 1 < s {
+                    let arr = link_res[stage].occupy(done, link_ms[stage]);
+                    trace.record(arr, TraceKind::Transfer {
+                        boundary: stage, mb, backward: false,
+                        dur_ms: link_ms[stage] });
+                    engine.schedule(arr, Ev::FwdReady { stage: stage + 1, mb });
+                } else {
+                    fwd_done_at_last += 1;
+                    if fwd_done_at_last == k {
+                        // GPipe flush: backward starts after the full
+                        // forward wave, last microbatch first.
+                        for b in (0..k).rev() {
+                            engine.schedule(done, Ev::BwdReady {
+                                stage: s - 1, mb: b });
+                        }
+                    }
+                }
+            }
+            Ev::BwdReady { stage, mb } => {
+                let done = stage_res[stage].occupy(now, bwd_ms[stage]);
+                trace.record(done, TraceKind::Compute {
+                    stage, mb, backward: true, dur_ms: bwd_ms[stage] });
+                if stage > 0 {
+                    let arr =
+                        link_res[stage - 1].occupy(done, link_ms[stage - 1]);
+                    trace.record(arr, TraceKind::Transfer {
+                        boundary: stage - 1, mb, backward: true,
+                        dur_ms: link_ms[stage - 1] });
+                    engine.schedule(arr, Ev::BwdReady { stage: stage - 1, mb });
+                } else {
+                    bwd_completed[mb] = true;
+                    bwd_done_at_first += 1;
+                    if bwd_done_at_first == k {
+                        makespan = done;
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    let comp_busy_ms: f64 = stage_res.iter().map(|r| r.busy_ms()).sum();
+    let comm_busy_ms: f64 = link_res.iter().map(|r| r.busy_ms()).sum();
+    let mean_utilization = if makespan.is_finite() && s > 0 {
+        stage_res
+            .iter()
+            .map(|r| r.busy_ms() / makespan)
+            .sum::<f64>()
+            / s as f64
+    } else {
+        0.0
+    };
+    PipelineSimResult {
+        makespan_ms: makespan,
+        comp_busy_ms,
+        comm_busy_ms,
+        mean_utilization,
+        failure: failed,
+        trace,
+        events_processed: engine.events_processed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::pipeline_cost;
+
+    fn setup() -> (Fleet, PipelinePlan, ModelSpec) {
+        let fleet = Fleet::paper_toy(0);
+        let model = ModelSpec::gpt2_xl();
+        let plan = PipelinePlan::proportional(
+            &fleet, vec![0, 1, 2, 3], &model);
+        (fleet, plan, model)
+    }
+
+    #[test]
+    fn completes_with_finite_makespan() {
+        let (fleet, plan, model) = setup();
+        let r = simulate_pipeline(&fleet, &plan, &model, false, None);
+        assert!(r.makespan_ms.is_finite());
+        assert!(r.failure.is_none());
+        assert!(r.comp_busy_ms > 0.0 && r.comm_busy_ms > 0.0);
+        assert!(r.events_processed > 0);
+    }
+
+    #[test]
+    fn makespan_bounded_below_by_critical_path() {
+        let (fleet, plan, model) = setup();
+        let r = simulate_pipeline(&fleet, &plan, &model, false, None);
+        // Makespan ≥ busiest stage's total work, and ≥ one full wave.
+        let s = plan.n_stages();
+        let per_stage = r.comp_busy_ms / s as f64; // equalized-ish split
+        assert!(r.makespan_ms >= per_stage * 0.9);
+    }
+
+    #[test]
+    fn single_stage_pipeline_has_no_comm() {
+        let fleet = Fleet::paper_toy(0);
+        let model = ModelSpec::bert_large();
+        let plan = PipelinePlan::proportional(&fleet, vec![2], &model);
+        let r = simulate_pipeline(&fleet, &plan, &model, false, None);
+        assert_eq!(r.comm_busy_ms, 0.0);
+        assert!(r.makespan_ms.is_finite());
+    }
+
+    #[test]
+    fn utilization_in_unit_range() {
+        let (fleet, plan, model) = setup();
+        let r = simulate_pipeline(&fleet, &plan, &model, true, None);
+        assert!(r.mean_utilization > 0.0 && r.mean_utilization <= 1.0);
+        assert!(!r.trace.is_empty());
+    }
+
+    #[test]
+    fn agrees_with_analytic_model_on_order_of_magnitude() {
+        let (fleet, plan, model) = setup();
+        let sim = simulate_pipeline(&fleet, &plan, &model, false, None);
+        let analytic = pipeline_cost(&fleet, &plan, &model);
+        let ratio = sim.makespan_ms / analytic.total_ms();
+        assert!((0.2..5.0).contains(&ratio),
+                "sim {} vs analytic {}", sim.makespan_ms,
+                analytic.total_ms());
+    }
+
+    #[test]
+    fn failure_interrupts_run() {
+        let (fleet, plan, model) = setup();
+        let healthy = simulate_pipeline(&fleet, &plan, &model, false, None);
+        let fail_at = healthy.makespan_ms * 0.3;
+        let r = simulate_pipeline(&fleet, &plan, &model, true,
+            Some(FailurePlan { at_ms: fail_at, machine: plan.stages[1] }));
+        let outcome = r.failure.expect("failure must be observed");
+        assert_eq!(outcome.machine, plan.stages[1]);
+        assert!(r.makespan_ms.is_infinite());
+        assert!((outcome.at_ms - fail_at).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failure_of_nonparticipant_is_ignored() {
+        let (fleet, plan, model) = setup();
+        // Machine 7 is not in stages [0,1,2,3].
+        let r = simulate_pipeline(&fleet, &plan, &model, false,
+            Some(FailurePlan { at_ms: 1.0, machine: 7 }));
+        assert!(r.failure.is_none());
+        assert!(r.makespan_ms.is_finite());
+    }
+
+    #[test]
+    fn more_microbatches_amortize_bubble() {
+        let (fleet, mut plan, model) = setup();
+        plan.microbatches = 2;
+        let few = simulate_pipeline(&fleet, &plan, &model, false, None);
+        plan.microbatches = 16;
+        let many = simulate_pipeline(&fleet, &plan, &model, false, None);
+        // Throughput per microbatch must improve with more microbatches.
+        assert!(many.makespan_ms / 16.0 < few.makespan_ms / 2.0);
+    }
+}

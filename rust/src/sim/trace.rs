@@ -1,0 +1,121 @@
+//! Execution traces: what ran where and when, plus utilization summaries.
+
+/// One trace record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub time_ms: f64,
+    pub kind: TraceKind,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceKind {
+    /// Stage `stage` finished computing microbatch `mb` (fwd or bwd).
+    Compute { stage: usize, mb: usize, backward: bool, dur_ms: f64 },
+    /// Transfer of microbatch `mb` over boundary `stage → stage+1` (fwd)
+    /// or `stage+1 → stage` (bwd) completed.
+    Transfer { boundary: usize, mb: usize, backward: bool, dur_ms: f64 },
+    /// Machine failed.
+    Failure { machine: usize },
+}
+
+/// Append-only trace with summary queries.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    enabled: bool,
+}
+
+impl Trace {
+    pub fn enabled() -> Trace {
+        Trace { events: Vec::new(), enabled: true }
+    }
+
+    /// A disabled trace records nothing (hot-path mode).
+    pub fn disabled() -> Trace {
+        Trace { events: Vec::new(), enabled: false }
+    }
+
+    pub fn record(&mut self, time_ms: f64, kind: TraceKind) {
+        if self.enabled {
+            self.events.push(TraceEvent { time_ms, kind });
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Total compute time recorded for a stage.
+    pub fn stage_busy_ms(&self, stage: usize) -> f64 {
+        self.events
+            .iter()
+            .filter_map(|e| match e.kind {
+                TraceKind::Compute { stage: s, dur_ms, .. } if s == stage => {
+                    Some(dur_ms)
+                }
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Total transfer time recorded for a boundary.
+    pub fn boundary_busy_ms(&self, boundary: usize) -> f64 {
+        self.events
+            .iter()
+            .filter_map(|e| match e.kind {
+                TraceKind::Transfer { boundary: b, dur_ms, .. }
+                    if b == boundary =>
+                {
+                    Some(dur_ms)
+                }
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Fraction of `makespan_ms` stage `stage` spent computing.
+    pub fn stage_utilization(&self, stage: usize, makespan_ms: f64) -> f64 {
+        if makespan_ms <= 0.0 {
+            return 0.0;
+        }
+        self.stage_busy_ms(stage) / makespan_ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut t = Trace::enabled();
+        t.record(1.0, TraceKind::Compute {
+            stage: 0, mb: 0, backward: false, dur_ms: 5.0 });
+        t.record(2.0, TraceKind::Compute {
+            stage: 0, mb: 1, backward: true, dur_ms: 7.0 });
+        t.record(3.0, TraceKind::Transfer {
+            boundary: 0, mb: 0, backward: false, dur_ms: 2.0 });
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.stage_busy_ms(0), 12.0);
+        assert_eq!(t.stage_busy_ms(1), 0.0);
+        assert_eq!(t.boundary_busy_ms(0), 2.0);
+        assert!((t.stage_utilization(0, 24.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::disabled();
+        t.record(1.0, TraceKind::Failure { machine: 3 });
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn utilization_handles_zero_makespan() {
+        let t = Trace::enabled();
+        assert_eq!(t.stage_utilization(0, 0.0), 0.0);
+    }
+}

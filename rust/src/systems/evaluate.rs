@@ -1,0 +1,165 @@
+//! Run a workload through all four systems → the rows of Fig. 8 / Fig. 10
+//! (communication time and calculation time per model per system).
+
+use anyhow::Result;
+
+use crate::cluster::Fleet;
+use crate::graph::ClusterGraph;
+use crate::models::ModelSpec;
+use crate::parallel::IterCost;
+use crate::util::table::{fmt_ms, Table};
+
+use super::hulk::{hulk_plan, HulkSplitterKind};
+use super::{system_a, system_b, system_c};
+
+/// The four systems of §6.4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    SystemA,
+    SystemB,
+    SystemC,
+    Hulk,
+}
+
+impl SystemKind {
+    pub const ALL: [SystemKind; 4] = [
+        SystemKind::SystemA,
+        SystemKind::SystemB,
+        SystemKind::SystemC,
+        SystemKind::Hulk,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SystemKind::SystemA => "System A (DP)",
+            SystemKind::SystemB => "System B (GPipe)",
+            SystemKind::SystemC => "System C (Megatron)",
+            SystemKind::Hulk => "Hulk",
+        }
+    }
+}
+
+/// One evaluated workload: per-model, per-system iteration costs.
+#[derive(Clone, Debug)]
+pub struct SystemEval {
+    pub models: Vec<ModelSpec>,
+    /// `costs[m][s]` for model m under `SystemKind::ALL[s]`.
+    pub costs: Vec<[IterCost; 4]>,
+}
+
+impl SystemEval {
+    /// Hulk's total-time improvement over the best feasible baseline,
+    /// summed over the workload (the paper's ">20%" headline).
+    pub fn hulk_improvement(&self) -> f64 {
+        let mut hulk_total = 0.0;
+        let mut best_baseline_total = 0.0;
+        for row in &self.costs {
+            let hulk = row[3].total_ms();
+            let best = row[..3]
+                .iter()
+                .map(IterCost::total_ms)
+                .fold(f64::INFINITY, f64::min);
+            if best.is_finite() && hulk.is_finite() {
+                hulk_total += hulk;
+                best_baseline_total += best;
+            }
+        }
+        if best_baseline_total == 0.0 {
+            return 0.0;
+        }
+        1.0 - hulk_total / best_baseline_total
+    }
+
+    /// Render the Fig. 8 / Fig. 10 data as a table.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&["Model", "System", "Comm", "Comp",
+                                 "Total"]);
+        for (m, model) in self.models.iter().enumerate() {
+            for (s, kind) in SystemKind::ALL.iter().enumerate() {
+                let c = self.costs[m][s];
+                let (comm, comp, total) = if c.is_feasible() {
+                    (fmt_ms(c.comm_ms), fmt_ms(c.comp_ms),
+                     fmt_ms(c.total_ms()))
+                } else {
+                    ("—".into(), "—".into(), "infeasible".into())
+                };
+                t.row(&[
+                    model.name.to_string(),
+                    kind.name().to_string(),
+                    comm,
+                    comp,
+                    total,
+                ]);
+            }
+        }
+        t.render()
+    }
+}
+
+/// Evaluate `workload` under all four systems. Hulk uses the given
+/// splitter (GNN in production, oracle for artifact-free runs).
+pub fn evaluate_all(fleet: &Fleet, workload: &[ModelSpec],
+                    splitter: HulkSplitterKind) -> Result<SystemEval>
+{
+    let graph = ClusterGraph::from_fleet(fleet);
+    let plan = hulk_plan(fleet, &graph, workload, splitter)?;
+
+    // hulk_plan sorts tasks desc; keep that canonical order for rows.
+    let models = plan.tasks.clone();
+    let mut costs = Vec::with_capacity(models.len());
+    for (t, model) in models.iter().enumerate() {
+        costs.push([
+            system_a::cost(fleet, model),
+            system_b::cost(fleet, model),
+            system_c::cost(fleet, model),
+            super::hulk::cost(fleet, &plan, t),
+        ]);
+    }
+    Ok(SystemEval { models, costs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_shape_holds() {
+        let fleet = Fleet::paper_evaluation(0);
+        let eval = evaluate_all(&fleet, &ModelSpec::paper_four(),
+                                HulkSplitterKind::Oracle)
+            .unwrap();
+        assert_eq!(eval.models.len(), 4);
+        for (m, row) in eval.costs.iter().enumerate() {
+            let hulk = row[3];
+            assert!(hulk.is_feasible(), "hulk infeasible for {}",
+                    eval.models[m].name);
+            // Hulk comm beats B and C everywhere (the paper's Figure 8).
+            assert!(hulk.comm_ms < row[1].comm_ms);
+            assert!(hulk.comm_ms < row[2].comm_ms);
+        }
+    }
+
+    #[test]
+    fn headline_improvement_over_20_percent() {
+        let fleet = Fleet::paper_evaluation(0);
+        let eval = evaluate_all(&fleet, &ModelSpec::paper_four(),
+                                HulkSplitterKind::Oracle)
+            .unwrap();
+        let imp = eval.hulk_improvement();
+        assert!(imp > 0.20, "Hulk improvement only {:.1}%", imp * 100.0);
+    }
+
+    #[test]
+    fn render_mentions_every_system_and_model() {
+        let fleet = Fleet::paper_evaluation(0);
+        let eval = evaluate_all(&fleet, &ModelSpec::paper_four(),
+                                HulkSplitterKind::Oracle)
+            .unwrap();
+        let out = eval.render();
+        for kind in SystemKind::ALL {
+            assert!(out.contains(kind.name()));
+        }
+        assert!(out.contains("OPT (175B)"));
+        assert!(out.contains("infeasible")); // System A × OPT
+    }
+}

@@ -1,0 +1,222 @@
+//! The Hulk system: GCN (or oracle) grouping via Algorithm 1, then GPipe
+//! inside each group with a locality-aware stage order (paper §5–§6:
+//! "we utilize Gpipe to train the model in parallel [within each class];
+//! depending on the computational power and memory of each node, we
+//! determine which part of the model it will handle").
+
+use anyhow::Result;
+
+use crate::cluster::Fleet;
+use crate::gnn::inference::GnnSplitter;
+use crate::gnn::Classifier;
+use crate::graph::ClusterGraph;
+use crate::models::ModelSpec;
+use crate::parallel::{pipeline_cost, IterCost, PipelinePlan};
+use crate::scheduler::{algorithm1, Algorithm1Error, Assignment,
+                       TaskSplitter};
+
+/// Which splitter `F` drives Algorithm 1.
+pub enum HulkSplitterKind<'a> {
+    /// The trained GCN (production path).
+    Gnn { classifier: &'a Classifier, params: &'a [f32] },
+    /// The oracle partitioner (ablation / artifact-free path).
+    Oracle,
+}
+
+/// A complete Hulk deployment plan for a workload.
+#[derive(Clone, Debug)]
+pub struct HulkPlan {
+    /// Tasks in descending parameter order (the order groups were cut).
+    pub tasks: Vec<ModelSpec>,
+    pub assignment: Assignment,
+    /// Per-task pipeline plan (same index as `tasks`).
+    pub pipelines: Vec<PipelinePlan>,
+}
+
+/// Oracle-backed splitter for Algorithm 1.
+struct OracleSplitter;
+
+impl TaskSplitter for OracleSplitter {
+    fn split(&self, fleet: &Fleet, graph: &ClusterGraph,
+             remaining: &[usize], task: &ModelSpec, _class: usize)
+        -> Vec<usize>
+    {
+        crate::scheduler::oracle::grow_group(fleet, graph, remaining, task,
+                                             1.3)
+    }
+}
+
+/// Order a group's machines into a pipeline chain by greedy
+/// nearest-neighbor on latency: adjacent stages end up in the same or
+/// nearby regions.
+pub fn chain_order(graph: &ClusterGraph, group: &[usize]) -> Vec<usize> {
+    if group.len() <= 2 {
+        return group.to_vec();
+    }
+    // Start from the member with the lowest total latency to the rest.
+    let start = *group
+        .iter()
+        .min_by(|&&a, &&b| {
+            let cost = |i: usize| -> f32 {
+                group
+                    .iter()
+                    .map(|&j| {
+                        let w = graph.weight(i, j);
+                        if j != i && w == 0.0 { 2e3 } else { w }
+                    })
+                    .sum()
+            };
+            cost(a).partial_cmp(&cost(b)).unwrap()
+        })
+        .unwrap();
+    let mut chain = vec![start];
+    let mut rest: Vec<usize> =
+        group.iter().copied().filter(|&m| m != start).collect();
+    while !rest.is_empty() {
+        let last = *chain.last().unwrap();
+        let (k, _) = rest
+            .iter()
+            .enumerate()
+            .min_by(|(_, &a), (_, &b)| {
+                let cost = |i: usize| -> f32 {
+                    let w = graph.weight(last, i);
+                    if w == 0.0 { 2e3 } else { w }
+                };
+                cost(a).partial_cmp(&cost(b)).unwrap()
+            })
+            .unwrap();
+        chain.push(rest.remove(k));
+    }
+    chain
+}
+
+/// Build the Hulk plan for a workload. Tasks are sorted largest-first
+/// (class 0 = biggest model, matching the GCN's training labels).
+pub fn hulk_plan(fleet: &Fleet, graph: &ClusterGraph,
+                 workload: &[ModelSpec], splitter: HulkSplitterKind)
+    -> Result<HulkPlan>
+{
+    let mut tasks = workload.to_vec();
+    tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+
+    let assignment = match &splitter {
+        HulkSplitterKind::Gnn { classifier, params } => {
+            let f = GnnSplitter { classifier, params };
+            run_algorithm1(fleet, graph, &tasks, &f)?
+        }
+        HulkSplitterKind::Oracle => {
+            run_algorithm1(fleet, graph, &tasks, &OracleSplitter)?
+        }
+    };
+
+    let mut pipelines = Vec::with_capacity(tasks.len());
+    for (t, task) in tasks.iter().enumerate() {
+        let group = assignment.group(t);
+        anyhow::ensure!(!group.is_empty(), "task {} got no machines",
+                        task.name);
+        let ordered = chain_order(graph, group);
+        let n_stages = ordered.len().min(task.layers);
+        let stages: Vec<usize> = ordered.into_iter().take(n_stages).collect();
+        pipelines.push(PipelinePlan::proportional(fleet, stages, task));
+    }
+    Ok(HulkPlan { tasks, assignment, pipelines })
+}
+
+fn run_algorithm1(fleet: &Fleet, graph: &ClusterGraph, tasks: &[ModelSpec],
+                  f: &dyn TaskSplitter) -> Result<Assignment>
+{
+    match algorithm1(fleet, graph, tasks, f) {
+        Ok(a) => Ok(a),
+        Err(Algorithm1Error::MustWait { partial, deferred }) => {
+            // The coordinator queues deferred tasks; for planning we
+            // surface the partial assignment only if nothing is missing
+            // entirely.
+            anyhow::bail!(
+                "Algorithm 1 deferred tasks {:?} (partial groups: {:?})",
+                deferred,
+                partial.groups.iter().map(Vec::len).collect::<Vec<_>>()
+            )
+        }
+        Err(e) => anyhow::bail!("Algorithm 1 failed: {e}"),
+    }
+}
+
+/// Per-iteration cost of `model` under the Hulk plan.
+pub fn cost(fleet: &Fleet, plan: &HulkPlan, task_idx: usize) -> IterCost {
+    pipeline_cost(fleet, &plan.pipelines[task_idx], &plan.tasks[task_idx])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Fleet, ClusterGraph) {
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        (fleet, graph)
+    }
+
+    #[test]
+    fn oracle_plan_covers_paper_workload() {
+        let (fleet, graph) = setup();
+        let plan = hulk_plan(&fleet, &graph, &ModelSpec::paper_four(),
+                             HulkSplitterKind::Oracle)
+            .unwrap();
+        assert_eq!(plan.tasks.len(), 4);
+        assert_eq!(plan.tasks[0].name, "OPT (175B)"); // sorted desc
+        plan.assignment.validate_disjoint(fleet.len()).unwrap();
+        plan.assignment.validate_memory(&fleet, &plan.tasks).unwrap();
+        for t in 0..4 {
+            let c = cost(&fleet, &plan, t);
+            assert!(c.is_feasible(), "{} infeasible", plan.tasks[t].name);
+        }
+    }
+
+    #[test]
+    fn chain_order_is_a_permutation_and_locality_aware() {
+        let (fleet, graph) = setup();
+        let group: Vec<usize> = (0..12).collect();
+        let chain = chain_order(&graph, &group);
+        let mut sorted = chain.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, group);
+        // Adjacent chain latency must not exceed a random order's by
+        // construction (greedy NN): compare against identity order.
+        let adj_cost = |order: &[usize]| -> f32 {
+            order
+                .windows(2)
+                .map(|w| {
+                    let x = graph.weight(w[0], w[1]);
+                    if x == 0.0 { 2e3 } else { x }
+                })
+                .sum()
+        };
+        assert!(adj_cost(&chain) <= adj_cost(&group) * 1.01,
+                "chain {} vs id {}", adj_cost(&chain), adj_cost(&group));
+        let _ = fleet;
+    }
+
+    #[test]
+    fn hulk_beats_system_b_on_comm() {
+        let (fleet, graph) = setup();
+        let plan = hulk_plan(&fleet, &graph, &ModelSpec::paper_four(),
+                             HulkSplitterKind::Oracle)
+            .unwrap();
+        for (t, task) in plan.tasks.iter().enumerate() {
+            let hulk_c = cost(&fleet, &plan, t);
+            let b_c = crate::systems::system_b::cost(&fleet, task);
+            assert!(hulk_c.comm_ms < b_c.comm_ms,
+                    "{}: hulk {} vs B {}", task.name, hulk_c.comm_ms,
+                    b_c.comm_ms);
+        }
+    }
+
+    #[test]
+    fn infeasible_workload_errors() {
+        let fleet = Fleet::paper_toy(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let err = hulk_plan(&fleet, &graph, &[ModelSpec::opt_175b()],
+                            HulkSplitterKind::Oracle);
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! The four systems of the paper's evaluation (§6.4):
+//!
+//! - **System A** ([`system_a`]) — pure data parallelism; drops machines
+//!   that cannot hold a full replica.
+//! - **System B** ([`system_b`]) — GPipe across every machine, layers
+//!   assigned in id order until the model is distributed.
+//! - **System C** ([`system_c`]) — Megatron-LM tensor parallelism across
+//!   the entire fleet.
+//! - **Hulk** ([`hulk`]) — GCN/Algorithm-1 grouping, then GPipe inside
+//!   each group with a locality-aware stage order.
+//!
+//! [`evaluate`] runs a workload through all four and produces the
+//! Fig. 8 / Fig. 10 rows.
+
+pub mod evaluate;
+pub mod sweep;
+pub mod hulk;
+pub mod system_a;
+pub mod system_b;
+pub mod system_c;
+
+pub use evaluate::{evaluate_all, SystemEval, SystemKind};
+pub use sweep::{fleet_size_sweep, microbatch_sweep, wan_degradation_sweep, SweepPoint};
+pub use hulk::{hulk_plan, HulkPlan, HulkSplitterKind};

@@ -1,0 +1,156 @@
+//! Parameter sweeps around the paper's evaluation — the ablation studies
+//! DESIGN.md calls out:
+//!
+//! - **fleet-size sweep**: Hulk's improvement vs the best baseline as the
+//!   fleet grows from 12 to 46 servers (where does grouping start to
+//!   pay?),
+//! - **microbatch sweep**: GPipe bubble amortization inside Hulk groups,
+//! - **WAN-degradation sweep**: improvement as every inter-region latency
+//!   is scaled ×1..×8 (the paper's motivation: the worse the WAN, the
+//!   bigger Hulk's win).
+
+use anyhow::Result;
+
+use crate::cluster::{Fleet, Machine};
+use crate::graph::ClusterGraph;
+use crate::models::ModelSpec;
+use crate::parallel::{pipeline_cost, PipelinePlan};
+use crate::systems::{evaluate_all, HulkSplitterKind};
+
+use super::hulk::{chain_order, hulk_plan};
+
+/// One sweep point.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub x: f64,
+    /// Hulk total-time improvement over the best feasible baseline.
+    pub improvement: f64,
+}
+
+/// Fleet-size sweep: truncate the evaluation fleet to its first `n`
+/// machines (re-densified ids) and re-evaluate the workload.
+pub fn fleet_size_sweep(seed: u64, sizes: &[usize],
+                        workload: &[ModelSpec]) -> Result<Vec<SweepPoint>>
+{
+    let full = Fleet::paper_evaluation(seed);
+    let mut out = Vec::with_capacity(sizes.len());
+    for &n in sizes {
+        anyhow::ensure!(n >= 2 && n <= full.len(), "bad sweep size {n}");
+        let machines: Vec<Machine> = full.machines[..n]
+            .iter()
+            .enumerate()
+            .map(|(i, m)| Machine::new(i, m.region, m.gpu, m.n_gpus))
+            .collect();
+        let fleet = Fleet::new(machines, full.wan.clone());
+        // Drop workload models the truncated fleet cannot host at all.
+        let feasible: Vec<ModelSpec> = workload
+            .iter()
+            .filter(|t| t.train_gb() * 1.1 <= fleet.total_memory_gb())
+            .cloned()
+            .collect();
+        if feasible.is_empty() {
+            continue;
+        }
+        match evaluate_all(&fleet, &feasible, HulkSplitterKind::Oracle) {
+            Ok(eval) => out.push(SweepPoint {
+                x: n as f64,
+                improvement: eval.hulk_improvement(),
+            }),
+            Err(_) => continue, // Algorithm 1 deferred: skip the point
+        }
+    }
+    Ok(out)
+}
+
+/// Microbatch sweep: per-iteration total of one Hulk group's pipeline as
+/// K varies (the GPipe bubble-amortization curve).
+pub fn microbatch_sweep(seed: u64, model: &ModelSpec, ks: &[usize])
+    -> Result<Vec<SweepPoint>>
+{
+    let fleet = Fleet::paper_evaluation(seed);
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let plan = hulk_plan(&fleet, &graph, std::slice::from_ref(model),
+                         HulkSplitterKind::Oracle)?;
+    let group = plan.assignment.group(0).to_vec();
+    let ordered = chain_order(&graph, &group);
+    let stages: Vec<usize> =
+        ordered.into_iter().take(model.layers).collect();
+    let mut out = Vec::with_capacity(ks.len());
+    for &k in ks {
+        let mut p = PipelinePlan::proportional(&fleet, stages.clone(), model);
+        p.microbatches = k;
+        let cost = pipeline_cost(&fleet, &p, model);
+        out.push(SweepPoint { x: k as f64, improvement: cost.total_ms() });
+    }
+    Ok(out)
+}
+
+/// WAN-degradation sweep: scale every *inter-region* latency by `factor`
+/// and re-evaluate. Returns (factor, improvement) points.
+pub fn wan_degradation_sweep(seed: u64, factors: &[f64],
+                             workload: &[ModelSpec])
+    -> Result<Vec<SweepPoint>>
+{
+    let mut out = Vec::with_capacity(factors.len());
+    for &factor in factors {
+        anyhow::ensure!(factor >= 1.0, "degradation factor must be ≥ 1");
+        let fleet = Fleet::paper_evaluation(seed)
+            .with_wan_scaled(factor);
+        let eval = evaluate_all(&fleet, workload, HulkSplitterKind::Oracle)?;
+        out.push(SweepPoint { x: factor,
+                              improvement: eval.hulk_improvement() });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_size_sweep_produces_points() {
+        let points = fleet_size_sweep(0, &[16, 24, 46],
+                                      &ModelSpec::paper_four())
+            .unwrap();
+        assert!(!points.is_empty());
+        // At full size the improvement must clear the paper's headline.
+        let last = points.last().unwrap();
+        assert_eq!(last.x, 46.0);
+        assert!(last.improvement > 0.20);
+    }
+
+    #[test]
+    fn microbatch_sweep_amortizes_bubble() {
+        let points =
+            microbatch_sweep(0, &ModelSpec::gpt2_xl(), &[1, 4, 16]).unwrap();
+        assert_eq!(points.len(), 3);
+        // Per-iteration time is not monotone in K in general (comm grows
+        // with K) but K=1 must be strictly worse than the best K: the
+        // bubble dominates a one-shot pipeline.
+        let k1 = points[0].improvement;
+        let best = points
+            .iter()
+            .map(|p| p.improvement)
+            .fold(f64::INFINITY, f64::min);
+        assert!(k1 > best * 0.99, "K=1 {} vs best {}", k1, best);
+    }
+
+    #[test]
+    fn wan_degradation_grows_the_win() {
+        let points = wan_degradation_sweep(0, &[1.0, 4.0],
+                                           &ModelSpec::paper_four())
+            .unwrap();
+        assert_eq!(points.len(), 2);
+        // Hulk keeps traffic regional: degrading the WAN hurts the
+        // baselines more, so the improvement must not shrink.
+        assert!(points[1].improvement >= points[0].improvement - 0.02,
+                "×1: {:.3} vs ×4: {:.3}", points[0].improvement,
+                points[1].improvement);
+    }
+
+    #[test]
+    fn degradation_factor_below_one_rejected() {
+        assert!(wan_degradation_sweep(0, &[0.5], &ModelSpec::paper_four())
+            .is_err());
+    }
+}

@@ -1,0 +1,50 @@
+//! System A (paper §6.4): data parallelism over every machine that can
+//! hold the entire model; machines without sufficient memory are
+//! discarded. When *no* machine fits the model (OPT-175B on this fleet),
+//! the system genuinely cannot train it — reported as infeasible.
+
+use crate::cluster::Fleet;
+use crate::models::ModelSpec;
+use crate::parallel::data_parallel::{data_parallel_cost, replica_capable};
+use crate::parallel::IterCost;
+
+/// Per-iteration cost of training `model` under System A.
+pub fn cost(fleet: &Fleet, model: &ModelSpec) -> IterCost {
+    let replicas = replica_capable(fleet, model);
+    data_parallel_cost(fleet, &replicas, model)
+}
+
+/// The machines System A would use for `model` (for reports).
+pub fn participants(fleet: &Fleet, model: &ModelSpec) -> Vec<usize> {
+    replica_capable(fleet, model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_uses_whole_fleet() {
+        let fleet = Fleet::paper_evaluation(0);
+        let model = ModelSpec::bert_large();
+        assert_eq!(participants(&fleet, &model).len(), 46);
+        assert!(cost(&fleet, &model).is_feasible());
+    }
+
+    #[test]
+    fn opt_is_infeasible() {
+        let fleet = Fleet::paper_evaluation(0);
+        let model = ModelSpec::opt_175b();
+        assert!(participants(&fleet, &model).is_empty());
+        assert!(!cost(&fleet, &model).is_feasible());
+    }
+
+    #[test]
+    fn t5_uses_a_strict_subset() {
+        let fleet = Fleet::paper_evaluation(0);
+        let model = ModelSpec::t5_11b();
+        let p = participants(&fleet, &model);
+        assert!(!p.is_empty() && p.len() < 46,
+                "expected a strict subset, got {}", p.len());
+    }
+}

@@ -1,0 +1,54 @@
+//! System B (paper §6.4): "utilizes Gpipe for parallelism, assigning a
+//! certain layer of the model to a particular machine until the entire
+//! model is distributed across all machines." Stage order is machine-id
+//! order — topology-oblivious, so stages routinely straddle continents,
+//! which is the pathology Hulk's grouping removes.
+
+use crate::cluster::Fleet;
+use crate::models::ModelSpec;
+use crate::parallel::{pipeline_cost, IterCost, PipelinePlan};
+
+/// System B's pipeline plan: first `min(layers, n)` machines in id order.
+pub fn plan(fleet: &Fleet, model: &ModelSpec) -> PipelinePlan {
+    let n_stages = fleet.len().min(model.layers);
+    let stages: Vec<usize> = (0..n_stages).collect();
+    PipelinePlan::proportional(fleet, stages, model)
+}
+
+/// Per-iteration cost of training `model` under System B.
+pub fn cost(fleet: &Fleet, model: &ModelSpec) -> IterCost {
+    pipeline_cost(fleet, &plan(fleet, model), model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uses_all_machines_up_to_layer_count() {
+        let fleet = Fleet::paper_evaluation(0);
+        let p = plan(&fleet, &ModelSpec::opt_175b()); // 96 layers > 46
+        assert_eq!(p.n_stages(), 46);
+        let p2 = plan(&fleet, &ModelSpec::bert_large()); // 24 layers < 46
+        assert_eq!(p2.n_stages(), 24);
+    }
+
+    #[test]
+    fn feasible_for_all_paper_models() {
+        let fleet = Fleet::paper_evaluation(0);
+        for model in ModelSpec::paper_six() {
+            let c = cost(&fleet, &model);
+            assert!(c.is_feasible(), "{} infeasible under B", model.name);
+        }
+    }
+
+    #[test]
+    fn pays_heavy_cross_region_comm() {
+        let fleet = Fleet::paper_evaluation(0);
+        let c = cost(&fleet, &ModelSpec::gpt2_xl());
+        // id-order stages cross regions constantly: comm must dominate
+        // compute for a model this small.
+        assert!(c.comm_ms > c.comp_ms, "comm {} comp {}", c.comm_ms,
+                c.comp_ms);
+    }
+}

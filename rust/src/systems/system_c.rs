@@ -1,0 +1,28 @@
+//! System C (paper §6.4): "employs tensor parallelism with Megatron-LM
+//! across the entire system, requiring all machines to be utilized."
+
+use crate::cluster::Fleet;
+use crate::models::ModelSpec;
+use crate::parallel::{tensor_parallel_cost, IterCost};
+
+/// Per-iteration cost of training `model` under System C.
+pub fn cost(fleet: &Fleet, model: &ModelSpec) -> IterCost {
+    let all: Vec<usize> = (0..fleet.len()).collect();
+    tensor_parallel_cost(fleet, &all, model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feasible_but_comm_bound_for_every_model() {
+        let fleet = Fleet::paper_evaluation(0);
+        for model in ModelSpec::paper_six() {
+            let c = cost(&fleet, &model);
+            assert!(c.is_feasible(), "{}", model.name);
+            assert!(c.comm_ms > c.comp_ms,
+                    "{}: TP over WAN must be comm-bound", model.name);
+        }
+    }
+}

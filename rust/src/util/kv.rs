@@ -1,0 +1,126 @@
+//! Parser for the `key value` manifest format emitted by
+//! `python/compile/aot.py` (`artifacts/manifest.kv`). One pair per line,
+//! `#` comments and blank lines ignored. Substitute for serde (offline
+//! registry).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed manifest. Keys are unique; duplicate keys are an error (they
+/// would mean aot.py and the runtime disagree about the contract).
+#[derive(Clone, Debug, Default)]
+pub struct KvFile {
+    map: HashMap<String, String>,
+    /// Insertion order, for faithful round-tripping in tooling.
+    order: Vec<String>,
+}
+
+impl KvFile {
+    pub fn parse(text: &str) -> Result<KvFile> {
+        let mut map = HashMap::new();
+        let mut order = Vec::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((key, value)) = line.split_once(char::is_whitespace)
+            else {
+                bail!("manifest line {} has no value: {:?}", lineno + 1, raw);
+            };
+            let key = key.trim().to_string();
+            let value = value.trim().to_string();
+            if map.insert(key.clone(), value).is_some() {
+                bail!("duplicate manifest key {:?} (line {})", key, lineno + 1);
+            }
+            order.push(key);
+        }
+        Ok(KvFile { map, order })
+    }
+
+    pub fn load(path: &Path) -> Result<KvFile> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        KvFile::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.map
+            .get(key)
+            .map(String::as_str)
+            .with_context(|| format!("manifest missing key {key:?}"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        let v = self.get(key)?;
+        v.parse()
+            .with_context(|| format!("manifest key {key:?}={v:?} not usize"))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.order.iter().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_manifest() {
+        let kv = KvFile::parse("format 1\nn 64\np 174216\nforward f.hlo.txt\n")
+            .unwrap();
+        assert_eq!(kv.get("format").unwrap(), "1");
+        assert_eq!(kv.get_usize("n").unwrap(), 64);
+        assert_eq!(kv.get_usize("p").unwrap(), 174_216);
+        assert_eq!(kv.get("forward").unwrap(), "f.hlo.txt");
+        assert_eq!(kv.len(), 4);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let kv = KvFile::parse("# hi\n\nn 8\n   \n# bye\n").unwrap();
+        assert_eq!(kv.len(), 1);
+        assert_eq!(kv.get_usize("n").unwrap(), 8);
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        assert!(KvFile::parse("a 1\na 2\n").is_err());
+    }
+
+    #[test]
+    fn rejects_key_without_value() {
+        assert!(KvFile::parse("loner\n").is_err());
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        let kv = KvFile::parse("a 1\n").unwrap();
+        assert!(kv.get("b").is_err());
+        assert!(kv.get_usize("a").is_ok());
+    }
+
+    #[test]
+    fn preserves_order() {
+        let kv = KvFile::parse("z 1\na 2\nm 3\n").unwrap();
+        let keys: Vec<&str> = kv.keys().collect();
+        assert_eq!(keys, vec!["z", "a", "m"]);
+    }
+
+    #[test]
+    fn value_with_spaces() {
+        let kv = KvFile::parse("desc hello world  \n").unwrap();
+        assert_eq!(kv.get("desc").unwrap(), "hello world");
+    }
+}

@@ -1,0 +1,189 @@
+//! Minimal dense f32 matrix used by the pure-Rust reference GCN
+//! (`gnn::reference`) and the graph pipeline. Row-major; no BLAS — the
+//! matrices here are at most 64×256, where a cache-friendly naive kernel
+//! with an ikj loop order is already memory-bound.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatF32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl MatF32 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        MatF32 { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = MatF32::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// `self @ rhs` with ikj loop order (streams rhs rows, no transpose).
+    pub fn matmul(&self, rhs: &MatF32) -> MatF32 {
+        assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
+        let mut out = MatF32::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            let orow = &mut out.data[i * rhs.cols..(i + 1) * rhs.cols];
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue; // adjacency matrices are mostly zero
+                }
+                let brow = &rhs.data[k * rhs.cols..(k + 1) * rhs.cols];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Element-wise `max(0, x)` in place.
+    pub fn relu_inplace(&mut self) {
+        for v in &mut self.data {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Add a row vector (bias) to every row.
+    pub fn add_row_bias(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for r in 0..self.rows {
+            let row = &mut self.data[r * self.cols..(r + 1) * self.cols];
+            for (v, &b) in row.iter_mut().zip(bias) {
+                *v += b;
+            }
+        }
+    }
+
+    /// Scale every row `r` by `scales[r]` (masking / degree normalization).
+    pub fn scale_rows(&mut self, scales: &[f32]) {
+        assert_eq!(scales.len(), self.rows);
+        for r in 0..self.rows {
+            let s = scales[r];
+            for v in &mut self.data[r * self.cols..(r + 1) * self.cols] {
+                *v *= s;
+            }
+        }
+    }
+
+    pub fn transpose(&self) -> MatF32 {
+        let mut t = MatF32::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Row-wise argmax (predictions).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|r| {
+                let row = self.row(r);
+                let mut best = 0;
+                for (i, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = i;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    pub fn max_abs_diff(&self, other: &MatF32) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = MatF32::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = MatF32::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = MatF32::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let i = MatF32::eye(2);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_rectangular_shapes() {
+        let a = MatF32::zeros(3, 5);
+        let b = MatF32::zeros(5, 7);
+        let c = a.matmul(&b);
+        assert_eq!((c.rows, c.cols), (3, 7));
+    }
+
+    #[test]
+    fn relu_clips_negatives() {
+        let mut m = MatF32::from_vec(1, 4, vec![-1.0, 0.0, 2.0, -0.5]);
+        m.relu_inplace();
+        assert_eq!(m.data, vec![0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn bias_and_row_scaling() {
+        let mut m = MatF32::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        m.add_row_bias(&[1.0, 2.0]);
+        assert_eq!(m.data, vec![2.0, 3.0, 2.0, 3.0]);
+        m.scale_rows(&[2.0, 0.0]);
+        assert_eq!(m.data, vec![4.0, 6.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = MatF32::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().at(2, 1), 6.0);
+    }
+
+    #[test]
+    fn argmax_rows_picks_first_max() {
+        let m = MatF32::from_vec(2, 3, vec![1.0, 5.0, 5.0, 7.0, 2.0, 3.0]);
+        assert_eq!(m.argmax_rows(), vec![1, 0]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Support utilities hand-rolled for the offline build (the vendored
+//! registry carries only `xla` + `anyhow`): PRNG, statistics, matrices,
+//! key-value manifests, a JSON writer and text tables.
+
+pub mod json;
+pub mod kv;
+pub mod matrix;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use matrix::MatF32;
+pub use rng::Rng;
+pub use stats::Summary;
+pub use table::Table;

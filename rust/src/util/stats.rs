@@ -1,0 +1,180 @@
+//! Streaming and batch statistics used by `benchkit`, the simulator and the
+//! evaluation harness.
+
+/// Batch summary of a sample set: mean / stddev / percentiles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary; `samples` need not be sorted. Panics on empty
+    /// input (a bench with zero samples is a bug, not a data point).
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of(empty)");
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).expect("NaN sample"));
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        Summary {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: s[0],
+            p50: percentile_sorted(&s, 50.0),
+            p90: percentile_sorted(&s, 90.0),
+            p95: percentile_sorted(&s, 95.0),
+            p99: percentile_sorted(&s, 99.0),
+            max: s[n - 1],
+        }
+    }
+}
+
+/// Nearest-rank percentile over a pre-sorted slice, `p` in [0, 100].
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Welford online mean/variance accumulator (single pass, numerically
+/// stable) — used on the simulator's hot event path where buffering every
+/// sample would dominate.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        let mean =
+            self.mean + d * other.n as f64 / n as f64;
+        let m2 = self.m2
+            + other.m2
+            + d * d * self.n as f64 * other.n as f64 / n as f64;
+        *self = Welford { n, mean, m2 };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_values() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.stddev - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [10.0, 20.0, 30.0, 40.0];
+        assert!((percentile_sorted(&s, 0.0) - 10.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 100.0) - 40.0).abs() < 1e-12);
+        assert!((percentile_sorted(&s, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn summary_rejects_empty() {
+        Summary::of(&[]);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let s = Summary::of(&xs);
+        assert!((w.mean() - s.mean).abs() < 1e-9);
+        assert!((w.stddev() - s.stddev).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welford_merge_equals_sequential() {
+        let xs: Vec<f64> = (0..500).map(|i| i as f64 * 0.37).collect();
+        let (a, b) = xs.split_at(123);
+        let mut wa = Welford::new();
+        let mut wb = Welford::new();
+        for &x in a {
+            wa.push(x);
+        }
+        for &x in b {
+            wb.push(x);
+        }
+        let mut all = Welford::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        wa.merge(&wb);
+        assert_eq!(wa.count(), all.count());
+        assert!((wa.mean() - all.mean()).abs() < 1e-9);
+        assert!((wa.variance() - all.variance()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,141 @@
+//! Aligned plain-text tables — every bench prints the same rows/series the
+//! paper's tables and figures report, through this one formatter.
+
+/// Column-aligned table with a header row.
+#[derive(Clone, Debug)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Table {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width != header width"
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Table {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, cell) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(cell);
+                let pad = widths[i].saturating_sub(cell.chars().count());
+                if i + 1 < cells.len() {
+                    line.extend(std::iter::repeat(' ').take(pad));
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        let total: usize =
+            widths.iter().sum::<usize>() + 2 * (ncols.saturating_sub(1));
+        out.extend(std::iter::repeat('-').take(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format milliseconds human-readably (`0.42 ms`, `1.23 s`, `2.1 min`).
+pub fn fmt_ms(ms: f64) -> String {
+    if ms < 1.0 {
+        format!("{:.3} ms", ms)
+    } else if ms < 1_000.0 {
+        format!("{:.1} ms", ms)
+    } else if ms < 60_000.0 {
+        format!("{:.2} s", ms / 1_000.0)
+    } else {
+        format!("{:.1} min", ms / 60_000.0)
+    }
+}
+
+/// Format a parameter count (`340M`, `1.5B`).
+pub fn fmt_params(p: f64) -> String {
+    if p >= 1e9 {
+        format!("{:.1}B", p / 1e9)
+    } else if p >= 1e6 {
+        format!("{:.0}M", p / 1e6)
+    } else if p >= 1e3 {
+        format!("{:.0}k", p / 1e3)
+    } else {
+        format!("{p:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_columns() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row_strs(&["a", "1"]);
+        t.row_strs(&["longer", "2"]);
+        let out = t.render();
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[2].starts_with("a"));
+        // Both value cells start at the same column.
+        let col = lines[2].find('1').unwrap();
+        assert_eq!(lines[3].find('2').unwrap(), col);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_mismatch_panics() {
+        Table::new(&["a", "b"]).row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn fmt_ms_ranges() {
+        assert_eq!(fmt_ms(0.5), "0.500 ms");
+        assert_eq!(fmt_ms(42.0), "42.0 ms");
+        assert_eq!(fmt_ms(1_500.0), "1.50 s");
+        assert_eq!(fmt_ms(120_000.0), "2.0 min");
+    }
+
+    #[test]
+    fn fmt_params_ranges() {
+        assert_eq!(fmt_params(340e6), "340M");
+        assert_eq!(fmt_params(1.5e9), "1.5B");
+        assert_eq!(fmt_params(188e3), "188k");
+    }
+}

@@ -1,0 +1,117 @@
+//! Coordinator integration: the threaded leader loop end-to-end —
+//! submissions, ticks, failures, scale-out — over the channel interface.
+
+use hulk::cluster::{Fleet, GpuModel, Region};
+use hulk::coordinator::{Coordinator, CoordinatorEvent, CoordinatorReply,
+                        TaskState};
+use hulk::models::ModelSpec;
+use hulk::util::rng::Rng;
+
+#[test]
+fn full_leader_session_over_channels() {
+    let coordinator = Coordinator::new(Fleet::paper_evaluation(0));
+    let (tx, rx, handle) = coordinator.spawn();
+
+    // Submit the paper's four models.
+    let mut admitted = 0;
+    for model in ModelSpec::paper_four() {
+        tx.send(CoordinatorEvent::Submit { model, iterations: 20 }).unwrap();
+        match rx.recv().unwrap() {
+            CoordinatorReply::Admitted { .. } => admitted += 1,
+            CoordinatorReply::Queued { .. } => {}
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    assert!(admitted >= 3, "at least 3 of 4 tasks must admit immediately");
+
+    // Fail two machines.
+    for machine in [0, 17] {
+        tx.send(CoordinatorEvent::MachineFailed { machine }).unwrap();
+        assert!(matches!(rx.recv().unwrap(),
+                         CoordinatorReply::Recovered { .. }));
+    }
+
+    // Scale out node 45-style.
+    tx.send(CoordinatorEvent::ScaleOut {
+        region: Region::Rome,
+        gpu: GpuModel::V100,
+        n_gpus: 12,
+    })
+    .unwrap();
+    match rx.recv().unwrap() {
+        CoordinatorReply::ScaledOut { machine_id, .. } => {
+            assert_eq!(machine_id, 46);
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    // Run to completion.
+    tx.send(CoordinatorEvent::Tick { iterations: 20 }).unwrap();
+    match rx.recv().unwrap() {
+        CoordinatorReply::Ticked { completed } => {
+            assert!(!completed.is_empty(), "tasks must complete");
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+
+    tx.send(CoordinatorEvent::Shutdown).unwrap();
+    match rx.recv().unwrap() {
+        CoordinatorReply::Stopped { metrics_render } => {
+            assert!(metrics_render.contains("tasks_submitted"));
+            assert!(metrics_render.contains("machine_failures"));
+        }
+        other => panic!("unexpected {other:?}"),
+    }
+    handle.join().unwrap();
+}
+
+#[test]
+fn randomized_failure_storm_never_corrupts_state() {
+    let mut c = Coordinator::new(Fleet::paper_evaluation(1));
+    for model in ModelSpec::paper_four() {
+        c.handle(CoordinatorEvent::Submit { model, iterations: 1_000 });
+    }
+    let mut rng = Rng::new(99);
+    let n = c.fleet.len();
+    for _ in 0..15 {
+        let victim = rng.below(n);
+        c.handle(CoordinatorEvent::MachineFailed { machine: victim });
+        c.assignment
+            .validate_disjoint(c.fleet.len())
+            .expect("disjointness violated during failure storm");
+    }
+    // Every surviving running task still has machines.
+    for t in &c.tasks {
+        if t.state == TaskState::Running {
+            assert!(!t.machines.is_empty());
+        }
+    }
+}
+
+#[test]
+fn queued_tasks_eventually_run_as_capacity_frees() {
+    let mut c = Coordinator::new(Fleet::paper_evaluation(2));
+    // Saturate with OPT-scale tasks.
+    let mut statuses = Vec::new();
+    for _ in 0..4 {
+        let reply = c.handle(CoordinatorEvent::Submit {
+            model: ModelSpec::opt_175b(),
+            iterations: 10,
+        });
+        statuses.push(matches!(reply, CoordinatorReply::Admitted { .. }));
+    }
+    let initially_admitted = statuses.iter().filter(|&&a| a).count();
+    assert!(initially_admitted >= 1);
+    if initially_admitted == 4 {
+        return; // fleet swallowed everything; nothing queued to check
+    }
+    // Complete the running tasks; queued ones must then admit.
+    c.handle(CoordinatorEvent::Tick { iterations: 10 });
+    let running_after = c
+        .tasks
+        .iter()
+        .filter(|t| t.state == TaskState::Running)
+        .count();
+    assert!(running_after >= 1,
+            "queue must drain into freed capacity");
+}

@@ -1,0 +1,152 @@
+//! Property-based tests over the coordinator-side invariants (routing,
+//! grouping, recovery, simulation) using the `hulk::prop` mini-harness —
+//! random fleets, workloads and failure sequences.
+
+use hulk::cluster::Fleet;
+use hulk::coordinator::{recover, RecoveryAction};
+use hulk::graph::{node_features, ClusterGraph, FEATURE_DIM};
+use hulk::models::ModelSpec;
+use hulk::parallel::{pipeline_cost, ring_allreduce_ms, PipelinePlan};
+use hulk::prop::forall;
+use hulk::scheduler::{oracle_partition, OracleOptions};
+use hulk::sim::simulate_pipeline;
+use hulk::systems::hulk::chain_order;
+
+fn random_workload(g: &mut hulk::prop::Gen) -> Vec<ModelSpec> {
+    let catalog = [
+        ModelSpec::t5_11b(),
+        ModelSpec::gpt2_xl(),
+        ModelSpec::bert_large(),
+        ModelSpec::roberta_large(),
+    ];
+    let n = g.usize_in(1..=3);
+    (0..n).map(|i| catalog[(i * 2 + g.usize_in(0..=1)) % 4].clone())
+        .collect()
+}
+
+#[test]
+fn oracle_assignments_always_disjoint_and_memory_feasible() {
+    forall("oracle invariants", 40, |g| {
+        let n = g.usize_in(6..=24);
+        let fleet = Fleet::random(n, g.usize_in(0..=100_000) as u64);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let tasks = random_workload(g);
+        let total_need: f64 = tasks.iter().map(|t| t.train_gb()).sum();
+        if total_need > fleet.total_memory_gb() * 0.8 {
+            return true; // infeasible workload: vacuous case
+        }
+        let a = oracle_partition(&fleet, &graph, &tasks,
+                                 &OracleOptions::default());
+        a.validate_disjoint(fleet.len()).is_ok()
+            && a.validate_memory(&fleet, &tasks).is_ok()
+    });
+}
+
+#[test]
+fn recovery_preserves_disjointness_under_any_failure() {
+    forall("recovery invariants", 40, |g| {
+        let n = g.usize_in(8..=24);
+        let fleet = Fleet::random(n, g.usize_in(0..=100_000) as u64);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let tasks = vec![ModelSpec::gpt2_xl(), ModelSpec::bert_large()];
+        if fleet.total_memory_gb() < 100.0 {
+            return true;
+        }
+        let mut a = oracle_partition(&fleet, &graph, &tasks,
+                                     &OracleOptions::default());
+        let victim = g.usize_in(0..=n - 1);
+        let action = recover(&fleet, &graph, &mut a, &tasks, victim);
+        // Whatever the action, disjointness must hold and (except for
+        // Requeue/NoOp) the failed machine must be gone from groups.
+        let disjoint = a.validate_disjoint(fleet.len()).is_ok();
+        let gone = match action {
+            RecoveryAction::NoOp => true,
+            _ => a.task_of(victim).is_none(),
+        };
+        disjoint && gone
+    });
+}
+
+#[test]
+fn chain_order_is_always_a_permutation() {
+    forall("chain order permutation", 60, |g| {
+        let n = g.usize_in(4..=20);
+        let fleet = Fleet::random(n, g.usize_in(0..=1_000_000) as u64);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let k = g.usize_in(1..=n);
+        let group: Vec<usize> = (0..k).collect();
+        let chain = chain_order(&graph, &group);
+        let mut sorted = chain.clone();
+        sorted.sort_unstable();
+        sorted == group
+    });
+}
+
+#[test]
+fn ring_allreduce_monotone_in_bytes_and_nodes() {
+    forall("allreduce monotonicity", 40, |g| {
+        let fleet = Fleet::paper_evaluation(g.usize_in(0..=10) as u64);
+        let k = g.usize_in(2..=12);
+        let nodes: Vec<usize> = (0..k).collect();
+        let b1 = g.f64_in(1e3, 1e8);
+        let b2 = b1 * g.f64_in(1.5, 10.0);
+        match (ring_allreduce_ms(&fleet, &nodes, b1),
+               ring_allreduce_ms(&fleet, &nodes, b2)) {
+            (Some(t1), Some(t2)) => t2 >= t1,
+            _ => true, // blocked ring: vacuous
+        }
+    });
+}
+
+#[test]
+fn pipeline_cost_positive_and_sim_agrees_when_feasible() {
+    forall("pipeline cost sanity", 25, |g| {
+        let fleet = Fleet::paper_evaluation(g.usize_in(0..=5) as u64);
+        let model = ModelSpec::gpt2_xl();
+        let k = g.usize_in(2..=10);
+        let stages: Vec<usize> = (0..k).collect();
+        let plan = PipelinePlan::proportional(&fleet, stages, &model);
+        let cost = pipeline_cost(&fleet, &plan, &model);
+        if !cost.is_feasible() {
+            return true;
+        }
+        if cost.comm_ms < 0.0 || cost.comp_ms <= 0.0 {
+            return false;
+        }
+        let sim = simulate_pipeline(&fleet, &plan, &model, false, None);
+        sim.makespan_ms.is_finite() && sim.makespan_ms > 0.0
+    });
+}
+
+#[test]
+fn features_are_bounded_for_any_fleet() {
+    forall("feature ranges", 60, |g| {
+        let n = g.usize_in(1..=40);
+        let fleet = Fleet::random(n, g.usize_in(0..=1_000_000) as u64);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let feats = node_features(&fleet.machines, &graph, 64);
+        feats.len() == 64 * FEATURE_DIM
+            && feats.iter().all(|&v| (0.0..=2.0).contains(&v))
+    });
+}
+
+#[test]
+fn padded_adjacency_keeps_symmetry() {
+    forall("padding symmetry", 60, |g| {
+        let n = g.usize_in(1..=40);
+        let fleet = Fleet::random(n, g.usize_in(0..=1_000_000) as u64);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let adj = graph.padded_adj(64);
+        for i in 0..64 {
+            for j in 0..64 {
+                if (adj[i * 64 + j] - adj[j * 64 + i]).abs() > 1e-6 {
+                    return false;
+                }
+            }
+            if adj[i * 64 + i] != 0.0 {
+                return false;
+            }
+        }
+        true
+    });
+}

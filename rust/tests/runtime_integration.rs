@@ -1,0 +1,235 @@
+//! Integration tests over the real AOT artifacts (require
+//! `make artifacts`; each test skips with a notice when artifacts are
+//! absent so `cargo test` stays green on a fresh checkout).
+//!
+//! These are the cross-language correctness signal: the PJRT-executed
+//! HLO must agree with the pure-Rust reference forward, and training
+//! through the artifact must learn.
+
+use std::path::Path;
+
+use hulk::cluster::Fleet;
+use hulk::gnn::reference::{RefGcn, RefGcnConfig};
+use hulk::gnn::trainer::evaluate_accuracy;
+use hulk::gnn::{make_dataset, train_gcn, TrainerOptions};
+use hulk::graph::{node_features, ClusterGraph};
+use hulk::runtime::client::TrainState;
+use hulk::runtime::{GcnRuntime, Manifest};
+
+fn runtime() -> Option<GcnRuntime> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.kv").exists() {
+        eprintln!("[skip] artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(GcnRuntime::load(Path::new(&dir)).expect("artifacts load"))
+}
+
+#[test]
+fn manifest_contract_matches_reference_config() {
+    let Some(rt) = runtime() else { return };
+    let cfg = RefGcnConfig::default_artifact();
+    assert_eq!(rt.manifest.n, cfg.n);
+    assert_eq!(rt.manifest.f, cfg.f);
+    assert_eq!(rt.manifest.h, cfg.h);
+    assert_eq!(rt.manifest.h2, cfg.h2);
+    assert_eq!(rt.manifest.c, cfg.c);
+    assert_eq!(rt.manifest.p, cfg.n_params());
+}
+
+#[test]
+fn pjrt_forward_matches_pure_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.manifest.load_init_params().unwrap();
+    let fleet = Fleet::paper_evaluation(0);
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let slots = rt.manifest.n;
+    let adj = graph.padded_adj(slots);
+    let feats = node_features(&fleet.machines, &graph, slots);
+    let mask = graph.padded_mask(slots);
+
+    let pjrt = rt.forward(&params, &adj, &feats, &mask).unwrap();
+    let refm = RefGcn::new(RefGcnConfig::default_artifact(), &params);
+    let want = refm.forward(&adj, &feats, &mask);
+
+    assert_eq!(pjrt.len(), slots * rt.manifest.c);
+    let mut max_diff = 0.0f32;
+    for (a, b) in pjrt.iter().zip(&want.data) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 2e-3,
+            "PJRT vs reference forward diverged: max |Δ| = {max_diff}");
+}
+
+#[test]
+fn train_step_learns_on_oracle_labels() {
+    let Some(rt) = runtime() else { return };
+    let dataset = make_dataset(8, rt.manifest.n, 3);
+    let mut state = TrainState::fresh(rt.manifest.load_init_params().unwrap());
+    let opts = TrainerOptions { steps: 40, lr: 0.01, log_every: 0 };
+    let curve = train_gcn(&rt, &mut state, &dataset, &opts).unwrap();
+    let first = curve.first().unwrap();
+    let best_acc = curve.iter().map(|p| p.acc).fold(0.0f32, f32::max);
+    // Initial loss ≈ ln 8 (8 classes); training must improve accuracy
+    // well beyond the ~1/8 random baseline.
+    assert!((first.loss - (8.0f32).ln()).abs() < 1.0,
+            "initial loss {} far from ln(8)", first.loss);
+    assert!(best_acc > 0.5, "best acc only {best_acc}");
+    let min_loss = curve.iter().map(|p| p.loss).fold(f32::MAX, f32::min);
+    assert!(min_loss < first.loss * 0.7,
+            "loss did not decrease: {} → {}", first.loss, min_loss);
+}
+
+#[test]
+fn trained_params_generalize_to_heldout_graphs() {
+    let Some(rt) = runtime() else { return };
+    let train_set = make_dataset(24, rt.manifest.n, 5);
+    let test_set = make_dataset(8, rt.manifest.n, 6);
+    let mut state = TrainState::fresh(rt.manifest.load_init_params().unwrap());
+    let opts = TrainerOptions { steps: 120, lr: 0.01, log_every: 0 };
+    train_gcn(&rt, &mut state, &train_set, &opts).unwrap();
+    let acc = evaluate_accuracy(&rt, &state.params, &test_set).unwrap();
+    // Spare/task structure is region-correlated: the GCN must beat the
+    // random-guess baseline (1/8) by a wide margin out of sample.
+    assert!(acc > 0.4, "held-out accuracy only {acc:.3}");
+}
+
+#[test]
+fn forward_is_deterministic_across_calls() {
+    let Some(rt) = runtime() else { return };
+    let params = rt.manifest.load_init_params().unwrap();
+    let fleet = Fleet::paper_toy(0);
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let slots = rt.manifest.n;
+    let adj = graph.padded_adj(slots);
+    let feats = node_features(&fleet.machines, &graph, slots);
+    let mask = graph.padded_mask(slots);
+    let a = rt.forward(&params, &adj, &feats, &mask).unwrap();
+    let b = rt.forward(&params, &adj, &feats, &mask).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn probe_execute_b_output_arity() {
+    // Probe: does the PJRT executable untuple the 5-tuple root into 5
+    // buffers (enabling a device-resident training loop)?
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest.n;
+    let dataset = make_dataset(1, n, 0);
+    let mut state = TrainState::fresh(rt.manifest.load_init_params().unwrap());
+    let g = &dataset[0];
+    let arity = rt
+        .probe_train_output_arity(&mut state, &g.adj, &g.feats, &g.labels,
+                                  &g.mask)
+        .unwrap();
+    eprintln!("execute outputs arity = {arity}");
+    assert!(arity == 1 || arity == 5);
+}
+
+#[test]
+#[ignore] // perf probe: run explicitly with --ignored
+fn perf_probe_train_step_breakdown() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest.n;
+    let dataset = make_dataset(1, n, 0);
+    let g = &dataset[0];
+    let mut state = TrainState::fresh(rt.manifest.load_init_params().unwrap());
+    // Warmup.
+    for _ in 0..5 {
+        rt.train_step(&mut state, &g.adj, &g.feats, &g.labels, &g.mask, 0.01)
+            .unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..100 {
+        rt.train_step(&mut state, &g.adj, &g.feats, &g.labels, &g.mask, 0.01)
+            .unwrap();
+    }
+    let full = t0.elapsed().as_secs_f64() * 10.0; // ms/step
+    eprintln!("full train_step: {full:.3} ms/step");
+
+    // Execute-only: pre-built literals, skip state readback.
+    let p = rt.manifest.p as i64;
+    let nn = n as i64;
+    let f = rt.manifest.f as i64;
+    let args = [
+        hulk::runtime::literal::f32_literal(&state.params, &[p]).unwrap(),
+        hulk::runtime::literal::f32_literal(&state.m, &[p]).unwrap(),
+        hulk::runtime::literal::f32_literal(&state.v, &[p]).unwrap(),
+        hulk::runtime::literal::f32_literal(&[1.0], &[1]).unwrap(),
+        hulk::runtime::literal::f32_literal(&g.adj, &[nn, nn]).unwrap(),
+        hulk::runtime::literal::f32_literal(&g.feats, &[nn, f]).unwrap(),
+        hulk::runtime::literal::i32_literal(&g.labels, &[nn]).unwrap(),
+        hulk::runtime::literal::f32_literal(&g.mask, &[nn]).unwrap(),
+        hulk::runtime::literal::f32_literal(&[0.01], &[1]).unwrap(),
+    ];
+    let exe = rt.train_executable();
+    let t0 = std::time::Instant::now();
+    for _ in 0..100 {
+        let _ = exe.execute(&args).unwrap();
+    }
+    let exec_only = t0.elapsed().as_secs_f64() * 10.0;
+    eprintln!("execute-only:   {exec_only:.3} ms/step");
+
+    let t0 = std::time::Instant::now();
+    for _ in 0..100 {
+        let out = exe.execute(&args).unwrap()[0][0].to_literal_sync().unwrap();
+        let _ = out.to_tuple().unwrap();
+    }
+    let exec_sync = t0.elapsed().as_secs_f64() * 10.0;
+    eprintln!("execute+sync:   {exec_sync:.3} ms/step");
+}
+
+#[test]
+fn fast_path_matches_slow_path() {
+    // The literal-resident hot path must be numerically identical to the
+    // vector round-trip path.
+    let Some(rt) = runtime() else { return };
+    let dataset = make_dataset(3, rt.manifest.n, 7);
+    let init = rt.manifest.load_init_params().unwrap();
+
+    let mut slow = TrainState::fresh(init.clone());
+    for s in 0..9usize {
+        let g = &dataset[s % dataset.len()];
+        rt.train_step(&mut slow, &g.adj, &g.feats, &g.labels, &g.mask, 0.01)
+            .unwrap();
+    }
+
+    let mut fast = TrainState::fresh(init);
+    let opts = TrainerOptions { steps: 9, lr: 0.01, log_every: 0 };
+    train_gcn(&rt, &mut fast, &dataset, &opts).unwrap();
+
+    assert_eq!(slow.step, fast.step);
+    let max_diff = slow
+        .params
+        .iter()
+        .zip(&fast.params)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff == 0.0, "fast/slow paths diverged: {max_diff}");
+}
+
+#[test]
+#[ignore] // perf probe: run explicitly with --ignored
+fn perf_probe_fast_vs_slow_train() {
+    let Some(rt) = runtime() else { return };
+    let dataset = make_dataset(1, rt.manifest.n, 0);
+    let g = &dataset[0];
+    let mut state = TrainState::fresh(rt.manifest.load_init_params().unwrap());
+    for _ in 0..5 {
+        rt.train_step(&mut state, &g.adj, &g.feats, &g.labels, &g.mask, 0.01)
+            .unwrap();
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..100 {
+        rt.train_step(&mut state, &g.adj, &g.feats, &g.labels, &g.mask, 0.01)
+            .unwrap();
+    }
+    eprintln!("slow path: {:.3} ms/step",
+              t0.elapsed().as_secs_f64() * 10.0);
+
+    let opts = TrainerOptions { steps: 100, lr: 0.01, log_every: 0 };
+    let t0 = std::time::Instant::now();
+    train_gcn(&rt, &mut state, &dataset, &opts).unwrap();
+    eprintln!("fast path: {:.3} ms/step",
+              t0.elapsed().as_secs_f64() * 10.0);
+}

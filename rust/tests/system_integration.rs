@@ -1,0 +1,159 @@
+//! System-level integration: the full planning path (fleet → graph →
+//! oracle/Algorithm 1 → pipelines → costs) across seeds and workloads —
+//! the artifact-free half of the paper's evaluation.
+
+use hulk::cluster::Fleet;
+use hulk::graph::ClusterGraph;
+use hulk::models::ModelSpec;
+use hulk::parallel::pipeline_cost;
+use hulk::sim::simulate_pipeline;
+use hulk::systems::{evaluate_all, hulk_plan, HulkSplitterKind, SystemKind};
+
+#[test]
+fn fig8_shape_reproduces_across_seeds() {
+    for seed in [0, 1, 2] {
+        let fleet = Fleet::paper_evaluation(seed);
+        let eval = evaluate_all(&fleet, &ModelSpec::paper_four(),
+                                HulkSplitterKind::Oracle)
+            .unwrap();
+        for (m, row) in eval.costs.iter().enumerate() {
+            let hulk = row[3];
+            assert!(hulk.is_feasible(),
+                    "seed {seed}: hulk infeasible for {}",
+                    eval.models[m].name);
+            assert!(hulk.comm_ms < row[1].comm_ms,
+                    "seed {seed}: hulk comm must beat System B");
+            assert!(hulk.comm_ms < row[2].comm_ms,
+                    "seed {seed}: hulk comm must beat System C");
+        }
+        let imp = eval.hulk_improvement();
+        assert!(imp > 0.20,
+                "seed {seed}: improvement {:.1}% below paper's 20%",
+                imp * 100.0);
+    }
+}
+
+#[test]
+fn fig10_six_models_also_hold() {
+    let fleet = Fleet::paper_evaluation(0);
+    let eval = evaluate_all(&fleet, &ModelSpec::paper_six(),
+                            HulkSplitterKind::Oracle)
+        .unwrap();
+    assert_eq!(eval.models.len(), 6);
+    let imp = eval.hulk_improvement();
+    assert!(imp > 0.20, "fig10 improvement {:.1}%", imp * 100.0);
+    // System A infeasible exactly for the models that don't fit one
+    // machine (OPT-175B).
+    for (m, row) in eval.costs.iter().enumerate() {
+        let a_feasible = row[0].is_feasible();
+        let fits = eval.models[m].train_gb() <= 640.0;
+        assert_eq!(a_feasible, fits, "System A feasibility mismatch for {}",
+                   eval.models[m].name);
+    }
+}
+
+#[test]
+fn system_ordering_is_paper_consistent() {
+    // For every model: Hulk total ≤ System B total (grouping can only
+    // help a pipeline), and System C is the worst on comm.
+    let fleet = Fleet::paper_evaluation(0);
+    let eval = evaluate_all(&fleet, &ModelSpec::paper_four(),
+                            HulkSplitterKind::Oracle)
+        .unwrap();
+    for row in &eval.costs {
+        let (b, c, hulk) = (row[1], row[2], row[3]);
+        assert!(hulk.total_ms() <= b.total_ms() * 1.05);
+        assert!(c.comm_ms >= b.comm_ms,
+                "Megatron TP must out-communicate GPipe over WAN");
+    }
+}
+
+#[test]
+fn hulk_pipelines_simulate_consistently() {
+    // The DES simulator and analytic model must agree within a small
+    // factor on every Hulk group (they model the same schedule).
+    let fleet = Fleet::paper_evaluation(0);
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let plan = hulk_plan(&fleet, &graph, &ModelSpec::paper_four(),
+                         HulkSplitterKind::Oracle)
+        .unwrap();
+    for (t, task) in plan.tasks.iter().enumerate() {
+        let analytic = pipeline_cost(&fleet, &plan.pipelines[t], task);
+        let sim = simulate_pipeline(&fleet, &plan.pipelines[t], task,
+                                    false, None);
+        assert!(sim.makespan_ms.is_finite());
+        let ratio = sim.makespan_ms / analytic.total_ms();
+        assert!((0.2..5.0).contains(&ratio),
+                "{}: sim/analytic ratio {ratio}", task.name);
+    }
+}
+
+#[test]
+fn spares_exist_for_recovery_on_four_task_workload() {
+    let fleet = Fleet::paper_evaluation(0);
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let plan = hulk_plan(&fleet, &graph, &ModelSpec::paper_four(),
+                         HulkSplitterKind::Oracle)
+        .unwrap();
+    let assigned: usize =
+        plan.assignment.groups.iter().map(Vec::len).sum();
+    assert!(assigned < fleet.len(),
+            "paper Table 2 leaves spare machines (39/46 assigned); \
+             we assigned {assigned}/46");
+}
+
+#[test]
+fn every_system_name_is_reported() {
+    let fleet = Fleet::paper_evaluation(0);
+    let eval = evaluate_all(&fleet, &ModelSpec::paper_four(),
+                            HulkSplitterKind::Oracle)
+        .unwrap();
+    let render = eval.render();
+    for kind in SystemKind::ALL {
+        assert!(render.contains(kind.name()), "missing {}", kind.name());
+    }
+}
+
+#[test]
+fn gnn_splitter_with_reference_classifier_plans_feasibly() {
+    // Artifact-free GNN path: an untrained reference-forward classifier
+    // must still produce a *valid* plan (Algorithm 1 enforces the memory
+    // thresholds regardless of classification quality).
+    use hulk::gnn::reference::{RefGcn, RefGcnConfig};
+    use hulk::gnn::Classifier;
+    use hulk::util::rng::Rng;
+
+    let cfg = RefGcnConfig { n: 64, f: 16, h: 16, h2: 8, c: 8 };
+    let mut rng = Rng::new(42);
+    let params: Vec<f32> =
+        (0..cfg.n_params()).map(|_| (rng.normal() * 0.1) as f32).collect();
+    let classifier = Classifier::Reference(RefGcn::new(cfg, &params));
+
+    let fleet = Fleet::paper_evaluation(0);
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let plan = hulk_plan(
+        &fleet,
+        &graph,
+        &ModelSpec::paper_four(),
+        HulkSplitterKind::Gnn { classifier: &classifier, params: &params },
+    )
+    .expect("plan");
+    plan.assignment.validate_disjoint(fleet.len()).unwrap();
+    plan.assignment.validate_memory(&fleet, &plan.tasks).unwrap();
+    for (t, task) in plan.tasks.iter().enumerate() {
+        let c = pipeline_cost(&fleet, &plan.pipelines[t], task);
+        assert!(c.is_feasible(), "{} infeasible under GNN plan", task.name);
+    }
+}
+
+#[test]
+fn oracle_grouping_beats_chance_by_a_wide_margin() {
+    use hulk::gnn::cost_vs_random;
+    let fleet = Fleet::paper_evaluation(0);
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let plan = hulk_plan(&fleet, &graph, &ModelSpec::paper_four(),
+                         HulkSplitterKind::Oracle)
+        .unwrap();
+    let ratio = cost_vs_random(&fleet, &graph, &plan.assignment, 3);
+    assert!(ratio < 0.8, "oracle grouping only {ratio:.2}× of chance");
+}
