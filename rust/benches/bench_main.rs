@@ -5,9 +5,7 @@
 //! `cargo bench --bench bench_main -- fig8 micro`.
 
 use hulk::cli::Cli;
-
-#[path = "../src/bench_impl.rs"]
-mod bench_impl;
+use hulk::scenarios::bench;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -18,5 +16,5 @@ fn main() -> anyhow::Result<()> {
         .cloned()
         .collect();
     let cli = Cli::parse(&["bench".to_string()])?;
-    bench_impl::run(&names, &cli)
+    bench::run(&names, &cli)
 }

@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
         if let CoordinatorReply::Recovered { action } = coordinator
             .handle(CoordinatorEvent::MachineFailed { machine: victim })
         {
-            println!("  machine {victim:>2} failed → {action}");
+            println!("  machine {victim:>2} failed → {action:?}");
         }
     }
     coordinator

@@ -2,9 +2,19 @@
 //! registry has no criterion). Same discipline: warmup, fixed sample count,
 //! mean/p50/p95/stddev, and a one-line-per-benchmark report. Used by
 //! `rust/benches/bench_main.rs` (`cargo bench`) and the `hulk bench` CLI.
+//!
+//! Also the machine-readable reporting layer: [`BenchEntry`] rows in
+//! github-action-benchmark's `customSmallerIsBetter` shape, collected by
+//! [`BenchReport`] into `BENCH_<suite>.json` files whose outer structure
+//! mirrors `window.BENCHMARK_DATA` (so runs can accumulate into a perf
+//! trajectory; see DESIGN.md §Reporting).
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use anyhow::{Context as _, Result};
+
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use crate::util::table::Table;
 
@@ -82,6 +92,22 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// Collected results as machine-readable entries (mean ms per op),
+    /// names prefixed `"<prefix>/"` when `prefix` is non-empty.
+    pub fn entries(&self, prefix: &str) -> Vec<BenchEntry> {
+        self.results
+            .iter()
+            .map(|r| {
+                let name = if prefix.is_empty() {
+                    r.name.clone()
+                } else {
+                    format!("{prefix}/{}", r.name)
+                };
+                BenchEntry::new(name, r.summary.mean, "ms")
+            })
+            .collect()
+    }
+
     /// Render all collected results as a table (for report files).
     pub fn report(&self) -> String {
         let mut t = Table::new(&["benchmark", "mean_ms", "p50_ms", "p95_ms",
@@ -97,6 +123,102 @@ impl Bencher {
             ]);
         }
         t.render()
+    }
+}
+
+/// One benchmark datum in github-action-benchmark's
+/// `customSmallerIsBetter` row shape: `{name, value, unit}`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchEntry {
+    /// Hierarchical name, e.g. `table1_fleet/hulk/opt_175b/iter_ms`.
+    pub name: String,
+    pub value: f64,
+    /// `"ms"`, `"count"`, `"%"`, …; entries whose unit is `%` are
+    /// informational (bigger-is-better) rather than tracked regressions.
+    pub unit: String,
+}
+
+impl BenchEntry {
+    pub fn new(name: impl Into<String>, value: f64,
+               unit: impl Into<String>) -> BenchEntry
+    {
+        BenchEntry { name: name.into(), value, unit: unit.into() }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("name", self.name.as_str().into());
+        obj.set("value", self.value.into());
+        obj.set("unit", self.unit.as_str().into());
+        obj
+    }
+}
+
+/// A named collection of [`BenchEntry`] rows, serialized as
+/// `BENCH_<suite>.json`. The outer object follows the
+/// `window.BENCHMARK_DATA` layout (`entries.<suite>[0].benches` holds the
+/// `customSmallerIsBetter` rows) so files concatenate directly into a
+/// benchmark-action dashboard. Output contains no wall-clock fields: two
+/// runs of a deterministic suite produce byte-identical files.
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub suite: String,
+    pub entries: Vec<BenchEntry>,
+}
+
+impl BenchReport {
+    pub fn new(suite: &str) -> BenchReport {
+        BenchReport { suite: suite.to_string(), entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, entry: BenchEntry) {
+        self.entries.push(entry);
+    }
+
+    pub fn extend(&mut self, entries: impl IntoIterator<Item = BenchEntry>) {
+        self.entries.extend(entries);
+    }
+
+    /// `BENCH_<suite>.json`.
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.suite)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut benches = Json::arr();
+        for e in &self.entries {
+            benches.push(e.to_json());
+        }
+        let mut run = Json::obj();
+        let mut commit = Json::obj();
+        commit.set("id", "workspace".into());
+        commit.set("message", self.suite.as_str().into());
+        run.set("commit", commit);
+        run.set("date", 0usize.into());
+        run.set("tool", "customSmallerIsBetter".into());
+        run.set("benches", benches);
+        let mut series = Json::arr();
+        series.push(run);
+        let mut entries = Json::obj();
+        entries.set(&self.suite, series);
+        let mut root = Json::obj();
+        root.set("lastUpdate", 0usize.into());
+        root.set("repoUrl", "".into());
+        root.set("entries", entries);
+        root
+    }
+
+    /// Write `BENCH_<suite>.json` under `dir` (created if missing);
+    /// returns the file path.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let path = dir.join(self.file_name());
+        let mut text = self.to_json().render();
+        text.push('\n');
+        std::fs::write(&path, text)
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
     }
 }
 
@@ -133,5 +255,46 @@ mod tests {
         b.bench("b", || 2);
         let rep = b.report();
         assert!(rep.contains("a") && rep.contains("b"));
+    }
+
+    #[test]
+    fn bencher_entries_carry_prefix_and_unit() {
+        let mut b = Bencher::new(BenchConfig {
+            warmup_iters: 0,
+            samples: 2,
+            iters_per_sample: 1,
+        });
+        b.bench("spin", || 1);
+        let entries = b.entries("micro");
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].name, "micro/spin");
+        assert_eq!(entries[0].unit, "ms");
+        assert!(entries[0].value >= 0.0);
+        assert_eq!(b.entries("")[0].name, "spin");
+    }
+
+    #[test]
+    fn report_json_has_benchmark_data_shape() {
+        let mut report = BenchReport::new("scenarios");
+        report.push(BenchEntry::new("s/hulk/m/iter_ms", 12.5, "ms"));
+        report.push(BenchEntry::new("s/system_a/m/iter_ms", 20.0, "ms"));
+        let text = report.to_json().render();
+        assert!(text.contains("\"entries\":{\"scenarios\":["));
+        assert!(text.contains("\"tool\":\"customSmallerIsBetter\""));
+        assert!(text.contains(
+            "{\"name\":\"s/hulk/m/iter_ms\",\"value\":12.5,\"unit\":\"ms\"}"
+        ));
+        assert_eq!(report.file_name(), "BENCH_scenarios.json");
+    }
+
+    #[test]
+    fn report_write_roundtrip() {
+        let mut report = BenchReport::new("benchkit_test");
+        report.push(BenchEntry::new("x", 1.0, "ms"));
+        let dir = std::env::temp_dir().join("hulk_benchkit_report_test");
+        let path = report.write(&dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"name\":\"x\""));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

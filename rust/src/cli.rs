@@ -1,16 +1,38 @@
 //! Hand-rolled CLI parsing (clap is not in the offline registry).
-//!
-//! ```text
-//! hulk info                         fleet + model inventory
-//! hulk assign [--seed S] [--tasks 4|6] [--gnn]
-//! hulk train-gnn [--steps N] [--lr F] [--dataset N]
-//! hulk simulate [--failures N] [--seed S]
-//! hulk bench <table1|table2|fig4|fig5|fig6|fig8|fig9|fig10|ablation|micro|all>
-//! ```
+//! [`usage`] is the single source of the grammar, printed by
+//! `hulk help` and documented in README.md.
 
 use std::collections::HashMap;
 
 use anyhow::{bail, Result};
+
+/// The full CLI grammar (printed by `hulk help`).
+pub fn usage() -> &'static str {
+    "\
+usage: hulk <subcommand> [flags]
+
+  info       [--seed S]
+             Fleet inventory + model catalog.
+  assign     [--seed S] [--tasks 4|6] [--gnn] [--gnn-steps N]
+             Run Hulk task assignment (Table 2), oracle or GNN splitter.
+  train-gnn  [--steps N] [--lr F] [--dataset N] [--seed S]
+             Train the GCN from Rust through PJRT (Fig. 4); needs
+             `make artifacts` and the real xla crate.
+  simulate   [--failures N] [--seed S]
+             Multi-task leader-loop simulation with machine failures.
+  bench      <table1|logs|table2|fig4|fig5|fig6|fig8|fig9|fig10|
+              ablation|sweep|micro|all>… [--seed S] [--json] [--out DIR]
+             Regenerate paper tables/figures; `micro --json` writes
+             BENCH_micro.json.
+  scenarios  list
+  scenarios  run <name…|all> [--seed S] [--json] [--out DIR]
+             Run named scenarios (every one covers Systems A/B/C/Hulk
+             deterministically from the seed); `--json` writes
+             BENCH_scenarios.json in the customSmallerIsBetter shape.
+  help       Print this grammar.
+
+Flags are `--key value`, `--key=value`, or bare `--key` for booleans."
+}
 
 /// Parsed command line: subcommand + flags.
 #[derive(Clone, Debug, PartialEq)]
@@ -20,12 +42,20 @@ pub struct Cli {
     flags: HashMap<String, String>,
 }
 
+/// Flags that are always boolean: they never consume the following
+/// argument, so `hulk scenarios run --json table1_fleet` keeps
+/// `table1_fleet` as a positional instead of treating it as the value
+/// of `--json`. (Use `--flag=value` to force a value for one of these.)
+const BOOL_FLAGS: [&str; 2] = ["gnn", "json"];
+
 impl Cli {
     /// Parse `args` (without argv[0]). Flags are `--key value` or
-    /// `--key=value`; bare `--key` is a boolean `true`.
+    /// `--key=value`; bare `--key` (and every [`BOOL_FLAGS`] name) is a
+    /// boolean `true`.
     pub fn parse(args: &[String]) -> Result<Cli> {
         let Some(command) = args.first() else {
-            bail!("usage: hulk <info|assign|train-gnn|simulate|bench> …");
+            bail!("usage: hulk <info|assign|train-gnn|simulate|bench|\
+                   scenarios|help> … (see `hulk help`)");
         };
         let mut flags = HashMap::new();
         let mut positional = Vec::new();
@@ -35,6 +65,8 @@ impl Cli {
             if let Some(key) = a.strip_prefix("--") {
                 if let Some((k, v)) = key.split_once('=') {
                     flags.insert(k.to_string(), v.to_string());
+                } else if BOOL_FLAGS.contains(&key) {
+                    flags.insert(key.to_string(), "true".to_string());
                 } else if i + 1 < args.len()
                     && !args[i + 1].starts_with("--")
                 {
@@ -117,5 +149,27 @@ mod tests {
     #[test]
     fn empty_args_error() {
         assert!(Cli::parse(&[]).is_err());
+    }
+
+    #[test]
+    fn boolean_flags_do_not_swallow_positionals() {
+        let cli =
+            Cli::parse(&argv("scenarios run --json table1_fleet")).unwrap();
+        assert_eq!(cli.positional, vec!["run", "table1_fleet"]);
+        assert!(cli.flag_bool("json"));
+        // --gnn mid-argument-list likewise leaves positionals alone.
+        let cli = Cli::parse(&argv("bench --gnn fig8")).unwrap();
+        assert_eq!(cli.positional, vec!["fig8"]);
+        assert!(cli.flag_bool("gnn"));
+    }
+
+    #[test]
+    fn usage_covers_every_subcommand() {
+        let text = usage();
+        for sub in ["info", "assign", "train-gnn", "simulate", "bench",
+                    "scenarios", "help"] {
+            assert!(text.contains(sub), "usage() missing {sub}");
+        }
+        assert!(text.contains("BENCH_scenarios.json"));
     }
 }

@@ -51,7 +51,7 @@ impl Fleet {
     pub fn add_machine(&mut self, region: Region, gpu: GpuModel,
                        n_gpus: usize) -> usize
     {
-        let id = self.machines.len();
+        let id = self.len();
         self.machines.push(Machine::new(id, region, gpu, n_gpus));
         id
     }
@@ -66,7 +66,7 @@ impl Fleet {
         removed
     }
 
-    /// A copy with the WAN degraded by `factor` (systems::sweep).
+    /// A copy with the WAN degraded by `factor` (scenarios::sweep).
     pub fn with_wan_scaled(&self, factor: f64) -> Fleet {
         Fleet { machines: self.machines.clone(),
                 wan: self.wan.scaled(factor) }

@@ -42,7 +42,7 @@ pub enum CoordinatorEvent {
 pub enum CoordinatorReply {
     Admitted { task_id: usize, machines: Vec<usize> },
     Queued { task_id: usize },
-    Recovered { action: String },
+    Recovered { action: RecoveryAction },
     ScaledOut { machine_id: usize, joined_task: Option<usize> },
     Ticked { completed: Vec<usize> },
     Stopped { metrics_render: String },
@@ -201,9 +201,7 @@ impl Coordinator {
                                      &mut self.assignment, &models, machine);
                 // Mirror the assignment back into task state.
                 self.apply_assignment(&action);
-                CoordinatorReply::Recovered {
-                    action: format!("{action:?}"),
-                }
+                CoordinatorReply::Recovered { action }
             }
             CoordinatorEvent::ScaleOut { region, gpu, n_gpus } => {
                 let models = self.active_models();
@@ -396,7 +394,8 @@ mod tests {
             machine: victim });
         match reply {
             CoordinatorReply::Recovered { action } => {
-                assert!(!action.contains("NoOp"), "action {action}");
+                assert!(!matches!(action, RecoveryAction::NoOp),
+                        "action {action:?}");
             }
             other => panic!("{other:?}"),
         }

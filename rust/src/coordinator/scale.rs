@@ -49,7 +49,7 @@ pub fn scale_out(fleet: &mut Fleet, assignment: &mut Assignment,
             .sum();
         let pressure = tasks[t].train_gb() / group_gb; // >→ needier
         let score = added_lat / pressure.max(1e-3);
-        if best.map_or(true, |(_, s)| score < s) {
+        if best.is_none_or(|(_, s)| score < s) {
             best = Some((t, score));
         }
     }

@@ -19,7 +19,9 @@
 //! once; the `hulk` binary is self-contained afterwards.
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! `EXPERIMENTS.md` for paper-vs-measured results, and
+//! [`scenarios`] for the named-scenario registry behind
+//! `hulk scenarios run all --json`.
 
 pub mod benchkit;
 pub mod cli;
@@ -31,6 +33,7 @@ pub mod models;
 pub mod parallel;
 pub mod prop;
 pub mod runtime;
+pub mod scenarios;
 pub mod scheduler;
 pub mod sim;
 pub mod systems;

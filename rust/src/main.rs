@@ -1,14 +1,20 @@
 //! `hulk` — the Layer-3 coordinator binary.
 //!
-//! Subcommands:
+//! Subcommands (full grammar: `hulk help` / `cli::usage`):
 //! - `info`      — fleet inventory + model catalog.
 //! - `assign`    — run Hulk task assignment (Table 2), oracle or GNN.
 //! - `train-gnn` — train the GCN from Rust through PJRT (Fig. 4).
 //! - `simulate`  — multi-task leader-loop simulation with failures.
 //! - `bench`     — regenerate any paper table/figure (see benches/).
+//! - `scenarios` — list/run the named-scenario registry; `--json` emits
+//!   `BENCH_scenarios.json` through the benchkit reporting layer.
+//! - `help`      — print the CLI grammar.
+
+use std::path::PathBuf;
 
 use anyhow::Result;
 
+use hulk::benchkit::BenchReport;
 use hulk::cli::Cli;
 use hulk::cluster::Fleet;
 use hulk::coordinator::{Coordinator, CoordinatorEvent, CoordinatorReply};
@@ -29,8 +35,78 @@ fn main() -> Result<()> {
         "assign" => cmd_assign(&cli),
         "train-gnn" => cmd_train_gnn(&cli),
         "simulate" => cmd_simulate(&cli),
-        "bench" => hulk_benches::run(&cli.positional, &cli),
-        other => anyhow::bail!("unknown subcommand {other:?}"),
+        "bench" => hulk::scenarios::bench::run(&cli.positional, &cli),
+        "scenarios" => cmd_scenarios(&cli),
+        "help" | "--help" | "-h" => {
+            println!("{}", hulk::cli::usage());
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown subcommand {other:?} (see `hulk help`)"),
+    }
+}
+
+/// `hulk scenarios list` / `hulk scenarios run <name…|all>`.
+fn cmd_scenarios(cli: &Cli) -> Result<()> {
+    match cli.positional.first().map(String::as_str) {
+        Some("list") => {
+            let mut t = hulk::util::table::Table::new(
+                &["scenario", "description"]);
+            for s in hulk::scenarios::all_scenarios() {
+                t.row(&[s.name.to_string(), s.description.to_string()]);
+            }
+            println!("{}", t.render());
+            println!("run with: hulk scenarios run <name…|all> \
+                      [--seed S] [--json] [--out DIR]");
+            Ok(())
+        }
+        Some("run") => {
+            let seed = cli.flag_u64("seed", 0)?;
+            let names = &cli.positional[1..];
+            let ran_all =
+                names.is_empty() || names.iter().any(|n| n == "all");
+            let results = if ran_all {
+                hulk::scenarios::run_all(seed)?
+            } else {
+                let mut out = Vec::with_capacity(names.len());
+                for name in names {
+                    let scenario = hulk::scenarios::find_scenario(name)
+                        .ok_or_else(|| anyhow::anyhow!(
+                            "unknown scenario {name:?} (see `hulk \
+                             scenarios list`)"))?;
+                    out.push(scenario.run(seed)?);
+                }
+                out
+            };
+            for r in &results {
+                println!("\n================ {} (seed {seed}) \
+                          ================",
+                         r.scenario);
+                println!("{}", r.rendered);
+            }
+            if cli.flag_bool("json") {
+                let out = PathBuf::from(cli.flag("out").unwrap_or("."));
+                // A subset run gets its own file name so it cannot
+                // silently overwrite the full-suite report.
+                let suite = if ran_all {
+                    "scenarios".to_string()
+                } else {
+                    let picked: Vec<&str> =
+                        results.iter().map(|r| r.scenario).collect();
+                    format!("scenarios_{}", picked.join("_"))
+                };
+                let mut report = BenchReport::new(&suite);
+                for r in results {
+                    report.extend(r.entries);
+                }
+                let path = report.write(&out)?;
+                println!("wrote {} ({} entries)", path.display(),
+                         report.entries.len());
+            }
+            Ok(())
+        }
+        _ => anyhow::bail!(
+            "usage: hulk scenarios <list|run> … (see `hulk help`)"),
     }
 }
 
@@ -154,7 +230,7 @@ fn cmd_simulate(cli: &Cli) -> Result<()> {
         let reply = coordinator
             .handle(CoordinatorEvent::MachineFailed { machine: victim });
         if let CoordinatorReply::Recovered { action } = reply {
-            println!("machine {victim} failed → {action}");
+            println!("machine {victim} failed → {action:?}");
         }
     }
     coordinator.handle(CoordinatorEvent::Tick { iterations: 50 });
@@ -167,6 +243,3 @@ fn cmd_simulate(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
-/// Bench entry points shared with `cargo bench` (rust/benches).
-#[path = "bench_impl.rs"]
-mod hulk_benches;

@@ -1,26 +1,33 @@
 //! Benchmark/reproduction entry points — one per paper table/figure
 //! (DESIGN.md experiment index). Shared by `hulk bench <name>` and
-//! `cargo bench` (rust/benches/bench_main.rs).
+//! `cargo bench` (rust/benches/bench_main.rs). Formerly the standalone
+//! `bench_impl.rs` include; now a library module inside the scenario
+//! subsystem so both binaries compile it once.
+//!
+//! `hulk bench micro --json` additionally writes the wall-clock
+//! microbenchmark means as `BENCH_micro.json` (benchkit reporting layer).
+//! The *deterministic* perf trajectory comes from `hulk scenarios run all
+//! --json`, not from here.
 
 use anyhow::Result;
 
-use hulk::benchkit::{BenchConfig, Bencher};
-use hulk::cli::Cli;
-use hulk::cluster::paper_data::{fig6_node_45, TABLE1_MS, TABLE1_RECEIVERS,
-                                TABLE1_SENDERS};
-use hulk::cluster::{Fleet, WanModel};
-use hulk::coordinator::{recover, RecoveryAction};
-use hulk::gnn::{make_dataset, train_gcn, TrainerOptions};
-use hulk::graph::ClusterGraph;
-use hulk::models::ModelSpec;
-use hulk::parallel::{pipeline_cost, PipelinePlan};
-use hulk::runtime::client::TrainState;
-use hulk::runtime::{GcnRuntime, Manifest};
-use hulk::scheduler::{oracle_partition, OracleOptions};
-use hulk::sim::simulate_pipeline;
-use hulk::systems::{evaluate_all, HulkSplitterKind};
-use hulk::util::rng::Rng;
-use hulk::util::table::{fmt_ms, fmt_params, Table};
+use crate::benchkit::{BenchConfig, BenchReport, Bencher};
+use crate::cli::Cli;
+use crate::cluster::paper_data::{fig6_node_45, TABLE1_MS, TABLE1_RECEIVERS,
+                                 TABLE1_SENDERS};
+use crate::cluster::{Fleet, WanModel};
+use crate::coordinator::{recover, RecoveryAction};
+use crate::gnn::{make_dataset, train_gcn, TrainerOptions};
+use crate::graph::ClusterGraph;
+use crate::models::ModelSpec;
+use crate::parallel::{pipeline_cost, PipelinePlan};
+use crate::runtime::client::TrainState;
+use crate::runtime::{GcnRuntime, Manifest};
+use crate::scheduler::{oracle_partition, OracleOptions};
+use crate::sim::simulate_pipeline;
+use crate::systems::{evaluate_all, HulkSplitterKind};
+use crate::util::rng::Rng;
+use crate::util::table::{fmt_ms, fmt_params, Table};
 
 pub fn run(names: &[String], cli: &Cli) -> Result<()> {
     let list: Vec<&str> = if names.is_empty()
@@ -56,7 +63,8 @@ pub fn run(names: &[String], cli: &Cli) -> Result<()> {
 /// logs per Table 1 pair → trimmed-mean estimate → compare to the
 /// measured value the table reports.
 fn logs(cli: &Cli) -> Result<()> {
-    use hulk::cluster::logs::{estimate_latency, generate_logs, log_summary};
+    use crate::cluster::logs::{estimate_latency, generate_logs,
+                               log_summary};
     let wan = WanModel::new(cli.flag_u64("seed", 0)?);
     let days = cli.flag_u64("days", 90)? as usize;
     let samples = cli.flag_u64("samples", 2000)? as usize;
@@ -91,8 +99,8 @@ fn logs(cli: &Cli) -> Result<()> {
 
 /// DESIGN.md ablation sweeps: fleet size, microbatches, WAN degradation.
 fn sweep(cli: &Cli) -> Result<()> {
-    use hulk::systems::{fleet_size_sweep, microbatch_sweep,
-                        wan_degradation_sweep};
+    use super::sweep::{fleet_size_sweep, microbatch_sweep,
+                       wan_degradation_sweep};
     let seed = cli.flag_u64("seed", 0)?;
 
     println!("— fleet-size sweep (Hulk improvement vs best baseline) —");
@@ -192,7 +200,7 @@ fn fig4(cli: &Cli) -> Result<()> {
     // Fig. 4 trains on "this data" — the single labeled cluster graph
     // (§3–§4), i.e. the supervised overfit regime, not a corpus.
     let fleet = Fleet::paper_evaluation(seed);
-    let dataset = vec![hulk::gnn::LabeledGraph::from_fleet(
+    let dataset = vec![crate::gnn::LabeledGraph::from_fleet(
         &fleet, &ModelSpec::paper_four(), rt.manifest.n)];
     let mut state = TrainState::fresh(rt.manifest.load_init_params()?);
     let opts = TrainerOptions { steps, lr: 0.01, log_every: 0 };
@@ -235,21 +243,14 @@ fn fig5(cli: &Cli) -> Result<()> {
 }
 
 /// Fig. 6: scale-out — node 45 {Rome, 7, 384} joins and gets assigned.
+/// The join procedure itself is shared with the `fleet_growth` scenario
+/// (`registry::fig6_scale_out`).
 fn fig6(cli: &Cli) -> Result<()> {
     let seed = cli.flag_u64("seed", 0)?;
-    let mut fleet = Fleet::paper_evaluation(seed);
-    fleet.remove_machine(45);
-    let graph = ClusterGraph::from_fleet(&fleet);
-    let mut tasks = ModelSpec::paper_four();
-    tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
-    let mut a = oracle_partition(&fleet, &graph, &tasks,
-                                 &OracleOptions::default());
-    let before_cost = a.total_cost(&graph);
-    let spec = fig6_node_45();
-    let (id, placed) = hulk::coordinator::scale_out(
-        &mut fleet, &mut a, &tasks, spec.region, spec.gpu, spec.n_gpus);
+    let (fleet, a, tasks, id, placed, before_cost) =
+        super::registry::fig6_scale_out(seed);
     let graph2 = ClusterGraph::from_fleet(&fleet);
-    println!("joined machine {id} {}", spec.label());
+    println!("joined machine {id} {}", fig6_node_45().label());
     match placed {
         Some(t) => println!("→ assigned to task {t} ({})", tasks[t].name),
         None => println!("→ kept as spare (recovery pool)"),
@@ -270,7 +271,7 @@ fn eval_workload(cli: &Cli, workload: Vec<ModelSpec>) -> Result<()> {
         train_gcn(&rt, &mut state, &dataset,
                   &TrainerOptions { steps: 60, lr: 0.01, log_every: 0 })?;
         let params = state.params.clone();
-        let classifier = hulk::gnn::Classifier::Runtime(rt);
+        let classifier = crate::gnn::Classifier::Runtime(rt);
         evaluate_all(&fleet, &workload,
                      HulkSplitterKind::Gnn { classifier: &classifier,
                                              params: &params })?
@@ -319,7 +320,7 @@ fn ablation(cli: &Cli) -> Result<()> {
     let mut t = Table::new(&["model", "analytic total", "sim makespan",
                              "ratio"]);
     for (i, task) in tasks.iter().enumerate() {
-        let ordered = hulk::systems::hulk::chain_order(&graph, a.group(i));
+        let ordered = crate::systems::hulk::chain_order(&graph, a.group(i));
         let stages: Vec<usize> =
             ordered.into_iter().take(task.layers).collect();
         let plan = PipelinePlan::proportional(&fleet, stages, task);
@@ -342,7 +343,7 @@ fn ablation(cli: &Cli) -> Result<()> {
         let n_stages = group.len().min(task.layers);
         let id_plan = PipelinePlan::proportional(
             &fleet, group[..n_stages].to_vec(), task);
-        let ordered = hulk::systems::hulk::chain_order(&graph, &group);
+        let ordered = crate::systems::hulk::chain_order(&graph, &group);
         let chain_plan = PipelinePlan::proportional(
             &fleet, ordered[..n_stages].to_vec(), task);
         let c_id = pipeline_cost(&fleet, &id_plan, task);
@@ -376,7 +377,9 @@ fn ablation(cli: &Cli) -> Result<()> {
     Ok(())
 }
 
-/// Microbenchmarks of the L3 hot paths (benchkit).
+/// Microbenchmarks of the L3 hot paths (benchkit). With `--json`, the
+/// per-benchmark means are written as `BENCH_micro.json` under `--out`
+/// (default `.`).
 fn micro(cli: &Cli) -> Result<()> {
     let seed = cli.flag_u64("seed", 0)?;
     let fleet = Fleet::paper_evaluation(seed);
@@ -394,9 +397,9 @@ fn micro(cli: &Cli) -> Result<()> {
     let a = oracle_partition(&fleet, &graph, &tasks,
                              &OracleOptions::default());
     b.bench("chain_order_largest_group", || {
-        hulk::systems::hulk::chain_order(&graph, a.group(0))
+        crate::systems::hulk::chain_order(&graph, a.group(0))
     });
-    let ordered = hulk::systems::hulk::chain_order(&graph, a.group(0));
+    let ordered = crate::systems::hulk::chain_order(&graph, a.group(0));
     let plan = PipelinePlan::proportional(
         &fleet, ordered[..a.group(0).len().min(tasks[0].layers)].to_vec(),
         &tasks[0]);
@@ -417,5 +420,12 @@ fn micro(cli: &Cli) -> Result<()> {
     });
     println!("≈ {:.0} events/ms in the DES engine",
              sim.events_processed as f64 / r.summary.mean);
+    if cli.flag_bool("json") {
+        let out = std::path::PathBuf::from(cli.flag("out").unwrap_or("."));
+        let mut report = BenchReport::new("micro");
+        report.extend(b.entries("micro"));
+        let path = report.write(&out)?;
+        println!("wrote {}", path.display());
+    }
     Ok(())
 }

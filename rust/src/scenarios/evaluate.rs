@@ -1,5 +1,9 @@
 //! Run a workload through all four systems → the rows of Fig. 8 / Fig. 10
 //! (communication time and calculation time per model per system).
+//!
+//! Moved here from `systems::evaluate` when the scenario subsystem was
+//! introduced; `crate::systems` re-exports the public names for
+//! compatibility.
 
 use anyhow::Result;
 
@@ -7,10 +11,9 @@ use crate::cluster::Fleet;
 use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
 use crate::parallel::IterCost;
+use crate::systems::hulk::{hulk_plan, HulkSplitterKind};
+use crate::systems::{system_a, system_b, system_c};
 use crate::util::table::{fmt_ms, Table};
-
-use super::hulk::{hulk_plan, HulkSplitterKind};
-use super::{system_a, system_b, system_c};
 
 /// The four systems of §6.4.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -35,6 +38,16 @@ impl SystemKind {
             SystemKind::SystemB => "System B (GPipe)",
             SystemKind::SystemC => "System C (Megatron)",
             SystemKind::Hulk => "Hulk",
+        }
+    }
+
+    /// Stable machine-readable id used in `BENCH_*.json` entry names.
+    pub fn slug(self) -> &'static str {
+        match self {
+            SystemKind::SystemA => "system_a",
+            SystemKind::SystemB => "system_b",
+            SystemKind::SystemC => "system_c",
+            SystemKind::Hulk => "hulk",
         }
     }
 }
@@ -112,7 +125,7 @@ pub fn evaluate_all(fleet: &Fleet, workload: &[ModelSpec],
             system_a::cost(fleet, model),
             system_b::cost(fleet, model),
             system_c::cost(fleet, model),
-            super::hulk::cost(fleet, &plan, t),
+            crate::systems::hulk::cost(fleet, &plan, t),
         ]);
     }
     Ok(SystemEval { models, costs })
@@ -161,5 +174,12 @@ mod tests {
         }
         assert!(out.contains("OPT (175B)"));
         assert!(out.contains("infeasible")); // System A × OPT
+    }
+
+    #[test]
+    fn slugs_are_stable_and_unique() {
+        let slugs: Vec<&str> =
+            SystemKind::ALL.iter().map(|k| k.slug()).collect();
+        assert_eq!(slugs, vec!["system_a", "system_b", "system_c", "hulk"]);
     }
 }

@@ -1,0 +1,29 @@
+//! The scenario + benchmark subsystem: one place that runs the paper's
+//! four systems over many fleet/WAN situations and reports the results,
+//! both human-readable (CLI tables) and machine-readable
+//! (`BENCH_*.json` via `benchkit`).
+//!
+//! - [`registry`] — the named-scenario registry (`hulk scenarios`):
+//!   deterministic seed→result runners for the Table 1 fleet, WAN
+//!   degradation, heterogeneous GPUs, fleet growth, failure storms and
+//!   multi-tenant streaming arrivals.
+//! - [`evaluate`] — a workload through Systems A/B/C/Hulk (the Fig. 8 /
+//!   Fig. 10 rows); the primitive every scenario builds on.
+//! - [`sweep`] — parameter sweeps (fleet size, microbatches, WAN
+//!   degradation) used by scenarios and `hulk bench sweep`.
+//! - [`bench`] — the per-table/figure reproduction entry points
+//!   (`hulk bench`, `cargo bench`).
+//!
+//! `crate::systems` re-exports the evaluation/sweep names that lived
+//! there before this subsystem existed.
+
+pub mod bench;
+pub mod evaluate;
+pub mod registry;
+pub mod sweep;
+
+pub use evaluate::{evaluate_all, SystemEval, SystemKind};
+pub use registry::{all_scenarios, find_scenario, run_all, Scenario,
+                   ScenarioResult};
+pub use sweep::{feasible_workload, fleet_size_sweep, microbatch_sweep,
+                truncated_fleet, wan_degradation_sweep, SweepPoint};

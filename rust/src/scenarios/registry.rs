@@ -1,0 +1,581 @@
+//! The named-scenario registry: every entry deterministically runs the
+//! paper's four systems (A/B/C/Hulk) over one fleet/workload situation and
+//! emits machine-readable [`BenchEntry`] rows for `BENCH_*.json`.
+//!
+//! Scenarios exist so the headline claim — Hulk >20% over the best
+//! baseline — is tracked across *many* WAN/fleet situations, not just the
+//! paper's Table 1 testbed: WAN degradation, heterogeneous GPU fleets,
+//! fleet growth, failure storms and multi-tenant streaming arrivals.
+//! Everything is a pure function of the seed: no wall clock, no global
+//! state, so two runs with the same seed produce identical entries.
+//!
+//! CLI: `hulk scenarios list` and `hulk scenarios run <name…|all>
+//! [--seed S] [--json] [--out DIR]`.
+
+use anyhow::Result;
+
+use crate::benchkit::BenchEntry;
+use crate::cluster::paper_data::fig6_node_45;
+use crate::cluster::{Fleet, GpuModel, Machine, Region, WanModel};
+use crate::coordinator::{scale_out, Coordinator, CoordinatorEvent,
+                         CoordinatorReply, RecoveryAction};
+use crate::graph::ClusterGraph;
+use crate::models::ModelSpec;
+use crate::parallel::pipeline_cost;
+use crate::scheduler::{oracle_partition, Assignment, OracleOptions};
+use crate::sim::{simulate_pipeline, FailurePlan};
+use crate::systems::hulk::{hulk_plan, HulkSplitterKind};
+use crate::systems::{system_a, system_b, system_c};
+use crate::util::rng::Rng;
+use crate::util::table::{fmt_ms, Table};
+
+use super::evaluate::{evaluate_all, SystemEval, SystemKind};
+use super::sweep::{feasible_workload, fleet_size_sweep, truncated_fleet};
+
+/// A registered scenario: a name, a one-line description, and a
+/// deterministic runner `seed → result`.
+pub struct Scenario {
+    pub name: &'static str,
+    pub description: &'static str,
+    runner: fn(u64) -> Result<ScenarioResult>,
+}
+
+impl Scenario {
+    pub fn run(&self, seed: u64) -> Result<ScenarioResult> {
+        (self.runner)(seed)
+    }
+}
+
+/// Output of one scenario run.
+pub struct ScenarioResult {
+    pub scenario: &'static str,
+    /// Machine-readable rows for the `BENCH_*.json` report.
+    pub entries: Vec<BenchEntry>,
+    /// Human-readable rendering for the CLI.
+    pub rendered: String,
+}
+
+/// Every registered scenario, in canonical order.
+pub fn all_scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "table1_fleet",
+            description: "Paper §6.1 fleet (46 servers, Table 1 WAN), \
+                          four-model workload under all four systems",
+            runner: table1_fleet,
+        },
+        Scenario {
+            name: "wan_degradation",
+            description: "Every inter-region latency scaled ×1..×8; \
+                          systems compared on the ×4 WAN",
+            runner: wan_degradation,
+        },
+        Scenario {
+            name: "hetero_gpu",
+            description: "20-server fleet with per-machine GPU models \
+                          drawn from the full catalog (A100 … TITAN Xp)",
+            runner: hetero_gpu,
+        },
+        Scenario {
+            name: "fleet_growth",
+            description: "Fleet grown 12→46 servers plus the Fig. 6 \
+                          node-45 scale-out join",
+            runner: fleet_growth,
+        },
+        Scenario {
+            name: "failure_storm",
+            description: "Five machine failures against the leader's \
+                          recovery policy, then systems on the survivors",
+            runner: failure_storm,
+        },
+        Scenario {
+            name: "multi_tenant",
+            description: "Six models arriving as a stream through the \
+                          leader loop with a mid-stream failure",
+            runner: multi_tenant,
+        },
+    ]
+}
+
+/// Look up a scenario by name.
+pub fn find_scenario(name: &str) -> Option<Scenario> {
+    all_scenarios().into_iter().find(|s| s.name == name)
+}
+
+/// Run every scenario with one seed.
+pub fn run_all(seed: u64) -> Result<Vec<ScenarioResult>> {
+    all_scenarios().iter().map(|s| s.run(seed)).collect()
+}
+
+/// Lowercase ascii-alnum slug for entry names: `"OPT (175B)"` →
+/// `"opt_175b"`.
+fn slug(name: &str) -> String {
+    let mut out = String::new();
+    for ch in name.chars() {
+        if ch.is_ascii_alphanumeric() {
+            out.push(ch.to_ascii_lowercase());
+        } else if !out.is_empty() && !out.ends_with('_') {
+            out.push('_');
+        }
+    }
+    out.trim_end_matches('_').to_string()
+}
+
+/// Per-model × per-system `iter_ms` rows (feasible combinations only).
+fn eval_entries(prefix: &str, eval: &SystemEval) -> Vec<BenchEntry> {
+    let mut out = Vec::new();
+    for (m, model) in eval.models.iter().enumerate() {
+        for (s, kind) in SystemKind::ALL.iter().enumerate() {
+            let c = eval.costs[m][s];
+            if c.is_feasible() {
+                out.push(BenchEntry::new(
+                    format!("{prefix}/{}/{}/iter_ms", kind.slug(),
+                            slug(model.name)),
+                    c.total_ms(),
+                    "ms",
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn improvement_entry(prefix: &str, eval: &SystemEval) -> BenchEntry {
+    BenchEntry::new(
+        format!("{prefix}/hulk_improvement_pct"),
+        eval.hulk_improvement() * 100.0,
+        "%",
+    )
+}
+
+/// The shared Fig. 6 scale-out procedure (used by both the `fig6` bench
+/// and the `fleet_growth` scenario): drop node 45 from the evaluation
+/// fleet, oracle-partition the four-model workload, then join the
+/// paper's node `{Rome, 7, 384}`. Returns the grown fleet, the updated
+/// assignment, the size-sorted tasks, the joined machine id, the task it
+/// joined (None = spare pool), and the pre-join intra-group cost.
+pub(crate) fn fig6_scale_out(seed: u64)
+    -> (Fleet, Assignment, Vec<ModelSpec>, usize, Option<usize>, f64)
+{
+    let mut fleet = Fleet::paper_evaluation(seed);
+    fleet.remove_machine(45);
+    let graph = ClusterGraph::from_fleet(&fleet);
+    let mut tasks = ModelSpec::paper_four();
+    tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+    let mut assignment = oracle_partition(&fleet, &graph, &tasks,
+                                          &OracleOptions::default());
+    let before_cost = assignment.total_cost(&graph);
+    let spec = fig6_node_45();
+    let (id, joined) = scale_out(&mut fleet, &mut assignment, &tasks,
+                                 spec.region, spec.gpu, spec.n_gpus);
+    (fleet, assignment, tasks, id, joined, before_cost)
+}
+
+// ------------------------------------------------------------ scenarios --
+
+/// The paper's own evaluation situation (Table 1 WAN + §6.1 fleet).
+fn table1_fleet(seed: u64) -> Result<ScenarioResult> {
+    let fleet = Fleet::paper_evaluation(seed);
+    let eval = evaluate_all(&fleet, &ModelSpec::paper_four(),
+                            HulkSplitterKind::Oracle)?;
+    let mut entries = eval_entries("table1_fleet", &eval);
+    entries.push(improvement_entry("table1_fleet", &eval));
+    let rendered = format!(
+        "{}\nHulk improvement over best feasible baseline: {:.1}% \
+         (paper claims >20%)\n",
+        eval.render(),
+        eval.hulk_improvement() * 100.0
+    );
+    Ok(ScenarioResult { scenario: "table1_fleet", entries, rendered })
+}
+
+/// WAN degradation ×1..×8; the ×4 WAN gets the full system comparison.
+/// Each factor is evaluated exactly once (no second pass through the
+/// sweep for the table).
+fn wan_degradation(seed: u64) -> Result<ScenarioResult> {
+    let workload = ModelSpec::paper_four();
+    let mut entries = Vec::new();
+    let mut t = Table::new(&["factor", "Hulk improvement"]);
+    let mut x4_render = String::new();
+    for factor in [1.0, 2.0, 4.0, 8.0] {
+        let fleet = Fleet::paper_evaluation(seed).with_wan_scaled(factor);
+        let eval = evaluate_all(&fleet, &workload,
+                                HulkSplitterKind::Oracle)?;
+        entries.push(BenchEntry::new(
+            format!("wan_degradation/x{factor:.0}/hulk_improvement_pct"),
+            eval.hulk_improvement() * 100.0,
+            "%",
+        ));
+        t.row(&[format!("×{factor:.0}"),
+                format!("{:.1}%", eval.hulk_improvement() * 100.0)]);
+        if factor == 4.0 {
+            entries.extend(eval_entries("wan_degradation/x4", &eval));
+            x4_render = eval.render();
+        }
+    }
+    let rendered = format!(
+        "— improvement vs degradation factor —\n{}\n— all systems on \
+         the ×4 WAN —\n{x4_render}",
+        t.render()
+    );
+    Ok(ScenarioResult { scenario: "wan_degradation", entries, rendered })
+}
+
+/// Heterogeneous fleet: 20 servers over five well-connected regions, GPU
+/// model and count drawn per machine from the full catalog.
+fn hetero_gpu(seed: u64) -> Result<ScenarioResult> {
+    let regions = [Region::California, Region::Tokyo, Region::Berlin,
+                   Region::London, Region::Rome];
+    let mut rng = Rng::new(seed ^ 0x4845_5445_524F); // "HETERO"
+    let mut machines = Vec::new();
+    for i in 0..20 {
+        let region = regions[i % regions.len()];
+        let gpu = GpuModel::ALL[rng.below(GpuModel::ALL.len())];
+        let n_gpus = [4, 8, 8, 12][rng.below(4)];
+        machines.push(Machine::new(i, region, gpu, n_gpus));
+    }
+    let fleet = Fleet::new(machines, WanModel::new(seed));
+    let workload = vec![ModelSpec::t5_11b(), ModelSpec::gpt2_xl(),
+                        ModelSpec::bert_large()];
+    let eval = evaluate_all(&fleet, &workload, HulkSplitterKind::Oracle)?;
+    let mut entries = eval_entries("hetero_gpu", &eval);
+    entries.push(improvement_entry("hetero_gpu", &eval));
+    entries.push(BenchEntry::new(
+        "hetero_gpu/fleet_total_memory_gb",
+        fleet.total_memory_gb(),
+        "GB",
+    ));
+    let rendered = format!(
+        "fleet: {} servers / {} GPUs / {:.1} TB over {} regions\n{}\n\
+         Hulk improvement: {:.1}%\n",
+        fleet.len(),
+        fleet.total_gpus(),
+        fleet.total_memory_gb() / 1e3,
+        regions.len(),
+        eval.render(),
+        eval.hulk_improvement() * 100.0
+    );
+    Ok(ScenarioResult { scenario: "hetero_gpu", entries, rendered })
+}
+
+/// Fleet growth 12→46 plus the Fig. 6 scale-out join.
+fn fleet_growth(seed: u64) -> Result<ScenarioResult> {
+    let workload = ModelSpec::paper_four();
+    let sizes = [12usize, 16, 24, 32, 46];
+    let points = fleet_size_sweep(seed, &sizes, &workload)?;
+    let mut entries = Vec::new();
+    let mut t = Table::new(&["servers", "Hulk improvement"]);
+    for p in &points {
+        entries.push(BenchEntry::new(
+            format!("fleet_growth/n{:.0}/hulk_improvement_pct", p.x),
+            p.improvement * 100.0,
+            "%",
+        ));
+        t.row(&[format!("{:.0}", p.x),
+                format!("{:.1}%", p.improvement * 100.0)]);
+    }
+
+    // Mid-growth checkpoint: all four systems on the 24-server fleet.
+    let mid = truncated_fleet(&Fleet::paper_evaluation(seed), 24);
+    let mid_workload = feasible_workload(&mid, &workload);
+    let eval = evaluate_all(&mid, &mid_workload, HulkSplitterKind::Oracle)?;
+    entries.extend(eval_entries("fleet_growth/n24", &eval));
+    entries.push(improvement_entry("fleet_growth/n24", &eval));
+
+    // Fig. 6: node 45 {Rome, 7, 384} joins the 45-server system.
+    let (fleet46, assignment, tasks, id, joined, _before_cost) =
+        fig6_scale_out(seed);
+    let graph46 = ClusterGraph::from_fleet(&fleet46);
+    assignment
+        .validate_disjoint(fleet46.len())
+        .map_err(|e| anyhow::anyhow!(e))?;
+    assignment
+        .validate_memory(&fleet46, &tasks)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    entries.push(BenchEntry::new(
+        "fleet_growth/scale_out/joined_task",
+        if joined.is_some() { 1.0 } else { 0.0 },
+        "count",
+    ));
+    entries.push(BenchEntry::new(
+        "fleet_growth/scale_out/total_cost",
+        assignment.total_cost(&graph46),
+        "ms_edges",
+    ));
+    let rendered = format!(
+        "— improvement vs fleet size —\n{}\n— 24-server checkpoint —\n{}\n\
+         node {id} {} joined → {}\n",
+        t.render(),
+        eval.render(),
+        fig6_node_45().label(),
+        match joined {
+            Some(task) => format!("task {task}"),
+            None => "spare pool".to_string(),
+        }
+    );
+    Ok(ScenarioResult { scenario: "fleet_growth", entries, rendered })
+}
+
+/// Five machine failures against the leader's recovery policy, then the
+/// four systems re-evaluated on the surviving fleet, plus a DES run with
+/// a mid-iteration failure.
+fn failure_storm(seed: u64) -> Result<ScenarioResult> {
+    let fleet = Fleet::paper_evaluation(seed);
+    let mut coordinator = Coordinator::new(fleet.clone());
+    for model in ModelSpec::paper_four() {
+        coordinator.handle(CoordinatorEvent::Submit { model,
+                                                      iterations: 100 });
+    }
+
+    let mut rng = Rng::new(seed ^ 0x5354_4F52_4D21); // "STORM!"
+    let mut victims: Vec<usize> = Vec::new();
+    while victims.len() < 5 {
+        let v = rng.below(fleet.len());
+        if !victims.contains(&v) {
+            victims.push(v);
+        }
+    }
+    // Recovery action histogram, indexed promote/shrink/requeue/noop.
+    let mut counts = [0usize; 4];
+    for &victim in &victims {
+        if let CoordinatorReply::Recovered { action } = coordinator
+            .handle(CoordinatorEvent::MachineFailed { machine: victim })
+        {
+            let idx = match action {
+                RecoveryAction::PromoteSpare { .. } => 0,
+                RecoveryAction::ShrinkGroup { .. } => 1,
+                RecoveryAction::Requeue { .. } => 2,
+                RecoveryAction::NoOp => 3,
+            };
+            counts[idx] += 1;
+        }
+    }
+    let mut entries = Vec::new();
+    for (label, &n) in ["promote_spare", "shrink_group", "requeue", "noop"]
+        .iter()
+        .zip(&counts)
+    {
+        entries.push(BenchEntry::new(
+            format!("failure_storm/recovery/{label}"),
+            n as f64,
+            "count",
+        ));
+    }
+
+    // The four systems on the surviving fleet. Remove victims largest-id
+    // first so earlier removals do not shift later ids.
+    let mut survivors = fleet.clone();
+    let mut doomed = victims.clone();
+    doomed.sort_unstable();
+    for &victim in doomed.iter().rev() {
+        survivors.remove_machine(victim);
+    }
+    entries.push(BenchEntry::new("failure_storm/survivor_count",
+                                 survivors.len() as f64, "count"));
+    let mut workload = feasible_workload(&survivors,
+                                         &ModelSpec::paper_four());
+    // The storm can leave too little contiguous memory for the largest
+    // model; deterministically shed largest-first until Algorithm 1
+    // accepts (paper: such tasks queue until resources return).
+    let eval = loop {
+        match evaluate_all(&survivors, &workload,
+                           HulkSplitterKind::Oracle) {
+            Ok(eval) => break eval,
+            Err(_) if workload.len() > 1 => {
+                workload.remove(0);
+            }
+            Err(e) => return Err(e),
+        }
+    };
+    entries.extend(eval_entries("failure_storm/survivors", &eval));
+    entries.push(improvement_entry("failure_storm/survivors", &eval));
+
+    // DES: interrupt the largest surviving Hulk pipeline mid-iteration.
+    let graph = ClusterGraph::from_fleet(&survivors);
+    let plan = hulk_plan(&survivors, &graph, &workload,
+                         HulkSplitterKind::Oracle)?;
+    let pipe = &plan.pipelines[0];
+    let mut sim_note = String::new();
+    if pipe.stages.len() > 1
+        && pipeline_cost(&survivors, pipe, &plan.tasks[0]).is_feasible()
+    {
+        let healthy =
+            simulate_pipeline(&survivors, pipe, &plan.tasks[0], false, None);
+        entries.push(BenchEntry::new(
+            "failure_storm/sim/healthy_makespan_ms",
+            healthy.makespan_ms,
+            "ms",
+        ));
+        let injected = FailurePlan {
+            at_ms: healthy.makespan_ms * 0.5,
+            machine: pipe.stages[1],
+        };
+        let interrupted = simulate_pipeline(&survivors, pipe,
+                                            &plan.tasks[0], false,
+                                            Some(injected));
+        if let Some(outcome) = interrupted.failure {
+            entries.push(BenchEntry::new(
+                "failure_storm/sim/microbatches_salvaged",
+                outcome.completed_microbatches as f64,
+                "count",
+            ));
+            sim_note = format!(
+                "DES: stage machine {} killed at {} → {} of {} \
+                 microbatches salvaged\n",
+                outcome.machine,
+                fmt_ms(outcome.at_ms),
+                outcome.completed_microbatches,
+                pipe.microbatches
+            );
+        }
+    }
+
+    let rendered = format!(
+        "failed machines: {victims:?}\nrecovery actions: promote-spare \
+         {} | shrink {} | requeue {} | noop {}\n{}— systems on the {} \
+         survivors —\n{}\nHulk improvement: {:.1}%\n",
+        counts[0], counts[1], counts[2], counts[3], sim_note,
+        survivors.len(),
+        eval.render(),
+        eval.hulk_improvement() * 100.0
+    );
+    Ok(ScenarioResult { scenario: "failure_storm", entries, rendered })
+}
+
+/// Six models arriving as a stream through the leader loop, with a
+/// mid-stream machine failure; baselines costed on the same arrivals.
+fn multi_tenant(seed: u64) -> Result<ScenarioResult> {
+    let fleet = Fleet::paper_evaluation(seed);
+    let mut rng = Rng::new(seed ^ 0x4D54_454E_414E); // "MTENAN"
+    let mut arrivals = ModelSpec::paper_six();
+    rng.shuffle(&mut arrivals);
+
+    let mut coordinator = Coordinator::new(fleet.clone());
+    for (i, model) in arrivals.iter().enumerate() {
+        coordinator.handle(CoordinatorEvent::Submit {
+            model: model.clone(),
+            iterations: 30,
+        });
+        if i == 2 {
+            let victim = rng.below(fleet.len());
+            coordinator
+                .handle(CoordinatorEvent::MachineFailed { machine: victim });
+        }
+        coordinator.handle(CoordinatorEvent::Tick { iterations: 10 });
+    }
+    // Drain: completed tasks free machines for whatever queued.
+    for _ in 0..10 {
+        coordinator.handle(CoordinatorEvent::Tick { iterations: 30 });
+    }
+
+    let mut entries = Vec::new();
+    for counter in ["tasks_admitted", "tasks_queued", "machine_failures"] {
+        entries.push(BenchEntry::new(
+            format!("multi_tenant/{counter}"),
+            coordinator.metrics.counter(counter) as f64,
+            "count",
+        ));
+    }
+    // Hulk: per-task iteration time on the leader's disjoint groups.
+    let mut t = Table::new(&["task", "group size", "iter"]);
+    for task in &coordinator.tasks {
+        if task.machines.is_empty() {
+            continue;
+        }
+        if let Some(ms) = coordinator.task_iter_ms(task) {
+            entries.push(BenchEntry::new(
+                format!("multi_tenant/hulk/{}/iter_ms",
+                        slug(task.model.name)),
+                ms,
+                "ms",
+            ));
+            t.row(&[task.model.name.to_string(),
+                    task.machines.len().to_string(), fmt_ms(ms)]);
+        }
+    }
+    // Baselines get the whole (pristine) fleet per model — that is their
+    // defining weakness in a multi-tenant setting.
+    for model in &arrivals {
+        for (kind, cost) in [
+            (SystemKind::SystemA, system_a::cost(&fleet, model)),
+            (SystemKind::SystemB, system_b::cost(&fleet, model)),
+            (SystemKind::SystemC, system_c::cost(&fleet, model)),
+        ] {
+            if cost.is_feasible() {
+                entries.push(BenchEntry::new(
+                    format!("multi_tenant/{}/{}/iter_ms", kind.slug(),
+                            slug(model.name)),
+                    cost.total_ms(),
+                    "ms",
+                ));
+            }
+        }
+    }
+
+    let arrival_names: Vec<&str> =
+        arrivals.iter().map(|m| m.name).collect();
+    let rendered = format!(
+        "arrival order: {}\nadmitted {} | queued {} | failures {}\n\
+         — Hulk groups (leader loop) —\n{}",
+        arrival_names.join(" → "),
+        coordinator.metrics.counter("tasks_admitted"),
+        coordinator.metrics.counter("tasks_queued"),
+        coordinator.metrics.counter("machine_failures"),
+        t.render()
+    );
+    Ok(ScenarioResult { scenario: "multi_tenant", entries, rendered })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slugs_compress_model_names() {
+        assert_eq!(slug("OPT (175B)"), "opt_175b");
+        assert_eq!(slug("GPT-2 (1.5B)"), "gpt_2_1_5b");
+        assert_eq!(slug("System A (DP)"), "system_a_dp");
+        assert_eq!(slug("___"), "");
+    }
+
+    #[test]
+    fn registry_is_populated_with_unique_names() {
+        let scenarios = all_scenarios();
+        assert!(scenarios.len() >= 6);
+        let mut names: Vec<&str> =
+            scenarios.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), scenarios.len());
+        assert!(find_scenario("table1_fleet").is_some());
+        assert!(find_scenario("no_such_scenario").is_none());
+    }
+
+    #[test]
+    fn fig6_helper_produces_valid_assignment() {
+        let (fleet, assignment, tasks, id, _joined, before_cost) =
+            fig6_scale_out(0);
+        assert_eq!(id, 45);
+        assert_eq!(fleet.len(), 46);
+        assert!(before_cost > 0.0);
+        assignment.validate_disjoint(fleet.len()).unwrap();
+        assignment.validate_memory(&fleet, &tasks).unwrap();
+    }
+
+    #[test]
+    fn eval_entries_skip_infeasible_cells() {
+        let fleet = Fleet::paper_evaluation(0);
+        let eval = evaluate_all(&fleet, &ModelSpec::paper_four(),
+                                HulkSplitterKind::Oracle)
+            .unwrap();
+        let entries = eval_entries("x", &eval);
+        // System A × OPT-175B is infeasible → no row for it.
+        assert!(entries
+            .iter()
+            .all(|e| e.name != "x/system_a/opt_175b/iter_ms"));
+        assert!(entries
+            .iter()
+            .any(|e| e.name == "x/hulk/opt_175b/iter_ms"));
+        assert!(entries.iter().all(|e| e.value.is_finite()));
+    }
+}

@@ -8,6 +8,11 @@
 //! - **WAN-degradation sweep**: improvement as every inter-region latency
 //!   is scaled ×1..×8 (the paper's motivation: the worse the WAN, the
 //!   bigger Hulk's win).
+//!
+//! Moved here from `systems::sweep` when the scenario subsystem was
+//! introduced; `crate::systems` re-exports the public names for
+//! compatibility. The named scenarios in [`super::registry`] build on
+//! these sweeps.
 
 use anyhow::Result;
 
@@ -15,9 +20,9 @@ use crate::cluster::{Fleet, Machine};
 use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
 use crate::parallel::{pipeline_cost, PipelinePlan};
-use crate::systems::{evaluate_all, HulkSplitterKind};
+use crate::systems::hulk::{chain_order, hulk_plan, HulkSplitterKind};
 
-use super::hulk::{chain_order, hulk_plan};
+use super::evaluate::evaluate_all;
 
 /// One sweep point.
 #[derive(Clone, Debug)]
@@ -25,6 +30,30 @@ pub struct SweepPoint {
     pub x: f64,
     /// Hulk total-time improvement over the best feasible baseline.
     pub improvement: f64,
+}
+
+/// The evaluation fleet truncated to its first `n` machines with
+/// re-densified ids (fleet-growth experiments).
+pub fn truncated_fleet(full: &Fleet, n: usize) -> Fleet {
+    assert!((2..=full.len()).contains(&n), "bad truncation size {n}");
+    let machines: Vec<Machine> = full.machines[..n]
+        .iter()
+        .enumerate()
+        .map(|(i, m)| Machine::new(i, m.region, m.gpu, m.n_gpus))
+        .collect();
+    Fleet::new(machines, full.wan.clone())
+}
+
+/// Drop workload models `fleet` cannot host at all (sweeps over small
+/// fleets must not fail wholesale because OPT-175B needs 2.8 TB).
+pub fn feasible_workload(fleet: &Fleet, workload: &[ModelSpec])
+    -> Vec<ModelSpec>
+{
+    workload
+        .iter()
+        .filter(|t| t.train_gb() * 1.1 <= fleet.total_memory_gb())
+        .cloned()
+        .collect()
 }
 
 /// Fleet-size sweep: truncate the evaluation fleet to its first `n`
@@ -35,19 +64,9 @@ pub fn fleet_size_sweep(seed: u64, sizes: &[usize],
     let full = Fleet::paper_evaluation(seed);
     let mut out = Vec::with_capacity(sizes.len());
     for &n in sizes {
-        anyhow::ensure!(n >= 2 && n <= full.len(), "bad sweep size {n}");
-        let machines: Vec<Machine> = full.machines[..n]
-            .iter()
-            .enumerate()
-            .map(|(i, m)| Machine::new(i, m.region, m.gpu, m.n_gpus))
-            .collect();
-        let fleet = Fleet::new(machines, full.wan.clone());
-        // Drop workload models the truncated fleet cannot host at all.
-        let feasible: Vec<ModelSpec> = workload
-            .iter()
-            .filter(|t| t.train_gb() * 1.1 <= fleet.total_memory_gb())
-            .cloned()
-            .collect();
+        anyhow::ensure!((2..=full.len()).contains(&n), "bad sweep size {n}");
+        let fleet = truncated_fleet(&full, n);
+        let feasible = feasible_workload(&fleet, workload);
         if feasible.is_empty() {
             continue;
         }
@@ -120,19 +139,39 @@ mod tests {
     }
 
     #[test]
+    fn truncation_redensifies_ids() {
+        let full = Fleet::paper_evaluation(0);
+        let small = truncated_fleet(&full, 12);
+        assert_eq!(small.len(), 12);
+        for (i, m) in small.machines.iter().enumerate() {
+            assert_eq!(m.id, i);
+            assert_eq!(m.region, full.machines[i].region);
+        }
+    }
+
+    #[test]
+    fn feasibility_filter_drops_oversized_models() {
+        let full = Fleet::paper_evaluation(0);
+        let small = truncated_fleet(&full, 2);
+        let kept = feasible_workload(&small, &ModelSpec::paper_four());
+        assert!(kept.iter().all(|m| m.name != "OPT (175B)"));
+        assert!(kept.iter().any(|m| m.name.starts_with("BERT")));
+    }
+
+    #[test]
     fn microbatch_sweep_amortizes_bubble() {
         let points =
             microbatch_sweep(0, &ModelSpec::gpt2_xl(), &[1, 4, 16]).unwrap();
         assert_eq!(points.len(), 3);
         // Per-iteration time is not monotone in K in general (comm grows
-        // with K) but K=1 must be strictly worse than the best K: the
-        // bubble dominates a one-shot pipeline.
+        // with K) but K=1 must be strictly worse than the best of the
+        // larger Ks: an unpipelined single batch serializes every stage.
         let k1 = points[0].improvement;
-        let best = points
+        let best_other = points[1..]
             .iter()
             .map(|p| p.improvement)
             .fold(f64::INFINITY, f64::min);
-        assert!(k1 > best * 0.99, "K=1 {} vs best {}", k1, best);
+        assert!(k1 > best_other, "K=1 {} vs best other {}", k1, best_other);
     }
 
     #[test]

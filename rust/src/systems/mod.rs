@@ -9,16 +9,17 @@
 //! - **Hulk** ([`hulk`]) — GCN/Algorithm-1 grouping, then GPipe inside
 //!   each group with a locality-aware stage order.
 //!
-//! [`evaluate`] runs a workload through all four and produces the
-//! Fig. 8 / Fig. 10 rows.
+//! The evaluation harness that runs a workload through all four
+//! (`evaluate_all` → Fig. 8 / Fig. 10 rows) and the ablation sweeps live
+//! in [`crate::scenarios`] since the scenario subsystem was introduced;
+//! their names are re-exported here so existing callers keep working.
 
-pub mod evaluate;
-pub mod sweep;
 pub mod hulk;
 pub mod system_a;
 pub mod system_b;
 pub mod system_c;
 
-pub use evaluate::{evaluate_all, SystemEval, SystemKind};
-pub use sweep::{fleet_size_sweep, microbatch_sweep, wan_degradation_sweep, SweepPoint};
+pub use crate::scenarios::evaluate::{evaluate_all, SystemEval, SystemKind};
+pub use crate::scenarios::sweep::{fleet_size_sweep, microbatch_sweep,
+                                  wan_degradation_sweep, SweepPoint};
 pub use hulk::{hulk_plan, HulkPlan, HulkSplitterKind};

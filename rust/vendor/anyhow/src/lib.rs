@@ -1,0 +1,237 @@
+//! Offline stand-in for the `anyhow` crate, vendored because the build
+//! environment has no crates.io access. Implements the subset of the real
+//! API this workspace uses — `Error`, `Result`, the `anyhow!`/`bail!`/
+//! `ensure!` macros, and the `Context` extension trait for `Result` and
+//! `Option` — with the same semantics (single dynamic error type, `?`
+//! conversion from any `std::error::Error`, context wrapping with a
+//! "Caused by" chain in the `Debug` rendering).
+//!
+//! Swapping in the real crate is a one-line change in `rust/Cargo.toml`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A dynamic error: a message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from anything displayable (the `anyhow!` macro's
+    /// single-expression form).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap `source` under a new context message (`Context::context`).
+    pub fn wrap<M: fmt::Display>(
+        message: M,
+        source: Box<dyn StdError + Send + Sync + 'static>,
+    ) -> Error {
+        Error { msg: message.to_string(), source: Some(source) }
+    }
+
+    /// The outermost (most recent) context message.
+    pub fn root_message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the source chain, outermost first (excluding this error's
+    /// own message).
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        let mut next: Option<&(dyn StdError + 'static)> =
+            self.source.as_deref().map(|s| s as &(dyn StdError + 'static));
+        std::iter::from_fn(move || {
+            let current = next?;
+            next = current.source();
+            Some(current)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<String> =
+            self.chain().map(|c| c.to_string()).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for cause in causes {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`, exactly
+// like the real anyhow: that is what makes this blanket `From` coherent.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with `Error` as default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to `Result` and `Option` errors.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) under `context`.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Like [`Context::context`], but the message is built lazily.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T>
+    for std::result::Result<T, E>
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::wrap(context, Box::new(e)))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::wrap(f(), Box::new(e)))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string, a displayable value, or a
+/// message literal (same three arms as the real macro).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($t)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a: Error = anyhow!("plain message");
+        assert_eq!(a.to_string(), "plain message");
+        let msg = String::from("from a String");
+        let b: Error = anyhow!(msg);
+        assert_eq!(b.to_string(), "from a String");
+        let c: Error = anyhow!("x = {}, y = {:?}", 1, "two");
+        assert_eq!(c.to_string(), "x = 1, y = \"two\"");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening config").unwrap_err();
+        assert_eq!(e.to_string(), "opening config");
+        assert!(format!("{e:?}").contains("gone")); // cause in Debug
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing key {:?}", "n"))
+            .unwrap_err();
+        assert!(e.to_string().contains("missing key"));
+
+        let some: Option<u32> = Some(3);
+        assert_eq!(some.context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn chain_walks_sources() {
+        let e = Error::wrap("outer", Box::new(io_err()));
+        let chain: Vec<String> = e.chain().map(|c| c.to_string()).collect();
+        assert_eq!(chain, vec!["gone".to_string()]);
+    }
+}
