@@ -11,9 +11,11 @@ Architecture (paper Fig. 2–3):
 Every GCN layer carries a residual self path (``x @ w_self``): without
 it, strong intra-region affinities make same-region rows of the
 aggregation identical and the network collapses to the label marginal
-(EXPERIMENTS.md Fig4 notes). Default dims (N=64 node slots, F=16, H=192,
-H2=96, C=8) give 192,872 parameters — the paper reports "188k"; the
-small delta is the paper not specifying layer widths. Optimizer: Adam(lr=0.01) per the paper's learning
+(EXPERIMENTS.md Fig4 notes). Default dims (N=64 node slots, F=18, H=192,
+H2=96, C=8) give 193,640 parameters — the paper reports "188k"; the
+small delta is the paper not specifying layer widths (F is 18 because
+the region one-hot covers the 12-region catalog, not just the paper's
+ten regions). Optimizer: Adam(lr=0.01) per the paper's learning
 rate; Fig. 4's "99% accuracy by step 6" reproduces under these settings
 (see EXPERIMENTS.md).
 
@@ -52,7 +54,7 @@ ADAM_EPS = 1e-8
 class ModelConfig:
     """Static shape contract shared with the Rust runtime."""
     n: int = 64    # node slots (46-server fleet + scale-out headroom)
-    f: int = 16    # input features per node (graph::features in rust)
+    f: int = 18    # input features per node (graph::features in rust)
     h: int = 192   # hidden width
     h2: int = 96   # pre-head width
     c: int = 8     # task classes (max concurrent tasks)

@@ -75,5 +75,5 @@ def test_lowered_train_step_matches_eager():
 
 def test_default_manifest_values():
     cfg = DEFAULT_CONFIG
-    assert (cfg.n, cfg.f, cfg.h, cfg.h2, cfg.c) == (64, 16, 192, 96, 8)
-    assert cfg.n_params == 192_872
+    assert (cfg.n, cfg.f, cfg.h, cfg.h2, cfg.c) == (64, 18, 192, 96, 8)
+    assert cfg.n_params == 193_640

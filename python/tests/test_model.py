@@ -35,7 +35,7 @@ def test_param_layout_roundtrip():
 
 def test_default_param_count_matches_paper_scale():
     # Paper: "The parameters of GCNs are 188k."
-    assert DEFAULT_CONFIG.n_params == 192_872
+    assert DEFAULT_CONFIG.n_params == 193_640
     assert abs(DEFAULT_CONFIG.n_params - 188_000) / 188_000 < 0.1
 
 

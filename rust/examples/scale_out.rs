@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     fleet.remove_machine(45);
     let graph = ClusterGraph::from_fleet(&fleet);
     let mut tasks = ModelSpec::paper_four();
-    tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+    ModelSpec::sort_largest_first(&mut tasks);
     let mut assignment = oracle_partition(&fleet, &graph, &tasks,
                                           &OracleOptions::default());
     println!("initial assignment over {} machines:", fleet.len());

@@ -26,9 +26,14 @@ usage: hulk <subcommand> [flags]
              BENCH_micro.json.
   scenarios  list
   scenarios  run <name…|all> [--seed S] [--json] [--out DIR]
+                 [--parallel] [--threads N]
              Run named scenarios (every one covers Systems A/B/C/Hulk
              deterministically from the seed); `--json` writes
              BENCH_scenarios.json in the customSmallerIsBetter shape.
+             `--parallel` executes (scenario × system) cells on a
+             worker pool (`--threads N` pins the width; default = the
+             machine's available parallelism). Output is byte-identical
+             to a serial run.
   help       Print this grammar.
 
 Flags are `--key value`, `--key=value`, or bare `--key` for booleans."
@@ -46,7 +51,7 @@ pub struct Cli {
 /// argument, so `hulk scenarios run --json table1_fleet` keeps
 /// `table1_fleet` as a positional instead of treating it as the value
 /// of `--json`. (Use `--flag=value` to force a value for one of these.)
-const BOOL_FLAGS: [&str; 2] = ["gnn", "json"];
+const BOOL_FLAGS: [&str; 3] = ["gnn", "json", "parallel"];
 
 impl Cli {
     /// Parse `args` (without argv[0]). Flags are `--key value` or
@@ -157,6 +162,13 @@ mod tests {
             Cli::parse(&argv("scenarios run --json table1_fleet")).unwrap();
         assert_eq!(cli.positional, vec!["run", "table1_fleet"]);
         assert!(cli.flag_bool("json"));
+        // --parallel is boolean too: it must not eat a scenario name.
+        let cli =
+            Cli::parse(&argv("scenarios run --parallel all --threads 4"))
+                .unwrap();
+        assert_eq!(cli.positional, vec!["run", "all"]);
+        assert!(cli.flag_bool("parallel"));
+        assert_eq!(cli.flag_u64("threads", 1).unwrap(), 4);
         // --gnn mid-argument-list likewise leaves positionals alone.
         let cli = Cli::parse(&argv("bench --gnn fig8")).unwrap();
         assert_eq!(cli.positional, vec!["fig8"]);
@@ -171,5 +183,6 @@ mod tests {
             assert!(text.contains(sub), "usage() missing {sub}");
         }
         assert!(text.contains("BENCH_scenarios.json"));
+        assert!(text.contains("--parallel") && text.contains("--threads"));
     }
 }

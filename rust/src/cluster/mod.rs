@@ -1,7 +1,8 @@
 //! Cluster substrate: the paper's 46-server / 368-GPU geo-distributed
 //! testbed, rebuilt as a deterministic model (DESIGN.md §Substitutions).
 //!
-//! - [`region`] — the ten regions of paper Table 1 with coordinates.
+//! - [`region`] — the ten regions of paper Table 1 plus two planet-scale
+//!   extensions, with coordinates.
 //! - [`gpu`] — the paper's GPU catalog (§6.1) with NVIDIA compute
 //!   capability, per-GPU memory and throughput.
 //! - [`machine`] — a server: region + GPU model + count.
@@ -9,7 +10,7 @@
 //!   measured values; unmeasured pairs synthesized from great-circle
 //!   distance; policy blocks (the `-` entries) preserved.
 //! - [`fleet`] — fleet construction: the 46-server evaluation fleet,
-//!   random fleets for GNN training data.
+//!   planet-scale synthetic fleets, random fleets for GNN training data.
 //! - [`paper_data`] — verbatim constants from the paper (Table 1 matrix,
 //!   the Fig. 1 eight-node toy graph, Fig. 6's node 45).
 

@@ -1,5 +1,11 @@
-//! The ten regions appearing in paper Table 1 / §6, with coordinates for
-//! great-circle latency synthesis of pairs the paper did not measure.
+//! The regions machines can live in: the ten appearing in paper
+//! Table 1 / §6 plus two planet-scale extensions (Singapore, São Paulo)
+//! used by synthetic fleets. Coordinates drive great-circle latency
+//! synthesis of pairs the paper did not measure.
+//!
+//! The first ten indices are the paper's regions in Table 1 order and
+//! must stay stable — they are part of the one-hot feature contract with
+//! the GCN artifact (`graph::features`). New regions append at the end.
 
 /// A geographic region hosting machines. The paper's node feature vector is
 /// `{City, ComputeCapability, Memory}`; `Region` is the city component.
@@ -15,10 +21,12 @@ pub enum Region {
     Paris,
     Rome,
     Brasilia,
+    Singapore,
+    SaoPaulo,
 }
 
 impl Region {
-    pub const ALL: [Region; 10] = [
+    pub const ALL: [Region; 12] = [
         Region::Beijing,
         Region::Nanjing,
         Region::California,
@@ -29,6 +37,8 @@ impl Region {
         Region::Paris,
         Region::Rome,
         Region::Brasilia,
+        Region::Singapore,
+        Region::SaoPaulo,
     ];
 
     pub fn name(self) -> &'static str {
@@ -43,6 +53,8 @@ impl Region {
             Region::Paris => "Paris",
             Region::Rome => "Rome",
             Region::Brasilia => "Brasilia",
+            Region::Singapore => "Singapore",
+            Region::SaoPaulo => "São Paulo",
         }
     }
 
@@ -69,6 +81,8 @@ impl Region {
             Region::Paris => (48.86, 2.35),
             Region::Rome => (41.90, 12.50),
             Region::Brasilia => (-15.79, -47.88),
+            Region::Singapore => (1.35, 103.82),
+            Region::SaoPaulo => (-23.55, -46.63),
         }
     }
 
@@ -109,7 +123,12 @@ mod tests {
             assert_eq!(r.index(), i);
             assert_eq!(Region::from_index(i), Some(*r));
         }
-        assert_eq!(Region::from_index(10), None);
+        assert_eq!(Region::from_index(12), None);
+        // The paper's ten regions keep their Table 1 indices (artifact
+        // contract); extensions append after them.
+        assert_eq!(Region::Brasilia.index(), 9);
+        assert_eq!(Region::Singapore.index(), 10);
+        assert_eq!(Region::SaoPaulo.index(), 11);
     }
 
     #[test]

@@ -31,7 +31,7 @@ const JITTER_SIGMA: f64 = 0.30;
 /// transit), clamped to [0.1, 10] Gbit/s.
 pub const INTRA_REGION_GBPS: f64 = 10.0;
 
-/// WAN model over the ten regions. Symmetric: we use the max of the two
+/// WAN model over the full region catalog. Symmetric: we use the max of the two
 /// directed Table 1 measurements when both exist (TCP pays the slower
 /// direction).
 #[derive(Clone, Debug)]

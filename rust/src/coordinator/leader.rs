@@ -90,16 +90,25 @@ impl Coordinator {
     }
 
     /// Pool of machines not assigned to an active task and not failed.
+    /// Membership goes through a bool mask keyed by machine id — O(n)
+    /// total instead of O(n × tasks × group) scans, which matters when
+    /// the leader fronts planet-scale fleets under bursty arrivals.
     fn free_pool(&self) -> Vec<usize> {
-        (0..self.fleet.len())
-            .filter(|&m| !self.failed_machines.contains(&m))
-            .filter(|&m| {
-                self.tasks
-                    .iter()
-                    .filter(|t| t.is_active())
-                    .all(|t| !t.machines.contains(&m))
-            })
-            .collect()
+        let n = self.fleet.len();
+        let mut free = vec![true; n];
+        for &m in &self.failed_machines {
+            if m < n {
+                free[m] = false;
+            }
+        }
+        for task in self.tasks.iter().filter(|t| t.is_active()) {
+            for &m in &task.machines {
+                if m < n {
+                    free[m] = false;
+                }
+            }
+        }
+        (0..n).filter(|&m| free[m]).collect()
     }
 
     /// Admit a task: grow a group from the free pool greedily by

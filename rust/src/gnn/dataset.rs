@@ -84,7 +84,7 @@ fn sample_tasks(rng: &mut Rng, fleet_gb: f64) -> Vec<ModelSpec> {
     }
     // Largest first — class 0 is always the biggest model, matching how
     // systems::hulk feeds Algorithm 1.
-    tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+    ModelSpec::sort_largest_first(&mut tasks);
     tasks
 }
 

@@ -124,7 +124,8 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn reference_classifier() -> (Classifier, Vec<f32>) {
-        let cfg = RefGcnConfig { n: 64, f: 16, h: 16, h2: 8, c: 8 };
+        let cfg = RefGcnConfig { n: 64, f: crate::graph::FEATURE_DIM,
+                                 h: 16, h2: 8, c: 8 };
         let mut rng = Rng::new(11);
         let params: Vec<f32> =
             (0..cfg.n_params()).map(|_| (rng.normal() * 0.1) as f32).collect();

@@ -96,7 +96,7 @@ mod tests {
         let fleet = Fleet::paper_evaluation(0);
         let graph = ClusterGraph::from_fleet(&fleet);
         let mut tasks = ModelSpec::paper_four();
-        tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+        ModelSpec::sort_largest_first(&mut tasks);
         let a = oracle_partition(&fleet, &graph, &tasks,
                                  &OracleOptions::default());
         (fleet, graph, a, tasks)

@@ -28,7 +28,7 @@ pub struct RefGcnConfig {
 impl RefGcnConfig {
     /// Default artifact dims (manifest.kv).
     pub fn default_artifact() -> RefGcnConfig {
-        RefGcnConfig { n: 64, f: 16, h: 192, h2: 96, c: 8 }
+        RefGcnConfig { n: 64, f: 18, h: 192, h2: 96, c: 8 }
     }
 
     /// (name, rows, cols) layout in flat-vector order; biases are 1×d.
@@ -209,7 +209,7 @@ mod tests {
 
     #[test]
     fn default_param_count_matches_manifest() {
-        assert_eq!(RefGcnConfig::default_artifact().n_params(), 192_872);
+        assert_eq!(RefGcnConfig::default_artifact().n_params(), 193_640);
     }
 
     #[test]

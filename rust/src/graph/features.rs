@@ -2,17 +2,17 @@
 //!
 //! This is the ONLY definition of the feature encoding — Python receives
 //! `feats[N, F]` as data and never re-derives it, so Rust and the GCN
-//! artifact cannot drift. Layout (F = 16):
+//! artifact cannot drift. Layout (F = 18):
 //!
 //! | idx   | feature                                             |
 //! |-------|-----------------------------------------------------|
-//! | 0–9   | region one-hot (`Region::index`)                    |
-//! | 10    | compute capability / 10                             |
-//! | 11    | log2(total GPU memory GB) / 10                      |
-//! | 12    | degree / n                                          |
-//! | 13    | mean incident latency / 1000 (0 if isolated)        |
-//! | 14    | min incident latency / 1000 (0 if isolated)         |
-//! | 15    | constant 1.0 (bias channel)                         |
+//! | 0–11  | region one-hot (`Region::index`)                    |
+//! | 12    | compute capability / 10                             |
+//! | 13    | log2(total GPU memory GB) / 10                      |
+//! | 14    | degree / n                                          |
+//! | 15    | mean incident latency / 1000 (0 if isolated)        |
+//! | 16    | min incident latency / 1000 (0 if isolated)         |
+//! | 17    | constant 1.0 (bias channel)                         |
 //!
 //! Scalings keep every channel O(1) so the GCN's Glorot init sees a
 //! well-conditioned input.
@@ -21,7 +21,12 @@ use super::adjacency::ClusterGraph;
 use crate::cluster::Machine;
 
 /// Feature dimension; must equal `f` in artifacts/manifest.kv.
-pub const FEATURE_DIM: usize = 16;
+/// 12 region one-hots + 5 scalar channels + 1 bias channel.
+pub const FEATURE_DIM: usize = N_REGION_CHANNELS + 6;
+
+/// One-hot width reserved for regions — tracks the catalog by
+/// construction, so adding a region cannot silently corrupt rows.
+const N_REGION_CHANNELS: usize = crate::cluster::Region::ALL.len();
 
 /// Features for every machine, padded to `slots` rows (row-major
 /// `[slots, FEATURE_DIM]`). Padded rows are all-zero.
@@ -34,12 +39,12 @@ pub fn node_features(machines: &[Machine], graph: &ClusterGraph,
     for (i, m) in machines.iter().enumerate() {
         let row = &mut out[i * FEATURE_DIM..(i + 1) * FEATURE_DIM];
         row[m.region.index()] = 1.0;
-        row[10] = (m.compute_capability() / 10.0) as f32;
-        row[11] = (m.total_memory_gb().max(1.0).log2() / 10.0) as f32;
-        row[12] = graph.degree(i) as f32 / graph.n.max(1) as f32;
-        row[13] = graph.mean_latency(i).unwrap_or(0.0) / 1000.0;
-        row[14] = graph.min_latency(i).unwrap_or(0.0) / 1000.0;
-        row[15] = 1.0;
+        row[12] = (m.compute_capability() / 10.0) as f32;
+        row[13] = (m.total_memory_gb().max(1.0).log2() / 10.0) as f32;
+        row[14] = graph.degree(i) as f32 / graph.n.max(1) as f32;
+        row[15] = graph.mean_latency(i).unwrap_or(0.0) / 1000.0;
+        row[16] = graph.min_latency(i).unwrap_or(0.0) / 1000.0;
+        row[17] = 1.0;
     }
     out
 }
@@ -74,7 +79,9 @@ mod tests {
         let f = node_features(&fleet.machines, &graph, 8);
         for (i, m) in fleet.machines.iter().enumerate() {
             let row = &f[i * FEATURE_DIM..(i + 1) * FEATURE_DIM];
-            let ones: Vec<usize> = (0..10).filter(|&k| row[k] == 1.0).collect();
+            let ones: Vec<usize> = (0..N_REGION_CHANNELS)
+                .filter(|&k| row[k] == 1.0)
+                .collect();
             assert_eq!(ones, vec![m.region.index()]);
         }
     }
@@ -88,7 +95,7 @@ mod tests {
             for (k, &v) in row.iter().enumerate() {
                 assert!((0.0..=1.5).contains(&v), "feature {k} = {v}");
             }
-            assert_eq!(row[15], 1.0);
+            assert_eq!(row[17], 1.0);
         }
     }
 
@@ -97,10 +104,10 @@ mod tests {
         let (fleet, graph) = toy();
         let f = node_features(&fleet.machines, &graph, 8);
         // node2 is 8×A100 (640 GB), node6 is 8×1080Ti (88 GB).
-        let mem2 = f[2 * FEATURE_DIM + 11];
-        let mem6 = f[6 * FEATURE_DIM + 11];
+        let mem2 = f[2 * FEATURE_DIM + 13];
+        let mem6 = f[6 * FEATURE_DIM + 13];
         assert!(mem2 > mem6);
-        let cc2 = f[2 * FEATURE_DIM + 10];
+        let cc2 = f[2 * FEATURE_DIM + 12];
         assert!((cc2 - 0.8).abs() < 1e-6);
     }
 
@@ -109,8 +116,14 @@ mod tests {
         let machines = vec![Machine::new(0, Region::Rome, GpuModel::V100, 8)];
         let graph = ClusterGraph { n: 1, adj: vec![0.0] };
         let f = node_features(&machines, &graph, 4);
-        assert_eq!(f[13], 0.0);
+        assert_eq!(f[15], 0.0);
+        assert_eq!(f[16], 0.0);
         assert_eq!(f[14], 0.0);
-        assert_eq!(f[12], 0.0);
+    }
+
+    #[test]
+    fn region_channel_width_matches_region_catalog() {
+        assert_eq!(N_REGION_CHANNELS, Region::ALL.len());
+        assert_eq!(FEATURE_DIM, Region::ALL.len() + 6);
     }
 }

@@ -57,33 +57,34 @@ fn cmd_scenarios(cli: &Cli) -> Result<()> {
             }
             println!("{}", t.render());
             println!("run with: hulk scenarios run <name…|all> \
-                      [--seed S] [--json] [--out DIR]");
+                      [--seed S] [--json] [--out DIR] [--parallel] \
+                      [--threads N]");
             Ok(())
         }
         Some("run") => {
             let seed = cli.flag_u64("seed", 0)?;
             let names = &cli.positional[1..];
-            let ran_all =
-                names.is_empty() || names.iter().any(|n| n == "all");
-            let results = if ran_all {
-                hulk::scenarios::run_all(seed)?
-            } else {
-                let mut out = Vec::with_capacity(names.len());
-                for name in names {
-                    let scenario = hulk::scenarios::find_scenario(name)
-                        .ok_or_else(|| anyhow::anyhow!(
-                            "unknown scenario {name:?} (see `hulk \
-                             scenarios list`)"))?;
-                    out.push(scenario.run(seed)?);
-                }
-                out
-            };
+            // Every name is validated before anything runs: an unknown
+            // scenario exits non-zero listing the valid names instead
+            // of silently running the wrong suite.
+            let (specs, ran_all) =
+                hulk::scenarios::resolve_scenarios(names)?;
+            let threads = scenario_threads(cli)?;
+            let started = std::time::Instant::now();
+            let results =
+                hulk::scenarios::run_specs(&specs, seed, threads)?;
+            let wall = started.elapsed().as_secs_f64();
             for r in &results {
                 println!("\n================ {} (seed {seed}) \
                           ================",
                          r.scenario);
                 println!("{}", r.rendered);
             }
+            // Wall-clock is logged to stdout only — the JSON report
+            // stays free of timing so parallel and serial runs diff
+            // byte-identical.
+            println!("ran {} scenario(s) on {} thread(s) in {:.2}s",
+                     results.len(), threads, wall);
             if cli.flag_bool("json") {
                 let out = PathBuf::from(cli.flag("out").unwrap_or("."));
                 // A subset run gets its own file name so it cannot
@@ -108,6 +109,23 @@ fn cmd_scenarios(cli: &Cli) -> Result<()> {
         _ => anyhow::bail!(
             "usage: hulk scenarios <list|run> … (see `hulk help`)"),
     }
+}
+
+/// Worker-pool width for `scenarios run`: `--threads N` pins it (and
+/// implies parallel execution); bare `--parallel` uses the machine's
+/// available parallelism; default is serial.
+fn scenario_threads(cli: &Cli) -> Result<usize> {
+    if cli.flag("threads").is_some() {
+        let n = cli.flag_u64("threads", 1)?;
+        anyhow::ensure!(n >= 1, "--threads must be >= 1, got {n}");
+        return Ok(n as usize);
+    }
+    if cli.flag_bool("parallel") {
+        return Ok(std::thread::available_parallelism()
+            .map(std::num::NonZeroUsize::get)
+            .unwrap_or(4));
+    }
+    Ok(1)
 }
 
 fn cmd_info(cli: &Cli) -> Result<()> {

@@ -89,6 +89,19 @@ impl ModelSpec {
                     hidden: 1024, seq_len: 512, batch: 256 }
     }
 
+    /// Canonical workload order: parameters descending (Algorithm 1
+    /// feeds tasks largest-first), name ascending as the tie-breaker.
+    /// `f64::total_cmp` makes the sort total (no NaN panic) and the name
+    /// tie-break makes it fully deterministic across equal-sized models
+    /// (e.g. BERT-large vs XLNet, both 340M).
+    pub fn sort_largest_first(tasks: &mut [ModelSpec]) {
+        tasks.sort_by(|a, b| {
+            b.params
+                .total_cmp(&a.params)
+                .then_with(|| a.name.cmp(b.name))
+        });
+    }
+
     /// Fig. 8 workload: the four-model task set of §6.3.
     pub fn paper_four() -> Vec<ModelSpec> {
         vec![
@@ -143,6 +156,33 @@ mod tests {
         assert!(opt.train_gb() > 1000.0); // 2.8 TB
         assert!(bert.train_gb() < 10.0);
         assert!(opt.activation_bytes(1) > 0.0);
+    }
+
+    #[test]
+    fn sort_largest_first_is_total_and_tie_stable() {
+        // BERT-large and XLNet are both 340M: params alone cannot order
+        // them, and a NaN must not panic the comparator.
+        let mut tasks = vec![
+            ModelSpec::xlnet_large(),
+            ModelSpec::bert_large(),
+            ModelSpec { params: f64::NAN, ..ModelSpec::gpt2_xl() },
+            ModelSpec::opt_175b(),
+        ];
+        ModelSpec::sort_largest_first(&mut tasks);
+        // NaN sorts above every finite value under total_cmp descending.
+        assert!(tasks[0].params.is_nan());
+        assert_eq!(tasks[1].name, "OPT (175B)");
+        // The 340M tie breaks by name, deterministically.
+        assert_eq!(tasks[2].name, "BERT-large (340M)");
+        assert_eq!(tasks[3].name, "XLNet (340M)");
+
+        // Shuffled input reaches the same order.
+        let mut a = ModelSpec::paper_six();
+        let mut b = ModelSpec::paper_six();
+        b.reverse();
+        ModelSpec::sort_largest_first(&mut a);
+        ModelSpec::sort_largest_first(&mut b);
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -96,7 +96,7 @@ mod tests {
     use std::io::Write;
 
     fn manifest_text() -> &'static str {
-        "format 1\nn 64\nf 16\nh 256\nh2 128\nc 8\np 174216\n\
+        "format 1\nn 64\nf 18\nh 256\nh2 128\nc 8\np 174216\n\
          forward gcn_forward.hlo.txt\ntrain_step gcn_train_step.hlo.txt\n\
          init_params init_params.f32\n"
     }

@@ -173,7 +173,7 @@ fn table2(cli: &Cli) -> Result<()> {
     let fleet = Fleet::paper_evaluation(cli.flag_u64("seed", 0)?);
     let graph = ClusterGraph::from_fleet(&fleet);
     let mut tasks = ModelSpec::paper_four();
-    tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+    ModelSpec::sort_largest_first(&mut tasks);
     let a = oracle_partition(&fleet, &graph, &tasks,
                              &OracleOptions::default());
     println!("{}", a.render_table(&tasks));
@@ -312,7 +312,7 @@ fn ablation(cli: &Cli) -> Result<()> {
     let fleet = Fleet::paper_evaluation(seed);
     let graph = ClusterGraph::from_fleet(&fleet);
     let mut tasks = ModelSpec::paper_four();
-    tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+    ModelSpec::sort_largest_first(&mut tasks);
     let a = oracle_partition(&fleet, &graph, &tasks,
                              &OracleOptions::default());
 
@@ -386,7 +386,7 @@ fn micro(cli: &Cli) -> Result<()> {
     let graph = ClusterGraph::from_fleet(&fleet);
     let tasks = {
         let mut t = ModelSpec::paper_four();
-        t.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+        ModelSpec::sort_largest_first(&mut t);
         t
     };
     let mut b = Bencher::new(BenchConfig::default());

@@ -4,9 +4,14 @@
 //! (`BENCH_*.json` via `benchkit`).
 //!
 //! - [`registry`] — the named-scenario registry (`hulk scenarios`):
-//!   deterministic seed→result runners for the Table 1 fleet, WAN
-//!   degradation, heterogeneous GPUs, fleet growth, failure storms and
-//!   multi-tenant streaming arrivals.
+//!   deterministic seed→result definitions for the Table 1 fleet, WAN
+//!   degradation, heterogeneous GPUs, fleet growth, failure storms,
+//!   multi-tenant streaming arrivals, planet-scale synthetic fleets and
+//!   bursty Poisson task streams.
+//! - [`runner`] — the execution engine: scenario specs decompose into
+//!   (scenario × system) cells executed serially or across a std-thread
+//!   worker pool, with insertion-ordered merging so `--parallel` output
+//!   is byte-identical to a serial run.
 //! - [`evaluate`] — a workload through Systems A/B/C/Hulk (the Fig. 8 /
 //!   Fig. 10 rows); the primitive every scenario builds on.
 //! - [`sweep`] — parameter sweeps (fleet size, microbatches, WAN
@@ -20,10 +25,13 @@
 pub mod bench;
 pub mod evaluate;
 pub mod registry;
+pub mod runner;
 pub mod sweep;
 
 pub use evaluate::{evaluate_all, SystemEval, SystemKind};
-pub use registry::{all_scenarios, find_scenario, run_all, Scenario,
-                   ScenarioResult};
+pub use registry::{all_scenarios, find_scenario, resolve_scenarios,
+                   run_all};
+pub use runner::{run_specs, ScenarioBody, ScenarioResult, ScenarioSpec,
+                 SeedPolicy};
 pub use sweep::{feasible_workload, fleet_size_sweep, microbatch_sweep,
                 truncated_fleet, wan_degradation_sweep, SweepPoint};

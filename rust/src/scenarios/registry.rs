@@ -5,12 +5,21 @@
 //! Scenarios exist so the headline claim — Hulk >20% over the best
 //! baseline — is tracked across *many* WAN/fleet situations, not just the
 //! paper's Table 1 testbed: WAN degradation, heterogeneous GPU fleets,
-//! fleet growth, failure storms and multi-tenant streaming arrivals.
-//! Everything is a pure function of the seed: no wall clock, no global
-//! state, so two runs with the same seed produce identical entries.
+//! fleet growth, failure storms, multi-tenant streaming arrivals,
+//! planet-scale synthetic fleets and bursty Poisson task streams.
+//!
+//! Since the runner refactor, a scenario is **data**: a
+//! [`ScenarioSpec`] with a seed policy and a body — either the standard
+//! `Evaluate` shape (fleet builder + workload, fanned out as one cell
+//! per system by [`super::runner`]) or a `Custom` function for
+//! leader-loop streams and multi-step sweeps. Everything is a pure
+//! function of the seed: no wall clock, no global state, so two runs
+//! with the same seed produce identical entries — serial or parallel.
 //!
 //! CLI: `hulk scenarios list` and `hulk scenarios run <name…|all>
-//! [--seed S] [--json] [--out DIR]`.
+//! [--seed S] [--json] [--out DIR] [--parallel] [--threads N]`.
+
+use std::collections::BTreeSet;
 
 use anyhow::Result;
 
@@ -18,7 +27,7 @@ use crate::benchkit::BenchEntry;
 use crate::cluster::paper_data::fig6_node_45;
 use crate::cluster::{Fleet, GpuModel, Machine, Region, WanModel};
 use crate::coordinator::{scale_out, Coordinator, CoordinatorEvent,
-                         CoordinatorReply, RecoveryAction};
+                         CoordinatorReply, RecoveryAction, TaskState};
 use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
 use crate::parallel::pipeline_cost;
@@ -30,81 +39,132 @@ use crate::util::rng::Rng;
 use crate::util::table::{fmt_ms, Table};
 
 use super::evaluate::{evaluate_all, SystemEval, SystemKind};
+use super::runner::{run_specs, ScenarioBody, ScenarioResult, ScenarioSpec,
+                    SeedPolicy};
 use super::sweep::{feasible_workload, fleet_size_sweep, truncated_fleet};
 
-/// A registered scenario: a name, a one-line description, and a
-/// deterministic runner `seed → result`.
-pub struct Scenario {
-    pub name: &'static str,
-    pub description: &'static str,
-    runner: fn(u64) -> Result<ScenarioResult>,
-}
-
-impl Scenario {
-    pub fn run(&self, seed: u64) -> Result<ScenarioResult> {
-        (self.runner)(seed)
-    }
-}
-
-/// Output of one scenario run.
-pub struct ScenarioResult {
-    pub scenario: &'static str,
-    /// Machine-readable rows for the `BENCH_*.json` report.
-    pub entries: Vec<BenchEntry>,
-    /// Human-readable rendering for the CLI.
-    pub rendered: String,
-}
-
 /// Every registered scenario, in canonical order.
-pub fn all_scenarios() -> Vec<Scenario> {
+pub fn all_scenarios() -> Vec<ScenarioSpec> {
     vec![
-        Scenario {
+        ScenarioSpec {
             name: "table1_fleet",
             description: "Paper §6.1 fleet (46 servers, Table 1 WAN), \
                           four-model workload under all four systems",
-            runner: table1_fleet,
+            seed: SeedPolicy::Global,
+            body: ScenarioBody::Evaluate {
+                fleet: Fleet::paper_evaluation,
+                workload: |_| ModelSpec::paper_four(),
+                finish: table1_finish,
+            },
         },
-        Scenario {
+        ScenarioSpec {
             name: "wan_degradation",
             description: "Every inter-region latency scaled ×1..×8; \
                           systems compared on the ×4 WAN",
-            runner: wan_degradation,
+            seed: SeedPolicy::Global,
+            body: ScenarioBody::Custom(wan_degradation),
         },
-        Scenario {
+        ScenarioSpec {
             name: "hetero_gpu",
             description: "20-server fleet with per-machine GPU models \
                           drawn from the full catalog (A100 … TITAN Xp)",
-            runner: hetero_gpu,
+            seed: SeedPolicy::Global,
+            body: ScenarioBody::Evaluate {
+                fleet: hetero_fleet,
+                workload: |_| vec![ModelSpec::t5_11b(), ModelSpec::gpt2_xl(),
+                                   ModelSpec::bert_large()],
+                finish: hetero_finish,
+            },
         },
-        Scenario {
+        ScenarioSpec {
             name: "fleet_growth",
             description: "Fleet grown 12→46 servers plus the Fig. 6 \
                           node-45 scale-out join",
-            runner: fleet_growth,
+            seed: SeedPolicy::Global,
+            body: ScenarioBody::Custom(fleet_growth),
         },
-        Scenario {
+        ScenarioSpec {
             name: "failure_storm",
             description: "Five machine failures against the leader's \
                           recovery policy, then systems on the survivors",
-            runner: failure_storm,
+            seed: SeedPolicy::Global,
+            body: ScenarioBody::Custom(failure_storm),
         },
-        Scenario {
+        ScenarioSpec {
             name: "multi_tenant",
             description: "Six models arriving as a stream through the \
                           leader loop with a mid-stream failure",
-            runner: multi_tenant,
+            seed: SeedPolicy::Global,
+            body: ScenarioBody::Custom(multi_tenant),
+        },
+        ScenarioSpec {
+            name: "planet_scale",
+            description: "Synthetic 220-server fleet over all 12 regions \
+                          (great-circle WAN), six-model workload",
+            seed: SeedPolicy::Global,
+            body: ScenarioBody::Evaluate {
+                fleet: |seed| Fleet::synthetic(220, 12, seed),
+                workload: |fleet| {
+                    feasible_workload(fleet, &ModelSpec::paper_six())
+                },
+                finish: planet_finish,
+            },
+        },
+        ScenarioSpec {
+            name: "burst_arrivals",
+            description: "Poisson-like seeded task bursts through the \
+                          leader loop, with mid-storm machine failures",
+            seed: SeedPolicy::Tagged(0x4255_5253_5421), // "BURST!"
+            body: ScenarioBody::Custom(burst_arrivals),
         },
     ]
 }
 
 /// Look up a scenario by name.
-pub fn find_scenario(name: &str) -> Option<Scenario> {
+pub fn find_scenario(name: &str) -> Option<ScenarioSpec> {
     all_scenarios().into_iter().find(|s| s.name == name)
 }
 
-/// Run every scenario with one seed.
+/// Resolve CLI scenario names to specs. An empty list or any `"all"`
+/// selects the full registry — but **every** given name is validated
+/// first, so a typo can never silently run the wrong suite; the error
+/// lists the valid names. A subset keeps the user's order (duplicates
+/// included, as before).
+pub fn resolve_scenarios(names: &[String])
+    -> Result<(Vec<ScenarioSpec>, bool)>
+{
+    let all = all_scenarios();
+    let unknown: Vec<&str> = names
+        .iter()
+        .map(String::as_str)
+        .filter(|&n| n != "all" && !all.iter().any(|s| s.name == n))
+        .collect();
+    if !unknown.is_empty() {
+        let valid: Vec<&str> = all.iter().map(|s| s.name).collect();
+        anyhow::bail!(
+            "unknown scenario{} {unknown:?}; valid names: {} (or `all`)",
+            if unknown.len() > 1 { "s" } else { "" },
+            valid.join(", ")
+        );
+    }
+    if names.is_empty() || names.iter().any(|n| n == "all") {
+        return Ok((all, true));
+    }
+    let picked: Vec<ScenarioSpec> = names
+        .iter()
+        .map(|n| {
+            all.iter()
+                .find(|s| s.name == n.as_str())
+                .expect("validated above")
+                .clone()
+        })
+        .collect();
+    Ok((picked, false))
+}
+
+/// Run every scenario with one seed, serially.
 pub fn run_all(seed: u64) -> Result<Vec<ScenarioResult>> {
-    all_scenarios().iter().map(|s| s.run(seed)).collect()
+    run_specs(&all_scenarios(), seed, 1)
 }
 
 /// Lowercase ascii-alnum slug for entry names: `"OPT (175B)"` →
@@ -148,6 +208,16 @@ fn improvement_entry(prefix: &str, eval: &SystemEval) -> BenchEntry {
     )
 }
 
+/// Distinct regions hosting machines of `fleet`.
+fn region_count(fleet: &Fleet) -> usize {
+    fleet
+        .machines
+        .iter()
+        .map(|m| m.region)
+        .collect::<BTreeSet<Region>>()
+        .len()
+}
+
 /// The shared Fig. 6 scale-out procedure (used by both the `fig6` bench
 /// and the `fleet_growth` scenario): drop node 45 from the evaluation
 /// fleet, oracle-partition the four-model workload, then join the
@@ -161,7 +231,7 @@ pub(crate) fn fig6_scale_out(seed: u64)
     fleet.remove_machine(45);
     let graph = ClusterGraph::from_fleet(&fleet);
     let mut tasks = ModelSpec::paper_four();
-    tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+    ModelSpec::sort_largest_first(&mut tasks);
     let mut assignment = oracle_partition(&fleet, &graph, &tasks,
                                           &OracleOptions::default());
     let before_cost = assignment.total_cost(&graph);
@@ -171,23 +241,92 @@ pub(crate) fn fig6_scale_out(seed: u64)
     (fleet, assignment, tasks, id, joined, before_cost)
 }
 
-// ------------------------------------------------------------ scenarios --
+// ----------------------------------------------------- fleet builders --
+
+/// Heterogeneous fleet: 20 servers over five well-connected regions, GPU
+/// model and count drawn per machine from the full catalog.
+fn hetero_fleet(seed: u64) -> Fleet {
+    let regions = [Region::California, Region::Tokyo, Region::Berlin,
+                   Region::London, Region::Rome];
+    let mut rng = Rng::new(seed ^ 0x4845_5445_524F); // "HETERO"
+    let mut machines = Vec::new();
+    for i in 0..20 {
+        let region = regions[i % regions.len()];
+        let gpu = GpuModel::ALL[rng.below(GpuModel::ALL.len())];
+        let n_gpus = [4, 8, 8, 12][rng.below(4)];
+        machines.push(Machine::new(i, region, gpu, n_gpus));
+    }
+    Fleet::new(machines, WanModel::new(seed))
+}
+
+// ----------------------------------------------------- finish reports --
 
 /// The paper's own evaluation situation (Table 1 WAN + §6.1 fleet).
-fn table1_fleet(seed: u64) -> Result<ScenarioResult> {
-    let fleet = Fleet::paper_evaluation(seed);
-    let eval = evaluate_all(&fleet, &ModelSpec::paper_four(),
-                            HulkSplitterKind::Oracle)?;
-    let mut entries = eval_entries("table1_fleet", &eval);
-    entries.push(improvement_entry("table1_fleet", &eval));
+fn table1_finish(_fleet: &Fleet, eval: &SystemEval)
+    -> (Vec<BenchEntry>, String)
+{
+    let mut entries = eval_entries("table1_fleet", eval);
+    entries.push(improvement_entry("table1_fleet", eval));
     let rendered = format!(
         "{}\nHulk improvement over best feasible baseline: {:.1}% \
          (paper claims >20%)\n",
         eval.render(),
         eval.hulk_improvement() * 100.0
     );
-    Ok(ScenarioResult { scenario: "table1_fleet", entries, rendered })
+    (entries, rendered)
 }
+
+fn hetero_finish(fleet: &Fleet, eval: &SystemEval)
+    -> (Vec<BenchEntry>, String)
+{
+    let mut entries = eval_entries("hetero_gpu", eval);
+    entries.push(improvement_entry("hetero_gpu", eval));
+    entries.push(BenchEntry::new(
+        "hetero_gpu/fleet_total_memory_gb",
+        fleet.total_memory_gb(),
+        "GB",
+    ));
+    let rendered = format!(
+        "fleet: {} servers / {} GPUs / {:.1} TB over {} regions\n{}\n\
+         Hulk improvement: {:.1}%\n",
+        fleet.len(),
+        fleet.total_gpus(),
+        fleet.total_memory_gb() / 1e3,
+        region_count(fleet),
+        eval.render(),
+        eval.hulk_improvement() * 100.0
+    );
+    (entries, rendered)
+}
+
+fn planet_finish(fleet: &Fleet, eval: &SystemEval)
+    -> (Vec<BenchEntry>, String)
+{
+    let mut entries = eval_entries("planet_scale", eval);
+    entries.push(improvement_entry("planet_scale", eval));
+    entries.push(BenchEntry::new("planet_scale/fleet_servers",
+                                 fleet.len() as f64, "count"));
+    entries.push(BenchEntry::new("planet_scale/fleet_regions",
+                                 region_count(fleet) as f64, "count"));
+    entries.push(BenchEntry::new(
+        "planet_scale/fleet_total_memory_gb",
+        fleet.total_memory_gb(),
+        "GB",
+    ));
+    let rendered = format!(
+        "planet fleet: {} servers / {} GPUs / {:.1} TB over {} regions\n\
+         {}\nHulk improvement over best feasible baseline: {:.1}%\n",
+        fleet.len(),
+        fleet.total_gpus(),
+        fleet.total_memory_gb() / 1e3,
+        region_count(fleet),
+        eval.render(),
+        eval.hulk_improvement() * 100.0
+    );
+    (entries, rendered)
+}
+
+// ------------------------------------------------------------ scenarios --
 
 /// WAN degradation ×1..×8; the ×4 WAN gets the full system comparison.
 /// Each factor is evaluated exactly once (no second pass through the
@@ -219,43 +358,6 @@ fn wan_degradation(seed: u64) -> Result<ScenarioResult> {
         t.render()
     );
     Ok(ScenarioResult { scenario: "wan_degradation", entries, rendered })
-}
-
-/// Heterogeneous fleet: 20 servers over five well-connected regions, GPU
-/// model and count drawn per machine from the full catalog.
-fn hetero_gpu(seed: u64) -> Result<ScenarioResult> {
-    let regions = [Region::California, Region::Tokyo, Region::Berlin,
-                   Region::London, Region::Rome];
-    let mut rng = Rng::new(seed ^ 0x4845_5445_524F); // "HETERO"
-    let mut machines = Vec::new();
-    for i in 0..20 {
-        let region = regions[i % regions.len()];
-        let gpu = GpuModel::ALL[rng.below(GpuModel::ALL.len())];
-        let n_gpus = [4, 8, 8, 12][rng.below(4)];
-        machines.push(Machine::new(i, region, gpu, n_gpus));
-    }
-    let fleet = Fleet::new(machines, WanModel::new(seed));
-    let workload = vec![ModelSpec::t5_11b(), ModelSpec::gpt2_xl(),
-                        ModelSpec::bert_large()];
-    let eval = evaluate_all(&fleet, &workload, HulkSplitterKind::Oracle)?;
-    let mut entries = eval_entries("hetero_gpu", &eval);
-    entries.push(improvement_entry("hetero_gpu", &eval));
-    entries.push(BenchEntry::new(
-        "hetero_gpu/fleet_total_memory_gb",
-        fleet.total_memory_gb(),
-        "GB",
-    ));
-    let rendered = format!(
-        "fleet: {} servers / {} GPUs / {:.1} TB over {} regions\n{}\n\
-         Hulk improvement: {:.1}%\n",
-        fleet.len(),
-        fleet.total_gpus(),
-        fleet.total_memory_gb() / 1e3,
-        regions.len(),
-        eval.render(),
-        eval.hulk_improvement() * 100.0
-    );
-    Ok(ScenarioResult { scenario: "hetero_gpu", entries, rendered })
 }
 
 /// Fleet growth 12→46 plus the Fig. 6 scale-out join.
@@ -526,6 +628,154 @@ fn multi_tenant(seed: u64) -> Result<ScenarioResult> {
     Ok(ScenarioResult { scenario: "multi_tenant", entries, rendered })
 }
 
+/// Knuth's Poisson sampler: deterministic given the rng stream.
+fn poisson(rng: &mut Rng, lambda: f64) -> usize {
+    let floor = (-lambda).exp();
+    let mut k = 0usize;
+    let mut p = 1.0;
+    loop {
+        p *= rng.f64();
+        if p <= floor {
+            return k;
+        }
+        k += 1;
+    }
+}
+
+/// Poisson-like seeded task bursts through the leader loop: every slot
+/// draws `Poisson(λ)` arrivals from the small/mid model catalog, two
+/// machines die mid-storm, and the queue drains under a bounded tick
+/// budget — so total leader events are bounded regardless of seed.
+fn burst_arrivals(seed: u64) -> Result<ScenarioResult> {
+    const SLOTS: usize = 24;
+    const LAMBDA: f64 = 0.75;
+    const MAX_DRAIN_TICKS: u64 = 64;
+    const FAILURE_SLOTS: [usize; 2] = [8, 16];
+
+    let fleet = Fleet::paper_evaluation(seed);
+    let mut rng = Rng::new(seed);
+    let catalog = [ModelSpec::t5_11b(), ModelSpec::gpt2_xl(),
+                   ModelSpec::bert_large(), ModelSpec::roberta_large(),
+                   ModelSpec::xlnet_large()];
+    let mut coordinator = Coordinator::new(fleet.clone());
+    let mut events: u64 = 0;
+    let mut peak_queue: u64 = 0;
+    for slot in 0..SLOTS {
+        for _ in 0..poisson(&mut rng, LAMBDA) {
+            let model = catalog[rng.below(catalog.len())].clone();
+            let iterations = 10 + rng.below(20) as u64;
+            coordinator.handle(CoordinatorEvent::Submit { model,
+                                                          iterations });
+            events += 1;
+        }
+        if FAILURE_SLOTS.contains(&slot) {
+            let victim = rng.below(fleet.len());
+            coordinator
+                .handle(CoordinatorEvent::MachineFailed { machine: victim });
+            events += 1;
+        }
+        coordinator.handle(CoordinatorEvent::Tick { iterations: 5 });
+        events += 1;
+        let queued = coordinator
+            .tasks
+            .iter()
+            .filter(|t| t.state == TaskState::Queued)
+            .count() as u64;
+        peak_queue = peak_queue.max(queued);
+    }
+    // Bounded drain: completed tasks free machines for the queue; stop
+    // as soon as nothing is active or queued, or at the tick budget.
+    let mut drain_ticks: u64 = 0;
+    while drain_ticks < MAX_DRAIN_TICKS
+        && coordinator
+            .tasks
+            .iter()
+            .any(|t| t.is_active() || t.state == TaskState::Queued)
+    {
+        coordinator.handle(CoordinatorEvent::Tick { iterations: 10 });
+        events += 1;
+        drain_ticks += 1;
+    }
+
+    let mut entries = Vec::new();
+    for counter in ["tasks_submitted", "tasks_admitted", "tasks_queued",
+                    "machine_failures"]
+    {
+        entries.push(BenchEntry::new(
+            format!("burst_arrivals/{counter}"),
+            coordinator.metrics.counter(counter) as f64,
+            "count",
+        ));
+    }
+    let completed = coordinator
+        .tasks
+        .iter()
+        .filter(|t| t.state == TaskState::Completed)
+        .count();
+    entries.push(BenchEntry::new("burst_arrivals/tasks_completed",
+                                 completed as f64, "count"));
+    entries.push(BenchEntry::new("burst_arrivals/events_processed",
+                                 events as f64, "count"));
+    entries.push(BenchEntry::new("burst_arrivals/peak_queue_depth",
+                                 peak_queue as f64, "count"));
+    entries.push(BenchEntry::new("burst_arrivals/drain_ticks",
+                                 drain_ticks as f64, "count"));
+
+    // Hulk: per-task iteration time on the leader's groups (task ids
+    // disambiguate repeated models in the stream).
+    let mut t = Table::new(&["task", "model", "group size", "iter"]);
+    for task in &coordinator.tasks {
+        if task.machines.is_empty() {
+            continue;
+        }
+        if let Some(ms) = coordinator.task_iter_ms(task) {
+            entries.push(BenchEntry::new(
+                format!("burst_arrivals/hulk/t{}_{}/iter_ms", task.id,
+                        slug(task.model.name)),
+                ms,
+                "ms",
+            ));
+            t.row(&[task.id.to_string(), task.model.name.to_string(),
+                    task.machines.len().to_string(), fmt_ms(ms)]);
+        }
+    }
+    // Baselines on the pristine fleet, one row per distinct model seen.
+    let mut seen: Vec<&'static str> = Vec::new();
+    for task in &coordinator.tasks {
+        if seen.contains(&task.model.name) {
+            continue;
+        }
+        seen.push(task.model.name);
+        for (kind, cost) in [
+            (SystemKind::SystemA, system_a::cost(&fleet, &task.model)),
+            (SystemKind::SystemB, system_b::cost(&fleet, &task.model)),
+            (SystemKind::SystemC, system_c::cost(&fleet, &task.model)),
+        ] {
+            if cost.is_feasible() {
+                entries.push(BenchEntry::new(
+                    format!("burst_arrivals/{}/{}/iter_ms", kind.slug(),
+                            slug(task.model.name)),
+                    cost.total_ms(),
+                    "ms",
+                ));
+            }
+        }
+    }
+
+    let rendered = format!(
+        "{SLOTS} arrival slots (λ = {LAMBDA}), {} submitted | {} \
+         admitted | {} queued | {completed} completed | {} failures\n\
+         {events} leader events, peak queue {peak_queue}, drained in \
+         {drain_ticks} ticks\n— Hulk groups (leader loop) —\n{}",
+        coordinator.metrics.counter("tasks_submitted"),
+        coordinator.metrics.counter("tasks_admitted"),
+        coordinator.metrics.counter("tasks_queued"),
+        coordinator.metrics.counter("machine_failures"),
+        t.render()
+    );
+    Ok(ScenarioResult { scenario: "burst_arrivals", entries, rendered })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -541,14 +791,49 @@ mod tests {
     #[test]
     fn registry_is_populated_with_unique_names() {
         let scenarios = all_scenarios();
-        assert!(scenarios.len() >= 6);
+        assert!(scenarios.len() >= 8);
         let mut names: Vec<&str> =
             scenarios.iter().map(|s| s.name).collect();
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), scenarios.len());
         assert!(find_scenario("table1_fleet").is_some());
+        assert!(find_scenario("planet_scale").is_some());
+        assert!(find_scenario("burst_arrivals").is_some());
         assert!(find_scenario("no_such_scenario").is_none());
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_names_with_the_valid_list() {
+        let err = resolve_scenarios(&["bogus".to_string()]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("bogus"), "{msg}");
+        for s in all_scenarios() {
+            assert!(msg.contains(s.name), "{msg} missing {}", s.name);
+        }
+        // Unknown names are rejected even when `all` rides along — no
+        // silent success path for typos.
+        let err = resolve_scenarios(&["all".to_string(),
+                                      "bogus".to_string()])
+            .unwrap_err();
+        assert!(err.to_string().contains("bogus"));
+    }
+
+    #[test]
+    fn resolve_selects_all_or_subset() {
+        let (specs, ran_all) = resolve_scenarios(&[]).unwrap();
+        assert!(ran_all);
+        assert_eq!(specs.len(), all_scenarios().len());
+        let (specs, ran_all) =
+            resolve_scenarios(&["all".to_string()]).unwrap();
+        assert!(ran_all);
+        assert_eq!(specs.len(), all_scenarios().len());
+        let names = vec!["hetero_gpu".to_string(),
+                         "table1_fleet".to_string()];
+        let (specs, ran_all) = resolve_scenarios(&names).unwrap();
+        assert!(!ran_all);
+        let picked: Vec<&str> = specs.iter().map(|s| s.name).collect();
+        assert_eq!(picked, vec!["hetero_gpu", "table1_fleet"]);
     }
 
     #[test]
@@ -577,5 +862,18 @@ mod tests {
             .iter()
             .any(|e| e.name == "x/hulk/opt_175b/iter_ms"));
         assert!(entries.iter().all(|e| e.value.is_finite()));
+    }
+
+    #[test]
+    fn poisson_sampler_is_deterministic_and_plausible() {
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        let draws_a: Vec<usize> =
+            (0..64).map(|_| poisson(&mut a, 0.75)).collect();
+        let draws_b: Vec<usize> =
+            (0..64).map(|_| poisson(&mut b, 0.75)).collect();
+        assert_eq!(draws_a, draws_b);
+        let mean = draws_a.iter().sum::<usize>() as f64 / 64.0;
+        assert!((0.3..1.5).contains(&mean), "mean {mean}");
     }
 }

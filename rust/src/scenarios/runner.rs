@@ -1,0 +1,378 @@
+//! The scenario execution engine.
+//!
+//! [`ScenarioSpec`] turns a scenario into *data* — a name, a seed
+//! policy, and a body that is either the standard "fleet × workload
+//! through all four systems" shape or an opaque custom runner. The
+//! engine decomposes specs into **cells** (one per (scenario, system)
+//! for the standard shape, one per scenario otherwise), executes the
+//! cells either inline or across a `std::thread` worker pool, and
+//! merges the outputs back **in registry insertion order**.
+//!
+//! Determinism contract: every cell is a pure function of
+//! `(spec, seed)` — no wall clock, no global state — and the merge
+//! order is fixed by the spec list, not by completion order. Therefore
+//! `hulk scenarios run all --json --parallel` writes a
+//! `BENCH_scenarios.json` that is byte-identical to the serial run's,
+//! which CI enforces as a gate.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::benchkit::BenchEntry;
+use crate::cluster::Fleet;
+use crate::graph::ClusterGraph;
+use crate::models::ModelSpec;
+use crate::parallel::IterCost;
+use crate::systems::hulk::{hulk_plan, HulkSplitterKind};
+use crate::systems::{system_a, system_b, system_c};
+
+use super::evaluate::{SystemEval, SystemKind};
+
+/// How a scenario derives its effective seed from the CLI seed.
+#[derive(Clone, Copy, Debug)]
+pub enum SeedPolicy {
+    /// Use the CLI seed unchanged.
+    Global,
+    /// XOR a domain-separation tag into the CLI seed so sibling
+    /// scenarios draw decorrelated random streams.
+    Tagged(u64),
+}
+
+impl SeedPolicy {
+    pub fn apply(self, seed: u64) -> u64 {
+        match self {
+            SeedPolicy::Global => seed,
+            SeedPolicy::Tagged(tag) => seed ^ tag,
+        }
+    }
+}
+
+/// What a scenario *is*, as data. Only `fn` pointers — specs are
+/// `Send + Sync + Clone` for free, which is what lets the worker pool
+/// execute their cells on any thread.
+#[derive(Clone)]
+pub enum ScenarioBody {
+    /// The standard shape: build a fleet from the effective seed, pick
+    /// a workload on it, and run the workload through Systems A/B/C and
+    /// Hulk. The engine fans this out as one cell per system.
+    Evaluate {
+        /// Effective seed → fleet.
+        fleet: fn(u64) -> Fleet,
+        /// Workload on that fleet. The engine sorts it canonically
+        /// (largest-first, name tie-break) before costing.
+        workload: fn(&Fleet) -> Vec<ModelSpec>,
+        /// Assemble `BENCH_*.json` entries + the human-readable report
+        /// from the merged four-system evaluation.
+        finish: fn(&Fleet, &SystemEval) -> (Vec<BenchEntry>, String),
+    },
+    /// Anything more elaborate (leader-loop streams, failure storms,
+    /// multi-step sweeps): a single opaque cell.
+    Custom(fn(u64) -> Result<ScenarioResult>),
+}
+
+/// A registered scenario: definition as data, executed by [`run_specs`].
+#[derive(Clone)]
+pub struct ScenarioSpec {
+    pub name: &'static str,
+    pub description: &'static str,
+    pub seed: SeedPolicy,
+    pub body: ScenarioBody,
+}
+
+/// Output of one scenario run.
+#[derive(Debug)]
+pub struct ScenarioResult {
+    pub scenario: &'static str,
+    /// Machine-readable rows for the `BENCH_*.json` report.
+    pub entries: Vec<BenchEntry>,
+    /// Human-readable rendering for the CLI.
+    pub rendered: String,
+}
+
+impl ScenarioSpec {
+    /// Run this scenario alone, serially.
+    pub fn run(&self, seed: u64) -> Result<ScenarioResult> {
+        let mut results = run_specs(std::slice::from_ref(self), seed, 1)?;
+        Ok(results.remove(0))
+    }
+
+    /// How many schedulable cells this spec fans out into.
+    fn n_cells(&self) -> usize {
+        match self.body {
+            ScenarioBody::Evaluate { .. } => SystemKind::ALL.len(),
+            ScenarioBody::Custom(_) => 1,
+        }
+    }
+}
+
+/// One executed cell's output.
+enum CellOut {
+    /// Per-model costs for a single system (canonical task order).
+    Column(Vec<IterCost>),
+    /// A complete custom scenario result.
+    Whole(ScenarioResult),
+}
+
+/// Fleet + canonically ordered workload for an `Evaluate` body.
+///
+/// Deliberately rebuilt inside every cell (and once more in the merge):
+/// keeping each cell a pure function of `(spec, seed)` is what makes
+/// parallel output byte-identical to serial. Fleet/workload construction
+/// is microseconds next to the cost models, so the duplication is noise.
+fn eval_inputs(fleet: fn(u64) -> Fleet,
+               workload: fn(&Fleet) -> Vec<ModelSpec>, eff_seed: u64)
+    -> (Fleet, Vec<ModelSpec>)
+{
+    let fl = fleet(eff_seed);
+    let mut wl = workload(&fl);
+    ModelSpec::sort_largest_first(&mut wl);
+    (fl, wl)
+}
+
+/// Execute one cell. Pure in `(spec, cell_idx, seed)`.
+fn run_cell(spec: &ScenarioSpec, cell_idx: usize, seed: u64)
+    -> Result<CellOut>
+{
+    let eff = spec.seed.apply(seed);
+    match &spec.body {
+        ScenarioBody::Custom(f) => Ok(CellOut::Whole(f(eff)?)),
+        ScenarioBody::Evaluate { fleet, workload, .. } => {
+            let (fl, wl) = eval_inputs(*fleet, *workload, eff);
+            let costs: Vec<IterCost> = match SystemKind::ALL[cell_idx] {
+                SystemKind::SystemA => {
+                    wl.iter().map(|m| system_a::cost(&fl, m)).collect()
+                }
+                SystemKind::SystemB => {
+                    wl.iter().map(|m| system_b::cost(&fl, m)).collect()
+                }
+                SystemKind::SystemC => {
+                    wl.iter().map(|m| system_c::cost(&fl, m)).collect()
+                }
+                SystemKind::Hulk => {
+                    let graph = ClusterGraph::from_fleet(&fl);
+                    let plan = hulk_plan(&fl, &graph, &wl,
+                                         HulkSplitterKind::Oracle)?;
+                    (0..wl.len())
+                        .map(|t| crate::systems::hulk::cost(&fl, &plan, t))
+                        .collect()
+                }
+            };
+            Ok(CellOut::Column(costs))
+        }
+    }
+}
+
+/// Merge one spec's cell outputs back into a [`ScenarioResult`].
+/// Errors propagate in cell order, so the first failing cell of the
+/// first failing scenario wins — the same error a serial run reports.
+fn merge_spec(spec: &ScenarioSpec, seed: u64, outs: Vec<Result<CellOut>>)
+    -> Result<ScenarioResult>
+{
+    match &spec.body {
+        ScenarioBody::Custom(_) => {
+            let out = outs.into_iter().next().expect("custom spec has a cell");
+            match out? {
+                CellOut::Whole(result) => Ok(result),
+                CellOut::Column(_) => unreachable!("custom cell → Whole"),
+            }
+        }
+        ScenarioBody::Evaluate { fleet, workload, finish } => {
+            let mut columns = Vec::with_capacity(SystemKind::ALL.len());
+            for out in outs {
+                match out? {
+                    CellOut::Column(column) => columns.push(column),
+                    CellOut::Whole(_) => unreachable!("eval cell → Column"),
+                }
+            }
+            let (fl, wl) = eval_inputs(*fleet, *workload,
+                                       spec.seed.apply(seed));
+            let costs: Vec<[IterCost; 4]> = (0..wl.len())
+                .map(|m| [columns[0][m], columns[1][m], columns[2][m],
+                          columns[3][m]])
+                .collect();
+            let eval = SystemEval { models: wl, costs };
+            let (entries, rendered) = finish(&fl, &eval);
+            Ok(ScenarioResult { scenario: spec.name, entries, rendered })
+        }
+    }
+}
+
+/// Run `specs` with one CLI seed on `threads` workers (`<= 1` = inline
+/// serial execution, no threads spawned). Results come back in spec
+/// order with identical contents regardless of `threads` — callers may
+/// diff the serialized reports byte-for-byte.
+pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize)
+    -> Result<Vec<ScenarioResult>>
+{
+    // Flatten to (spec, cell) pairs — the schedulable unit.
+    let cells: Vec<(usize, usize)> = specs
+        .iter()
+        .enumerate()
+        .flat_map(|(si, s)| (0..s.n_cells()).map(move |ci| (si, ci)))
+        .collect();
+
+    let outs: Vec<Result<CellOut>> = if threads <= 1 || cells.len() <= 1 {
+        // Serial: stop executing after the first failure — later cells
+        // get a placeholder error that can never win the merge (errors
+        // surface in cell order, and the real failure comes first).
+        let mut outs = Vec::with_capacity(cells.len());
+        let mut failed = false;
+        for &(si, ci) in &cells {
+            if failed {
+                outs.push(Err(anyhow::anyhow!(
+                    "cell not run: an earlier scenario cell failed")));
+                continue;
+            }
+            let out = run_cell(&specs[si], ci, seed);
+            failed = out.is_err();
+            outs.push(out);
+        }
+        outs
+    } else {
+        let n_workers = threads.min(cells.len());
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<CellOut>>>> =
+            cells.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..n_workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    let Some(&(si, ci)) = cells.get(i) else { break };
+                    let out = run_cell(&specs[si], ci, seed);
+                    *slots[i].lock().expect("cell slot poisoned") = Some(out);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .expect("cell slot poisoned")
+                    .expect("worker pool executed every cell")
+            })
+            .collect()
+    };
+
+    // Deterministic merge: strictly spec order, then cell order.
+    let mut outs = outs.into_iter();
+    specs
+        .iter()
+        .map(|spec| {
+            let cell_outs: Vec<Result<CellOut>> =
+                outs.by_ref().take(spec.n_cells()).collect();
+            merge_spec(spec, seed, cell_outs)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_spec() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "toy_eval",
+            description: "paper fleet, small workload",
+            seed: SeedPolicy::Global,
+            body: ScenarioBody::Evaluate {
+                fleet: Fleet::paper_evaluation,
+                workload: |_| vec![ModelSpec::gpt2_xl(),
+                                   ModelSpec::bert_large()],
+                finish: |_, eval| {
+                    let entries = vec![BenchEntry::new(
+                        "toy_eval/hulk_improvement_pct",
+                        eval.hulk_improvement() * 100.0,
+                        "%",
+                    )];
+                    (entries, eval.render())
+                },
+            },
+        }
+    }
+
+    #[test]
+    fn evaluate_body_matches_evaluate_all() {
+        // The cell-decomposed path must reproduce the monolithic
+        // `evaluate_all` numbers exactly.
+        let spec = toy_spec();
+        let result = spec.run(3).unwrap();
+        let fleet = Fleet::paper_evaluation(3);
+        let eval = super::super::evaluate::evaluate_all(
+            &fleet,
+            &[ModelSpec::gpt2_xl(), ModelSpec::bert_large()],
+            HulkSplitterKind::Oracle,
+        )
+        .unwrap();
+        assert_eq!(result.entries[0].value,
+                   eval.hulk_improvement() * 100.0);
+        assert_eq!(result.rendered, eval.render());
+    }
+
+    #[test]
+    fn parallel_equals_serial_for_mixed_bodies() {
+        fn custom(seed: u64) -> Result<ScenarioResult> {
+            Ok(ScenarioResult {
+                scenario: "toy_custom",
+                entries: vec![BenchEntry::new("toy_custom/seed",
+                                              seed as f64, "count")],
+                rendered: format!("seed {seed}\n"),
+            })
+        }
+        let specs = vec![
+            toy_spec(),
+            ScenarioSpec {
+                name: "toy_custom",
+                description: "custom body",
+                seed: SeedPolicy::Tagged(0xBEEF),
+                body: ScenarioBody::Custom(custom),
+            },
+        ];
+        let serial = run_specs(&specs, 5, 1).unwrap();
+        let parallel = run_specs(&specs, 5, 4).unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.scenario, b.scenario);
+            assert_eq!(a.rendered, b.rendered);
+            let rows = |r: &ScenarioResult| -> Vec<(String, f64, String)> {
+                r.entries
+                    .iter()
+                    .map(|e| (e.name.clone(), e.value, e.unit.clone()))
+                    .collect()
+            };
+            assert_eq!(rows(a), rows(b));
+        }
+        // The tagged custom body saw seed ^ tag, not the raw seed.
+        assert_eq!(serial[1].entries[0].value, (5u64 ^ 0xBEEF) as f64);
+    }
+
+    #[test]
+    fn errors_propagate_in_spec_order() {
+        fn failing(_seed: u64) -> Result<ScenarioResult> {
+            anyhow::bail!("first failure")
+        }
+        fn also_failing(_seed: u64) -> Result<ScenarioResult> {
+            anyhow::bail!("second failure")
+        }
+        let specs = vec![
+            ScenarioSpec {
+                name: "boom_a",
+                description: "",
+                seed: SeedPolicy::Global,
+                body: ScenarioBody::Custom(failing),
+            },
+            ScenarioSpec {
+                name: "boom_b",
+                description: "",
+                seed: SeedPolicy::Global,
+                body: ScenarioBody::Custom(also_failing),
+            },
+        ];
+        for threads in [1, 4] {
+            let err = run_specs(&specs, 0, threads).unwrap_err();
+            assert!(err.to_string().contains("first failure"),
+                    "threads {threads}: {err}");
+        }
+    }
+}

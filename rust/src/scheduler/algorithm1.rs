@@ -78,32 +78,55 @@ pub fn algorithm1(fleet: &Fleet, graph: &ClusterGraph,
         });
     }
 
-    let mut remaining: Vec<usize> = (0..fleet.len()).collect();
+    // Membership is tracked in a fixed-size bitset keyed by machine id
+    // (ids are dense 0..n by `Fleet::new`'s contract), so every
+    // per-member check is O(1) instead of an O(n) scan — the difference
+    // between O(n·tasks) and O(n²·tasks) on 200+-server fleets. The
+    // ordered `remaining` list is kept in sync for the splitter API and
+    // preserves exactly the iteration order the scan-based version had.
+    let n = fleet.len();
+    let mut in_pool = vec![true; n];
+    let mut remaining: Vec<usize> = (0..n).collect();
     let mut groups: Vec<Vec<usize>> = vec![Vec::new(); tasks.len()];
     let mut carry: Vec<usize> = Vec::new(); // the C of Algorithm 1
     let mut deferred: Vec<usize> = Vec::new();
+    let mut in_group = vec![false; n]; // scratch, cleared after each task
 
     for (i, task) in tasks.iter().enumerate() {
         // Line 6: split off G_i via F.
         let mut g_i = splitter.split(fleet, graph, &remaining, task, i);
-        g_i.retain(|m| remaining.contains(m));
+        g_i.retain(|&m| {
+            let keep = m < n && in_pool[m] && !in_group[m];
+            if keep {
+                in_group[m] = true;
+            }
+            keep
+        });
 
         // Line 10–13: merge the carry-over set into G_i.
-        if !carry.is_empty() {
-            for m in carry.drain(..) {
-                if remaining.contains(&m) && !g_i.contains(&m) {
-                    g_i.push(m);
-                }
+        for m in carry.drain(..) {
+            if in_pool[m] && !in_group[m] {
+                in_group[m] = true;
+                g_i.push(m);
             }
         }
 
         // Line 7–9: assign if the memory threshold Mₙ is met.
         if group_gb(fleet, &g_i) >= task.train_gb() {
-            remaining.retain(|m| !g_i.contains(m));
+            for &m in &g_i {
+                in_pool[m] = false;
+            }
+            remaining.retain(|&m| in_pool[m]);
+            for &m in &g_i {
+                in_group[m] = false;
+            }
             g_i.sort_unstable();
             groups[i] = g_i;
         } else {
             // Line 9: C ← i; the insufficient split carries forward.
+            for &m in &g_i {
+                in_group[m] = false;
+            }
             carry = g_i;
             deferred.push(i);
             continue;
@@ -135,6 +158,65 @@ pub fn algorithm1(fleet: &Fleet, graph: &ClusterGraph,
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The pre-bitset implementation (O(n²) `contains` scans), kept
+    /// verbatim as the behavioral reference: the bitset rewrite must
+    /// produce byte-for-byte identical assignments.
+    fn algorithm1_reference(fleet: &Fleet, graph: &ClusterGraph,
+                            tasks: &[ModelSpec], splitter: &dyn TaskSplitter)
+        -> Result<Assignment, Algorithm1Error>
+    {
+        let required: f64 = tasks.iter().map(|t| t.train_gb()).sum();
+        let available = fleet.total_memory_gb();
+        if available < required {
+            return Err(Algorithm1Error::InsufficientResources {
+                required_gb: required,
+                available_gb: available,
+            });
+        }
+        let mut remaining: Vec<usize> = (0..fleet.len()).collect();
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); tasks.len()];
+        let mut carry: Vec<usize> = Vec::new();
+        let mut deferred: Vec<usize> = Vec::new();
+        for (i, task) in tasks.iter().enumerate() {
+            let mut g_i = splitter.split(fleet, graph, &remaining, task, i);
+            g_i.retain(|m| remaining.contains(m));
+            if !carry.is_empty() {
+                for m in carry.drain(..) {
+                    if remaining.contains(&m) && !g_i.contains(&m) {
+                        g_i.push(m);
+                    }
+                }
+            }
+            if group_gb(fleet, &g_i) >= task.train_gb() {
+                remaining.retain(|m| !g_i.contains(m));
+                g_i.sort_unstable();
+                groups[i] = g_i;
+            } else {
+                carry = g_i;
+                deferred.push(i);
+                continue;
+            }
+            let rest_required: f64 =
+                tasks[i + 1..].iter().map(|t| t.train_gb()).sum();
+            if rest_required > 0.0
+                && group_gb(fleet, &remaining) < rest_required
+            {
+                deferred.extend(i + 1..tasks.len());
+                return Err(Algorithm1Error::MustWait {
+                    partial: Assignment::new(groups),
+                    deferred,
+                });
+            }
+        }
+        if !deferred.is_empty() {
+            return Err(Algorithm1Error::MustWait {
+                partial: Assignment::new(groups),
+                deferred,
+            });
+        }
+        Ok(Assignment::new(groups))
+    }
 
     /// Splitter backed by the oracle (tests don't need artifacts).
     struct OracleSplitter;
@@ -204,6 +286,34 @@ mod tests {
                         || !deferred.is_empty());
             }
             Err(e) => panic!("unexpected {e:?}"),
+        }
+    }
+
+    #[test]
+    fn bitset_matches_reference_on_existing_fleets() {
+        // The hot-path rewrite must not change a single assignment:
+        // compare against the scan-based reference on the paper fleet,
+        // a truncated fleet, and a planet-scale synthetic fleet, with
+        // both a well-behaved and a pathological splitter.
+        let workloads = [ModelSpec::paper_four(), ModelSpec::paper_six()];
+        let fleets = [
+            Fleet::paper_evaluation(0),
+            Fleet::paper_evaluation(7),
+            Fleet::synthetic(200, 12, 0),
+        ];
+        for fleet in &fleets {
+            let graph = ClusterGraph::from_fleet(fleet);
+            for tasks in &workloads {
+                for splitter in
+                    [&OracleSplitter as &dyn TaskSplitter, &StingySplitter]
+                {
+                    let fast = algorithm1(fleet, &graph, tasks, splitter);
+                    let slow =
+                        algorithm1_reference(fleet, &graph, tasks, splitter);
+                    assert_eq!(fast, slow, "divergence on {} servers",
+                               fleet.len());
+                }
+            }
         }
     }
 

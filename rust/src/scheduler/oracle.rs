@@ -138,8 +138,14 @@ pub fn oracle_partition(fleet: &Fleet, graph: &ClusterGraph,
     // Assign tasks in descending parameter order (Algorithm 1 iterates
     // largest-first so the big model gets the pick of the fleet).
     let mut order: Vec<usize> = (0..tasks.len()).collect();
+    // Same total, tie-stable comparator as ModelSpec::sort_largest_first
+    // (params descending via total_cmp, name ascending) — no NaN panic,
+    // and tied-params models order identically to the Hulk path.
     order.sort_by(|&a, &b| {
-        tasks[b].params.partial_cmp(&tasks[a].params).unwrap()
+        tasks[b]
+            .params
+            .total_cmp(&tasks[a].params)
+            .then_with(|| tasks[a].name.cmp(tasks[b].name))
     });
 
     for &t in &order {

@@ -97,7 +97,7 @@ pub fn hulk_plan(fleet: &Fleet, graph: &ClusterGraph,
     -> Result<HulkPlan>
 {
     let mut tasks = workload.to_vec();
-    tasks.sort_by(|a, b| b.params.partial_cmp(&a.params).unwrap());
+    ModelSpec::sort_largest_first(&mut tasks);
 
     let assignment = match &splitter {
         HulkSplitterKind::Gnn { classifier, params } => {

@@ -1,0 +1,165 @@
+//! Parallel-vs-serial determinism suite for the scenario runner, plus
+//! smoke tests for the `planet_scale` and `burst_arrivals` scenarios.
+//!
+//! The acceptance bar: `hulk scenarios run all --json --parallel` must
+//! produce a `BENCH_scenarios.json` byte-identical to the serial run's
+//! (CI diffs the two artifacts as a gate; this suite is the in-repo
+//! version of that gate).
+
+use hulk::benchkit::BenchReport;
+use hulk::scenarios::{all_scenarios, find_scenario, run_specs,
+                      ScenarioResult};
+
+fn report_bytes(results: Vec<ScenarioResult>) -> String {
+    let mut report = BenchReport::new("scenarios");
+    for r in results {
+        report.extend(r.entries);
+    }
+    let mut text = report.to_json().render();
+    text.push('\n');
+    text
+}
+
+#[test]
+fn parallel_run_is_byte_identical_to_serial() {
+    let specs = all_scenarios();
+    let serial = run_specs(&specs, 0, 1).expect("serial run");
+    let serial_rendered: Vec<String> =
+        serial.iter().map(|r| r.rendered.clone()).collect();
+    let serial_bytes = report_bytes(serial);
+    for threads in [2, 4, 8] {
+        let parallel = run_specs(&specs, 0, threads)
+            .unwrap_or_else(|e| panic!("{threads}-thread run: {e}"));
+        let parallel_rendered: Vec<String> =
+            parallel.iter().map(|r| r.rendered.clone()).collect();
+        assert_eq!(serial_rendered, parallel_rendered,
+                   "rendered output diverged at {threads} threads");
+        assert_eq!(serial_bytes, report_bytes(parallel),
+                   "BENCH_scenarios.json diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn parallel_written_artifact_matches_serial_file_bytes() {
+    // End-to-end through the benchkit writer, as CI diffs it.
+    let specs = all_scenarios();
+    let base = std::env::temp_dir().join("hulk_runner_determinism_test");
+    let write = |results: Vec<ScenarioResult>, sub: &str| {
+        let mut report = BenchReport::new("scenarios");
+        for r in results {
+            report.extend(r.entries);
+        }
+        report.write(&base.join(sub)).expect("write report")
+    };
+    let a = write(run_specs(&specs, 7, 1).unwrap(), "serial");
+    let b = write(run_specs(&specs, 7, 4).unwrap(), "parallel");
+    let bytes_a = std::fs::read(a).unwrap();
+    let bytes_b = std::fs::read(b).unwrap();
+    assert_eq!(bytes_a, bytes_b);
+    std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn planet_scale_smoke() {
+    let result = find_scenario("planet_scale")
+        .expect("planet_scale registered")
+        .run(0)
+        .expect("planet_scale runs");
+    // All four systems show up on the 220-server fleet.
+    for slug in ["system_a", "system_b", "system_c", "hulk"] {
+        let marker = format!("/{slug}/");
+        assert!(result.entries.iter().any(|e| e.name.contains(&marker)),
+                "no {slug} entry");
+    }
+    // Hulk is at least as fast as the best feasible baseline in
+    // aggregate — regional grouping must not lose at planet scale.
+    let improvement = result
+        .entries
+        .iter()
+        .find(|e| e.name == "planet_scale/hulk_improvement_pct")
+        .expect("improvement entry");
+    assert!(improvement.value > 0.0,
+            "Hulk loses at planet scale: {:.1}%", improvement.value);
+    // Per model: Hulk beats System B (id-order GPipe) wherever both ran.
+    for model in ["opt_175b", "t5_11b", "gpt_2_1_5b"] {
+        let get = |slug: &str| {
+            result
+                .entries
+                .iter()
+                .find(|e| {
+                    e.name == format!("planet_scale/{slug}/{model}/iter_ms")
+                })
+                .map(|e| e.value)
+        };
+        if let (Some(hulk), Some(b)) = (get("hulk"), get("system_b")) {
+            assert!(hulk <= b, "{model}: hulk {hulk} vs system_b {b}");
+        }
+    }
+    let servers = result
+        .entries
+        .iter()
+        .find(|e| e.name == "planet_scale/fleet_servers")
+        .expect("fleet size entry");
+    assert!(servers.value >= 200.0, "planet fleet too small: {}",
+            servers.value);
+    let regions = result
+        .entries
+        .iter()
+        .find(|e| e.name == "planet_scale/fleet_regions")
+        .expect("region entry");
+    assert_eq!(regions.value, 12.0);
+    // Entry volume stays bounded (6 models × 4 systems + metadata).
+    assert!(result.entries.len() <= 40,
+            "entry blowup: {}", result.entries.len());
+}
+
+#[test]
+fn burst_arrivals_smoke_is_bounded_and_consistent() {
+    let spec = find_scenario("burst_arrivals").expect("registered");
+    let result = spec.run(0).expect("burst_arrivals runs");
+    let get = |name: &str| -> f64 {
+        result
+            .entries
+            .iter()
+            .find(|e| e.name == format!("burst_arrivals/{name}"))
+            .unwrap_or_else(|| panic!("missing entry {name}"))
+            .value
+    };
+    // The stream is seeded Poisson: something must arrive, and every
+    // submission is either admitted or queued. Queued (or requeued)
+    // tasks that later re-admit increment `tasks_admitted` again, so
+    // the sum lies between `submitted` and `2 × submitted + failures`.
+    let submitted = get("tasks_submitted");
+    let settled = get("tasks_admitted") + get("tasks_queued");
+    assert!(submitted >= 1.0);
+    assert!(settled >= submitted, "{settled} < {submitted}");
+    assert!(settled <= 2.0 * submitted + get("machine_failures"),
+            "counter blowup: {settled} vs {submitted} submitted");
+    assert_eq!(get("machine_failures"), 2.0);
+    // Leader event count is bounded by slots + arrivals + failures +
+    // the drain-tick budget — wall-clock cannot run away with the seed.
+    let events = get("events_processed");
+    assert!(events >= 24.0, "at least one event per slot: {events}");
+    assert!(events <= 24.0 + submitted + 2.0 + 64.0,
+            "event blowup: {events}");
+    assert!(get("drain_ticks") <= 64.0);
+    // Determinism across runs.
+    let again = spec.run(0).expect("second run");
+    let rows = |r: &ScenarioResult| -> Vec<(String, f64)> {
+        r.entries.iter().map(|e| (e.name.clone(), e.value)).collect()
+    };
+    assert_eq!(rows(&result), rows(&again));
+}
+
+#[test]
+fn subset_runs_only_requested_scenarios_in_order() {
+    let (specs, ran_all) = hulk::scenarios::resolve_scenarios(&[
+        "burst_arrivals".to_string(),
+        "table1_fleet".to_string(),
+    ])
+    .unwrap();
+    assert!(!ran_all);
+    let results = run_specs(&specs, 0, 2).unwrap();
+    let names: Vec<&str> = results.iter().map(|r| r.scenario).collect();
+    assert_eq!(names, vec!["burst_arrivals", "table1_fleet"]);
+}
