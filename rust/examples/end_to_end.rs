@@ -16,9 +16,10 @@ use hulk::cluster::Fleet;
 use hulk::gnn::trainer::evaluate_accuracy;
 use hulk::gnn::{make_dataset, train_gcn, Classifier, TrainerOptions};
 use hulk::models::ModelSpec;
+use hulk::planner::{HulkPlanner, HulkSplitterKind, PlanContext, Planner};
 use hulk::runtime::client::TrainState;
 use hulk::runtime::{GcnRuntime, Manifest};
-use hulk::systems::{evaluate_all, HulkSplitterKind};
+use hulk::scenarios::evaluate_all;
 
 fn main() -> anyhow::Result<()> {
     // ---- L1/L2: load the AOT artifacts --------------------------------
@@ -64,14 +65,17 @@ fn main() -> anyhow::Result<()> {
     // ---- Assignment quality: GNN vs chance (exact-label accuracy is
     // permutation-pessimistic; this is the operational metric) ----------
     let graph = hulk::graph::ClusterGraph::from_fleet(&fleet);
-    let plan = hulk::systems::hulk::hulk_plan(
+    let mut workload = ModelSpec::paper_four();
+    ModelSpec::sort_largest_first(&mut workload);
+    let ctx = PlanContext::new(
         &fleet,
         &graph,
-        &ModelSpec::paper_four(),
+        &workload,
         HulkSplitterKind::Gnn { classifier: &classifier, params: &params },
-    )?;
-    let ratio = hulk::gnn::cost_vs_random(&fleet, &graph,
-                                          &plan.assignment, 0);
+    );
+    let placement = HulkPlanner.plan(&ctx)?;
+    let assignment = placement.to_assignment();
+    let ratio = hulk::gnn::cost_vs_random(&fleet, &graph, &assignment, 0);
     println!("GNN grouping comm-cost vs random baseline: {:.2}× \
               (lower is better; 1.0 = chance)", ratio);
     anyhow::ensure!(ratio < 1.0, "GNN grouping no better than chance");

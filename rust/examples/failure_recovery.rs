@@ -10,8 +10,8 @@ use hulk::coordinator::{Coordinator, CoordinatorEvent, CoordinatorReply};
 use hulk::graph::ClusterGraph;
 use hulk::models::ModelSpec;
 use hulk::parallel::PipelinePlan;
+use hulk::planner::chain_order;
 use hulk::sim::{simulate_pipeline, FailurePlan};
-use hulk::systems::hulk::chain_order;
 use hulk::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {

@@ -6,7 +6,8 @@
 
 use hulk::cluster::Fleet;
 use hulk::models::ModelSpec;
-use hulk::systems::{evaluate_all, HulkSplitterKind, SystemKind};
+use hulk::planner::HulkSplitterKind;
+use hulk::scenarios::evaluate_all;
 
 fn main() -> anyhow::Result<()> {
     let fleet = Fleet::paper_evaluation(0);
@@ -20,7 +21,7 @@ fn main() -> anyhow::Result<()> {
 
     // Per-system aggregate over the feasible subset.
     println!("aggregate totals (feasible models only):");
-    for (s, kind) in SystemKind::ALL.iter().enumerate() {
+    for (s, meta) in eval.systems.iter().enumerate() {
         let total: f64 = eval
             .costs
             .iter()
@@ -33,7 +34,7 @@ fn main() -> anyhow::Result<()> {
             .filter(|row| row[s].is_feasible())
             .count();
         println!("  {:<22} {:>12.0} ms/iter  ({feasible}/{} models)",
-                 kind.name(), total, eval.models.len());
+                 meta.name, total, eval.models.len());
     }
     println!("\nHulk improvement over best baseline: {:.1}% \
               (paper: >20%)", eval.hulk_improvement() * 100.0);

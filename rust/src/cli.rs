@@ -25,12 +25,16 @@ usage: hulk <subcommand> [flags]
              Regenerate paper tables/figures; `micro --json` writes
              BENCH_micro.json.
   scenarios  list
-  scenarios  run <name…|all> [--seed S] [--json] [--out DIR]
-                 [--parallel] [--threads N]
-             Run named scenarios (every one covers Systems A/B/C/Hulk
-             deterministically from the seed); `--json` writes
-             BENCH_scenarios.json in the customSmallerIsBetter shape.
-             `--parallel` executes (scenario × system) cells on a
+  scenarios  run <name…|all> [--seed S] [--systems a,b,hulk] [--json]
+                 [--out DIR] [--parallel] [--threads N]
+             Run named scenarios deterministically from the seed.
+             `--systems` filters which planners run (slugs from the
+             planner registry: system_a|a, system_b|b, system_c|c,
+             hulk, hulk_no_gcn; default = the paper's four). `--json`
+             writes BENCH_scenarios.json in the customSmallerIsBetter
+             shape plus BENCH_placements.json (per-system placement
+             digests: group/stage counts, cross-region edges).
+             `--parallel` executes (scenario × planner) cells on a
              worker pool (`--threads N` pins the width; default = the
              machine's available parallelism). Output is byte-identical
              to a serial run.
@@ -183,6 +187,8 @@ mod tests {
             assert!(text.contains(sub), "usage() missing {sub}");
         }
         assert!(text.contains("BENCH_scenarios.json"));
+        assert!(text.contains("BENCH_placements.json"));
         assert!(text.contains("--parallel") && text.contains("--threads"));
+        assert!(text.contains("--systems") && text.contains("hulk_no_gcn"));
     }
 }

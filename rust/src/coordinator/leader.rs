@@ -15,7 +15,7 @@ use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
 use crate::parallel::{pipeline_cost, PipelinePlan};
 use crate::scheduler::Assignment;
-use crate::systems::hulk::chain_order;
+use crate::planner::chain_order;
 
 use super::metrics::Metrics;
 use super::recovery::{recover, RecoveryAction};

@@ -83,7 +83,7 @@ fn sample_tasks(rng: &mut Rng, fleet_gb: f64) -> Vec<ModelSpec> {
         tasks.push(ModelSpec::bert_large());
     }
     // Largest first — class 0 is always the biggest model, matching how
-    // systems::hulk feeds Algorithm 1.
+    // the Hulk planner feeds Algorithm 1.
     ModelSpec::sort_largest_first(&mut tasks);
     tasks
 }

@@ -5,10 +5,12 @@
 //! Rust + JAX + Pallas stack:
 //!
 //! - **Layer 3 (this crate)** — the coordinator: cluster/WAN modelling, the
-//!   labeling oracle, the paper's Algorithm 1 task assignment, baseline
-//!   Systems A/B/C, the Hulk system, a discrete-event execution simulator,
-//!   disaster recovery and the multi-task leader loop. The GCN is *trained
-//!   and served from Rust* through PJRT.
+//!   labeling oracle, the paper's Algorithm 1 task assignment, the
+//!   [`planner`] seam (baseline Systems A/B/C, Hulk and its ablations as
+//!   `Planner` implementations behind a typed `Placement` IR), a
+//!   discrete-event execution simulator, disaster recovery and the
+//!   multi-task leader loop. The GCN is *trained and served from Rust*
+//!   through PJRT.
 //! - **Layer 2 (python/compile/model.py, build-time only)** — the Hulk GCN
 //!   (edge pooling + GCN stack + masked softmax head), AOT-lowered to HLO
 //!   text artifacts.
@@ -31,6 +33,7 @@ pub mod gnn;
 pub mod graph;
 pub mod models;
 pub mod parallel;
+pub mod planner;
 pub mod prop;
 pub mod runtime;
 pub mod scenarios;

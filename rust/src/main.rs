@@ -21,9 +21,10 @@ use hulk::coordinator::{Coordinator, CoordinatorEvent, CoordinatorReply};
 use hulk::gnn::{make_dataset, train_gcn, TrainerOptions};
 use hulk::graph::ClusterGraph;
 use hulk::models::ModelSpec;
+use hulk::planner::{HulkSplitterKind, PlannerRegistry};
 use hulk::runtime::{GcnRuntime, Manifest};
 use hulk::runtime::client::TrainState;
-use hulk::systems::{evaluate_all, HulkSplitterKind};
+use hulk::scenarios::evaluate_all;
 use hulk::util::rng::Rng;
 use hulk::util::table::{fmt_params, Table};
 
@@ -56,23 +57,31 @@ fn cmd_scenarios(cli: &Cli) -> Result<()> {
                 t.row(&[s.name.to_string(), s.description.to_string()]);
             }
             println!("{}", t.render());
+            let catalog = PlannerRegistry::catalog();
+            println!("registered planners: {} (default: the paper's \
+                      four; filter with --systems)",
+                     catalog.slugs().join(", "));
             println!("run with: hulk scenarios run <name…|all> \
-                      [--seed S] [--json] [--out DIR] [--parallel] \
-                      [--threads N]");
+                      [--seed S] [--systems a,b,hulk] [--json] \
+                      [--out DIR] [--parallel] [--threads N]");
             Ok(())
         }
         Some("run") => {
             let seed = cli.flag_u64("seed", 0)?;
             let names = &cli.positional[1..];
             // Every name is validated before anything runs: an unknown
-            // scenario exits non-zero listing the valid names instead
-            // of silently running the wrong suite.
+            // scenario (or planner slug) exits non-zero listing the
+            // valid names instead of silently running the wrong suite.
             let (specs, ran_all) =
                 hulk::scenarios::resolve_scenarios(names)?;
+            let planners = match cli.flag("systems") {
+                Some(csv) => PlannerRegistry::resolve(csv)?,
+                None => PlannerRegistry::standard(),
+            };
             let threads = scenario_threads(cli)?;
             let started = std::time::Instant::now();
-            let results =
-                hulk::scenarios::run_specs(&specs, seed, threads)?;
+            let results = hulk::scenarios::run_specs(&specs, seed,
+                                                     threads, &planners)?;
             let wall = started.elapsed().as_secs_f64();
             for r in &results {
                 println!("\n================ {} (seed {seed}) \
@@ -83,26 +92,42 @@ fn cmd_scenarios(cli: &Cli) -> Result<()> {
             // Wall-clock is logged to stdout only — the JSON report
             // stays free of timing so parallel and serial runs diff
             // byte-identical.
-            println!("ran {} scenario(s) on {} thread(s) in {:.2}s",
-                     results.len(), threads, wall);
+            println!("ran {} scenario(s) × {} planner(s) on {} \
+                      thread(s) in {:.2}s",
+                     results.len(), planners.len(), threads, wall);
             if cli.flag_bool("json") {
                 let out = PathBuf::from(cli.flag("out").unwrap_or("."));
                 // A subset run gets its own file name so it cannot
-                // silently overwrite the full-suite report.
-                let suite = if ran_all {
+                // silently overwrite the full-suite report; likewise a
+                // planner-filtered run.
+                let mut suite = if ran_all {
                     "scenarios".to_string()
                 } else {
                     let picked: Vec<&str> =
                         results.iter().map(|r| r.scenario).collect();
                     format!("scenarios_{}", picked.join("_"))
                 };
+                if cli.flag("systems").is_some() {
+                    suite =
+                        format!("{suite}_systems_{}",
+                                planners.slugs().join("_"));
+                }
                 let mut report = BenchReport::new(&suite);
+                // The placement digests go to a sibling file so the
+                // scenarios artifact keeps its pre-planner-seam shape
+                // byte-for-byte.
+                let mut placements = BenchReport::new(
+                    &suite.replacen("scenarios", "placements", 1));
                 for r in results {
                     report.extend(r.entries);
+                    placements.extend(r.placements);
                 }
                 let path = report.write(&out)?;
                 println!("wrote {} ({} entries)", path.display(),
                          report.entries.len());
+                let path = placements.write(&out)?;
+                println!("wrote {} ({} entries)", path.display(),
+                         placements.entries.len());
             }
             Ok(())
         }

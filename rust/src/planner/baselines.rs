@@ -1,0 +1,202 @@
+//! The paper's three baseline systems (§6.4) as [`Planner`]s.
+//!
+//! - **System A** ([`SystemAPlanner`]) — pure data parallelism; machines
+//!   that cannot hold a full replica are discarded. When *no* machine
+//!   fits (OPT-175B on the evaluation fleet) the task is genuinely
+//!   untrainable and prices infeasible.
+//! - **System B** ([`SystemBPlanner`]) — GPipe across the fleet, layers
+//!   assigned in machine-id order until the model is distributed.
+//!   Topology-oblivious: stages routinely straddle continents, which is
+//!   the pathology Hulk's grouping removes.
+//! - **System C** ([`SystemCPlanner`]) — Megatron-LM tensor parallelism
+//!   across the entire fleet ("requiring all machines to be utilized").
+
+use anyhow::Result;
+
+use crate::models::ModelSpec;
+use crate::parallel::data_parallel::replica_capable;
+use crate::parallel::PipelinePlan;
+
+use super::{PlanContext, Placement, Planner, PlannerKind, TaskPlacement};
+
+/// System A: data parallelism over every replica-capable machine.
+pub struct SystemAPlanner;
+
+impl Planner for SystemAPlanner {
+    fn name(&self) -> &'static str {
+        "System A (DP)"
+    }
+
+    fn slug(&self) -> &'static str {
+        "system_a"
+    }
+
+    fn kind(&self) -> PlannerKind {
+        PlannerKind::Baseline
+    }
+
+    fn plan(&self, ctx: &PlanContext) -> Result<Placement> {
+        Ok(Placement {
+            per_task: ctx
+                .workload
+                .iter()
+                .map(|model| TaskPlacement::Replicated {
+                    participants: replica_capable(ctx.fleet, model),
+                })
+                .collect(),
+        })
+    }
+}
+
+/// System B: one GPipe pipeline over the first `min(layers, n)` machines
+/// in id order, layer split proportional to throughput.
+pub struct SystemBPlanner;
+
+fn id_order_pipeline(ctx: &PlanContext, model: &ModelSpec) -> TaskPlacement {
+    let n_stages = ctx.fleet.len().min(model.layers);
+    let stages: Vec<usize> = (0..n_stages).collect();
+    let plan = PipelinePlan::proportional(ctx.fleet, stages, model);
+    TaskPlacement::PipelineStages {
+        stages: plan.stages,
+        layers: plan.layers,
+        microbatches: plan.microbatches,
+    }
+}
+
+impl Planner for SystemBPlanner {
+    fn name(&self) -> &'static str {
+        "System B (GPipe)"
+    }
+
+    fn slug(&self) -> &'static str {
+        "system_b"
+    }
+
+    fn kind(&self) -> PlannerKind {
+        PlannerKind::Baseline
+    }
+
+    fn plan(&self, ctx: &PlanContext) -> Result<Placement> {
+        Ok(Placement {
+            per_task: ctx
+                .workload
+                .iter()
+                .map(|model| id_order_pipeline(ctx, model))
+                .collect(),
+        })
+    }
+}
+
+/// System C: Megatron tensor parallelism over the whole fleet.
+pub struct SystemCPlanner;
+
+impl Planner for SystemCPlanner {
+    fn name(&self) -> &'static str {
+        "System C (Megatron)"
+    }
+
+    fn slug(&self) -> &'static str {
+        "system_c"
+    }
+
+    fn kind(&self) -> PlannerKind {
+        PlannerKind::Baseline
+    }
+
+    fn plan(&self, ctx: &PlanContext) -> Result<Placement> {
+        let all: Vec<usize> = (0..ctx.fleet.len()).collect();
+        Ok(Placement {
+            per_task: ctx
+                .workload
+                .iter()
+                .map(|_| TaskPlacement::TensorSharded { group: all.clone() })
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Fleet;
+    use crate::graph::ClusterGraph;
+    use crate::planner::HulkSplitterKind;
+
+    fn ctx_parts(workload: Vec<ModelSpec>)
+        -> (Fleet, ClusterGraph, Vec<ModelSpec>)
+    {
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let mut wl = workload;
+        ModelSpec::sort_largest_first(&mut wl);
+        (fleet, graph, wl)
+    }
+
+    #[test]
+    fn system_a_bert_uses_whole_fleet_and_opt_is_infeasible() {
+        let (fleet, graph, wl) =
+            ctx_parts(vec![ModelSpec::opt_175b(), ModelSpec::bert_large()]);
+        let ctx = PlanContext::new(&fleet, &graph, &wl,
+                                   HulkSplitterKind::Oracle);
+        let p = SystemAPlanner.plan(&ctx).unwrap();
+        // wl sorted: OPT first, BERT second.
+        assert!(p.machines(0).is_empty(), "no machine fits OPT-175B");
+        assert!(!SystemAPlanner.cost(&ctx, &p, 0).is_feasible());
+        assert_eq!(p.machines(1).len(), 46, "BERT replicates everywhere");
+        assert!(SystemAPlanner.cost(&ctx, &p, 1).is_feasible());
+    }
+
+    #[test]
+    fn system_a_t5_uses_a_strict_subset() {
+        let (fleet, graph, wl) = ctx_parts(vec![ModelSpec::t5_11b()]);
+        let ctx = PlanContext::new(&fleet, &graph, &wl,
+                                   HulkSplitterKind::Oracle);
+        let p = SystemAPlanner.plan(&ctx).unwrap();
+        let n = p.machines(0).len();
+        assert!(n > 0 && n < 46, "expected a strict subset, got {n}");
+    }
+
+    #[test]
+    fn system_b_uses_all_machines_up_to_layer_count() {
+        let (fleet, graph, wl) =
+            ctx_parts(vec![ModelSpec::opt_175b(), ModelSpec::bert_large()]);
+        let ctx = PlanContext::new(&fleet, &graph, &wl,
+                                   HulkSplitterKind::Oracle);
+        let p = SystemBPlanner.plan(&ctx).unwrap();
+        assert_eq!(p.pipeline(0).unwrap().n_stages(), 46); // 96 layers > 46
+        assert_eq!(p.pipeline(1).unwrap().n_stages(), 24); // 24 layers < 46
+    }
+
+    #[test]
+    fn system_b_feasible_but_comm_heavy_for_all_paper_models() {
+        let (fleet, graph, wl) = ctx_parts(ModelSpec::paper_six());
+        let ctx = PlanContext::new(&fleet, &graph, &wl,
+                                   HulkSplitterKind::Oracle);
+        let p = SystemBPlanner.plan(&ctx).unwrap();
+        for (t, model) in wl.iter().enumerate() {
+            let c = SystemBPlanner.cost(&ctx, &p, t);
+            assert!(c.is_feasible(), "{} infeasible under B", model.name);
+            if model.name == "GPT-2 (1.5B)" {
+                // id-order stages cross regions constantly: comm must
+                // dominate compute for a model this small.
+                assert!(c.comm_ms > c.comp_ms, "comm {} comp {}",
+                        c.comm_ms, c.comp_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn system_c_feasible_but_comm_bound_for_every_model() {
+        let (fleet, graph, wl) = ctx_parts(ModelSpec::paper_six());
+        let ctx = PlanContext::new(&fleet, &graph, &wl,
+                                   HulkSplitterKind::Oracle);
+        let p = SystemCPlanner.plan(&ctx).unwrap();
+        for (t, model) in wl.iter().enumerate() {
+            assert_eq!(p.machines(t).len(), fleet.len());
+            let c = SystemCPlanner.cost(&ctx, &p, t);
+            assert!(c.is_feasible(), "{}", model.name);
+            assert!(c.comm_ms > c.comp_ms,
+                    "{}: TP over WAN must be comm-bound", model.name);
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! The planning seam: every placement strategy — the paper's baseline
+//! Systems A/B/C, Hulk itself, and any future ablation or hybrid — is a
+//! [`Planner`] that turns a [`PlanContext`] into a typed [`Placement`]
+//! and prices it as an [`IterCost`](crate::parallel::IterCost) per task.
+//!
+//! Before this module existed the four systems exposed four incompatible
+//! free-function APIs (`system_a::cost(fleet, model)`, `system_b::plan`,
+//! `system_c::cost`, `hulk_plan(fleet, graph, workload, splitter)`), and
+//! every consumer hand-rolled a 4-way `match SystemKind`. Now:
+//!
+//! - [`Planner`] — the trait: `name`/`slug`/`kind`, `plan(ctx)`, and
+//!   `cost(ctx, placement, task_idx)` (default: derived purely from the
+//!   placement IR, so two planners emitting the same placement always
+//!   price identically).
+//! - [`PlanContext`] — the bundled inputs `{fleet, cluster graph,
+//!   canonically sorted workload, Hulk splitter config}`.
+//! - [`Placement`] — the typed IR ([`placement`]): per task one of
+//!   `Replicated`, `PipelineStages`, `TensorSharded`, `Grouped`. It
+//!   replaces the ad-hoc `HulkPlan` / `PipelinePlan` / participant-vec
+//!   trio that each system used to return.
+//! - [`PlannerRegistry`] — slug → `Box<dyn Planner>`, insertion-ordered
+//!   ([`registry`]): [`PlannerRegistry::standard`] is the paper's four
+//!   (the default everywhere), [`PlannerRegistry::catalog`] adds the
+//!   registered ablations (`hulk_no_gcn`), and
+//!   [`PlannerRegistry::resolve`] answers the CLI's `--systems a,b,hulk`
+//!   filter.
+//!
+//! The scenario subsystem ([`crate::scenarios`]) iterates the registry —
+//! `evaluate`, the runner's cell decomposition (scenario × registered
+//! planner), the named scenarios and the sweeps — so adding a fifth
+//! strategy is one `register` call, not four edited `match` arms.
+//!
+//! To add a planner: implement [`Planner`] (emit one of the existing
+//! [`TaskPlacement`] variants and the default `cost` comes for free),
+//! pick a unique slug, and add it to [`PlannerRegistry::catalog`]. See
+//! DESIGN.md §Planner architecture.
+
+pub mod baselines;
+pub mod hulk;
+pub mod placement;
+pub mod registry;
+
+use anyhow::Result;
+
+use crate::cluster::Fleet;
+use crate::graph::ClusterGraph;
+use crate::models::ModelSpec;
+use crate::parallel::IterCost;
+
+pub use baselines::{SystemAPlanner, SystemBPlanner, SystemCPlanner};
+pub use hulk::{chain_order, HulkNoGcnPlanner, HulkPlanner, HulkSplitterKind};
+pub use placement::{Placement, PlacementSummary, TaskPlacement};
+pub use registry::PlannerRegistry;
+
+/// Everything a planner may consult. `workload` must be in canonical
+/// order — [`ModelSpec::sort_largest_first`] — because Algorithm 1
+/// consumes tasks largest-first and task indices into the resulting
+/// [`Placement`] follow this order ([`is_canonical`] checks it).
+pub struct PlanContext<'a> {
+    pub fleet: &'a Fleet,
+    pub graph: &'a ClusterGraph,
+    pub workload: &'a [ModelSpec],
+    /// Which splitter `F` Hulk-family planners drive Algorithm 1 with
+    /// (baselines ignore it).
+    pub splitter: HulkSplitterKind<'a>,
+}
+
+impl<'a> PlanContext<'a> {
+    pub fn new(fleet: &'a Fleet, graph: &'a ClusterGraph,
+               workload: &'a [ModelSpec], splitter: HulkSplitterKind<'a>)
+        -> PlanContext<'a>
+    {
+        PlanContext { fleet, graph, workload, splitter }
+    }
+}
+
+/// Is `workload` in the canonical order `sort_largest_first` produces?
+pub fn is_canonical(workload: &[ModelSpec]) -> bool {
+    workload.windows(2).all(|w| {
+        w[1].params
+            .total_cmp(&w[0].params)
+            .then_with(|| w[0].name.cmp(w[1].name))
+            != std::cmp::Ordering::Greater
+    })
+}
+
+/// What role a planner plays in reports: baselines are what Hulk's
+/// headline improvement is measured against; ablations are neither.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlannerKind {
+    Baseline,
+    Hulk,
+    Ablation,
+}
+
+/// Display/reporting metadata of one registered planner — the column
+/// header of an evaluation table or `BENCH_*.json` entry name.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SystemMeta {
+    pub name: &'static str,
+    pub slug: &'static str,
+    pub kind: PlannerKind,
+}
+
+/// A placement strategy. Implementations are stateless and shareable
+/// across the runner's worker threads (`Send + Sync`).
+pub trait Planner: Send + Sync {
+    /// Human-readable column name, e.g. `"System B (GPipe)"`.
+    fn name(&self) -> &'static str;
+
+    /// Stable machine-readable id used in `BENCH_*.json` entry names and
+    /// the `--systems` CLI filter, e.g. `"system_b"`.
+    fn slug(&self) -> &'static str;
+
+    /// Baseline / Hulk / Ablation (drives improvement accounting).
+    fn kind(&self) -> PlannerKind;
+
+    /// Decide where every task of `ctx.workload` runs.
+    fn plan(&self, ctx: &PlanContext) -> Result<Placement>;
+
+    /// Per-iteration cost of task `task_idx` under `placement`. The
+    /// default prices the placement IR itself, so identical placements
+    /// cost identically no matter which planner emitted them.
+    fn cost(&self, ctx: &PlanContext, placement: &Placement,
+            task_idx: usize) -> IterCost
+    {
+        placement.cost(ctx.fleet, &ctx.workload[task_idx], task_idx)
+    }
+
+    /// Reporting metadata bundle.
+    fn meta(&self) -> SystemMeta {
+        SystemMeta { name: self.name(), slug: self.slug(),
+                     kind: self.kind() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_order_check_matches_sorter() {
+        // paper_four is strictly descending; paper_six is NOT (BERT-large
+        // 340M precedes RoBERTa 355M) until sorted.
+        assert!(is_canonical(&ModelSpec::paper_four()));
+        let mut wl = ModelSpec::paper_six();
+        assert!(!is_canonical(&wl));
+        ModelSpec::sort_largest_first(&mut wl);
+        assert!(is_canonical(&wl));
+        // Ties (BERT-large vs XLNet, both 340M) break by name.
+        let tie = vec![ModelSpec::bert_large(), ModelSpec::xlnet_large()];
+        assert!(is_canonical(&tie));
+        let tie_rev = vec![ModelSpec::xlnet_large(), ModelSpec::bert_large()];
+        assert!(!is_canonical(&tie_rev));
+    }
+
+    #[test]
+    fn default_cost_is_placement_derived() {
+        // Two different planners returning the same placement must price
+        // it identically (the default cost path).
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let wl = vec![ModelSpec::bert_large()];
+        let ctx = PlanContext::new(&fleet, &graph, &wl,
+                                   HulkSplitterKind::Oracle);
+        let b = SystemBPlanner;
+        let placement = b.plan(&ctx).unwrap();
+        let via_trait = b.cost(&ctx, &placement, 0);
+        let via_ir = placement.cost(&fleet, &wl[0], 0);
+        assert_eq!(via_trait, via_ir);
+    }
+}

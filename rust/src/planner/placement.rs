@@ -1,0 +1,277 @@
+//! The typed placement IR every [`Planner`](super::Planner) emits.
+//!
+//! A [`Placement`] holds one [`TaskPlacement`] per workload task (same
+//! index as the canonically sorted `PlanContext::workload`). The IR is
+//! *priceable on its own* — [`Placement::cost`] dispatches to the
+//! analytic cost models in [`crate::parallel`] — which is what lets the
+//! `Planner` trait ship a default `cost` and what guarantees that two
+//! planners emitting the same placement report the same numbers.
+
+use crate::cluster::Fleet;
+use crate::models::ModelSpec;
+use crate::parallel::{data_parallel_cost, pipeline_cost,
+                      tensor_parallel_cost, IterCost, PipelinePlan};
+use crate::scheduler::Assignment;
+
+/// Where and how one task runs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TaskPlacement {
+    /// Synchronous data parallelism: every participant holds a full
+    /// replica and all-reduces gradients (System A). Empty participants
+    /// = the task fits no machine (priced infeasible).
+    Replicated { participants: Vec<usize> },
+    /// A GPipe pipeline: stage `s` runs on machine `stages[s]` hosting
+    /// `layers[s]` contiguous layers (System B).
+    PipelineStages {
+        stages: Vec<usize>,
+        layers: Vec<usize>,
+        microbatches: usize,
+    },
+    /// Megatron-style tensor parallelism across `group` (System C).
+    TensorSharded { group: Vec<usize> },
+    /// Hulk: an Algorithm-1 group plus the locality-aware chain order a
+    /// pipeline runs over. `chain` is the stage order (truncated to the
+    /// model's layer count, so possibly a strict subset of `group`);
+    /// `layers` is the per-stage split.
+    Grouped {
+        group: Vec<usize>,
+        chain: Vec<usize>,
+        layers: Vec<usize>,
+        microbatches: usize,
+    },
+}
+
+/// A complete deployment decision for a workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    /// One strategy per task, indexed like the context workload.
+    pub per_task: Vec<TaskPlacement>,
+}
+
+/// The per-system placement digest reported in `BENCH_placements.json`:
+/// how many tasks got machines, how many pipeline stages exist in
+/// total, and how many adjacent communication edges cross a region
+/// boundary (the quantity Hulk's grouping minimizes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlacementSummary {
+    pub groups: usize,
+    pub stages: usize,
+    pub cross_region_edges: usize,
+}
+
+impl Placement {
+    pub fn n_tasks(&self) -> usize {
+        self.per_task.len()
+    }
+
+    /// The machines task `task` runs on (participants / stages / group).
+    pub fn machines(&self, task: usize) -> &[usize] {
+        match &self.per_task[task] {
+            TaskPlacement::Replicated { participants } => participants,
+            TaskPlacement::PipelineStages { stages, .. } => stages,
+            TaskPlacement::TensorSharded { group } => group,
+            TaskPlacement::Grouped { group, .. } => group,
+        }
+    }
+
+    /// The concrete pipeline plan of a pipelined task (`None` for
+    /// replicated / tensor-sharded tasks).
+    pub fn pipeline(&self, task: usize) -> Option<PipelinePlan> {
+        match &self.per_task[task] {
+            TaskPlacement::PipelineStages { stages, layers, microbatches }
+            | TaskPlacement::Grouped { chain: stages, layers,
+                                       microbatches, .. } => {
+                Some(PipelinePlan {
+                    stages: stages.clone(),
+                    layers: layers.clone(),
+                    microbatches: *microbatches,
+                })
+            }
+            _ => None,
+        }
+    }
+
+    /// Per-iteration cost of task `task` (which must be `model`) under
+    /// this placement — the single pricing path behind every planner's
+    /// default `cost`.
+    pub fn cost(&self, fleet: &Fleet, model: &ModelSpec, task: usize)
+        -> IterCost
+    {
+        match &self.per_task[task] {
+            TaskPlacement::Replicated { participants } => {
+                data_parallel_cost(fleet, participants, model)
+            }
+            TaskPlacement::TensorSharded { group } => {
+                tensor_parallel_cost(fleet, group, model)
+            }
+            TaskPlacement::PipelineStages { .. }
+            | TaskPlacement::Grouped { .. } => {
+                let plan = self.pipeline(task).expect("pipelined variant");
+                pipeline_cost(fleet, &plan, model)
+            }
+        }
+    }
+
+    /// The machine groups as a scheduler [`Assignment`] (task order
+    /// preserved) — for validation helpers and quality metrics.
+    pub fn to_assignment(&self) -> Assignment {
+        Assignment::new(
+            (0..self.n_tasks())
+                .map(|t| self.machines(t).to_vec())
+                .collect(),
+        )
+    }
+
+    /// Reporting digest; see [`PlacementSummary`].
+    pub fn summary(&self, fleet: &Fleet) -> PlacementSummary {
+        let groups = (0..self.n_tasks())
+            .filter(|&t| !self.machines(t).is_empty())
+            .count();
+        let stages = self
+            .per_task
+            .iter()
+            .map(|p| match p {
+                TaskPlacement::PipelineStages { stages, .. } => stages.len(),
+                TaskPlacement::Grouped { chain, .. } => chain.len(),
+                _ => 0,
+            })
+            .sum();
+        let cross_region_edges = self
+            .per_task
+            .iter()
+            .map(|p| match p {
+                // Ring collectives in id order: every ring edge,
+                // wraparound included.
+                TaskPlacement::Replicated { participants: m }
+                | TaskPlacement::TensorSharded { group: m } => {
+                    ring_cross_region(fleet, m)
+                }
+                // Pipelines: each stage boundary once.
+                TaskPlacement::PipelineStages { stages, .. } => {
+                    chain_cross_region(fleet, stages)
+                }
+                TaskPlacement::Grouped { chain, .. } => {
+                    chain_cross_region(fleet, chain)
+                }
+            })
+            .sum();
+        PlacementSummary { groups, stages, cross_region_edges }
+    }
+}
+
+fn differs(fleet: &Fleet, a: usize, b: usize) -> bool {
+    fleet.machines[a].region != fleet.machines[b].region
+}
+
+fn chain_cross_region(fleet: &Fleet, order: &[usize]) -> usize {
+    order
+        .windows(2)
+        .filter(|w| differs(fleet, w[0], w[1]))
+        .count()
+}
+
+fn ring_cross_region(fleet: &Fleet, members: &[usize]) -> usize {
+    let n = members.len();
+    if n <= 1 {
+        return 0;
+    }
+    (0..n)
+        .filter(|&k| differs(fleet, members[k], members[(k + 1) % n]))
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn machines_and_pipeline_per_variant() {
+        let p = Placement {
+            per_task: vec![
+                TaskPlacement::Replicated { participants: vec![0, 1] },
+                TaskPlacement::PipelineStages {
+                    stages: vec![2, 3],
+                    layers: vec![12, 12],
+                    microbatches: 8,
+                },
+                TaskPlacement::TensorSharded { group: vec![4] },
+                TaskPlacement::Grouped {
+                    group: vec![5, 6, 7],
+                    chain: vec![6, 5],
+                    layers: vec![10, 14],
+                    microbatches: 8,
+                },
+            ],
+        };
+        assert_eq!(p.machines(0), &[0, 1]);
+        assert_eq!(p.machines(3), &[5, 6, 7]);
+        assert!(p.pipeline(0).is_none());
+        assert!(p.pipeline(2).is_none());
+        let pipe = p.pipeline(3).unwrap();
+        assert_eq!(pipe.stages, vec![6, 5]);
+        assert_eq!(pipe.layers, vec![10, 14]);
+        let a = p.to_assignment();
+        assert_eq!(a.group(1), &[2, 3]);
+        assert_eq!(a.group(3), &[5, 6, 7]);
+    }
+
+    #[test]
+    fn cost_matches_the_underlying_models() {
+        let fleet = Fleet::paper_toy(0);
+        let model = ModelSpec::bert_large();
+        let pipe = PipelinePlan::proportional(&fleet, vec![0, 1, 3], &model);
+        let p = Placement {
+            per_task: vec![
+                TaskPlacement::Replicated { participants: vec![0, 1] },
+                TaskPlacement::PipelineStages {
+                    stages: pipe.stages.clone(),
+                    layers: pipe.layers.clone(),
+                    microbatches: pipe.microbatches,
+                },
+                TaskPlacement::TensorSharded { group: vec![0, 1, 2] },
+            ],
+        };
+        assert_eq!(p.cost(&fleet, &model, 0),
+                   data_parallel_cost(&fleet, &[0, 1], &model));
+        assert_eq!(p.cost(&fleet, &model, 1),
+                   pipeline_cost(&fleet, &pipe, &model));
+        assert_eq!(p.cost(&fleet, &model, 2),
+                   tensor_parallel_cost(&fleet, &[0, 1, 2], &model));
+        // Empty replica set prices infeasible, exactly like System A on
+        // an oversized model.
+        let none = Placement {
+            per_task: vec![TaskPlacement::Replicated {
+                participants: vec![],
+            }],
+        };
+        assert!(!none.cost(&fleet, &model, 0).is_feasible());
+    }
+
+    #[test]
+    fn summary_counts_groups_stages_and_region_crossings() {
+        // paper_toy: nodes 0,1 Beijing; 2,3 California; … (regions vary
+        // by id) — rely only on "same id ⇒ same region".
+        let fleet = Fleet::paper_toy(0);
+        let same = fleet.machines[0].region == fleet.machines[1].region;
+        let p = Placement {
+            per_task: vec![
+                TaskPlacement::Grouped {
+                    group: vec![0, 1],
+                    chain: vec![0, 1],
+                    layers: vec![12, 12],
+                    microbatches: 8,
+                },
+                TaskPlacement::Replicated { participants: vec![] },
+            ],
+        };
+        let s = p.summary(&fleet);
+        assert_eq!(s.groups, 1);
+        assert_eq!(s.stages, 2);
+        assert_eq!(s.cross_region_edges, usize::from(!same));
+        // A single-member ring has no edges.
+        let solo = Placement {
+            per_task: vec![TaskPlacement::TensorSharded { group: vec![3] }],
+        };
+        assert_eq!(solo.summary(&fleet).cross_region_edges, 0);
+    }
+}

@@ -1,0 +1,202 @@
+//! The pluggable planner registry: slug → `Box<dyn Planner>`, strictly
+//! insertion-ordered (report columns, runner cells and `BENCH_*.json`
+//! entry order all follow it).
+//!
+//! Three constructors matter:
+//! - [`PlannerRegistry::standard`] — the paper's four systems in their
+//!   canonical order (`system_a`, `system_b`, `system_c`, `hulk`). This
+//!   is the default everywhere, which is what keeps
+//!   `hulk scenarios run all --json` byte-identical to the
+//!   pre-planner-seam artifacts.
+//! - [`PlannerRegistry::catalog`] — every known planner: the standard
+//!   four plus registered ablations (`hulk_no_gcn`).
+//! - [`PlannerRegistry::resolve`] — the `--systems a,b,hulk` CLI filter:
+//!   picks a subset of the catalog by slug (or `system_`-less shorthand),
+//!   preserving catalog order so filtered artifacts stay column-subsets
+//!   of full runs.
+
+use anyhow::Result;
+
+use super::baselines::{SystemAPlanner, SystemBPlanner, SystemCPlanner};
+use super::hulk::{HulkNoGcnPlanner, HulkPlanner};
+use super::{Planner, PlannerKind, SystemMeta};
+
+/// An insertion-ordered set of planners keyed by slug.
+pub struct PlannerRegistry {
+    planners: Vec<Box<dyn Planner>>,
+}
+
+impl PlannerRegistry {
+    /// An empty registry (build your own planner lineup).
+    pub fn empty() -> PlannerRegistry {
+        PlannerRegistry { planners: Vec::new() }
+    }
+
+    /// Append a planner; duplicate slugs are rejected (a slug is an
+    /// artifact column name — two planners writing the same column would
+    /// corrupt every report).
+    pub fn register(&mut self, planner: Box<dyn Planner>) -> Result<()> {
+        anyhow::ensure!(
+            self.find(planner.slug()).is_none(),
+            "planner slug {:?} already registered",
+            planner.slug()
+        );
+        self.planners.push(planner);
+        Ok(())
+    }
+
+    /// The paper's four systems, canonical order preserved.
+    pub fn standard() -> PlannerRegistry {
+        let mut r = PlannerRegistry::empty();
+        r.register(Box::new(SystemAPlanner)).expect("fresh registry");
+        r.register(Box::new(SystemBPlanner)).expect("fresh registry");
+        r.register(Box::new(SystemCPlanner)).expect("fresh registry");
+        r.register(Box::new(HulkPlanner)).expect("fresh registry");
+        r
+    }
+
+    /// Every known planner: the standard four plus ablations.
+    pub fn catalog() -> PlannerRegistry {
+        let mut r = PlannerRegistry::standard();
+        r.register(Box::new(HulkNoGcnPlanner)).expect("unique slug");
+        r
+    }
+
+    /// Resolve a comma-separated `--systems` filter against the catalog.
+    /// Accepts full slugs (`system_a`, `hulk_no_gcn`) and the
+    /// `system_`-less shorthand (`a`, `b`, `c`); unknown names error
+    /// listing the valid ones. Selection keeps **catalog order** (not
+    /// user order) and ignores duplicates, so a filtered run's artifact
+    /// columns are always an ordered subset of the catalog's.
+    pub fn resolve(csv: &str) -> Result<PlannerRegistry> {
+        let requested: Vec<&str> = csv
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .collect();
+        anyhow::ensure!(!requested.is_empty(),
+                        "--systems got an empty planner list");
+        let catalog = PlannerRegistry::catalog();
+        let unknown: Vec<&str> = requested
+            .iter()
+            .copied()
+            .filter(|name| {
+                !catalog.planners.iter().any(|p| slug_matches(p.slug(), name))
+            })
+            .collect();
+        if !unknown.is_empty() {
+            let valid: Vec<&'static str> =
+                catalog.planners.iter().map(|p| p.slug()).collect();
+            anyhow::bail!(
+                "unknown planner{} {unknown:?}; valid slugs: {} \
+                 (system_a/b/c may be shortened to a/b/c)",
+                if unknown.len() > 1 { "s" } else { "" },
+                valid.join(", ")
+            );
+        }
+        let planners: Vec<Box<dyn Planner>> = catalog
+            .planners
+            .into_iter()
+            .filter(|p| requested.iter().any(|n| slug_matches(p.slug(), n)))
+            .collect();
+        Ok(PlannerRegistry { planners })
+    }
+
+    pub fn len(&self) -> usize {
+        self.planners.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.planners.is_empty()
+    }
+
+    pub fn get(&self, idx: usize) -> &dyn Planner {
+        &*self.planners[idx]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &dyn Planner> {
+        self.planners.iter().map(|p| &**p)
+    }
+
+    /// The registered baselines, in order (improvement denominators).
+    pub fn baselines(&self) -> impl Iterator<Item = &dyn Planner> {
+        self.iter().filter(|p| p.kind() == PlannerKind::Baseline)
+    }
+
+    pub fn find(&self, slug: &str) -> Option<&dyn Planner> {
+        self.iter().find(|p| p.slug() == slug)
+    }
+
+    /// Column metadata, in insertion order.
+    pub fn metas(&self) -> Vec<SystemMeta> {
+        self.iter().map(|p| p.meta()).collect()
+    }
+
+    pub fn slugs(&self) -> Vec<&'static str> {
+        self.iter().map(|p| p.slug()).collect()
+    }
+}
+
+fn slug_matches(slug: &str, requested: &str) -> bool {
+    slug == requested
+        || slug.strip_prefix("system_") == Some(requested)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_is_the_canonical_four() {
+        let r = PlannerRegistry::standard();
+        assert_eq!(r.slugs(),
+                   vec!["system_a", "system_b", "system_c", "hulk"]);
+        assert_eq!(r.baselines().count(), 3);
+        assert_eq!(r.find("hulk").unwrap().kind(), PlannerKind::Hulk);
+    }
+
+    #[test]
+    fn catalog_appends_the_ablation() {
+        let r = PlannerRegistry::catalog();
+        assert_eq!(
+            r.slugs(),
+            vec!["system_a", "system_b", "system_c", "hulk", "hulk_no_gcn"]
+        );
+        assert_eq!(r.find("hulk_no_gcn").unwrap().kind(),
+                   PlannerKind::Ablation);
+        // Names and slugs are unique.
+        let mut slugs = r.slugs();
+        slugs.sort_unstable();
+        slugs.dedup();
+        assert_eq!(slugs.len(), r.len());
+    }
+
+    #[test]
+    fn duplicate_slugs_rejected() {
+        let mut r = PlannerRegistry::standard();
+        let err = r.register(Box::new(HulkPlanner)).unwrap_err();
+        assert!(err.to_string().contains("hulk"), "{err}");
+    }
+
+    #[test]
+    fn resolve_accepts_slugs_and_shorthand_in_catalog_order() {
+        let r = PlannerRegistry::resolve("hulk,a,system_b").unwrap();
+        // Catalog order, not user order.
+        assert_eq!(r.slugs(), vec!["system_a", "system_b", "hulk"]);
+        let r = PlannerRegistry::resolve("hulk_no_gcn").unwrap();
+        assert_eq!(r.slugs(), vec!["hulk_no_gcn"]);
+        // Duplicates collapse.
+        let r = PlannerRegistry::resolve("a, a ,system_a").unwrap();
+        assert_eq!(r.slugs(), vec!["system_a"]);
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_and_empty() {
+        let err = PlannerRegistry::resolve("a,bogus").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("bogus"), "{msg}");
+        assert!(msg.contains("hulk_no_gcn"), "{msg} lists valid slugs");
+        assert!(PlannerRegistry::resolve("").is_err());
+        assert!(PlannerRegistry::resolve(" , ").is_err());
+    }
+}

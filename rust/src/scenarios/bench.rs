@@ -21,11 +21,13 @@ use crate::gnn::{make_dataset, train_gcn, TrainerOptions};
 use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
 use crate::parallel::{pipeline_cost, PipelinePlan};
+use crate::planner::{chain_order, HulkSplitterKind, PlannerRegistry};
 use crate::runtime::client::TrainState;
 use crate::runtime::{GcnRuntime, Manifest};
 use crate::scheduler::{oracle_partition, OracleOptions};
 use crate::sim::simulate_pipeline;
-use crate::systems::{evaluate_all, HulkSplitterKind};
+
+use super::evaluate::evaluate_all;
 use crate::util::rng::Rng;
 use crate::util::table::{fmt_ms, fmt_params, Table};
 
@@ -102,10 +104,11 @@ fn sweep(cli: &Cli) -> Result<()> {
     use super::sweep::{fleet_size_sweep, microbatch_sweep,
                        wan_degradation_sweep};
     let seed = cli.flag_u64("seed", 0)?;
+    let planners = PlannerRegistry::standard();
 
     println!("— fleet-size sweep (Hulk improvement vs best baseline) —");
     let mut t = Table::new(&["servers", "improvement"]);
-    for p in fleet_size_sweep(seed, &[12, 16, 24, 32, 46],
+    for p in fleet_size_sweep(&planners, seed, &[12, 16, 24, 32, 46],
                               &ModelSpec::paper_four())? {
         t.row(&[format!("{:.0}", p.x),
                 format!("{:.1}%", p.improvement * 100.0)]);
@@ -114,7 +117,7 @@ fn sweep(cli: &Cli) -> Result<()> {
 
     println!("— microbatch sweep (GPT-2 Hulk group, per-iter total) —");
     let mut t = Table::new(&["K", "iter total"]);
-    for p in microbatch_sweep(seed, &ModelSpec::gpt2_xl(),
+    for p in microbatch_sweep(&planners, seed, &ModelSpec::gpt2_xl(),
                               &[1, 2, 4, 8, 16, 32])? {
         t.row(&[format!("{:.0}", p.x), fmt_ms(p.improvement)]);
     }
@@ -122,7 +125,7 @@ fn sweep(cli: &Cli) -> Result<()> {
 
     println!("— WAN degradation sweep (all inter-region latencies ×f) —");
     let mut t = Table::new(&["factor", "improvement"]);
-    for p in wan_degradation_sweep(seed, &[1.0, 2.0, 4.0, 8.0],
+    for p in wan_degradation_sweep(&planners, seed, &[1.0, 2.0, 4.0, 8.0],
                                    &ModelSpec::paper_four())? {
         t.row(&[format!("×{:.0}", p.x),
                 format!("{:.1}%", p.improvement * 100.0)]);
@@ -320,7 +323,7 @@ fn ablation(cli: &Cli) -> Result<()> {
     let mut t = Table::new(&["model", "analytic total", "sim makespan",
                              "ratio"]);
     for (i, task) in tasks.iter().enumerate() {
-        let ordered = crate::systems::hulk::chain_order(&graph, a.group(i));
+        let ordered = chain_order(&graph, a.group(i));
         let stages: Vec<usize> =
             ordered.into_iter().take(task.layers).collect();
         let plan = PipelinePlan::proportional(&fleet, stages, task);
@@ -343,7 +346,7 @@ fn ablation(cli: &Cli) -> Result<()> {
         let n_stages = group.len().min(task.layers);
         let id_plan = PipelinePlan::proportional(
             &fleet, group[..n_stages].to_vec(), task);
-        let ordered = crate::systems::hulk::chain_order(&graph, &group);
+        let ordered = chain_order(&graph, &group);
         let chain_plan = PipelinePlan::proportional(
             &fleet, ordered[..n_stages].to_vec(), task);
         let c_id = pipeline_cost(&fleet, &id_plan, task);
@@ -397,9 +400,9 @@ fn micro(cli: &Cli) -> Result<()> {
     let a = oracle_partition(&fleet, &graph, &tasks,
                              &OracleOptions::default());
     b.bench("chain_order_largest_group", || {
-        crate::systems::hulk::chain_order(&graph, a.group(0))
+        chain_order(&graph, a.group(0))
     });
-    let ordered = crate::systems::hulk::chain_order(&graph, a.group(0));
+    let ordered = chain_order(&graph, a.group(0));
     let plan = PipelinePlan::proportional(
         &fleet, ordered[..a.group(0).len().min(tasks[0].layers)].to_vec(),
         &tasks[0]);

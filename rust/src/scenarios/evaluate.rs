@@ -1,9 +1,12 @@
-//! Run a workload through all four systems → the rows of Fig. 8 / Fig. 10
-//! (communication time and calculation time per model per system).
+//! Run a workload through every registered planner → the rows of Fig. 8 /
+//! Fig. 10 (communication time and calculation time per model per system).
 //!
-//! Moved here from `systems::evaluate` when the scenario subsystem was
-//! introduced; `crate::systems` re-exports the public names for
-//! compatibility.
+//! Since the planner seam landed this file no longer knows the four
+//! systems by name: [`evaluate_with`] iterates a
+//! [`PlannerRegistry`] and [`SystemEval`] is as wide as that registry.
+//! [`evaluate_all`] is the convenience wrapper over
+//! [`PlannerRegistry::standard`] — the paper's four, producing exactly
+//! the pre-seam numbers.
 
 use anyhow::Result;
 
@@ -11,66 +14,43 @@ use crate::cluster::Fleet;
 use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
 use crate::parallel::IterCost;
-use crate::systems::hulk::{hulk_plan, HulkSplitterKind};
-use crate::systems::{system_a, system_b, system_c};
+use crate::planner::{HulkSplitterKind, PlacementSummary, PlanContext,
+                     Planner, PlannerKind, PlannerRegistry, SystemMeta};
 use crate::util::table::{fmt_ms, Table};
 
-/// The four systems of §6.4.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SystemKind {
-    SystemA,
-    SystemB,
-    SystemC,
-    Hulk,
-}
-
-impl SystemKind {
-    pub const ALL: [SystemKind; 4] = [
-        SystemKind::SystemA,
-        SystemKind::SystemB,
-        SystemKind::SystemC,
-        SystemKind::Hulk,
-    ];
-
-    pub fn name(self) -> &'static str {
-        match self {
-            SystemKind::SystemA => "System A (DP)",
-            SystemKind::SystemB => "System B (GPipe)",
-            SystemKind::SystemC => "System C (Megatron)",
-            SystemKind::Hulk => "Hulk",
-        }
-    }
-
-    /// Stable machine-readable id used in `BENCH_*.json` entry names.
-    pub fn slug(self) -> &'static str {
-        match self {
-            SystemKind::SystemA => "system_a",
-            SystemKind::SystemB => "system_b",
-            SystemKind::SystemC => "system_c",
-            SystemKind::Hulk => "hulk",
-        }
-    }
-}
-
-/// One evaluated workload: per-model, per-system iteration costs.
+/// One evaluated workload: per-model, per-planner iteration costs plus
+/// each planner's placement digest.
 #[derive(Clone, Debug)]
 pub struct SystemEval {
+    /// Column metadata, registry insertion order.
+    pub systems: Vec<SystemMeta>,
     pub models: Vec<ModelSpec>,
-    /// `costs[m][s]` for model m under `SystemKind::ALL[s]`.
-    pub costs: Vec<[IterCost; 4]>,
+    /// `costs[m][s]` for model m under `systems[s]`.
+    pub costs: Vec<Vec<IterCost>>,
+    /// `placements[s]`: the placement summary of `systems[s]`.
+    pub placements: Vec<PlacementSummary>,
 }
 
 impl SystemEval {
+    /// Column index of the Hulk system, if registered.
+    pub fn hulk_column(&self) -> Option<usize> {
+        self.systems.iter().position(|s| s.kind == PlannerKind::Hulk)
+    }
+
     /// Hulk's total-time improvement over the best feasible baseline,
-    /// summed over the workload (the paper's ">20%" headline).
+    /// summed over the workload (the paper's ">20%" headline). 0.0 when
+    /// the evaluation ran without Hulk or without any baseline.
     pub fn hulk_improvement(&self) -> f64 {
+        let Some(h) = self.hulk_column() else { return 0.0 };
         let mut hulk_total = 0.0;
         let mut best_baseline_total = 0.0;
         for row in &self.costs {
-            let hulk = row[3].total_ms();
-            let best = row[..3]
+            let hulk = row[h].total_ms();
+            let best = row
                 .iter()
-                .map(IterCost::total_ms)
+                .zip(&self.systems)
+                .filter(|(_, meta)| meta.kind == PlannerKind::Baseline)
+                .map(|(c, _)| c.total_ms())
                 .fold(f64::INFINITY, f64::min);
             if best.is_finite() && hulk.is_finite() {
                 hulk_total += hulk;
@@ -88,7 +68,7 @@ impl SystemEval {
         let mut t = Table::new(&["Model", "System", "Comm", "Comp",
                                  "Total"]);
         for (m, model) in self.models.iter().enumerate() {
-            for (s, kind) in SystemKind::ALL.iter().enumerate() {
+            for (s, meta) in self.systems.iter().enumerate() {
                 let c = self.costs[m][s];
                 let (comm, comp, total) = if c.is_feasible() {
                     (fmt_ms(c.comm_ms), fmt_ms(c.comp_ms),
@@ -98,7 +78,7 @@ impl SystemEval {
                 };
                 t.row(&[
                     model.name.to_string(),
-                    kind.name().to_string(),
+                    meta.name.to_string(),
                     comm,
                     comp,
                     total,
@@ -109,26 +89,40 @@ impl SystemEval {
     }
 }
 
-/// Evaluate `workload` under all four systems. Hulk uses the given
-/// splitter (GNN in production, oracle for artifact-free runs).
+/// Evaluate `workload` under every planner in `planners`. Hulk-family
+/// planners drive Algorithm 1 with the given splitter (GNN in
+/// production, oracle for artifact-free runs).
+pub fn evaluate_with(planners: &PlannerRegistry, fleet: &Fleet,
+                     workload: &[ModelSpec], splitter: HulkSplitterKind)
+    -> Result<SystemEval>
+{
+    let graph = ClusterGraph::from_fleet(fleet);
+    let mut models = workload.to_vec();
+    ModelSpec::sort_largest_first(&mut models);
+    let ctx = PlanContext::new(fleet, &graph, &models, splitter);
+
+    let mut columns: Vec<Vec<IterCost>> = Vec::with_capacity(planners.len());
+    let mut placements = Vec::with_capacity(planners.len());
+    for planner in planners.iter() {
+        let placement = planner.plan(&ctx)?;
+        columns.push(
+            (0..models.len())
+                .map(|t| planner.cost(&ctx, &placement, t))
+                .collect(),
+        );
+        placements.push(placement.summary(fleet));
+    }
+    let costs = (0..models.len())
+        .map(|m| columns.iter().map(|col| col[m]).collect())
+        .collect();
+    Ok(SystemEval { systems: planners.metas(), models, costs, placements })
+}
+
+/// Evaluate `workload` under the standard four systems (§6.4).
 pub fn evaluate_all(fleet: &Fleet, workload: &[ModelSpec],
                     splitter: HulkSplitterKind) -> Result<SystemEval>
 {
-    let graph = ClusterGraph::from_fleet(fleet);
-    let plan = hulk_plan(fleet, &graph, workload, splitter)?;
-
-    // hulk_plan sorts tasks desc; keep that canonical order for rows.
-    let models = plan.tasks.clone();
-    let mut costs = Vec::with_capacity(models.len());
-    for (t, model) in models.iter().enumerate() {
-        costs.push([
-            system_a::cost(fleet, model),
-            system_b::cost(fleet, model),
-            system_c::cost(fleet, model),
-            crate::systems::hulk::cost(fleet, &plan, t),
-        ]);
-    }
-    Ok(SystemEval { models, costs })
+    evaluate_with(&PlannerRegistry::standard(), fleet, workload, splitter)
 }
 
 #[cfg(test)]
@@ -142,8 +136,11 @@ mod tests {
                                 HulkSplitterKind::Oracle)
             .unwrap();
         assert_eq!(eval.models.len(), 4);
+        assert_eq!(eval.systems.len(), 4);
+        let h = eval.hulk_column().unwrap();
+        assert_eq!(h, 3, "standard registry keeps hulk last");
         for (m, row) in eval.costs.iter().enumerate() {
-            let hulk = row[3];
+            let hulk = row[h];
             assert!(hulk.is_feasible(), "hulk infeasible for {}",
                     eval.models[m].name);
             // Hulk comm beats B and C everywhere (the paper's Figure 8).
@@ -169,8 +166,8 @@ mod tests {
                                 HulkSplitterKind::Oracle)
             .unwrap();
         let out = eval.render();
-        for kind in SystemKind::ALL {
-            assert!(out.contains(kind.name()));
+        for meta in &eval.systems {
+            assert!(out.contains(meta.name));
         }
         assert!(out.contains("OPT (175B)"));
         assert!(out.contains("infeasible")); // System A × OPT
@@ -178,8 +175,53 @@ mod tests {
 
     #[test]
     fn slugs_are_stable_and_unique() {
+        let fleet = Fleet::paper_evaluation(0);
+        let eval = evaluate_all(&fleet, &[ModelSpec::bert_large()],
+                                HulkSplitterKind::Oracle)
+            .unwrap();
         let slugs: Vec<&str> =
-            SystemKind::ALL.iter().map(|k| k.slug()).collect();
+            eval.systems.iter().map(|s| s.slug).collect();
         assert_eq!(slugs, vec!["system_a", "system_b", "system_c", "hulk"]);
+    }
+
+    #[test]
+    fn filtered_registry_narrows_the_eval() {
+        let fleet = Fleet::paper_evaluation(0);
+        let planners = PlannerRegistry::resolve("b,hulk").unwrap();
+        let eval = evaluate_with(&planners, &fleet,
+                                 &[ModelSpec::gpt2_xl()],
+                                 HulkSplitterKind::Oracle)
+            .unwrap();
+        assert_eq!(eval.systems.len(), 2);
+        assert_eq!(eval.costs[0].len(), 2);
+        assert_eq!(eval.placements.len(), 2);
+        // Improvement still computes: B is the only baseline present.
+        assert!(eval.hulk_improvement().is_finite());
+        // Without Hulk the improvement degenerates to 0.
+        let b_only = PlannerRegistry::resolve("b").unwrap();
+        let eval = evaluate_with(&b_only, &fleet, &[ModelSpec::gpt2_xl()],
+                                 HulkSplitterKind::Oracle)
+            .unwrap();
+        assert_eq!(eval.hulk_improvement(), 0.0);
+    }
+
+    #[test]
+    fn placements_summarize_each_column() {
+        let fleet = Fleet::paper_evaluation(0);
+        let eval = evaluate_all(&fleet, &ModelSpec::paper_four(),
+                                HulkSplitterKind::Oracle)
+            .unwrap();
+        // System C shards every task across all 46 machines → 4 groups,
+        // 0 pipeline stages; System B pipelines every task.
+        assert_eq!(eval.placements[2].groups, 4);
+        assert_eq!(eval.placements[2].stages, 0);
+        assert!(eval.placements[1].stages > 0);
+        // Hulk's regional grouping crosses far fewer region boundaries
+        // than System B's id-order pipelines.
+        assert!(eval.placements[3].cross_region_edges
+                    < eval.placements[1].cross_region_edges,
+                "hulk {} vs B {}",
+                eval.placements[3].cross_region_edges,
+                eval.placements[1].cross_region_edges);
     }
 }

@@ -1,7 +1,7 @@
-//! The scenario + benchmark subsystem: one place that runs the paper's
-//! four systems over many fleet/WAN situations and reports the results,
-//! both human-readable (CLI tables) and machine-readable
-//! (`BENCH_*.json` via `benchkit`).
+//! The scenario + benchmark subsystem: one place that runs the
+//! registered planners (the paper's four systems by default) over many
+//! fleet/WAN situations and reports the results, both human-readable
+//! (CLI tables) and machine-readable (`BENCH_*.json` via `benchkit`).
 //!
 //! - [`registry`] — the named-scenario registry (`hulk scenarios`):
 //!   deterministic seed→result definitions for the Table 1 fleet, WAN
@@ -9,18 +9,21 @@
 //!   multi-tenant streaming arrivals, planet-scale synthetic fleets and
 //!   bursty Poisson task streams.
 //! - [`runner`] — the execution engine: scenario specs decompose into
-//!   (scenario × system) cells executed serially or across a std-thread
-//!   worker pool, with insertion-ordered merging so `--parallel` output
-//!   is byte-identical to a serial run.
-//! - [`evaluate`] — a workload through Systems A/B/C/Hulk (the Fig. 8 /
+//!   (scenario × registered planner) cells executed serially or across a
+//!   std-thread worker pool, with insertion-ordered merging so
+//!   `--parallel` output is byte-identical to a serial run.
+//! - [`evaluate`] — a workload through every planner of a
+//!   [`PlannerRegistry`](crate::planner::PlannerRegistry) (the Fig. 8 /
 //!   Fig. 10 rows); the primitive every scenario builds on.
 //! - [`sweep`] — parameter sweeps (fleet size, microbatches, WAN
 //!   degradation) used by scenarios and `hulk bench sweep`.
 //! - [`bench`] — the per-table/figure reproduction entry points
 //!   (`hulk bench`, `cargo bench`).
 //!
-//! `crate::systems` re-exports the evaluation/sweep names that lived
-//! there before this subsystem existed.
+//! Which strategies run is decided by the planner registry
+//! ([`crate::planner`]): the CLI's `--systems a,b,hulk` filter selects a
+//! subset, ablations like `hulk_no_gcn` opt in the same way, and no code
+//! here names an individual system.
 
 pub mod bench;
 pub mod evaluate;
@@ -28,7 +31,7 @@ pub mod registry;
 pub mod runner;
 pub mod sweep;
 
-pub use evaluate::{evaluate_all, SystemEval, SystemKind};
+pub use evaluate::{evaluate_all, evaluate_with, SystemEval};
 pub use registry::{all_scenarios, find_scenario, resolve_scenarios,
                    run_all};
 pub use runner::{run_specs, ScenarioBody, ScenarioResult, ScenarioSpec,

@@ -1,6 +1,7 @@
-//! The named-scenario registry: every entry deterministically runs the
-//! paper's four systems (A/B/C/Hulk) over one fleet/workload situation and
-//! emits machine-readable [`BenchEntry`] rows for `BENCH_*.json`.
+//! The named-scenario registry: every entry deterministically runs one
+//! fleet/workload situation through the registered planners (the paper's
+//! Systems A/B/C/Hulk by default) and emits machine-readable
+//! [`BenchEntry`] rows for `BENCH_*.json`.
 //!
 //! Scenarios exist so the headline claim — Hulk >20% over the best
 //! baseline — is tracked across *many* WAN/fleet situations, not just the
@@ -11,13 +12,16 @@
 //! Since the runner refactor, a scenario is **data**: a
 //! [`ScenarioSpec`] with a seed policy and a body — either the standard
 //! `Evaluate` shape (fleet builder + workload, fanned out as one cell
-//! per system by [`super::runner`]) or a `Custom` function for
-//! leader-loop streams and multi-step sweeps. Everything is a pure
-//! function of the seed: no wall clock, no global state, so two runs
-//! with the same seed produce identical entries — serial or parallel.
+//! per registered planner by [`super::runner`]) or a `Custom` function
+//! for leader-loop streams and multi-step sweeps. Custom bodies receive
+//! the [`PlannerRegistry`] too, so their baseline comparisons honor the
+//! CLI's `--systems` filter. Everything is a pure function of the seed:
+//! no wall clock, no global state, so two runs with the same seed
+//! produce identical entries — serial or parallel.
 //!
 //! CLI: `hulk scenarios list` and `hulk scenarios run <name…|all>
-//! [--seed S] [--json] [--out DIR] [--parallel] [--threads N]`.
+//! [--seed S] [--systems a,b,hulk] [--json] [--out DIR] [--parallel]
+//! [--threads N]`.
 
 use std::collections::BTreeSet;
 
@@ -31,16 +35,16 @@ use crate::coordinator::{scale_out, Coordinator, CoordinatorEvent,
 use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
 use crate::parallel::pipeline_cost;
+use crate::planner::{HulkSplitterKind, PlanContext, Planner, PlannerKind,
+                     PlannerRegistry};
 use crate::scheduler::{oracle_partition, Assignment, OracleOptions};
 use crate::sim::{simulate_pipeline, FailurePlan};
-use crate::systems::hulk::{hulk_plan, HulkSplitterKind};
-use crate::systems::{system_a, system_b, system_c};
 use crate::util::rng::Rng;
 use crate::util::table::{fmt_ms, Table};
 
-use super::evaluate::{evaluate_all, SystemEval, SystemKind};
-use super::runner::{run_specs, ScenarioBody, ScenarioResult, ScenarioSpec,
-                    SeedPolicy};
+use super::evaluate::{evaluate_with, SystemEval};
+use super::runner::{placement_entries, run_specs, ScenarioBody,
+                    ScenarioResult, ScenarioSpec, SeedPolicy};
 use super::sweep::{feasible_workload, fleet_size_sweep, truncated_fleet};
 
 /// Every registered scenario, in canonical order.
@@ -162,9 +166,10 @@ pub fn resolve_scenarios(names: &[String])
     Ok((picked, false))
 }
 
-/// Run every scenario with one seed, serially.
+/// Run every scenario with one seed, serially, under the standard four
+/// systems.
 pub fn run_all(seed: u64) -> Result<Vec<ScenarioResult>> {
-    run_specs(&all_scenarios(), seed, 1)
+    run_specs(&all_scenarios(), seed, 1, &PlannerRegistry::standard())
 }
 
 /// Lowercase ascii-alnum slug for entry names: `"OPT (175B)"` →
@@ -181,15 +186,15 @@ fn slug(name: &str) -> String {
     out.trim_end_matches('_').to_string()
 }
 
-/// Per-model × per-system `iter_ms` rows (feasible combinations only).
+/// Per-model × per-planner `iter_ms` rows (feasible combinations only).
 fn eval_entries(prefix: &str, eval: &SystemEval) -> Vec<BenchEntry> {
     let mut out = Vec::new();
     for (m, model) in eval.models.iter().enumerate() {
-        for (s, kind) in SystemKind::ALL.iter().enumerate() {
+        for (s, meta) in eval.systems.iter().enumerate() {
             let c = eval.costs[m][s];
             if c.is_feasible() {
                 out.push(BenchEntry::new(
-                    format!("{prefix}/{}/{}/iter_ms", kind.slug(),
+                    format!("{prefix}/{}/{}/iter_ms", meta.slug,
                             slug(model.name)),
                     c.total_ms(),
                     "ms",
@@ -331,15 +336,18 @@ fn planet_finish(fleet: &Fleet, eval: &SystemEval)
 /// WAN degradation ×1..×8; the ×4 WAN gets the full system comparison.
 /// Each factor is evaluated exactly once (no second pass through the
 /// sweep for the table).
-fn wan_degradation(seed: u64) -> Result<ScenarioResult> {
+fn wan_degradation(seed: u64, planners: &PlannerRegistry)
+    -> Result<ScenarioResult>
+{
     let workload = ModelSpec::paper_four();
     let mut entries = Vec::new();
+    let mut placements = Vec::new();
     let mut t = Table::new(&["factor", "Hulk improvement"]);
     let mut x4_render = String::new();
     for factor in [1.0, 2.0, 4.0, 8.0] {
         let fleet = Fleet::paper_evaluation(seed).with_wan_scaled(factor);
-        let eval = evaluate_all(&fleet, &workload,
-                                HulkSplitterKind::Oracle)?;
+        let eval = evaluate_with(planners, &fleet, &workload,
+                                 HulkSplitterKind::Oracle)?;
         entries.push(BenchEntry::new(
             format!("wan_degradation/x{factor:.0}/hulk_improvement_pct"),
             eval.hulk_improvement() * 100.0,
@@ -349,6 +357,7 @@ fn wan_degradation(seed: u64) -> Result<ScenarioResult> {
                 format!("{:.1}%", eval.hulk_improvement() * 100.0)]);
         if factor == 4.0 {
             entries.extend(eval_entries("wan_degradation/x4", &eval));
+            placements = placement_entries("wan_degradation/x4", &eval);
             x4_render = eval.render();
         }
     }
@@ -357,14 +366,21 @@ fn wan_degradation(seed: u64) -> Result<ScenarioResult> {
          the ×4 WAN —\n{x4_render}",
         t.render()
     );
-    Ok(ScenarioResult { scenario: "wan_degradation", entries, rendered })
+    Ok(ScenarioResult {
+        scenario: "wan_degradation",
+        entries,
+        placements,
+        rendered,
+    })
 }
 
 /// Fleet growth 12→46 plus the Fig. 6 scale-out join.
-fn fleet_growth(seed: u64) -> Result<ScenarioResult> {
+fn fleet_growth(seed: u64, planners: &PlannerRegistry)
+    -> Result<ScenarioResult>
+{
     let workload = ModelSpec::paper_four();
     let sizes = [12usize, 16, 24, 32, 46];
-    let points = fleet_size_sweep(seed, &sizes, &workload)?;
+    let points = fleet_size_sweep(planners, seed, &sizes, &workload)?;
     let mut entries = Vec::new();
     let mut t = Table::new(&["servers", "Hulk improvement"]);
     for p in &points {
@@ -377,12 +393,15 @@ fn fleet_growth(seed: u64) -> Result<ScenarioResult> {
                 format!("{:.1}%", p.improvement * 100.0)]);
     }
 
-    // Mid-growth checkpoint: all four systems on the 24-server fleet.
+    // Mid-growth checkpoint: every registered planner on the 24-server
+    // fleet.
     let mid = truncated_fleet(&Fleet::paper_evaluation(seed), 24);
     let mid_workload = feasible_workload(&mid, &workload);
-    let eval = evaluate_all(&mid, &mid_workload, HulkSplitterKind::Oracle)?;
+    let eval = evaluate_with(planners, &mid, &mid_workload,
+                             HulkSplitterKind::Oracle)?;
     entries.extend(eval_entries("fleet_growth/n24", &eval));
     entries.push(improvement_entry("fleet_growth/n24", &eval));
+    let placements = placement_entries("fleet_growth/n24", &eval);
 
     // Fig. 6: node 45 {Rome, 7, 384} joins the 45-server system.
     let (fleet46, assignment, tasks, id, joined, _before_cost) =
@@ -415,13 +434,20 @@ fn fleet_growth(seed: u64) -> Result<ScenarioResult> {
             None => "spare pool".to_string(),
         }
     );
-    Ok(ScenarioResult { scenario: "fleet_growth", entries, rendered })
+    Ok(ScenarioResult {
+        scenario: "fleet_growth",
+        entries,
+        placements,
+        rendered,
+    })
 }
 
 /// Five machine failures against the leader's recovery policy, then the
-/// four systems re-evaluated on the surviving fleet, plus a DES run with
-/// a mid-iteration failure.
-fn failure_storm(seed: u64) -> Result<ScenarioResult> {
+/// registered planners re-evaluated on the surviving fleet, plus a DES
+/// run with a mid-iteration failure (when a Hulk planner is registered).
+fn failure_storm(seed: u64, planners: &PlannerRegistry)
+    -> Result<ScenarioResult>
+{
     let fleet = Fleet::paper_evaluation(seed);
     let mut coordinator = Coordinator::new(fleet.clone());
     for model in ModelSpec::paper_four() {
@@ -464,8 +490,8 @@ fn failure_storm(seed: u64) -> Result<ScenarioResult> {
         ));
     }
 
-    // The four systems on the surviving fleet. Remove victims largest-id
-    // first so earlier removals do not shift later ids.
+    // The registered planners on the surviving fleet. Remove victims
+    // largest-id first so earlier removals do not shift later ids.
     let mut survivors = fleet.clone();
     let mut doomed = victims.clone();
     doomed.sort_unstable();
@@ -480,8 +506,8 @@ fn failure_storm(seed: u64) -> Result<ScenarioResult> {
     // model; deterministically shed largest-first until Algorithm 1
     // accepts (paper: such tasks queue until resources return).
     let eval = loop {
-        match evaluate_all(&survivors, &workload,
-                           HulkSplitterKind::Oracle) {
+        match evaluate_with(planners, &survivors, &workload,
+                            HulkSplitterKind::Oracle) {
             Ok(eval) => break eval,
             Err(_) if workload.len() > 1 => {
                 workload.remove(0);
@@ -491,44 +517,60 @@ fn failure_storm(seed: u64) -> Result<ScenarioResult> {
     };
     entries.extend(eval_entries("failure_storm/survivors", &eval));
     entries.push(improvement_entry("failure_storm/survivors", &eval));
+    let placements = placement_entries("failure_storm/survivors", &eval);
 
     // DES: interrupt the largest surviving Hulk pipeline mid-iteration.
-    let graph = ClusterGraph::from_fleet(&survivors);
-    let plan = hulk_plan(&survivors, &graph, &workload,
-                         HulkSplitterKind::Oracle)?;
-    let pipe = &plan.pipelines[0];
+    // Prefer the registered Hulk system, falling back to a Hulk-family
+    // ablation so `--systems hulk_no_gcn,…` runs keep the sim rows;
+    // skipped only when the filter leaves no grouping planner at all.
+    let des_planner = planners
+        .iter()
+        .find(|p| p.kind() == PlannerKind::Hulk)
+        .or_else(|| {
+            planners.iter().find(|p| p.kind() == PlannerKind::Ablation)
+        });
     let mut sim_note = String::new();
-    if pipe.stages.len() > 1
-        && pipeline_cost(&survivors, pipe, &plan.tasks[0]).is_feasible()
-    {
-        let healthy =
-            simulate_pipeline(&survivors, pipe, &plan.tasks[0], false, None);
-        entries.push(BenchEntry::new(
-            "failure_storm/sim/healthy_makespan_ms",
-            healthy.makespan_ms,
-            "ms",
-        ));
-        let injected = FailurePlan {
-            at_ms: healthy.makespan_ms * 0.5,
-            machine: pipe.stages[1],
-        };
-        let interrupted = simulate_pipeline(&survivors, pipe,
-                                            &plan.tasks[0], false,
-                                            Some(injected));
-        if let Some(outcome) = interrupted.failure {
+    if let Some(hulk) = des_planner {
+        let graph = ClusterGraph::from_fleet(&survivors);
+        let ctx = PlanContext::new(&survivors, &graph, &eval.models,
+                                   HulkSplitterKind::Oracle);
+        let placement = hulk.plan(&ctx)?;
+        let pipe = placement
+            .pipeline(0)
+            .expect("hulk-family planners emit pipelined placements");
+        if pipe.stages.len() > 1
+            && pipeline_cost(&survivors, &pipe, &eval.models[0])
+                .is_feasible()
+        {
+            let healthy = simulate_pipeline(&survivors, &pipe,
+                                            &eval.models[0], false, None);
             entries.push(BenchEntry::new(
-                "failure_storm/sim/microbatches_salvaged",
-                outcome.completed_microbatches as f64,
-                "count",
+                "failure_storm/sim/healthy_makespan_ms",
+                healthy.makespan_ms,
+                "ms",
             ));
-            sim_note = format!(
-                "DES: stage machine {} killed at {} → {} of {} \
-                 microbatches salvaged\n",
-                outcome.machine,
-                fmt_ms(outcome.at_ms),
-                outcome.completed_microbatches,
-                pipe.microbatches
-            );
+            let injected = FailurePlan {
+                at_ms: healthy.makespan_ms * 0.5,
+                machine: pipe.stages[1],
+            };
+            let interrupted = simulate_pipeline(&survivors, &pipe,
+                                                &eval.models[0], false,
+                                                Some(injected));
+            if let Some(outcome) = interrupted.failure {
+                entries.push(BenchEntry::new(
+                    "failure_storm/sim/microbatches_salvaged",
+                    outcome.completed_microbatches as f64,
+                    "count",
+                ));
+                sim_note = format!(
+                    "DES: stage machine {} killed at {} → {} of {} \
+                     microbatches salvaged\n",
+                    outcome.machine,
+                    fmt_ms(outcome.at_ms),
+                    outcome.completed_microbatches,
+                    pipe.microbatches
+                );
+            }
         }
     }
 
@@ -541,12 +583,44 @@ fn failure_storm(seed: u64) -> Result<ScenarioResult> {
         eval.render(),
         eval.hulk_improvement() * 100.0
     );
-    Ok(ScenarioResult { scenario: "failure_storm", entries, rendered })
+    Ok(ScenarioResult {
+        scenario: "failure_storm",
+        entries,
+        placements,
+        rendered,
+    })
+}
+
+/// Per-model baseline rows on a pristine fleet: each registered baseline
+/// planner plans and prices the model alone (their defining weakness in
+/// a multi-tenant setting is getting the whole fleet per model).
+fn baseline_rows(planners: &PlannerRegistry, fleet: &Fleet,
+                 graph: &ClusterGraph, prefix: &str, model: &ModelSpec,
+                 entries: &mut Vec<BenchEntry>) -> Result<()>
+{
+    let single = [model.clone()];
+    let ctx = PlanContext::new(fleet, graph, &single,
+                               HulkSplitterKind::Oracle);
+    for planner in planners.baselines() {
+        let placement = planner.plan(&ctx)?;
+        let cost = planner.cost(&ctx, &placement, 0);
+        if cost.is_feasible() {
+            entries.push(BenchEntry::new(
+                format!("{prefix}/{}/{}/iter_ms", planner.slug(),
+                        slug(model.name)),
+                cost.total_ms(),
+                "ms",
+            ));
+        }
+    }
+    Ok(())
 }
 
 /// Six models arriving as a stream through the leader loop, with a
 /// mid-stream machine failure; baselines costed on the same arrivals.
-fn multi_tenant(seed: u64) -> Result<ScenarioResult> {
+fn multi_tenant(seed: u64, planners: &PlannerRegistry)
+    -> Result<ScenarioResult>
+{
     let fleet = Fleet::paper_evaluation(seed);
     let mut rng = Rng::new(seed ^ 0x4D54_454E_414E); // "MTENAN"
     let mut arrivals = ModelSpec::paper_six();
@@ -597,21 +671,10 @@ fn multi_tenant(seed: u64) -> Result<ScenarioResult> {
     }
     // Baselines get the whole (pristine) fleet per model — that is their
     // defining weakness in a multi-tenant setting.
+    let graph = ClusterGraph::from_fleet(&fleet);
     for model in &arrivals {
-        for (kind, cost) in [
-            (SystemKind::SystemA, system_a::cost(&fleet, model)),
-            (SystemKind::SystemB, system_b::cost(&fleet, model)),
-            (SystemKind::SystemC, system_c::cost(&fleet, model)),
-        ] {
-            if cost.is_feasible() {
-                entries.push(BenchEntry::new(
-                    format!("multi_tenant/{}/{}/iter_ms", kind.slug(),
-                            slug(model.name)),
-                    cost.total_ms(),
-                    "ms",
-                ));
-            }
-        }
+        baseline_rows(planners, &fleet, &graph, "multi_tenant", model,
+                      &mut entries)?;
     }
 
     let arrival_names: Vec<&str> =
@@ -625,7 +688,12 @@ fn multi_tenant(seed: u64) -> Result<ScenarioResult> {
         coordinator.metrics.counter("machine_failures"),
         t.render()
     );
-    Ok(ScenarioResult { scenario: "multi_tenant", entries, rendered })
+    Ok(ScenarioResult {
+        scenario: "multi_tenant",
+        entries,
+        placements: Vec::new(),
+        rendered,
+    })
 }
 
 /// Knuth's Poisson sampler: deterministic given the rng stream.
@@ -646,7 +714,9 @@ fn poisson(rng: &mut Rng, lambda: f64) -> usize {
 /// draws `Poisson(λ)` arrivals from the small/mid model catalog, two
 /// machines die mid-storm, and the queue drains under a bounded tick
 /// budget — so total leader events are bounded regardless of seed.
-fn burst_arrivals(seed: u64) -> Result<ScenarioResult> {
+fn burst_arrivals(seed: u64, planners: &PlannerRegistry)
+    -> Result<ScenarioResult>
+{
     const SLOTS: usize = 24;
     const LAMBDA: f64 = 0.75;
     const MAX_DRAIN_TICKS: u64 = 64;
@@ -740,26 +810,15 @@ fn burst_arrivals(seed: u64) -> Result<ScenarioResult> {
         }
     }
     // Baselines on the pristine fleet, one row per distinct model seen.
+    let graph = ClusterGraph::from_fleet(&fleet);
     let mut seen: Vec<&'static str> = Vec::new();
     for task in &coordinator.tasks {
         if seen.contains(&task.model.name) {
             continue;
         }
         seen.push(task.model.name);
-        for (kind, cost) in [
-            (SystemKind::SystemA, system_a::cost(&fleet, &task.model)),
-            (SystemKind::SystemB, system_b::cost(&fleet, &task.model)),
-            (SystemKind::SystemC, system_c::cost(&fleet, &task.model)),
-        ] {
-            if cost.is_feasible() {
-                entries.push(BenchEntry::new(
-                    format!("burst_arrivals/{}/{}/iter_ms", kind.slug(),
-                            slug(task.model.name)),
-                    cost.total_ms(),
-                    "ms",
-                ));
-            }
-        }
+        baseline_rows(planners, &fleet, &graph, "burst_arrivals",
+                      &task.model, &mut entries)?;
     }
 
     let rendered = format!(
@@ -773,12 +832,18 @@ fn burst_arrivals(seed: u64) -> Result<ScenarioResult> {
         coordinator.metrics.counter("machine_failures"),
         t.render()
     );
-    Ok(ScenarioResult { scenario: "burst_arrivals", entries, rendered })
+    Ok(ScenarioResult {
+        scenario: "burst_arrivals",
+        entries,
+        placements: Vec::new(),
+        rendered,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scenarios::evaluate::evaluate_all;
 
     #[test]
     fn slugs_compress_model_names() {
@@ -862,6 +927,20 @@ mod tests {
             .iter()
             .any(|e| e.name == "x/hulk/opt_175b/iter_ms"));
         assert!(entries.iter().all(|e| e.value.is_finite()));
+    }
+
+    #[test]
+    fn custom_scenarios_honor_a_filtered_registry() {
+        // multi_tenant with only System B as baseline: no system_a or
+        // system_c rows, system_b rows present.
+        let planners = PlannerRegistry::resolve("b,hulk").unwrap();
+        let result = find_scenario("multi_tenant")
+            .unwrap()
+            .run_with(0, &planners)
+            .unwrap();
+        assert!(result.entries.iter().any(|e| e.name.contains("/system_b/")));
+        assert!(!result.entries.iter().any(|e| e.name.contains("/system_a/")));
+        assert!(!result.entries.iter().any(|e| e.name.contains("/system_c/")));
     }
 
     #[test]

@@ -2,18 +2,24 @@
 //!
 //! [`ScenarioSpec`] turns a scenario into *data* — a name, a seed
 //! policy, and a body that is either the standard "fleet × workload
-//! through all four systems" shape or an opaque custom runner. The
-//! engine decomposes specs into **cells** (one per (scenario, system)
-//! for the standard shape, one per scenario otherwise), executes the
-//! cells either inline or across a `std::thread` worker pool, and
-//! merges the outputs back **in registry insertion order**.
+//! through every registered planner" shape or an opaque custom runner.
+//! The engine decomposes specs into **cells** (one per (scenario ×
+//! registered planner) for the standard shape, one per scenario
+//! otherwise), executes the cells either inline or across a
+//! `std::thread` worker pool, and merges the outputs back **in registry
+//! insertion order**.
+//!
+//! Which planners run is the caller's [`PlannerRegistry`] — the CLI's
+//! `--systems` filter hands a subset, the default is
+//! [`PlannerRegistry::standard`] (the paper's four, byte-identical
+//! artifacts to the pre-seam engine).
 //!
 //! Determinism contract: every cell is a pure function of
-//! `(spec, seed)` — no wall clock, no global state — and the merge
-//! order is fixed by the spec list, not by completion order. Therefore
-//! `hulk scenarios run all --json --parallel` writes a
-//! `BENCH_scenarios.json` that is byte-identical to the serial run's,
-//! which CI enforces as a gate.
+//! `(spec, planner, seed)` — no wall clock, no global state — and the
+//! merge order is fixed by the spec list and the registry, not by
+//! completion order. Therefore `hulk scenarios run all --json
+//! --parallel` writes a `BENCH_scenarios.json` that is byte-identical
+//! to the serial run's, which CI enforces as a gate.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -25,10 +31,10 @@ use crate::cluster::Fleet;
 use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
 use crate::parallel::IterCost;
-use crate::systems::hulk::{hulk_plan, HulkSplitterKind};
-use crate::systems::{system_a, system_b, system_c};
+use crate::planner::{HulkSplitterKind, PlacementSummary, PlanContext,
+                     Planner, PlannerRegistry};
 
-use super::evaluate::{SystemEval, SystemKind};
+use super::evaluate::SystemEval;
 
 /// How a scenario derives its effective seed from the CLI seed.
 #[derive(Clone, Copy, Debug)]
@@ -55,8 +61,8 @@ impl SeedPolicy {
 #[derive(Clone)]
 pub enum ScenarioBody {
     /// The standard shape: build a fleet from the effective seed, pick
-    /// a workload on it, and run the workload through Systems A/B/C and
-    /// Hulk. The engine fans this out as one cell per system.
+    /// a workload on it, and run the workload through every registered
+    /// planner. The engine fans this out as one cell per planner.
     Evaluate {
         /// Effective seed → fleet.
         fleet: fn(u64) -> Fleet,
@@ -64,12 +70,13 @@ pub enum ScenarioBody {
         /// (largest-first, name tie-break) before costing.
         workload: fn(&Fleet) -> Vec<ModelSpec>,
         /// Assemble `BENCH_*.json` entries + the human-readable report
-        /// from the merged four-system evaluation.
+        /// from the merged evaluation.
         finish: fn(&Fleet, &SystemEval) -> (Vec<BenchEntry>, String),
     },
     /// Anything more elaborate (leader-loop streams, failure storms,
-    /// multi-step sweeps): a single opaque cell.
-    Custom(fn(u64) -> Result<ScenarioResult>),
+    /// multi-step sweeps): a single opaque cell. Receives the planner
+    /// registry so its baseline comparisons honor `--systems` filters.
+    Custom(fn(u64, &PlannerRegistry) -> Result<ScenarioResult>),
 }
 
 /// A registered scenario: definition as data, executed by [`run_specs`].
@@ -85,23 +92,35 @@ pub struct ScenarioSpec {
 #[derive(Debug)]
 pub struct ScenarioResult {
     pub scenario: &'static str,
-    /// Machine-readable rows for the `BENCH_*.json` report.
+    /// Machine-readable rows for the `BENCH_scenarios.json` report.
     pub entries: Vec<BenchEntry>,
+    /// Placement-digest rows (`BENCH_placements.json`) — kept out of
+    /// `entries` so the scenarios artifact stays byte-identical to its
+    /// pre-planner-seam shape.
+    pub placements: Vec<BenchEntry>,
     /// Human-readable rendering for the CLI.
     pub rendered: String,
 }
 
 impl ScenarioSpec {
-    /// Run this scenario alone, serially.
+    /// Run this scenario alone, serially, under the standard planners.
     pub fn run(&self, seed: u64) -> Result<ScenarioResult> {
-        let mut results = run_specs(std::slice::from_ref(self), seed, 1)?;
+        self.run_with(seed, &PlannerRegistry::standard())
+    }
+
+    /// Run this scenario alone, serially, under `planners`.
+    pub fn run_with(&self, seed: u64, planners: &PlannerRegistry)
+        -> Result<ScenarioResult>
+    {
+        let mut results =
+            run_specs(std::slice::from_ref(self), seed, 1, planners)?;
         Ok(results.remove(0))
     }
 
     /// How many schedulable cells this spec fans out into.
-    fn n_cells(&self) -> usize {
+    fn n_cells(&self, planners: &PlannerRegistry) -> usize {
         match self.body {
-            ScenarioBody::Evaluate { .. } => SystemKind::ALL.len(),
+            ScenarioBody::Evaluate { .. } => planners.len(),
             ScenarioBody::Custom(_) => 1,
         }
     }
@@ -109,8 +128,9 @@ impl ScenarioSpec {
 
 /// One executed cell's output.
 enum CellOut {
-    /// Per-model costs for a single system (canonical task order).
-    Column(Vec<IterCost>),
+    /// Per-model costs + placement digest for a single planner
+    /// (canonical task order).
+    Column(Vec<IterCost>, PlacementSummary),
     /// A complete custom scenario result.
     Whole(ScenarioResult),
 }
@@ -118,9 +138,13 @@ enum CellOut {
 /// Fleet + canonically ordered workload for an `Evaluate` body.
 ///
 /// Deliberately rebuilt inside every cell (and once more in the merge):
-/// keeping each cell a pure function of `(spec, seed)` is what makes
-/// parallel output byte-identical to serial. Fleet/workload construction
-/// is microseconds next to the cost models, so the duplication is noise.
+/// keeping each cell a pure function of `(spec, planner, seed)` is what
+/// makes parallel output byte-identical to serial. Fleet/workload
+/// construction — and the per-cell `ClusterGraph` the `PlanContext`
+/// carries, even for baseline planners that never read it — is
+/// microseconds next to the cost models, so the duplication is noise;
+/// sharing either across cells would couple cells to each other and
+/// break the purity contract.
 fn eval_inputs(fleet: fn(u64) -> Fleet,
                workload: fn(&Fleet) -> Vec<ModelSpec>, eff_seed: u64)
     -> (Fleet, Vec<ModelSpec>)
@@ -131,86 +155,107 @@ fn eval_inputs(fleet: fn(u64) -> Fleet,
     (fl, wl)
 }
 
-/// Execute one cell. Pure in `(spec, cell_idx, seed)`.
-fn run_cell(spec: &ScenarioSpec, cell_idx: usize, seed: u64)
-    -> Result<CellOut>
+/// Execute one cell. Pure in `(spec, cell_idx, seed, planners)`.
+fn run_cell(spec: &ScenarioSpec, cell_idx: usize, seed: u64,
+            planners: &PlannerRegistry) -> Result<CellOut>
 {
     let eff = spec.seed.apply(seed);
     match &spec.body {
-        ScenarioBody::Custom(f) => Ok(CellOut::Whole(f(eff)?)),
+        ScenarioBody::Custom(f) => Ok(CellOut::Whole(f(eff, planners)?)),
         ScenarioBody::Evaluate { fleet, workload, .. } => {
             let (fl, wl) = eval_inputs(*fleet, *workload, eff);
-            let costs: Vec<IterCost> = match SystemKind::ALL[cell_idx] {
-                SystemKind::SystemA => {
-                    wl.iter().map(|m| system_a::cost(&fl, m)).collect()
-                }
-                SystemKind::SystemB => {
-                    wl.iter().map(|m| system_b::cost(&fl, m)).collect()
-                }
-                SystemKind::SystemC => {
-                    wl.iter().map(|m| system_c::cost(&fl, m)).collect()
-                }
-                SystemKind::Hulk => {
-                    let graph = ClusterGraph::from_fleet(&fl);
-                    let plan = hulk_plan(&fl, &graph, &wl,
-                                         HulkSplitterKind::Oracle)?;
-                    (0..wl.len())
-                        .map(|t| crate::systems::hulk::cost(&fl, &plan, t))
-                        .collect()
-                }
-            };
-            Ok(CellOut::Column(costs))
+            let graph = ClusterGraph::from_fleet(&fl);
+            let ctx = PlanContext::new(&fl, &graph, &wl,
+                                       HulkSplitterKind::Oracle);
+            let planner = planners.get(cell_idx);
+            let placement = planner.plan(&ctx)?;
+            let costs: Vec<IterCost> = (0..wl.len())
+                .map(|t| planner.cost(&ctx, &placement, t))
+                .collect();
+            Ok(CellOut::Column(costs, placement.summary(&fl)))
         }
     }
+}
+
+/// Placement-digest entries for one evaluated scenario (also used by
+/// `Custom` scenario bodies that run a full evaluation internally).
+pub(crate) fn placement_entries(scenario: &str, eval: &SystemEval)
+    -> Vec<BenchEntry>
+{
+    let mut out = Vec::with_capacity(eval.systems.len() * 3);
+    for (meta, summary) in eval.systems.iter().zip(&eval.placements) {
+        let prefix = format!("{scenario}/{}/placement", meta.slug);
+        out.push(BenchEntry::new(format!("{prefix}/group_count"),
+                                 summary.groups as f64, "count"));
+        out.push(BenchEntry::new(format!("{prefix}/stage_count"),
+                                 summary.stages as f64, "count"));
+        out.push(BenchEntry::new(format!("{prefix}/cross_region_edges"),
+                                 summary.cross_region_edges as f64,
+                                 "count"));
+    }
+    out
 }
 
 /// Merge one spec's cell outputs back into a [`ScenarioResult`].
 /// Errors propagate in cell order, so the first failing cell of the
 /// first failing scenario wins — the same error a serial run reports.
-fn merge_spec(spec: &ScenarioSpec, seed: u64, outs: Vec<Result<CellOut>>)
-    -> Result<ScenarioResult>
+fn merge_spec(spec: &ScenarioSpec, seed: u64, planners: &PlannerRegistry,
+              outs: Vec<Result<CellOut>>) -> Result<ScenarioResult>
 {
     match &spec.body {
         ScenarioBody::Custom(_) => {
             let out = outs.into_iter().next().expect("custom spec has a cell");
             match out? {
                 CellOut::Whole(result) => Ok(result),
-                CellOut::Column(_) => unreachable!("custom cell → Whole"),
+                CellOut::Column(..) => unreachable!("custom cell → Whole"),
             }
         }
         ScenarioBody::Evaluate { fleet, workload, finish } => {
-            let mut columns = Vec::with_capacity(SystemKind::ALL.len());
+            let mut columns = Vec::with_capacity(planners.len());
+            let mut placements = Vec::with_capacity(planners.len());
             for out in outs {
                 match out? {
-                    CellOut::Column(column) => columns.push(column),
+                    CellOut::Column(column, summary) => {
+                        columns.push(column);
+                        placements.push(summary);
+                    }
                     CellOut::Whole(_) => unreachable!("eval cell → Column"),
                 }
             }
             let (fl, wl) = eval_inputs(*fleet, *workload,
                                        spec.seed.apply(seed));
-            let costs: Vec<[IterCost; 4]> = (0..wl.len())
-                .map(|m| [columns[0][m], columns[1][m], columns[2][m],
-                          columns[3][m]])
+            let costs: Vec<Vec<IterCost>> = (0..wl.len())
+                .map(|m| columns.iter().map(|col| col[m]).collect())
                 .collect();
-            let eval = SystemEval { models: wl, costs };
+            let eval = SystemEval {
+                systems: planners.metas(),
+                models: wl,
+                costs,
+                placements,
+            };
             let (entries, rendered) = finish(&fl, &eval);
-            Ok(ScenarioResult { scenario: spec.name, entries, rendered })
+            Ok(ScenarioResult {
+                scenario: spec.name,
+                entries,
+                placements: placement_entries(spec.name, &eval),
+                rendered,
+            })
         }
     }
 }
 
 /// Run `specs` with one CLI seed on `threads` workers (`<= 1` = inline
-/// serial execution, no threads spawned). Results come back in spec
-/// order with identical contents regardless of `threads` — callers may
-/// diff the serialized reports byte-for-byte.
-pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize)
-    -> Result<Vec<ScenarioResult>>
+/// serial execution, no threads spawned), evaluating under `planners`.
+/// Results come back in spec order with identical contents regardless of
+/// `threads` — callers may diff the serialized reports byte-for-byte.
+pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize,
+                 planners: &PlannerRegistry) -> Result<Vec<ScenarioResult>>
 {
     // Flatten to (spec, cell) pairs — the schedulable unit.
     let cells: Vec<(usize, usize)> = specs
         .iter()
         .enumerate()
-        .flat_map(|(si, s)| (0..s.n_cells()).map(move |ci| (si, ci)))
+        .flat_map(|(si, s)| (0..s.n_cells(planners)).map(move |ci| (si, ci)))
         .collect();
 
     let outs: Vec<Result<CellOut>> = if threads <= 1 || cells.len() <= 1 {
@@ -225,7 +270,7 @@ pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize)
                     "cell not run: an earlier scenario cell failed")));
                 continue;
             }
-            let out = run_cell(&specs[si], ci, seed);
+            let out = run_cell(&specs[si], ci, seed, planners);
             failed = out.is_err();
             outs.push(out);
         }
@@ -240,7 +285,7 @@ pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize)
                 scope.spawn(|| loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     let Some(&(si, ci)) = cells.get(i) else { break };
-                    let out = run_cell(&specs[si], ci, seed);
+                    let out = run_cell(&specs[si], ci, seed, planners);
                     *slots[i].lock().expect("cell slot poisoned") = Some(out);
                 });
             }
@@ -261,8 +306,8 @@ pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize)
         .iter()
         .map(|spec| {
             let cell_outs: Vec<Result<CellOut>> =
-                outs.by_ref().take(spec.n_cells()).collect();
-            merge_spec(spec, seed, cell_outs)
+                outs.by_ref().take(spec.n_cells(planners)).collect();
+            merge_spec(spec, seed, planners, cell_outs)
         })
         .collect()
 }
@@ -308,15 +353,26 @@ mod tests {
         assert_eq!(result.entries[0].value,
                    eval.hulk_improvement() * 100.0);
         assert_eq!(result.rendered, eval.render());
+        // The runner's placement digest matches the monolithic one.
+        assert_eq!(result.placements.len(), 4 * 3);
+        assert_eq!(
+            result.placements[0].name,
+            "toy_eval/system_a/placement/group_count"
+        );
+        assert_eq!(result.placements[0].value,
+                   eval.placements[0].groups as f64);
     }
 
     #[test]
     fn parallel_equals_serial_for_mixed_bodies() {
-        fn custom(seed: u64) -> Result<ScenarioResult> {
+        fn custom(seed: u64, _planners: &PlannerRegistry)
+            -> Result<ScenarioResult>
+        {
             Ok(ScenarioResult {
                 scenario: "toy_custom",
                 entries: vec![BenchEntry::new("toy_custom/seed",
                                               seed as f64, "count")],
+                placements: Vec::new(),
                 rendered: format!("seed {seed}\n"),
             })
         }
@@ -329,8 +385,9 @@ mod tests {
                 body: ScenarioBody::Custom(custom),
             },
         ];
-        let serial = run_specs(&specs, 5, 1).unwrap();
-        let parallel = run_specs(&specs, 5, 4).unwrap();
+        let planners = PlannerRegistry::standard();
+        let serial = run_specs(&specs, 5, 1, &planners).unwrap();
+        let parallel = run_specs(&specs, 5, 4, &planners).unwrap();
         assert_eq!(serial.len(), parallel.len());
         for (a, b) in serial.iter().zip(&parallel) {
             assert_eq!(a.scenario, b.scenario);
@@ -338,6 +395,7 @@ mod tests {
             let rows = |r: &ScenarioResult| -> Vec<(String, f64, String)> {
                 r.entries
                     .iter()
+                    .chain(&r.placements)
                     .map(|e| (e.name.clone(), e.value, e.unit.clone()))
                     .collect()
             };
@@ -348,11 +406,27 @@ mod tests {
     }
 
     #[test]
+    fn filtered_registry_shrinks_the_cells() {
+        let planners = PlannerRegistry::resolve("a,hulk").unwrap();
+        let result = toy_spec().run_with(0, &planners).unwrap();
+        // Two planners → 2 × 3 placement-digest rows, and the rendered
+        // table mentions only the selected systems.
+        assert_eq!(result.placements.len(), 2 * 3);
+        assert!(result.rendered.contains("System A (DP)"));
+        assert!(!result.rendered.contains("System C (Megatron)"));
+        assert!(result.rendered.contains("Hulk"));
+    }
+
+    #[test]
     fn errors_propagate_in_spec_order() {
-        fn failing(_seed: u64) -> Result<ScenarioResult> {
+        fn failing(_seed: u64, _planners: &PlannerRegistry)
+            -> Result<ScenarioResult>
+        {
             anyhow::bail!("first failure")
         }
-        fn also_failing(_seed: u64) -> Result<ScenarioResult> {
+        fn also_failing(_seed: u64, _planners: &PlannerRegistry)
+            -> Result<ScenarioResult>
+        {
             anyhow::bail!("second failure")
         }
         let specs = vec![
@@ -369,8 +443,9 @@ mod tests {
                 body: ScenarioBody::Custom(also_failing),
             },
         ];
+        let planners = PlannerRegistry::standard();
         for threads in [1, 4] {
-            let err = run_specs(&specs, 0, threads).unwrap_err();
+            let err = run_specs(&specs, 0, threads, &planners).unwrap_err();
             assert!(err.to_string().contains("first failure"),
                     "threads {threads}: {err}");
         }

@@ -9,20 +9,20 @@
 //!   is scaled ×1..×8 (the paper's motivation: the worse the WAN, the
 //!   bigger Hulk's win).
 //!
-//! Moved here from `systems::sweep` when the scenario subsystem was
-//! introduced; `crate::systems` re-exports the public names for
-//! compatibility. The named scenarios in [`super::registry`] build on
-//! these sweeps.
+//! Every sweep takes the caller's [`PlannerRegistry`], so ablation
+//! planners and `--systems` filters flow through; the named scenarios in
+//! [`super::registry`] build on these sweeps.
 
 use anyhow::Result;
 
 use crate::cluster::{Fleet, Machine};
 use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
-use crate::parallel::{pipeline_cost, PipelinePlan};
-use crate::systems::hulk::{chain_order, hulk_plan, HulkSplitterKind};
+use crate::parallel::pipeline_cost;
+use crate::planner::{HulkSplitterKind, PlanContext, Planner,
+                     PlannerRegistry};
 
-use super::evaluate::evaluate_all;
+use super::evaluate::evaluate_with;
 
 /// One sweep point.
 #[derive(Clone, Debug)]
@@ -58,8 +58,9 @@ pub fn feasible_workload(fleet: &Fleet, workload: &[ModelSpec])
 
 /// Fleet-size sweep: truncate the evaluation fleet to its first `n`
 /// machines (re-densified ids) and re-evaluate the workload.
-pub fn fleet_size_sweep(seed: u64, sizes: &[usize],
-                        workload: &[ModelSpec]) -> Result<Vec<SweepPoint>>
+pub fn fleet_size_sweep(planners: &PlannerRegistry, seed: u64,
+                        sizes: &[usize], workload: &[ModelSpec])
+    -> Result<Vec<SweepPoint>>
 {
     let full = Fleet::paper_evaluation(seed);
     let mut out = Vec::with_capacity(sizes.len());
@@ -70,7 +71,8 @@ pub fn fleet_size_sweep(seed: u64, sizes: &[usize],
         if feasible.is_empty() {
             continue;
         }
-        match evaluate_all(&fleet, &feasible, HulkSplitterKind::Oracle) {
+        match evaluate_with(planners, &fleet, &feasible,
+                            HulkSplitterKind::Oracle) {
             Ok(eval) => out.push(SweepPoint {
                 x: n as f64,
                 improvement: eval.hulk_improvement(),
@@ -82,21 +84,25 @@ pub fn fleet_size_sweep(seed: u64, sizes: &[usize],
 }
 
 /// Microbatch sweep: per-iteration total of one Hulk group's pipeline as
-/// K varies (the GPipe bubble-amortization curve).
-pub fn microbatch_sweep(seed: u64, model: &ModelSpec, ks: &[usize])
+/// K varies (the GPipe bubble-amortization curve). Requires a Hulk
+/// planner in the registry (it alone emits a grouped pipeline placement).
+pub fn microbatch_sweep(planners: &PlannerRegistry, seed: u64,
+                        model: &ModelSpec, ks: &[usize])
     -> Result<Vec<SweepPoint>>
 {
+    let hulk = planners.find("hulk").ok_or_else(|| {
+        anyhow::anyhow!("microbatch sweep needs a registered hulk planner")
+    })?;
     let fleet = Fleet::paper_evaluation(seed);
     let graph = ClusterGraph::from_fleet(&fleet);
-    let plan = hulk_plan(&fleet, &graph, std::slice::from_ref(model),
-                         HulkSplitterKind::Oracle)?;
-    let group = plan.assignment.group(0).to_vec();
-    let ordered = chain_order(&graph, &group);
-    let stages: Vec<usize> =
-        ordered.into_iter().take(model.layers).collect();
+    let workload = std::slice::from_ref(model);
+    let ctx = PlanContext::new(&fleet, &graph, workload,
+                               HulkSplitterKind::Oracle);
+    let placement = hulk.plan(&ctx)?;
+    let base = placement.pipeline(0).expect("hulk tasks are pipelined");
     let mut out = Vec::with_capacity(ks.len());
     for &k in ks {
-        let mut p = PipelinePlan::proportional(&fleet, stages.clone(), model);
+        let mut p = base.clone();
         p.microbatches = k;
         let cost = pipeline_cost(&fleet, &p, model);
         out.push(SweepPoint { x: k as f64, improvement: cost.total_ms() });
@@ -106,8 +112,8 @@ pub fn microbatch_sweep(seed: u64, model: &ModelSpec, ks: &[usize])
 
 /// WAN-degradation sweep: scale every *inter-region* latency by `factor`
 /// and re-evaluate. Returns (factor, improvement) points.
-pub fn wan_degradation_sweep(seed: u64, factors: &[f64],
-                             workload: &[ModelSpec])
+pub fn wan_degradation_sweep(planners: &PlannerRegistry, seed: u64,
+                             factors: &[f64], workload: &[ModelSpec])
     -> Result<Vec<SweepPoint>>
 {
     let mut out = Vec::with_capacity(factors.len());
@@ -115,7 +121,8 @@ pub fn wan_degradation_sweep(seed: u64, factors: &[f64],
         anyhow::ensure!(factor >= 1.0, "degradation factor must be ≥ 1");
         let fleet = Fleet::paper_evaluation(seed)
             .with_wan_scaled(factor);
-        let eval = evaluate_all(&fleet, workload, HulkSplitterKind::Oracle)?;
+        let eval = evaluate_with(planners, &fleet, workload,
+                                 HulkSplitterKind::Oracle)?;
         out.push(SweepPoint { x: factor,
                               improvement: eval.hulk_improvement() });
     }
@@ -126,9 +133,13 @@ pub fn wan_degradation_sweep(seed: u64, factors: &[f64],
 mod tests {
     use super::*;
 
+    fn four() -> PlannerRegistry {
+        PlannerRegistry::standard()
+    }
+
     #[test]
     fn fleet_size_sweep_produces_points() {
-        let points = fleet_size_sweep(0, &[16, 24, 46],
+        let points = fleet_size_sweep(&four(), 0, &[16, 24, 46],
                                       &ModelSpec::paper_four())
             .unwrap();
         assert!(!points.is_empty());
@@ -160,8 +171,9 @@ mod tests {
 
     #[test]
     fn microbatch_sweep_amortizes_bubble() {
-        let points =
-            microbatch_sweep(0, &ModelSpec::gpt2_xl(), &[1, 4, 16]).unwrap();
+        let points = microbatch_sweep(&four(), 0, &ModelSpec::gpt2_xl(),
+                                      &[1, 4, 16])
+            .unwrap();
         assert_eq!(points.len(), 3);
         // Per-iteration time is not monotone in K in general (comm grows
         // with K) but K=1 must be strictly worse than the best of the
@@ -175,8 +187,17 @@ mod tests {
     }
 
     #[test]
+    fn microbatch_sweep_requires_a_hulk_planner() {
+        let baselines = PlannerRegistry::resolve("a,b,c").unwrap();
+        let err = microbatch_sweep(&baselines, 0, &ModelSpec::gpt2_xl(),
+                                   &[1, 4])
+            .unwrap_err();
+        assert!(err.to_string().contains("hulk planner"), "{err}");
+    }
+
+    #[test]
     fn wan_degradation_grows_the_win() {
-        let points = wan_degradation_sweep(0, &[1.0, 4.0],
+        let points = wan_degradation_sweep(&four(), 0, &[1.0, 4.0],
                                            &ModelSpec::paper_four())
             .unwrap();
         assert_eq!(points.len(), 2);
@@ -189,7 +210,8 @@ mod tests {
 
     #[test]
     fn degradation_factor_below_one_rejected() {
-        assert!(wan_degradation_sweep(0, &[0.5], &ModelSpec::paper_four())
+        assert!(wan_degradation_sweep(&four(), 0, &[0.5],
+                                      &ModelSpec::paper_four())
             .is_err());
     }
 }

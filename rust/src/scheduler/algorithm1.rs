@@ -63,7 +63,8 @@ fn group_gb(fleet: &Fleet, group: &[usize]) -> f64 {
 }
 
 /// Run Algorithm 1. Tasks are processed in the order given (the paper
-/// feeds them largest-first; `systems::hulk` does the sorting).
+/// feeds them largest-first; the Hulk planner's `PlanContext` contract
+/// guarantees the sorting).
 pub fn algorithm1(fleet: &Fleet, graph: &ClusterGraph,
                   tasks: &[ModelSpec], splitter: &dyn TaskSplitter)
     -> Result<Assignment, Algorithm1Error>

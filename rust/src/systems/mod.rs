@@ -1,25 +1,27 @@
-//! The four systems of the paper's evaluation (§6.4):
+//! Compatibility facade for the paper's four systems (§6.4).
 //!
-//! - **System A** ([`system_a`]) — pure data parallelism; drops machines
-//!   that cannot hold a full replica.
-//! - **System B** ([`system_b`]) — GPipe across every machine, layers
-//!   assigned in id order until the model is distributed.
-//! - **System C** ([`system_c`]) — Megatron-LM tensor parallelism across
-//!   the entire fleet.
-//! - **Hulk** ([`hulk`]) — GCN/Algorithm-1 grouping, then GPipe inside
-//!   each group with a locality-aware stage order.
+//! The systems themselves — **System A** (pure data parallelism),
+//! **System B** (id-order GPipe), **System C** (fleet-wide Megatron
+//! tensor parallelism) and **Hulk** (GCN/Algorithm-1 grouping + per-group
+//! locality-aware GPipe) — now live behind the [`crate::planner`] seam:
+//! each is a [`Planner`](crate::planner::Planner) implementation emitting
+//! a typed [`Placement`](crate::planner::Placement), registered in the
+//! [`PlannerRegistry`](crate::planner::PlannerRegistry).
 //!
-//! The evaluation harness that runs a workload through all four
-//! (`evaluate_all` → Fig. 8 / Fig. 10 rows) and the ablation sweeps live
-//! in [`crate::scenarios`] since the scenario subsystem was introduced;
-//! their names are re-exported here so existing callers keep working.
+//! The divergent per-system free functions this module used to host
+//! (`system_a::cost`, `system_b::plan`/`cost`, `system_c::cost`,
+//! `hulk::hulk_plan` and the `HulkPlan` type) were deleted once every
+//! call site migrated to the trait; the re-exports below point old
+//! `crate::systems::…` paths at the planner module and the evaluation
+//! harness in [`crate::scenarios`]. New code should import from
+//! [`crate::planner`] directly.
 
-pub mod hulk;
-pub mod system_a;
-pub mod system_b;
-pub mod system_c;
-
-pub use crate::scenarios::evaluate::{evaluate_all, SystemEval, SystemKind};
+pub use crate::planner::{chain_order, HulkNoGcnPlanner, HulkPlanner,
+                         HulkSplitterKind, Placement, PlanContext, Planner,
+                         PlannerKind, PlannerRegistry, SystemAPlanner,
+                         SystemBPlanner, SystemCPlanner, SystemMeta,
+                         TaskPlacement};
+pub use crate::scenarios::evaluate::{evaluate_all, evaluate_with,
+                                     SystemEval};
 pub use crate::scenarios::sweep::{fleet_size_sweep, microbatch_sweep,
                                   wan_degradation_sweep, SweepPoint};
-pub use hulk::{hulk_plan, HulkPlan, HulkSplitterKind};

@@ -1,0 +1,215 @@
+//! Refactor-parity suite for the planner seam: each trait planner's
+//! `Placement` and `IterCost` must be **identical** to what the
+//! pre-refactor per-system free functions produced. The old functions
+//! (`system_a::cost`, `system_b::plan`/`cost`, `system_c::cost`,
+//! `hulk_plan` + `hulk::cost`) are reimplemented here verbatim from
+//! their public building blocks and compared golden-value (exact `f64`
+//! equality — everything is deterministic) on the three seeds the issue
+//! names: the Table 1 fleet, the planet-scale synthetic fleet, and the
+//! ×4 WAN-degradation fleet.
+
+use hulk::cluster::Fleet;
+use hulk::graph::ClusterGraph;
+use hulk::models::ModelSpec;
+use hulk::parallel::data_parallel::{data_parallel_cost, replica_capable};
+use hulk::parallel::{pipeline_cost, tensor_parallel_cost, IterCost,
+                     PipelinePlan};
+use hulk::planner::{chain_order, HulkSplitterKind, PlanContext, Planner,
+                    PlannerRegistry, TaskPlacement};
+use hulk::scheduler::{algorithm1, Assignment, TaskSplitter};
+use hulk::scenarios::feasible_workload;
+
+/// The three situations the parity contract covers.
+fn situations() -> Vec<(&'static str, Fleet, Vec<ModelSpec>)> {
+    let planet = Fleet::synthetic(220, 12, 0);
+    let planet_workload = feasible_workload(&planet, &ModelSpec::paper_six());
+    vec![
+        ("table1_fleet", Fleet::paper_evaluation(0), ModelSpec::paper_four()),
+        ("planet_scale", planet, planet_workload),
+        ("wan_degradation_x4",
+         Fleet::paper_evaluation(0).with_wan_scaled(4.0),
+         ModelSpec::paper_four()),
+    ]
+}
+
+// --------------------------------------------------------------------
+// Verbatim pre-refactor reference implementations.
+// --------------------------------------------------------------------
+
+/// `system_a::cost` as it was: DP over every replica-capable machine.
+fn ref_system_a(fleet: &Fleet, model: &ModelSpec)
+    -> (Vec<usize>, IterCost)
+{
+    let replicas = replica_capable(fleet, model);
+    let cost = data_parallel_cost(fleet, &replicas, model);
+    (replicas, cost)
+}
+
+/// `system_b::plan`/`cost` as they were: first `min(layers, n)` machines
+/// in id order.
+fn ref_system_b(fleet: &Fleet, model: &ModelSpec)
+    -> (PipelinePlan, IterCost)
+{
+    let n_stages = fleet.len().min(model.layers);
+    let stages: Vec<usize> = (0..n_stages).collect();
+    let plan = PipelinePlan::proportional(fleet, stages, model);
+    let cost = pipeline_cost(fleet, &plan, model);
+    (plan, cost)
+}
+
+/// `system_c::cost` as it was: tensor parallelism over the whole fleet.
+fn ref_system_c(fleet: &Fleet, model: &ModelSpec)
+    -> (Vec<usize>, IterCost)
+{
+    let all: Vec<usize> = (0..fleet.len()).collect();
+    let cost = tensor_parallel_cost(fleet, &all, model);
+    (all, cost)
+}
+
+/// The oracle splitter exactly as `systems::hulk` wired it into
+/// Algorithm 1 (grow_group with 1.3 headroom).
+struct RefOracleSplitter;
+
+impl TaskSplitter for RefOracleSplitter {
+    fn split(&self, fleet: &Fleet, graph: &ClusterGraph,
+             remaining: &[usize], task: &ModelSpec, _class: usize)
+        -> Vec<usize>
+    {
+        hulk::scheduler::oracle::grow_group(fleet, graph, remaining, task,
+                                            1.3)
+    }
+}
+
+/// `hulk_plan` + `hulk::cost` as they were: sort largest-first, run
+/// Algorithm 1, chain-order each group, truncate to the layer count,
+/// proportional split, pipeline cost.
+fn ref_hulk(fleet: &Fleet, graph: &ClusterGraph, workload: &[ModelSpec])
+    -> (Vec<ModelSpec>, Assignment, Vec<PipelinePlan>, Vec<IterCost>)
+{
+    let mut tasks = workload.to_vec();
+    ModelSpec::sort_largest_first(&mut tasks);
+    let assignment = algorithm1(fleet, graph, &tasks, &RefOracleSplitter)
+        .expect("parity fleets assign cleanly");
+    let mut pipelines = Vec::with_capacity(tasks.len());
+    let mut costs = Vec::with_capacity(tasks.len());
+    for (t, task) in tasks.iter().enumerate() {
+        let group = assignment.group(t);
+        assert!(!group.is_empty(), "task {} got no machines", task.name);
+        let ordered = chain_order(graph, group);
+        let n_stages = ordered.len().min(task.layers);
+        let stages: Vec<usize> = ordered.into_iter().take(n_stages).collect();
+        let plan = PipelinePlan::proportional(fleet, stages, task);
+        costs.push(pipeline_cost(fleet, &plan, task));
+        pipelines.push(plan);
+    }
+    (tasks, assignment, pipelines, costs)
+}
+
+// --------------------------------------------------------------------
+// Parity assertions.
+// --------------------------------------------------------------------
+
+#[test]
+fn trait_planners_match_the_pre_refactor_free_functions() {
+    let registry = PlannerRegistry::standard();
+    for (label, fleet, workload) in situations() {
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let mut wl = workload.clone();
+        ModelSpec::sort_largest_first(&mut wl);
+        let ctx = PlanContext::new(&fleet, &graph, &wl,
+                                   HulkSplitterKind::Oracle);
+
+        let (ref_tasks, ref_assignment, ref_pipelines, ref_hulk_costs) =
+            ref_hulk(&fleet, &graph, &workload);
+        assert_eq!(ref_tasks, wl, "{label}: canonical order differs");
+
+        for planner in registry.iter() {
+            let placement = planner.plan(&ctx)
+                .unwrap_or_else(|e| panic!("{label}/{}: {e}",
+                                           planner.slug()));
+            for (t, model) in wl.iter().enumerate() {
+                let got = planner.cost(&ctx, &placement, t);
+                match planner.slug() {
+                    "system_a" => {
+                        let (participants, want) =
+                            ref_system_a(&fleet, model);
+                        assert_eq!(placement.machines(t), &participants[..],
+                                   "{label}/system_a/{}", model.name);
+                        assert_eq!(got, want,
+                                   "{label}/system_a/{}", model.name);
+                        assert!(matches!(
+                            placement.per_task[t],
+                            TaskPlacement::Replicated { .. }
+                        ));
+                    }
+                    "system_b" => {
+                        let (plan, want) = ref_system_b(&fleet, model);
+                        let got_plan = placement.pipeline(t).unwrap();
+                        assert_eq!(got_plan.stages, plan.stages,
+                                   "{label}/system_b/{}", model.name);
+                        assert_eq!(got_plan.layers, plan.layers,
+                                   "{label}/system_b/{}", model.name);
+                        assert_eq!(got_plan.microbatches, plan.microbatches);
+                        assert_eq!(got, want,
+                                   "{label}/system_b/{}", model.name);
+                    }
+                    "system_c" => {
+                        let (all, want) = ref_system_c(&fleet, model);
+                        assert_eq!(placement.machines(t), &all[..],
+                                   "{label}/system_c/{}", model.name);
+                        assert_eq!(got, want,
+                                   "{label}/system_c/{}", model.name);
+                    }
+                    "hulk" => {
+                        assert_eq!(placement.machines(t),
+                                   ref_assignment.group(t),
+                                   "{label}/hulk/{} group", model.name);
+                        let got_plan = placement.pipeline(t).unwrap();
+                        assert_eq!(got_plan.stages, ref_pipelines[t].stages,
+                                   "{label}/hulk/{} chain", model.name);
+                        assert_eq!(got_plan.layers, ref_pipelines[t].layers,
+                                   "{label}/hulk/{} layers", model.name);
+                        assert_eq!(got, ref_hulk_costs[t],
+                                   "{label}/hulk/{}", model.name);
+                    }
+                    other => panic!("unexpected planner {other}"),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn evaluate_all_matches_the_reference_costs_cell_by_cell() {
+    // The registry-driven harness reproduces the old `evaluate_all`
+    // matrix exactly: reference column s for model m == costs[m][s].
+    for (label, fleet, workload) in situations() {
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let eval = hulk::scenarios::evaluate_all(
+            &fleet, &workload, HulkSplitterKind::Oracle)
+            .unwrap_or_else(|e| panic!("{label}: {e}"));
+        let (_tasks, _assignment, _pipelines, hulk_costs) =
+            ref_hulk(&fleet, &graph, &workload);
+        for (m, model) in eval.models.iter().enumerate() {
+            assert_eq!(eval.costs[m][0], ref_system_a(&fleet, model).1,
+                       "{label}: A × {}", model.name);
+            assert_eq!(eval.costs[m][1], ref_system_b(&fleet, model).1,
+                       "{label}: B × {}", model.name);
+            assert_eq!(eval.costs[m][2], ref_system_c(&fleet, model).1,
+                       "{label}: C × {}", model.name);
+            assert_eq!(eval.costs[m][3], hulk_costs[m],
+                       "{label}: Hulk × {}", model.name);
+        }
+    }
+}
+
+#[test]
+fn golden_column_slugs_are_stable() {
+    // The artifact column ids the dashboards depend on.
+    assert_eq!(PlannerRegistry::standard().slugs(),
+               vec!["system_a", "system_b", "system_c", "hulk"]);
+    assert_eq!(
+        PlannerRegistry::catalog().slugs(),
+        vec!["system_a", "system_b", "system_c", "hulk", "hulk_no_gcn"]
+    );
+}

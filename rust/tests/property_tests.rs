@@ -7,10 +7,10 @@ use hulk::coordinator::{recover, RecoveryAction};
 use hulk::graph::{node_features, ClusterGraph, FEATURE_DIM};
 use hulk::models::ModelSpec;
 use hulk::parallel::{pipeline_cost, ring_allreduce_ms, PipelinePlan};
+use hulk::planner::chain_order;
 use hulk::prop::forall;
 use hulk::scheduler::{oracle_partition, OracleOptions};
 use hulk::sim::simulate_pipeline;
-use hulk::systems::hulk::chain_order;
 
 fn random_workload(g: &mut hulk::prop::Gen) -> Vec<ModelSpec> {
     let catalog = [

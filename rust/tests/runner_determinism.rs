@@ -1,12 +1,19 @@
-//! Parallel-vs-serial determinism suite for the scenario runner, plus
-//! smoke tests for the `planet_scale` and `burst_arrivals` scenarios.
+//! Parallel-vs-serial determinism suite for the scenario runner — now
+//! including planner-filtered (`--systems`) runs — plus smoke tests for
+//! the `planet_scale` and `burst_arrivals` scenarios and the
+//! `hulk_no_gcn` ablation planner.
 //!
 //! The acceptance bar: `hulk scenarios run all --json --parallel` must
 //! produce a `BENCH_scenarios.json` byte-identical to the serial run's
 //! (CI diffs the two artifacts as a gate; this suite is the in-repo
-//! version of that gate).
+//! version of that gate), and a `--systems` subset must be byte-identical
+//! serial vs parallel *and* a strict subset of the all-systems artifact
+//! columns.
+
+use std::collections::BTreeMap;
 
 use hulk::benchkit::BenchReport;
+use hulk::planner::PlannerRegistry;
 use hulk::scenarios::{all_scenarios, find_scenario, run_specs,
                       ScenarioResult};
 
@@ -23,12 +30,13 @@ fn report_bytes(results: Vec<ScenarioResult>) -> String {
 #[test]
 fn parallel_run_is_byte_identical_to_serial() {
     let specs = all_scenarios();
-    let serial = run_specs(&specs, 0, 1).expect("serial run");
+    let planners = PlannerRegistry::standard();
+    let serial = run_specs(&specs, 0, 1, &planners).expect("serial run");
     let serial_rendered: Vec<String> =
         serial.iter().map(|r| r.rendered.clone()).collect();
     let serial_bytes = report_bytes(serial);
     for threads in [2, 4, 8] {
-        let parallel = run_specs(&specs, 0, threads)
+        let parallel = run_specs(&specs, 0, threads, &planners)
             .unwrap_or_else(|e| panic!("{threads}-thread run: {e}"));
         let parallel_rendered: Vec<String> =
             parallel.iter().map(|r| r.rendered.clone()).collect();
@@ -41,22 +49,130 @@ fn parallel_run_is_byte_identical_to_serial() {
 
 #[test]
 fn parallel_written_artifact_matches_serial_file_bytes() {
-    // End-to-end through the benchkit writer, as CI diffs it.
+    // End-to-end through the benchkit writer, as CI diffs it — the
+    // placements artifact included.
     let specs = all_scenarios();
+    let planners = PlannerRegistry::standard();
     let base = std::env::temp_dir().join("hulk_runner_determinism_test");
     let write = |results: Vec<ScenarioResult>, sub: &str| {
         let mut report = BenchReport::new("scenarios");
+        let mut placements = BenchReport::new("placements");
         for r in results {
             report.extend(r.entries);
+            placements.extend(r.placements);
         }
-        report.write(&base.join(sub)).expect("write report")
+        let dir = base.join(sub);
+        (report.write(&dir).expect("write report"),
+         placements.write(&dir).expect("write placements"))
     };
-    let a = write(run_specs(&specs, 7, 1).unwrap(), "serial");
-    let b = write(run_specs(&specs, 7, 4).unwrap(), "parallel");
-    let bytes_a = std::fs::read(a).unwrap();
-    let bytes_b = std::fs::read(b).unwrap();
-    assert_eq!(bytes_a, bytes_b);
+    let (a, pa) = write(run_specs(&specs, 7, 1, &planners).unwrap(),
+                        "serial");
+    let (b, pb) = write(run_specs(&specs, 7, 4, &planners).unwrap(),
+                        "parallel");
+    assert_eq!(std::fs::read(a).unwrap(), std::fs::read(b).unwrap());
+    assert_eq!(std::fs::read(pa).unwrap(), std::fs::read(pb).unwrap());
     std::fs::remove_dir_all(&base).ok();
+}
+
+#[test]
+fn planner_filtered_run_is_deterministic_and_a_column_subset() {
+    let specs = all_scenarios();
+
+    // The all-systems reference: name → value over every entry.
+    let all = run_specs(&specs, 0, 1, &PlannerRegistry::standard())
+        .expect("all-systems run");
+    let mut all_rows: BTreeMap<String, f64> = BTreeMap::new();
+    let mut all_count = 0usize;
+    for r in &all {
+        for e in &r.entries {
+            all_rows.insert(e.name.clone(), e.value);
+            all_count += 1;
+        }
+    }
+
+    // `--systems a,hulk`: byte-identical serial vs parallel.
+    let filtered = PlannerRegistry::resolve("a,hulk").unwrap();
+    let serial = run_specs(&specs, 0, 1, &filtered).expect("filtered run");
+    let parallel = run_specs(&specs, 0, 4, &filtered).expect("parallel");
+    let serial_entries: Vec<(String, f64)> = serial
+        .iter()
+        .flat_map(|r| r.entries.iter().map(|e| (e.name.clone(), e.value)))
+        .collect();
+    let parallel_entries: Vec<(String, f64)> = parallel
+        .iter()
+        .flat_map(|r| r.entries.iter().map(|e| (e.name.clone(), e.value)))
+        .collect();
+    assert_eq!(serial_entries, parallel_entries,
+               "filtered run diverged serial vs parallel");
+
+    // Strict subset: fewer entries overall…
+    assert!(serial_entries.len() < all_count,
+            "filtered run should drop the unselected systems' columns");
+    // …no column from an unselected system…
+    for (name, _) in &serial_entries {
+        assert!(!name.contains("/system_b/") && !name.contains("/system_c/"),
+                "unselected system leaked into filtered run: {name}");
+    }
+    // …and every selected per-system column matches the all-systems
+    // value exactly. (Aggregates like hulk_improvement_pct legitimately
+    // change when the baseline pool shrinks, so only per-system columns
+    // are value-compared.)
+    for (name, value) in &serial_entries {
+        if name.contains("/system_a/") || name.contains("/hulk/") {
+            let reference = all_rows.get(name).unwrap_or_else(|| {
+                panic!("filtered column {name} missing from all-systems run")
+            });
+            assert_eq!(value, reference, "{name} diverged from all-systems");
+        }
+    }
+}
+
+#[test]
+fn hulk_no_gcn_runs_every_scenario_end_to_end() {
+    // The ablation planner exercises the whole seam: every scenario
+    // completes under `--systems hulk_no_gcn,a` and emits its columns.
+    let planners = PlannerRegistry::resolve("hulk_no_gcn,a").unwrap();
+    let specs = all_scenarios();
+    let results = run_specs(&specs, 0, 2, &planners)
+        .expect("hulk_no_gcn suite runs");
+    assert_eq!(results.len(), specs.len());
+    // Evaluate-shaped scenarios carry hulk_no_gcn columns and digests.
+    let table1 = results
+        .iter()
+        .find(|r| r.scenario == "table1_fleet")
+        .unwrap();
+    assert!(table1
+        .entries
+        .iter()
+        .any(|e| e.name.contains("/hulk_no_gcn/")));
+    assert!(table1
+        .placements
+        .iter()
+        .any(|e| e.name == "table1_fleet/hulk_no_gcn/placement/group_count"));
+}
+
+#[test]
+fn placement_digests_cover_every_planning_scenario() {
+    let planners = PlannerRegistry::standard();
+    let results = run_specs(&all_scenarios(), 0, 1, &planners).unwrap();
+    for r in &results {
+        // Every scenario that runs a full evaluation — the Evaluate
+        // bodies plus the custom ones embedding one (wan_degradation ×4,
+        // fleet_growth n24, failure_storm survivors) — emits one digest
+        // triple per registered planner. The pure leader-loop scenarios
+        // have no Placement to digest.
+        if matches!(r.scenario, "multi_tenant" | "burst_arrivals") {
+            assert!(r.placements.is_empty(), "{}", r.scenario);
+            continue;
+        }
+        // 4 planners × 3 digest rows.
+        assert_eq!(r.placements.len(), 12, "{}", r.scenario);
+        for e in &r.placements {
+            assert!(e.name.starts_with(r.scenario), "{}", e.name);
+            assert!(e.name.contains("/placement/"), "{}", e.name);
+            assert!(e.value.is_finite() && e.value >= 0.0);
+        }
+    }
 }
 
 #[test]
@@ -159,7 +275,8 @@ fn subset_runs_only_requested_scenarios_in_order() {
     ])
     .unwrap();
     assert!(!ran_all);
-    let results = run_specs(&specs, 0, 2).unwrap();
+    let results =
+        run_specs(&specs, 0, 2, &PlannerRegistry::standard()).unwrap();
     let names: Vec<&str> = results.iter().map(|r| r.scenario).collect();
     assert_eq!(names, vec!["burst_arrivals", "table1_fleet"]);
 }

@@ -1,13 +1,27 @@
 //! System-level integration: the full planning path (fleet → graph →
 //! oracle/Algorithm 1 → pipelines → costs) across seeds and workloads —
-//! the artifact-free half of the paper's evaluation.
+//! the artifact-free half of the paper's evaluation, driven through the
+//! `Planner` trait.
 
 use hulk::cluster::Fleet;
 use hulk::graph::ClusterGraph;
 use hulk::models::ModelSpec;
 use hulk::parallel::pipeline_cost;
+use hulk::planner::{HulkPlanner, HulkSplitterKind, PlanContext, Planner};
+use hulk::scenarios::evaluate_all;
 use hulk::sim::simulate_pipeline;
-use hulk::systems::{evaluate_all, hulk_plan, HulkSplitterKind, SystemKind};
+
+/// Hulk's placement for a workload via the trait API (oracle splitter).
+fn hulk_placement(fleet: &Fleet, graph: &ClusterGraph,
+                  workload: &[ModelSpec])
+    -> (Vec<ModelSpec>, hulk::planner::Placement)
+{
+    let mut wl = workload.to_vec();
+    ModelSpec::sort_largest_first(&mut wl);
+    let ctx = PlanContext::new(fleet, graph, &wl, HulkSplitterKind::Oracle);
+    let placement = HulkPlanner.plan(&ctx).expect("hulk plans");
+    (wl, placement)
+}
 
 #[test]
 fn fig8_shape_reproduces_across_seeds() {
@@ -16,8 +30,9 @@ fn fig8_shape_reproduces_across_seeds() {
         let eval = evaluate_all(&fleet, &ModelSpec::paper_four(),
                                 HulkSplitterKind::Oracle)
             .unwrap();
+        let h = eval.hulk_column().expect("hulk registered");
         for (m, row) in eval.costs.iter().enumerate() {
-            let hulk = row[3];
+            let hulk = row[h];
             assert!(hulk.is_feasible(),
                     "seed {seed}: hulk infeasible for {}",
                     eval.models[m].name);
@@ -74,13 +89,12 @@ fn hulk_pipelines_simulate_consistently() {
     // factor on every Hulk group (they model the same schedule).
     let fleet = Fleet::paper_evaluation(0);
     let graph = ClusterGraph::from_fleet(&fleet);
-    let plan = hulk_plan(&fleet, &graph, &ModelSpec::paper_four(),
-                         HulkSplitterKind::Oracle)
-        .unwrap();
-    for (t, task) in plan.tasks.iter().enumerate() {
-        let analytic = pipeline_cost(&fleet, &plan.pipelines[t], task);
-        let sim = simulate_pipeline(&fleet, &plan.pipelines[t], task,
-                                    false, None);
+    let (wl, placement) =
+        hulk_placement(&fleet, &graph, &ModelSpec::paper_four());
+    for (t, task) in wl.iter().enumerate() {
+        let pipe = placement.pipeline(t).expect("hulk tasks are pipelined");
+        let analytic = pipeline_cost(&fleet, &pipe, task);
+        let sim = simulate_pipeline(&fleet, &pipe, task, false, None);
         assert!(sim.makespan_ms.is_finite());
         let ratio = sim.makespan_ms / analytic.total_ms();
         assert!((0.2..5.0).contains(&ratio),
@@ -92,11 +106,11 @@ fn hulk_pipelines_simulate_consistently() {
 fn spares_exist_for_recovery_on_four_task_workload() {
     let fleet = Fleet::paper_evaluation(0);
     let graph = ClusterGraph::from_fleet(&fleet);
-    let plan = hulk_plan(&fleet, &graph, &ModelSpec::paper_four(),
-                         HulkSplitterKind::Oracle)
-        .unwrap();
-    let assigned: usize =
-        plan.assignment.groups.iter().map(Vec::len).sum();
+    let (_wl, placement) =
+        hulk_placement(&fleet, &graph, &ModelSpec::paper_four());
+    let assigned: usize = (0..placement.n_tasks())
+        .map(|t| placement.machines(t).len())
+        .sum();
     assert!(assigned < fleet.len(),
             "paper Table 2 leaves spare machines (39/46 assigned); \
              we assigned {assigned}/46");
@@ -109,8 +123,8 @@ fn every_system_name_is_reported() {
                             HulkSplitterKind::Oracle)
         .unwrap();
     let render = eval.render();
-    for kind in SystemKind::ALL {
-        assert!(render.contains(kind.name()), "missing {}", kind.name());
+    for meta in &eval.systems {
+        assert!(render.contains(meta.name), "missing {}", meta.name);
     }
 }
 
@@ -131,17 +145,20 @@ fn gnn_splitter_with_reference_classifier_plans_feasibly() {
 
     let fleet = Fleet::paper_evaluation(0);
     let graph = ClusterGraph::from_fleet(&fleet);
-    let plan = hulk_plan(
+    let mut wl = ModelSpec::paper_four();
+    ModelSpec::sort_largest_first(&mut wl);
+    let ctx = PlanContext::new(
         &fleet,
         &graph,
-        &ModelSpec::paper_four(),
+        &wl,
         HulkSplitterKind::Gnn { classifier: &classifier, params: &params },
-    )
-    .expect("plan");
-    plan.assignment.validate_disjoint(fleet.len()).unwrap();
-    plan.assignment.validate_memory(&fleet, &plan.tasks).unwrap();
-    for (t, task) in plan.tasks.iter().enumerate() {
-        let c = pipeline_cost(&fleet, &plan.pipelines[t], task);
+    );
+    let placement = HulkPlanner.plan(&ctx).expect("plan");
+    let assignment = placement.to_assignment();
+    assignment.validate_disjoint(fleet.len()).unwrap();
+    assignment.validate_memory(&fleet, &wl).unwrap();
+    for (t, task) in wl.iter().enumerate() {
+        let c = HulkPlanner.cost(&ctx, &placement, t);
         assert!(c.is_feasible(), "{} infeasible under GNN plan", task.name);
     }
 }
@@ -151,9 +168,9 @@ fn oracle_grouping_beats_chance_by_a_wide_margin() {
     use hulk::gnn::cost_vs_random;
     let fleet = Fleet::paper_evaluation(0);
     let graph = ClusterGraph::from_fleet(&fleet);
-    let plan = hulk_plan(&fleet, &graph, &ModelSpec::paper_four(),
-                         HulkSplitterKind::Oracle)
-        .unwrap();
-    let ratio = cost_vs_random(&fleet, &graph, &plan.assignment, 3);
+    let (_wl, placement) =
+        hulk_placement(&fleet, &graph, &ModelSpec::paper_four());
+    let assignment = placement.to_assignment();
+    let ratio = cost_vs_random(&fleet, &graph, &assignment, 3);
     assert!(ratio < 0.8, "oracle grouping only {ratio:.2}× of chance");
 }
