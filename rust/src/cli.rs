@@ -25,19 +25,28 @@ usage: hulk <subcommand> [flags]
              Regenerate paper tables/figures; `micro --json` writes
              BENCH_micro.json.
   scenarios  list
-  scenarios  run <name…|all> [--seed S] [--systems a,b,hulk] [--json]
-                 [--out DIR] [--parallel] [--threads N]
+  scenarios  run <name…|all> [--seed S] [--systems a,b,hulk]
+                 [--cost analytic|sim] [--json] [--out DIR]
+                 [--parallel] [--threads N]
              Run named scenarios deterministically from the seed.
              `--systems` filters which planners run (slugs from the
              planner registry: system_a|a, system_b|b, system_c|c,
-             hulk, hulk_no_gcn; default = the paper's four). `--json`
-             writes BENCH_scenarios.json in the customSmallerIsBetter
-             shape plus BENCH_placements.json (per-system placement
-             digests: group/stage counts, cross-region edges).
-             `--parallel` executes (scenario × planner) cells on a
-             worker pool (`--threads N` pins the width; default = the
-             machine's available parallelism). Output is byte-identical
-             to a serial run.
+             hulk, hulk_no_gcn; default = the paper's four). `--cost`
+             picks the pricing backend: `analytic` (default, the
+             closed-form per-task formulas) or `sim` (whole-placement
+             discrete-event execution where concurrent tasks contend
+             for shared WAN links and machines; adds per-system
+             makespan/straggler/link-utilization rows and unlocks the
+             sim-only scenarios contended_links and sim_vs_analytic).
+             `--json` writes BENCH_scenarios.json in the
+             customSmallerIsBetter shape plus BENCH_placements.json
+             (per-system placement digests: group/stage counts,
+             cross-region edges); a sim-priced run writes
+             BENCH_scenarios_cost_sim.json instead. `--parallel`
+             executes (scenario × planner) cells on a worker pool
+             (`--threads N` pins the width; default = the machine's
+             available parallelism). Output is byte-identical to a
+             serial run, for either backend.
   help       Print this grammar.
 
 Flags are `--key value`, `--key=value`, or bare `--key` for booleans."
@@ -190,5 +199,8 @@ mod tests {
         assert!(text.contains("BENCH_placements.json"));
         assert!(text.contains("--parallel") && text.contains("--threads"));
         assert!(text.contains("--systems") && text.contains("hulk_no_gcn"));
+        assert!(text.contains("--cost") && text.contains("analytic|sim"));
+        assert!(text.contains("contended_links")
+            && text.contains("sim_vs_analytic"));
     }
 }

@@ -21,7 +21,7 @@ use hulk::coordinator::{Coordinator, CoordinatorEvent, CoordinatorReply};
 use hulk::gnn::{make_dataset, train_gcn, TrainerOptions};
 use hulk::graph::ClusterGraph;
 use hulk::models::ModelSpec;
-use hulk::planner::{HulkSplitterKind, PlannerRegistry};
+use hulk::planner::{CostBackend, HulkSplitterKind, PlannerRegistry};
 use hulk::runtime::{GcnRuntime, Manifest};
 use hulk::runtime::client::TrainState;
 use hulk::scenarios::evaluate_all;
@@ -54,26 +54,39 @@ fn cmd_scenarios(cli: &Cli) -> Result<()> {
             let mut t = hulk::util::table::Table::new(
                 &["scenario", "description"]);
             for s in hulk::scenarios::all_scenarios() {
-                t.row(&[s.name.to_string(), s.description.to_string()]);
+                let name = if s.sim_only {
+                    format!("{} (sim-only)", s.name)
+                } else {
+                    s.name.to_string()
+                };
+                t.row(&[name, s.description.to_string()]);
             }
             println!("{}", t.render());
             let catalog = PlannerRegistry::catalog();
             println!("registered planners: {} (default: the paper's \
                       four; filter with --systems)",
                      catalog.slugs().join(", "));
+            println!("cost backends: analytic (closed-form, default), \
+                      sim (discrete-event with shared WAN contention; \
+                      sim-only scenarios need it)");
             println!("run with: hulk scenarios run <name…|all> \
-                      [--seed S] [--systems a,b,hulk] [--json] \
-                      [--out DIR] [--parallel] [--threads N]");
+                      [--seed S] [--systems a,b,hulk] \
+                      [--cost analytic|sim] [--json] [--out DIR] \
+                      [--parallel] [--threads N]");
             Ok(())
         }
         Some("run") => {
             let seed = cli.flag_u64("seed", 0)?;
             let names = &cli.positional[1..];
+            let backend = match cli.flag("cost") {
+                Some(v) => CostBackend::parse(v)?,
+                None => CostBackend::Analytic,
+            };
             // Every name is validated before anything runs: an unknown
             // scenario (or planner slug) exits non-zero listing the
             // valid names instead of silently running the wrong suite.
             let (specs, ran_all) =
-                hulk::scenarios::resolve_scenarios(names)?;
+                hulk::scenarios::resolve_scenarios(names, backend)?;
             let planners = match cli.flag("systems") {
                 Some(csv) => PlannerRegistry::resolve(csv)?,
                 None => PlannerRegistry::standard(),
@@ -81,7 +94,8 @@ fn cmd_scenarios(cli: &Cli) -> Result<()> {
             let threads = scenario_threads(cli)?;
             let started = std::time::Instant::now();
             let results = hulk::scenarios::run_specs(&specs, seed,
-                                                     threads, &planners)?;
+                                                     threads, &planners,
+                                                     backend)?;
             let wall = started.elapsed().as_secs_f64();
             for r in &results {
                 println!("\n================ {} (seed {seed}) \
@@ -93,13 +107,14 @@ fn cmd_scenarios(cli: &Cli) -> Result<()> {
             // stays free of timing so parallel and serial runs diff
             // byte-identical.
             println!("ran {} scenario(s) × {} planner(s) on {} \
-                      thread(s) in {:.2}s",
-                     results.len(), planners.len(), threads, wall);
+                      thread(s), {} pricing, in {:.2}s",
+                     results.len(), planners.len(), threads,
+                     backend.name(), wall);
             if cli.flag_bool("json") {
                 let out = PathBuf::from(cli.flag("out").unwrap_or("."));
                 // A subset run gets its own file name so it cannot
                 // silently overwrite the full-suite report; likewise a
-                // planner-filtered run.
+                // planner-filtered or sim-priced run.
                 let mut suite = if ran_all {
                     "scenarios".to_string()
                 } else {
@@ -111,6 +126,9 @@ fn cmd_scenarios(cli: &Cli) -> Result<()> {
                     suite =
                         format!("{suite}_systems_{}",
                                 planners.slugs().join("_"));
+                }
+                if backend != CostBackend::Analytic {
+                    suite = format!("{suite}_cost_{}", backend.slug());
                 }
                 let mut report = BenchReport::new(&suite);
                 // The placement digests go to a sibling file so the

@@ -1,0 +1,186 @@
+//! Pluggable cost backends: *how* a [`Placement`](super::Placement) is
+//! priced, decoupled from *who* produced it.
+//!
+//! Two backends exist:
+//!
+//! - [`CostBackend::Analytic`] — the closed-form per-task models in
+//!   [`crate::parallel`] (`data_parallel_cost`, `pipeline_cost`,
+//!   `tensor_parallel_cost`), dispatched through [`Placement::cost`].
+//!   This is the historical pricing path, byte-identical to every
+//!   pre-backend artifact, and the default everywhere.
+//! - [`CostBackend::Simulated`] — whole-placement execution on the
+//!   discrete-event engine ([`crate::sim::cluster`]): every task of the
+//!   placement runs concurrently, contending for shared inter-region WAN
+//!   links and machines. Pricing by execution sees the cross-task
+//!   interference the closed forms cannot, and returns an
+//!   [`ExecReport`] (makespan, per-link utilization, straggler wait)
+//!   alongside the per-task [`IterCost`] columns.
+//!
+//! The backend travels in [`PlanContext::backend`](super::PlanContext)
+//! and surfaces on the CLI as `hulk scenarios run … --cost analytic|sim`.
+//! Both backends always agree on *feasibility* (the simulated backend
+//! gates on the analytic verdict before lowering), so infeasible cells
+//! stay infeasible no matter how they are priced.
+
+use anyhow::Result;
+
+use crate::cluster::Fleet;
+use crate::models::ModelSpec;
+use crate::parallel::IterCost;
+use crate::sim::cluster::execute_placement;
+pub use crate::sim::cluster::{ExecReport, LinkUse};
+
+use super::Placement;
+
+/// Which pricing engine a plan/evaluate run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CostBackend {
+    /// Closed-form per-task formulas (`parallel::*`) — no interference.
+    #[default]
+    Analytic,
+    /// Whole-placement discrete-event execution with shared WAN-link and
+    /// machine contention (`sim::cluster`).
+    Simulated,
+}
+
+/// What a backend returns for one placement: the per-task cost columns,
+/// plus the execution digest when pricing ran on the simulator.
+#[derive(Clone, Debug)]
+pub struct PricedPlacement {
+    /// One [`IterCost`] per workload task, placement order.
+    pub per_task: Vec<IterCost>,
+    /// Present iff the backend executed the placement
+    /// ([`CostBackend::Simulated`]).
+    pub exec: Option<ExecReport>,
+}
+
+impl CostBackend {
+    pub const ALL: [CostBackend; 2] =
+        [CostBackend::Analytic, CostBackend::Simulated];
+
+    /// Stable id used in CLI flags and artifact suite names.
+    pub fn slug(self) -> &'static str {
+        match self {
+            CostBackend::Analytic => "analytic",
+            CostBackend::Simulated => "sim",
+        }
+    }
+
+    /// Human-readable description for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            CostBackend::Analytic => "analytic (closed-form)",
+            CostBackend::Simulated => "sim (discrete-event, contended)",
+        }
+    }
+
+    /// Parse the `--cost` CLI value. Accepts the slugs plus the obvious
+    /// long form; anything else errors listing the valid names.
+    pub fn parse(s: &str) -> Result<CostBackend> {
+        match s.trim() {
+            "analytic" => Ok(CostBackend::Analytic),
+            "sim" | "simulated" => Ok(CostBackend::Simulated),
+            other => anyhow::bail!(
+                "unknown cost backend {other:?}; valid: analytic, sim"
+            ),
+        }
+    }
+
+    /// Price `placement` for `workload` on `fleet` with this backend.
+    /// (Planners route their default [`Planner::price`](super::Planner)
+    /// through their own `cost` for the analytic arm so per-task
+    /// overrides are honored; this standalone entry point prices the IR
+    /// directly.)
+    pub fn price(self, fleet: &Fleet, workload: &[ModelSpec],
+                 placement: &Placement) -> PricedPlacement
+    {
+        match self {
+            CostBackend::Analytic => PricedPlacement {
+                per_task: (0..workload.len())
+                    .map(|t| placement.cost(fleet, &workload[t], t))
+                    .collect(),
+                exec: None,
+            },
+            CostBackend::Simulated => {
+                let run = execute_placement(fleet, workload, placement);
+                PricedPlacement {
+                    per_task: run.per_task_costs(),
+                    exec: Some(run.report),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ClusterGraph;
+    use crate::planner::{HulkSplitterKind, PlanContext, Planner,
+                         SystemAPlanner};
+
+    #[test]
+    fn parse_accepts_slugs_and_rejects_garbage() {
+        assert_eq!(CostBackend::parse("analytic").unwrap(),
+                   CostBackend::Analytic);
+        assert_eq!(CostBackend::parse("sim").unwrap(),
+                   CostBackend::Simulated);
+        assert_eq!(CostBackend::parse(" simulated ").unwrap(),
+                   CostBackend::Simulated);
+        let err = CostBackend::parse("exact").unwrap_err();
+        assert!(err.to_string().contains("analytic"), "{err}");
+        assert_eq!(CostBackend::default(), CostBackend::Analytic);
+    }
+
+    #[test]
+    fn analytic_backend_is_byte_identical_to_placement_cost() {
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let mut wl = ModelSpec::paper_four();
+        ModelSpec::sort_largest_first(&mut wl);
+        let ctx = PlanContext::new(&fleet, &graph, &wl,
+                                   HulkSplitterKind::Oracle);
+        let placement = SystemAPlanner.plan(&ctx).unwrap();
+        let priced =
+            CostBackend::Analytic.price(&fleet, &wl, &placement);
+        assert!(priced.exec.is_none());
+        for (t, model) in wl.iter().enumerate() {
+            assert_eq!(priced.per_task[t],
+                       placement.cost(&fleet, model, t));
+        }
+    }
+
+    #[test]
+    fn simulated_backend_returns_an_exec_report_and_same_feasibility() {
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let mut wl = ModelSpec::paper_four();
+        ModelSpec::sort_largest_first(&mut wl);
+        let ctx = PlanContext::new(&fleet, &graph, &wl,
+                                   HulkSplitterKind::Oracle);
+        let placement = SystemAPlanner.plan(&ctx).unwrap();
+        let analytic =
+            CostBackend::Analytic.price(&fleet, &wl, &placement);
+        let sim = CostBackend::Simulated.price(&fleet, &wl, &placement);
+        let exec = sim.exec.expect("simulated pricing carries a report");
+        assert!(exec.makespan_ms.is_finite());
+        assert!(exec.events_processed > 0);
+        for t in 0..wl.len() {
+            assert_eq!(analytic.per_task[t].is_feasible(),
+                       sim.per_task[t].is_feasible(),
+                       "backend feasibility disagrees on task {t}");
+        }
+        // System A gives every task the whole (replica-capable) fleet:
+        // under execution the tasks contend, so no simulated total may
+        // undercut its analytic counterpart.
+        for t in 0..wl.len() {
+            if analytic.per_task[t].is_feasible() {
+                assert!(sim.per_task[t].total_ms()
+                            >= analytic.per_task[t].total_ms() * 0.99,
+                        "task {t}: sim {} vs analytic {}",
+                        sim.per_task[t].total_ms(),
+                        analytic.per_task[t].total_ms());
+            }
+        }
+    }
+}

@@ -36,6 +36,7 @@
 //! DESIGN.md §Planner architecture.
 
 pub mod baselines;
+pub mod cost_model;
 pub mod hulk;
 pub mod placement;
 pub mod registry;
@@ -48,6 +49,7 @@ use crate::models::ModelSpec;
 use crate::parallel::IterCost;
 
 pub use baselines::{SystemAPlanner, SystemBPlanner, SystemCPlanner};
+pub use cost_model::{CostBackend, ExecReport, LinkUse, PricedPlacement};
 pub use hulk::{chain_order, HulkNoGcnPlanner, HulkPlanner, HulkSplitterKind};
 pub use placement::{Placement, PlacementSummary, TaskPlacement};
 pub use registry::PlannerRegistry;
@@ -63,6 +65,11 @@ pub struct PlanContext<'a> {
     /// Which splitter `F` Hulk-family planners drive Algorithm 1 with
     /// (baselines ignore it).
     pub splitter: HulkSplitterKind<'a>,
+    /// How placements are priced ([`Planner::price`]): closed-form
+    /// per-task formulas, or whole-placement discrete-event execution
+    /// with shared WAN-link contention. `new` defaults to `Analytic`,
+    /// keeping every pre-backend call site and artifact byte-identical.
+    pub backend: CostBackend,
 }
 
 impl<'a> PlanContext<'a> {
@@ -70,7 +77,15 @@ impl<'a> PlanContext<'a> {
                workload: &'a [ModelSpec], splitter: HulkSplitterKind<'a>)
         -> PlanContext<'a>
     {
-        PlanContext { fleet, graph, workload, splitter }
+        PlanContext { fleet, graph, workload, splitter,
+                      backend: CostBackend::Analytic }
+    }
+
+    /// The same context priced by `backend` instead of the default
+    /// analytic formulas.
+    pub fn with_backend(mut self, backend: CostBackend) -> PlanContext<'a> {
+        self.backend = backend;
+        self
     }
 }
 
@@ -118,13 +133,36 @@ pub trait Planner: Send + Sync {
     /// Decide where every task of `ctx.workload` runs.
     fn plan(&self, ctx: &PlanContext) -> Result<Placement>;
 
-    /// Per-iteration cost of task `task_idx` under `placement`. The
-    /// default prices the placement IR itself, so identical placements
-    /// cost identically no matter which planner emitted them.
+    /// Per-iteration cost of task `task_idx` under `placement`, priced
+    /// by the **analytic** closed forms. The default prices the
+    /// placement IR itself, so identical placements cost identically no
+    /// matter which planner emitted them.
     fn cost(&self, ctx: &PlanContext, placement: &Placement,
             task_idx: usize) -> IterCost
     {
         placement.cost(ctx.fleet, &ctx.workload[task_idx], task_idx)
+    }
+
+    /// Price the whole placement with the context's
+    /// [`CostBackend`]: the analytic arm routes through [`Self::cost`]
+    /// task by task (so per-task overrides are honored and the output is
+    /// byte-identical to the historical loop); the simulated arm
+    /// executes every task concurrently on the discrete-event engine
+    /// ([`crate::sim::cluster`]) and additionally returns the
+    /// [`ExecReport`] contention digest.
+    fn price(&self, ctx: &PlanContext, placement: &Placement)
+        -> PricedPlacement
+    {
+        match ctx.backend {
+            CostBackend::Analytic => PricedPlacement {
+                per_task: (0..ctx.workload.len())
+                    .map(|t| self.cost(ctx, placement, t))
+                    .collect(),
+                exec: None,
+            },
+            CostBackend::Simulated => CostBackend::Simulated
+                .price(ctx.fleet, ctx.workload, placement),
+        }
     }
 
     /// Reporting metadata bundle.
@@ -168,5 +206,29 @@ mod tests {
         let via_trait = b.cost(&ctx, &placement, 0);
         let via_ir = placement.cost(&fleet, &wl[0], 0);
         assert_eq!(via_trait, via_ir);
+    }
+
+    #[test]
+    fn price_follows_the_context_backend() {
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let wl = vec![ModelSpec::bert_large()];
+        let analytic_ctx = PlanContext::new(&fleet, &graph, &wl,
+                                            HulkSplitterKind::Oracle);
+        let b = SystemBPlanner;
+        let placement = b.plan(&analytic_ctx).unwrap();
+        // Analytic arm == the historical per-task cost loop, no report.
+        let priced = b.price(&analytic_ctx, &placement);
+        assert!(priced.exec.is_none());
+        assert_eq!(priced.per_task,
+                   vec![b.cost(&analytic_ctx, &placement, 0)]);
+        // Simulated arm carries the execution digest.
+        let sim_ctx = PlanContext::new(&fleet, &graph, &wl,
+                                       HulkSplitterKind::Oracle)
+            .with_backend(CostBackend::Simulated);
+        let priced = b.price(&sim_ctx, &placement);
+        let exec = priced.exec.expect("sim pricing has a report");
+        assert!(exec.makespan_ms.is_finite());
+        assert!(priced.per_task[0].is_feasible());
     }
 }

@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 
-use crate::benchkit::{BenchConfig, BenchReport, Bencher};
+use crate::benchkit::{BenchConfig, BenchEntry, BenchReport, Bencher};
 use crate::cli::Cli;
 use crate::cluster::paper_data::{fig6_node_45, TABLE1_MS, TABLE1_RECEIVERS,
                                  TABLE1_SENDERS};
@@ -21,11 +21,13 @@ use crate::gnn::{make_dataset, train_gcn, TrainerOptions};
 use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
 use crate::parallel::{pipeline_cost, PipelinePlan};
-use crate::planner::{chain_order, HulkSplitterKind, PlannerRegistry};
+use crate::planner::{chain_order, CostBackend, HulkPlanner,
+                     HulkSplitterKind, PlanContext, Planner,
+                     PlannerRegistry};
 use crate::runtime::client::TrainState;
 use crate::runtime::{GcnRuntime, Manifest};
 use crate::scheduler::{oracle_partition, OracleOptions};
-use crate::sim::simulate_pipeline;
+use crate::sim::{execute_placement, simulate_pipeline};
 
 use super::evaluate::evaluate_all;
 use crate::util::rng::Rng;
@@ -108,7 +110,8 @@ fn sweep(cli: &Cli) -> Result<()> {
 
     println!("— fleet-size sweep (Hulk improvement vs best baseline) —");
     let mut t = Table::new(&["servers", "improvement"]);
-    for p in fleet_size_sweep(&planners, seed, &[12, 16, 24, 32, 46],
+    for p in fleet_size_sweep(&planners, CostBackend::Analytic, seed,
+                              &[12, 16, 24, 32, 46],
                               &ModelSpec::paper_four())? {
         t.row(&[format!("{:.0}", p.x),
                 format!("{:.1}%", p.improvement * 100.0)]);
@@ -117,7 +120,8 @@ fn sweep(cli: &Cli) -> Result<()> {
 
     println!("— microbatch sweep (GPT-2 Hulk group, per-iter total) —");
     let mut t = Table::new(&["K", "iter total"]);
-    for p in microbatch_sweep(&planners, seed, &ModelSpec::gpt2_xl(),
+    for p in microbatch_sweep(&planners, CostBackend::Analytic, seed,
+                              &ModelSpec::gpt2_xl(),
                               &[1, 2, 4, 8, 16, 32])? {
         t.row(&[format!("{:.0}", p.x), fmt_ms(p.improvement)]);
     }
@@ -125,7 +129,8 @@ fn sweep(cli: &Cli) -> Result<()> {
 
     println!("— WAN degradation sweep (all inter-region latencies ×f) —");
     let mut t = Table::new(&["factor", "improvement"]);
-    for p in wan_degradation_sweep(&planners, seed, &[1.0, 2.0, 4.0, 8.0],
+    for p in wan_degradation_sweep(&planners, CostBackend::Analytic, seed,
+                                   &[1.0, 2.0, 4.0, 8.0],
                                    &ModelSpec::paper_four())? {
         t.row(&[format!("×{:.0}", p.x),
                 format!("{:.1}%", p.improvement * 100.0)]);
@@ -423,10 +428,49 @@ fn micro(cli: &Cli) -> Result<()> {
     });
     println!("≈ {:.0} events/ms in the DES engine",
              sim.events_processed as f64 / r.summary.mean);
+
+    // The `--cost sim` backend hot path: whole placements executed with
+    // shared-link contention, on the Table 1 fleet and at planet scale.
+    let ctx = PlanContext::new(&fleet, &graph, &tasks,
+                               HulkSplitterKind::Oracle);
+    let table1_placement = HulkPlanner.plan(&ctx)?;
+    b.bench("execute_placement_table1_hulk", || {
+        execute_placement(&fleet, &tasks, &table1_placement)
+    });
+    let planet = Fleet::synthetic(220, 12, seed);
+    let planet_graph = ClusterGraph::from_fleet(&planet);
+    let planet_tasks = {
+        let mut t = super::sweep::feasible_workload(
+            &planet, &ModelSpec::paper_six());
+        ModelSpec::sort_largest_first(&mut t);
+        t
+    };
+    let planet_ctx = PlanContext::new(&planet, &planet_graph,
+                                      &planet_tasks,
+                                      HulkSplitterKind::Oracle);
+    let planet_placement = HulkPlanner.plan(&planet_ctx)?;
+    let planet_events =
+        execute_placement(&planet, &planet_tasks, &planet_placement)
+            .report
+            .events_processed;
+    let r = b.bench("execute_placement_planet_hulk", || {
+        execute_placement(&planet, &planet_tasks, &planet_placement)
+    });
+    let planet_events_per_sec =
+        planet_events as f64 / (r.summary.mean / 1e3);
+    println!("≈ {planet_events_per_sec:.0} events/sec executing the \
+              planet_scale Hulk placement ({planet_events} events)");
+
     if cli.flag_bool("json") {
         let out = std::path::PathBuf::from(cli.flag("out").unwrap_or("."));
         let mut report = BenchReport::new("micro");
         report.extend(b.entries("micro"));
+        // Simulator throughput trajectory (informational: bigger is
+        // better, unlike the ms rows above).
+        report.push(BenchEntry::new("micro/sim_planet_events_per_sec",
+                                    planet_events_per_sec, "events/s"));
+        report.push(BenchEntry::new("micro/sim_planet_events",
+                                    planet_events as f64, "count"));
         let path = report.write(&out)?;
         println!("wrote {}", path.display());
     }

@@ -14,8 +14,9 @@ use crate::cluster::Fleet;
 use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
 use crate::parallel::IterCost;
-use crate::planner::{HulkSplitterKind, PlacementSummary, PlanContext,
-                     Planner, PlannerKind, PlannerRegistry, SystemMeta};
+use crate::planner::{CostBackend, ExecReport, HulkSplitterKind,
+                     PlacementSummary, PlanContext, Planner, PlannerKind,
+                     PlannerRegistry, SystemMeta};
 use crate::util::table::{fmt_ms, Table};
 
 /// One evaluated workload: per-model, per-planner iteration costs plus
@@ -29,6 +30,11 @@ pub struct SystemEval {
     pub costs: Vec<Vec<IterCost>>,
     /// `placements[s]`: the placement summary of `systems[s]`.
     pub placements: Vec<PlacementSummary>,
+    /// Which backend priced `costs`.
+    pub backend: CostBackend,
+    /// `exec[s]`: the execution digest of `systems[s]` — present iff
+    /// `backend` is [`CostBackend::Simulated`].
+    pub exec: Vec<Option<ExecReport>>,
 }
 
 impl SystemEval {
@@ -63,6 +69,34 @@ impl SystemEval {
         1.0 - hulk_total / best_baseline_total
     }
 
+    /// Render the per-system execution digests (makespan, straggler
+    /// wait, hottest WAN link) — empty string under the analytic
+    /// backend, so analytic reports stay byte-identical.
+    pub fn render_exec(&self) -> String {
+        if self.exec.iter().all(Option::is_none) {
+            return String::new();
+        }
+        let mut t = Table::new(&["System", "Makespan", "Straggler wait",
+                                 "Hottest link", "Util"]);
+        for (meta, exec) in self.systems.iter().zip(&self.exec) {
+            let Some(exec) = exec else { continue };
+            let (link, util) = match exec.hottest_link() {
+                Some(l) => (format!("{}–{}", l.a.name(), l.b.name()),
+                            format!("{:.0}%", l.utilization * 100.0)),
+                None => ("—".into(), "—".into()),
+            };
+            t.row(&[
+                meta.name.to_string(),
+                fmt_ms(exec.makespan_ms),
+                fmt_ms(exec.straggler_wait_ms),
+                link,
+                util,
+            ]);
+        }
+        format!("— simulated execution (shared WAN contention) —\n{}",
+                t.render())
+    }
+
     /// Render the Fig. 8 / Fig. 10 data as a table.
     pub fn render(&self) -> String {
         let mut t = Table::new(&["Model", "System", "Comm", "Comp",
@@ -89,33 +123,45 @@ impl SystemEval {
     }
 }
 
-/// Evaluate `workload` under every planner in `planners`. Hulk-family
-/// planners drive Algorithm 1 with the given splitter (GNN in
-/// production, oracle for artifact-free runs).
-pub fn evaluate_with(planners: &PlannerRegistry, fleet: &Fleet,
-                     workload: &[ModelSpec], splitter: HulkSplitterKind)
-    -> Result<SystemEval>
+/// Evaluate `workload` under every planner in `planners`, priced by
+/// `backend`. Hulk-family planners drive Algorithm 1 with the given
+/// splitter (GNN in production, oracle for artifact-free runs).
+pub fn evaluate_with_backend(planners: &PlannerRegistry, fleet: &Fleet,
+                             workload: &[ModelSpec],
+                             splitter: HulkSplitterKind,
+                             backend: CostBackend) -> Result<SystemEval>
 {
     let graph = ClusterGraph::from_fleet(fleet);
     let mut models = workload.to_vec();
     ModelSpec::sort_largest_first(&mut models);
-    let ctx = PlanContext::new(fleet, &graph, &models, splitter);
+    let ctx = PlanContext::new(fleet, &graph, &models, splitter)
+        .with_backend(backend);
 
     let mut columns: Vec<Vec<IterCost>> = Vec::with_capacity(planners.len());
     let mut placements = Vec::with_capacity(planners.len());
+    let mut exec = Vec::with_capacity(planners.len());
     for planner in planners.iter() {
         let placement = planner.plan(&ctx)?;
-        columns.push(
-            (0..models.len())
-                .map(|t| planner.cost(&ctx, &placement, t))
-                .collect(),
-        );
+        let priced = planner.price(&ctx, &placement);
+        columns.push(priced.per_task);
+        exec.push(priced.exec);
         placements.push(placement.summary(fleet));
     }
     let costs = (0..models.len())
         .map(|m| columns.iter().map(|col| col[m]).collect())
         .collect();
-    Ok(SystemEval { systems: planners.metas(), models, costs, placements })
+    Ok(SystemEval { systems: planners.metas(), models, costs, placements,
+                    backend, exec })
+}
+
+/// [`evaluate_with_backend`] under the default analytic formulas — the
+/// historical entry point, byte-identical output.
+pub fn evaluate_with(planners: &PlannerRegistry, fleet: &Fleet,
+                     workload: &[ModelSpec], splitter: HulkSplitterKind)
+    -> Result<SystemEval>
+{
+    evaluate_with_backend(planners, fleet, workload, splitter,
+                          CostBackend::Analytic)
 }
 
 /// Evaluate `workload` under the standard four systems (§6.4).
@@ -203,6 +249,39 @@ mod tests {
                                  HulkSplitterKind::Oracle)
             .unwrap();
         assert_eq!(eval.hulk_improvement(), 0.0);
+    }
+
+    #[test]
+    fn simulated_backend_reports_exec_digests_and_keeps_hulk_ahead() {
+        let fleet = Fleet::paper_evaluation(0);
+        let workload = [ModelSpec::gpt2_xl(), ModelSpec::bert_large()];
+        let analytic = evaluate_all(&fleet, &workload,
+                                    HulkSplitterKind::Oracle)
+            .unwrap();
+        assert_eq!(analytic.backend, CostBackend::Analytic);
+        assert!(analytic.exec.iter().all(Option::is_none));
+        assert!(analytic.render_exec().is_empty());
+
+        let sim = evaluate_with_backend(&PlannerRegistry::standard(),
+                                        &fleet, &workload,
+                                        HulkSplitterKind::Oracle,
+                                        CostBackend::Simulated)
+            .unwrap();
+        assert_eq!(sim.backend, CostBackend::Simulated);
+        assert!(sim.exec.iter().all(Option::is_some));
+        let rendered = sim.render_exec();
+        assert!(rendered.contains("Makespan"));
+        // Feasibility agrees cell-by-cell between the backends, and the
+        // headline survives pricing-by-execution: Hulk's disjoint groups
+        // dodge the contention the baselines create for themselves.
+        for (a_row, s_row) in analytic.costs.iter().zip(&sim.costs) {
+            for (a, s) in a_row.iter().zip(s_row) {
+                assert_eq!(a.is_feasible(), s.is_feasible());
+            }
+        }
+        assert!(sim.hulk_improvement() > 0.0,
+                "Hulk loses under contention: {:.1}%",
+                sim.hulk_improvement() * 100.0);
     }
 
     #[test]

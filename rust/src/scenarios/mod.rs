@@ -31,7 +31,8 @@ pub mod registry;
 pub mod runner;
 pub mod sweep;
 
-pub use evaluate::{evaluate_all, evaluate_with, SystemEval};
+pub use evaluate::{evaluate_all, evaluate_with, evaluate_with_backend,
+                   SystemEval};
 pub use registry::{all_scenarios, find_scenario, resolve_scenarios,
                    run_all};
 pub use runner::{run_specs, ScenarioBody, ScenarioResult, ScenarioSpec,

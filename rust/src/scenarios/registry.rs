@@ -34,20 +34,24 @@ use crate::coordinator::{scale_out, Coordinator, CoordinatorEvent,
                          CoordinatorReply, RecoveryAction, TaskState};
 use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
-use crate::parallel::pipeline_cost;
-use crate::planner::{HulkSplitterKind, PlanContext, Planner, PlannerKind,
-                     PlannerRegistry};
+use crate::parallel::{pipeline_cost, IterCost};
+use crate::planner::{CostBackend, HulkSplitterKind, PlanContext, Planner,
+                     PlannerKind, PlannerRegistry};
 use crate::scheduler::{oracle_partition, Assignment, OracleOptions};
 use crate::sim::{simulate_pipeline, FailurePlan};
 use crate::util::rng::Rng;
 use crate::util::table::{fmt_ms, Table};
 
-use super::evaluate::{evaluate_with, SystemEval};
-use super::runner::{placement_entries, run_specs, ScenarioBody,
-                    ScenarioResult, ScenarioSpec, SeedPolicy};
+use super::evaluate::{evaluate_with_backend, SystemEval};
+use super::runner::{exec_entries, placement_entries, run_specs,
+                    ScenarioBody, ScenarioResult, ScenarioSpec,
+                    SeedPolicy};
 use super::sweep::{feasible_workload, fleet_size_sweep, truncated_fleet};
 
-/// Every registered scenario, in canonical order.
+/// Every registered scenario, in canonical order. The trailing
+/// `sim_only` entries exist only under `--cost sim` (they measure
+/// shared-link contention, which the analytic backend cannot see);
+/// [`resolve_scenarios`] filters them per backend.
 pub fn all_scenarios() -> Vec<ScenarioSpec> {
     vec![
         ScenarioSpec {
@@ -60,6 +64,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
                 workload: |_| ModelSpec::paper_four(),
                 finish: table1_finish,
             },
+            sim_only: false,
         },
         ScenarioSpec {
             name: "wan_degradation",
@@ -67,6 +72,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
                           systems compared on the ×4 WAN",
             seed: SeedPolicy::Global,
             body: ScenarioBody::Custom(wan_degradation),
+            sim_only: false,
         },
         ScenarioSpec {
             name: "hetero_gpu",
@@ -79,6 +85,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
                                    ModelSpec::bert_large()],
                 finish: hetero_finish,
             },
+            sim_only: false,
         },
         ScenarioSpec {
             name: "fleet_growth",
@@ -86,6 +93,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
                           node-45 scale-out join",
             seed: SeedPolicy::Global,
             body: ScenarioBody::Custom(fleet_growth),
+            sim_only: false,
         },
         ScenarioSpec {
             name: "failure_storm",
@@ -93,6 +101,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
                           recovery policy, then systems on the survivors",
             seed: SeedPolicy::Global,
             body: ScenarioBody::Custom(failure_storm),
+            sim_only: false,
         },
         ScenarioSpec {
             name: "multi_tenant",
@@ -100,6 +109,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
                           leader loop with a mid-stream failure",
             seed: SeedPolicy::Global,
             body: ScenarioBody::Custom(multi_tenant),
+            sim_only: false,
         },
         ScenarioSpec {
             name: "planet_scale",
@@ -113,6 +123,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
                 },
                 finish: planet_finish,
             },
+            sim_only: false,
         },
         ScenarioSpec {
             name: "burst_arrivals",
@@ -120,6 +131,25 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
                           leader loop, with mid-storm machine failures",
             seed: SeedPolicy::Tagged(0x4255_5253_5421), // "BURST!"
             body: ScenarioBody::Custom(burst_arrivals),
+            sim_only: false,
+        },
+        ScenarioSpec {
+            name: "contended_links",
+            description: "Five models on a two-region fleet sharing one \
+                          trans-Pacific link — DES-only contention study \
+                          (requires --cost sim)",
+            seed: SeedPolicy::Tagged(0x5041_4349_4649_43), // "PACIFIC"
+            body: ScenarioBody::Custom(contended_links),
+            sim_only: true,
+        },
+        ScenarioSpec {
+            name: "sim_vs_analytic",
+            description: "Per-system gap between closed-form pricing and \
+                          contended execution on the Table 1 fleet \
+                          (requires --cost sim)",
+            seed: SeedPolicy::Global,
+            body: ScenarioBody::Custom(sim_vs_analytic),
+            sim_only: true,
         },
     ]
 }
@@ -129,12 +159,15 @@ pub fn find_scenario(name: &str) -> Option<ScenarioSpec> {
     all_scenarios().into_iter().find(|s| s.name == name)
 }
 
-/// Resolve CLI scenario names to specs. An empty list or any `"all"`
-/// selects the full registry — but **every** given name is validated
-/// first, so a typo can never silently run the wrong suite; the error
-/// lists the valid names. A subset keeps the user's order (duplicates
-/// included, as before).
-pub fn resolve_scenarios(names: &[String])
+/// Resolve CLI scenario names to specs under `backend`. An empty list or
+/// any `"all"` selects the registry — minus the `sim_only` scenarios
+/// when the backend is analytic, which keeps the default artifact
+/// byte-identical to its pre-backend shape. **Every** given name is
+/// validated first, so a typo can never silently run the wrong suite;
+/// the error lists the valid names, and naming a `sim_only` scenario
+/// under the analytic backend errors with a pointer to `--cost sim`.
+/// A subset keeps the user's order (duplicates included, as before).
+pub fn resolve_scenarios(names: &[String], backend: CostBackend)
     -> Result<(Vec<ScenarioSpec>, bool)>
 {
     let all = all_scenarios();
@@ -151,8 +184,22 @@ pub fn resolve_scenarios(names: &[String])
             valid.join(", ")
         );
     }
+    if backend == CostBackend::Analytic {
+        if let Some(blocked) = names.iter().find(|n| {
+            all.iter().any(|s| s.name == n.as_str() && s.sim_only)
+        }) {
+            anyhow::bail!(
+                "scenario {blocked:?} measures shared-link contention and \
+                 only runs on the discrete-event backend; add --cost sim"
+            );
+        }
+    }
     if names.is_empty() || names.iter().any(|n| n == "all") {
-        return Ok((all, true));
+        let specs: Vec<ScenarioSpec> = all
+            .into_iter()
+            .filter(|s| backend == CostBackend::Simulated || !s.sim_only)
+            .collect();
+        return Ok((specs, true));
     }
     let picked: Vec<ScenarioSpec> = names
         .iter()
@@ -166,10 +213,12 @@ pub fn resolve_scenarios(names: &[String])
     Ok((picked, false))
 }
 
-/// Run every scenario with one seed, serially, under the standard four
-/// systems.
+/// Run every analytic-backend scenario with one seed, serially, under
+/// the standard four systems.
 pub fn run_all(seed: u64) -> Result<Vec<ScenarioResult>> {
-    run_specs(&all_scenarios(), seed, 1, &PlannerRegistry::standard())
+    let (specs, _) = resolve_scenarios(&[], CostBackend::Analytic)?;
+    run_specs(&specs, seed, 1, &PlannerRegistry::standard(),
+              CostBackend::Analytic)
 }
 
 /// Lowercase ascii-alnum slug for entry names: `"OPT (175B)"` →
@@ -336,8 +385,8 @@ fn planet_finish(fleet: &Fleet, eval: &SystemEval)
 /// WAN degradation ×1..×8; the ×4 WAN gets the full system comparison.
 /// Each factor is evaluated exactly once (no second pass through the
 /// sweep for the table).
-fn wan_degradation(seed: u64, planners: &PlannerRegistry)
-    -> Result<ScenarioResult>
+fn wan_degradation(seed: u64, planners: &PlannerRegistry,
+                   backend: CostBackend) -> Result<ScenarioResult>
 {
     let workload = ModelSpec::paper_four();
     let mut entries = Vec::new();
@@ -346,8 +395,9 @@ fn wan_degradation(seed: u64, planners: &PlannerRegistry)
     let mut x4_render = String::new();
     for factor in [1.0, 2.0, 4.0, 8.0] {
         let fleet = Fleet::paper_evaluation(seed).with_wan_scaled(factor);
-        let eval = evaluate_with(planners, &fleet, &workload,
-                                 HulkSplitterKind::Oracle)?;
+        let eval = evaluate_with_backend(planners, &fleet, &workload,
+                                         HulkSplitterKind::Oracle,
+                                         backend)?;
         entries.push(BenchEntry::new(
             format!("wan_degradation/x{factor:.0}/hulk_improvement_pct"),
             eval.hulk_improvement() * 100.0,
@@ -357,8 +407,10 @@ fn wan_degradation(seed: u64, planners: &PlannerRegistry)
                 format!("{:.1}%", eval.hulk_improvement() * 100.0)]);
         if factor == 4.0 {
             entries.extend(eval_entries("wan_degradation/x4", &eval));
+            entries.extend(exec_entries("wan_degradation/x4", &eval));
             placements = placement_entries("wan_degradation/x4", &eval);
-            x4_render = eval.render();
+            x4_render = format!("{}{}", eval.render(),
+                                eval.render_exec());
         }
     }
     let rendered = format!(
@@ -375,12 +427,13 @@ fn wan_degradation(seed: u64, planners: &PlannerRegistry)
 }
 
 /// Fleet growth 12→46 plus the Fig. 6 scale-out join.
-fn fleet_growth(seed: u64, planners: &PlannerRegistry)
-    -> Result<ScenarioResult>
+fn fleet_growth(seed: u64, planners: &PlannerRegistry,
+                backend: CostBackend) -> Result<ScenarioResult>
 {
     let workload = ModelSpec::paper_four();
     let sizes = [12usize, 16, 24, 32, 46];
-    let points = fleet_size_sweep(planners, seed, &sizes, &workload)?;
+    let points =
+        fleet_size_sweep(planners, backend, seed, &sizes, &workload)?;
     let mut entries = Vec::new();
     let mut t = Table::new(&["servers", "Hulk improvement"]);
     for p in &points {
@@ -397,10 +450,11 @@ fn fleet_growth(seed: u64, planners: &PlannerRegistry)
     // fleet.
     let mid = truncated_fleet(&Fleet::paper_evaluation(seed), 24);
     let mid_workload = feasible_workload(&mid, &workload);
-    let eval = evaluate_with(planners, &mid, &mid_workload,
-                             HulkSplitterKind::Oracle)?;
+    let eval = evaluate_with_backend(planners, &mid, &mid_workload,
+                                     HulkSplitterKind::Oracle, backend)?;
     entries.extend(eval_entries("fleet_growth/n24", &eval));
     entries.push(improvement_entry("fleet_growth/n24", &eval));
+    entries.extend(exec_entries("fleet_growth/n24", &eval));
     let placements = placement_entries("fleet_growth/n24", &eval);
 
     // Fig. 6: node 45 {Rome, 7, 384} joins the 45-server system.
@@ -445,8 +499,8 @@ fn fleet_growth(seed: u64, planners: &PlannerRegistry)
 /// Five machine failures against the leader's recovery policy, then the
 /// registered planners re-evaluated on the surviving fleet, plus a DES
 /// run with a mid-iteration failure (when a Hulk planner is registered).
-fn failure_storm(seed: u64, planners: &PlannerRegistry)
-    -> Result<ScenarioResult>
+fn failure_storm(seed: u64, planners: &PlannerRegistry,
+                 backend: CostBackend) -> Result<ScenarioResult>
 {
     let fleet = Fleet::paper_evaluation(seed);
     let mut coordinator = Coordinator::new(fleet.clone());
@@ -506,8 +560,8 @@ fn failure_storm(seed: u64, planners: &PlannerRegistry)
     // model; deterministically shed largest-first until Algorithm 1
     // accepts (paper: such tasks queue until resources return).
     let eval = loop {
-        match evaluate_with(planners, &survivors, &workload,
-                            HulkSplitterKind::Oracle) {
+        match evaluate_with_backend(planners, &survivors, &workload,
+                                    HulkSplitterKind::Oracle, backend) {
             Ok(eval) => break eval,
             Err(_) if workload.len() > 1 => {
                 workload.remove(0);
@@ -517,6 +571,7 @@ fn failure_storm(seed: u64, planners: &PlannerRegistry)
     };
     entries.extend(eval_entries("failure_storm/survivors", &eval));
     entries.push(improvement_entry("failure_storm/survivors", &eval));
+    entries.extend(exec_entries("failure_storm/survivors", &eval));
     let placements = placement_entries("failure_storm/survivors", &eval);
 
     // DES: interrupt the largest surviving Hulk pipeline mid-iteration.
@@ -595,15 +650,17 @@ fn failure_storm(seed: u64, planners: &PlannerRegistry)
 /// planner plans and prices the model alone (their defining weakness in
 /// a multi-tenant setting is getting the whole fleet per model).
 fn baseline_rows(planners: &PlannerRegistry, fleet: &Fleet,
-                 graph: &ClusterGraph, prefix: &str, model: &ModelSpec,
-                 entries: &mut Vec<BenchEntry>) -> Result<()>
+                 graph: &ClusterGraph, backend: CostBackend, prefix: &str,
+                 model: &ModelSpec, entries: &mut Vec<BenchEntry>)
+    -> Result<()>
 {
     let single = [model.clone()];
     let ctx = PlanContext::new(fleet, graph, &single,
-                               HulkSplitterKind::Oracle);
+                               HulkSplitterKind::Oracle)
+        .with_backend(backend);
     for planner in planners.baselines() {
         let placement = planner.plan(&ctx)?;
-        let cost = planner.cost(&ctx, &placement, 0);
+        let cost = planner.price(&ctx, &placement).per_task[0];
         if cost.is_feasible() {
             entries.push(BenchEntry::new(
                 format!("{prefix}/{}/{}/iter_ms", planner.slug(),
@@ -618,8 +675,10 @@ fn baseline_rows(planners: &PlannerRegistry, fleet: &Fleet,
 
 /// Six models arriving as a stream through the leader loop, with a
 /// mid-stream machine failure; baselines costed on the same arrivals.
-fn multi_tenant(seed: u64, planners: &PlannerRegistry)
-    -> Result<ScenarioResult>
+/// (The leader's own per-group pricing is analytic by construction; the
+/// backend reaches the baseline comparison rows.)
+fn multi_tenant(seed: u64, planners: &PlannerRegistry,
+                backend: CostBackend) -> Result<ScenarioResult>
 {
     let fleet = Fleet::paper_evaluation(seed);
     let mut rng = Rng::new(seed ^ 0x4D54_454E_414E); // "MTENAN"
@@ -673,8 +732,8 @@ fn multi_tenant(seed: u64, planners: &PlannerRegistry)
     // defining weakness in a multi-tenant setting.
     let graph = ClusterGraph::from_fleet(&fleet);
     for model in &arrivals {
-        baseline_rows(planners, &fleet, &graph, "multi_tenant", model,
-                      &mut entries)?;
+        baseline_rows(planners, &fleet, &graph, backend, "multi_tenant",
+                      model, &mut entries)?;
     }
 
     let arrival_names: Vec<&str> =
@@ -714,8 +773,8 @@ fn poisson(rng: &mut Rng, lambda: f64) -> usize {
 /// draws `Poisson(λ)` arrivals from the small/mid model catalog, two
 /// machines die mid-storm, and the queue drains under a bounded tick
 /// budget — so total leader events are bounded regardless of seed.
-fn burst_arrivals(seed: u64, planners: &PlannerRegistry)
-    -> Result<ScenarioResult>
+fn burst_arrivals(seed: u64, planners: &PlannerRegistry,
+                  backend: CostBackend) -> Result<ScenarioResult>
 {
     const SLOTS: usize = 24;
     const LAMBDA: f64 = 0.75;
@@ -817,7 +876,7 @@ fn burst_arrivals(seed: u64, planners: &PlannerRegistry)
             continue;
         }
         seen.push(task.model.name);
-        baseline_rows(planners, &fleet, &graph, "burst_arrivals",
+        baseline_rows(planners, &fleet, &graph, backend, "burst_arrivals",
                       &task.model, &mut entries)?;
     }
 
@@ -840,6 +899,162 @@ fn burst_arrivals(seed: u64, planners: &PlannerRegistry)
     })
 }
 
+/// The two-region contention fleet: twelve A100 servers split evenly
+/// between Beijing and California, so **every** cross-region byte of
+/// every task crosses the same trans-Pacific link.
+fn pacific_fleet(seed: u64) -> Fleet {
+    let machines: Vec<Machine> = (0..12)
+        .map(|i| {
+            let region = if i < 6 { Region::Beijing }
+                         else { Region::California };
+            Machine::new(i, region, GpuModel::A100, 8)
+        })
+        .collect();
+    Fleet::new(machines, WanModel::new(seed))
+}
+
+/// Five models training concurrently on the two-region fleet. Only the
+/// discrete-event backend can see the story here: System B's id-order
+/// pipelines all straddle the Pacific and queue on the one shared link,
+/// while Hulk's regional groups barely touch it. The incoming backend is
+/// ignored — contention *is* the subject, so pricing is pinned to the
+/// simulator ([`resolve_scenarios`] only admits this scenario under
+/// `--cost sim` anyway).
+fn contended_links(seed: u64, planners: &PlannerRegistry,
+                   _backend: CostBackend) -> Result<ScenarioResult>
+{
+    let fleet = pacific_fleet(seed);
+    let workload = vec![ModelSpec::t5_11b(), ModelSpec::gpt2_xl(),
+                        ModelSpec::roberta_large(), ModelSpec::bert_large(),
+                        ModelSpec::xlnet_large()];
+    let eval = evaluate_with_backend(planners, &fleet, &workload,
+                                     HulkSplitterKind::Oracle,
+                                     CostBackend::Simulated)?;
+    let mut entries = eval_entries("contended_links", &eval);
+    entries.push(improvement_entry("contended_links", &eval));
+    entries.extend(exec_entries("contended_links", &eval));
+    // The trans-Pacific link, per system: the scenario's headline row.
+    let mut t = Table::new(&["System", "pacific busy", "utilization"]);
+    for (meta, exec) in eval.systems.iter().zip(&eval.exec) {
+        let Some(exec) = exec else { continue };
+        let pacific = exec
+            .links
+            .iter()
+            .find(|l| l.connects(Region::Beijing, Region::California));
+        let (busy, util) = pacific
+            .map(|l| (l.busy_ms, l.utilization))
+            .unwrap_or((0.0, 0.0));
+        entries.push(BenchEntry::new(
+            format!("contended_links/{}/sim/pacific_utilization_pct",
+                    meta.slug),
+            util * 100.0,
+            "%",
+        ));
+        t.row(&[meta.name.to_string(), fmt_ms(busy),
+                format!("{:.0}%", util * 100.0)]);
+    }
+    let placements = placement_entries("contended_links", &eval);
+    let rendered = format!(
+        "two-region fleet: 6 Beijing + 6 California A100 servers, one \
+         shared trans-Pacific link, {} concurrent tasks\n{}{}\
+         — trans-Pacific link —\n{}\nHulk improvement under contention: \
+         {:.1}%\n",
+        eval.models.len(),
+        eval.render(),
+        eval.render_exec(),
+        t.render(),
+        eval.hulk_improvement() * 100.0
+    );
+    Ok(ScenarioResult {
+        scenario: "contended_links",
+        entries,
+        placements,
+        rendered,
+    })
+}
+
+/// The same Table 1 fleet and workload priced by both backends: reports
+/// the per-system gap between closed-form pricing and contended
+/// execution, and whether the system *ranking* survives. The incoming
+/// backend is ignored — comparing the two backends is the scenario.
+fn sim_vs_analytic(seed: u64, planners: &PlannerRegistry,
+                   _backend: CostBackend) -> Result<ScenarioResult>
+{
+    let fleet = Fleet::paper_evaluation(seed);
+    let workload = ModelSpec::paper_four();
+    let analytic = evaluate_with_backend(planners, &fleet, &workload,
+                                         HulkSplitterKind::Oracle,
+                                         CostBackend::Analytic)?;
+    let sim = evaluate_with_backend(planners, &fleet, &workload,
+                                    HulkSplitterKind::Oracle,
+                                    CostBackend::Simulated)?;
+    let mut entries = Vec::new();
+    let mut t = Table::new(&["System", "analytic Σ", "sim Σ", "gap"]);
+    for (s, meta) in analytic.systems.iter().enumerate() {
+        let total = |eval: &SystemEval| -> f64 {
+            eval.costs
+                .iter()
+                .map(|row| row[s])
+                .filter(IterCost::is_feasible)
+                .map(|c| c.total_ms())
+                .sum()
+        };
+        let a_total = total(&analytic);
+        let s_total = total(&sim);
+        entries.push(BenchEntry::new(
+            format!("sim_vs_analytic/{}/analytic_total_ms", meta.slug),
+            a_total,
+            "ms",
+        ));
+        entries.push(BenchEntry::new(
+            format!("sim_vs_analytic/{}/sim_total_ms", meta.slug),
+            s_total,
+            "ms",
+        ));
+        let gap = if a_total > 0.0 { s_total / a_total } else { 0.0 };
+        entries.push(BenchEntry::new(
+            format!("sim_vs_analytic/{}/contention_gap_x", meta.slug),
+            gap,
+            "x",
+        ));
+        t.row(&[meta.name.to_string(), fmt_ms(a_total), fmt_ms(s_total),
+                format!("{gap:.2}×")]);
+    }
+    entries.extend(exec_entries("sim_vs_analytic", &sim));
+    // Does the per-model winner agree between the backends?
+    let winner = |eval: &SystemEval, m: usize| -> usize {
+        (0..eval.systems.len())
+            .min_by(|&x, &y| {
+                eval.costs[m][x]
+                    .total_ms()
+                    .total_cmp(&eval.costs[m][y].total_ms())
+            })
+            .expect("non-empty registry")
+    };
+    let agreements = (0..analytic.models.len())
+        .filter(|&m| winner(&analytic, m) == winner(&sim, m))
+        .count();
+    entries.push(BenchEntry::new(
+        "sim_vs_analytic/ranking_agreements",
+        agreements as f64,
+        "count",
+    ));
+    let placements = placement_entries("sim_vs_analytic", &sim);
+    let rendered = format!(
+        "— analytic vs contended execution (Table 1 fleet) —\n{}{}\
+         per-model winner agreement: {agreements}/{} models\n",
+        t.render(),
+        sim.render_exec(),
+        analytic.models.len()
+    );
+    Ok(ScenarioResult {
+        scenario: "sim_vs_analytic",
+        entries,
+        placements,
+        rendered,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -856,7 +1071,7 @@ mod tests {
     #[test]
     fn registry_is_populated_with_unique_names() {
         let scenarios = all_scenarios();
-        assert!(scenarios.len() >= 8);
+        assert!(scenarios.len() >= 10);
         let mut names: Vec<&str> =
             scenarios.iter().map(|s| s.name).collect();
         names.sort_unstable();
@@ -865,12 +1080,23 @@ mod tests {
         assert!(find_scenario("table1_fleet").is_some());
         assert!(find_scenario("planet_scale").is_some());
         assert!(find_scenario("burst_arrivals").is_some());
+        assert!(find_scenario("contended_links").is_some());
+        assert!(find_scenario("sim_vs_analytic").is_some());
         assert!(find_scenario("no_such_scenario").is_none());
+        // Exactly the two contention studies are sim-only.
+        let sim_only: Vec<&str> = scenarios
+            .iter()
+            .filter(|s| s.sim_only)
+            .map(|s| s.name)
+            .collect();
+        assert_eq!(sim_only, vec!["contended_links", "sim_vs_analytic"]);
     }
 
     #[test]
     fn resolve_rejects_unknown_names_with_the_valid_list() {
-        let err = resolve_scenarios(&["bogus".to_string()]).unwrap_err();
+        let err = resolve_scenarios(&["bogus".to_string()],
+                                    CostBackend::Analytic)
+            .unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("bogus"), "{msg}");
         for s in all_scenarios() {
@@ -879,26 +1105,132 @@ mod tests {
         // Unknown names are rejected even when `all` rides along — no
         // silent success path for typos.
         let err = resolve_scenarios(&["all".to_string(),
-                                      "bogus".to_string()])
+                                      "bogus".to_string()],
+                                    CostBackend::Analytic)
             .unwrap_err();
         assert!(err.to_string().contains("bogus"));
     }
 
     #[test]
-    fn resolve_selects_all_or_subset() {
-        let (specs, ran_all) = resolve_scenarios(&[]).unwrap();
-        assert!(ran_all);
-        assert_eq!(specs.len(), all_scenarios().len());
+    fn resolve_selects_all_or_subset_per_backend() {
+        // Analytic `all` excludes the sim-only contention studies, so
+        // the default artifact keeps its historical shape.
         let (specs, ran_all) =
-            resolve_scenarios(&["all".to_string()]).unwrap();
+            resolve_scenarios(&[], CostBackend::Analytic).unwrap();
+        assert!(ran_all);
+        assert_eq!(specs.len(), all_scenarios().len() - 2);
+        assert!(specs.iter().all(|s| !s.sim_only));
+        let (specs, ran_all) = resolve_scenarios(&["all".to_string()],
+                                                 CostBackend::Analytic)
+            .unwrap();
+        assert!(ran_all);
+        assert_eq!(specs.len(), all_scenarios().len() - 2);
+        // The simulated backend runs the complete registry.
+        let (specs, ran_all) =
+            resolve_scenarios(&[], CostBackend::Simulated).unwrap();
         assert!(ran_all);
         assert_eq!(specs.len(), all_scenarios().len());
+        // Subsets keep the user's order.
         let names = vec!["hetero_gpu".to_string(),
                          "table1_fleet".to_string()];
-        let (specs, ran_all) = resolve_scenarios(&names).unwrap();
+        let (specs, ran_all) =
+            resolve_scenarios(&names, CostBackend::Analytic).unwrap();
         assert!(!ran_all);
         let picked: Vec<&str> = specs.iter().map(|s| s.name).collect();
         assert_eq!(picked, vec!["hetero_gpu", "table1_fleet"]);
+    }
+
+    #[test]
+    fn sim_only_scenarios_demand_the_sim_backend() {
+        let err = resolve_scenarios(&["contended_links".to_string()],
+                                    CostBackend::Analytic)
+            .unwrap_err();
+        assert!(err.to_string().contains("--cost sim"), "{err}");
+        let (specs, _) =
+            resolve_scenarios(&["sim_vs_analytic".to_string(),
+                                "contended_links".to_string()],
+                              CostBackend::Simulated)
+                .unwrap();
+        assert_eq!(specs.len(), 2);
+    }
+
+    #[test]
+    fn contended_links_shows_the_pacific_bottleneck() {
+        let planners = PlannerRegistry::standard();
+        let result = find_scenario("contended_links")
+            .unwrap()
+            .run_with_backend(0, &planners, CostBackend::Simulated)
+            .unwrap();
+        let get = |name: &str| -> Option<f64> {
+            result
+                .entries
+                .iter()
+                .find(|e| e.name == name)
+                .map(|e| e.value)
+        };
+        // System B's id-order pipelines straddle the Pacific for every
+        // task; Hulk's regional grouping barely touches it.
+        let b = get("contended_links/system_b/sim/pacific_utilization_pct")
+            .expect("system_b pacific row");
+        let hulk =
+            get("contended_links/hulk/sim/pacific_utilization_pct")
+                .expect("hulk pacific row");
+        assert!(b > hulk, "pacific util: B {b}% vs Hulk {hulk}%");
+        let improvement =
+            get("contended_links/hulk_improvement_pct").unwrap();
+        assert!(improvement > 0.0,
+                "Hulk loses under contention: {improvement}%");
+        // Deterministic across repeat runs.
+        let again = find_scenario("contended_links")
+            .unwrap()
+            .run_with_backend(0, &planners, CostBackend::Simulated)
+            .unwrap();
+        let rows = |r: &ScenarioResult| -> Vec<(String, f64)> {
+            r.entries.iter().map(|e| (e.name.clone(), e.value)).collect()
+        };
+        assert_eq!(rows(&result), rows(&again));
+    }
+
+    #[test]
+    fn sim_vs_analytic_reports_gaps_and_ranking_agreement() {
+        let planners = PlannerRegistry::standard();
+        let result = find_scenario("sim_vs_analytic")
+            .unwrap()
+            .run_with_backend(0, &planners, CostBackend::Simulated)
+            .unwrap();
+        let gap = |slug: &str| -> f64 {
+            result
+                .entries
+                .iter()
+                .find(|e| {
+                    e.name
+                        == format!("sim_vs_analytic/{slug}/contention_gap_x")
+                })
+                .unwrap_or_else(|| panic!("no gap row for {slug}"))
+                .value
+        };
+        // Systems A and C lower to the exact closed form when alone, so
+        // cross-task contention can only push them ABOVE 1 — and on the
+        // table1 workload their tasks genuinely overlap.
+        assert!(gap("system_a") > 1.0, "A gap {}", gap("system_a"));
+        assert!(gap("system_c") > 1.0, "C gap {}", gap("system_c"));
+        // Hulk: disjoint groups — no cross-task contention, so the gap
+        // is just the GPipe execution-vs-formula factor.
+        assert!(gap("hulk") > 0.2 && gap("hulk") < 5.0,
+                "hulk gap {}", gap("hulk"));
+        // System B's analytic model serializes all boundary traffic
+        // (2KΣ) while execution overlaps distinct links, so its gap may
+        // legitimately land below 1; only sanity is asserted.
+        assert!(gap("system_b").is_finite() && gap("system_b") > 0.0,
+                "B gap {}", gap("system_b"));
+        let agreements = result
+            .entries
+            .iter()
+            .find(|e| e.name == "sim_vs_analytic/ranking_agreements")
+            .expect("agreement row");
+        // Hulk wins every model under both backends on the Table 1
+        // fleet, so the winner agrees on every row.
+        assert_eq!(agreements.value, 4.0);
     }
 
     #[test]

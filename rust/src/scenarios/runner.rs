@@ -14,12 +14,19 @@
 //! [`PlannerRegistry::standard`] (the paper's four, byte-identical
 //! artifacts to the pre-seam engine).
 //!
+//! Which backend prices the cells is the caller's
+//! [`CostBackend`] — `--cost analytic` (the default, closed-form
+//! formulas) or `--cost sim` (whole-placement discrete-event execution
+//! with shared WAN-link contention, plus per-system contention digests
+//! in the entries and the rendering).
+//!
 //! Determinism contract: every cell is a pure function of
-//! `(spec, planner, seed)` — no wall clock, no global state — and the
-//! merge order is fixed by the spec list and the registry, not by
-//! completion order. Therefore `hulk scenarios run all --json
+//! `(spec, planner, seed, backend)` — no wall clock, no global state —
+//! and the merge order is fixed by the spec list and the registry, not
+//! by completion order. Therefore `hulk scenarios run all --json
 //! --parallel` writes a `BENCH_scenarios.json` that is byte-identical
-//! to the serial run's, which CI enforces as a gate.
+//! to the serial run's (for either backend), which CI enforces as a
+//! gate.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -31,8 +38,9 @@ use crate::cluster::Fleet;
 use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
 use crate::parallel::IterCost;
-use crate::planner::{HulkSplitterKind, PlacementSummary, PlanContext,
-                     Planner, PlannerRegistry};
+use crate::planner::{CostBackend, ExecReport, HulkSplitterKind,
+                     PlacementSummary, PlanContext, Planner,
+                     PlannerRegistry};
 
 use super::evaluate::SystemEval;
 
@@ -75,8 +83,10 @@ pub enum ScenarioBody {
     },
     /// Anything more elaborate (leader-loop streams, failure storms,
     /// multi-step sweeps): a single opaque cell. Receives the planner
-    /// registry so its baseline comparisons honor `--systems` filters.
-    Custom(fn(u64, &PlannerRegistry) -> Result<ScenarioResult>),
+    /// registry so its baseline comparisons honor `--systems` filters,
+    /// and the [`CostBackend`] so `--cost sim` prices its evaluations by
+    /// execution.
+    Custom(fn(u64, &PlannerRegistry, CostBackend) -> Result<ScenarioResult>),
 }
 
 /// A registered scenario: definition as data, executed by [`run_specs`].
@@ -86,6 +96,12 @@ pub struct ScenarioSpec {
     pub description: &'static str,
     pub seed: SeedPolicy,
     pub body: ScenarioBody,
+    /// Scenarios that only make sense under shared-link contention
+    /// (`contended_links`, `sim_vs_analytic`): excluded from analytic
+    /// `all` runs so the default artifact keeps its historical shape,
+    /// and rejected with a pointer to `--cost sim` when named
+    /// explicitly under the analytic backend.
+    pub sim_only: bool,
 }
 
 /// Output of one scenario run.
@@ -103,17 +119,26 @@ pub struct ScenarioResult {
 }
 
 impl ScenarioSpec {
-    /// Run this scenario alone, serially, under the standard planners.
+    /// Run this scenario alone, serially, under the standard planners
+    /// and the analytic backend.
     pub fn run(&self, seed: u64) -> Result<ScenarioResult> {
         self.run_with(seed, &PlannerRegistry::standard())
     }
 
-    /// Run this scenario alone, serially, under `planners`.
+    /// Run this scenario alone, serially, under `planners` (analytic
+    /// backend).
     pub fn run_with(&self, seed: u64, planners: &PlannerRegistry)
         -> Result<ScenarioResult>
     {
-        let mut results =
-            run_specs(std::slice::from_ref(self), seed, 1, planners)?;
+        self.run_with_backend(seed, planners, CostBackend::Analytic)
+    }
+
+    /// Run this scenario alone, serially, under `planners` × `backend`.
+    pub fn run_with_backend(&self, seed: u64, planners: &PlannerRegistry,
+                            backend: CostBackend) -> Result<ScenarioResult>
+    {
+        let mut results = run_specs(std::slice::from_ref(self), seed, 1,
+                                    planners, backend)?;
         Ok(results.remove(0))
     }
 
@@ -128,9 +153,9 @@ impl ScenarioSpec {
 
 /// One executed cell's output.
 enum CellOut {
-    /// Per-model costs + placement digest for a single planner
-    /// (canonical task order).
-    Column(Vec<IterCost>, PlacementSummary),
+    /// Per-model costs + placement digest + (simulated-backend)
+    /// execution report for a single planner (canonical task order).
+    Column(Vec<IterCost>, PlacementSummary, Option<ExecReport>),
     /// A complete custom scenario result.
     Whole(ScenarioResult),
 }
@@ -155,24 +180,27 @@ fn eval_inputs(fleet: fn(u64) -> Fleet,
     (fl, wl)
 }
 
-/// Execute one cell. Pure in `(spec, cell_idx, seed, planners)`.
+/// Execute one cell. Pure in `(spec, cell_idx, seed, planners, backend)`.
 fn run_cell(spec: &ScenarioSpec, cell_idx: usize, seed: u64,
-            planners: &PlannerRegistry) -> Result<CellOut>
+            planners: &PlannerRegistry, backend: CostBackend)
+    -> Result<CellOut>
 {
     let eff = spec.seed.apply(seed);
     match &spec.body {
-        ScenarioBody::Custom(f) => Ok(CellOut::Whole(f(eff, planners)?)),
+        ScenarioBody::Custom(f) => {
+            Ok(CellOut::Whole(f(eff, planners, backend)?))
+        }
         ScenarioBody::Evaluate { fleet, workload, .. } => {
             let (fl, wl) = eval_inputs(*fleet, *workload, eff);
             let graph = ClusterGraph::from_fleet(&fl);
             let ctx = PlanContext::new(&fl, &graph, &wl,
-                                       HulkSplitterKind::Oracle);
+                                       HulkSplitterKind::Oracle)
+                .with_backend(backend);
             let planner = planners.get(cell_idx);
             let placement = planner.plan(&ctx)?;
-            let costs: Vec<IterCost> = (0..wl.len())
-                .map(|t| planner.cost(&ctx, &placement, t))
-                .collect();
-            Ok(CellOut::Column(costs, placement.summary(&fl)))
+            let priced = planner.price(&ctx, &placement);
+            Ok(CellOut::Column(priced.per_task, placement.summary(&fl),
+                               priced.exec))
         }
     }
 }
@@ -196,11 +224,46 @@ pub(crate) fn placement_entries(scenario: &str, eval: &SystemEval)
     out
 }
 
+/// Execution-digest entries for one evaluated scenario — empty under the
+/// analytic backend, so analytic artifacts keep their historical shape.
+/// Also used by `Custom` bodies embedding a simulated evaluation.
+pub(crate) fn exec_entries(scenario: &str, eval: &SystemEval)
+    -> Vec<BenchEntry>
+{
+    let mut out = Vec::new();
+    for (meta, exec) in eval.systems.iter().zip(&eval.exec) {
+        let Some(exec) = exec else { continue };
+        let prefix = format!("{scenario}/{}/sim", meta.slug);
+        if exec.makespan_ms.is_finite() {
+            out.push(BenchEntry::new(format!("{prefix}/makespan_ms"),
+                                     exec.makespan_ms, "ms"));
+            out.push(BenchEntry::new(
+                format!("{prefix}/straggler_wait_ms"),
+                exec.straggler_wait_ms,
+                "ms",
+            ));
+        }
+        let max_util = exec
+            .hottest_link()
+            .map(|l| l.utilization * 100.0)
+            .unwrap_or(0.0);
+        out.push(BenchEntry::new(
+            format!("{prefix}/max_link_utilization_pct"),
+            max_util,
+            "%",
+        ));
+        out.push(BenchEntry::new(format!("{prefix}/events"),
+                                 exec.events_processed as f64, "count"));
+    }
+    out
+}
+
 /// Merge one spec's cell outputs back into a [`ScenarioResult`].
 /// Errors propagate in cell order, so the first failing cell of the
 /// first failing scenario wins — the same error a serial run reports.
 fn merge_spec(spec: &ScenarioSpec, seed: u64, planners: &PlannerRegistry,
-              outs: Vec<Result<CellOut>>) -> Result<ScenarioResult>
+              backend: CostBackend, outs: Vec<Result<CellOut>>)
+    -> Result<ScenarioResult>
 {
     match &spec.body {
         ScenarioBody::Custom(_) => {
@@ -213,11 +276,13 @@ fn merge_spec(spec: &ScenarioSpec, seed: u64, planners: &PlannerRegistry,
         ScenarioBody::Evaluate { fleet, workload, finish } => {
             let mut columns = Vec::with_capacity(planners.len());
             let mut placements = Vec::with_capacity(planners.len());
+            let mut exec = Vec::with_capacity(planners.len());
             for out in outs {
                 match out? {
-                    CellOut::Column(column, summary) => {
+                    CellOut::Column(column, summary, report) => {
                         columns.push(column);
                         placements.push(summary);
+                        exec.push(report);
                     }
                     CellOut::Whole(_) => unreachable!("eval cell → Column"),
                 }
@@ -232,8 +297,18 @@ fn merge_spec(spec: &ScenarioSpec, seed: u64, planners: &PlannerRegistry,
                 models: wl,
                 costs,
                 placements,
+                backend,
+                exec,
             };
-            let (entries, rendered) = finish(&fl, &eval);
+            let (mut entries, mut rendered) = finish(&fl, &eval);
+            // Under the simulated backend every evaluated scenario also
+            // reports its contention digest; under analytic these are
+            // no-ops, keeping the artifact byte-identical.
+            entries.extend(exec_entries(spec.name, &eval));
+            let exec_rendered = eval.render_exec();
+            if !exec_rendered.is_empty() {
+                rendered.push_str(&exec_rendered);
+            }
             Ok(ScenarioResult {
                 scenario: spec.name,
                 entries,
@@ -245,11 +320,13 @@ fn merge_spec(spec: &ScenarioSpec, seed: u64, planners: &PlannerRegistry,
 }
 
 /// Run `specs` with one CLI seed on `threads` workers (`<= 1` = inline
-/// serial execution, no threads spawned), evaluating under `planners`.
-/// Results come back in spec order with identical contents regardless of
-/// `threads` — callers may diff the serialized reports byte-for-byte.
+/// serial execution, no threads spawned), evaluating under `planners`
+/// priced by `backend`. Results come back in spec order with identical
+/// contents regardless of `threads` — callers may diff the serialized
+/// reports byte-for-byte, for either backend.
 pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize,
-                 planners: &PlannerRegistry) -> Result<Vec<ScenarioResult>>
+                 planners: &PlannerRegistry, backend: CostBackend)
+    -> Result<Vec<ScenarioResult>>
 {
     // Flatten to (spec, cell) pairs — the schedulable unit.
     let cells: Vec<(usize, usize)> = specs
@@ -270,7 +347,7 @@ pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize,
                     "cell not run: an earlier scenario cell failed")));
                 continue;
             }
-            let out = run_cell(&specs[si], ci, seed, planners);
+            let out = run_cell(&specs[si], ci, seed, planners, backend);
             failed = out.is_err();
             outs.push(out);
         }
@@ -285,7 +362,8 @@ pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize,
                 scope.spawn(|| loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     let Some(&(si, ci)) = cells.get(i) else { break };
-                    let out = run_cell(&specs[si], ci, seed, planners);
+                    let out =
+                        run_cell(&specs[si], ci, seed, planners, backend);
                     *slots[i].lock().expect("cell slot poisoned") = Some(out);
                 });
             }
@@ -307,7 +385,7 @@ pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize,
         .map(|spec| {
             let cell_outs: Vec<Result<CellOut>> =
                 outs.by_ref().take(spec.n_cells(planners)).collect();
-            merge_spec(spec, seed, planners, cell_outs)
+            merge_spec(spec, seed, planners, backend, cell_outs)
         })
         .collect()
 }
@@ -334,6 +412,7 @@ mod tests {
                     (entries, eval.render())
                 },
             },
+            sim_only: false,
         }
     }
 
@@ -365,8 +444,8 @@ mod tests {
 
     #[test]
     fn parallel_equals_serial_for_mixed_bodies() {
-        fn custom(seed: u64, _planners: &PlannerRegistry)
-            -> Result<ScenarioResult>
+        fn custom(seed: u64, _planners: &PlannerRegistry,
+                  _backend: CostBackend) -> Result<ScenarioResult>
         {
             Ok(ScenarioResult {
                 scenario: "toy_custom",
@@ -383,11 +462,16 @@ mod tests {
                 description: "custom body",
                 seed: SeedPolicy::Tagged(0xBEEF),
                 body: ScenarioBody::Custom(custom),
+                sim_only: false,
             },
         ];
         let planners = PlannerRegistry::standard();
-        let serial = run_specs(&specs, 5, 1, &planners).unwrap();
-        let parallel = run_specs(&specs, 5, 4, &planners).unwrap();
+        let serial =
+            run_specs(&specs, 5, 1, &planners, CostBackend::Analytic)
+                .unwrap();
+        let parallel =
+            run_specs(&specs, 5, 4, &planners, CostBackend::Analytic)
+                .unwrap();
         assert_eq!(serial.len(), parallel.len());
         for (a, b) in serial.iter().zip(&parallel) {
             assert_eq!(a.scenario, b.scenario);
@@ -419,13 +503,13 @@ mod tests {
 
     #[test]
     fn errors_propagate_in_spec_order() {
-        fn failing(_seed: u64, _planners: &PlannerRegistry)
-            -> Result<ScenarioResult>
+        fn failing(_seed: u64, _planners: &PlannerRegistry,
+                   _backend: CostBackend) -> Result<ScenarioResult>
         {
             anyhow::bail!("first failure")
         }
-        fn also_failing(_seed: u64, _planners: &PlannerRegistry)
-            -> Result<ScenarioResult>
+        fn also_failing(_seed: u64, _planners: &PlannerRegistry,
+                        _backend: CostBackend) -> Result<ScenarioResult>
         {
             anyhow::bail!("second failure")
         }
@@ -435,19 +519,59 @@ mod tests {
                 description: "",
                 seed: SeedPolicy::Global,
                 body: ScenarioBody::Custom(failing),
+                sim_only: false,
             },
             ScenarioSpec {
                 name: "boom_b",
                 description: "",
                 seed: SeedPolicy::Global,
                 body: ScenarioBody::Custom(also_failing),
+                sim_only: false,
             },
         ];
         let planners = PlannerRegistry::standard();
         for threads in [1, 4] {
-            let err = run_specs(&specs, 0, threads, &planners).unwrap_err();
+            let err = run_specs(&specs, 0, threads, &planners,
+                                CostBackend::Analytic)
+                .unwrap_err();
             assert!(err.to_string().contains("first failure"),
                     "threads {threads}: {err}");
         }
+    }
+
+    #[test]
+    fn simulated_backend_cells_merge_deterministically_with_digests() {
+        let specs = vec![toy_spec()];
+        let planners = PlannerRegistry::standard();
+        let serial =
+            run_specs(&specs, 3, 1, &planners, CostBackend::Simulated)
+                .unwrap();
+        let parallel =
+            run_specs(&specs, 3, 4, &planners, CostBackend::Simulated)
+                .unwrap();
+        let rows = |r: &ScenarioResult| -> Vec<(String, f64)> {
+            r.entries
+                .iter()
+                .map(|e| (e.name.clone(), e.value))
+                .collect()
+        };
+        assert_eq!(rows(&serial[0]), rows(&parallel[0]));
+        assert_eq!(serial[0].rendered, parallel[0].rendered);
+        // Every planner contributes a contention digest on top of the
+        // finish()-assembled entries.
+        for slug in ["system_a", "system_b", "system_c", "hulk"] {
+            let name = format!("toy_eval/{slug}/sim/makespan_ms");
+            assert!(serial[0].entries.iter().any(|e| e.name == name),
+                    "missing {name}");
+        }
+        assert!(serial[0].rendered.contains("simulated execution"));
+        // The analytic run of the same spec carries no sim rows at all.
+        let analytic =
+            run_specs(&specs, 3, 1, &planners, CostBackend::Analytic)
+                .unwrap();
+        assert!(analytic[0]
+            .entries
+            .iter()
+            .all(|e| !e.name.contains("/sim/")));
     }
 }

@@ -18,11 +18,10 @@ use anyhow::Result;
 use crate::cluster::{Fleet, Machine};
 use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
-use crate::parallel::pipeline_cost;
-use crate::planner::{HulkSplitterKind, PlanContext, Planner,
-                     PlannerRegistry};
+use crate::planner::{CostBackend, HulkSplitterKind, Placement,
+                     PlanContext, Planner, PlannerRegistry, TaskPlacement};
 
-use super::evaluate::evaluate_with;
+use super::evaluate::evaluate_with_backend;
 
 /// One sweep point.
 #[derive(Clone, Debug)]
@@ -57,10 +56,11 @@ pub fn feasible_workload(fleet: &Fleet, workload: &[ModelSpec])
 }
 
 /// Fleet-size sweep: truncate the evaluation fleet to its first `n`
-/// machines (re-densified ids) and re-evaluate the workload.
-pub fn fleet_size_sweep(planners: &PlannerRegistry, seed: u64,
-                        sizes: &[usize], workload: &[ModelSpec])
-    -> Result<Vec<SweepPoint>>
+/// machines (re-densified ids) and re-evaluate the workload, priced by
+/// `backend`.
+pub fn fleet_size_sweep(planners: &PlannerRegistry, backend: CostBackend,
+                        seed: u64, sizes: &[usize],
+                        workload: &[ModelSpec]) -> Result<Vec<SweepPoint>>
 {
     let full = Fleet::paper_evaluation(seed);
     let mut out = Vec::with_capacity(sizes.len());
@@ -71,8 +71,8 @@ pub fn fleet_size_sweep(planners: &PlannerRegistry, seed: u64,
         if feasible.is_empty() {
             continue;
         }
-        match evaluate_with(planners, &fleet, &feasible,
-                            HulkSplitterKind::Oracle) {
+        match evaluate_with_backend(planners, &fleet, &feasible,
+                                    HulkSplitterKind::Oracle, backend) {
             Ok(eval) => out.push(SweepPoint {
                 x: n as f64,
                 improvement: eval.hulk_improvement(),
@@ -84,10 +84,11 @@ pub fn fleet_size_sweep(planners: &PlannerRegistry, seed: u64,
 }
 
 /// Microbatch sweep: per-iteration total of one Hulk group's pipeline as
-/// K varies (the GPipe bubble-amortization curve). Requires a Hulk
-/// planner in the registry (it alone emits a grouped pipeline placement).
-pub fn microbatch_sweep(planners: &PlannerRegistry, seed: u64,
-                        model: &ModelSpec, ks: &[usize])
+/// K varies (the GPipe bubble-amortization curve), priced by `backend`.
+/// Requires a Hulk planner in the registry (it alone emits a grouped
+/// pipeline placement).
+pub fn microbatch_sweep(planners: &PlannerRegistry, backend: CostBackend,
+                        seed: u64, model: &ModelSpec, ks: &[usize])
     -> Result<Vec<SweepPoint>>
 {
     let hulk = planners.find("hulk").ok_or_else(|| {
@@ -104,15 +105,25 @@ pub fn microbatch_sweep(planners: &PlannerRegistry, seed: u64,
     for &k in ks {
         let mut p = base.clone();
         p.microbatches = k;
-        let cost = pipeline_cost(&fleet, &p, model);
+        let single = Placement {
+            per_task: vec![TaskPlacement::PipelineStages {
+                stages: p.stages,
+                layers: p.layers,
+                microbatches: p.microbatches,
+            }],
+        };
+        let cost =
+            backend.price(&fleet, workload, &single).per_task[0];
         out.push(SweepPoint { x: k as f64, improvement: cost.total_ms() });
     }
     Ok(out)
 }
 
 /// WAN-degradation sweep: scale every *inter-region* latency by `factor`
-/// and re-evaluate. Returns (factor, improvement) points.
-pub fn wan_degradation_sweep(planners: &PlannerRegistry, seed: u64,
+/// and re-evaluate, priced by `backend`. Returns (factor, improvement)
+/// points.
+pub fn wan_degradation_sweep(planners: &PlannerRegistry,
+                             backend: CostBackend, seed: u64,
                              factors: &[f64], workload: &[ModelSpec])
     -> Result<Vec<SweepPoint>>
 {
@@ -121,8 +132,9 @@ pub fn wan_degradation_sweep(planners: &PlannerRegistry, seed: u64,
         anyhow::ensure!(factor >= 1.0, "degradation factor must be ≥ 1");
         let fleet = Fleet::paper_evaluation(seed)
             .with_wan_scaled(factor);
-        let eval = evaluate_with(planners, &fleet, workload,
-                                 HulkSplitterKind::Oracle)?;
+        let eval = evaluate_with_backend(planners, &fleet, workload,
+                                         HulkSplitterKind::Oracle,
+                                         backend)?;
         out.push(SweepPoint { x: factor,
                               improvement: eval.hulk_improvement() });
     }
@@ -139,7 +151,8 @@ mod tests {
 
     #[test]
     fn fleet_size_sweep_produces_points() {
-        let points = fleet_size_sweep(&four(), 0, &[16, 24, 46],
+        let points = fleet_size_sweep(&four(), CostBackend::Analytic, 0,
+                                      &[16, 24, 46],
                                       &ModelSpec::paper_four())
             .unwrap();
         assert!(!points.is_empty());
@@ -171,8 +184,8 @@ mod tests {
 
     #[test]
     fn microbatch_sweep_amortizes_bubble() {
-        let points = microbatch_sweep(&four(), 0, &ModelSpec::gpt2_xl(),
-                                      &[1, 4, 16])
+        let points = microbatch_sweep(&four(), CostBackend::Analytic, 0,
+                                      &ModelSpec::gpt2_xl(), &[1, 4, 16])
             .unwrap();
         assert_eq!(points.len(), 3);
         // Per-iteration time is not monotone in K in general (comm grows
@@ -189,15 +202,16 @@ mod tests {
     #[test]
     fn microbatch_sweep_requires_a_hulk_planner() {
         let baselines = PlannerRegistry::resolve("a,b,c").unwrap();
-        let err = microbatch_sweep(&baselines, 0, &ModelSpec::gpt2_xl(),
-                                   &[1, 4])
+        let err = microbatch_sweep(&baselines, CostBackend::Analytic, 0,
+                                   &ModelSpec::gpt2_xl(), &[1, 4])
             .unwrap_err();
         assert!(err.to_string().contains("hulk planner"), "{err}");
     }
 
     #[test]
     fn wan_degradation_grows_the_win() {
-        let points = wan_degradation_sweep(&four(), 0, &[1.0, 4.0],
+        let points = wan_degradation_sweep(&four(), CostBackend::Analytic,
+                                           0, &[1.0, 4.0],
                                            &ModelSpec::paper_four())
             .unwrap();
         assert_eq!(points.len(), 2);
@@ -210,8 +224,21 @@ mod tests {
 
     #[test]
     fn degradation_factor_below_one_rejected() {
-        assert!(wan_degradation_sweep(&four(), 0, &[0.5],
-                                      &ModelSpec::paper_four())
+        assert!(wan_degradation_sweep(&four(), CostBackend::Analytic, 0,
+                                      &[0.5], &ModelSpec::paper_four())
             .is_err());
+    }
+
+    #[test]
+    fn simulated_microbatch_sweep_still_amortizes_the_bubble() {
+        // The unpipelined K=1 schedule serializes every stage under
+        // execution too — backend choice must not flip the curve's shape.
+        let points = microbatch_sweep(&four(), CostBackend::Simulated, 0,
+                                      &ModelSpec::gpt2_xl(), &[1, 8])
+            .unwrap();
+        assert_eq!(points.len(), 2);
+        assert!(points[0].improvement > points[1].improvement,
+                "K=1 {} vs K=8 {}", points[0].improvement,
+                points[1].improvement);
     }
 }

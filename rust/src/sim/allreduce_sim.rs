@@ -3,15 +3,21 @@
 //! (Systems A and C are built on it) and exposes the per-step traffic
 //! pattern for the ablation bench.
 //!
-//! Schedule: 2(n−1) steps; in step `s` every node `i` sends chunk
-//! `(i − s) mod n` to node `(i+1) mod n`. Steps are barrier-synchronized
-//! (as in NCCL's ring): the step completes when the slowest link does —
-//! which is precisely why a topology-oblivious ring across regions is
-//! paced by its worst edge.
+//! Since the whole-placement executor landed ([`super::cluster`]) this
+//! file is a thin lowering: the ring schedule — 2(n−1) barrier-stepped
+//! rounds in which node `i` forwards a chunk to node `(i+1) mod n`, each
+//! step paced by its slowest link — lives in
+//! [`cluster::RingProfile`](super::cluster), shared with the
+//! `Replicated`/`TensorSharded` placement lowerings. Here the collective
+//! runs *alone on dedicated links* (the contention-free validation case),
+//! and every per-link chunk completion is recorded in the
+//! [`Trace`](super::trace::Trace) as a
+//! [`TraceKind::RingStep`](super::trace::TraceKind) so traffic per ring
+//! link is inspectable.
 
-use super::engine::{Engine, Resource};
+use super::cluster::run_ring_dedicated;
+use super::trace::Trace;
 use crate::cluster::Fleet;
-use crate::parallel::cost::p2p_ms;
 
 /// Result of one simulated all-reduce.
 #[derive(Clone, Debug)]
@@ -21,80 +27,27 @@ pub struct AllReduceSimResult {
     pub step_ms: Vec<f64>,
     /// Busy time per ring link.
     pub link_busy_ms: Vec<f64>,
+    /// Per-link completions as `TraceKind::RingStep` records (empty
+    /// unless `with_trace`).
+    pub trace: Trace,
     pub events_processed: u64,
 }
 
-#[derive(Clone, Copy, Debug)]
-struct TransferDone {
-    step: usize,
-    /// Which ring link completed (kept for trace/debug output).
-    #[allow(dead_code)]
-    link: usize,
-}
-
 /// Simulate a ring all-reduce of `bytes` over `nodes` (machine ids, ring
-/// order as given). Returns `None` if any ring edge is unreachable.
-pub fn simulate_ring_allreduce(fleet: &Fleet, nodes: &[usize], bytes: f64)
+/// order as given), alone on dedicated links. With `with_trace`, the
+/// completed link of every chunk transfer is emitted into the trace.
+/// Returns `None` if any ring edge is unreachable.
+pub fn simulate_ring_allreduce(fleet: &Fleet, nodes: &[usize], bytes: f64,
+                               with_trace: bool)
     -> Option<AllReduceSimResult>
 {
-    let n = nodes.len();
-    if n <= 1 {
-        return Some(AllReduceSimResult {
-            makespan_ms: 0.0,
-            step_ms: Vec::new(),
-            link_busy_ms: Vec::new(),
-            events_processed: 0,
-        });
-    }
-    let chunk = bytes / n as f64;
-    // Per-link transfer time for one chunk.
-    let mut link_ms = Vec::with_capacity(n);
-    for k in 0..n {
-        let a = nodes[k];
-        let b = nodes[(k + 1) % n];
-        link_ms.push(p2p_ms(fleet, a, b, chunk)?);
-    }
-
-    let total_steps = 2 * (n - 1);
-    let mut engine: Engine<TransferDone> = Engine::new();
-    let mut links = vec![Resource::default(); n];
-    let mut step_ms = vec![0.0f64; total_steps];
-    let mut pending = n; // transfers outstanding in the current step
-    let mut step = 0usize;
-    let mut step_started = 0.0f64;
-
-    // Kick off step 0 on all links.
-    for (k, &ms) in link_ms.iter().enumerate() {
-        let done = links[k].occupy(0.0, ms);
-        engine.schedule(done, TransferDone { step: 0, link: k });
-    }
-
-    let mut makespan = 0.0;
-    while let Some(ev) = engine.next() {
-        debug_assert_eq!(ev.payload.step, step);
-        pending -= 1;
-        if pending == 0 {
-            // Barrier: step complete.
-            step_ms[step] = engine.now_ms() - step_started;
-            makespan = engine.now_ms();
-            step += 1;
-            if step == total_steps {
-                break;
-            }
-            step_started = engine.now_ms();
-            pending = n;
-            for (k, &ms) in link_ms.iter().enumerate() {
-                let done = links[k].occupy(engine.now_ms(), ms);
-                engine.schedule(done, TransferDone { step, link: k });
-            }
-        }
-    }
-
+    let run = run_ring_dedicated(fleet, nodes, bytes, with_trace)?;
     Some(AllReduceSimResult {
-        makespan_ms: makespan,
-        step_ms,
-        link_busy_ms: links.iter().map(|l| l.busy_ms()).collect(),
-        events_processed: engine.events_processed,
+        makespan_ms: run.makespan_ms,
+        step_ms: run.step_ms,
+        link_busy_ms: run.link_busy_ms,
+        trace: run.trace,
+        events_processed: run.events_processed,
     })
 }
 
@@ -102,6 +55,7 @@ pub fn simulate_ring_allreduce(fleet: &Fleet, nodes: &[usize], bytes: f64)
 mod tests {
     use super::*;
     use crate::parallel::ring_allreduce_ms;
+    use crate::sim::trace::TraceKind;
 
     #[test]
     fn matches_analytic_model_exactly() {
@@ -111,7 +65,9 @@ mod tests {
         for k in [2usize, 4, 8, 16] {
             let nodes: Vec<usize> = (0..k).collect();
             let bytes = 3.4e8; // BERT-large fp16 grads
-            let sim = simulate_ring_allreduce(&fleet, &nodes, bytes).unwrap();
+            let sim =
+                simulate_ring_allreduce(&fleet, &nodes, bytes, false)
+                    .unwrap();
             let analytic = ring_allreduce_ms(&fleet, &nodes, bytes).unwrap();
             assert!((sim.makespan_ms - analytic).abs() / analytic < 1e-9,
                     "k={k}: sim {} vs analytic {}", sim.makespan_ms,
@@ -122,7 +78,7 @@ mod tests {
     #[test]
     fn single_node_is_free() {
         let fleet = Fleet::paper_toy(0);
-        let r = simulate_ring_allreduce(&fleet, &[3], 1e9).unwrap();
+        let r = simulate_ring_allreduce(&fleet, &[3], 1e9, false).unwrap();
         assert_eq!(r.makespan_ms, 0.0);
         assert_eq!(r.events_processed, 0);
     }
@@ -131,9 +87,11 @@ mod tests {
     fn step_count_is_2n_minus_2() {
         let fleet = Fleet::paper_toy(0);
         let nodes = [0, 1, 2, 3, 4];
-        let r = simulate_ring_allreduce(&fleet, &nodes, 1e7).unwrap();
+        let r = simulate_ring_allreduce(&fleet, &nodes, 1e7, false).unwrap();
         assert_eq!(r.step_ms.len(), 8);
         assert!(r.step_ms.iter().all(|&s| s > 0.0));
+        // One barrier event per step.
+        assert_eq!(r.events_processed, 8);
     }
 
     #[test]
@@ -144,7 +102,10 @@ mod tests {
             crate::cluster::GpuModel::V100,
             8,
         );
-        assert!(simulate_ring_allreduce(&fleet, &[0, paris], 1e6).is_none());
+        assert!(
+            simulate_ring_allreduce(&fleet, &[0, paris], 1e6, false)
+                .is_none()
+        );
     }
 
     #[test]
@@ -152,10 +113,41 @@ mod tests {
         // Each link carries exactly 2(n−1) chunks.
         let fleet = Fleet::paper_toy(0);
         let nodes = [0, 1, 2];
-        let r = simulate_ring_allreduce(&fleet, &nodes, 3e6).unwrap();
+        let r = simulate_ring_allreduce(&fleet, &nodes, 3e6, false).unwrap();
+        assert_eq!(r.link_busy_ms.len(), 3);
         for (k, &busy) in r.link_busy_ms.iter().enumerate() {
             assert!(busy > 0.0, "link {k} never used");
         }
-        assert_eq!(r.events_processed as usize, 3 * 4);
+    }
+
+    #[test]
+    fn trace_emits_the_completed_link_of_every_chunk() {
+        let fleet = Fleet::paper_toy(0);
+        let nodes = [0, 1, 2, 3];
+        let r = simulate_ring_allreduce(&fleet, &nodes, 3e6, true).unwrap();
+        // 2(n−1) steps × n links, each completion carrying its link id.
+        assert_eq!(r.trace.len(), 6 * 4);
+        for link in 0..4 {
+            let recorded = r.trace.ring_link_busy_ms(link);
+            assert!((recorded - r.link_busy_ms[link]).abs() < 1e-9,
+                    "link {link}: trace {recorded} vs busy {}",
+                    r.link_busy_ms[link]);
+        }
+        // Steps appear in order and cover the whole schedule.
+        let steps: Vec<usize> = r
+            .trace
+            .events
+            .iter()
+            .filter_map(|e| match e.kind {
+                TraceKind::RingStep { step, .. } => Some(step),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(steps.first(), Some(&0));
+        assert_eq!(steps.last(), Some(&5));
+        // Untraced runs record nothing.
+        let quiet =
+            simulate_ring_allreduce(&fleet, &nodes, 3e6, false).unwrap();
+        assert!(quiet.trace.is_empty());
     }
 }

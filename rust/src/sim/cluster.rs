@@ -1,0 +1,918 @@
+//! The unified whole-placement executor: lowers every
+//! [`TaskPlacement`](crate::planner::TaskPlacement) variant of a
+//! [`Placement`](crate::planner::Placement) into events on the shared
+//! [`Engine`], with every **inter-region WAN link** and every **machine**
+//! modelled as a serially shared [`Resource`]. Concurrent tasks therefore
+//! contend for the same trans-continental links and the same compute — the
+//! cross-task interference the per-task closed forms in
+//! [`crate::parallel`] cannot see, and the effect that dominates when many
+//! groups train at once over a regionally distributed fleet.
+//!
+//! This module is the execution backend behind
+//! [`CostBackend::Simulated`](crate::planner::CostBackend); the historical
+//! single-schedule simulators ([`super::allreduce_sim`],
+//! [`super::pipeline_sim`]) are thin lowerings onto the machinery here.
+//!
+//! ## Lowering rules (one training iteration per task, all starting at t=0)
+//!
+//! - `Replicated {participants}` — every participant occupies its machine
+//!   for the proportional-batch compute share (the analytic 5% straggler
+//!   factor included), a barrier waits for the slowest, then a
+//!   2(n−1)-step ring all-reduce of the fp16 gradients runs step by step.
+//! - `TensorSharded {group}` — the perfectly split compute phase, then
+//!   `layers × 4` ring all-reduces of the full-batch activation tensor,
+//!   each lowered to its 2(n−1) barrier-stepped rounds.
+//! - `PipelineStages` / `Grouped` — the GPipe schedule: K forward
+//!   microbatches wave through the stages, the flush, then K backward
+//!   microbatches; stage compute occupies the (shared) machine, boundary
+//!   transfers occupy the shared WAN link of the region pair.
+//!
+//! ## Contention semantics
+//!
+//! - **Inter-region links** are one [`Resource`] per unordered region
+//!   pair: transfers from *different tasks* (or different pipeline
+//!   boundaries) crossing the same pair serialize in event order.
+//! - **Within one collective step**, a task's parallel ring edges that
+//!   map to the same region pair ride as a single bulk flow paced by the
+//!   slowest edge (NCCL-style), so a lone task reproduces the closed form
+//!   `2(n−1)·max_edge` exactly — the cross-validation contract with
+//!   `parallel::cost::ring_allreduce_ms`.
+//! - **Intra-region transfers** are pure delays on dedicated local
+//!   fabric: per-boundary private serialization for pipelines (as in the
+//!   original `pipeline_sim`), no shared metro bottleneck.
+//! - **Machines** serialize compute across tasks, so placements that hand
+//!   the whole fleet to every task (Systems A/B/C) genuinely queue.
+//!
+//! Everything is a pure function of its inputs — no wall clock, no global
+//! state — so `--cost sim` artifacts are byte-identical across serial and
+//! parallel scenario runs.
+
+use crate::cluster::{Fleet, Region};
+use crate::models::ModelSpec;
+use crate::parallel::cost::p2p_ms;
+use crate::parallel::IterCost;
+use crate::planner::{Placement, TaskPlacement};
+
+use super::engine::{Engine, Resource};
+use super::failure::{FailureOutcome, FailurePlan};
+use super::trace::{Trace, TraceKind};
+
+/// Execution options (failure injection, tracing and dedicated links are
+/// only meaningful for validation runs; the cost backend uses the
+/// defaults).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecOptions {
+    pub with_trace: bool,
+    pub failure: Option<FailurePlan>,
+    /// Route *every* pipeline boundary through a private per-boundary
+    /// resource instead of the shared WAN pair — the contention-free
+    /// validation mode [`super::simulate_pipeline`] runs in, which keeps
+    /// it numerically identical to the historical per-boundary simulator
+    /// even when one pipeline crosses the same region pair twice.
+    pub dedicated_links: bool,
+}
+
+/// Traffic observed on one inter-region WAN link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkUse {
+    pub a: Region,
+    pub b: Region,
+    pub busy_ms: f64,
+    /// `busy / makespan` (0 when the makespan is not finite-positive).
+    pub utilization: f64,
+}
+
+/// Per-task outcome of a whole-placement execution.
+#[derive(Clone, Debug)]
+pub struct TaskExec {
+    /// Simulated per-iteration cost: `total_ms()` is the task's simulated
+    /// wall-clock; `comp_ms` is the pacing machine's busy time and
+    /// `comm_ms` the residual (communication + contention + stragglers).
+    /// Tasks the analytic models reject stay [`IterCost::infeasible`] —
+    /// the two backends always agree on feasibility.
+    pub cost: IterCost,
+    /// Wall-clock finish (∞ for infeasible or interrupted tasks).
+    pub finish_ms: f64,
+    /// Total machine busy time attributed to this task.
+    pub comp_busy_ms: f64,
+    /// Total transfer time attributed to this task.
+    pub comm_busy_ms: f64,
+}
+
+/// The contention digest reported alongside the per-task costs.
+#[derive(Clone, Debug)]
+pub struct ExecReport {
+    /// Wall-clock until the last feasible task finishes (∞ if a failure
+    /// halted the run; 0 when nothing was executable).
+    pub makespan_ms: f64,
+    /// How long the earliest-finishing task waits for the last one.
+    pub straggler_wait_ms: f64,
+    /// Every inter-region link that carried traffic, region-index order.
+    pub links: Vec<LinkUse>,
+    pub events_processed: u64,
+}
+
+impl LinkUse {
+    /// Does this link connect `x` and `y` (either orientation)?
+    pub fn connects(&self, x: Region, y: Region) -> bool {
+        (self.a == x && self.b == y) || (self.a == y && self.b == x)
+    }
+}
+
+impl ExecReport {
+    /// The hottest link (by utilization), if any carried traffic.
+    pub fn hottest_link(&self) -> Option<&LinkUse> {
+        self.links.iter().max_by(|x, y| {
+            x.utilization
+                .total_cmp(&y.utilization)
+                .then_with(|| y.a.index().cmp(&x.a.index()))
+        })
+    }
+}
+
+/// A complete whole-placement execution.
+#[derive(Clone, Debug)]
+pub struct ClusterExecution {
+    /// One entry per workload task, placement order.
+    pub tasks: Vec<TaskExec>,
+    pub report: ExecReport,
+    pub failure: Option<FailureOutcome>,
+    pub trace: Trace,
+}
+
+impl ClusterExecution {
+    /// The simulated per-task costs (the `Simulated` backend's columns).
+    pub fn per_task_costs(&self) -> Vec<IterCost> {
+        self.tasks.iter().map(|t| t.cost).collect()
+    }
+}
+
+// ------------------------------------------------------------ ring core --
+
+/// The static shape of one barrier-stepped ring collective: per-edge
+/// transfer times grouped into shared-WAN bulk flows plus the intra-region
+/// delay floor. Shared by the placement executor and the dedicated
+/// all-reduce validation run.
+pub(crate) struct RingProfile {
+    /// Per ring link `k` (`nodes[k] → nodes[k+1 mod n]`): transfer ms.
+    pub edge_ms: Vec<f64>,
+    /// Distinct inter-region pairs with the pacing (max) edge time each —
+    /// one bulk-flow occupancy per pair per step.
+    pub wan_flows: Vec<(usize, f64)>,
+    /// Slowest intra-region edge (pure delay, dedicated local fabric).
+    pub intra_max_ms: f64,
+    /// Steps of one all-reduce: `2(n−1)` (0 for n ≤ 1).
+    pub steps: usize,
+    /// Σ edge transfer times (per-step traffic attribution).
+    pub sum_edge_ms: f64,
+}
+
+impl RingProfile {
+    /// Build the profile for an all-reduce of `bytes` over `nodes` in the
+    /// given ring order. `None` if any ring edge is unreachable.
+    pub(crate) fn build(fleet: &Fleet, nodes: &[usize], bytes: f64)
+        -> Option<RingProfile>
+    {
+        let n = nodes.len();
+        if n <= 1 {
+            return Some(RingProfile {
+                edge_ms: Vec::new(),
+                wan_flows: Vec::new(),
+                intra_max_ms: 0.0,
+                steps: 0,
+                sum_edge_ms: 0.0,
+            });
+        }
+        let chunk = bytes / n as f64;
+        let mut edge_ms = Vec::with_capacity(n);
+        let mut wan_flows: Vec<(usize, f64)> = Vec::new();
+        let mut intra_max_ms = 0.0f64;
+        let mut sum_edge_ms = 0.0;
+        for k in 0..n {
+            let a = nodes[k];
+            let b = nodes[(k + 1) % n];
+            let ms = p2p_ms(fleet, a, b, chunk)?;
+            sum_edge_ms += ms;
+            let ra = fleet.machines[a].region;
+            let rb = fleet.machines[b].region;
+            if ra == rb {
+                intra_max_ms = intra_max_ms.max(ms);
+            } else {
+                let pair = pair_index(ra, rb);
+                match wan_flows.iter_mut().find(|(p, _)| *p == pair) {
+                    Some((_, m)) => *m = m.max(ms),
+                    None => wan_flows.push((pair, ms)),
+                }
+            }
+            edge_ms.push(ms);
+        }
+        Some(RingProfile {
+            edge_ms,
+            wan_flows,
+            intra_max_ms,
+            steps: 2 * (n - 1),
+            sum_edge_ms,
+        })
+    }
+
+    /// Uncontended step duration: the slowest edge (bulk flows pace on
+    /// their slowest member, intra edges are pure delay).
+    pub(crate) fn step_ms(&self) -> f64 {
+        self.wan_flows
+            .iter()
+            .map(|&(_, ms)| ms)
+            .fold(self.intra_max_ms, f64::max)
+    }
+}
+
+/// Unordered region pair → dense index into the link table.
+fn pair_index(a: Region, b: Region) -> usize {
+    let (lo, hi) = if a.index() <= b.index() {
+        (a.index(), b.index())
+    } else {
+        (b.index(), a.index())
+    };
+    lo * Region::ALL.len() + hi
+}
+
+/// Outcome of one dedicated (contention-free) ring all-reduce — the
+/// validation entry point behind [`super::simulate_ring_allreduce`].
+pub(crate) struct RingRun {
+    pub makespan_ms: f64,
+    pub step_ms: Vec<f64>,
+    pub link_busy_ms: Vec<f64>,
+    pub events_processed: u64,
+    pub trace: Trace,
+}
+
+/// Run one ring all-reduce alone on dedicated links, step-barriered,
+/// emitting a [`TraceKind::RingStep`] record per completed link transfer.
+pub(crate) fn run_ring_dedicated(fleet: &Fleet, nodes: &[usize], bytes: f64,
+                                 with_trace: bool) -> Option<RingRun>
+{
+    let profile = RingProfile::build(fleet, nodes, bytes)?;
+    let mut trace =
+        if with_trace { Trace::enabled() } else { Trace::disabled() };
+    let mut link_busy_ms = vec![0.0f64; profile.edge_ms.len()];
+    let mut step_ms = Vec::with_capacity(profile.steps);
+    let mut engine: Engine<usize> = Engine::new();
+    let step_dur = profile.step_ms();
+    if profile.steps > 0 {
+        engine.schedule(step_dur, 0);
+    }
+    let mut makespan = 0.0;
+    while let Some(ev) = engine.next() {
+        let step = ev.payload;
+        let started = engine.now_ms() - step_dur;
+        for (k, &ms) in profile.edge_ms.iter().enumerate() {
+            link_busy_ms[k] += ms;
+            trace.record(started + ms,
+                         TraceKind::RingStep { link: k, step, dur_ms: ms });
+        }
+        step_ms.push(step_dur);
+        makespan = engine.now_ms();
+        if step + 1 < profile.steps {
+            engine.schedule_in(step_dur, step + 1);
+        }
+    }
+    Some(RingRun {
+        makespan_ms: makespan,
+        step_ms,
+        link_busy_ms,
+        events_processed: engine.events_processed,
+        trace,
+    })
+}
+
+// ----------------------------------------------------- placement lowering --
+
+/// Where a pipeline boundary's traffic goes.
+#[derive(Clone, Copy, Debug)]
+enum BoundaryKind {
+    /// Intra-region: private per-(task, boundary) serialization.
+    Private(usize),
+    /// Inter-region: the shared WAN link of the region pair.
+    Wan(usize),
+}
+
+/// Per-task runtime state of a lowered pipeline.
+struct PipeRt {
+    stages: Vec<usize>,
+    fwd_ms: Vec<f64>,
+    bwd_ms: Vec<f64>,
+    link_ms: Vec<f64>,
+    boundary: Vec<BoundaryKind>,
+    k: usize,
+    fwd_done_at_last: usize,
+    bwd_done_at_first: usize,
+    bwd_completed: Vec<bool>,
+}
+
+/// Per-task runtime state of a lowered collective (DP / TP).
+struct CollRt {
+    /// One all-reduce is `profile.steps` barrier-stepped rounds; DP runs
+    /// one all-reduce, TP runs `layers × 4`.
+    profile: RingProfile,
+    total_steps: usize,
+}
+
+enum TaskRt {
+    Skipped,
+    Collective(CollRt),
+    Pipeline(PipeRt),
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    /// Compute barrier of a collective task cleared.
+    ComputeDone { task: usize },
+    /// Barrier-step `step` of a collective task completed.
+    Step { task: usize, step: usize },
+    /// Activation for microbatch `mb` arrived at `stage` (compute next).
+    Fwd { task: usize, stage: usize, mb: usize },
+    Bwd { task: usize, stage: usize, mb: usize },
+    /// Stage `stage` finished computing `mb`: its outbound (fwd) /
+    /// inbound-boundary (bwd) transfer becomes *ready* now. Links are
+    /// only ever occupied at readiness time, never reserved into the
+    /// future — the queue discipline stays work-conserving under
+    /// cross-task contention.
+    FwdXfer { task: usize, stage: usize, mb: usize },
+    BwdXfer { task: usize, stage: usize, mb: usize },
+    Fail { machine: usize },
+}
+
+/// Execute one training iteration of every task of `placement`
+/// concurrently on `fleet`, honoring shared-WAN and machine contention.
+/// `workload[t]` must be the model of `placement.per_task[t]`.
+pub fn execute_placement(fleet: &Fleet, workload: &[ModelSpec],
+                         placement: &Placement) -> ClusterExecution
+{
+    execute_placement_with(fleet, workload, placement,
+                           ExecOptions::default())
+}
+
+/// [`execute_placement`] with failure injection / tracing options.
+pub fn execute_placement_with(fleet: &Fleet, workload: &[ModelSpec],
+                              placement: &Placement, opts: ExecOptions)
+    -> ClusterExecution
+{
+    assert_eq!(workload.len(), placement.n_tasks(),
+               "workload/placement task count mismatch");
+    let n_tasks = workload.len();
+    let n_regions = Region::ALL.len();
+
+    let mut engine: Engine<Ev> = Engine::new();
+    let mut machines = vec![Resource::default(); fleet.len()];
+    let mut links = vec![Resource::default(); n_regions * n_regions];
+    let mut private_links: Vec<Vec<Resource>> =
+        (0..n_tasks).map(|_| Vec::new()).collect();
+    let mut trace =
+        if opts.with_trace { Trace::enabled() } else { Trace::disabled() };
+
+    // Per-task accounting.
+    let mut machine_busy = vec![vec![0.0f64; fleet.len()]; n_tasks];
+    let mut comm_busy = vec![0.0f64; n_tasks];
+    let mut finish = vec![f64::INFINITY; n_tasks];
+    let mut active = 0usize;
+
+    // Lower every feasible task at t = 0, placement order. Feasibility is
+    // the *analytic* models' verdict, so the two backends never disagree
+    // on which (task × placement) cells are executable at all.
+    let mut runtime: Vec<TaskRt> = Vec::with_capacity(n_tasks);
+    for (t, model) in workload.iter().enumerate() {
+        let a_cost = placement.cost(fleet, model, t);
+        if !a_cost.is_feasible() {
+            runtime.push(TaskRt::Skipped);
+            continue;
+        }
+        active += 1;
+        match &placement.per_task[t] {
+            TaskPlacement::Replicated { participants } => {
+                let comp = a_cost.comp_ms;
+                let mut barrier = 0.0f64;
+                for &m in participants {
+                    let done = machines[m].occupy(0.0, comp);
+                    machine_busy[t][m] += comp;
+                    barrier = barrier.max(done);
+                }
+                let profile =
+                    RingProfile::build(fleet, participants,
+                                       model.grad_bytes())
+                        .expect("feasible DP ring");
+                let total_steps = profile.steps;
+                runtime.push(TaskRt::Collective(CollRt { profile,
+                                                         total_steps }));
+                engine.schedule(barrier, Ev::ComputeDone { task: t });
+            }
+            TaskPlacement::TensorSharded { group } => {
+                let comp = a_cost.comp_ms;
+                let mut barrier = 0.0f64;
+                for &m in group {
+                    let done = machines[m].occupy(0.0, comp);
+                    machine_busy[t][m] += comp;
+                    barrier = barrier.max(done);
+                }
+                let profile = RingProfile::build(
+                    fleet, group, model.activation_bytes(model.batch))
+                    .expect("feasible TP ring");
+                let per_layer = crate::parallel::tensor_parallel
+                    ::ALLREDUCES_PER_LAYER as usize;
+                let total_steps = model.layers * per_layer * profile.steps;
+                runtime.push(TaskRt::Collective(CollRt { profile,
+                                                         total_steps }));
+                engine.schedule(barrier, Ev::ComputeDone { task: t });
+            }
+            TaskPlacement::PipelineStages { stages, layers, microbatches }
+            | TaskPlacement::Grouped { chain: stages, layers,
+                                       microbatches, .. } => {
+                let rt = lower_pipeline(fleet, stages, layers,
+                                        *microbatches, model,
+                                        &mut private_links[t],
+                                        opts.dedicated_links);
+                for mb in 0..rt.k {
+                    engine.schedule(0.0, Ev::Fwd { task: t, stage: 0, mb });
+                }
+                runtime.push(TaskRt::Pipeline(rt));
+            }
+        }
+    }
+
+    if let Some(f) = opts.failure {
+        engine.schedule(f.at_ms, Ev::Fail { machine: f.machine });
+    }
+
+    let mut failure: Option<FailureOutcome> = None;
+    while let Some(ev) = engine.next() {
+        if active == 0 {
+            break;
+        }
+        let now = ev.time_ms;
+        match ev.payload {
+            Ev::Fail { machine } => {
+                let victim_task = (0..n_tasks).find(|&t| {
+                    !matches!(runtime[t], TaskRt::Skipped)
+                        && finish[t].is_infinite()
+                        && placement.machines(t).contains(&machine)
+                });
+                if let Some(t) = victim_task {
+                    let completed = match &runtime[t] {
+                        TaskRt::Pipeline(p) => {
+                            p.bwd_completed.iter().filter(|&&d| d).count()
+                        }
+                        _ => 0,
+                    };
+                    failure = Some(FailureOutcome {
+                        at_ms: now,
+                        machine,
+                        completed_microbatches: completed,
+                    });
+                    trace.record(now, TraceKind::Failure { machine });
+                    break;
+                }
+            }
+            Ev::ComputeDone { task } | Ev::Step { task, step: _ } => {
+                // Advance the collective to its next barrier step (or
+                // finish). The step index lives in the event only for
+                // debugging; the runtime tracks progress itself via the
+                // scheduled chain, so `next_step` derives from the event.
+                let step = match ev.payload {
+                    Ev::Step { step, .. } => step + 1,
+                    _ => 0,
+                };
+                let TaskRt::Collective(c) = &runtime[task] else {
+                    unreachable!("collective event for non-collective task")
+                };
+                if step >= c.total_steps {
+                    finish[task] = now;
+                    active -= 1;
+                    if active == 0 {
+                        break;
+                    }
+                } else {
+                    let mut barrier = now + c.profile.intra_max_ms;
+                    for &(pair, ms) in &c.profile.wan_flows {
+                        let done = links[pair].occupy(now, ms);
+                        barrier = barrier.max(done);
+                    }
+                    comm_busy[task] += c.profile.sum_edge_ms;
+                    engine.schedule(barrier, Ev::Step { task, step });
+                }
+            }
+            Ev::Fwd { task, stage, mb } => {
+                let TaskRt::Pipeline(p) = &mut runtime[task] else {
+                    unreachable!("pipeline event for non-pipeline task")
+                };
+                let m = p.stages[stage];
+                let done = machines[m].occupy(now, p.fwd_ms[stage]);
+                machine_busy[task][m] += p.fwd_ms[stage];
+                trace.record(done, TraceKind::Compute {
+                    stage, mb, backward: false, dur_ms: p.fwd_ms[stage] });
+                if stage + 1 < p.stages.len() {
+                    engine.schedule(done, Ev::FwdXfer { task, stage, mb });
+                } else {
+                    p.fwd_done_at_last += 1;
+                    if p.fwd_done_at_last == p.k {
+                        // GPipe flush: backward after the full forward
+                        // wave, last microbatch first.
+                        let last = p.stages.len() - 1;
+                        for b in (0..p.k).rev() {
+                            engine.schedule(done, Ev::Bwd { task,
+                                                            stage: last,
+                                                            mb: b });
+                        }
+                    }
+                }
+            }
+            Ev::FwdXfer { task, stage, mb } => {
+                let TaskRt::Pipeline(p) = &runtime[task] else {
+                    unreachable!("pipeline event for non-pipeline task")
+                };
+                let ms = p.link_ms[stage];
+                let arr = match p.boundary[stage] {
+                    BoundaryKind::Private(i) => {
+                        private_links[task][i].occupy(now, ms)
+                    }
+                    BoundaryKind::Wan(pair) => links[pair].occupy(now, ms),
+                };
+                comm_busy[task] += ms;
+                trace.record(arr, TraceKind::Transfer {
+                    boundary: stage, mb, backward: false, dur_ms: ms });
+                engine.schedule(arr, Ev::Fwd { task, stage: stage + 1,
+                                               mb });
+            }
+            Ev::Bwd { task, stage, mb } => {
+                let TaskRt::Pipeline(p) = &mut runtime[task] else {
+                    unreachable!("pipeline event for non-pipeline task")
+                };
+                let m = p.stages[stage];
+                let done = machines[m].occupy(now, p.bwd_ms[stage]);
+                machine_busy[task][m] += p.bwd_ms[stage];
+                trace.record(done, TraceKind::Compute {
+                    stage, mb, backward: true, dur_ms: p.bwd_ms[stage] });
+                if stage > 0 {
+                    engine.schedule(done, Ev::BwdXfer { task, stage, mb });
+                } else {
+                    p.bwd_completed[mb] = true;
+                    p.bwd_done_at_first += 1;
+                    if p.bwd_done_at_first == p.k {
+                        finish[task] = done;
+                        active -= 1;
+                        if active == 0 {
+                            break;
+                        }
+                    }
+                }
+            }
+            Ev::BwdXfer { task, stage, mb } => {
+                let TaskRt::Pipeline(p) = &runtime[task] else {
+                    unreachable!("pipeline event for non-pipeline task")
+                };
+                let ms = p.link_ms[stage - 1];
+                let arr = match p.boundary[stage - 1] {
+                    BoundaryKind::Private(i) => {
+                        private_links[task][i].occupy(now, ms)
+                    }
+                    BoundaryKind::Wan(pair) => links[pair].occupy(now, ms),
+                };
+                comm_busy[task] += ms;
+                trace.record(arr, TraceKind::Transfer {
+                    boundary: stage - 1, mb, backward: true, dur_ms: ms });
+                engine.schedule(arr, Ev::Bwd { task, stage: stage - 1,
+                                               mb });
+            }
+        }
+    }
+
+    // ------------------------------------------------------- reporting --
+    let feasible: Vec<usize> = (0..n_tasks)
+        .filter(|&t| !matches!(runtime[t], TaskRt::Skipped))
+        .collect();
+    let makespan = if feasible.is_empty() {
+        0.0
+    } else {
+        feasible.iter().map(|&t| finish[t]).fold(0.0f64, f64::max)
+    };
+    let earliest = feasible
+        .iter()
+        .map(|&t| finish[t])
+        .fold(f64::INFINITY, f64::min);
+    let straggler_wait_ms =
+        if makespan.is_finite() && earliest.is_finite() && feasible.len() > 1
+        {
+            makespan - earliest
+        } else {
+            0.0
+        };
+
+    let tasks: Vec<TaskExec> = (0..n_tasks)
+        .map(|t| {
+            if matches!(runtime[t], TaskRt::Skipped) {
+                return TaskExec {
+                    cost: IterCost::infeasible(),
+                    finish_ms: f64::INFINITY,
+                    comp_busy_ms: 0.0,
+                    comm_busy_ms: 0.0,
+                };
+            }
+            let comp_busy_ms: f64 = machine_busy[t].iter().sum();
+            let pacing = machine_busy[t]
+                .iter()
+                .cloned()
+                .fold(0.0f64, f64::max);
+            let cost = if finish[t].is_finite() {
+                IterCost { comp_ms: pacing, comm_ms: finish[t] - pacing }
+            } else {
+                IterCost::infeasible()
+            };
+            TaskExec {
+                cost,
+                finish_ms: finish[t],
+                comp_busy_ms,
+                comm_busy_ms: comm_busy[t],
+            }
+        })
+        .collect();
+
+    let mut link_uses = Vec::new();
+    for (i, &a) in Region::ALL.iter().enumerate() {
+        for (j, &b) in Region::ALL.iter().enumerate().skip(i + 1) {
+            let busy = links[i * n_regions + j].busy_ms();
+            if busy > 0.0 {
+                let utilization = if makespan.is_finite() && makespan > 0.0 {
+                    busy / makespan
+                } else {
+                    0.0
+                };
+                link_uses.push(LinkUse { a, b, busy_ms: busy,
+                                         utilization });
+            }
+        }
+    }
+
+    ClusterExecution {
+        tasks,
+        report: ExecReport {
+            makespan_ms: makespan,
+            straggler_wait_ms,
+            links: link_uses,
+            events_processed: engine.events_processed,
+        },
+        failure,
+        trace,
+    }
+}
+
+/// Lower one GPipe plan: per-stage fwd/bwd compute times (6×params split
+/// 2 fwd : 4 bwd, exactly as `parallel::pipeline`), per-boundary transfer
+/// times, and the boundary routing (private intra-region serialization
+/// vs the shared WAN link; `dedicated` forces every boundary private —
+/// the single-schedule validation mode).
+fn lower_pipeline(fleet: &Fleet, stages: &[usize], layers: &[usize],
+                  microbatches: usize, model: &ModelSpec,
+                  private: &mut Vec<Resource>, dedicated: bool) -> PipeRt
+{
+    let s = stages.len();
+    let k = microbatches;
+    let micro_batch =
+        ((model.batch as f64 / k as f64).ceil() as usize).max(1);
+    let micro_tokens = (micro_batch * model.seq_len) as f64;
+    let act_bytes = model.activation_bytes(micro_batch);
+
+    let mut fwd_ms = Vec::with_capacity(s);
+    let mut bwd_ms = Vec::with_capacity(s);
+    for (i, &m) in stages.iter().enumerate() {
+        let frac = layers[i] as f64 / model.layers as f64;
+        let flops = crate::models::FLOPS_PER_TOKEN_FACTOR
+            * model.params
+            * frac
+            * micro_tokens;
+        let total = flops / (fleet.machines[m].total_tflops() * 1e12) * 1e3;
+        fwd_ms.push(total / 3.0);
+        bwd_ms.push(total * 2.0 / 3.0);
+    }
+    let mut link_ms = Vec::with_capacity(s.saturating_sub(1));
+    let mut boundary = Vec::with_capacity(s.saturating_sub(1));
+    for i in 0..s.saturating_sub(1) {
+        let a = stages[i];
+        let b = stages[i + 1];
+        link_ms.push(p2p_ms(fleet, a, b, act_bytes)
+            .expect("feasible pipeline boundary"));
+        let ra = fleet.machines[a].region;
+        let rb = fleet.machines[b].region;
+        if dedicated || ra == rb {
+            private.push(Resource::default());
+            boundary.push(BoundaryKind::Private(private.len() - 1));
+        } else {
+            boundary.push(BoundaryKind::Wan(pair_index(ra, rb)));
+        }
+    }
+    PipeRt {
+        stages: stages.to_vec(),
+        fwd_ms,
+        bwd_ms,
+        link_ms,
+        boundary,
+        k,
+        fwd_done_at_last: 0,
+        bwd_done_at_first: 0,
+        bwd_completed: vec![false; k],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ClusterGraph;
+    use crate::parallel::{data_parallel_cost, tensor_parallel_cost};
+    use crate::planner::{HulkPlanner, PlanContext, Planner,
+                         HulkSplitterKind, SystemBPlanner};
+
+    fn dp_placement(participants: Vec<usize>) -> Placement {
+        Placement {
+            per_task: vec![TaskPlacement::Replicated { participants }],
+        }
+    }
+
+    #[test]
+    fn lone_replicated_task_matches_the_analytic_closed_form() {
+        let fleet = Fleet::paper_evaluation(0);
+        let model = ModelSpec::bert_large();
+        let participants: Vec<usize> = (0..8).collect();
+        let analytic = data_parallel_cost(&fleet, &participants, &model);
+        let run = execute_placement(&fleet, &[model],
+                                    &dp_placement(participants));
+        let sim = run.tasks[0].cost;
+        assert!((sim.comp_ms - analytic.comp_ms).abs()
+                    / analytic.comp_ms < 1e-9);
+        assert!((sim.comm_ms - analytic.comm_ms).abs()
+                    / analytic.comm_ms < 1e-9);
+        assert_eq!(run.report.straggler_wait_ms, 0.0);
+    }
+
+    #[test]
+    fn lone_tensor_task_matches_the_analytic_closed_form() {
+        let fleet = Fleet::paper_toy(0);
+        let model = ModelSpec::bert_large();
+        let group: Vec<usize> = (0..fleet.len()).collect();
+        let analytic = tensor_parallel_cost(&fleet, &group, &model);
+        let placement = Placement {
+            per_task: vec![TaskPlacement::TensorSharded { group }],
+        };
+        let run = execute_placement(&fleet, &[model], &placement);
+        let sim = run.tasks[0].cost;
+        assert!((sim.total_ms() - analytic.total_ms()).abs()
+                    / analytic.total_ms() < 1e-9,
+                "sim {} vs analytic {}", sim.total_ms(),
+                analytic.total_ms());
+    }
+
+    #[test]
+    fn infeasible_tasks_stay_infeasible_and_cost_no_events() {
+        let fleet = Fleet::paper_evaluation(0);
+        let model = ModelSpec::opt_175b(); // fits no single machine
+        let run = execute_placement(&fleet, &[model],
+                                    &dp_placement(vec![]));
+        assert!(!run.tasks[0].cost.is_feasible());
+        assert_eq!(run.report.events_processed, 0);
+        assert_eq!(run.report.makespan_ms, 0.0);
+    }
+
+    #[test]
+    fn shared_resources_make_concurrent_tasks_slower_than_lone_ones() {
+        // Two DP tasks on the SAME Beijing+California pair: they queue
+        // on the machines and on the shared trans-Pacific link, so the
+        // second task must be well slower than a lone run, and the
+        // pacific link shows up in the link report.
+        let fleet = Fleet::paper_evaluation(0);
+        let beijing = (0..fleet.len())
+            .find(|&i| fleet.machines[i].region == Region::Beijing)
+            .unwrap();
+        let california = (0..fleet.len())
+            .find(|&i| fleet.machines[i].region == Region::California)
+            .unwrap();
+        let straddle: Vec<usize> = vec![beijing, california];
+        let model = ModelSpec::bert_large();
+        let lone = execute_placement(&fleet, &[model.clone()],
+                                     &dp_placement(straddle.clone()));
+        let both = execute_placement(
+            &fleet,
+            &[model.clone(), model],
+            &Placement {
+                per_task: vec![
+                    TaskPlacement::Replicated {
+                        participants: straddle.clone(),
+                    },
+                    TaskPlacement::Replicated { participants: straddle },
+                ],
+            },
+        );
+        let lone_total = lone.tasks[0].cost.total_ms();
+        let slower = both.tasks[1].cost.total_ms();
+        assert!(slower > lone_total * 1.5,
+                "no contention visible: lone {lone_total} vs {slower}");
+        assert!(both.report.straggler_wait_ms >= 0.0);
+        assert!(both
+            .report
+            .links
+            .iter()
+            .any(|l| l.connects(Region::Beijing, Region::California)
+                && l.utilization > 0.0));
+    }
+
+    #[test]
+    fn whole_hulk_placement_executes_with_disjoint_groups() {
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let mut wl = ModelSpec::paper_four();
+        ModelSpec::sort_largest_first(&mut wl);
+        let ctx = PlanContext::new(&fleet, &graph, &wl,
+                                   HulkSplitterKind::Oracle);
+        let placement = HulkPlanner.plan(&ctx).unwrap();
+        let run = execute_placement(&fleet, &wl, &placement);
+        assert!(run.report.makespan_ms.is_finite());
+        assert!(run.report.events_processed > 0);
+        for (t, task) in run.tasks.iter().enumerate() {
+            assert!(task.cost.is_feasible(), "task {t} infeasible");
+            assert!(task.cost.comm_ms >= 0.0 && task.cost.comp_ms > 0.0);
+            assert!(task.finish_ms <= run.report.makespan_ms + 1e-9);
+        }
+        // Disjoint groups ⇒ the makespan is the slowest task, and the
+        // straggler wait is the gap to the fastest.
+        let fastest = run
+            .tasks
+            .iter()
+            .map(|t| t.finish_ms)
+            .fold(f64::INFINITY, f64::min);
+        assert!((run.report.straggler_wait_ms
+                 - (run.report.makespan_ms - fastest))
+                    .abs() < 1e-9);
+    }
+
+    #[test]
+    fn system_b_contends_harder_than_hulk_on_the_same_workload() {
+        // Every System B task pipelines over the whole fleet in id order:
+        // under whole-placement execution its tasks queue on machines and
+        // WAN links, so its makespan must exceed Hulk's (disjoint
+        // regional groups) by a wide margin.
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let mut wl = ModelSpec::paper_four();
+        ModelSpec::sort_largest_first(&mut wl);
+        let ctx = PlanContext::new(&fleet, &graph, &wl,
+                                   HulkSplitterKind::Oracle);
+        let hulk = execute_placement(&fleet, &wl,
+                                     &HulkPlanner.plan(&ctx).unwrap());
+        let b = execute_placement(&fleet, &wl,
+                                  &SystemBPlanner.plan(&ctx).unwrap());
+        assert!(b.report.makespan_ms > hulk.report.makespan_ms,
+                "B {} vs Hulk {}", b.report.makespan_ms,
+                hulk.report.makespan_ms);
+    }
+
+    #[test]
+    fn failure_halts_a_participating_task() {
+        let fleet = Fleet::paper_toy(0);
+        let model = ModelSpec::gpt2_xl();
+        let plan = crate::parallel::PipelinePlan::proportional(
+            &fleet, vec![0, 1, 2, 3], &model);
+        let placement = Placement {
+            per_task: vec![TaskPlacement::PipelineStages {
+                stages: plan.stages.clone(),
+                layers: plan.layers.clone(),
+                microbatches: plan.microbatches,
+            }],
+        };
+        let healthy = execute_placement(&fleet, &[model.clone()],
+                                        &placement);
+        let at_ms = healthy.report.makespan_ms * 0.4;
+        let run = execute_placement_with(&fleet, &[model], &placement,
+                                         ExecOptions {
+                                             failure: Some(FailurePlan {
+                                                 at_ms,
+                                                 machine: plan.stages[1],
+                                             }),
+                                             ..ExecOptions::default()
+                                         });
+        let outcome = run.failure.expect("failure observed");
+        assert_eq!(outcome.machine, plan.stages[1]);
+        assert!((outcome.at_ms - at_ms).abs() < 1e-9);
+        assert!(run.report.makespan_ms.is_infinite());
+        assert!(!run.tasks[0].cost.is_feasible());
+    }
+
+    #[test]
+    fn ring_profile_groups_wan_flows_and_paces_on_the_slowest_edge() {
+        let fleet = Fleet::paper_toy(0);
+        let nodes: Vec<usize> = (0..4).collect();
+        let profile = RingProfile::build(&fleet, &nodes, 4e6).unwrap();
+        assert_eq!(profile.edge_ms.len(), 4);
+        assert_eq!(profile.steps, 6);
+        let max_edge =
+            profile.edge_ms.iter().cloned().fold(0.0f64, f64::max);
+        assert!((profile.step_ms() - max_edge).abs() < 1e-12);
+        // Σ flows over pairs never exceeds the per-edge sum.
+        let flow_sum: f64 =
+            profile.wan_flows.iter().map(|&(_, ms)| ms).sum();
+        assert!(flow_sum <= profile.sum_edge_ms + 1e-12);
+    }
+}

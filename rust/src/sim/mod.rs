@@ -4,21 +4,34 @@
 //! times; this module *executes* the schedules event-by-event so that
 //! (a) the analytic models can be cross-validated (ablation bench),
 //! (b) failures can be injected mid-iteration (disaster recovery, §1),
-//! (c) traces can be inspected for utilization/bubble analysis.
+//! (c) traces can be inspected for utilization/bubble analysis,
+//! (d) whole placements can be **priced by execution** with shared
+//!     WAN-link and machine contention — the `--cost sim` backend
+//!     ([`crate::planner::CostBackend`]).
 //!
-//! - [`engine`] — generic event queue + clock.
-//! - [`pipeline_sim`] — GPipe schedule execution over WAN links with
-//!   per-link serialization.
+//! - [`engine`] — generic event queue + clock + shared [`Resource`]s.
+//! - [`cluster`] — the unified whole-placement executor: every
+//!   `TaskPlacement` variant lowered onto shared inter-region links and
+//!   machines (contention semantics in the module docs).
+//! - [`pipeline_sim`] — thin lowering: one GPipe schedule alone.
+//! - [`allreduce_sim`] — thin lowering: one ring all-reduce alone, with
+//!   per-link completions in the trace.
 //! - [`failure`] — failure injection plans and outcomes.
 //! - [`trace`] — event traces + utilization summaries.
+//!
+//! [`Resource`]: engine::Resource
 
 pub mod allreduce_sim;
+pub mod cluster;
 pub mod engine;
 pub mod failure;
 pub mod pipeline_sim;
 pub mod trace;
 
 pub use allreduce_sim::{simulate_ring_allreduce, AllReduceSimResult};
+pub use cluster::{execute_placement, execute_placement_with,
+                  ClusterExecution, ExecOptions, ExecReport, LinkUse,
+                  TaskExec};
 pub use engine::{Engine, Event};
 pub use failure::{FailureOutcome, FailurePlan};
 pub use pipeline_sim::{simulate_pipeline, PipelineSimResult};

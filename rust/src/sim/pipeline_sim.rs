@@ -1,17 +1,25 @@
 //! Discrete-event execution of a GPipe schedule over WAN links.
 //!
-//! Differences from the analytic model in `parallel::pipeline`:
-//! transfers genuinely serialize on links, stages genuinely idle during
-//! the flush, and failures can interrupt mid-iteration. The ablation bench
+//! Since the whole-placement executor landed ([`super::cluster`]) this
+//! file is a thin lowering: it wraps the single pipeline as a one-task
+//! [`Placement`](crate::planner::Placement) and executes it on the unified
+//! engine (machines and WAN links as shared [`Resource`]s, failure
+//! injection, traces), then projects the per-task outcome back into the
+//! historical [`PipelineSimResult`] shape. Differences from the analytic
+//! model in `parallel::pipeline` remain the point: transfers genuinely
+//! serialize on links, stages genuinely idle during the flush, and
+//! failures can interrupt mid-iteration. The ablation bench
 //! (`hulk bench ablation`) compares the two.
+//!
+//! [`Resource`]: super::engine::Resource
 
-use super::engine::{Engine, Resource};
+use super::cluster::{execute_placement_with, ExecOptions};
 use super::failure::{FailureOutcome, FailurePlan};
-use super::trace::{Trace, TraceKind};
+use super::trace::Trace;
 use crate::cluster::Fleet;
 use crate::models::ModelSpec;
-use crate::parallel::cost::p2p_ms;
-use crate::parallel::PipelinePlan;
+use crate::parallel::{pipeline_cost, PipelinePlan};
+use crate::planner::{Placement, TaskPlacement};
 
 /// Simulation outcome for one training iteration.
 #[derive(Clone, Debug)]
@@ -30,156 +38,57 @@ pub struct PipelineSimResult {
     pub events_processed: u64,
 }
 
-#[derive(Clone, Copy, Debug)]
-enum Ev {
-    FwdReady { stage: usize, mb: usize },
-    BwdReady { stage: usize, mb: usize },
-    Fail { machine: usize },
-}
-
 /// Simulate one GPipe iteration of `plan` for `model` on `fleet`.
 ///
-/// Panics if the plan's boundaries are unreachable (callers must check
-/// feasibility via `parallel::pipeline_cost` first — the simulator is for
-/// feasible plans).
+/// Panics if the plan is not executable (callers must check feasibility
+/// via `parallel::pipeline_cost` first — the simulator is for feasible
+/// plans).
 pub fn simulate_pipeline(fleet: &Fleet, plan: &PipelinePlan,
                          model: &ModelSpec, with_trace: bool,
                          failure: Option<FailurePlan>) -> PipelineSimResult
 {
+    assert!(
+        pipeline_cost(fleet, plan, model).is_feasible(),
+        "simulate_pipeline: infeasible plan (unreachable boundary or \
+         oversized stage shard) — check pipeline_cost first"
+    );
+    let placement = Placement {
+        per_task: vec![TaskPlacement::PipelineStages {
+            stages: plan.stages.clone(),
+            layers: plan.layers.clone(),
+            microbatches: plan.microbatches,
+        }],
+    };
+    let run = execute_placement_with(
+        fleet,
+        std::slice::from_ref(model),
+        &placement,
+        // Dedicated links: this is the single-schedule validation path,
+        // numerically matched to the historical per-boundary simulator.
+        ExecOptions { with_trace, failure, dedicated_links: true },
+    );
+    let task = &run.tasks[0];
     let s = plan.n_stages();
-    let k = plan.microbatches;
-    let micro_batch =
-        ((model.batch as f64 / k as f64).ceil() as usize).max(1);
-    let micro_tokens = (micro_batch * model.seq_len) as f64;
-    let act_bytes = model.activation_bytes(micro_batch);
-
-    // Per-stage fwd/bwd compute times (6×params split 2 fwd : 4 bwd).
-    let mut fwd_ms = Vec::with_capacity(s);
-    let mut bwd_ms = Vec::with_capacity(s);
-    for (i, &m) in plan.stages.iter().enumerate() {
-        let frac = plan.layers[i] as f64 / model.layers as f64;
-        let flops = crate::models::FLOPS_PER_TOKEN_FACTOR
-            * model.params
-            * frac
-            * micro_tokens;
-        let total = flops / (fleet.machines[m].total_tflops() * 1e12) * 1e3;
-        fwd_ms.push(total / 3.0);
-        bwd_ms.push(total * 2.0 / 3.0);
-    }
-    // Per-boundary transfer time for one microbatch activation.
-    let link_ms: Vec<f64> = (0..s.saturating_sub(1))
-        .map(|i| {
-            p2p_ms(fleet, plan.stages[i], plan.stages[i + 1], act_bytes)
-                .expect("simulate_pipeline: unreachable boundary")
-        })
-        .collect();
-
-    let mut engine: Engine<Ev> = Engine::new();
-    let mut stage_res = vec![Resource::default(); s];
-    let mut link_res = vec![Resource::default(); s.saturating_sub(1)];
-    let mut trace = if with_trace { Trace::enabled() } else { Trace::disabled() };
-
-    if let Some(f) = failure {
-        engine.schedule(f.at_ms, Ev::Fail { machine: f.machine });
-    }
-    for mb in 0..k {
-        engine.schedule(0.0, Ev::FwdReady { stage: 0, mb });
-    }
-
-    let mut fwd_done_at_last = 0usize;
-    let mut bwd_done_at_first = 0usize;
-    let mut bwd_completed = vec![false; k];
-    let mut makespan = f64::INFINITY;
-    let mut failed: Option<FailureOutcome> = None;
-
-    while let Some(ev) = engine.next() {
-        let now = ev.time_ms;
-        match ev.payload {
-            Ev::Fail { machine } => {
-                if plan.stages.contains(&machine) {
-                    failed = Some(FailureOutcome {
-                        at_ms: now,
-                        machine,
-                        completed_microbatches: bwd_completed
-                            .iter()
-                            .filter(|&&d| d)
-                            .count(),
-                    });
-                    trace.record(now, TraceKind::Failure { machine });
-                    break;
-                }
-            }
-            Ev::FwdReady { stage, mb } => {
-                let done = stage_res[stage].occupy(now, fwd_ms[stage]);
-                trace.record(done, TraceKind::Compute {
-                    stage, mb, backward: false, dur_ms: fwd_ms[stage] });
-                if stage + 1 < s {
-                    let arr = link_res[stage].occupy(done, link_ms[stage]);
-                    trace.record(arr, TraceKind::Transfer {
-                        boundary: stage, mb, backward: false,
-                        dur_ms: link_ms[stage] });
-                    engine.schedule(arr, Ev::FwdReady { stage: stage + 1, mb });
-                } else {
-                    fwd_done_at_last += 1;
-                    if fwd_done_at_last == k {
-                        // GPipe flush: backward starts after the full
-                        // forward wave, last microbatch first.
-                        for b in (0..k).rev() {
-                            engine.schedule(done, Ev::BwdReady {
-                                stage: s - 1, mb: b });
-                        }
-                    }
-                }
-            }
-            Ev::BwdReady { stage, mb } => {
-                let done = stage_res[stage].occupy(now, bwd_ms[stage]);
-                trace.record(done, TraceKind::Compute {
-                    stage, mb, backward: true, dur_ms: bwd_ms[stage] });
-                if stage > 0 {
-                    let arr =
-                        link_res[stage - 1].occupy(done, link_ms[stage - 1]);
-                    trace.record(arr, TraceKind::Transfer {
-                        boundary: stage - 1, mb, backward: true,
-                        dur_ms: link_ms[stage - 1] });
-                    engine.schedule(arr, Ev::BwdReady { stage: stage - 1, mb });
-                } else {
-                    bwd_completed[mb] = true;
-                    bwd_done_at_first += 1;
-                    if bwd_done_at_first == k {
-                        makespan = done;
-                        break;
-                    }
-                }
-            }
-        }
-    }
-
-    let comp_busy_ms: f64 = stage_res.iter().map(|r| r.busy_ms()).sum();
-    let comm_busy_ms: f64 = link_res.iter().map(|r| r.busy_ms()).sum();
-    let mean_utilization = if makespan.is_finite() && s > 0 {
-        stage_res
-            .iter()
-            .map(|r| r.busy_ms() / makespan)
-            .sum::<f64>()
-            / s as f64
+    let makespan_ms = task.finish_ms;
+    let mean_utilization = if makespan_ms.is_finite() && s > 0 {
+        task.comp_busy_ms / makespan_ms / s as f64
     } else {
         0.0
     };
     PipelineSimResult {
-        makespan_ms: makespan,
-        comp_busy_ms,
-        comm_busy_ms,
+        makespan_ms,
+        comp_busy_ms: task.comp_busy_ms,
+        comm_busy_ms: task.comm_busy_ms,
         mean_utilization,
-        failure: failed,
-        trace,
-        events_processed: engine.events_processed,
+        failure: run.failure,
+        trace: run.trace,
+        events_processed: run.report.events_processed,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::parallel::pipeline_cost;
 
     fn setup() -> (Fleet, PipelinePlan, ModelSpec) {
         let fleet = Fleet::paper_toy(0);

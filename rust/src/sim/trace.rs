@@ -14,6 +14,10 @@ pub enum TraceKind {
     /// Transfer of microbatch `mb` over boundary `stage → stage+1` (fwd)
     /// or `stage+1 → stage` (bwd) completed.
     Transfer { boundary: usize, mb: usize, backward: bool, dur_ms: f64 },
+    /// Ring link `link` finished its chunk transfer for step `step` of a
+    /// ring all-reduce (the per-link completion record of
+    /// `sim::allreduce_sim`).
+    RingStep { link: usize, step: usize, dur_ms: f64 },
     /// Machine failed.
     Failure { machine: usize },
 }
@@ -77,6 +81,19 @@ impl Trace {
             .sum()
     }
 
+    /// Total ring-transfer time recorded for ring link `link`.
+    pub fn ring_link_busy_ms(&self, link: usize) -> f64 {
+        self.events
+            .iter()
+            .filter_map(|e| match e.kind {
+                TraceKind::RingStep { link: l, dur_ms, .. } if l == link => {
+                    Some(dur_ms)
+                }
+                _ => None,
+            })
+            .sum()
+    }
+
     /// Fraction of `makespan_ms` stage `stage` spent computing.
     pub fn stage_utilization(&self, stage: usize, makespan_ms: f64) -> f64 {
         if makespan_ms <= 0.0 {
@@ -99,10 +116,14 @@ mod tests {
             stage: 0, mb: 1, backward: true, dur_ms: 7.0 });
         t.record(3.0, TraceKind::Transfer {
             boundary: 0, mb: 0, backward: false, dur_ms: 2.0 });
-        assert_eq!(t.len(), 3);
+        t.record(4.0, TraceKind::RingStep { link: 1, step: 0, dur_ms: 3.0 });
+        t.record(7.0, TraceKind::RingStep { link: 1, step: 1, dur_ms: 3.0 });
+        assert_eq!(t.len(), 5);
         assert_eq!(t.stage_busy_ms(0), 12.0);
         assert_eq!(t.stage_busy_ms(1), 0.0);
         assert_eq!(t.boundary_busy_ms(0), 2.0);
+        assert_eq!(t.ring_link_busy_ms(1), 6.0);
+        assert_eq!(t.ring_link_busy_ms(0), 0.0);
         assert!((t.stage_utilization(0, 24.0) - 0.5).abs() < 1e-12);
     }
 

@@ -16,12 +16,13 @@
 //! harness in [`crate::scenarios`]. New code should import from
 //! [`crate::planner`] directly.
 
-pub use crate::planner::{chain_order, HulkNoGcnPlanner, HulkPlanner,
-                         HulkSplitterKind, Placement, PlanContext, Planner,
-                         PlannerKind, PlannerRegistry, SystemAPlanner,
+pub use crate::planner::{chain_order, CostBackend, HulkNoGcnPlanner,
+                         HulkPlanner, HulkSplitterKind, Placement,
+                         PlanContext, Planner, PlannerKind,
+                         PlannerRegistry, PricedPlacement, SystemAPlanner,
                          SystemBPlanner, SystemCPlanner, SystemMeta,
                          TaskPlacement};
 pub use crate::scenarios::evaluate::{evaluate_all, evaluate_with,
-                                     SystemEval};
+                                     evaluate_with_backend, SystemEval};
 pub use crate::scenarios::sweep::{fleet_size_sweep, microbatch_sweep,
                                   wan_degradation_sweep, SweepPoint};

@@ -1,6 +1,8 @@
 //! Property-based tests over the coordinator-side invariants (routing,
 //! grouping, recovery, simulation) using the `hulk::prop` mini-harness —
-//! random fleets, workloads and failure sequences.
+//! random fleets, workloads and failure sequences — plus the
+//! discrete-event engine's ordering/resource invariants the
+//! whole-placement executor builds on.
 
 use hulk::cluster::Fleet;
 use hulk::coordinator::{recover, RecoveryAction};
@@ -10,6 +12,7 @@ use hulk::parallel::{pipeline_cost, ring_allreduce_ms, PipelinePlan};
 use hulk::planner::chain_order;
 use hulk::prop::forall;
 use hulk::scheduler::{oracle_partition, OracleOptions};
+use hulk::sim::engine::{Engine, Resource};
 use hulk::sim::simulate_pipeline;
 
 fn random_workload(g: &mut hulk::prop::Gen) -> Vec<ModelSpec> {
@@ -115,6 +118,85 @@ fn pipeline_cost_positive_and_sim_agrees_when_feasible() {
         }
         let sim = simulate_pipeline(&fleet, &plan, &model, false, None);
         sim.makespan_ms.is_finite() && sim.makespan_ms > 0.0
+    });
+}
+
+/// Reference pop for the engine model: the first-inserted event among
+/// those with the minimum time (strict `<` keeps insertion order).
+fn model_pop(pending: &mut Vec<(f64, usize)>) -> usize {
+    let mut best = 0;
+    for i in 1..pending.len() {
+        if pending[i].0 < pending[best].0 {
+            best = i;
+        }
+    }
+    pending.remove(best).1
+}
+
+#[test]
+fn engine_equal_time_events_fire_fifo_under_interleaved_schedule_pop() {
+    forall("engine FIFO ties", 60, |g| {
+        let mut engine: Engine<usize> = Engine::new();
+        // Times are drawn from a tiny offset set so ties are common; the
+        // engine is compared op-by-op against a brute-force stable model.
+        let mut pending: Vec<(f64, usize)> = Vec::new();
+        let mut next_id = 0usize;
+        let n_ops = g.usize_in(5..=40);
+        for _ in 0..n_ops {
+            if g.bool() || engine.is_empty() {
+                let t = engine.now_ms() + g.usize_in(0..=3) as f64;
+                engine.schedule(t, next_id);
+                pending.push((t, next_id));
+                next_id += 1;
+            } else {
+                let ev = engine.next().expect("non-empty engine pops");
+                if ev.payload != model_pop(&mut pending) {
+                    return false;
+                }
+            }
+        }
+        while let Some(ev) = engine.next() {
+            if ev.payload != model_pop(&mut pending) {
+                return false;
+            }
+        }
+        pending.is_empty()
+    });
+}
+
+#[test]
+fn resource_occupy_completions_are_monotone() {
+    forall("resource monotone completions", 80, |g| {
+        let mut r = Resource::default();
+        let mut last = 0.0f64;
+        let n = g.usize_in(1..=30);
+        for _ in 0..n {
+            let earliest = g.f64_in(0.0, 100.0);
+            let dur = g.f64_in(0.0, 10.0);
+            let done = r.occupy(earliest, dur);
+            // A serially shared resource can only finish later and never
+            // before the request could physically complete.
+            if done < last || done < earliest + dur - 1e-9 {
+                return false;
+            }
+            last = done;
+        }
+        true
+    });
+}
+
+#[test]
+fn resource_busy_ms_is_the_sum_of_occupied_durations() {
+    forall("resource busy accounting", 80, |g| {
+        let mut r = Resource::default();
+        let mut total = 0.0f64;
+        let n = g.usize_in(0..=30);
+        for _ in 0..n {
+            let dur = g.f64_in(0.0, 25.0);
+            r.occupy(g.f64_in(0.0, 50.0), dur);
+            total += dur;
+        }
+        (r.busy_ms() - total).abs() <= 1e-9 * total.max(1.0)
     });
 }
 

@@ -1,21 +1,28 @@
 //! Parallel-vs-serial determinism suite for the scenario runner — now
-//! including planner-filtered (`--systems`) runs — plus smoke tests for
-//! the `planet_scale` and `burst_arrivals` scenarios and the
-//! `hulk_no_gcn` ablation planner.
+//! including planner-filtered (`--systems`) and sim-priced (`--cost
+//! sim`) runs — plus smoke tests for the `planet_scale` and
+//! `burst_arrivals` scenarios and the `hulk_no_gcn` ablation planner.
 //!
 //! The acceptance bar: `hulk scenarios run all --json --parallel` must
 //! produce a `BENCH_scenarios.json` byte-identical to the serial run's
 //! (CI diffs the two artifacts as a gate; this suite is the in-repo
-//! version of that gate), and a `--systems` subset must be byte-identical
-//! serial vs parallel *and* a strict subset of the all-systems artifact
-//! columns.
+//! version of that gate) — for either cost backend — and a `--systems`
+//! subset must be byte-identical serial vs parallel *and* a strict
+//! subset of the all-systems artifact columns.
 
 use std::collections::BTreeMap;
 
 use hulk::benchkit::BenchReport;
-use hulk::planner::PlannerRegistry;
-use hulk::scenarios::{all_scenarios, find_scenario, run_specs,
-                      ScenarioResult};
+use hulk::planner::{CostBackend, PlannerRegistry};
+use hulk::scenarios::{find_scenario, resolve_scenarios, run_specs,
+                      ScenarioResult, ScenarioSpec};
+
+/// The specs an analytic `hulk scenarios run all` executes.
+fn analytic_specs() -> Vec<ScenarioSpec> {
+    resolve_scenarios(&[], CostBackend::Analytic)
+        .expect("resolve all")
+        .0
+}
 
 fn report_bytes(results: Vec<ScenarioResult>) -> String {
     let mut report = BenchReport::new("scenarios");
@@ -29,15 +36,17 @@ fn report_bytes(results: Vec<ScenarioResult>) -> String {
 
 #[test]
 fn parallel_run_is_byte_identical_to_serial() {
-    let specs = all_scenarios();
+    let specs = analytic_specs();
     let planners = PlannerRegistry::standard();
-    let serial = run_specs(&specs, 0, 1, &planners).expect("serial run");
+    let serial = run_specs(&specs, 0, 1, &planners, CostBackend::Analytic)
+        .expect("serial run");
     let serial_rendered: Vec<String> =
         serial.iter().map(|r| r.rendered.clone()).collect();
     let serial_bytes = report_bytes(serial);
     for threads in [2, 4, 8] {
-        let parallel = run_specs(&specs, 0, threads, &planners)
-            .unwrap_or_else(|e| panic!("{threads}-thread run: {e}"));
+        let parallel =
+            run_specs(&specs, 0, threads, &planners, CostBackend::Analytic)
+                .unwrap_or_else(|e| panic!("{threads}-thread run: {e}"));
         let parallel_rendered: Vec<String> =
             parallel.iter().map(|r| r.rendered.clone()).collect();
         assert_eq!(serial_rendered, parallel_rendered,
@@ -48,10 +57,79 @@ fn parallel_run_is_byte_identical_to_serial() {
 }
 
 #[test]
+fn sim_priced_run_is_byte_identical_serial_vs_parallel() {
+    // The `--cost sim` half of the CI determinism gate, on a subset
+    // that exercises both Evaluate cells and the sim-only customs (the
+    // full suite runs in CI on the release build).
+    let (specs, _) = resolve_scenarios(
+        &["table1_fleet".to_string(), "contended_links".to_string(),
+          "sim_vs_analytic".to_string()],
+        CostBackend::Simulated,
+    )
+    .expect("resolve sim subset");
+    let planners = PlannerRegistry::standard();
+    let serial =
+        run_specs(&specs, 0, 1, &planners, CostBackend::Simulated)
+            .expect("serial sim run");
+    // Sim pricing adds the contention digests on evaluated scenarios.
+    assert!(serial[0]
+        .entries
+        .iter()
+        .any(|e| e.name == "table1_fleet/hulk/sim/makespan_ms"));
+    let serial_rendered: Vec<String> =
+        serial.iter().map(|r| r.rendered.clone()).collect();
+    let serial_bytes = report_bytes(serial);
+    for threads in [2, 4] {
+        let parallel =
+            run_specs(&specs, 0, threads, &planners,
+                      CostBackend::Simulated)
+                .unwrap_or_else(|e| panic!("{threads}-thread run: {e}"));
+        let parallel_rendered: Vec<String> =
+            parallel.iter().map(|r| r.rendered.clone()).collect();
+        assert_eq!(serial_rendered, parallel_rendered,
+                   "sim rendered output diverged at {threads} threads");
+        assert_eq!(serial_bytes, report_bytes(parallel),
+                   "sim artifact diverged at {threads} threads");
+    }
+}
+
+#[test]
+fn analytic_artifact_carries_no_exec_digest_rows() {
+    // The byte-identity guarantee vs pre-backend artifacts, in spirit:
+    // an analytic run must not leak any backend exec-digest column into
+    // BENCH_scenarios.json. (failure_storm's historical
+    // `failure_storm/sim/healthy_makespan_ms` /
+    // `…/sim/microbatches_salvaged` DES rows predate the backend and
+    // legitimately remain — only the new digest suffixes are banned.)
+    let specs = analytic_specs();
+    assert!(specs.iter().all(|s| !s.sim_only));
+    let results =
+        run_specs(&specs, 0, 1, &PlannerRegistry::standard(),
+                  CostBackend::Analytic)
+            .unwrap();
+    const DIGEST_SUFFIXES: [&str; 4] = [
+        "/sim/makespan_ms",
+        "/sim/straggler_wait_ms",
+        "/sim/max_link_utilization_pct",
+        "/sim/events",
+    ];
+    for r in &results {
+        for e in &r.entries {
+            assert!(
+                DIGEST_SUFFIXES.iter().all(|s| !e.name.ends_with(s)),
+                "{}: leaked exec-digest row {}", r.scenario, e.name
+            );
+        }
+        assert!(!r.rendered.contains("simulated execution"),
+                "{} leaked sim rendering", r.scenario);
+    }
+}
+
+#[test]
 fn parallel_written_artifact_matches_serial_file_bytes() {
     // End-to-end through the benchkit writer, as CI diffs it — the
     // placements artifact included.
-    let specs = all_scenarios();
+    let specs = analytic_specs();
     let planners = PlannerRegistry::standard();
     let base = std::env::temp_dir().join("hulk_runner_determinism_test");
     let write = |results: Vec<ScenarioResult>, sub: &str| {
@@ -65,10 +143,14 @@ fn parallel_written_artifact_matches_serial_file_bytes() {
         (report.write(&dir).expect("write report"),
          placements.write(&dir).expect("write placements"))
     };
-    let (a, pa) = write(run_specs(&specs, 7, 1, &planners).unwrap(),
-                        "serial");
-    let (b, pb) = write(run_specs(&specs, 7, 4, &planners).unwrap(),
-                        "parallel");
+    let (a, pa) = write(
+        run_specs(&specs, 7, 1, &planners, CostBackend::Analytic).unwrap(),
+        "serial",
+    );
+    let (b, pb) = write(
+        run_specs(&specs, 7, 4, &planners, CostBackend::Analytic).unwrap(),
+        "parallel",
+    );
     assert_eq!(std::fs::read(a).unwrap(), std::fs::read(b).unwrap());
     assert_eq!(std::fs::read(pa).unwrap(), std::fs::read(pb).unwrap());
     std::fs::remove_dir_all(&base).ok();
@@ -76,10 +158,11 @@ fn parallel_written_artifact_matches_serial_file_bytes() {
 
 #[test]
 fn planner_filtered_run_is_deterministic_and_a_column_subset() {
-    let specs = all_scenarios();
+    let specs = analytic_specs();
 
     // The all-systems reference: name → value over every entry.
-    let all = run_specs(&specs, 0, 1, &PlannerRegistry::standard())
+    let all = run_specs(&specs, 0, 1, &PlannerRegistry::standard(),
+                        CostBackend::Analytic)
         .expect("all-systems run");
     let mut all_rows: BTreeMap<String, f64> = BTreeMap::new();
     let mut all_count = 0usize;
@@ -92,8 +175,11 @@ fn planner_filtered_run_is_deterministic_and_a_column_subset() {
 
     // `--systems a,hulk`: byte-identical serial vs parallel.
     let filtered = PlannerRegistry::resolve("a,hulk").unwrap();
-    let serial = run_specs(&specs, 0, 1, &filtered).expect("filtered run");
-    let parallel = run_specs(&specs, 0, 4, &filtered).expect("parallel");
+    let serial = run_specs(&specs, 0, 1, &filtered, CostBackend::Analytic)
+        .expect("filtered run");
+    let parallel =
+        run_specs(&specs, 0, 4, &filtered, CostBackend::Analytic)
+            .expect("parallel");
     let serial_entries: Vec<(String, f64)> = serial
         .iter()
         .flat_map(|r| r.entries.iter().map(|e| (e.name.clone(), e.value)))
@@ -132,8 +218,8 @@ fn hulk_no_gcn_runs_every_scenario_end_to_end() {
     // The ablation planner exercises the whole seam: every scenario
     // completes under `--systems hulk_no_gcn,a` and emits its columns.
     let planners = PlannerRegistry::resolve("hulk_no_gcn,a").unwrap();
-    let specs = all_scenarios();
-    let results = run_specs(&specs, 0, 2, &planners)
+    let specs = analytic_specs();
+    let results = run_specs(&specs, 0, 2, &planners, CostBackend::Analytic)
         .expect("hulk_no_gcn suite runs");
     assert_eq!(results.len(), specs.len());
     // Evaluate-shaped scenarios carry hulk_no_gcn columns and digests.
@@ -154,7 +240,9 @@ fn hulk_no_gcn_runs_every_scenario_end_to_end() {
 #[test]
 fn placement_digests_cover_every_planning_scenario() {
     let planners = PlannerRegistry::standard();
-    let results = run_specs(&all_scenarios(), 0, 1, &planners).unwrap();
+    let results = run_specs(&analytic_specs(), 0, 1, &planners,
+                            CostBackend::Analytic)
+        .unwrap();
     for r in &results {
         // Every scenario that runs a full evaluation — the Evaluate
         // bodies plus the custom ones embedding one (wan_degradation ×4,
@@ -269,14 +357,15 @@ fn burst_arrivals_smoke_is_bounded_and_consistent() {
 
 #[test]
 fn subset_runs_only_requested_scenarios_in_order() {
-    let (specs, ran_all) = hulk::scenarios::resolve_scenarios(&[
-        "burst_arrivals".to_string(),
-        "table1_fleet".to_string(),
-    ])
+    let (specs, ran_all) = resolve_scenarios(
+        &["burst_arrivals".to_string(), "table1_fleet".to_string()],
+        CostBackend::Analytic,
+    )
     .unwrap();
     assert!(!ran_all);
-    let results =
-        run_specs(&specs, 0, 2, &PlannerRegistry::standard()).unwrap();
+    let results = run_specs(&specs, 0, 2, &PlannerRegistry::standard(),
+                            CostBackend::Analytic)
+        .unwrap();
     let names: Vec<&str> = results.iter().map(|r| r.scenario).collect();
     assert_eq!(names, vec!["burst_arrivals", "table1_fleet"]);
 }
