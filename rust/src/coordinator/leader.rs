@@ -7,7 +7,9 @@
 //! happen here; GCN inference is consulted through the planner injected
 //! at construction.
 
+use std::cell::RefCell;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use crate::cluster::{Fleet, GpuModel, Region};
@@ -55,6 +57,12 @@ pub struct Coordinator {
     pub assignment: Assignment,
     pub metrics: Metrics,
     failed_machines: Vec<usize>,
+    /// Memoized [`ClusterGraph`]: the leader consults the graph on
+    /// every admit / recovery / iteration-estimate, but the fleet only
+    /// changes on scale-out and failure. Rebuilding the O(n²)
+    /// adjacency per event dominated bursty planet-scale streams;
+    /// mutation sites call [`Coordinator::invalidate_graph`].
+    graph_cache: RefCell<Option<Arc<ClusterGraph>>>,
 }
 
 impl Coordinator {
@@ -65,6 +73,7 @@ impl Coordinator {
             assignment: Assignment::new(Vec::new()),
             metrics: Metrics::new(),
             failed_machines: Vec::new(),
+            graph_cache: RefCell::new(None),
         }
     }
 
@@ -76,7 +85,16 @@ impl Coordinator {
             .collect()
     }
 
-    fn graph(&self) -> ClusterGraph {
+    fn graph(&self) -> Arc<ClusterGraph> {
+        if let Some(g) = self.graph_cache.borrow().as_ref() {
+            // `fleet` is a public field: a caller mutating it directly
+            // (instead of through ScaleOut/MachineFailed events) must
+            // not be served a wrong-sized graph — self-heal on any
+            // size drift.
+            if g.n == self.fleet.len() {
+                return g.clone();
+            }
+        }
         let mut g = ClusterGraph::from_fleet(&self.fleet);
         // Failed machines lose their edges (paper §5.2: removal = edge
         // deletion).
@@ -86,7 +104,15 @@ impl Coordinator {
                 g.adj[j * g.n + m] = 0.0;
             }
         }
+        let g = Arc::new(g);
+        *self.graph_cache.borrow_mut() = Some(g.clone());
         g
+    }
+
+    /// Drop the memoized graph; the next consumer rebuilds it. Must run
+    /// after every fleet or failed-machine mutation.
+    fn invalidate_graph(&self) {
+        self.graph_cache.borrow_mut().take();
     }
 
     /// Pool of machines not assigned to an active task and not failed.
@@ -203,6 +229,7 @@ impl Coordinator {
             }
             CoordinatorEvent::MachineFailed { machine } => {
                 self.failed_machines.push(machine);
+                self.invalidate_graph();
                 self.metrics.inc("machine_failures");
                 let graph = self.graph();
                 let models = self.active_models();
@@ -217,6 +244,7 @@ impl Coordinator {
                 let (id, joined) = scale_out(&mut self.fleet,
                                              &mut self.assignment, &models,
                                              region, gpu, n_gpus);
+                self.invalidate_graph();
                 if let Some(t) = joined {
                     if let Some(task) =
                         self.tasks.iter_mut().filter(|t| t.is_active()).nth(t)
@@ -411,6 +439,27 @@ mod tests {
         assert_eq!(c.metrics.counter("machine_failures"), 1);
         assert!(!c.tasks[0].machines.contains(&victim)
                 || c.tasks[0].state == TaskState::Queued);
+    }
+
+    #[test]
+    fn graph_cache_is_invalidated_by_failures_and_scale_out() {
+        let mut c = coordinator();
+        let before = c.graph();
+        // A second read is the same allocation, not a rebuild.
+        assert!(Arc::ptr_eq(&before, &c.graph()));
+        c.handle(CoordinatorEvent::MachineFailed { machine: 3 });
+        let after = c.graph();
+        assert!(!Arc::ptr_eq(&before, &after), "stale graph survived");
+        // The failed machine lost its edges.
+        assert_eq!(after.degree(3), 0);
+        assert!(before.degree(3) > 0);
+        let n = after.n;
+        c.handle(CoordinatorEvent::ScaleOut {
+            region: Region::Rome,
+            gpu: GpuModel::V100,
+            n_gpus: 8,
+        });
+        assert_eq!(c.graph().n, n + 1, "scale-out must rebuild the graph");
     }
 
     #[test]

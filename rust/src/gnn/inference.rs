@@ -4,10 +4,13 @@
 //! path) and the pure-Rust reference forward (artifact-free tests, CI
 //! without the python toolchain).
 
+use std::sync::OnceLock;
+
 use anyhow::Result;
 
 use crate::cluster::Fleet;
-use crate::graph::{node_features, ClusterGraph};
+use crate::graph::{node_features_csr, ClusterGraph, CsrGraph,
+                   CSR_DENSITY_MAX};
 use crate::models::ModelSpec;
 use crate::runtime::GcnRuntime;
 use crate::scheduler::TaskSplitter;
@@ -48,37 +51,159 @@ impl Classifier {
             }
         }
     }
+
+    /// Does this backend aggregate `csr` through the sparse forward?
+    /// True for the reference backend on a sparse-enough padded
+    /// adjacency ([`CSR_DENSITY_MAX`]); the PJRT artifact always
+    /// consumes the dense padded tensors its HLO was compiled for.
+    /// The single definition of the selection rule — cached-tensor
+    /// holders ([`ScenarioWorld`](crate::scenarios::ScenarioWorld))
+    /// branch on it to feed the right cached tensor.
+    pub fn uses_csr(&self, csr: &CsrGraph) -> bool {
+        matches!(self, Classifier::Reference(_))
+            && csr.density() <= CSR_DENSITY_MAX
+    }
+
+    /// Class probabilities from prebuilt (cached) padded tensors — the
+    /// hot-path entry point consumed by
+    /// [`ScenarioWorld::classify`](crate::scenarios::ScenarioWorld),
+    /// whose `PaddedWorld` cache feeds it. Path selection is
+    /// [`uses_csr`](Classifier::uses_csr); on the dense arm the padded
+    /// adjacency is materialized from the CSR view (callers holding a
+    /// cached dense tensor should branch on `uses_csr` and call
+    /// [`probs`](Classifier::probs) directly instead).
+    pub fn probs_for_padded(&self, params: &[f32], csr: &CsrGraph,
+                            feats: &[f32], mask: &[f32])
+        -> Result<Vec<f32>>
+    {
+        match self {
+            Classifier::Reference(r) if self.uses_csr(csr) => {
+                Ok(r.forward_csr(csr, feats, mask).data)
+            }
+            _ => self.probs(params, &csr.to_dense(), feats, mask),
+        }
+    }
+
+    /// [`probs_for_padded`](Classifier::probs_for_padded) for callers
+    /// without a cached context: builds the CSR view, features (O(E)
+    /// instead of O(n²)), and mask from the graph first.
+    pub fn probs_for_graph(&self, params: &[f32], fleet: &Fleet,
+                           graph: &ClusterGraph) -> Result<Vec<f32>>
+    {
+        let slots = self.slots();
+        let csr = CsrGraph::padded(graph, slots);
+        let feats = node_features_csr(&fleet.machines, &csr);
+        let mask = graph.padded_mask(slots);
+        self.probs_for_padded(params, &csr, &feats, &mask)
+    }
+}
+
+/// NaN-safe row argmax: `total_cmp` ordering with the lowest index
+/// winning ties — a degenerate forward (NaN probabilities) can no
+/// longer panic the scheduler. Matches the PR 2 `total_cmp` +
+/// deterministic-tiebreak convention (under the IEEE total order a
+/// positive NaN ranks above every number, exactly as in
+/// `ModelSpec::sort_largest_first`).
+pub(crate) fn argmax_class(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1).then_with(|| b.0.cmp(&a.0)))
+        .map(|(k, _)| k)
+        .unwrap_or(0)
+}
+
+/// Per-machine class ids from a `[*, c]` probability buffer — the one
+/// probs→classes loop shared by [`classify_with_graph`] and the cached
+/// [`ScenarioWorld::classify`](crate::scenarios::ScenarioWorld) path.
+pub(crate) fn classes_from_probs(probs: &[f32], n_machines: usize,
+                                 c: usize) -> Vec<usize>
+{
+    (0..n_machines)
+        .map(|i| argmax_class(&probs[i * c..(i + 1) * c]))
+        .collect()
 }
 
 /// Classify every real machine of a fleet: returns per-machine class ids.
 pub fn classify(classifier: &Classifier, params: &[f32], fleet: &Fleet)
     -> Result<Vec<usize>>
 {
-    let slots = classifier.slots();
     let graph = ClusterGraph::from_fleet(fleet);
-    let adj = graph.padded_adj(slots);
-    let feats = node_features(&fleet.machines, &graph, slots);
-    let mask = graph.padded_mask(slots);
-    let probs = classifier.probs(params, &adj, &feats, &mask)?;
-    let c = classifier.n_classes();
-    Ok((0..fleet.len())
-        .map(|i| {
-            let row = &probs[i * c..(i + 1) * c];
-            row.iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(k, _)| k)
-                .unwrap()
-        })
-        .collect())
+    classify_with_graph(classifier, params, fleet, &graph)
+}
+
+/// [`classify`] against a caller-provided (cached) graph — the hot-path
+/// entry point for consumers holding a
+/// [`ScenarioWorld`](crate::scenarios::ScenarioWorld)-style context.
+pub fn classify_with_graph(classifier: &Classifier, params: &[f32],
+                           fleet: &Fleet, graph: &ClusterGraph)
+    -> Result<Vec<usize>>
+{
+    let probs = classifier.probs_for_graph(params, fleet, graph)?;
+    Ok(classes_from_probs(&probs, fleet.len(), classifier.n_classes()))
 }
 
 /// The trained-GNN splitter `F` for Algorithm 1: rank the remaining
 /// machines by class-`i` probability and take the top slice that clears
 /// the task's memory threshold.
+///
+/// One instance serves one planning call over one (fleet, graph): the
+/// class probabilities depend only on those, not on the task, so the
+/// forward pass runs **once** and every per-task `split` reuses it
+/// (Algorithm 1 used to pay a full GCN forward per task).
 pub struct GnnSplitter<'a> {
     pub classifier: &'a Classifier,
     pub params: &'a [f32],
+    /// Memoized forward pass (`None` = the forward failed), tagged
+    /// with the identity of the graph it was computed for.
+    probs: OnceLock<ProbsMemo>,
+}
+
+/// One memoized forward + the graph it belongs to (node count and
+/// adjacency allocation address — enough to catch a splitter reused
+/// across planning contexts in debug builds).
+struct ProbsMemo {
+    graph_key: (usize, usize),
+    probs: Option<Vec<f32>>,
+}
+
+fn graph_key(graph: &ClusterGraph) -> (usize, usize) {
+    (graph.n, graph.adj.as_ptr() as usize)
+}
+
+impl<'a> GnnSplitter<'a> {
+    pub fn new(classifier: &'a Classifier, params: &'a [f32])
+        -> GnnSplitter<'a>
+    {
+        GnnSplitter { classifier, params, probs: OnceLock::new() }
+    }
+
+    fn cached_probs(&self, fleet: &Fleet, graph: &ClusterGraph)
+        -> Option<std::borrow::Cow<'_, [f32]>>
+    {
+        let key = graph_key(graph);
+        let memo = self.probs.get_or_init(|| ProbsMemo {
+            graph_key: key,
+            probs: self
+                .classifier
+                .probs_for_graph(self.params, fleet, graph)
+                .ok(),
+        });
+        if memo.graph_key == key {
+            return memo.probs.as_deref().map(std::borrow::Cow::Borrowed);
+        }
+        // A splitter reused across planning contexts: loud in debug
+        // builds, self-healing (fresh un-memoized forward) in release —
+        // never stale probabilities for the wrong graph.
+        debug_assert!(
+            false,
+            "GnnSplitter memoizes one (fleet, graph) — construct a new \
+             splitter per planning call"
+        );
+        self.classifier
+            .probs_for_graph(self.params, fleet, graph)
+            .ok()
+            .map(std::borrow::Cow::Owned)
+    }
 }
 
 impl TaskSplitter for GnnSplitter<'_> {
@@ -86,21 +211,16 @@ impl TaskSplitter for GnnSplitter<'_> {
              remaining: &[usize], task: &ModelSpec, class_idx: usize)
         -> Vec<usize>
     {
-        let slots = self.classifier.slots();
-        let adj = graph.padded_adj(slots);
-        let feats = node_features(&fleet.machines, &graph, slots);
-        let mask = graph.padded_mask(slots);
-        let Ok(probs) =
-            self.classifier.probs(self.params, &adj, &feats, &mask)
-        else {
+        let Some(probs) = self.cached_probs(fleet, graph) else {
             return Vec::new();
         };
+        let probs: &[f32] = &probs;
         let c = self.classifier.n_classes();
         let mut ranked: Vec<usize> = remaining.to_vec();
         ranked.sort_by(|&a, &b| {
             let pa = probs[a * c + class_idx];
             let pb = probs[b * c + class_idx];
-            pb.partial_cmp(&pa).unwrap()
+            pb.total_cmp(&pa)
         });
         // Take machines until the memory threshold Mₙ is cleared, with
         // 20% headroom, then stop — Algorithm 1 wants "the smaller graph".
@@ -142,11 +262,69 @@ mod tests {
     }
 
     #[test]
+    fn argmax_is_nan_safe_and_breaks_ties_low() {
+        assert_eq!(argmax_class(&[0.1, 0.7, 0.2]), 1);
+        // Ties break toward the lowest index (PR 2 convention).
+        assert_eq!(argmax_class(&[0.4, 0.4, 0.2]), 0);
+        // A degenerate forward must not panic. Under the IEEE total
+        // order a positive NaN ranks above every number (the
+        // sort_largest_first convention), and equal NaNs tie-break low.
+        assert_eq!(argmax_class(&[f32::NAN, 0.3, f32::NAN]), 0);
+        assert_eq!(argmax_class(&[0.3, f32::NAN, f32::NAN]), 1);
+        assert_eq!(argmax_class(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax_class(&[]), 0);
+    }
+
+    #[test]
+    fn graph_probs_match_dense_probs() {
+        // The auto-selected (CSR) path must agree with the padded-dense
+        // tensors the PJRT artifact would see.
+        let (clf, params) = reference_classifier();
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let slots = clf.slots();
+        let adj = graph.padded_adj(slots);
+        let feats =
+            crate::graph::node_features(&fleet.machines, &graph, slots);
+        let mask = graph.padded_mask(slots);
+        let dense = clf.probs(&params, &adj, &feats, &mask).unwrap();
+        let auto = clf.probs_for_graph(&params, &fleet, &graph).unwrap();
+        let c = clf.n_classes();
+        for i in 0..fleet.len() {
+            for k in 0..c {
+                let (d, a) = (dense[i * c + k], auto[i * c + k]);
+                assert!((d - a).abs() < 1e-5, "({i},{k}): {d} vs {a}");
+            }
+        }
+        // classify() and the explicit-graph variant agree.
+        assert_eq!(classify(&clf, &params, &fleet).unwrap(),
+                   classify_with_graph(&clf, &params, &fleet, &graph)
+                       .unwrap());
+    }
+
+    #[test]
+    fn gnn_splitter_memoizes_the_forward_pass() {
+        let (clf, params) = reference_classifier();
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let splitter = GnnSplitter::new(&clf, &params);
+        let remaining: Vec<usize> = (0..fleet.len()).collect();
+        let first = splitter.split(&fleet, &graph, &remaining,
+                                   &ModelSpec::gpt2_xl(), 0);
+        // Second split on the same context reuses the memoized probs —
+        // and must rank identically.
+        let second = splitter.split(&fleet, &graph, &remaining,
+                                    &ModelSpec::gpt2_xl(), 0);
+        assert_eq!(first, second);
+        assert!(splitter.probs.get().is_some(), "forward not memoized");
+    }
+
+    #[test]
     fn gnn_splitter_respects_remaining_pool() {
         let (clf, params) = reference_classifier();
         let fleet = Fleet::paper_evaluation(0);
         let graph = ClusterGraph::from_fleet(&fleet);
-        let splitter = GnnSplitter { classifier: &clf, params: &params };
+        let splitter = GnnSplitter::new(&clf, &params);
         let remaining: Vec<usize> = (10..30).collect();
         let group = splitter.split(&fleet, &graph, &remaining,
                                    &ModelSpec::gpt2_xl(), 0);

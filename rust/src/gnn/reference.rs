@@ -10,6 +10,7 @@
 //! Rust backward pass — the paper's training math lives in L2).
 
 use crate::util::MatF32;
+use crate::graph::csr::{sym_normalize_csr, CsrGraph, CsrNormalized};
 use crate::graph::normalize::sym_normalize;
 
 /// Must match `WSUM_SCALE` in model.py.
@@ -80,8 +81,12 @@ impl RefGcn {
         &self.params[idx]
     }
 
-    /// Forward pass → probabilities [n, c]. Inputs are padded row-major
-    /// tensors exactly as fed to the PJRT artifact.
+    /// Dense forward pass → probabilities [n, c]. Inputs are padded
+    /// row-major tensors exactly as fed to the PJRT artifact. This is
+    /// the padded-dense **oracle**: O(n²·F) aggregation over every slot
+    /// pair. The evaluation hot path goes through
+    /// [`forward_csr`](RefGcn::forward_csr), which this path
+    /// cross-checks in the parity tests.
     pub fn forward(&self, adj: &[f32], feats: &[f32], mask: &[f32]) -> MatF32 {
         let (n, f) = (self.cfg.n, self.cfg.f);
         assert_eq!(adj.len(), n * n);
@@ -136,16 +141,82 @@ impl RefGcn {
         // Row softmax.
         let mut probs = logits;
         for i in 0..n {
-            let row_max = probs.row(i).iter().cloned().fold(f32::MIN, f32::max);
-            let mut denom = 0.0;
-            for k in 0..self.cfg.c {
-                let e = (probs.at(i, k) - row_max).exp();
-                probs.set(i, k, e);
-                denom += e;
+            softmax_inplace(&mut probs.data[i * self.cfg.c
+                                            ..(i + 1) * self.cfg.c]);
+        }
+        probs
+    }
+
+    /// Sparse forward pass over a (padded) CSR adjacency →
+    /// probabilities [n, c]. Same math as [`forward`](RefGcn::forward)
+    /// restricted to the `adj.real` machine rows — the padded slots are
+    /// all-zero through every masked layer, so only the real block is
+    /// ever computed: neighborhood aggregation is O(E·F) instead of the
+    /// padded-dense O(n²·F), and the dense per-row products shrink from
+    /// `n` (slots) to `real` rows. Padded output rows are left at zero
+    /// (they are never consumed; the dense oracle softmaxes them to a
+    /// bias-only distribution instead), so parity checks compare the
+    /// real rows.
+    pub fn forward_csr(&self, adj: &CsrGraph, feats: &[f32], mask: &[f32])
+        -> MatF32
+    {
+        let (n, f) = (self.cfg.n, self.cfg.f);
+        assert_eq!(adj.n, n, "CSR slot count must match the model");
+        assert_eq!(feats.len(), n * f);
+        assert_eq!(mask.len(), n);
+        let real = adj.real;
+        let x = MatF32::from_vec(real, f, feats[..real * f].to_vec());
+        let a_hat = sym_normalize_csr(adj);
+
+        // Edge pooling over the stored edges only (model.py::_edge_pool).
+        let mut nbr_sum = MatF32::zeros(real, f);
+        let mut deg = vec![0.0f32; real];
+        let mut wsum = vec![0.0f32; real];
+        for i in 0..real {
+            let (cols, vals) = adj.row(i);
+            for (&j, &w) in cols.iter().zip(vals) {
+                deg[i] += 1.0;
+                wsum[i] += w;
+                for k in 0..f {
+                    let v = nbr_sum.at(i, k) + x.at(j, k);
+                    nbr_sum.set(i, k, v);
+                }
             }
-            for k in 0..self.cfg.c {
-                probs.set(i, k, probs.at(i, k) / denom);
+        }
+        let degc: Vec<f32> = deg.iter().map(|&d| d.max(1.0)).collect();
+        let mut h0 = x.matmul(self.p(0)); // ep_w_self
+        let mut nbr_mean = nbr_sum;
+        nbr_mean.scale_rows(&degc.iter().map(|d| 1.0 / d).collect::<Vec<_>>());
+        let nbr_term = nbr_mean.matmul(self.p(1)); // ep_w_nbr
+        let w_e = self.p(2); // 1 × h
+        for i in 0..real {
+            let wmean = wsum[i] / degc[i] * WSUM_SCALE;
+            for k in 0..self.cfg.h {
+                let v = h0.at(i, k)
+                    + nbr_term.at(i, k)
+                    + wmean * w_e.at(0, k)
+                    + self.p(3).at(0, k); // ep_b
+                h0.set(i, k, v);
             }
+        }
+        h0.relu_inplace();
+        h0.scale_rows(&mask[..real]);
+
+        let h1 = self.gcn_layer_csr(&a_hat, &h0, 4, 5, 6, true,
+                                    &mask[..real]);
+        let h2 = self.gcn_layer_csr(&a_hat, &h1, 7, 8, 9, true,
+                                    &mask[..real]);
+        let h3 = self.gcn_layer_csr(&a_hat, &h2, 10, 11, 12, true,
+                                    &mask[..real]);
+        let ones = vec![1.0f32; real];
+        let logits = self.gcn_layer_csr(&a_hat, &h3, 13, 14, 15, false,
+                                        &ones);
+
+        let mut probs = MatF32::zeros(n, self.cfg.c);
+        for i in 0..real {
+            let row = &mut probs.data[i * self.cfg.c..(i + 1) * self.cfg.c];
+            row.copy_from_slice(logits.row(i));
+            softmax_inplace(row);
         }
         probs
     }
@@ -155,7 +226,26 @@ impl RefGcn {
         -> MatF32
     {
         let xw = x.matmul(self.p(w_idx));
-        let mut out = a_hat.matmul(&xw);
+        // Branch-free dense aggregation — the same O(n²·F) contraction
+        // model.py runs, which is exactly what makes this path the
+        // oracle rather than the hot path.
+        let out = a_hat.matmul(&xw);
+        self.finish_layer(out, x, ws_idx, b_idx, relu, mask)
+    }
+
+    fn gcn_layer_csr(&self, a_hat: &CsrNormalized, x: &MatF32,
+                     w_idx: usize, ws_idx: usize, b_idx: usize, relu: bool,
+                     mask: &[f32]) -> MatF32
+    {
+        let xw = x.matmul(self.p(w_idx));
+        let out = a_hat.matmul_real(&xw);
+        self.finish_layer(out, x, ws_idx, b_idx, relu, mask)
+    }
+
+    /// Shared layer tail: `+ X·W_self + b`, activation, node mask.
+    fn finish_layer(&self, mut out: MatF32, x: &MatF32, ws_idx: usize,
+                    b_idx: usize, relu: bool, mask: &[f32]) -> MatF32
+    {
         let self_term = x.matmul(self.p(ws_idx));
         for (o, s) in out.data.iter_mut().zip(&self_term.data) {
             *o += s;
@@ -166,6 +256,19 @@ impl RefGcn {
         }
         out.scale_rows(mask);
         out
+    }
+}
+
+/// Numerically stable in-place softmax of one row.
+fn softmax_inplace(row: &mut [f32]) {
+    let row_max = row.iter().cloned().fold(f32::MIN, f32::max);
+    let mut denom = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - row_max).exp();
+        denom += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= denom;
     }
 }
 
@@ -243,6 +346,23 @@ mod tests {
                 assert!((base.at(i, k) - poked.at(i, k)).abs() < 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn csr_forward_matches_dense_forward() {
+        // With real == slots the sparse path must reproduce every row of
+        // the dense oracle (padded-slot behavior is covered by the
+        // integration parity suite on real fleets).
+        let cfg = tiny_cfg();
+        let gcn = RefGcn::new(cfg, &rand_params(&cfg, 5));
+        let (adj, feats, mask) = toy_inputs(&cfg);
+        let dense = gcn.forward(&adj, &feats, &mask);
+        let graph = crate::graph::ClusterGraph { n: cfg.n,
+                                                 adj: adj.clone() };
+        let csr = CsrGraph::from_graph(&graph);
+        let sparse = gcn.forward_csr(&csr, &feats, &mask);
+        assert!(dense.max_abs_diff(&sparse) < 1e-5,
+                "max diff {}", dense.max_abs_diff(&sparse));
     }
 
     #[test]

@@ -78,12 +78,10 @@ pub fn evaluate_accuracy(rt: &GcnRuntime, params: &[f32],
         let probs = rt.forward(params, &g.adj, &g.feats, &g.mask)?;
         for i in 0..g.n_real {
             let row = &probs[i * c..(i + 1) * c];
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(k, _)| k as i32)
-                .unwrap();
+            // NaN-safe: diverged training (NaN logits) must depress
+            // accuracy, not panic the evaluation loop.
+            let pred =
+                crate::gnn::inference::argmax_class(row) as i32;
             if pred == g.labels[i] {
                 correct += 1;
             }

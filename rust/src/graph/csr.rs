@@ -1,0 +1,276 @@
+//! Compressed-sparse-row view of a [`ClusterGraph`] and the sparse
+//! symmetric normalization behind the GCN's CSR forward path.
+//!
+//! The padded dense adjacency the GCN artifact consumes is `slots ×
+//! slots` even though (a) padding rows are empty by construction and
+//! (b) WAN policy blocks remove region pairs entirely. Aggregating over
+//! the stored edges instead of scanning every slot pair turns the
+//! forward's neighborhood work from O(slots²·F) into O(E·F)
+//! (`gnn::reference::RefGcn::forward_csr`). The dense path stays as the
+//! numerical oracle; [`CsrGraph::density`] drives the automatic
+//! selection (`gnn::Classifier`).
+
+use super::adjacency::ClusterGraph;
+use crate::util::MatF32;
+
+/// Nonzero-density ceiling below which the reference classifier
+/// aggregates through the CSR path. Padding headroom (a planet-capable
+/// artifact compiled for more slots than the fleet fills) and WAN policy
+/// blocks keep real inputs under it; a fully occupied, fully connected
+/// graph falls back to the dense oracle.
+pub const CSR_DENSITY_MAX: f64 = 0.8;
+
+/// CSR view of a (possibly padded) cluster graph. Rows `real..n` are the
+/// padding slots: present in `row_ptr` but empty. Column indices are
+/// strictly ascending within a row — the same visit order as a dense
+/// row scan, so sparse reductions reproduce the dense float-summation
+/// order exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrGraph {
+    /// Row count (the artifact's slot count when built via [`padded`]).
+    ///
+    /// [`padded`]: CsrGraph::padded
+    pub n: usize,
+    /// Rows holding real machines; rows `real..n` are empty padding.
+    pub real: usize,
+    /// `row_ptr[i]..row_ptr[i + 1]` indexes row i's entries. Length `n + 1`.
+    pub row_ptr: Vec<usize>,
+    pub cols: Vec<usize>,
+    /// Edge weights (latency ms), parallel to `cols`.
+    pub vals: Vec<f32>,
+}
+
+impl CsrGraph {
+    /// CSR of the graph at its natural size (no padding).
+    pub fn from_graph(graph: &ClusterGraph) -> CsrGraph {
+        CsrGraph::padded(graph, graph.n)
+    }
+
+    /// CSR of the graph padded to `slots` rows — the sparse counterpart
+    /// of [`ClusterGraph::padded_adj`], without materializing the
+    /// `slots²` zeros.
+    pub fn padded(graph: &ClusterGraph, slots: usize) -> CsrGraph {
+        assert!(slots >= graph.n, "graph larger than artifact slots");
+        let mut row_ptr = Vec::with_capacity(slots + 1);
+        row_ptr.push(0);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..graph.n {
+            let row = &graph.adj[i * graph.n..(i + 1) * graph.n];
+            for (j, &w) in row.iter().enumerate() {
+                if w > 0.0 {
+                    cols.push(j);
+                    vals.push(w);
+                }
+            }
+            row_ptr.push(cols.len());
+        }
+        row_ptr.resize(slots + 1, cols.len());
+        CsrGraph { n: slots, real: graph.n, row_ptr, cols, vals }
+    }
+
+    /// Stored (nonzero) entry count.
+    pub fn nnz(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Nonzero fraction of the padded dense matrix this view replaces.
+    pub fn density(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.n * self.n) as f64
+    }
+
+    /// Row i's (columns, weights), ascending column order.
+    pub fn row(&self, i: usize) -> (&[usize], &[f32]) {
+        let span = self.row_ptr[i]..self.row_ptr[i + 1];
+        (&self.cols[span.clone()], &self.vals[span])
+    }
+
+    /// Materialize the padded dense adjacency this view compresses —
+    /// exactly [`ClusterGraph::padded_adj`]'s output (the dense-oracle
+    /// fallback and the PJRT artifact consume this shape).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n * self.n];
+        for i in 0..self.real {
+            let (cols, vals) = self.row(i);
+            for (&j, &w) in cols.iter().zip(vals) {
+                out[i * self.n + j] = w;
+            }
+        }
+        out
+    }
+}
+
+/// Latency-affinity symmetric normalization Â in CSR form: the sparse
+/// mirror of [`super::normalize::sym_normalize`], pattern = edges ∪
+/// diagonal, columns ascending (the diagonal merged into sorted
+/// position so degree sums visit addends in the dense row order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrNormalized {
+    pub n: usize,
+    pub real: usize,
+    pub row_ptr: Vec<usize>,
+    pub cols: Vec<usize>,
+    pub vals: Vec<f32>,
+}
+
+/// Compute Â = D^{-1/2} (S + I) D^{-1/2} over the CSR adjacency —
+/// identical per-entry float operations (and summation order) as the
+/// dense `sym_normalize`, touching only stored edges plus the diagonal.
+pub fn sym_normalize_csr(adj: &CsrGraph) -> CsrNormalized {
+    use super::normalize::AFFINITY_REF_LAT_MS;
+    let n = adj.n;
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    row_ptr.push(0);
+    let mut cols = Vec::with_capacity(adj.nnz() + n);
+    let mut vals = Vec::with_capacity(adj.nnz() + n);
+    let mut deg = Vec::with_capacity(n);
+    for i in 0..n {
+        let (rcols, rvals) = adj.row(i);
+        let mut d = 0.0f32;
+        let mut diag_emitted = false;
+        for (&j, &w) in rcols.iter().zip(rvals) {
+            if !diag_emitted && j > i {
+                cols.push(i);
+                vals.push(1.0);
+                d += 1.0;
+                diag_emitted = true;
+            }
+            // The adjacency stores no self loops, so j == i cannot occur.
+            let s = (AFFINITY_REF_LAT_MS / w.max(1e-6)).min(1.0);
+            cols.push(j);
+            vals.push(s);
+            d += s;
+        }
+        if !diag_emitted {
+            cols.push(i);
+            vals.push(1.0);
+            d += 1.0;
+        }
+        deg.push(d);
+        row_ptr.push(cols.len());
+    }
+    let dinv: Vec<f32> =
+        deg.iter().map(|&d| 1.0 / d.max(1e-12).sqrt()).collect();
+    for i in 0..n {
+        for k in row_ptr[i]..row_ptr[i + 1] {
+            vals[k] *= dinv[i] * dinv[cols[k]];
+        }
+    }
+    CsrNormalized { n, real: adj.real, row_ptr, cols, vals }
+}
+
+impl CsrNormalized {
+    /// `Â[..real, ..real] @ x` — the sparse aggregation kernel, O(E·F).
+    ///
+    /// Real rows of Â only reference real columns (edges connect real
+    /// machines; padding rows carry just their self loop), so the
+    /// product over the `real × cols` block of `x` is exact.
+    pub fn matmul_real(&self, x: &MatF32) -> MatF32 {
+        assert_eq!(x.rows, self.real, "aggregation input must be real-row");
+        let mut out = MatF32::zeros(self.real, x.cols);
+        for i in 0..self.real {
+            let orow = &mut out.data[i * x.cols..(i + 1) * x.cols];
+            for k in self.row_ptr[i]..self.row_ptr[i + 1] {
+                let a = self.vals[k];
+                let brow = x.row(self.cols[k]);
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Fleet;
+    use crate::graph::normalize::sym_normalize;
+
+    fn toy() -> ClusterGraph {
+        ClusterGraph::from_fleet(&Fleet::paper_toy(0))
+    }
+
+    #[test]
+    fn csr_roundtrips_the_dense_adjacency() {
+        let g = toy();
+        let csr = CsrGraph::padded(&g, 16);
+        assert_eq!(csr.n, 16);
+        assert_eq!(csr.real, g.n);
+        let dense = g.padded_adj(16);
+        assert_eq!(csr.to_dense(), dense);
+        // Columns strictly ascending per row.
+        for i in 0..16 {
+            let (cols, _) = csr.row(i);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {i}");
+        }
+    }
+
+    #[test]
+    fn padding_rows_are_empty_and_counted_in_density() {
+        let g = toy();
+        let tight = CsrGraph::from_graph(&g);
+        let padded = CsrGraph::padded(&g, 32);
+        assert_eq!(tight.nnz(), padded.nnz());
+        for i in g.n..32 {
+            assert!(padded.row(i).0.is_empty());
+        }
+        assert!(padded.density() < tight.density());
+        assert!(padded.density() <= CSR_DENSITY_MAX);
+    }
+
+    #[test]
+    fn normalized_csr_matches_dense_sym_normalize() {
+        let g = toy();
+        let slots = 16;
+        let a_dense = sym_normalize(&g.padded_adj(slots), slots);
+        let a_csr = sym_normalize_csr(&CsrGraph::padded(&g, slots));
+        let mut rebuilt = MatF32::zeros(slots, slots);
+        for i in 0..slots {
+            for k in a_csr.row_ptr[i]..a_csr.row_ptr[i + 1] {
+                rebuilt.set(i, a_csr.cols[k], a_csr.vals[k]);
+            }
+        }
+        assert_eq!(rebuilt, a_dense, "Â entries must match bitwise");
+        // Diagonal present on every row — padding rows included.
+        for i in 0..slots {
+            let span = a_csr.row_ptr[i]..a_csr.row_ptr[i + 1];
+            assert!(a_csr.cols[span].contains(&i), "row {i} lost its diag");
+        }
+    }
+
+    #[test]
+    fn sparse_aggregation_matches_dense_matmul_on_real_rows() {
+        let g = toy();
+        let slots = 16;
+        let a_dense = sym_normalize(&g.padded_adj(slots), slots);
+        let a_csr = sym_normalize_csr(&CsrGraph::padded(&g, slots));
+        let x_full = MatF32::from_vec(
+            slots,
+            3,
+            (0..slots * 3).map(|v| (v as f32 * 0.37).sin()).collect(),
+        );
+        // Zero the padding rows, as masked GCN activations are.
+        let mut x_full = x_full;
+        for r in g.n..slots {
+            for c in 0..3 {
+                x_full.set(r, c, 0.0);
+            }
+        }
+        let dense = a_dense.matmul(&x_full);
+        let x_real =
+            MatF32::from_vec(g.n, 3, x_full.data[..g.n * 3].to_vec());
+        let sparse = a_csr.matmul_real(&x_real);
+        for i in 0..g.n {
+            for c in 0..3 {
+                assert!((dense.at(i, c) - sparse.at(i, c)).abs() < 1e-6,
+                        "({i},{c}): {} vs {}", dense.at(i, c),
+                        sparse.at(i, c));
+            }
+        }
+    }
+}

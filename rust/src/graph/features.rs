@@ -18,6 +18,7 @@
 //! well-conditioned input.
 
 use super::adjacency::ClusterGraph;
+use super::csr::CsrGraph;
 use crate::cluster::Machine;
 
 /// Feature dimension; must equal `f` in artifacts/manifest.kv.
@@ -28,6 +29,45 @@ pub const FEATURE_DIM: usize = N_REGION_CHANNELS + 6;
 /// construction, so adding a region cannot silently corrupt rows.
 const N_REGION_CHANNELS: usize = crate::cluster::Region::ALL.len();
 
+/// Graph-derived channels of node i: (degree, mean latency, min latency)
+/// reduced in one ascending-neighbor pass. The summation/compare order is
+/// exactly the one `ClusterGraph::{degree, mean_latency, min_latency}`
+/// visit, so the channel values are bit-identical to the historical
+/// three-scan build.
+fn latency_channels(weights: impl Iterator<Item = f32>)
+    -> (usize, f32, f32)
+{
+    let mut deg = 0usize;
+    let mut sum = 0.0f32;
+    let mut min = f32::INFINITY;
+    for w in weights {
+        if w > 0.0 {
+            deg += 1;
+            sum += w;
+            if w < min {
+                min = w;
+            }
+        }
+    }
+    if deg == 0 {
+        (0, 0.0, 0.0)
+    } else {
+        (deg, sum / deg as f32, min)
+    }
+}
+
+fn feature_row(row: &mut [f32], m: &Machine, n: usize, deg: usize,
+               mean: f32, min: f32)
+{
+    row[m.region.index()] = 1.0;
+    row[12] = (m.compute_capability() / 10.0) as f32;
+    row[13] = (m.total_memory_gb().max(1.0).log2() / 10.0) as f32;
+    row[14] = deg as f32 / n.max(1) as f32;
+    row[15] = mean / 1000.0;
+    row[16] = min / 1000.0;
+    row[17] = 1.0;
+}
+
 /// Features for every machine, padded to `slots` rows (row-major
 /// `[slots, FEATURE_DIM]`). Padded rows are all-zero.
 pub fn node_features(machines: &[Machine], graph: &ClusterGraph,
@@ -37,14 +77,26 @@ pub fn node_features(machines: &[Machine], graph: &ClusterGraph,
     assert!(slots >= graph.n);
     let mut out = vec![0.0f32; slots * FEATURE_DIM];
     for (i, m) in machines.iter().enumerate() {
+        let adj_row = &graph.adj[i * graph.n..(i + 1) * graph.n];
+        let (deg, mean, min) = latency_channels(adj_row.iter().copied());
         let row = &mut out[i * FEATURE_DIM..(i + 1) * FEATURE_DIM];
-        row[m.region.index()] = 1.0;
-        row[12] = (m.compute_capability() / 10.0) as f32;
-        row[13] = (m.total_memory_gb().max(1.0).log2() / 10.0) as f32;
-        row[14] = graph.degree(i) as f32 / graph.n.max(1) as f32;
-        row[15] = graph.mean_latency(i).unwrap_or(0.0) / 1000.0;
-        row[16] = graph.min_latency(i).unwrap_or(0.0) / 1000.0;
-        row[17] = 1.0;
+        feature_row(row, m, graph.n, deg, mean, min);
+    }
+    out
+}
+
+/// [`node_features`] from a CSR view — O(E) instead of O(n²), identical
+/// values. `csr.n` is the slot count; padded rows stay all-zero.
+pub fn node_features_csr(machines: &[Machine], csr: &CsrGraph)
+    -> Vec<f32>
+{
+    assert_eq!(machines.len(), csr.real, "fleet/graph size mismatch");
+    let mut out = vec![0.0f32; csr.n * FEATURE_DIM];
+    for (i, m) in machines.iter().enumerate() {
+        let (_, vals) = csr.row(i);
+        let (deg, mean, min) = latency_channels(vals.iter().copied());
+        let row = &mut out[i * FEATURE_DIM..(i + 1) * FEATURE_DIM];
+        feature_row(row, m, csr.real, deg, mean, min);
     }
     out
 }
@@ -119,6 +171,18 @@ mod tests {
         assert_eq!(f[15], 0.0);
         assert_eq!(f[16], 0.0);
         assert_eq!(f[14], 0.0);
+    }
+
+    #[test]
+    fn csr_features_match_dense_features_bitwise() {
+        for fleet in [Fleet::paper_toy(0), Fleet::paper_evaluation(3)] {
+            let graph = ClusterGraph::from_fleet(&fleet);
+            let slots = graph.n + 7;
+            let dense = node_features(&fleet.machines, &graph, slots);
+            let csr = crate::graph::CsrGraph::padded(&graph, slots);
+            let sparse = node_features_csr(&fleet.machines, &csr);
+            assert_eq!(dense, sparse);
+        }
     }
 
     #[test]

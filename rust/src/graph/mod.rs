@@ -8,9 +8,11 @@
 //! `artifacts/manifest.kv`).
 
 pub mod adjacency;
+pub mod csr;
 pub mod features;
 pub mod normalize;
 
 pub use adjacency::ClusterGraph;
-pub use features::{node_features, FEATURE_DIM};
+pub use csr::{sym_normalize_csr, CsrGraph, CsrNormalized, CSR_DENSITY_MAX};
+pub use features::{node_features, node_features_csr, FEATURE_DIM};
 pub use normalize::sym_normalize;

@@ -19,7 +19,6 @@ use hulk::cli::Cli;
 use hulk::cluster::Fleet;
 use hulk::coordinator::{Coordinator, CoordinatorEvent, CoordinatorReply};
 use hulk::gnn::{make_dataset, train_gcn, TrainerOptions};
-use hulk::graph::ClusterGraph;
 use hulk::models::ModelSpec;
 use hulk::planner::{CostBackend, HulkSplitterKind, PlannerRegistry};
 use hulk::runtime::{GcnRuntime, Manifest};
@@ -296,10 +295,8 @@ fn cmd_simulate(cli: &Cli) -> Result<()> {
     }
     coordinator.handle(CoordinatorEvent::Tick { iterations: 50 });
     println!("\nleader metrics:\n{}", coordinator.metrics.render());
-    let graph = ClusterGraph::from_fleet(&coordinator.fleet);
     coordinator.assignment.validate_disjoint(coordinator.fleet.len())
         .map_err(|e| anyhow::anyhow!(e))?;
-    let _ = graph;
     println!("final assignment valid ✓");
     Ok(())
 }

@@ -127,7 +127,7 @@ fn plan_with_splitter(ctx: &PlanContext, splitter: &HulkSplitterKind)
     );
     let assignment = match splitter {
         HulkSplitterKind::Gnn { classifier, params } => {
-            let f = GnnSplitter { classifier, params };
+            let f = GnnSplitter::new(classifier, params);
             run_algorithm1(ctx.fleet, ctx.graph, ctx.workload, &f)?
         }
         HulkSplitterKind::Oracle => {

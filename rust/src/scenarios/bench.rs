@@ -17,19 +17,21 @@ use crate::cluster::paper_data::{fig6_node_45, TABLE1_MS, TABLE1_RECEIVERS,
                                  TABLE1_SENDERS};
 use crate::cluster::{Fleet, WanModel};
 use crate::coordinator::{recover, RecoveryAction};
-use crate::gnn::{make_dataset, train_gcn, TrainerOptions};
+use crate::gnn::{make_dataset, train_gcn, RefGcn, RefGcnConfig,
+                 TrainerOptions};
 use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
 use crate::parallel::{pipeline_cost, PipelinePlan};
 use crate::planner::{chain_order, CostBackend, HulkPlanner,
                      HulkSplitterKind, PlanContext, Planner,
-                     PlannerRegistry};
+                     PlannerRegistry, SystemAPlanner};
 use crate::runtime::client::TrainState;
 use crate::runtime::{GcnRuntime, Manifest};
 use crate::scheduler::{oracle_partition, OracleOptions};
 use crate::sim::{execute_placement, simulate_pipeline};
 
 use super::evaluate::evaluate_all;
+use super::world::ScenarioWorld;
 use crate::util::rng::Rng;
 use crate::util::table::{fmt_ms, fmt_params, Table};
 
@@ -437,29 +439,80 @@ fn micro(cli: &Cli) -> Result<()> {
     b.bench("execute_placement_table1_hulk", || {
         execute_placement(&fleet, &tasks, &table1_placement)
     });
-    let planet = Fleet::synthetic(220, 12, seed);
-    let planet_graph = ClusterGraph::from_fleet(&planet);
-    let planet_tasks = {
-        let mut t = super::sweep::feasible_workload(
-            &planet, &ModelSpec::paper_six());
-        ModelSpec::sort_largest_first(&mut t);
-        t
-    };
-    let planet_ctx = PlanContext::new(&planet, &planet_graph,
-                                      &planet_tasks,
-                                      HulkSplitterKind::Oracle);
+    let planet_fleet: fn(u64) -> Fleet = |s| Fleet::synthetic(220, 12, s);
+    let planet_workload: fn(&Fleet) -> Vec<ModelSpec> =
+        |f| super::sweep::feasible_workload(f, &ModelSpec::paper_six());
+    let planet_world =
+        ScenarioWorld::for_evaluate(planet_fleet, planet_workload, seed);
+    let planet = planet_world.fleet();
+    let planet_ctx = planet_world.context(HulkSplitterKind::Oracle);
     let planet_placement = HulkPlanner.plan(&planet_ctx)?;
     let planet_events =
-        execute_placement(&planet, &planet_tasks, &planet_placement)
+        execute_placement(planet, planet_world.workload(),
+                          &planet_placement)
             .report
             .events_processed;
     let r = b.bench("execute_placement_planet_hulk", || {
-        execute_placement(&planet, &planet_tasks, &planet_placement)
+        execute_placement(planet, planet_world.workload(),
+                          &planet_placement)
     });
     let planet_events_per_sec =
         planet_events as f64 / (r.summary.mean / 1e3);
     println!("≈ {planet_events_per_sec:.0} events/sec executing the \
               planet_scale Hulk placement ({planet_events} events)");
+
+    // The evaluation hot path, amortized: what one runner cell costs
+    // with the shared per-(scenario, seed) ScenarioWorld (`hit`) vs
+    // rebuilding fleet + O(n²) graph + workload from scratch per cell
+    // (`miss`, the pre-cache behavior). `world_build_planet` is the
+    // miss surcharge on its own.
+    b.bench("world_build_planet", || {
+        ScenarioWorld::for_evaluate(planet_fleet, planet_workload, seed)
+    });
+    let system_a_cell = |world: &ScenarioWorld| {
+        let ctx = world.context(HulkSplitterKind::Oracle);
+        let placement = SystemAPlanner.plan(&ctx).expect("System A plans");
+        SystemAPlanner.price(&ctx, &placement)
+    };
+    b.bench("cell_planet_system_a_miss", || {
+        let world = ScenarioWorld::for_evaluate(planet_fleet,
+                                                planet_workload, seed);
+        system_a_cell(&world)
+    });
+    b.bench("cell_planet_system_a_hit", || system_a_cell(&planet_world));
+
+    // GCN classification at planet scale: a planet-capable reference
+    // artifact (384 slots of headroom over the 220 machines). `dense`
+    // is the padded-dense oracle shape — rebuild the graph per call,
+    // pad the dense tensors, run the O(slots²·F) forward (the same
+    // dense contraction the PJRT artifact's HLO executes); `csr` is
+    // the shipped hot path — `ScenarioWorld::classify` over the cached
+    // CSR tensors, O(E·F) aggregation, real rows only.
+    let clf_cfg = RefGcnConfig { n: 384, f: crate::graph::FEATURE_DIM,
+                                 h: 64, h2: 32, c: 8 };
+    let clf_params: Vec<f32> = {
+        let mut r = Rng::new(seed ^ 0x4743_4E21); // "GCN!"
+        (0..clf_cfg.n_params())
+            .map(|_| (r.normal() * 0.1) as f32)
+            .collect()
+    };
+    let gcn = RefGcn::new(clf_cfg, &clf_params);
+    b.bench("classify_planet_dense", || {
+        let graph = ClusterGraph::from_fleet(planet);
+        let adj = graph.padded_adj(clf_cfg.n);
+        let feats = crate::graph::node_features(&planet.machines, &graph,
+                                                clf_cfg.n);
+        let mask = graph.padded_mask(clf_cfg.n);
+        let probs = gcn.forward(&adj, &feats, &mask);
+        (0..planet.len())
+            .map(|i| crate::gnn::inference::argmax_class(probs.row(i)))
+            .sum::<usize>()
+    });
+    let clf = crate::gnn::Classifier::Reference(RefGcn::new(clf_cfg,
+                                                            &clf_params));
+    b.bench("classify_planet_csr", || {
+        planet_world.classify(&clf, &clf_params).expect("classify")
+    });
 
     if cli.flag_bool("json") {
         let out = std::path::PathBuf::from(cli.flag("out").unwrap_or("."));

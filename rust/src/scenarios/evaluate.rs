@@ -11,13 +11,14 @@
 use anyhow::Result;
 
 use crate::cluster::Fleet;
-use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
 use crate::parallel::IterCost;
 use crate::planner::{CostBackend, ExecReport, HulkSplitterKind,
-                     PlacementSummary, PlanContext, Planner, PlannerKind,
+                     PlacementSummary, Planner, PlannerKind,
                      PlannerRegistry, SystemMeta};
 use crate::util::table::{fmt_ms, Table};
+
+use super::world::ScenarioWorld;
 
 /// One evaluated workload: per-model, per-planner iteration costs plus
 /// each planner's placement digest.
@@ -123,20 +124,16 @@ impl SystemEval {
     }
 }
 
-/// Evaluate `workload` under every planner in `planners`, priced by
-/// `backend`. Hulk-family planners drive Algorithm 1 with the given
-/// splitter (GNN in production, oracle for artifact-free runs).
-pub fn evaluate_with_backend(planners: &PlannerRegistry, fleet: &Fleet,
-                             workload: &[ModelSpec],
-                             splitter: HulkSplitterKind,
-                             backend: CostBackend) -> Result<SystemEval>
+/// Evaluate a prebuilt [`ScenarioWorld`] under every planner in
+/// `planners`, priced by `backend` — the core loop; nothing here
+/// rebuilds fleet, graph, or workload. Hulk-family planners drive
+/// Algorithm 1 with the given splitter (GNN in production, oracle for
+/// artifact-free runs).
+pub fn evaluate_world(planners: &PlannerRegistry, world: &ScenarioWorld,
+                      splitter: HulkSplitterKind,
+                      backend: CostBackend) -> Result<SystemEval>
 {
-    let graph = ClusterGraph::from_fleet(fleet);
-    let mut models = workload.to_vec();
-    ModelSpec::sort_largest_first(&mut models);
-    let ctx = PlanContext::new(fleet, &graph, &models, splitter)
-        .with_backend(backend);
-
+    let ctx = world.context(splitter).with_backend(backend);
     let mut columns: Vec<Vec<IterCost>> = Vec::with_capacity(planners.len());
     let mut placements = Vec::with_capacity(planners.len());
     let mut exec = Vec::with_capacity(planners.len());
@@ -145,13 +142,27 @@ pub fn evaluate_with_backend(planners: &PlannerRegistry, fleet: &Fleet,
         let priced = planner.price(&ctx, &placement);
         columns.push(priced.per_task);
         exec.push(priced.exec);
-        placements.push(placement.summary(fleet));
+        placements.push(placement.summary(world.fleet()));
     }
+    let models = world.workload().to_vec();
     let costs = (0..models.len())
         .map(|m| columns.iter().map(|col| col[m]).collect())
         .collect();
     Ok(SystemEval { systems: planners.metas(), models, costs, placements,
                     backend, exec })
+}
+
+/// [`evaluate_world`] over a freshly built world — the from-scratch
+/// entry point for callers without a cached context (byte-identical
+/// output; the world build is exactly the setup this function always
+/// performed inline).
+pub fn evaluate_with_backend(planners: &PlannerRegistry, fleet: &Fleet,
+                             workload: &[ModelSpec],
+                             splitter: HulkSplitterKind,
+                             backend: CostBackend) -> Result<SystemEval>
+{
+    let world = ScenarioWorld::new(fleet.clone(), workload.to_vec());
+    evaluate_world(planners, &world, splitter, backend)
 }
 
 /// [`evaluate_with_backend`] under the default analytic formulas — the

@@ -30,12 +30,14 @@ pub mod evaluate;
 pub mod registry;
 pub mod runner;
 pub mod sweep;
+pub mod world;
 
 pub use evaluate::{evaluate_all, evaluate_with, evaluate_with_backend,
-                   SystemEval};
+                   evaluate_world, SystemEval};
 pub use registry::{all_scenarios, find_scenario, resolve_scenarios,
                    run_all};
-pub use runner::{run_specs, ScenarioBody, ScenarioResult, ScenarioSpec,
-                 SeedPolicy};
+pub use runner::{run_specs, run_specs_sharing, ScenarioBody,
+                 ScenarioResult, ScenarioSpec, SeedPolicy, WorldSharing};
 pub use sweep::{feasible_workload, fleet_size_sweep, microbatch_sweep,
                 truncated_fleet, wan_degradation_sweep, SweepPoint};
+pub use world::{PaddedWorld, ScenarioWorld};

@@ -42,11 +42,12 @@ use crate::sim::{simulate_pipeline, FailurePlan};
 use crate::util::rng::Rng;
 use crate::util::table::{fmt_ms, Table};
 
-use super::evaluate::{evaluate_with_backend, SystemEval};
+use super::evaluate::{evaluate_with_backend, evaluate_world, SystemEval};
 use super::runner::{exec_entries, placement_entries, run_specs,
                     ScenarioBody, ScenarioResult, ScenarioSpec,
                     SeedPolicy};
 use super::sweep::{feasible_workload, fleet_size_sweep, truncated_fleet};
+use super::world::ScenarioWorld;
 
 /// Every registered scenario, in canonical order. The trailing
 /// `sim_only` entries exist only under `--cost sim` (they measure
@@ -554,17 +555,20 @@ fn failure_storm(seed: u64, planners: &PlannerRegistry,
     }
     entries.push(BenchEntry::new("failure_storm/survivor_count",
                                  survivors.len() as f64, "count"));
-    let mut workload = feasible_workload(&survivors,
-                                         &ModelSpec::paper_four());
+    let workload = feasible_workload(&survivors, &ModelSpec::paper_four());
+    // One ScenarioWorld for everything downstream: the shed-retry loop
+    // and the DES step used to rebuild the survivors' O(n²) graph per
+    // attempt; workload forks share it.
+    let mut world = ScenarioWorld::new(survivors, workload);
     // The storm can leave too little contiguous memory for the largest
     // model; deterministically shed largest-first until Algorithm 1
     // accepts (paper: such tasks queue until resources return).
     let eval = loop {
-        match evaluate_with_backend(planners, &survivors, &workload,
-                                    HulkSplitterKind::Oracle, backend) {
+        match evaluate_world(planners, &world, HulkSplitterKind::Oracle,
+                             backend) {
             Ok(eval) => break eval,
-            Err(_) if workload.len() > 1 => {
-                workload.remove(0);
+            Err(_) if world.workload().len() > 1 => {
+                world = world.with_workload(world.workload()[1..].to_vec());
             }
             Err(e) => return Err(e),
         }
@@ -585,19 +589,18 @@ fn failure_storm(seed: u64, planners: &PlannerRegistry,
             planners.iter().find(|p| p.kind() == PlannerKind::Ablation)
         });
     let mut sim_note = String::new();
+    let survivors = world.fleet();
     if let Some(hulk) = des_planner {
-        let graph = ClusterGraph::from_fleet(&survivors);
-        let ctx = PlanContext::new(&survivors, &graph, &eval.models,
-                                   HulkSplitterKind::Oracle);
+        let ctx = world.context(HulkSplitterKind::Oracle);
         let placement = hulk.plan(&ctx)?;
         let pipe = placement
             .pipeline(0)
             .expect("hulk-family planners emit pipelined placements");
         if pipe.stages.len() > 1
-            && pipeline_cost(&survivors, &pipe, &eval.models[0])
+            && pipeline_cost(survivors, &pipe, &eval.models[0])
                 .is_feasible()
         {
-            let healthy = simulate_pipeline(&survivors, &pipe,
+            let healthy = simulate_pipeline(survivors, &pipe,
                                             &eval.models[0], false, None);
             entries.push(BenchEntry::new(
                 "failure_storm/sim/healthy_makespan_ms",
@@ -608,7 +611,7 @@ fn failure_storm(seed: u64, planners: &PlannerRegistry,
                 at_ms: healthy.makespan_ms * 0.5,
                 machine: pipe.stages[1],
             };
-            let interrupted = simulate_pipeline(&survivors, &pipe,
+            let interrupted = simulate_pipeline(survivors, &pipe,
                                                 &eval.models[0], false,
                                                 Some(injected));
             if let Some(outcome) = interrupted.failure {
@@ -980,14 +983,16 @@ fn contended_links(seed: u64, planners: &PlannerRegistry,
 fn sim_vs_analytic(seed: u64, planners: &PlannerRegistry,
                    _backend: CostBackend) -> Result<ScenarioResult>
 {
-    let fleet = Fleet::paper_evaluation(seed);
-    let workload = ModelSpec::paper_four();
-    let analytic = evaluate_with_backend(planners, &fleet, &workload,
-                                         HulkSplitterKind::Oracle,
-                                         CostBackend::Analytic)?;
-    let sim = evaluate_with_backend(planners, &fleet, &workload,
-                                    HulkSplitterKind::Oracle,
-                                    CostBackend::Simulated)?;
+    // One world, priced by both backends — the fleet/graph/workload are
+    // identical by construction, so building them twice would only
+    // duplicate the O(n²) setup.
+    let world = ScenarioWorld::new(Fleet::paper_evaluation(seed),
+                                   ModelSpec::paper_four());
+    let analytic = evaluate_world(planners, &world,
+                                  HulkSplitterKind::Oracle,
+                                  CostBackend::Analytic)?;
+    let sim = evaluate_world(planners, &world, HulkSplitterKind::Oracle,
+                             CostBackend::Simulated)?;
     let mut entries = Vec::new();
     let mut t = Table::new(&["System", "analytic Σ", "sim Σ", "gap"]);
     for (s, meta) in analytic.systems.iter().enumerate() {

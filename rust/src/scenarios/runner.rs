@@ -27,22 +27,28 @@
 //! --parallel` writes a `BENCH_scenarios.json` that is byte-identical
 //! to the serial run's (for either backend), which CI enforces as a
 //! gate.
+//!
+//! Cells of one spec share a single [`ScenarioWorld`] (fleet + cluster
+//! graph + canonical workload), built once per (scenario, seed) instead
+//! of once per cell. The world is itself a pure function of
+//! `(spec, seed)`, so sharing is invisible in the artifacts —
+//! [`WorldSharing::Rebuild`] is the cache-off mode the byte-identity
+//! tests diff against.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::Result;
 
 use crate::benchkit::BenchEntry;
 use crate::cluster::Fleet;
-use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
 use crate::parallel::IterCost;
 use crate::planner::{CostBackend, ExecReport, HulkSplitterKind,
-                     PlacementSummary, PlanContext, Planner,
-                     PlannerRegistry};
+                     PlacementSummary, Planner, PlannerRegistry};
 
 use super::evaluate::SystemEval;
+use super::world::ScenarioWorld;
 
 /// How a scenario derives its effective seed from the CLI seed.
 #[derive(Clone, Copy, Debug)]
@@ -160,46 +166,56 @@ enum CellOut {
     Whole(ScenarioResult),
 }
 
-/// Fleet + canonically ordered workload for an `Evaluate` body.
+/// Whether `Evaluate` cells of one spec share a single
+/// [`ScenarioWorld`] or rebuild it per cell.
 ///
-/// Deliberately rebuilt inside every cell (and once more in the merge):
-/// keeping each cell a pure function of `(spec, planner, seed)` is what
-/// makes parallel output byte-identical to serial. Fleet/workload
-/// construction — and the per-cell `ClusterGraph` the `PlanContext`
-/// carries, even for baseline planners that never read it — is
-/// microseconds next to the cost models, so the duplication is noise;
-/// sharing either across cells would couple cells to each other and
-/// break the purity contract.
-fn eval_inputs(fleet: fn(u64) -> Fleet,
-               workload: fn(&Fleet) -> Vec<ModelSpec>, eff_seed: u64)
-    -> (Fleet, Vec<ModelSpec>)
-{
-    let fl = fleet(eff_seed);
-    let mut wl = workload(&fl);
-    ModelSpec::sort_largest_first(&mut wl);
-    (fl, wl)
+/// `Shared` is the production mode: the world is a pure function of
+/// `(spec, seed)`, so sharing the one allocation across every planner
+/// cell (and the merge) changes no output byte — it only stops paying
+/// the fleet + O(n²) graph rebuild once per cell. `Rebuild` is the
+/// cache-off reference mode the determinism tests diff against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorldSharing {
+    Shared,
+    Rebuild,
 }
 
-/// Execute one cell. Pure in `(spec, cell_idx, seed, planners, backend)`.
+/// Build the world of an `Evaluate` spec from the CLI seed.
+fn spec_world(spec: &ScenarioSpec, seed: u64) -> ScenarioWorld {
+    match &spec.body {
+        ScenarioBody::Evaluate { fleet, workload, .. } => {
+            ScenarioWorld::for_evaluate(*fleet, *workload,
+                                        spec.seed.apply(seed))
+        }
+        ScenarioBody::Custom(_) => {
+            unreachable!("custom bodies build their own contexts")
+        }
+    }
+}
+
+/// Execute one cell. Pure in `(spec, cell_idx, seed, planners,
+/// backend)` — the shared world is itself a pure function of
+/// `(spec, seed)`, so sharing it does not weaken the contract.
 fn run_cell(spec: &ScenarioSpec, cell_idx: usize, seed: u64,
-            planners: &PlannerRegistry, backend: CostBackend)
+            planners: &PlannerRegistry, backend: CostBackend,
+            world: Option<Arc<ScenarioWorld>>)
     -> Result<CellOut>
 {
-    let eff = spec.seed.apply(seed);
     match &spec.body {
         ScenarioBody::Custom(f) => {
-            Ok(CellOut::Whole(f(eff, planners, backend)?))
+            Ok(CellOut::Whole(f(spec.seed.apply(seed), planners,
+                                backend)?))
         }
-        ScenarioBody::Evaluate { fleet, workload, .. } => {
-            let (fl, wl) = eval_inputs(*fleet, *workload, eff);
-            let graph = ClusterGraph::from_fleet(&fl);
-            let ctx = PlanContext::new(&fl, &graph, &wl,
-                                       HulkSplitterKind::Oracle)
+        ScenarioBody::Evaluate { .. } => {
+            let world = world.expect("evaluate cell carries a world");
+            let ctx = world
+                .context(HulkSplitterKind::Oracle)
                 .with_backend(backend);
             let planner = planners.get(cell_idx);
             let placement = planner.plan(&ctx)?;
             let priced = planner.price(&ctx, &placement);
-            Ok(CellOut::Column(priced.per_task, placement.summary(&fl),
+            Ok(CellOut::Column(priced.per_task,
+                               placement.summary(world.fleet()),
                                priced.exec))
         }
     }
@@ -261,8 +277,9 @@ pub(crate) fn exec_entries(scenario: &str, eval: &SystemEval)
 /// Merge one spec's cell outputs back into a [`ScenarioResult`].
 /// Errors propagate in cell order, so the first failing cell of the
 /// first failing scenario wins — the same error a serial run reports.
-fn merge_spec(spec: &ScenarioSpec, seed: u64, planners: &PlannerRegistry,
-              backend: CostBackend, outs: Vec<Result<CellOut>>)
+fn merge_spec(spec: &ScenarioSpec, planners: &PlannerRegistry,
+              backend: CostBackend, outs: Vec<Result<CellOut>>,
+              world: Option<Arc<ScenarioWorld>>)
     -> Result<ScenarioResult>
 {
     match &spec.body {
@@ -273,7 +290,7 @@ fn merge_spec(spec: &ScenarioSpec, seed: u64, planners: &PlannerRegistry,
                 CellOut::Column(..) => unreachable!("custom cell → Whole"),
             }
         }
-        ScenarioBody::Evaluate { fleet, workload, finish } => {
+        ScenarioBody::Evaluate { finish, .. } => {
             let mut columns = Vec::with_capacity(planners.len());
             let mut placements = Vec::with_capacity(planners.len());
             let mut exec = Vec::with_capacity(planners.len());
@@ -287,8 +304,8 @@ fn merge_spec(spec: &ScenarioSpec, seed: u64, planners: &PlannerRegistry,
                     CellOut::Whole(_) => unreachable!("eval cell → Column"),
                 }
             }
-            let (fl, wl) = eval_inputs(*fleet, *workload,
-                                       spec.seed.apply(seed));
+            let world = world.expect("evaluate spec carries a world");
+            let wl = world.workload().to_vec();
             let costs: Vec<Vec<IterCost>> = (0..wl.len())
                 .map(|m| columns.iter().map(|col| col[m]).collect())
                 .collect();
@@ -300,7 +317,7 @@ fn merge_spec(spec: &ScenarioSpec, seed: u64, planners: &PlannerRegistry,
                 backend,
                 exec,
             };
-            let (mut entries, mut rendered) = finish(&fl, &eval);
+            let (mut entries, mut rendered) = finish(world.fleet(), &eval);
             // Under the simulated backend every evaluated scenario also
             // reports its contention digest; under analytic these are
             // no-ops, keeping the artifact byte-identical.
@@ -323,9 +340,22 @@ fn merge_spec(spec: &ScenarioSpec, seed: u64, planners: &PlannerRegistry,
 /// serial execution, no threads spawned), evaluating under `planners`
 /// priced by `backend`. Results come back in spec order with identical
 /// contents regardless of `threads` — callers may diff the serialized
-/// reports byte-for-byte, for either backend.
+/// reports byte-for-byte, for either backend. Each spec's
+/// [`ScenarioWorld`] is built once and shared across its cells.
 pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize,
                  planners: &PlannerRegistry, backend: CostBackend)
+    -> Result<Vec<ScenarioResult>>
+{
+    run_specs_sharing(specs, seed, threads, planners, backend,
+                      WorldSharing::Shared)
+}
+
+/// [`run_specs`] with an explicit [`WorldSharing`] mode. `Rebuild`
+/// reconstructs the world inside every cell — the cache-off reference
+/// the byte-identity tests compare against; never faster, only honest.
+pub fn run_specs_sharing(specs: &[ScenarioSpec], seed: u64,
+                         threads: usize, planners: &PlannerRegistry,
+                         backend: CostBackend, sharing: WorldSharing)
     -> Result<Vec<ScenarioResult>>
 {
     // Flatten to (spec, cell) pairs — the schedulable unit.
@@ -334,6 +364,24 @@ pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize,
         .enumerate()
         .flat_map(|(si, s)| (0..s.n_cells(planners)).map(move |ci| (si, ci)))
         .collect();
+
+    // One lazily built world per spec, shared by that spec's cells and
+    // its merge. `OnceLock` keeps the build race-free under `--parallel`
+    // (first worker to touch the spec builds; the rest share the Arc).
+    let worlds: Vec<OnceLock<Arc<ScenarioWorld>>> =
+        specs.iter().map(|_| OnceLock::new()).collect();
+    let world_for = |si: usize| -> Option<Arc<ScenarioWorld>> {
+        let spec = &specs[si];
+        if !matches!(spec.body, ScenarioBody::Evaluate { .. }) {
+            return None;
+        }
+        Some(match sharing {
+            WorldSharing::Shared => worlds[si]
+                .get_or_init(|| Arc::new(spec_world(spec, seed)))
+                .clone(),
+            WorldSharing::Rebuild => Arc::new(spec_world(spec, seed)),
+        })
+    };
 
     let outs: Vec<Result<CellOut>> = if threads <= 1 || cells.len() <= 1 {
         // Serial: stop executing after the first failure — later cells
@@ -347,7 +395,8 @@ pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize,
                     "cell not run: an earlier scenario cell failed")));
                 continue;
             }
-            let out = run_cell(&specs[si], ci, seed, planners, backend);
+            let out = run_cell(&specs[si], ci, seed, planners, backend,
+                               world_for(si));
             failed = out.is_err();
             outs.push(out);
         }
@@ -362,8 +411,8 @@ pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize,
                 scope.spawn(|| loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     let Some(&(si, ci)) = cells.get(i) else { break };
-                    let out =
-                        run_cell(&specs[si], ci, seed, planners, backend);
+                    let out = run_cell(&specs[si], ci, seed, planners,
+                                       backend, world_for(si));
                     *slots[i].lock().expect("cell slot poisoned") = Some(out);
                 });
             }
@@ -382,10 +431,11 @@ pub fn run_specs(specs: &[ScenarioSpec], seed: u64, threads: usize,
     let mut outs = outs.into_iter();
     specs
         .iter()
-        .map(|spec| {
+        .enumerate()
+        .map(|(si, spec)| {
             let cell_outs: Vec<Result<CellOut>> =
                 outs.by_ref().take(spec.n_cells(planners)).collect();
-            merge_spec(spec, seed, planners, backend, cell_outs)
+            merge_spec(spec, planners, backend, cell_outs, world_for(si))
         })
         .collect()
 }

@@ -16,12 +16,12 @@
 use anyhow::Result;
 
 use crate::cluster::{Fleet, Machine};
-use crate::graph::ClusterGraph;
 use crate::models::ModelSpec;
-use crate::planner::{CostBackend, HulkSplitterKind, Placement,
-                     PlanContext, Planner, PlannerRegistry, TaskPlacement};
+use crate::planner::{CostBackend, HulkSplitterKind, Placement, Planner,
+                     PlannerRegistry, TaskPlacement};
 
 use super::evaluate::evaluate_with_backend;
+use super::world::ScenarioWorld;
 
 /// One sweep point.
 #[derive(Clone, Debug)]
@@ -94,11 +94,9 @@ pub fn microbatch_sweep(planners: &PlannerRegistry, backend: CostBackend,
     let hulk = planners.find("hulk").ok_or_else(|| {
         anyhow::anyhow!("microbatch sweep needs a registered hulk planner")
     })?;
-    let fleet = Fleet::paper_evaluation(seed);
-    let graph = ClusterGraph::from_fleet(&fleet);
-    let workload = std::slice::from_ref(model);
-    let ctx = PlanContext::new(&fleet, &graph, workload,
-                               HulkSplitterKind::Oracle);
+    let world = ScenarioWorld::new(Fleet::paper_evaluation(seed),
+                                   vec![model.clone()]);
+    let ctx = world.context(HulkSplitterKind::Oracle);
     let placement = hulk.plan(&ctx)?;
     let base = placement.pipeline(0).expect("hulk tasks are pipelined");
     let mut out = Vec::with_capacity(ks.len());
@@ -112,8 +110,9 @@ pub fn microbatch_sweep(planners: &PlannerRegistry, backend: CostBackend,
                 microbatches: p.microbatches,
             }],
         };
-        let cost =
-            backend.price(&fleet, workload, &single).per_task[0];
+        let cost = backend
+            .price(world.fleet(), world.workload(), &single)
+            .per_task[0];
         out.push(SweepPoint { x: k as f64, improvement: cost.total_ms() });
     }
     Ok(out)

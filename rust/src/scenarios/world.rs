@@ -1,0 +1,256 @@
+//! [`ScenarioWorld`] — the per-(scenario, seed) context cache.
+//!
+//! Every (scenario × planner × seed × backend) cell used to rebuild the
+//! same fleet, re-derive the O(n²) [`ClusterGraph`], and re-sort the
+//! workload from scratch; at planet scale that rebuild dominated the
+//! whole evaluation loop. A `ScenarioWorld` is built **once** per
+//! (scenario, seed) and shared — the runner hands one `Arc` to every
+//! cell of a spec (`--parallel` workers share the same allocation, they
+//! do not clone it), `evaluate` consumes it directly, and custom
+//! scenario bodies reuse one world across their evaluation + DES steps.
+//!
+//! Everything inside is a pure function of `(fleet builder, workload
+//! builder, effective seed)`, so sharing cannot change any artifact
+//! byte: the runner's cache-off mode rebuilds a fresh world per cell
+//! and CI asserts the outputs are identical
+//! (`rust/tests/world_cache.rs`).
+//!
+//! Ownership (see DESIGN.md §ScenarioWorld for the full diagram):
+//!
+//! ```text
+//! ScenarioWorld (Arc, one per scenario × seed)
+//! ├── fleet:    Arc<Fleet>          built once from the effective seed
+//! ├── graph:    Arc<ClusterGraph>   O(n²) adjacency, built once
+//! ├── workload: Vec<ModelSpec>      canonical (largest-first) order
+//! └── padded:   Arc<Mutex<…>>       lazily, per artifact slot count:
+//!     └── PaddedWorld { csr, feats, mask }   GCN inference tensors
+//! ```
+//!
+//! `with_workload` forks a world that shares the fleet/graph/padded
+//! arcs — how `failure_storm` sheds oversized tasks without paying a
+//! graph rebuild per retry.
+
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::Result;
+
+use crate::cluster::Fleet;
+use crate::gnn::Classifier;
+use crate::graph::{node_features_csr, ClusterGraph, CsrGraph};
+use crate::models::ModelSpec;
+use crate::planner::{HulkSplitterKind, PlanContext};
+
+/// Padded GCN-inference tensors for one artifact slot count: the CSR
+/// adjacency view plus features and node mask, all shaped `[slots, …]`.
+/// The dense `slots²` adjacency (what the PJRT artifact and the dense
+/// oracle consume) is materialized lazily — backends on the CSR path
+/// never pay for it.
+#[derive(Debug)]
+pub struct PaddedWorld {
+    pub slots: usize,
+    pub csr: CsrGraph,
+    pub feats: Vec<f32>,
+    pub mask: Vec<f32>,
+    dense: OnceLock<Vec<f32>>,
+}
+
+impl PaddedWorld {
+    /// The dense padded adjacency, built from the CSR view on first use
+    /// and cached (identical to `ClusterGraph::padded_adj`).
+    pub fn dense_adj(&self) -> &[f32] {
+        self.dense.get_or_init(|| self.csr.to_dense())
+    }
+}
+
+/// The shared per-(scenario, seed) arena. See the module docs.
+#[derive(Clone, Debug)]
+pub struct ScenarioWorld {
+    fleet: Arc<Fleet>,
+    graph: Arc<ClusterGraph>,
+    workload: Vec<ModelSpec>,
+    /// Lazily built padded tensors, keyed by slot count (tiny: one or
+    /// two artifact sizes per process). Shared across
+    /// `with_workload` forks.
+    padded: Arc<Mutex<Vec<Arc<PaddedWorld>>>>,
+}
+
+impl ScenarioWorld {
+    /// Build a world from parts: sorts `workload` into canonical
+    /// (largest-first) order and derives the cluster graph once.
+    pub fn new(fleet: Fleet, mut workload: Vec<ModelSpec>)
+        -> ScenarioWorld
+    {
+        ModelSpec::sort_largest_first(&mut workload);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        ScenarioWorld {
+            fleet: Arc::new(fleet),
+            graph: Arc::new(graph),
+            workload,
+            padded: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// The world of an `Evaluate` scenario body: fleet from the
+    /// effective seed, workload on that fleet, canonical order.
+    pub fn for_evaluate(fleet: fn(u64) -> Fleet,
+                        workload: fn(&Fleet) -> Vec<ModelSpec>,
+                        eff_seed: u64) -> ScenarioWorld
+    {
+        let fl = fleet(eff_seed);
+        let wl = workload(&fl);
+        ScenarioWorld::new(fl, wl)
+    }
+
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
+    }
+
+    pub fn graph(&self) -> &ClusterGraph {
+        &self.graph
+    }
+
+    /// The workload in canonical (largest-first) order.
+    pub fn workload(&self) -> &[ModelSpec] {
+        &self.workload
+    }
+
+    /// A fork with a different workload that **shares** the fleet,
+    /// graph, and padded-tensor caches (cheap: three `Arc` clones plus
+    /// the sort).
+    pub fn with_workload(&self, mut workload: Vec<ModelSpec>)
+        -> ScenarioWorld
+    {
+        ModelSpec::sort_largest_first(&mut workload);
+        ScenarioWorld {
+            fleet: self.fleet.clone(),
+            graph: self.graph.clone(),
+            workload,
+            padded: self.padded.clone(),
+        }
+    }
+
+    /// A [`PlanContext`] borrowing this world — the seam every planner
+    /// and both cost backends consume. Analytic backend by default;
+    /// chain [`PlanContext::with_backend`] to switch.
+    pub fn context(&self, splitter: HulkSplitterKind<'_>)
+        -> PlanContext<'_>
+    {
+        PlanContext::new(&self.fleet, &self.graph, &self.workload,
+                         splitter)
+    }
+
+    /// Classify every machine through the **cached** padded tensors —
+    /// the amortized counterpart of [`crate::gnn::classify`]: the CSR
+    /// view, features, mask (and, for dense-path backends like the
+    /// PJRT artifact, the dense adjacency) are built once per (world,
+    /// slot count) and every subsequent call is pure forward + argmax.
+    pub fn classify(&self, classifier: &Classifier, params: &[f32])
+        -> Result<Vec<usize>>
+    {
+        let padded = self.padded(classifier.slots());
+        let probs = if classifier.uses_csr(&padded.csr) {
+            classifier.probs_for_padded(params, &padded.csr,
+                                        &padded.feats, &padded.mask)?
+        } else {
+            // Dense-path backend: feed the cached dense tensor instead
+            // of letting `probs_for_padded` re-materialize it per call.
+            classifier.probs(params, padded.dense_adj(), &padded.feats,
+                             &padded.mask)?
+        };
+        Ok(crate::gnn::inference::classes_from_probs(
+            &probs, self.fleet.len(), classifier.n_classes()))
+    }
+
+    /// The padded GCN tensors for `slots` artifact slots, built on
+    /// first use and cached (thread-safe; `--parallel` cells share the
+    /// same build).
+    pub fn padded(&self, slots: usize) -> Arc<PaddedWorld> {
+        let mut cache = self.padded.lock().expect("padded cache poisoned");
+        if let Some(hit) = cache.iter().find(|p| p.slots == slots) {
+            return hit.clone();
+        }
+        let csr = CsrGraph::padded(&self.graph, slots);
+        let feats = node_features_csr(&self.fleet.machines, &csr);
+        let mask = self.graph.padded_mask(slots);
+        let built = Arc::new(PaddedWorld { slots, csr, feats, mask,
+                                           dense: OnceLock::new() });
+        cache.push(built.clone());
+        built
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::node_features;
+
+    #[test]
+    fn world_canonicalizes_the_workload() {
+        let world = ScenarioWorld::new(Fleet::paper_evaluation(0),
+                                       ModelSpec::paper_six());
+        assert!(crate::planner::is_canonical(world.workload()));
+        assert_eq!(world.graph().n, world.fleet().len());
+    }
+
+    #[test]
+    fn padded_tensors_match_the_from_scratch_build() {
+        let world = ScenarioWorld::new(Fleet::paper_evaluation(0),
+                                       ModelSpec::paper_four());
+        let slots = world.fleet().len() + 18;
+        let padded = world.padded(slots);
+        assert_eq!(padded.feats,
+                   node_features(&world.fleet().machines, world.graph(),
+                                 slots));
+        assert_eq!(padded.mask, world.graph().padded_mask(slots));
+        assert_eq!(padded.csr, CsrGraph::padded(world.graph(), slots));
+        assert_eq!(padded.dense_adj(), world.graph().padded_adj(slots));
+        // Second request is the cached allocation, not a rebuild.
+        let again = world.padded(slots);
+        assert!(Arc::ptr_eq(&padded, &again));
+        // A different slot count coexists.
+        let other = world.padded(slots + 4);
+        assert_eq!(other.slots, slots + 4);
+    }
+
+    #[test]
+    fn cached_classify_matches_the_from_scratch_path() {
+        use crate::gnn::{classify, RefGcn, RefGcnConfig};
+        use crate::util::rng::Rng;
+        let world = ScenarioWorld::new(Fleet::paper_evaluation(0),
+                                       ModelSpec::paper_four());
+        let cfg = RefGcnConfig { n: 64, f: crate::graph::FEATURE_DIM,
+                                 h: 16, h2: 8, c: 8 };
+        let mut rng = Rng::new(23);
+        let params: Vec<f32> = (0..cfg.n_params())
+            .map(|_| (rng.normal() * 0.1) as f32)
+            .collect();
+        let clf = Classifier::Reference(RefGcn::new(cfg, &params));
+        let cached = world.classify(&clf, &params).unwrap();
+        assert_eq!(cached,
+                   classify(&clf, &params, world.fleet()).unwrap());
+        // The call populated the padded cache for the artifact size.
+        assert_eq!(world.padded(64).slots, 64);
+    }
+
+    #[test]
+    fn workload_fork_shares_fleet_graph_and_padded_cache() {
+        let world = ScenarioWorld::new(Fleet::paper_evaluation(0),
+                                       ModelSpec::paper_four());
+        let padded = world.padded(64);
+        let fork = world.with_workload(vec![ModelSpec::bert_large()]);
+        assert_eq!(fork.workload().len(), 1);
+        assert!(std::ptr::eq(world.fleet(), fork.fleet()));
+        assert!(std::ptr::eq(world.graph(), fork.graph()));
+        assert!(Arc::ptr_eq(&padded, &fork.padded(64)));
+    }
+
+    #[test]
+    fn context_borrows_the_world() {
+        let world = ScenarioWorld::new(Fleet::paper_evaluation(0),
+                                       ModelSpec::paper_four());
+        let ctx = world.context(HulkSplitterKind::Oracle);
+        assert_eq!(ctx.workload.len(), 4);
+        assert!(std::ptr::eq(ctx.fleet, world.fleet()));
+        assert!(std::ptr::eq(ctx.graph, world.graph()));
+    }
+}

@@ -251,8 +251,12 @@ pub(crate) fn run_ring_dedicated(fleet: &Fleet, nodes: &[usize], bytes: f64,
                                  with_trace: bool) -> Option<RingRun>
 {
     let profile = RingProfile::build(fleet, nodes, bytes)?;
-    let mut trace =
-        if with_trace { Trace::enabled() } else { Trace::disabled() };
+    let mut trace = if with_trace {
+        // One RingStep record per link per step.
+        Trace::enabled_with_capacity(profile.steps * profile.edge_ms.len())
+    } else {
+        Trace::disabled()
+    };
     let mut link_busy_ms = vec![0.0f64; profile.edge_ms.len()];
     let mut step_ms = Vec::with_capacity(profile.steps);
     let mut engine: Engine<usize> = Engine::new();
@@ -351,6 +355,29 @@ pub fn execute_placement(fleet: &Fleet, workload: &[ModelSpec],
                            ExecOptions::default())
 }
 
+/// Reusable buffers of one `execute_placement` call: the event-queue
+/// storage and the resource/accounting vectors. The simulated cost
+/// backend executes one placement per (scenario × planner) cell and the
+/// micro benches execute thousands; recycling the payload vec and the
+/// flat accounting arrays through a thread-local keeps the hot loop
+/// allocation-free after warm-up. Every field is fully re-initialized
+/// per call, so reuse cannot leak state across runs (determinism gate).
+#[derive(Default)]
+struct ExecScratch {
+    events: Vec<super::engine::Event<Ev>>,
+    machines: Vec<Resource>,
+    links: Vec<Resource>,
+    /// Flattened `[n_tasks × fleet.len()]` per-task machine busy time.
+    machine_busy: Vec<f64>,
+    comm_busy: Vec<f64>,
+    finish: Vec<f64>,
+}
+
+thread_local! {
+    static SCRATCH: std::cell::RefCell<ExecScratch> =
+        std::cell::RefCell::new(ExecScratch::default());
+}
+
 /// [`execute_placement`] with failure injection / tracing options.
 pub fn execute_placement_with(fleet: &Fleet, workload: &[ModelSpec],
                               placement: &Placement, opts: ExecOptions)
@@ -359,20 +386,38 @@ pub fn execute_placement_with(fleet: &Fleet, workload: &[ModelSpec],
     assert_eq!(workload.len(), placement.n_tasks(),
                "workload/placement task count mismatch");
     let n_tasks = workload.len();
+    let n_machines = fleet.len();
     let n_regions = Region::ALL.len();
 
-    let mut engine: Engine<Ev> = Engine::new();
-    let mut machines = vec![Resource::default(); fleet.len()];
-    let mut links = vec![Resource::default(); n_regions * n_regions];
+    let mut scratch =
+        SCRATCH.with(|s| std::mem::take(&mut *s.borrow_mut()));
+    let mut engine: Engine<Ev> =
+        Engine::with_spare(std::mem::take(&mut scratch.events));
+    let machines = &mut scratch.machines;
+    machines.clear();
+    machines.resize(n_machines, Resource::default());
+    let links = &mut scratch.links;
+    links.clear();
+    links.resize(n_regions * n_regions, Resource::default());
     let mut private_links: Vec<Vec<Resource>> =
         (0..n_tasks).map(|_| Vec::new()).collect();
-    let mut trace =
-        if opts.with_trace { Trace::enabled() } else { Trace::disabled() };
+    let mut trace = if opts.with_trace {
+        Trace::enabled_with_capacity(trace_capacity(placement))
+    } else {
+        Trace::disabled()
+    };
 
-    // Per-task accounting.
-    let mut machine_busy = vec![vec![0.0f64; fleet.len()]; n_tasks];
-    let mut comm_busy = vec![0.0f64; n_tasks];
-    let mut finish = vec![f64::INFINITY; n_tasks];
+    // Per-task accounting (machine busy time is a flat
+    // `[task × machine]` matrix — one allocation, recycled).
+    let machine_busy = &mut scratch.machine_busy;
+    machine_busy.clear();
+    machine_busy.resize(n_tasks * n_machines, 0.0);
+    let comm_busy = &mut scratch.comm_busy;
+    comm_busy.clear();
+    comm_busy.resize(n_tasks, 0.0);
+    let finish = &mut scratch.finish;
+    finish.clear();
+    finish.resize(n_tasks, f64::INFINITY);
     let mut active = 0usize;
 
     // Lower every feasible task at t = 0, placement order. Feasibility is
@@ -392,7 +437,7 @@ pub fn execute_placement_with(fleet: &Fleet, workload: &[ModelSpec],
                 let mut barrier = 0.0f64;
                 for &m in participants {
                     let done = machines[m].occupy(0.0, comp);
-                    machine_busy[t][m] += comp;
+                    machine_busy[t * n_machines + m] += comp;
                     barrier = barrier.max(done);
                 }
                 let profile =
@@ -409,7 +454,7 @@ pub fn execute_placement_with(fleet: &Fleet, workload: &[ModelSpec],
                 let mut barrier = 0.0f64;
                 for &m in group {
                     let done = machines[m].occupy(0.0, comp);
-                    machine_busy[t][m] += comp;
+                    machine_busy[t * n_machines + m] += comp;
                     barrier = barrier.max(done);
                 }
                 let profile = RingProfile::build(
@@ -504,7 +549,7 @@ pub fn execute_placement_with(fleet: &Fleet, workload: &[ModelSpec],
                 };
                 let m = p.stages[stage];
                 let done = machines[m].occupy(now, p.fwd_ms[stage]);
-                machine_busy[task][m] += p.fwd_ms[stage];
+                machine_busy[task * n_machines + m] += p.fwd_ms[stage];
                 trace.record(done, TraceKind::Compute {
                     stage, mb, backward: false, dur_ms: p.fwd_ms[stage] });
                 if stage + 1 < p.stages.len() {
@@ -546,7 +591,7 @@ pub fn execute_placement_with(fleet: &Fleet, workload: &[ModelSpec],
                 };
                 let m = p.stages[stage];
                 let done = machines[m].occupy(now, p.bwd_ms[stage]);
-                machine_busy[task][m] += p.bwd_ms[stage];
+                machine_busy[task * n_machines + m] += p.bwd_ms[stage];
                 trace.record(done, TraceKind::Compute {
                     stage, mb, backward: true, dur_ms: p.bwd_ms[stage] });
                 if stage > 0 {
@@ -614,11 +659,10 @@ pub fn execute_placement_with(fleet: &Fleet, workload: &[ModelSpec],
                     comm_busy_ms: 0.0,
                 };
             }
-            let comp_busy_ms: f64 = machine_busy[t].iter().sum();
-            let pacing = machine_busy[t]
-                .iter()
-                .cloned()
-                .fold(0.0f64, f64::max);
+            let busy_row =
+                &machine_busy[t * n_machines..(t + 1) * n_machines];
+            let comp_busy_ms: f64 = busy_row.iter().sum();
+            let pacing = busy_row.iter().cloned().fold(0.0f64, f64::max);
             let cost = if finish[t].is_finite() {
                 IterCost { comp_ms: pacing, comm_ms: finish[t] - pacing }
             } else {
@@ -649,17 +693,40 @@ pub fn execute_placement_with(fleet: &Fleet, workload: &[ModelSpec],
         }
     }
 
+    let events_processed = engine.events_processed;
+    // Hand the queue storage and accounting buffers back for the next
+    // call on this thread.
+    scratch.events = engine.into_spare();
+    SCRATCH.with(|s| *s.borrow_mut() = scratch);
+
     ClusterExecution {
         tasks,
         report: ExecReport {
             makespan_ms: makespan,
             straggler_wait_ms,
             links: link_uses,
-            events_processed: engine.events_processed,
+            events_processed,
         },
         failure,
         trace,
     }
+}
+
+/// Upper bound on the trace records one placement execution emits: per
+/// pipeline microbatch, a compute + transfer record per stage in each
+/// direction; collectives record nothing here; plus the failure record.
+fn trace_capacity(placement: &Placement) -> usize {
+    1 + placement
+        .per_task
+        .iter()
+        .map(|p| match p {
+            TaskPlacement::PipelineStages { stages, microbatches, .. }
+            | TaskPlacement::Grouped { chain: stages, microbatches, .. } => {
+                4 * stages.len() * *microbatches
+            }
+            _ => 0,
+        })
+        .sum::<usize>()
 }
 
 /// Lower one GPipe plan: per-stage fwd/bwd compute times (6×params split
@@ -898,6 +965,40 @@ mod tests {
         assert!((outcome.at_ms - at_ms).abs() < 1e-9);
         assert!(run.report.makespan_ms.is_infinite());
         assert!(!run.tasks[0].cost.is_feasible());
+    }
+
+    #[test]
+    fn scratch_reuse_across_calls_changes_no_output() {
+        // Back-to-back executions on one thread share the recycled
+        // buffers; every observable field must be bit-identical, and a
+        // smaller follow-up run must not see the larger run's state.
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let mut wl = ModelSpec::paper_four();
+        ModelSpec::sort_largest_first(&mut wl);
+        let ctx = PlanContext::new(&fleet, &graph, &wl,
+                                   HulkSplitterKind::Oracle);
+        let placement = HulkPlanner.plan(&ctx).unwrap();
+        let first = execute_placement(&fleet, &wl, &placement);
+        let small_wl = vec![ModelSpec::bert_large()];
+        let small = execute_placement(
+            &fleet,
+            &small_wl,
+            &dp_placement((0..4).collect()),
+        );
+        assert_eq!(small.tasks.len(), 1);
+        assert!(small.tasks[0].cost.is_feasible());
+        let again = execute_placement(&fleet, &wl, &placement);
+        assert_eq!(first.report.makespan_ms, again.report.makespan_ms);
+        assert_eq!(first.report.events_processed,
+                   again.report.events_processed);
+        for (a, b) in first.tasks.iter().zip(&again.tasks) {
+            assert_eq!(a.cost, b.cost);
+            assert_eq!(a.finish_ms, b.finish_ms);
+            assert_eq!(a.comp_busy_ms, b.comp_busy_ms);
+            assert_eq!(a.comm_busy_ms, b.comm_busy_ms);
+        }
+        assert_eq!(first.report.links.len(), again.report.links.len());
     }
 
     #[test]

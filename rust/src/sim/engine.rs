@@ -1,13 +1,39 @@
 //! Generic discrete-event engine: a time-ordered event queue with stable
 //! FIFO tie-breaking and resource-availability helpers.
+//!
+//! Heap ordering runs on **fixed-point `u64` keys**, not on the `f64`
+//! clock: simulation times are finite and non-negative, and for such
+//! values the IEEE-754 bit pattern is strictly monotone in the value —
+//! `to_bits` is a lossless order-isomorphic reinterpretation. Every
+//! sift in the heap hot loop is therefore two integer compares (key,
+//! then sequence number) instead of a `partial_cmp` + NaN-branch on
+//! floats; event order — and with it every artifact byte — is
+//! unchanged.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+
+/// Heap key of an event time: the bit pattern of the (canonicalized)
+/// non-negative `f64`, strictly monotone in the time. `-0.0` is folded
+/// to `+0.0` so the two zeros cannot order differently than they
+/// compare. NaN/negative times are rejected **here, at the scheduling
+/// boundary, in every build** — one predictable branch per `schedule`
+/// call replaces the old per-comparison `partial_cmp` NaN branch in
+/// the heap sift (which is O(log n) comparisons per event), and a NaN
+/// produced by a degenerate cost formula still fails loudly instead of
+/// silently sorting last and poisoning the clock.
+#[inline]
+fn time_key(at_ms: f64) -> u64 {
+    assert!(at_ms >= 0.0, "invalid event time {at_ms}"); // rejects NaN too
+    (at_ms + 0.0).to_bits()
+}
 
 /// A scheduled event carrying a caller-defined payload.
 #[derive(Clone, Debug)]
 pub struct Event<P> {
     pub time_ms: f64,
+    /// Fixed-point ordering key: `time_key(time_ms)`.
+    key: u64,
     /// Monotone sequence number: equal-time events fire in insertion order.
     seq: u64,
     pub payload: P,
@@ -15,18 +41,17 @@ pub struct Event<P> {
 
 impl<P> PartialEq for Event<P> {
     fn eq(&self, other: &Self) -> bool {
-        self.time_ms == other.time_ms && self.seq == other.seq
+        self.key == other.key && self.seq == other.seq
     }
 }
 impl<P> Eq for Event<P> {}
 
 impl<P> Ord for Event<P> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap via reversed comparison; NaN times are a bug upstream.
+        // Min-heap via reversed comparison — pure integer compares.
         other
-            .time_ms
-            .partial_cmp(&self.time_ms)
-            .expect("NaN event time")
+            .key
+            .cmp(&self.key)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -50,6 +75,22 @@ impl<P> Engine<P> {
                  events_processed: 0 }
     }
 
+    /// An engine recycling `spare` as its queue storage — cleared, the
+    /// capacity kept. Pair with [`Engine::into_spare`] to amortize the
+    /// event-vector allocation across many short simulations.
+    pub fn with_spare(mut spare: Vec<Event<P>>) -> Engine<P> {
+        spare.clear();
+        Engine { heap: BinaryHeap::from(spare), now_ms: 0.0, next_seq: 0,
+                 events_processed: 0 }
+    }
+
+    /// Tear down, handing back the queue storage for reuse.
+    pub fn into_spare(self) -> Vec<Event<P>> {
+        let mut spare = self.heap.into_vec();
+        spare.clear();
+        spare
+    }
+
     pub fn now_ms(&self) -> f64 {
         self.now_ms
     }
@@ -62,7 +103,8 @@ impl<P> Engine<P> {
             at_ms,
             self.now_ms
         );
-        self.heap.push(Event { time_ms: at_ms, seq: self.next_seq, payload });
+        self.heap.push(Event { time_ms: at_ms, key: time_key(at_ms),
+                               seq: self.next_seq, payload });
         self.next_seq += 1;
     }
 
@@ -158,6 +200,37 @@ mod tests {
         e.schedule_in(5.0, "second");
         let ev = e.next().unwrap();
         assert_eq!(ev.time_ms, 15.0);
+    }
+
+    #[test]
+    fn fixed_point_keys_preserve_float_ordering() {
+        // to_bits is monotone for non-negative floats, zeros collapse.
+        let times = [0.0, -0.0, 1e-12, 0.5, 1.0, 1.0 + f64::EPSILON,
+                     1e3, 1e9, f64::MAX];
+        for w in times.windows(2) {
+            assert!(super::time_key(w[0]) <= super::time_key(w[1]),
+                    "{} vs {}", w[0], w[1]);
+        }
+        assert_eq!(super::time_key(-0.0), super::time_key(0.0));
+        assert!(super::time_key(0.0) < super::time_key(f64::MIN_POSITIVE));
+    }
+
+    #[test]
+    fn spare_recycling_keeps_capacity_and_behavior() {
+        let mut e: Engine<u32> = Engine::new();
+        for i in 0..10 {
+            e.schedule(i as f64, i);
+        }
+        e.next();
+        let spare = e.into_spare();
+        assert!(spare.is_empty());
+        assert!(spare.capacity() >= 9);
+        let mut e: Engine<u32> = Engine::with_spare(spare);
+        assert_eq!(e.now_ms(), 0.0);
+        e.schedule(2.0, 7);
+        e.schedule(1.0, 3);
+        assert_eq!(e.next().unwrap().payload, 3);
+        assert_eq!(e.next().unwrap().payload, 7);
     }
 
     #[test]

@@ -34,6 +34,13 @@ impl Trace {
         Trace { events: Vec::new(), enabled: true }
     }
 
+    /// An enabled trace pre-sized for `capacity` records — callers that
+    /// know the schedule shape (microbatches × stages × directions)
+    /// avoid regrowing the buffer mid-simulation.
+    pub fn enabled_with_capacity(capacity: usize) -> Trace {
+        Trace { events: Vec::with_capacity(capacity), enabled: true }
+    }
+
     /// A disabled trace records nothing (hot-path mode).
     pub fn disabled() -> Trace {
         Trace { events: Vec::new(), enabled: false }

@@ -45,6 +45,10 @@ impl MatF32 {
     }
 
     /// `self @ rhs` with ikj loop order (streams rhs rows, no transpose).
+    /// Branch-free: every element participates, so dense weight×weight
+    /// products pay no per-element test. For a mostly-zero lhs (a padded
+    /// adjacency) use [`matmul_sparse`](MatF32::matmul_sparse), which
+    /// keeps the zero skip this kernel historically carried.
     pub fn matmul(&self, rhs: &MatF32) -> MatF32 {
         assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
         let mut out = MatF32::zeros(self.rows, rhs.cols);
@@ -52,8 +56,33 @@ impl MatF32 {
             let orow = &mut out.data[i * rhs.cols..(i + 1) * rhs.cols];
             for k in 0..self.cols {
                 let a = self.data[i * self.cols + k];
+                let brow = &rhs.data[k * rhs.cols..(k + 1) * rhs.cols];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ rhs` skipping zero lhs elements — the sparse-aware entry
+    /// point the zero skip was hoisted into. Identical result to
+    /// [`matmul`](MatF32::matmul) for finite operands (a zero
+    /// coefficient contributes exactly zero). In-tree the hot sparse
+    /// products all moved to the CSR kernels in [`crate::graph::csr`]
+    /// (which skip the per-element test entirely) and the dense oracle
+    /// deliberately mirrors `model.py`'s branch-free contraction, so
+    /// this remains as the explicit middle ground for mostly-zero dense
+    /// operands that have no CSR view.
+    pub fn matmul_sparse(&self, rhs: &MatF32) -> MatF32 {
+        assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
+        let mut out = MatF32::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            let orow = &mut out.data[i * rhs.cols..(i + 1) * rhs.cols];
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
                 if a == 0.0 {
-                    continue; // adjacency matrices are mostly zero
+                    continue;
                 }
                 let brow = &rhs.data[k * rhs.cols..(k + 1) * rhs.cols];
                 for (o, &b) in orow.iter_mut().zip(brow) {
@@ -148,6 +177,19 @@ mod tests {
         let a = MatF32::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let i = MatF32::eye(2);
         assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn sparse_entry_point_matches_dense_matmul() {
+        // Mostly-zero lhs (adjacency-shaped): the skip changes nothing
+        // numerically.
+        let a = MatF32::from_vec(3, 3, vec![0.0, 2.0, 0.0,
+                                            0.0, 0.0, 0.0,
+                                            -1.5, 0.0, 4.0]);
+        let b = MatF32::from_vec(3, 2, vec![1.0, -2.0,
+                                            3.0, 0.5,
+                                            -0.25, 7.0]);
+        assert_eq!(a.matmul_sparse(&b), a.matmul(&b));
     }
 
     #[test]

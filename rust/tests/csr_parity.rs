@@ -1,0 +1,123 @@
+//! CSR-vs-dense GCN forward parity on real fleets: the sparse
+//! aggregation path must reproduce the padded-dense oracle within 1e-5
+//! on every real machine row, for the Table 1 evaluation fleet and the
+//! planet-scale synthetic fleet, and the automatic path selection must
+//! be invisible to `classify`.
+
+use hulk::cluster::Fleet;
+use hulk::gnn::{classify, classify_with_graph, Classifier, RefGcn,
+                RefGcnConfig};
+use hulk::graph::{node_features, node_features_csr, ClusterGraph,
+                  CsrGraph, FEATURE_DIM, CSR_DENSITY_MAX};
+use hulk::util::rng::Rng;
+
+fn reference_gcn(slots: usize, seed: u64) -> RefGcn {
+    let cfg = RefGcnConfig { n: slots, f: FEATURE_DIM, h: 24, h2: 12,
+                             c: 8 };
+    let mut rng = Rng::new(seed);
+    let params: Vec<f32> = (0..cfg.n_params())
+        .map(|_| (rng.normal() * 0.1) as f32)
+        .collect();
+    RefGcn::new(cfg, &params)
+}
+
+fn assert_forward_parity(fleet: &Fleet, slots: usize, seed: u64) {
+    let graph = ClusterGraph::from_fleet(fleet);
+    let gcn = reference_gcn(slots, seed);
+    let adj = graph.padded_adj(slots);
+    let feats = node_features(&fleet.machines, &graph, slots);
+    let mask = graph.padded_mask(slots);
+    let dense = gcn.forward(&adj, &feats, &mask);
+
+    let csr = CsrGraph::padded(&graph, slots);
+    assert_eq!(csr.real, fleet.len());
+    let sparse_feats = node_features_csr(&fleet.machines, &csr);
+    assert_eq!(feats, sparse_feats, "feature builds diverged");
+    let sparse = gcn.forward_csr(&csr, &sparse_feats, &mask);
+
+    // Real machine rows agree within 1e-5 (padded rows are never
+    // consumed — the sparse path does not materialize them).
+    for i in 0..fleet.len() {
+        for k in 0..8 {
+            let (d, s) = (dense.at(i, k), sparse.at(i, k));
+            assert!((d - s).abs() < 1e-5,
+                    "row {i} class {k}: dense {d} vs csr {s}");
+            assert!(s.is_finite());
+        }
+        let row_sum: f32 = sparse.row(i).iter().sum();
+        assert!((row_sum - 1.0).abs() < 1e-5, "row {i} sums to {row_sum}");
+    }
+}
+
+#[test]
+fn table1_fleet_forward_parity() {
+    assert_forward_parity(&Fleet::paper_evaluation(0), 64, 11);
+}
+
+#[test]
+fn planet_scale_forward_parity() {
+    // 220 machines in a 256-slot (planet-capable) artifact.
+    assert_forward_parity(&Fleet::synthetic(220, 12, 0), 256, 13);
+}
+
+#[test]
+fn padding_and_policy_blocks_keep_real_inputs_on_the_csr_path() {
+    // The density rule must route both production fleets through CSR:
+    // padding headroom plus the Beijing↔Paris block keep nnz below the
+    // ceiling on the 64-slot table1 artifact and a 256-slot planet one.
+    for (fleet, slots) in [(Fleet::paper_evaluation(0), 64),
+                           (Fleet::synthetic(220, 12, 0), 256)] {
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let csr = CsrGraph::padded(&graph, slots);
+        assert!(csr.density() <= CSR_DENSITY_MAX,
+                "density {} over the CSR ceiling", csr.density());
+    }
+    // A fully occupied complete graph falls back to the dense oracle.
+    let toy = Fleet::paper_toy(0);
+    let graph = ClusterGraph::from_fleet(&toy);
+    let tight = CsrGraph::padded(&graph, toy.len());
+    assert!(tight.density() > CSR_DENSITY_MAX,
+            "unpadded near-complete graph should stay dense: {}",
+            tight.density());
+}
+
+#[test]
+fn classify_is_path_independent() {
+    // classify() (auto-selected path — CSR at this density) and an
+    // explicit dense forward must produce the same classes.
+    let fleet = Fleet::synthetic(120, 10, 7);
+    let slots = 160;
+    let cfg = RefGcnConfig { n: slots, f: FEATURE_DIM, h: 24, h2: 12,
+                             c: 8 };
+    let mut rng = Rng::new(17);
+    let params: Vec<f32> = (0..cfg.n_params())
+        .map(|_| (rng.normal() * 0.1) as f32)
+        .collect();
+    let clf = Classifier::Reference(RefGcn::new(cfg, &params));
+    let graph = ClusterGraph::from_fleet(&fleet);
+    assert!(CsrGraph::padded(&graph, slots).density() <= CSR_DENSITY_MAX,
+            "test fleet should exercise the CSR path");
+    let auto = classify(&clf, &params, &fleet).unwrap();
+    assert_eq!(auto,
+               classify_with_graph(&clf, &params, &fleet, &graph)
+                   .unwrap());
+    // Dense reference: pad the tensors by hand and argmax the oracle.
+    let dense_gcn = RefGcn::new(cfg, &params);
+    let adj = graph.padded_adj(slots);
+    let feats = node_features(&fleet.machines, &graph, slots);
+    let mask = graph.padded_mask(slots);
+    let probs = dense_gcn.forward(&adj, &feats, &mask);
+    let dense: Vec<usize> = (0..fleet.len())
+        .map(|i| {
+            let row = probs.row(i);
+            let mut best = 0;
+            for (k, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = k;
+                }
+            }
+            best
+        })
+        .collect();
+    assert_eq!(auto, dense);
+}

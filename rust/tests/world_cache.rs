@@ -1,0 +1,81 @@
+//! Cache-on vs cache-off byte identity: sharing one `ScenarioWorld`
+//! across a spec's cells (the production mode) must write exactly the
+//! bytes the rebuild-per-cell mode writes — for `BENCH_scenarios.json`
+//! and `BENCH_placements.json`, analytic and sim backends, serial and
+//! parallel.
+
+use hulk::benchkit::BenchReport;
+use hulk::planner::{CostBackend, PlannerRegistry};
+use hulk::scenarios::{resolve_scenarios, run_specs_sharing,
+                      ScenarioResult, ScenarioSpec, WorldSharing};
+
+fn report_bytes(results: &[ScenarioResult], suite: &str,
+                placements: bool) -> String
+{
+    let mut report = BenchReport::new(suite);
+    for r in results {
+        if placements {
+            report.extend(r.placements.iter().cloned());
+        } else {
+            report.extend(r.entries.iter().cloned());
+        }
+    }
+    let mut text = report.to_json().render();
+    text.push('\n');
+    text
+}
+
+fn assert_cache_invisible(specs: &[ScenarioSpec], backend: CostBackend,
+                          suite: &str)
+{
+    let planners = PlannerRegistry::standard();
+    let cached =
+        run_specs_sharing(specs, 0, 1, &planners, backend,
+                          WorldSharing::Shared)
+            .expect("cache-on run");
+    let rebuilt =
+        run_specs_sharing(specs, 0, 1, &planners, backend,
+                          WorldSharing::Rebuild)
+            .expect("cache-off run");
+    assert_eq!(report_bytes(&cached, suite, false),
+               report_bytes(&rebuilt, suite, false),
+               "{suite}: scenarios artifact diverged cache-on vs off");
+    assert_eq!(report_bytes(&cached, "placements", true),
+               report_bytes(&rebuilt, "placements", true),
+               "{suite}: placements artifact diverged cache-on vs off");
+    let rendered = |rs: &[ScenarioResult]| -> Vec<String> {
+        rs.iter().map(|r| r.rendered.clone()).collect()
+    };
+    assert_eq!(rendered(&cached), rendered(&rebuilt));
+    // Parallel cache-on matches serial cache-off too — the full
+    // commutation square.
+    let parallel_cached =
+        run_specs_sharing(specs, 0, 4, &planners, backend,
+                          WorldSharing::Shared)
+            .expect("parallel cache-on run");
+    assert_eq!(report_bytes(&parallel_cached, suite, false),
+               report_bytes(&rebuilt, suite, false),
+               "{suite}: parallel cache-on diverged from serial cache-off");
+}
+
+#[test]
+fn analytic_artifacts_are_cache_invisible() {
+    let (specs, _) = resolve_scenarios(&[], CostBackend::Analytic)
+        .expect("resolve analytic all");
+    assert_cache_invisible(&specs, CostBackend::Analytic, "scenarios");
+}
+
+#[test]
+fn sim_artifacts_are_cache_invisible() {
+    // A subset covering Evaluate cells (table1_fleet, planet_scale) and
+    // a sim-only custom body; the full suite runs in CI's release-build
+    // determinism gates.
+    let (specs, _) = resolve_scenarios(
+        &["table1_fleet".to_string(), "planet_scale".to_string(),
+          "sim_vs_analytic".to_string()],
+        CostBackend::Simulated,
+    )
+    .expect("resolve sim subset");
+    assert_cache_invisible(&specs, CostBackend::Simulated,
+                           "scenarios_cost_sim");
+}
