@@ -37,7 +37,8 @@ usage: hulk <subcommand> [flags]
              discrete-event execution where concurrent tasks contend
              for shared WAN links and machines; adds per-system
              makespan/straggler/link-utilization rows and unlocks the
-             sim-only scenarios contended_links and sim_vs_analytic).
+             sim-only scenarios contended_links, sim_vs_analytic and
+             generated_sweep).
              `--json` writes BENCH_scenarios.json in the
              customSmallerIsBetter shape plus BENCH_placements.json
              (per-system placement digests: group/stage counts,
@@ -47,6 +48,20 @@ usage: hulk <subcommand> [flags]
              (`--threads N` pins the width; default = the machine's
              available parallelism). Output is byte-identical to a
              serial run, for either backend.
+  scenarios  generate [--seed S] [--count N] [--check]
+                 [--systems a,b,hulk]
+             Deterministically generate N (default 20) randomized
+             (fleet, workload, failure script) cases from the seed —
+             skewed regions, mixed GPUs, degraded/blocked WAN links,
+             spot revocations — and print their shapes. With --check,
+             run every registered planner over each case and verify
+             the property invariants (feasible machine ids + capacity,
+             plan determinism, self-pricing vs evaluate_world,
+             analytic/sim winner agreement, the exhaustive oracle
+             bound on ≤8-machine fleets, survivor replanning); a
+             failure is shrunk by halving fleet/workload and reported
+             as a minimal seed+shape with the exact repro command,
+             exiting non-zero.
   help       Print this grammar.
 
 Flags are `--key value`, `--key=value`, or bare `--key` for booleans."
@@ -64,7 +79,7 @@ pub struct Cli {
 /// argument, so `hulk scenarios run --json table1_fleet` keeps
 /// `table1_fleet` as a positional instead of treating it as the value
 /// of `--json`. (Use `--flag=value` to force a value for one of these.)
-const BOOL_FLAGS: [&str; 3] = ["gnn", "json", "parallel"];
+const BOOL_FLAGS: [&str; 4] = ["gnn", "json", "parallel", "check"];
 
 impl Cli {
     /// Parse `args` (without argv[0]). Flags are `--key value` or
@@ -186,6 +201,14 @@ mod tests {
         let cli = Cli::parse(&argv("bench --gnn fig8")).unwrap();
         assert_eq!(cli.positional, vec!["fig8"]);
         assert!(cli.flag_bool("gnn"));
+        // --check is boolean: `generate --check --seed 3` must keep
+        // the seed flag intact and the subcommand positional.
+        let cli =
+            Cli::parse(&argv("scenarios generate --check --seed 3"))
+                .unwrap();
+        assert_eq!(cli.positional, vec!["generate"]);
+        assert!(cli.flag_bool("check"));
+        assert_eq!(cli.flag_u64("seed", 0).unwrap(), 3);
     }
 
     #[test]
@@ -202,5 +225,8 @@ mod tests {
         assert!(text.contains("--cost") && text.contains("analytic|sim"));
         assert!(text.contains("contended_links")
             && text.contains("sim_vs_analytic"));
+        assert!(text.contains("generate") && text.contains("--check"),
+                "usage() missing the generate grammar");
+        assert!(text.contains("generated_sweep"));
     }
 }

@@ -6,8 +6,10 @@
 //! - `train-gnn` — train the GCN from Rust through PJRT (Fig. 4).
 //! - `simulate`  — multi-task leader-loop simulation with failures.
 //! - `bench`     — regenerate any paper table/figure (see benches/).
-//! - `scenarios` — list/run the named-scenario registry; `--json` emits
-//!   `BENCH_scenarios.json` through the benchkit reporting layer.
+//! - `scenarios` — list/run the named-scenario registry (`--json` emits
+//!   `BENCH_scenarios.json` through the benchkit reporting layer), or
+//!   `generate` seeded random property-test cases (`--check` runs the
+//!   planner invariants with shrinking-on-failure).
 //! - `help`      — print the CLI grammar.
 
 use std::path::PathBuf;
@@ -148,8 +150,52 @@ fn cmd_scenarios(cli: &Cli) -> Result<()> {
             }
             Ok(())
         }
+        Some("generate") => {
+            let seed = cli.flag_u64("seed", 0)?;
+            let count = cli.flag_u64("count", 20)? as usize;
+            anyhow::ensure!(count >= 1, "--count must be at least 1");
+            // The property run covers every registered planner by
+            // default (ablations included) — `--systems` narrows it.
+            let planners = match cli.flag("systems") {
+                Some(csv) => PlannerRegistry::resolve(csv)?,
+                None => PlannerRegistry::catalog(),
+            };
+            let mut t = hulk::util::table::Table::new(
+                &["case", "machines", "regions", "tasks", "failures"]);
+            for index in 0..count {
+                let shape =
+                    hulk::scenarios::generate_case(seed, index).shape();
+                t.row(&[format!("{index:02}"),
+                        shape.machines.to_string(),
+                        shape.regions.to_string(),
+                        shape.tasks.to_string(),
+                        shape.failures.to_string()]);
+            }
+            println!("{}", t.render());
+            println!("generated {count} case(s) from seed {seed} \
+                      (deterministic: case K alone reproduces as \
+                      --seed {seed} --count K+1)");
+            if cli.flag_bool("check") {
+                let started = std::time::Instant::now();
+                let run = hulk::scenarios::run_generated(
+                    seed, count, &planners,
+                    &hulk::scenarios::CheckOptions::default());
+                let wall = started.elapsed().as_secs_f64();
+                if let Some(report) = run.failure {
+                    eprintln!("{report}");
+                    anyhow::bail!(
+                        "generated-case property check failed after \
+                         {} case(s) (seed {seed})", run.cases);
+                }
+                println!("checked {} case(s) × {} planner(s): {} \
+                          fully planned, 0 violations, in {wall:.2}s",
+                         run.cases, planners.len(), run.fully_planned);
+            }
+            Ok(())
+        }
         _ => anyhow::bail!(
-            "usage: hulk scenarios <list|run> … (see `hulk help`)"),
+            "usage: hulk scenarios <list|run|generate> … \
+             (see `hulk help`)"),
     }
 }
 

@@ -112,6 +112,43 @@ impl Placement {
         }
     }
 
+    /// Structural validity against a concrete fleet: every machine id a
+    /// task references (group members and pipeline chains alike) must
+    /// exist in `fleet`, and no list may name the same machine twice.
+    /// This is the "lands on live machines" floor the property harness
+    /// checks for every planner — and the guard that makes pricing safe,
+    /// since [`Placement::cost`] indexes `fleet.machines` directly.
+    /// Capacity and connectivity are the cost models' job.
+    pub fn validate_machines(&self, fleet: &Fleet)
+        -> Result<(), String>
+    {
+        let check = |task: usize, what: &str, ids: &[usize]|
+            -> Result<(), String>
+        {
+            let mut seen = vec![false; fleet.len()];
+            for &m in ids {
+                if m >= fleet.len() {
+                    return Err(format!(
+                        "task {task}: {what} names machine {m} but the \
+                         fleet has machines 0..{}", fleet.len()));
+                }
+                if seen[m] {
+                    return Err(format!(
+                        "task {task}: {what} lists machine {m} twice"));
+                }
+                seen[m] = true;
+            }
+            Ok(())
+        };
+        for (t, p) in self.per_task.iter().enumerate() {
+            check(t, "group", self.machines(t))?;
+            if let TaskPlacement::Grouped { chain, .. } = p {
+                check(t, "chain", chain)?;
+            }
+        }
+        Ok(())
+    }
+
     /// The machine groups as a scheduler [`Assignment`] (task order
     /// preserved) — for validation helpers and quality metrics.
     pub fn to_assignment(&self) -> Assignment {
@@ -245,6 +282,48 @@ mod tests {
             }],
         };
         assert!(!none.cost(&fleet, &model, 0).is_feasible());
+    }
+
+    #[test]
+    fn validate_machines_rejects_dead_ids_and_duplicates() {
+        let fleet = Fleet::paper_toy(0);
+        let ok = Placement {
+            per_task: vec![
+                TaskPlacement::Replicated { participants: vec![0, 3] },
+                TaskPlacement::Grouped {
+                    group: vec![1, 2, 4],
+                    chain: vec![2, 1],
+                    layers: vec![12, 12],
+                    microbatches: 8,
+                },
+            ],
+        };
+        assert!(ok.validate_machines(&fleet).is_ok());
+        let dead = Placement {
+            per_task: vec![TaskPlacement::Replicated {
+                participants: vec![0, fleet.len()],
+            }],
+        };
+        let err = dead.validate_machines(&fleet).unwrap_err();
+        assert!(err.contains("machines 0..8"), "{err}");
+        let dup = Placement {
+            per_task: vec![TaskPlacement::TensorSharded {
+                group: vec![2, 2],
+            }],
+        };
+        assert!(dup.validate_machines(&fleet).unwrap_err()
+                   .contains("twice"));
+        // The pipeline chain is validated too, not just the group.
+        let bad_chain = Placement {
+            per_task: vec![TaskPlacement::Grouped {
+                group: vec![0, 1],
+                chain: vec![0, 9],
+                layers: vec![12, 12],
+                microbatches: 8,
+            }],
+        };
+        assert!(bad_chain.validate_machines(&fleet).unwrap_err()
+                        .contains("chain"));
     }
 
     #[test]

@@ -1,0 +1,928 @@
+//! Seeded scenario generator + property-testing engine.
+//!
+//! Turns the planner/simulator stack into a property-testing target:
+//! [`generate_case`] derives a randomized `(Fleet, Workload, failure
+//! script)` instance from `(seed, index)` — skewed region sizes,
+//! heterogeneous GPU mixes, degraded/brownout WAN links, spot
+//! revocations — and [`check_case`] runs every registered planner over
+//! it, checking the cross-cutting invariants no hand-written scenario
+//! pins down exhaustively:
+//!
+//! - **feasibility** — placements land on live, in-range machines, and
+//!   any task priced feasible has a non-empty group with enough
+//!   aggregate memory;
+//! - **determinism** — planning twice from the same context yields the
+//!   same placement (or the same decline);
+//! - **self-pricing** — `Placement::cost` agrees entry-for-entry with
+//!   the analytic matrix `evaluate_world` reports;
+//! - **backend agreement** — the analytic winner's *simulated* cost
+//!   stays within a tolerance factor of the simulated winner's;
+//! - **oracle bound** — on small (≤ 8-machine) fleets no planner beats
+//!   an exhaustive search over every DP/TP/pipeline placement;
+//! - **survivor feasibility** — replanning after the failure script's
+//!   spot revocations never references a revoked machine.
+//!
+//! Failures shrink ([`shrink_case`]): the fleet and workload are halved
+//! while the violation persists, and the report prints the minimal
+//! seed+shape plus the exact CLI command that reproduces it — not a
+//! 200-machine dump. The CLI front end is `hulk scenarios generate`;
+//! the same engine backs `rust/tests/planner_properties.rs` and the
+//! `generated_sweep` benchmark scenario.
+//!
+//! Everything here is a pure function of `(seed, index)`: no wall
+//! clock, no global state, so a printed seed is a complete repro.
+
+use std::collections::BTreeSet;
+use std::fmt::{self, Write as _};
+
+use crate::cluster::{Fleet, GpuModel, Machine, Region, WanModel};
+use crate::graph::ClusterGraph;
+use crate::models::ModelSpec;
+use crate::parallel::cost::group_memory_gb;
+use crate::parallel::{data_parallel_cost, pipeline_cost,
+                      tensor_parallel_cost, IterCost, PipelinePlan};
+use crate::planner::{CostBackend, HulkSplitterKind, Placement,
+                     PlannerRegistry};
+use crate::sim::{sort_script, FailurePlan};
+use crate::util::rng::Rng;
+
+use super::evaluate::{evaluate_world, SystemEval};
+use super::world::ScenarioWorld;
+
+/// Domain-separation tag mixed into every case seed ("GENCASES").
+const GEN_TAG: u64 = 0x4745_4E43_4153_4553;
+
+/// Per-case stream seed: cases of one sweep are mutually independent
+/// and case `i` does not depend on how many cases precede it.
+fn case_seed(seed: u64, index: usize) -> u64 {
+    seed ^ (index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ GEN_TAG
+}
+
+/// The size fingerprint of a generated case — what shrink reports print.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GenShape {
+    pub machines: usize,
+    pub regions: usize,
+    pub tasks: usize,
+    pub failures: usize,
+}
+
+impl fmt::Display for GenShape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} machines / {} regions / {} tasks / {} failures",
+               self.machines, self.regions, self.tasks, self.failures)
+    }
+}
+
+/// One generated `(Fleet, Workload, failure script)` instance.
+#[derive(Clone, Debug)]
+pub struct GenCase {
+    /// Sweep seed this case was drawn from.
+    pub seed: u64,
+    /// Position within the sweep (`generate_case(seed, index)`).
+    pub index: usize,
+    pub fleet: Fleet,
+    pub workload: Vec<ModelSpec>,
+    /// Spot revocations, sorted by [`sort_script`]'s canonical order.
+    pub failures: Vec<FailurePlan>,
+}
+
+impl GenCase {
+    pub fn shape(&self) -> GenShape {
+        let regions: BTreeSet<Region> =
+            self.fleet.machines.iter().map(|m| m.region).collect();
+        GenShape {
+            machines: self.fleet.len(),
+            regions: regions.len(),
+            tasks: self.workload.len(),
+            failures: self.failures.len(),
+        }
+    }
+
+    /// The exact CLI invocation that regenerates and re-checks this
+    /// case (it is the sweep's last case when `--count index + 1`).
+    pub fn repro(&self) -> String {
+        format!("hulk scenarios generate --seed {} --count {} --check",
+                self.seed, self.index + 1)
+    }
+
+    /// The fleet after the failure script's revocations, re-densified
+    /// (machine ids must stay `0..len` for `Fleet::new`).
+    pub fn survivor_fleet(&self) -> Fleet {
+        let dead: BTreeSet<usize> =
+            self.failures.iter().map(|f| f.machine).collect();
+        let machines: Vec<Machine> = self
+            .fleet
+            .machines
+            .iter()
+            .filter(|m| !dead.contains(&m.id))
+            .enumerate()
+            .map(|(id, m)| Machine::new(id, m.region, m.gpu, m.n_gpus))
+            .collect();
+        Fleet::new(machines, self.fleet.wan.clone())
+    }
+}
+
+/// Deterministically generate case `index` of sweep `seed`.
+///
+/// Shapes are adversarial relative to the hand-written catalog: region
+/// populations are skewed (squared-uniform toward the first region),
+/// GPU models are mixed per machine, the WAN is randomly degraded
+/// (uniform 1.5–6× slowdown) and occasionally loses an inter-region
+/// link outright (kept only when the cluster graph stays connected —
+/// the planners' documented precondition). ~35% of cases stay at ≤ 8
+/// machines so the exhaustive-oracle invariant gets real coverage.
+pub fn generate_case(seed: u64, index: usize) -> GenCase {
+    let mut rng = Rng::new(case_seed(seed, index));
+
+    // Fleet size: bias toward small instances the oracle can check.
+    let n = if rng.chance(0.35) {
+        rng.range(4, 8) as usize
+    } else {
+        rng.range(9, 24) as usize
+    };
+
+    // Regions: 2–5 distinct, sorted for id-stable assignment. The
+    // Beijing↔Paris pair is policy-blocked in `WanModel`; a fleet
+    // holding both would be disconnected by construction, so Paris is
+    // swapped for the first unsampled region.
+    let n_regions = rng.range(2, (n as i64).min(5)) as usize;
+    let mut region_idx = rng.sample_indices(Region::ALL.len(), n_regions);
+    region_idx.sort_unstable();
+    let mut regions: Vec<Region> =
+        region_idx.iter().map(|&i| Region::ALL[i]).collect();
+    if regions.contains(&Region::Beijing)
+        && regions.contains(&Region::Paris)
+    {
+        let swap = Region::ALL
+            .iter()
+            .copied()
+            .find(|r| !regions.contains(r))
+            .expect("≤5 of 12 regions sampled");
+        let pos = regions.iter().position(|&r| r == Region::Paris)
+            .expect("contains Paris");
+        regions[pos] = swap;
+    }
+
+    // Machines: every sampled region gets at least one, the rest are
+    // skewed toward region 0 (squared-uniform), with heterogeneous GPU
+    // models and counts.
+    let mut machines = Vec::with_capacity(n);
+    for id in 0..n {
+        let region = if id < regions.len() {
+            regions[id]
+        } else {
+            let u = rng.f64() * rng.f64();
+            regions[(u * regions.len() as f64) as usize]
+        };
+        let gpu = *rng.choice(&GpuModel::ALL);
+        let n_gpus = *rng.choice(&[4usize, 8, 8, 8, 12]);
+        machines.push(Machine::new(id, region, gpu, n_gpus));
+    }
+
+    // WAN: fresh latency matrix per case, often degraded (brownout),
+    // sometimes with one inter-region link blocked outright — kept
+    // only if every machine can still reach every other.
+    let mut wan = WanModel::new(rng.next_u64());
+    if rng.chance(0.5) {
+        wan = wan.scaled(rng.uniform(1.5, 6.0));
+    }
+    if regions.len() >= 3 && rng.chance(0.25) {
+        let pick = rng.sample_indices(regions.len(), 2);
+        let blocked =
+            wan.with_blocks(&[(regions[pick[0]], regions[pick[1]])]);
+        let trial = Fleet::new(machines.clone(), blocked.clone());
+        let graph = ClusterGraph::from_fleet(&trial);
+        let all: Vec<usize> = (0..trial.len()).collect();
+        if graph.subset_connected(&all) {
+            wan = blocked;
+        }
+    }
+    let fleet = Fleet::new(machines, wan);
+
+    // Workload: bert_large always participates (it fits the smallest
+    // generatable machine, so every planner family has at least one
+    // placeable task), plus up to two more catalog models admitted
+    // under a 1.6× aggregate-memory budget — above Algorithm 1's 1.2×
+    // headroom, so declines stay the exception. Batch sizes shrink on
+    // some picks to decorrelate cases that drew the same models.
+    let catalog = [
+        ModelSpec::t5_11b(),
+        ModelSpec::gpt2_xl(),
+        ModelSpec::roberta_large(),
+        ModelSpec::xlnet_large(),
+        ModelSpec::bert_large(),
+    ];
+    let budget = fleet.total_memory_gb();
+    let mut workload = vec![ModelSpec::bert_large()];
+    let mut used = workload[0].train_gb();
+    for _ in 0..rng.range(0, 2) {
+        let pick = rng.choice(&catalog).clone();
+        if (used + pick.train_gb()) * 1.6 <= budget {
+            used += pick.train_gb();
+            workload.push(pick);
+        }
+    }
+    for m in workload.iter_mut() {
+        if rng.chance(0.3) {
+            m.batch = (m.batch / 2).max(8);
+        }
+    }
+
+    // Failure script: up to two spot revocations, capped so at least
+    // three machines survive (replanning needs a fleet to plan on).
+    let max_failures = 2.min(n.saturating_sub(3));
+    let count = if max_failures == 0 {
+        0
+    } else {
+        rng.range(0, max_failures as i64) as usize
+    };
+    let mut failures: Vec<FailurePlan> = rng
+        .sample_indices(n, count)
+        .into_iter()
+        .map(|machine| FailurePlan {
+            at_ms: rng.uniform(0.0, 400.0),
+            machine,
+        })
+        .collect();
+    sort_script(&mut failures);
+
+    GenCase { seed, index, fleet, workload, failures }
+}
+
+/// Tunables for [`check_case`].
+#[derive(Clone, Copy, Debug)]
+pub struct CheckOptions {
+    /// Backend agreement: the analytic winner's simulated cost may
+    /// exceed the simulated winner's by at most this factor. Loose by
+    /// design — shared-link contention (absent from the analytic
+    /// model) and System B's serialized-transfer overestimate can
+    /// legitimately re-rank close placements; the invariant guards
+    /// against order-of-magnitude divergence, i.e. a planner whose
+    /// self-reported costs are fiction.
+    pub winner_tolerance: f64,
+    /// Run the exhaustive placement oracle on fleets up to this size
+    /// (the search is over every ordered subset; 8 machines ≈ 10⁵
+    /// permutations per task, 9 is the hard ceiling).
+    pub oracle_max_machines: usize,
+}
+
+impl Default for CheckOptions {
+    fn default() -> Self {
+        CheckOptions { winner_tolerance: 10.0, oracle_max_machines: 8 }
+    }
+}
+
+/// One invariant violation; `planner` is a slug, `"(all)"` for
+/// cross-planner invariants or `"(generator)"` for generator bugs.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub invariant: &'static str,
+    pub planner: &'static str,
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}: {}", self.invariant, self.planner,
+               self.detail)
+    }
+}
+
+/// What [`check_case`] found for one case.
+#[derive(Clone, Debug, Default)]
+pub struct CaseReport {
+    pub violations: Vec<Violation>,
+    /// Every registered planner produced a placement (none declined);
+    /// only such cases exercise the pricing/backends/oracle checks.
+    pub fully_planned: bool,
+}
+
+fn costs_close(a: IterCost, b: IterCost) -> bool {
+    match (a.is_feasible(), b.is_feasible()) {
+        (false, false) => true,
+        (true, true) => {
+            let rel = |x: f64, y: f64| {
+                (x - y).abs() <= 1e-9 * x.abs().max(y.abs()).max(1.0)
+            };
+            rel(a.comm_ms, b.comm_ms) && rel(a.comp_ms, b.comp_ms)
+        }
+        _ => false,
+    }
+}
+
+/// Cheapest feasible column for a task, `None` if every system is
+/// infeasible on it. Mirrors the winner rule the scenarios report.
+fn winner(eval: &SystemEval, task: usize) -> Option<usize> {
+    (0..eval.systems.len())
+        .filter(|&s| eval.costs[task][s].total_ms().is_finite())
+        .min_by(|&x, &y| {
+            eval.costs[task][x]
+                .total_ms()
+                .total_cmp(&eval.costs[task][y].total_ms())
+        })
+}
+
+/// Heap's algorithm: visit every permutation of `xs` in place.
+fn heap_permutations(xs: &mut [usize],
+                     visit: &mut impl FnMut(&[usize]))
+{
+    fn go(k: usize, xs: &mut [usize],
+          visit: &mut impl FnMut(&[usize]))
+    {
+        if k <= 1 {
+            visit(xs);
+            return;
+        }
+        for i in 0..k {
+            go(k - 1, xs, visit);
+            if k % 2 == 0 {
+                xs.swap(i, k - 1);
+            } else {
+                xs.swap(0, k - 1);
+            }
+        }
+    }
+    go(xs.len(), xs, visit);
+}
+
+/// Brute-force placement oracle: the cheapest analytic cost of `model`
+/// over every placement family any planner can emit — data-parallel,
+/// tensor-parallel and proportional pipelines over every *ordered*
+/// non-empty machine subset (ring and chain costs are order-
+/// sensitive, so id-order subsets alone would not bound System C's
+/// grouping or Hulk's latency-sorted chains).
+pub fn exhaustive_best(fleet: &Fleet, model: &ModelSpec) -> IterCost {
+    let n = fleet.len();
+    assert!(n <= 9, "exhaustive oracle explodes past 9 machines");
+    let mut best = IterCost::infeasible();
+    for mask in 1u32..(1 << n) {
+        let subset: Vec<usize> =
+            (0..n).filter(|&i| (mask >> i) & 1 == 1).collect();
+        let mut perm = subset.clone();
+        heap_permutations(&mut perm, &mut |order: &[usize]| {
+            let dp = data_parallel_cost(fleet, order, model);
+            if dp.total_ms() < best.total_ms() {
+                best = dp;
+            }
+            let tp = tensor_parallel_cost(fleet, order, model);
+            if tp.total_ms() < best.total_ms() {
+                best = tp;
+            }
+            if order.len() <= model.layers {
+                let plan = PipelinePlan::proportional(
+                    fleet, order.to_vec(), model);
+                let pl = pipeline_cost(fleet, &plan, model);
+                if pl.total_ms() < best.total_ms() {
+                    best = pl;
+                }
+            }
+        });
+    }
+    best
+}
+
+/// Run every planner in `planners` over `case` and check the
+/// cross-cutting invariants (module docs list them). Declining to plan
+/// (an `Err` from `plan`, e.g. Algorithm 1 deferring an oversized
+/// task) is not a violation as long as it is deterministic; cases with
+/// any decline skip the pricing-dependent phases and report
+/// `fully_planned: false`.
+pub fn check_case(case: &GenCase, planners: &PlannerRegistry,
+                  opts: &CheckOptions) -> CaseReport
+{
+    let mut v: Vec<Violation> = Vec::new();
+    let world =
+        ScenarioWorld::new(case.fleet.clone(), case.workload.clone());
+    let ctx = world.context(HulkSplitterKind::Oracle);
+
+    // Phase 1: per-planner determinism + structural feasibility.
+    let mut planned: Vec<Option<Placement>> = Vec::new();
+    let mut structural = false;
+    for planner in planners.iter() {
+        let first = planner.plan(&ctx);
+        let second = planner.plan(&ctx);
+        match (&first, &second) {
+            (Ok(a), Ok(b)) if a != b => v.push(Violation {
+                invariant: "determinism",
+                planner: planner.slug(),
+                detail: "same context, different placements across two \
+                         plan() calls"
+                    .into(),
+            }),
+            (Ok(_), Err(e)) | (Err(e), Ok(_)) => v.push(Violation {
+                invariant: "determinism",
+                planner: planner.slug(),
+                detail: format!(
+                    "plans on one run, declines on the other ({e})"),
+            }),
+            (Err(a), Err(b)) if a.to_string() != b.to_string() => {
+                v.push(Violation {
+                    invariant: "determinism",
+                    planner: planner.slug(),
+                    detail: format!("declines differently: {a} vs {b}"),
+                })
+            }
+            _ => {}
+        }
+        match first {
+            Ok(p) => {
+                if let Err(e) = p.validate_machines(world.fleet()) {
+                    v.push(Violation {
+                        invariant: "feasibility",
+                        planner: planner.slug(),
+                        detail: e,
+                    });
+                    structural = true;
+                    planned.push(None);
+                } else {
+                    for (t, model) in
+                        world.workload().iter().enumerate()
+                    {
+                        let cost = p.cost(world.fleet(), model, t);
+                        if !cost.is_feasible() {
+                            continue;
+                        }
+                        let group = p.machines(t);
+                        if group.is_empty()
+                            || group_memory_gb(world.fleet(), group)
+                                + 1e-9
+                                < model.train_gb()
+                        {
+                            v.push(Violation {
+                                invariant: "capacity",
+                                planner: planner.slug(),
+                                detail: format!(
+                                    "task {t} ({}) priced feasible on \
+                                     group {group:?} with {:.1} GB < \
+                                     {:.1} GB needed",
+                                    model.name,
+                                    group_memory_gb(
+                                        world.fleet(), group),
+                                    model.train_gb()),
+                            });
+                        }
+                    }
+                    planned.push(Some(p));
+                }
+            }
+            Err(_) => planned.push(None),
+        }
+    }
+    if structural {
+        // Out-of-range machine ids make any pricing below unsafe
+        // (`Placement::cost` indexes the fleet) — report what we have.
+        return CaseReport { violations: v, fully_planned: false };
+    }
+
+    let fully_planned = planned.iter().all(|p| p.is_some());
+    if fully_planned {
+        match evaluate_world(planners, &world, HulkSplitterKind::Oracle,
+                             CostBackend::Analytic)
+        {
+            Err(e) => v.push(Violation {
+                invariant: "determinism",
+                planner: "(all)",
+                detail: format!(
+                    "every planner planned individually, but \
+                     evaluate_world failed: {e}"),
+            }),
+            Ok(analytic) => {
+                // Self-pricing: Placement::cost must reproduce the
+                // analytic matrix entry for entry.
+                for (s, (planner, p)) in
+                    planners.iter().zip(&planned).enumerate()
+                {
+                    let p = p.as_ref().expect("fully planned");
+                    for (t, model) in
+                        world.workload().iter().enumerate()
+                    {
+                        let own = p.cost(world.fleet(), model, t);
+                        let evaled = analytic.costs[t][s];
+                        if !costs_close(own, evaled) {
+                            v.push(Violation {
+                                invariant: "self-pricing",
+                                planner: planner.slug(),
+                                detail: format!(
+                                    "task {t} ({}): self-priced \
+                                     {:.3}ms vs evaluate_world \
+                                     {:.3}ms",
+                                    model.name,
+                                    own.total_ms(),
+                                    evaled.total_ms()),
+                            });
+                        }
+                    }
+                }
+                // Backend agreement on the per-task winner.
+                match evaluate_world(planners, &world,
+                                     HulkSplitterKind::Oracle,
+                                     CostBackend::Simulated)
+                {
+                    Err(e) => v.push(Violation {
+                        invariant: "determinism",
+                        planner: "(all)",
+                        detail: format!(
+                            "analytic evaluation succeeded but the \
+                             simulated one failed: {e}"),
+                    }),
+                    Ok(sim) => {
+                        for (t, model) in
+                            world.workload().iter().enumerate()
+                        {
+                            let (Some(wa), Some(ws)) =
+                                (winner(&analytic, t), winner(&sim, t))
+                            else {
+                                continue;
+                            };
+                            let sim_of = |s: usize| {
+                                sim.costs[t][s].total_ms()
+                            };
+                            if sim_of(wa).is_finite()
+                                && sim_of(ws).is_finite()
+                                && sim_of(wa)
+                                    > sim_of(ws)
+                                        * opts.winner_tolerance
+                            {
+                                v.push(Violation {
+                                    invariant: "backend-agreement",
+                                    planner: "(all)",
+                                    detail: format!(
+                                        "task {t} ({}): analytic \
+                                         winner {} simulates at \
+                                         {:.1}ms, over {}× the sim \
+                                         winner {}'s {:.1}ms",
+                                        model.name,
+                                        analytic.systems[wa].slug,
+                                        sim_of(wa),
+                                        opts.winner_tolerance,
+                                        sim.systems[ws].slug,
+                                        sim_of(ws)),
+                                });
+                            }
+                        }
+                    }
+                }
+                // Oracle bound on small fleets.
+                if world.fleet().len() <= opts.oracle_max_machines {
+                    for (t, model) in
+                        world.workload().iter().enumerate()
+                    {
+                        let best = exhaustive_best(world.fleet(),
+                                                   model)
+                            .total_ms();
+                        for (s, planner) in
+                            planners.iter().enumerate()
+                        {
+                            let c = analytic.costs[t][s].total_ms();
+                            if c.is_finite()
+                                && c < best * (1.0 - 1e-9) - 1e-6
+                            {
+                                v.push(Violation {
+                                    invariant: "oracle-bound",
+                                    planner: planner.slug(),
+                                    detail: format!(
+                                        "task {t} ({}): priced \
+                                         {c:.3}ms, below the \
+                                         exhaustive optimum \
+                                         {best:.3}ms",
+                                        model.name),
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Survivor feasibility: after the failure script's revocations,
+    // replanning must never reference a revoked machine. Survivor ids
+    // are re-densified, so in-range means alive.
+    if !case.failures.is_empty() {
+        let sworld = ScenarioWorld::new(case.survivor_fleet(),
+                                        case.workload.clone());
+        let sctx = sworld.context(HulkSplitterKind::Oracle);
+        for planner in planners.iter() {
+            if let Ok(p) = planner.plan(&sctx) {
+                if let Err(e) = p.validate_machines(sworld.fleet()) {
+                    v.push(Violation {
+                        invariant: "survivor-feasibility",
+                        planner: planner.slug(),
+                        detail: format!(
+                            "after revoking {:?}: {e}",
+                            case.failures
+                                .iter()
+                                .map(|f| f.machine)
+                                .collect::<Vec<_>>()),
+                    });
+                }
+            }
+        }
+    }
+
+    CaseReport { violations: v, fully_planned }
+}
+
+/// The generator's own invariant: regenerating `(seed, index)` must
+/// reproduce the case bit-for-bit. Checked separately from
+/// [`check_case`] because shrunk cases are intentionally *not*
+/// regenerable (they are truncations, not draws).
+pub fn check_generator_determinism(case: &GenCase) -> Option<Violation> {
+    let again = generate_case(case.seed, case.index);
+    let same = again.fleet.machines == case.fleet.machines
+        && wan_probe(&again.fleet) == wan_probe(&case.fleet)
+        && again.workload == case.workload
+        && again.failures == case.failures;
+    if same {
+        None
+    } else {
+        Some(Violation {
+            invariant: "generator-determinism",
+            planner: "(generator)",
+            detail: format!(
+                "case {} regenerated differently from seed {}",
+                case.index, case.seed),
+        })
+    }
+}
+
+/// Latency fingerprint of the fleet's WAN (bit-exact, covers scaling
+/// and blocks) — `WanModel` itself has no equality.
+fn wan_probe(fleet: &Fleet) -> Vec<Option<u64>> {
+    let mut probes = Vec::new();
+    for a in &fleet.machines {
+        for b in &fleet.machines {
+            probes.push(fleet
+                .wan
+                .latency_ms(a.region, b.region)
+                .map(f64::to_bits));
+        }
+    }
+    probes
+}
+
+fn halve_fleet(case: &GenCase) -> Option<GenCase> {
+    let n = case.fleet.len();
+    if n <= 2 {
+        return None;
+    }
+    let keep = n.div_ceil(2);
+    let machines: Vec<Machine> = case.fleet.machines[..keep]
+        .iter()
+        .enumerate()
+        .map(|(id, m)| Machine::new(id, m.region, m.gpu, m.n_gpus))
+        .collect();
+    let mut failures: Vec<FailurePlan> = case
+        .failures
+        .iter()
+        .copied()
+        .filter(|f| f.machine < keep)
+        .collect();
+    while keep - failures.len() < 2 {
+        failures.pop();
+    }
+    Some(GenCase {
+        seed: case.seed,
+        index: case.index,
+        fleet: Fleet::new(machines, case.fleet.wan.clone()),
+        workload: case.workload.clone(),
+        failures,
+    })
+}
+
+fn halve_workload(case: &GenCase) -> Option<GenCase> {
+    if case.workload.len() <= 1 {
+        return None;
+    }
+    let keep = case.workload.len().div_ceil(2);
+    Some(GenCase {
+        seed: case.seed,
+        index: case.index,
+        fleet: case.fleet.clone(),
+        workload: case.workload[..keep].to_vec(),
+        failures: case.failures.clone(),
+    })
+}
+
+/// Shrink a failing case: repeatedly halve the fleet, then the
+/// workload, keeping a candidate whenever *some* invariant still
+/// fails, until no halving reproduces a violation. Returns the minimal
+/// failing case and its violations (the input's, if it cannot shrink;
+/// empty if the input did not fail at all).
+pub fn shrink_case(case: &GenCase, planners: &PlannerRegistry,
+                   opts: &CheckOptions) -> (GenCase, Vec<Violation>)
+{
+    let mut current = case.clone();
+    let mut violations = check_case(&current, planners, opts).violations;
+    loop {
+        let mut shrunk = false;
+        for candidate in
+            [halve_fleet(&current), halve_workload(&current)]
+                .into_iter()
+                .flatten()
+        {
+            let report = check_case(&candidate, planners, opts);
+            if !report.violations.is_empty() {
+                violations = report.violations;
+                current = candidate;
+                shrunk = true;
+                break;
+            }
+        }
+        if !shrunk {
+            break;
+        }
+    }
+    (current, violations)
+}
+
+/// Human-readable failure report: violations, original vs shrunk
+/// shape, and the exact command that reproduces the case.
+pub fn shrink_report(original: &GenCase, minimal: &GenCase,
+                     violations: &[Violation]) -> String
+{
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "property violation in generated case {} of seed {}:",
+        original.index, original.seed);
+    for v in violations {
+        let _ = writeln!(out, "  - {v}");
+    }
+    let _ = writeln!(out, "  original shape: {}", original.shape());
+    if minimal.shape() != original.shape() {
+        let _ = writeln!(out, "  shrunk to:      {}", minimal.shape());
+    }
+    let _ = writeln!(out, "  reproduce with: {}", original.repro());
+    out
+}
+
+/// Aggregate outcome of a `--check` sweep.
+#[derive(Clone, Debug)]
+pub struct GeneratedRun {
+    /// Cases generated and checked (stops at the first failure).
+    pub cases: usize,
+    /// Cases every planner fully planned (pricing phases exercised).
+    pub fully_planned: usize,
+    /// Total violations found (0 on a clean sweep).
+    pub violations: usize,
+    /// Shrunk repro report for the first failing case.
+    pub failure: Option<String>,
+}
+
+/// Generate `count` cases from `seed` and check each (generator
+/// determinism + [`check_case`]); on the first failing case, shrink it
+/// and stop. Pure in `(seed, count, planners, opts)`.
+pub fn run_generated(seed: u64, count: usize,
+                     planners: &PlannerRegistry, opts: &CheckOptions)
+    -> GeneratedRun
+{
+    let mut run = GeneratedRun {
+        cases: 0,
+        fully_planned: 0,
+        violations: 0,
+        failure: None,
+    };
+    for index in 0..count {
+        let case = generate_case(seed, index);
+        run.cases += 1;
+        let mut report = check_case(&case, planners, opts);
+        if let Some(gen_v) = check_generator_determinism(&case) {
+            report.violations.push(gen_v);
+        }
+        if report.fully_planned {
+            run.fully_planned += 1;
+        }
+        if !report.violations.is_empty() {
+            run.violations += report.violations.len();
+            let (minimal, min_v) = shrink_case(&case, planners, opts);
+            // A generator-determinism violation on an otherwise-clean
+            // case leaves shrink_case nothing to reproduce; fall back
+            // to the original violation list.
+            let vs = if min_v.is_empty() {
+                report.violations.clone()
+            } else {
+                min_v
+            };
+            run.failure = Some(shrink_report(&case, &minimal, &vs));
+            break;
+        }
+    }
+    run
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parallel::data_parallel::replica_capable;
+
+    #[test]
+    fn generation_is_deterministic_and_in_bounds() {
+        for index in 0..30 {
+            let case = generate_case(11, index);
+            let shape = case.shape();
+            assert!((4..=24).contains(&shape.machines), "{shape}");
+            assert!((2..=5).contains(&shape.regions), "{shape}");
+            assert!((1..=3).contains(&shape.tasks), "{shape}");
+            assert!(shape.failures <= 2, "{shape}");
+            assert!(check_generator_determinism(&case).is_none());
+            for (i, m) in case.fleet.machines.iter().enumerate() {
+                assert_eq!(m.id, i);
+            }
+            for f in &case.failures {
+                assert!(f.machine < case.fleet.len());
+                assert!(f.at_ms >= 0.0);
+            }
+            // The cluster graph must stay connected — the planners'
+            // documented precondition — even when a WAN link was
+            // blocked or Beijing/Paris were both drawn.
+            let graph = ClusterGraph::from_fleet(&case.fleet);
+            let all: Vec<usize> = (0..case.fleet.len()).collect();
+            assert!(graph.subset_connected(&all),
+                    "case {index} disconnected");
+            let regions: Vec<Region> = case
+                .fleet
+                .machines
+                .iter()
+                .map(|m| m.region)
+                .collect();
+            assert!(!(regions.contains(&Region::Beijing)
+                      && regions.contains(&Region::Paris)),
+                    "policy-blocked region pair generated");
+            assert!(case.survivor_fleet().len() >= 2);
+        }
+    }
+
+    #[test]
+    fn different_seeds_give_different_cases() {
+        let a = generate_case(1, 0);
+        let b = generate_case(2, 0);
+        assert!(a.fleet.machines != b.fleet.machines
+                || a.workload != b.workload
+                || a.failures != b.failures);
+    }
+
+    #[test]
+    fn exhaustive_oracle_lower_bounds_hand_built_placements() {
+        let fleet = Fleet::paper_toy(0);
+        let model = ModelSpec::bert_large();
+        let best = exhaustive_best(&fleet, &model);
+        assert!(best.is_feasible());
+        let dp = data_parallel_cost(
+            &fleet, &replica_capable(&fleet, &model), &model);
+        assert!(best.total_ms() <= dp.total_ms() + 1e-6);
+        let pipe =
+            PipelinePlan::proportional(&fleet, vec![0, 1, 2], &model);
+        let pl = pipeline_cost(&fleet, &pipe, &model);
+        if pl.is_feasible() {
+            assert!(best.total_ms() <= pl.total_ms() + 1e-6);
+        }
+    }
+
+    #[test]
+    fn halving_keeps_cases_well_formed() {
+        let case = generate_case(3, 0);
+        let halved = halve_fleet(&case).expect("≥4 machines halve");
+        assert_eq!(halved.fleet.len(), case.fleet.len().div_ceil(2));
+        for (i, m) in halved.fleet.machines.iter().enumerate() {
+            assert_eq!(m.id, i);
+        }
+        assert!(halved
+            .failures
+            .iter()
+            .all(|f| f.machine < halved.fleet.len()));
+        assert!(halved.fleet.len() - halved.failures.len() >= 2);
+        let two_tasks = GenCase {
+            workload: vec![ModelSpec::bert_large(),
+                           ModelSpec::gpt2_xl()],
+            ..case.clone()
+        };
+        let smaller =
+            halve_workload(&two_tasks).expect("2 tasks halve");
+        assert_eq!(smaller.workload.len(), 1);
+        assert!(halve_workload(&smaller).is_none());
+    }
+
+    #[test]
+    fn checks_pass_on_a_handful_of_cases() {
+        let planners = PlannerRegistry::standard();
+        let opts = CheckOptions::default();
+        let mut planned = 0;
+        for index in 0..4 {
+            let case = generate_case(5, index);
+            let report = check_case(&case, &planners, &opts);
+            assert!(report.violations.is_empty(),
+                    "case {index}: {:?}", report.violations);
+            planned += usize::from(report.fully_planned);
+        }
+        assert!(planned >= 1, "no case fully planned");
+    }
+
+    #[test]
+    fn repro_command_names_seed_and_count() {
+        let case = generate_case(9, 4);
+        assert_eq!(case.repro(),
+                   "hulk scenarios generate --seed 9 --count 5 --check");
+    }
+}

@@ -12,6 +12,11 @@
 //!   (scenario × registered planner) cells executed serially or across a
 //!   std-thread worker pool, with insertion-ordered merging so
 //!   `--parallel` output is byte-identical to a serial run.
+//! - [`generator`] — the seeded `(Fleet, Workload, failure script)`
+//!   case generator and property-checking engine behind
+//!   `hulk scenarios generate --check`, the `generated_sweep`
+//!   scenario and `rust/tests/planner_properties.rs`, with
+//!   shrinking-on-failure down to a minimal seed+shape repro.
 //! - [`evaluate`] — a workload through every planner of a
 //!   [`PlannerRegistry`](crate::planner::PlannerRegistry) (the Fig. 8 /
 //!   Fig. 10 rows); the primitive every scenario builds on.
@@ -27,6 +32,7 @@
 
 pub mod bench;
 pub mod evaluate;
+pub mod generator;
 pub mod registry;
 pub mod runner;
 pub mod sweep;
@@ -34,6 +40,11 @@ pub mod world;
 
 pub use evaluate::{evaluate_all, evaluate_with, evaluate_with_backend,
                    evaluate_world, SystemEval};
+pub use generator::{check_case, check_generator_determinism,
+                    exhaustive_best, generate_case, run_generated,
+                    shrink_case, shrink_report, CaseReport,
+                    CheckOptions, GenCase, GenShape, GeneratedRun,
+                    Violation};
 pub use registry::{all_scenarios, find_scenario, resolve_scenarios,
                    run_all};
 pub use runner::{run_specs, run_specs_sharing, ScenarioBody,

@@ -43,6 +43,7 @@ use crate::util::rng::Rng;
 use crate::util::table::{fmt_ms, Table};
 
 use super::evaluate::{evaluate_with_backend, evaluate_world, SystemEval};
+use super::generator::{check_case, generate_case, CheckOptions};
 use super::runner::{exec_entries, placement_entries, run_specs,
                     ScenarioBody, ScenarioResult, ScenarioSpec,
                     SeedPolicy};
@@ -152,6 +153,15 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
             body: ScenarioBody::Custom(sim_vs_analytic),
             sim_only: true,
         },
+        ScenarioSpec {
+            name: "generated_sweep",
+            description: "Seeded random (fleet, workload, failure) \
+                          cases through every planner with the \
+                          property checks on (requires --cost sim)",
+            seed: SeedPolicy::Tagged(0x4745_4E53_5745_4550), // "GENSWEEP"
+            body: ScenarioBody::Custom(generated_sweep),
+            sim_only: true,
+        },
     ]
 }
 
@@ -189,9 +199,22 @@ pub fn resolve_scenarios(names: &[String], backend: CostBackend)
         if let Some(blocked) = names.iter().find(|n| {
             all.iter().any(|s| s.name == n.as_str() && s.sim_only)
         }) {
+            let sim_names: Vec<&str> = all
+                .iter()
+                .filter(|s| s.sim_only)
+                .map(|s| s.name)
+                .collect();
+            let analytic_names: Vec<&str> = all
+                .iter()
+                .filter(|s| !s.sim_only)
+                .map(|s| s.name)
+                .collect();
             anyhow::bail!(
-                "scenario {blocked:?} measures shared-link contention and \
-                 only runs on the discrete-event backend; add --cost sim"
+                "scenario {blocked:?} only runs on the discrete-event \
+                 backend; add --cost sim (sim-only scenarios: {}) or \
+                 pick an analytic-capable one: {}",
+                sim_names.join(", "),
+                analytic_names.join(", ")
             );
         }
     }
@@ -1060,6 +1083,102 @@ fn sim_vs_analytic(seed: u64, planners: &PlannerRegistry,
     })
 }
 
+/// `generated_sweep` — the property engine as a benchmark scenario:
+/// scan generated cases from the scenario seed, price the first
+/// `SWEEP_CASES` that every registered planner fully plans with zero
+/// property violations, and report per-case per-system totals plus
+/// aggregate counters (`violations` must stay 0). Sim-only: the
+/// property checks themselves exercise the discrete-event backend
+/// (winner agreement), and keeping the sweep off the analytic path
+/// leaves the default `BENCH_scenarios.json` byte-identical.
+fn generated_sweep(seed: u64, planners: &PlannerRegistry,
+                   _backend: CostBackend) -> Result<ScenarioResult>
+{
+    const SWEEP_CASES: usize = 6;
+    const SWEEP_SCAN: usize = 24;
+    let opts = CheckOptions::default();
+    let mut entries = Vec::new();
+    let mut placements = Vec::new();
+    let mut t = Table::new(&["case", "shape", "hulk Δ"]);
+    let mut priced = 0usize;
+    let mut declined = 0usize;
+    let mut violations = 0usize;
+    let mut improvements: Vec<f64> = Vec::new();
+    for index in 0..SWEEP_SCAN {
+        if priced == SWEEP_CASES {
+            break;
+        }
+        let case = generate_case(seed, index);
+        let report = check_case(&case, planners, &opts);
+        violations += report.violations.len();
+        if !report.fully_planned || !report.violations.is_empty() {
+            declined += usize::from(!report.fully_planned);
+            continue;
+        }
+        let world = ScenarioWorld::new(case.fleet.clone(),
+                                       case.workload.clone());
+        let eval = evaluate_world(planners, &world,
+                                  HulkSplitterKind::Oracle,
+                                  CostBackend::Analytic)?;
+        for (s, meta) in eval.systems.iter().enumerate() {
+            let total: f64 = eval
+                .costs
+                .iter()
+                .map(|row| row[s])
+                .filter(IterCost::is_feasible)
+                .map(|c| c.total_ms())
+                .sum();
+            entries.push(BenchEntry::new(
+                format!("generated_sweep/case{index:02}/{}/total_ms",
+                        meta.slug),
+                total,
+                "ms",
+            ));
+        }
+        let imp = eval.hulk_improvement() * 100.0;
+        entries.push(BenchEntry::new(
+            format!("generated_sweep/case{index:02}\
+                     /hulk_improvement_pct"),
+            imp,
+            "%",
+        ));
+        improvements.push(imp);
+        if placements.is_empty() {
+            // One representative digest set; per-case digests would
+            // dwarf the hand-written scenarios' artifact.
+            placements = placement_entries("generated_sweep", &eval);
+        }
+        t.row(&[format!("{index:02}"), case.shape().to_string(),
+                format!("{imp:+.1}%")]);
+        priced += 1;
+    }
+    let mean_imp = if improvements.is_empty() {
+        0.0
+    } else {
+        improvements.iter().sum::<f64>() / improvements.len() as f64
+    };
+    entries.push(BenchEntry::new("generated_sweep/cases_priced",
+                                 priced as f64, "count"));
+    entries.push(BenchEntry::new("generated_sweep/cases_declined",
+                                 declined as f64, "count"));
+    entries.push(BenchEntry::new("generated_sweep/violations",
+                                 violations as f64, "count"));
+    entries.push(BenchEntry::new("generated_sweep/hulk_improvement_pct",
+                                 mean_imp, "%"));
+    let rendered = format!(
+        "— generated property sweep (seed {seed}) —\n{}\
+         {priced} case(s) priced, {declined} declined, \
+         {violations} property violations\n",
+        t.render()
+    );
+    Ok(ScenarioResult {
+        scenario: "generated_sweep",
+        entries,
+        placements,
+        rendered,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1076,7 +1195,7 @@ mod tests {
     #[test]
     fn registry_is_populated_with_unique_names() {
         let scenarios = all_scenarios();
-        assert!(scenarios.len() >= 10);
+        assert!(scenarios.len() >= 11);
         let mut names: Vec<&str> =
             scenarios.iter().map(|s| s.name).collect();
         names.sort_unstable();
@@ -1088,13 +1207,17 @@ mod tests {
         assert!(find_scenario("contended_links").is_some());
         assert!(find_scenario("sim_vs_analytic").is_some());
         assert!(find_scenario("no_such_scenario").is_none());
-        // Exactly the two contention studies are sim-only.
+        assert!(find_scenario("generated_sweep").is_some());
+        // Exactly the contention studies and the generated property
+        // sweep are sim-only.
         let sim_only: Vec<&str> = scenarios
             .iter()
             .filter(|s| s.sim_only)
             .map(|s| s.name)
             .collect();
-        assert_eq!(sim_only, vec!["contended_links", "sim_vs_analytic"]);
+        assert_eq!(sim_only,
+                   vec!["contended_links", "sim_vs_analytic",
+                        "generated_sweep"]);
     }
 
     #[test]
@@ -1123,13 +1246,13 @@ mod tests {
         let (specs, ran_all) =
             resolve_scenarios(&[], CostBackend::Analytic).unwrap();
         assert!(ran_all);
-        assert_eq!(specs.len(), all_scenarios().len() - 2);
+        assert_eq!(specs.len(), all_scenarios().len() - 3);
         assert!(specs.iter().all(|s| !s.sim_only));
         let (specs, ran_all) = resolve_scenarios(&["all".to_string()],
                                                  CostBackend::Analytic)
             .unwrap();
         assert!(ran_all);
-        assert_eq!(specs.len(), all_scenarios().len() - 2);
+        assert_eq!(specs.len(), all_scenarios().len() - 3);
         // The simulated backend runs the complete registry.
         let (specs, ran_all) =
             resolve_scenarios(&[], CostBackend::Simulated).unwrap();

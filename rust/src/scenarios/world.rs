@@ -245,6 +245,44 @@ mod tests {
     }
 
     #[test]
+    fn fork_workload_mutation_never_invalidates_parent_tensors() {
+        // The failure_storm shed-loop shape: repeated forks with
+        // mutated workloads must leave the parent's cached GCN tensors
+        // bit-identical and its workload untouched — the padded cache
+        // is keyed by slot count only, never by workload.
+        let world = ScenarioWorld::new(Fleet::paper_evaluation(0),
+                                       ModelSpec::paper_four());
+        let padded = world.padded(64);
+        let feats_before = padded.feats.clone();
+        let mask_before = padded.mask.clone();
+        let dense_before = padded.dense_adj().to_vec();
+        let parent_workload = world.workload().to_vec();
+        let mut wl = ModelSpec::paper_six();
+        for _ in 0..3 {
+            wl.pop();
+            let mut small = ModelSpec::bert_large();
+            small.batch /= 2;
+            wl.push(small);
+            let fork = world.with_workload(wl.clone());
+            assert!(std::ptr::eq(world.graph(), fork.graph()),
+                    "fork must share the Arc'd graph");
+            assert!(Arc::ptr_eq(&padded, &fork.padded(64)));
+            // A fork growing the shared cache with a new slot count is
+            // additive, never an invalidation.
+            assert_eq!(fork.padded(96).slots, 96);
+        }
+        assert_eq!(world.workload(), &parent_workload[..]);
+        let after = world.padded(64);
+        assert!(Arc::ptr_eq(&padded, &after));
+        assert_eq!(after.feats, feats_before);
+        assert_eq!(after.mask, mask_before);
+        assert_eq!(after.dense_adj(), &dense_before[..]);
+        // The slot count a fork built is visible to the parent — one
+        // shared cache, not a copy-on-write.
+        assert_eq!(world.padded(96).slots, 96);
+    }
+
+    #[test]
     fn context_borrows_the_world() {
         let world = ScenarioWorld::new(Fleet::paper_evaluation(0),
                                        ModelSpec::paper_four());

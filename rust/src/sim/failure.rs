@@ -22,9 +22,32 @@ pub struct FailureOutcome {
     pub completed_microbatches: usize,
 }
 
+/// Canonical order for a multi-failure script: ascending time, machine
+/// id breaking ties. Generators and replayers both sort through here so
+/// a script compares equal regardless of construction order.
+pub fn sort_script(script: &mut [FailurePlan]) {
+    script.sort_by(|a, b| {
+        a.at_ms
+            .total_cmp(&b.at_ms)
+            .then(a.machine.cmp(&b.machine))
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sort_script_orders_by_time_then_machine() {
+        let mut script = vec![
+            FailurePlan { at_ms: 50.0, machine: 3 },
+            FailurePlan { at_ms: 10.0, machine: 7 },
+            FailurePlan { at_ms: 50.0, machine: 1 },
+        ];
+        sort_script(&mut script);
+        let order: Vec<usize> = script.iter().map(|f| f.machine).collect();
+        assert_eq!(order, vec![7, 1, 3]);
+    }
 
     #[test]
     fn plan_is_plain_data() {

@@ -1,0 +1,156 @@
+//! Edge-case coverage for `sim/failure.rs`: injected machine failures
+//! must halt (or be ignored) deterministically wherever they land —
+//! mid-transfer, at t=0, or wiping out a whole region — and the engine
+//! must never hang or leave a half-finished run priced as feasible.
+
+use hulk::cluster::Fleet;
+use hulk::models::ModelSpec;
+use hulk::parallel::PipelinePlan;
+use hulk::planner::{Placement, TaskPlacement};
+use hulk::sim::{execute_placement_with, ExecOptions, FailurePlan};
+
+/// A single-task pipeline placement over `stages`, layer-split by the
+/// same throughput-proportional rule the planners use.
+fn pipeline_placement(fleet: &Fleet, stages: Vec<usize>,
+                      model: &ModelSpec) -> Placement
+{
+    let plan = PipelinePlan::proportional(fleet, stages, model);
+    Placement {
+        per_task: vec![TaskPlacement::PipelineStages {
+            stages: plan.stages,
+            layers: plan.layers,
+            microbatches: plan.microbatches,
+        }],
+    }
+}
+
+#[test]
+fn mid_run_failure_always_halts_deterministically() {
+    let fleet = Fleet::paper_toy(0);
+    let model = ModelSpec::bert_large();
+    let workload = vec![model.clone()];
+    let placement = pipeline_placement(&fleet, vec![0, 4], &model);
+
+    let healthy = execute_placement_with(&fleet, &workload, &placement,
+                                         ExecOptions::default());
+    let makespan = healthy.report.makespan_ms;
+    assert!(makespan.is_finite() && makespan > 0.0);
+
+    // Kill the second stage at every phase of the run — during the
+    // first microbatch, mid-transfer, near the tail. Each injection
+    // must halt with the exact (time, machine) recorded, an infinite
+    // makespan, an infeasible task cost, and a bit-identical rerun.
+    for pct in [5u32, 20, 35, 50, 65, 80, 95] {
+        let at_ms = makespan * f64::from(pct) / 100.0;
+        let opts = ExecOptions {
+            failure: Some(FailurePlan { at_ms, machine: 4 }),
+            ..ExecOptions::default()
+        };
+        let hit = execute_placement_with(&fleet, &workload, &placement,
+                                         opts);
+        let outcome = hit.failure.unwrap_or_else(|| {
+            panic!("failure at {pct}% of the run was not observed")
+        });
+        assert_eq!(outcome.at_ms, at_ms);
+        assert_eq!(outcome.machine, 4);
+        assert!(hit.report.makespan_ms.is_infinite(),
+                "halted run at {pct}% still reports a finite makespan");
+        assert!(!hit.tasks[0].cost.is_feasible(),
+                "interrupted task priced feasible at {pct}%");
+        // Determinism: the same failure script replays event-for-event.
+        let again = execute_placement_with(&fleet, &workload, &placement,
+                                           opts);
+        assert_eq!(again.failure, hit.failure);
+        assert_eq!(again.report.events_processed,
+                   hit.report.events_processed);
+    }
+}
+
+#[test]
+fn whole_region_failure_halts_for_every_member_and_spares_complete() {
+    let fleet = Fleet::paper_evaluation(0);
+    let model = ModelSpec::bert_large();
+    let workload = vec![model.clone()];
+    let home = fleet.machines[0].region;
+    let members: Vec<usize> = fleet
+        .machines
+        .iter()
+        .filter(|m| m.region == home)
+        .map(|m| m.id)
+        .collect();
+    assert!(members.len() >= 2,
+            "need a multi-machine region for this test");
+
+    // A data-parallel task spanning exactly the region: every single
+    // member dying must halt it, immediately and identically.
+    let placement = Placement {
+        per_task: vec![TaskPlacement::Replicated {
+            participants: members.clone(),
+        }],
+    };
+    for &victim in &members {
+        let opts = ExecOptions {
+            failure: Some(FailurePlan { at_ms: 1.0, machine: victim }),
+            ..ExecOptions::default()
+        };
+        let hit = execute_placement_with(&fleet, &workload, &placement,
+                                         opts);
+        let outcome = hit
+            .failure
+            .unwrap_or_else(|| panic!("machine {victim} dying was \
+                                       not observed"));
+        assert_eq!(outcome.machine, victim);
+        assert_eq!(outcome.completed_microbatches, 0,
+                   "nothing can have completed 1ms in");
+        assert!(hit.report.makespan_ms.is_infinite());
+    }
+
+    // A machine outside the placement dying is a non-event: the run
+    // completes with a makespan identical to the healthy one.
+    let pair = Placement {
+        per_task: vec![TaskPlacement::Replicated {
+            participants: vec![members[0], members[1]],
+        }],
+    };
+    let healthy = execute_placement_with(&fleet, &workload, &pair,
+                                         ExecOptions::default());
+    let spare = fleet.len() - 1;
+    assert!(!members.contains(&spare));
+    let spared = execute_placement_with(&fleet, &workload, &pair,
+        ExecOptions {
+            failure: Some(FailurePlan { at_ms: 1.0, machine: spare }),
+            ..ExecOptions::default()
+        });
+    assert!(spared.failure.is_none(),
+            "a bystander failure must not halt the task");
+    assert_eq!(spared.report.makespan_ms, healthy.report.makespan_ms);
+}
+
+#[test]
+fn failure_at_time_zero_halts_cleanly() {
+    let fleet = Fleet::paper_toy(0);
+    let model = ModelSpec::bert_large();
+    let workload = vec![model.clone()];
+    let placement =
+        pipeline_placement(&fleet, vec![0, 1, 2, 3], &model);
+
+    let opts = ExecOptions {
+        failure: Some(FailurePlan { at_ms: 0.0, machine: 0 }),
+        ..ExecOptions::default()
+    };
+    let hit = execute_placement_with(&fleet, &workload, &placement,
+                                     opts);
+    let outcome = hit.failure.expect("t=0 failure must be observed");
+    assert_eq!(outcome.at_ms, 0.0);
+    assert_eq!(outcome.machine, 0);
+    assert_eq!(outcome.completed_microbatches, 0);
+    assert!(hit.report.makespan_ms.is_infinite());
+    assert_eq!(hit.report.straggler_wait_ms, 0.0);
+    assert!(!hit.tasks[0].cost.is_feasible());
+    // And it replays deterministically.
+    let again = execute_placement_with(&fleet, &workload, &placement,
+                                       opts);
+    assert_eq!(again.report.events_processed,
+               hit.report.events_processed);
+    assert_eq!(again.failure, hit.failure);
+}

@@ -141,3 +141,43 @@ fn run_all_emits_the_acceptance_coverage() {
     assert!(balance('{', '}') && balance('[', ']'));
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn sim_only_rejection_survives_a_systems_filter() {
+    use hulk::planner::{CostBackend, PlannerRegistry};
+    use hulk::scenarios::{resolve_scenarios, run_specs};
+
+    // `scenarios run generated_sweep table1_fleet --systems a,hulk`
+    // without `--cost sim` must fail up front — and the error has to
+    // hand the user both halves of the fix: the sim-only list (so they
+    // know which names need `--cost sim`) and the analytic-capable
+    // list (so they can pick a valid combination instead).
+    let names = vec!["generated_sweep".to_string(),
+                     "table1_fleet".to_string()];
+    let err = resolve_scenarios(&names, CostBackend::Analytic)
+        .expect_err("sim-only scenario must be rejected on analytic");
+    let msg = err.to_string();
+    assert!(msg.contains("--cost sim"), "{msg}");
+    assert!(msg.contains("generated_sweep"), "{msg}");
+    assert!(msg.contains("contended_links"), "{msg}");
+    assert!(msg.contains("table1_fleet"),
+            "error must list analytic-capable scenarios: {msg}");
+
+    // The same request under `--cost sim` resolves and runs, honoring
+    // the planner filter: System A and Hulk report, System B does not.
+    let planners = PlannerRegistry::resolve("a,hulk").unwrap();
+    let (specs, _) =
+        resolve_scenarios(&["generated_sweep".to_string()],
+                          CostBackend::Simulated)
+            .unwrap();
+    assert_eq!(specs.len(), 1);
+    let results = run_specs(&specs, 0, 1, &planners,
+                            CostBackend::Simulated)
+        .unwrap();
+    assert_eq!(results.len(), 1);
+    assert!(results[0].entries.iter().any(|e| e.name.contains("/hulk/")));
+    assert!(!results[0]
+        .entries
+        .iter()
+        .any(|e| e.name.contains("/system_b/")));
+}
