@@ -29,7 +29,9 @@ usage: hulk <subcommand> [flags]
                  [--cost analytic|sim] [--json] [--out DIR]
                  [--parallel] [--threads N]
              Run named scenarios deterministically from the seed.
-             `--systems` filters which planners run (slugs from the
+             The heavy scale scenarios (continent_scale 10k machines,
+             global_scale 100k) are excluded from `all` — run them by
+             name. `--systems` filters which planners run (slugs from the
              planner registry: system_a|a, system_b|b, system_c|c,
              hulk, hulk_no_gcn; default = the paper's four). `--cost`
              picks the pricing backend: `analytic` (default, the

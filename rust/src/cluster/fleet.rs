@@ -142,17 +142,23 @@ impl Fleet {
     /// great-circle synthesis with deterministic per-pair jitter
     /// everywhere else — so a 200-server fleet is a pure function of
     /// `(n_servers, n_regions, seed)`.
+    ///
+    /// Degenerate shapes are valid: `n_servers = 0` yields an empty
+    /// fleet, and `n_regions > n_servers` collapses to one region per
+    /// server (so a 1-server fleet is single-region), never an empty
+    /// region block.
     pub fn synthetic(n_servers: usize, n_regions: usize, seed: u64)
         -> Fleet
     {
-        assert!(n_servers >= 1, "synthetic fleet needs ≥ 1 server");
         assert!(
             (1..=Region::ALL.len()).contains(&n_regions),
             "n_regions must be in 1..={}, got {n_regions}",
             Region::ALL.len()
         );
-        assert!(n_servers >= n_regions,
-                "need at least one server per region");
+        if n_servers == 0 {
+            return Fleet::new(Vec::new(), WanModel::new(seed));
+        }
+        let n_regions = n_regions.min(n_servers);
         let mut rng = Rng::new(seed ^ 0x504C_414E_4554); // "PLANET"
         // Sampled regions kept in catalog order, and machines emitted in
         // contiguous per-region blocks — the same layout as
@@ -326,6 +332,30 @@ mod tests {
     #[should_panic(expected = "n_regions")]
     fn synthetic_rejects_too_many_regions() {
         Fleet::synthetic(10, Region::ALL.len() + 1, 0);
+    }
+
+    #[test]
+    fn synthetic_degenerate_shapes_are_valid_fleets() {
+        // Zero servers: an empty fleet, not a panic.
+        let empty = Fleet::synthetic(0, 5, 7);
+        assert!(empty.is_empty());
+        // One server: a valid single-region fleet even when more regions
+        // were requested.
+        let one = Fleet::synthetic(1, Region::ALL.len(), 7);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one.machines[0].id, 0);
+        // Fewer servers than regions: clamps to one region per server —
+        // every region block is non-empty.
+        let few = Fleet::synthetic(3, Region::ALL.len(), 7);
+        assert_eq!(few.len(), 3);
+        let mut regions: Vec<Region> =
+            few.machines.iter().map(|m| m.region).collect();
+        regions.sort_unstable();
+        regions.dedup();
+        assert_eq!(regions.len(), 3, "one region per server when clamped");
+        // Still deterministic.
+        assert_eq!(Fleet::synthetic(3, Region::ALL.len(), 7).machines,
+                   few.machines);
     }
 
     #[test]

@@ -8,8 +8,8 @@ use std::sync::OnceLock;
 
 use anyhow::Result;
 
-use crate::cluster::Fleet;
-use crate::graph::{node_features_csr, ClusterGraph, CsrGraph,
+use crate::cluster::{Fleet, Machine};
+use crate::graph::{node_features_csr, ClusterGraph, CsrGraph, GraphView,
                    CSR_DENSITY_MAX};
 use crate::models::ModelSpec;
 use crate::runtime::GcnRuntime;
@@ -86,13 +86,16 @@ impl Classifier {
 
     /// [`probs_for_padded`](Classifier::probs_for_padded) for callers
     /// without a cached context: builds the CSR view, features (O(E)
-    /// instead of O(n²)), and mask from the graph first.
-    pub fn probs_for_graph(&self, params: &[f32], fleet: &Fleet,
-                           graph: &ClusterGraph) -> Result<Vec<f32>>
+    /// instead of O(n²)), and mask from the graph first. `machines[i]`
+    /// must describe the graph's node i — the fleet's machines for a
+    /// machine-level graph, or one region representative per node for a
+    /// hierarchical coarse graph.
+    pub fn probs_for_graph(&self, params: &[f32], machines: &[Machine],
+                           graph: &dyn GraphView) -> Result<Vec<f32>>
     {
         let slots = self.slots();
-        let csr = CsrGraph::padded(graph, slots);
-        let feats = node_features_csr(&fleet.machines, &csr);
+        let csr = graph.padded_csr(slots);
+        let feats = node_features_csr(machines, &csr);
         let mask = graph.padded_mask(slots);
         self.probs_for_padded(params, &csr, &feats, &mask)
     }
@@ -135,10 +138,11 @@ pub fn classify(classifier: &Classifier, params: &[f32], fleet: &Fleet)
 /// entry point for consumers holding a
 /// [`ScenarioWorld`](crate::scenarios::ScenarioWorld)-style context.
 pub fn classify_with_graph(classifier: &Classifier, params: &[f32],
-                           fleet: &Fleet, graph: &ClusterGraph)
+                           fleet: &Fleet, graph: &dyn GraphView)
     -> Result<Vec<usize>>
 {
-    let probs = classifier.probs_for_graph(params, fleet, graph)?;
+    let probs =
+        classifier.probs_for_graph(params, &fleet.machines, graph)?;
     Ok(classes_from_probs(&probs, fleet.len(), classifier.n_classes()))
 }
 
@@ -158,16 +162,13 @@ pub struct GnnSplitter<'a> {
     probs: OnceLock<ProbsMemo>,
 }
 
-/// One memoized forward + the graph it belongs to (node count and
-/// adjacency allocation address — enough to catch a splitter reused
-/// across planning contexts in debug builds).
+/// One memoized forward + the graph it belongs to (the graph's
+/// [`GraphView::memo_key`]: node count and storage allocation address —
+/// enough to catch a splitter reused across planning contexts in debug
+/// builds).
 struct ProbsMemo {
     graph_key: (usize, usize),
     probs: Option<Vec<f32>>,
-}
-
-fn graph_key(graph: &ClusterGraph) -> (usize, usize) {
-    (graph.n, graph.adj.as_ptr() as usize)
 }
 
 impl<'a> GnnSplitter<'a> {
@@ -177,15 +178,15 @@ impl<'a> GnnSplitter<'a> {
         GnnSplitter { classifier, params, probs: OnceLock::new() }
     }
 
-    fn cached_probs(&self, fleet: &Fleet, graph: &ClusterGraph)
+    fn cached_probs(&self, fleet: &Fleet, graph: &dyn GraphView)
         -> Option<std::borrow::Cow<'_, [f32]>>
     {
-        let key = graph_key(graph);
+        let key = graph.memo_key();
         let memo = self.probs.get_or_init(|| ProbsMemo {
             graph_key: key,
             probs: self
                 .classifier
-                .probs_for_graph(self.params, fleet, graph)
+                .probs_for_graph(self.params, &fleet.machines, graph)
                 .ok(),
         });
         if memo.graph_key == key {
@@ -200,14 +201,14 @@ impl<'a> GnnSplitter<'a> {
              splitter per planning call"
         );
         self.classifier
-            .probs_for_graph(self.params, fleet, graph)
+            .probs_for_graph(self.params, &fleet.machines, graph)
             .ok()
             .map(std::borrow::Cow::Owned)
     }
 }
 
 impl TaskSplitter for GnnSplitter<'_> {
-    fn split(&self, fleet: &Fleet, graph: &ClusterGraph,
+    fn split(&self, fleet: &Fleet, graph: &dyn GraphView,
              remaining: &[usize], task: &ModelSpec, class_idx: usize)
         -> Vec<usize>
     {
@@ -288,7 +289,8 @@ mod tests {
             crate::graph::node_features(&fleet.machines, &graph, slots);
         let mask = graph.padded_mask(slots);
         let dense = clf.probs(&params, &adj, &feats, &mask).unwrap();
-        let auto = clf.probs_for_graph(&params, &fleet, &graph).unwrap();
+        let auto =
+            clf.probs_for_graph(&params, &fleet.machines, &graph).unwrap();
         let c = clf.n_classes();
         for i in 0..fleet.len() {
             for k in 0..c {

@@ -1,6 +1,34 @@
 //! The cluster graph: weighted adjacency over a fleet (paper §3, Fig. 1/7).
+//!
+//! The dense matrix is the ≤[`DENSE_ORACLE_MAX`]-machine **oracle**: it
+//! defines the reference weights/summation order every sparse
+//! representation must reproduce bit-for-bit, and construction refuses
+//! larger fleets — planet-and-beyond fleets go through
+//! [`CsrGraph::from_fleet_direct`](super::csr::CsrGraph::from_fleet_direct)
+//! and [`HierarchicalGraph`](super::hier::HierarchicalGraph), which
+//! never materialize the n×n matrix.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::cluster::Fleet;
+
+/// Largest fleet the dense adjacency may be built for. Anything bigger
+/// must use the CSR/hierarchical path; [`ClusterGraph::from_fleet`]
+/// panics past this bound so an accidental dense build of a 100k-machine
+/// fleet (40 GB of f32) is impossible.
+pub const DENSE_ORACLE_MAX: usize = 1000;
+
+/// High-water mark of dense builds this process performed — the debug
+/// counter the no-dense-allocation scaling tests read. A monotone max
+/// (not a delta count) so concurrent `cargo test` threads cannot race it
+/// into a misleading value.
+static MAX_DENSE_N: AtomicUsize = AtomicUsize::new(0);
+
+/// Largest machine count any [`ClusterGraph::from_fleet`] call in this
+/// process has densified (0 if none).
+pub fn max_dense_n() -> usize {
+    MAX_DENSE_N.load(Ordering::Relaxed)
+}
 
 /// Multiplicative spread of per-machine-pair path variation around the
 /// regional latency (±10%). Two machines in the same region sit in
@@ -10,8 +38,11 @@ use crate::cluster::Fleet;
 /// even though the oracle must split them across groups.
 const MACHINE_JITTER: f32 = 0.10;
 
-/// Deterministic pair jitter in [1−J, 1+J], symmetric in (i, j).
-fn pair_jitter(i: usize, j: usize) -> f32 {
+/// Deterministic pair jitter in [1−J, 1+J], symmetric in (i, j). Keyed
+/// by **global** machine ids, so any subgraph (CSR row, hierarchical
+/// refinement pool) reproduces exactly the weights the dense oracle
+/// would assign those machines.
+pub(crate) fn pair_jitter(i: usize, j: usize) -> f32 {
     let (a, b) = if i < j { (i, j) } else { (j, i) };
     let mut h = (a as u64)
         .wrapping_mul(0x9E37_79B9_7F4A_7C15)
@@ -38,6 +69,13 @@ impl ClusterGraph {
     /// communicate; weight = regional WAN latency × per-pair path jitter.
     pub fn from_fleet(fleet: &Fleet) -> ClusterGraph {
         let n = fleet.len();
+        assert!(
+            n <= DENSE_ORACLE_MAX,
+            "dense ClusterGraph is the ≤{DENSE_ORACLE_MAX}-machine \
+             oracle; build CsrGraph::from_fleet_direct or a \
+             HierarchicalGraph for {n} machines"
+        );
+        MAX_DENSE_N.fetch_max(n, Ordering::Relaxed);
         let mut adj = vec![0.0f32; n * n];
         for i in 0..n {
             for j in (i + 1)..n {
@@ -153,7 +191,7 @@ impl ClusterGraph {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::{Fleet, Region};
+    use crate::cluster::{Fleet, Machine, Region};
 
     #[test]
     fn from_fleet_is_symmetric_zero_diagonal() {
@@ -239,5 +277,90 @@ mod tests {
     fn padding_smaller_than_graph_panics() {
         let g = ClusterGraph::from_fleet(&Fleet::paper_toy(0));
         g.padded_adj(4);
+    }
+
+    /// Symmetry + zero diagonal + CSR round-trip for one fleet — the
+    /// invariants every from_fleet graph must satisfy, checked at the
+    /// degenerate shapes below.
+    fn check_edge_fleet(fleet: &Fleet) {
+        use crate::graph::CsrGraph;
+        let g = ClusterGraph::from_fleet(fleet);
+        assert_eq!(g.n, fleet.len());
+        for i in 0..g.n {
+            assert_eq!(g.weight(i, i), 0.0, "diagonal must be zero");
+            for j in 0..g.n {
+                assert_eq!(g.weight(i, j).to_bits(),
+                           g.weight(j, i).to_bits(), "asymmetric ({i},{j})");
+            }
+        }
+        // CSR round-trip: direct-from-fleet CSR == dense-then-compress,
+        // and both re-densify to the original matrix.
+        let via_dense = CsrGraph::from_graph(&g);
+        let direct = CsrGraph::from_fleet_direct(fleet);
+        assert_eq!(via_dense, direct);
+        assert_eq!(direct.to_dense(), g.adj);
+    }
+
+    #[test]
+    fn single_machine_fleet_graph_is_empty_but_valid() {
+        let machines =
+            vec![Machine::new(0, Region::Rome, crate::cluster::GpuModel::V100,
+                              8)];
+        let fleet = Fleet::new(machines, crate::cluster::WanModel::new(0));
+        check_edge_fleet(&fleet);
+        let g = ClusterGraph::from_fleet(&fleet);
+        assert_eq!(g.degree(0), 0);
+        assert_eq!(g.mean_latency(0), None);
+    }
+
+    #[test]
+    fn single_region_fleet_is_a_jittered_intra_region_clique() {
+        let fleet = Fleet::synthetic(6, 1, 5);
+        check_edge_fleet(&fleet);
+        let g = ClusterGraph::from_fleet(&fleet);
+        for i in 0..g.n {
+            assert_eq!(g.degree(i), g.n - 1, "intra-region clique");
+            for j in 0..g.n {
+                if i != j {
+                    // INTRA_REGION_MS × jitter stays within ±10%.
+                    assert!((0.9..=1.1).contains(&g.weight(i, j)),
+                            "({i},{j}): {}", g.weight(i, j));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fully_policy_blocked_pair_yields_disconnected_graph() {
+        // A two-machine fleet straddling the Beijing↔Paris block: the
+        // graph must be valid, symmetric, and entirely edgeless.
+        let machines = vec![
+            Machine::new(0, Region::Beijing,
+                         crate::cluster::GpuModel::A100, 8),
+            Machine::new(1, Region::Paris, crate::cluster::GpuModel::V100,
+                         8),
+        ];
+        let fleet = Fleet::new(machines, crate::cluster::WanModel::new(0));
+        check_edge_fleet(&fleet);
+        let g = ClusterGraph::from_fleet(&fleet);
+        assert!(!g.has_edge(0, 1));
+        assert_eq!(g.mean_latency(0), None);
+        assert_eq!(g.mean_latency(1), None);
+        assert!(!g.subset_connected(&[0, 1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "oracle")]
+    fn dense_build_refuses_fleets_past_the_oracle_bound() {
+        let fleet = Fleet::synthetic(DENSE_ORACLE_MAX + 1, 12, 0);
+        ClusterGraph::from_fleet(&fleet);
+    }
+
+    #[test]
+    fn max_dense_n_tracks_the_high_water_mark() {
+        let before = max_dense_n();
+        ClusterGraph::from_fleet(&Fleet::paper_toy(0));
+        assert!(max_dense_n() >= 8.max(before));
+        assert!(max_dense_n() <= DENSE_ORACLE_MAX);
     }
 }

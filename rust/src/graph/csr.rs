@@ -10,7 +10,8 @@
 //! numerical oracle; [`CsrGraph::density`] drives the automatic
 //! selection (`gnn::Classifier`).
 
-use super::adjacency::ClusterGraph;
+use super::adjacency::{pair_jitter, ClusterGraph};
+use crate::cluster::Fleet;
 use crate::util::MatF32;
 
 /// Nonzero-density ceiling below which the reference classifier
@@ -44,6 +45,51 @@ impl CsrGraph {
     /// CSR of the graph at its natural size (no padding).
     pub fn from_graph(graph: &ClusterGraph) -> CsrGraph {
         CsrGraph::padded(graph, graph.n)
+    }
+
+    /// Build CSR **directly from the fleet** — no dense n×n intermediate
+    /// anywhere on the path. Per row, columns are visited ascending and
+    /// each weight is the same `latency × pair_jitter` expression the
+    /// dense oracle evaluates, so the result is byte-identical to
+    /// `CsrGraph::from_graph(&ClusterGraph::from_fleet(fleet))` without
+    /// ever allocating the matrix (WAN latencies are ≥ 1 ms, so a stored
+    /// entry can never be 0.0 and the `w > 0.0` compress step of the
+    /// dense path drops nothing the direct path keeps).
+    pub fn from_fleet_direct(fleet: &Fleet) -> CsrGraph {
+        let n = fleet.len();
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        row_ptr.push(0);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for i in 0..n {
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                if let Some(lat) = fleet.latency_ms(i, j) {
+                    cols.push(j);
+                    vals.push(lat as f32 * pair_jitter(i, j));
+                }
+            }
+            row_ptr.push(cols.len());
+        }
+        CsrGraph { n, real: n, row_ptr, cols, vals }
+    }
+
+    /// This graph re-padded to `slots` rows — the CSR counterpart of
+    /// re-deriving [`CsrGraph::padded`] at a different slot count,
+    /// byte-identical to a dense-graph `padded` build of the same fleet.
+    pub fn with_slots(&self, slots: usize) -> CsrGraph {
+        assert!(slots >= self.real, "graph larger than artifact slots");
+        let mut row_ptr = self.row_ptr[..=self.real].to_vec();
+        row_ptr.resize(slots + 1, self.nnz());
+        CsrGraph {
+            n: slots,
+            real: self.real,
+            row_ptr,
+            cols: self.cols.clone(),
+            vals: self.vals.clone(),
+        }
     }
 
     /// CSR of the graph padded to `slots` rows — the sparse counterpart
@@ -208,6 +254,38 @@ mod tests {
             let (cols, _) = csr.row(i);
             assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {i}");
         }
+    }
+
+    #[test]
+    fn direct_build_equals_dense_then_compress() {
+        for fleet in [Fleet::paper_toy(0), Fleet::paper_evaluation(2),
+                      Fleet::synthetic(60, 7, 3)]
+        {
+            let dense = ClusterGraph::from_fleet(&fleet);
+            let direct = CsrGraph::from_fleet_direct(&fleet);
+            assert_eq!(direct, CsrGraph::from_graph(&dense));
+            assert_eq!(direct.to_dense(), dense.adj);
+        }
+    }
+
+    #[test]
+    fn with_slots_equals_padded_build_at_the_same_slot_count() {
+        let fleet = Fleet::paper_toy(0);
+        let dense = ClusterGraph::from_fleet(&fleet);
+        let direct = CsrGraph::from_fleet_direct(&fleet);
+        for slots in [fleet.len(), 16, 64] {
+            assert_eq!(direct.with_slots(slots),
+                       CsrGraph::padded(&dense, slots));
+        }
+        // Re-padding an already-padded view keeps only the real rows.
+        let wide = direct.with_slots(64);
+        assert_eq!(wide.with_slots(64), wide);
+    }
+
+    #[test]
+    #[should_panic(expected = "slots")]
+    fn with_slots_below_real_rows_panics() {
+        CsrGraph::from_fleet_direct(&Fleet::paper_toy(0)).with_slots(4);
     }
 
     #[test]

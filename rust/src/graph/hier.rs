@@ -1,0 +1,538 @@
+//! Two-level hierarchical fleet graph — the planning substrate for
+//! 10k–100k-machine fleets (DistDGL-style coarsen-then-refine).
+//!
+//! Levels:
+//!
+//! - **Coarse**: one node per populated region (≤ the 12-region catalog),
+//!   edge weight = region-pair WAN latency, no per-machine jitter. Small
+//!   enough that the planner (and the GCN) can afford dense O(k²) work.
+//! - **Fine**: the machine level. Below [`HIER_THRESHOLD`] machines the
+//!   full CSR is built eagerly ([`CsrGraph::from_fleet_direct`] — still
+//!   no dense n×n anywhere); above it the level is **lazy**: no
+//!   machine-level graph is ever materialized, and pair weights are
+//!   computed on demand from the two machines' regions plus the
+//!   deterministic global-id [`pair_jitter`] — bit-identical to what the
+//!   dense oracle would store for the same ids.
+//!
+//! Incremental updates (the online-scheduling seam): [`apply_failure`]
+//! flips an alive bit (dead nodes become isolated — the same masking
+//! semantics the coordinator uses, so global ids and therefore jitter
+//! never shift), and [`apply_join`] appends machines with ids strictly
+//! above every existing id (ascending-order iteration, and hence f32
+//! summation order, is preserved). Both rebuild only the ≤12-node coarse
+//! level.
+//!
+//! [`apply_failure`]: HierarchicalGraph::apply_failure
+//! [`apply_join`]: HierarchicalGraph::apply_join
+
+use std::sync::Arc;
+
+use super::adjacency::{pair_jitter, ClusterGraph, DENSE_ORACLE_MAX};
+use super::csr::CsrGraph;
+use super::view::GraphView;
+use crate::cluster::{Fleet, GpuModel, Machine, Region};
+
+/// Machine counts above this plan on the coarse level first and refine
+/// lazily; at or below it the fine CSR is built eagerly and planning is
+/// identical to the flat path. Matches [`DENSE_ORACLE_MAX`] so every
+/// fleet the dense oracle accepts is planned exactly as before.
+pub const HIER_THRESHOLD: usize = DENSE_ORACLE_MAX;
+
+/// Per-region aggregate: the coarse level's node payload.
+#[derive(Clone, Debug)]
+pub struct RegionSummary {
+    pub region: Region,
+    /// Member machine ids, ascending. Global ids — regions need not be
+    /// contiguous blocks (hetero fleets round-robin them).
+    pub members: Vec<usize>,
+    /// Total memory of the *alive* members, GB.
+    pub total_memory_gb: f64,
+}
+
+#[derive(Clone, Debug)]
+enum FineLevel {
+    /// Eager machine-level CSR (fleets ≤ [`HIER_THRESHOLD`]).
+    Full(CsrGraph),
+    /// No machine-level graph exists; weights are computed on demand.
+    Lazy,
+}
+
+/// The two-level graph. Owns its fleet snapshot (`Arc` — shared with the
+/// `ScenarioWorld`) plus the join/failure deltas applied since.
+#[derive(Clone, Debug)]
+pub struct HierarchicalGraph {
+    fleet: Arc<Fleet>,
+    /// Machines appended by [`apply_join`](Self::apply_join); their ids
+    /// continue the fleet's dense range (`fleet.len()..`).
+    joined: Vec<Machine>,
+    /// Alive mask over `fleet.len() + joined.len()` ids.
+    alive: Vec<bool>,
+    summaries: Vec<RegionSummary>,
+    coarse: ClusterGraph,
+    fine: FineLevel,
+    /// Bumped on every mutation — part of [`GraphView::memo_key`] so
+    /// forward-pass memos can never survive an in-place update.
+    version: usize,
+}
+
+impl HierarchicalGraph {
+    pub fn from_fleet(fleet: Arc<Fleet>) -> HierarchicalGraph {
+        let n = fleet.len();
+        let mut summaries: Vec<RegionSummary> = Vec::new();
+        for m in &fleet.machines {
+            match summaries.iter_mut().find(|s| s.region == m.region) {
+                Some(s) => {
+                    s.members.push(m.id);
+                    s.total_memory_gb += m.total_memory_gb();
+                }
+                None => summaries.push(RegionSummary {
+                    region: m.region,
+                    members: vec![m.id],
+                    total_memory_gb: m.total_memory_gb(),
+                }),
+            }
+        }
+        let coarse = build_coarse(&summaries, &fleet);
+        let fine = if n <= HIER_THRESHOLD {
+            FineLevel::Full(CsrGraph::from_fleet_direct(&fleet))
+        } else {
+            FineLevel::Lazy
+        };
+        HierarchicalGraph {
+            alive: vec![true; n],
+            joined: Vec::new(),
+            fleet,
+            summaries,
+            coarse,
+            fine,
+            version: 0,
+        }
+    }
+
+    /// Is the fine level lazy? True ⇔ the fleet is past
+    /// [`HIER_THRESHOLD`] and planners must go region-first.
+    pub fn is_coarse(&self) -> bool {
+        matches!(self.fine, FineLevel::Lazy)
+    }
+
+    /// Region summaries, first-occurrence order (= coarse node order).
+    pub fn summaries(&self) -> &[RegionSummary] {
+        &self.summaries
+    }
+
+    /// The coarse inter-region graph; node k = `summaries()[k]`.
+    pub fn coarse(&self) -> &ClusterGraph {
+        &self.coarse
+    }
+
+    /// Machine by global id (base fleet or joined). `Machine` is `Copy`.
+    pub fn machine(&self, id: usize) -> Machine {
+        if id < self.fleet.len() {
+            self.fleet.machines[id]
+        } else {
+            self.joined[id - self.fleet.len()]
+        }
+    }
+
+    pub fn is_alive(&self, id: usize) -> bool {
+        self.alive[id]
+    }
+
+    /// One representative pseudo-machine per coarse node, for running the
+    /// GCN over the coarse graph: the summary's first alive member
+    /// re-badged with the coarse node index as its id (feature extraction
+    /// wants dense ids). Empty regions get a 1-GPU placeholder so the
+    /// tensor stays rectangular; their coarse row is all-zero anyway.
+    pub fn region_representatives(&self) -> Vec<Machine> {
+        self.summaries
+            .iter()
+            .enumerate()
+            .map(|(k, s)| match s.members.first() {
+                Some(&id) => {
+                    let m = self.machine(id);
+                    Machine::new(k, s.region, m.gpu, m.n_gpus)
+                }
+                None => Machine::new(k, s.region, GpuModel::V100, 1),
+            })
+            .collect()
+    }
+
+    /// Mark a machine failed: it keeps its id (jitter stability) but
+    /// becomes isolated — weight 0 on every incident edge — and leaves
+    /// its region summary. Only the ≤12-node coarse level is rebuilt.
+    pub fn apply_failure(&mut self, id: usize) {
+        assert!(self.alive[id], "machine {id} already failed");
+        self.alive[id] = false;
+        let region = self.machine(id).region;
+        let idx = self
+            .summaries
+            .iter()
+            .position(|s| s.region == region)
+            .expect("failed machine's region has a summary");
+        self.summaries[idx].members.retain(|&m| m != id);
+        let mem: f64 = self.summaries[idx]
+            .members
+            .iter()
+            .map(|&m| self.machine(m).total_memory_gb())
+            .sum();
+        self.summaries[idx].total_memory_gb = mem;
+        self.coarse = build_coarse(&self.summaries, &self.fleet);
+        self.version += 1;
+    }
+
+    /// Append a machine (scale-out). Its id continues the dense range —
+    /// strictly above every existing id — so ascending-order iteration
+    /// (and the f32 summation order it fixes) is unchanged for old nodes.
+    /// Returns the new id.
+    pub fn apply_join(&mut self, region: Region, gpu: GpuModel,
+                      n_gpus: usize) -> usize
+    {
+        let id = self.n_nodes();
+        let m = Machine::new(id, region, gpu, n_gpus);
+        self.joined.push(m);
+        self.alive.push(true);
+        match self.summaries.iter_mut().find(|s| s.region == region) {
+            Some(s) => {
+                s.members.push(id); // id > all existing ⇒ still ascending
+                s.total_memory_gb += m.total_memory_gb();
+            }
+            None => self.summaries.push(RegionSummary {
+                region,
+                members: vec![id],
+                total_memory_gb: m.total_memory_gb(),
+            }),
+        }
+        self.coarse = build_coarse(&self.summaries, &self.fleet);
+        self.version += 1;
+        id
+    }
+
+    fn has_deltas(&self) -> bool {
+        !self.joined.is_empty() || self.alive.iter().any(|&a| !a)
+    }
+
+    /// The weight the dense oracle would assign (i, j), honoring the
+    /// alive mask: regional WAN latency × global-id pair jitter.
+    fn demand_weight(&self, i: usize, j: usize) -> f32 {
+        if i == j || !self.alive[i] || !self.alive[j] {
+            return 0.0;
+        }
+        let (ra, rb) = (self.machine(i).region, self.machine(j).region);
+        match self.fleet.wan.latency_ms(ra, rb) {
+            Some(lat) => lat as f32 * pair_jitter(i, j),
+            None => 0.0,
+        }
+    }
+}
+
+/// Coarse inter-region graph: weight = WAN latency between the two
+/// regions (no jitter — jitter is a per-machine-pair notion). Regions
+/// whose summaries are empty are isolated.
+fn build_coarse(summaries: &[RegionSummary], fleet: &Fleet) -> ClusterGraph {
+    let k = summaries.len();
+    let mut adj = vec![0.0f32; k * k];
+    for a in 0..k {
+        if summaries[a].members.is_empty() {
+            continue;
+        }
+        for b in (a + 1)..k {
+            if summaries[b].members.is_empty() {
+                continue;
+            }
+            if let Some(lat) = fleet
+                .wan
+                .latency_ms(summaries[a].region, summaries[b].region)
+            {
+                adj[a * k + b] = lat as f32;
+                adj[b * k + a] = lat as f32;
+            }
+        }
+    }
+    ClusterGraph { n: k, adj }
+}
+
+impl GraphView for HierarchicalGraph {
+    fn n_nodes(&self) -> usize {
+        self.fleet.len() + self.joined.len()
+    }
+
+    fn weight(&self, i: usize, j: usize) -> f32 {
+        if i >= self.n_nodes() || j >= self.n_nodes() {
+            return 0.0;
+        }
+        match &self.fine {
+            // Delta-free Full: the stored CSR *is* the oracle value.
+            FineLevel::Full(csr) if !self.has_deltas() => {
+                GraphView::weight(csr, i, j)
+            }
+            _ => self.demand_weight(i, j),
+        }
+    }
+
+    fn mean_latency(&self, i: usize) -> Option<f32> {
+        if i >= self.n_nodes() || !self.alive[i] {
+            return None;
+        }
+        if let FineLevel::Full(csr) = &self.fine {
+            if !self.has_deltas() {
+                return GraphView::mean_latency(csr, i);
+            }
+        }
+        // Ascending-j scan = the dense oracle's summation order.
+        let mut sum = 0.0f32;
+        let mut count = 0usize;
+        for j in 0..self.n_nodes() {
+            let w = self.demand_weight(i, j);
+            if w > 0.0 {
+                sum += w;
+                count += 1;
+            }
+        }
+        if count == 0 {
+            None
+        } else {
+            Some(sum / count as f32)
+        }
+    }
+
+    fn padded_csr(&self, slots: usize) -> CsrGraph {
+        match &self.fine {
+            FineLevel::Full(csr) if !self.has_deltas() => {
+                csr.with_slots(slots)
+            }
+            FineLevel::Full(_) => {
+                // Deltas present: rebuild the masked CSR on demand
+                // (n ≤ HIER_THRESHOLD here, so O(n²) scan is the dense
+                // oracle's own cost).
+                let n = self.n_nodes();
+                assert!(slots >= n, "graph larger than artifact slots");
+                let mut row_ptr = Vec::with_capacity(slots + 1);
+                row_ptr.push(0);
+                let mut cols = Vec::new();
+                let mut vals = Vec::new();
+                for i in 0..n {
+                    for j in 0..n {
+                        let w = self.demand_weight(i, j);
+                        if w > 0.0 {
+                            cols.push(j);
+                            vals.push(w);
+                        }
+                    }
+                    row_ptr.push(cols.len());
+                }
+                row_ptr.resize(slots + 1, cols.len());
+                CsrGraph { n: slots, real: n, row_ptr, cols, vals }
+            }
+            FineLevel::Lazy => panic!(
+                "machine-level GCN tensors are not available past \
+                 HIER_THRESHOLD ({HIER_THRESHOLD}) machines; run the GCN \
+                 over coarse() + region_representatives() instead"
+            ),
+        }
+    }
+
+    fn memo_key(&self) -> (usize, usize) {
+        (
+            self.n_nodes(),
+            (self.coarse.adj.as_ptr() as usize)
+                ^ self.version.wrapping_mul(0x9E37_79B9),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::adjacency::max_dense_n;
+
+    fn hier(fleet: Fleet) -> HierarchicalGraph {
+        HierarchicalGraph::from_fleet(Arc::new(fleet))
+    }
+
+    #[test]
+    fn full_level_is_bit_identical_to_the_dense_oracle() {
+        for fleet in
+            [Fleet::paper_toy(0), Fleet::paper_evaluation(1),
+             Fleet::synthetic(60, 7, 3)]
+        {
+            let dense = ClusterGraph::from_fleet(&fleet);
+            let h = hier(fleet);
+            assert!(!h.is_coarse());
+            assert_eq!(h.n_nodes(), dense.n);
+            for i in 0..dense.n {
+                assert_eq!(
+                    GraphView::mean_latency(&h, i).map(f32::to_bits),
+                    GraphView::mean_latency(&dense, i).map(f32::to_bits)
+                );
+                for j in 0..dense.n {
+                    assert_eq!(GraphView::weight(&h, i, j).to_bits(),
+                               dense.weight(i, j).to_bits());
+                }
+            }
+            let slots = dense.n + 5;
+            assert_eq!(GraphView::padded_csr(&h, slots),
+                       CsrGraph::padded(&dense, slots));
+            assert_eq!(GraphView::padded_mask(&h, slots),
+                       dense.padded_mask(slots));
+        }
+    }
+
+    #[test]
+    fn coarse_level_has_region_pair_wan_weights() {
+        let fleet = Fleet::synthetic(60, 7, 3);
+        let wan = fleet.wan.clone();
+        let h = hier(fleet);
+        let coarse = h.coarse();
+        assert_eq!(coarse.n, h.summaries().len());
+        assert_eq!(coarse.n, 7);
+        for a in 0..coarse.n {
+            assert_eq!(coarse.weight(a, a), 0.0);
+            for b in 0..coarse.n {
+                let expect = if a == b {
+                    None
+                } else {
+                    wan.latency_ms(h.summaries()[a].region,
+                                   h.summaries()[b].region)
+                };
+                match expect {
+                    Some(lat) => {
+                        assert_eq!(coarse.weight(a, b), lat as f32)
+                    }
+                    None => assert_eq!(coarse.weight(a, b), 0.0),
+                }
+            }
+        }
+        // Summary members cover 0..n ascending, disjoint.
+        let mut all: Vec<usize> = h
+            .summaries()
+            .iter()
+            .flat_map(|s| {
+                assert!(s.members.windows(2).all(|w| w[0] < w[1]));
+                s.members.iter().copied()
+            })
+            .collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..h.n_nodes()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn past_threshold_is_lazy_and_never_densifies() {
+        let n = HIER_THRESHOLD + 500;
+        let fleet = Fleet::synthetic(n, 12, 0);
+        let h = hier(fleet.clone());
+        assert!(h.is_coarse());
+        // Spot-check on-demand weights against the oracle formula.
+        for (i, j) in [(0usize, 1usize), (3, n - 1), (n - 2, n - 1)] {
+            let expect = match fleet.latency_ms(i, j) {
+                Some(lat) => lat as f32 * pair_jitter(i, j),
+                None => 0.0,
+            };
+            assert_eq!(GraphView::weight(&h, i, j).to_bits(),
+                       expect.to_bits());
+            assert_eq!(GraphView::weight(&h, j, i).to_bits(),
+                       expect.to_bits());
+        }
+        // The whole construction stayed under the dense-oracle bound.
+        assert!(max_dense_n() <= DENSE_ORACLE_MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "HIER_THRESHOLD")]
+    fn lazy_level_refuses_machine_level_tensors() {
+        let h = hier(Fleet::synthetic(HIER_THRESHOLD + 1, 12, 0));
+        GraphView::padded_csr(&h, HIER_THRESHOLD + 10);
+    }
+
+    #[test]
+    fn apply_failure_isolates_the_machine_and_updates_summaries() {
+        let fleet = Fleet::synthetic(40, 5, 2);
+        let mut h = hier(fleet.clone());
+        let dead = 7usize;
+        let region = fleet.machines[dead].region;
+        let before_mem: f64 = h
+            .summaries()
+            .iter()
+            .find(|s| s.region == region)
+            .unwrap()
+            .total_memory_gb;
+        h.apply_failure(dead);
+        assert!(!h.is_alive(dead));
+        for j in 0..h.n_nodes() {
+            assert_eq!(GraphView::weight(&h, dead, j), 0.0);
+            assert_eq!(GraphView::weight(&h, j, dead), 0.0);
+        }
+        assert_eq!(GraphView::mean_latency(&h, dead), None);
+        let s = h.summaries().iter().find(|s| s.region == region).unwrap();
+        assert!(!s.members.contains(&dead));
+        assert!(s.total_memory_gb < before_mem);
+        // Survivor weights are untouched (ids, hence jitter, unchanged).
+        let dense = ClusterGraph::from_fleet(&fleet);
+        for i in 0..h.n_nodes() {
+            for j in 0..h.n_nodes() {
+                if i != dead && j != dead {
+                    assert_eq!(GraphView::weight(&h, i, j).to_bits(),
+                               dense.weight(i, j).to_bits());
+                }
+            }
+        }
+        // And the padded tensors equal a dense build with the dead row/col
+        // masked out.
+        let mut masked = dense.clone();
+        for k in 0..masked.n {
+            masked.adj[dead * masked.n + k] = 0.0;
+            masked.adj[k * masked.n + dead] = 0.0;
+        }
+        let slots = masked.n + 3;
+        assert_eq!(GraphView::padded_csr(&h, slots),
+                   CsrGraph::padded(&masked, slots));
+    }
+
+    #[test]
+    fn apply_join_matches_a_rebuilt_fleet_with_the_machine_appended() {
+        let fleet = Fleet::synthetic(30, 4, 1);
+        let mut h = hier(fleet.clone());
+        let id = h.apply_join(Region::Rome, GpuModel::A100, 8);
+        assert_eq!(id, 30);
+        assert_eq!(h.n_nodes(), 31);
+        let mut grown = fleet;
+        grown.add_machine(Region::Rome, GpuModel::A100, 8);
+        let rebuilt = hier(grown);
+        for i in 0..h.n_nodes() {
+            assert_eq!(
+                GraphView::mean_latency(&h, i).map(f32::to_bits),
+                GraphView::mean_latency(&rebuilt, i).map(f32::to_bits),
+                "mean_latency({i})"
+            );
+            for j in 0..h.n_nodes() {
+                assert_eq!(GraphView::weight(&h, i, j).to_bits(),
+                           GraphView::weight(&rebuilt, i, j).to_bits());
+            }
+        }
+        let s =
+            h.summaries().iter().find(|s| s.region == Region::Rome).unwrap();
+        assert!(s.members.contains(&id));
+    }
+
+    #[test]
+    fn mutations_change_the_memo_key() {
+        let mut h = hier(Fleet::synthetic(20, 3, 0));
+        let k0 = GraphView::memo_key(&h);
+        h.apply_failure(5);
+        let k1 = GraphView::memo_key(&h);
+        assert_ne!(k0, k1);
+        h.apply_join(Region::Tokyo, GpuModel::V100, 8);
+        let k2 = GraphView::memo_key(&h);
+        assert_ne!(k1, k2);
+    }
+
+    #[test]
+    fn representatives_align_with_coarse_nodes() {
+        let h = hier(Fleet::synthetic(60, 7, 3));
+        let reps = h.region_representatives();
+        assert_eq!(reps.len(), h.coarse().n);
+        for (k, (rep, s)) in reps.iter().zip(h.summaries()).enumerate() {
+            assert_eq!(rep.id, k);
+            assert_eq!(rep.region, s.region);
+        }
+    }
+}

@@ -10,9 +10,13 @@
 pub mod adjacency;
 pub mod csr;
 pub mod features;
+pub mod hier;
 pub mod normalize;
+pub mod view;
 
-pub use adjacency::ClusterGraph;
+pub use adjacency::{max_dense_n, ClusterGraph, DENSE_ORACLE_MAX};
 pub use csr::{sym_normalize_csr, CsrGraph, CsrNormalized, CSR_DENSITY_MAX};
 pub use features::{node_features, node_features_csr, FEATURE_DIM};
+pub use hier::{HierarchicalGraph, RegionSummary, HIER_THRESHOLD};
 pub use normalize::sym_normalize;
+pub use view::GraphView;

@@ -1,0 +1,175 @@
+//! [`GraphView`] — the planner-facing graph abstraction.
+//!
+//! Everything the scheduling stack reads from a fleet graph goes through
+//! this trait: pairwise weights, per-node mean latency, and the padded
+//! GCN tensors. Three implementations exist:
+//!
+//! - [`ClusterGraph`] — the dense O(n²) adjacency, demoted to a
+//!   ≤[`DENSE_ORACLE_MAX`](super::adjacency::DENSE_ORACLE_MAX)-machine
+//!   oracle (construction asserts the bound).
+//! - [`CsrGraph`] — CSR built **directly from the fleet**
+//!   ([`CsrGraph::from_fleet_direct`]), no dense intermediate anywhere.
+//! - [`HierarchicalGraph`](super::hier::HierarchicalGraph) — the
+//!   two-level substrate for 10k–100k-machine fleets.
+//!
+//! The contract that makes the refactor artifact-safe: for the same
+//! fleet, every implementation must return **bit-identical** `weight`
+//! and `mean_latency` values. CSR stores exactly the positive entries of
+//! the dense row in ascending column order, so its float summation
+//! visits the same addends in the same order as a dense row scan.
+
+use super::csr::CsrGraph;
+
+/// Read-only graph interface consumed by `grow_group`, `chain_order`,
+/// `TaskSplitter`, and GCN inference. `&ClusterGraph` coerces to
+/// `&dyn GraphView` at every historical call site.
+pub trait GraphView {
+    /// Number of machine nodes (excluding any padding slots).
+    fn n_nodes(&self) -> usize;
+
+    /// Edge weight (latency ms per 64 B) between nodes i and j;
+    /// `0.0` = no edge (unreachable, self, or dead node).
+    fn weight(&self, i: usize, j: usize) -> f32;
+
+    /// Is there an edge between i and j?
+    fn has_edge(&self, i: usize, j: usize) -> bool {
+        self.weight(i, j) > 0.0
+    }
+
+    /// Mean latency of i's incident edges (`None` if isolated).
+    /// Implementations must sum neighbors in ascending id order so the
+    /// f32 reduction is bit-identical across representations.
+    fn mean_latency(&self, i: usize) -> Option<f32>;
+
+    /// The padded CSR adjacency for `slots` GCN artifact slots.
+    fn padded_csr(&self, slots: usize) -> CsrGraph;
+
+    /// Node mask for `slots` slots: 1.0 real, 0.0 padding.
+    fn padded_mask(&self, slots: usize) -> Vec<f32> {
+        let n = self.n_nodes();
+        assert!(slots >= n, "graph larger than artifact slots");
+        let mut m = vec![0.0f32; slots];
+        for v in &mut m[..n] {
+            *v = 1.0;
+        }
+        m
+    }
+
+    /// Cheap identity of the underlying storage `(node count, allocation
+    /// address)` — lets forward-pass memos detect a swapped graph.
+    fn memo_key(&self) -> (usize, usize);
+}
+
+impl GraphView for super::adjacency::ClusterGraph {
+    fn n_nodes(&self) -> usize {
+        self.n
+    }
+
+    fn weight(&self, i: usize, j: usize) -> f32 {
+        super::adjacency::ClusterGraph::weight(self, i, j)
+    }
+
+    fn mean_latency(&self, i: usize) -> Option<f32> {
+        super::adjacency::ClusterGraph::mean_latency(self, i)
+    }
+
+    fn padded_csr(&self, slots: usize) -> CsrGraph {
+        CsrGraph::padded(self, slots)
+    }
+
+    fn padded_mask(&self, slots: usize) -> Vec<f32> {
+        super::adjacency::ClusterGraph::padded_mask(self, slots)
+    }
+
+    fn memo_key(&self) -> (usize, usize) {
+        (self.n, self.adj.as_ptr() as usize)
+    }
+}
+
+impl GraphView for CsrGraph {
+    fn n_nodes(&self) -> usize {
+        self.real
+    }
+
+    fn weight(&self, i: usize, j: usize) -> f32 {
+        if i >= self.real || j >= self.real {
+            return 0.0;
+        }
+        let (cols, vals) = self.row(i);
+        match cols.binary_search(&j) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    fn mean_latency(&self, i: usize) -> Option<f32> {
+        if i >= self.real {
+            return None;
+        }
+        let (_, vals) = self.row(i);
+        if vals.is_empty() {
+            return None;
+        }
+        // Ascending-column order == the dense row-scan summation order.
+        Some(vals.iter().copied().sum::<f32>() / vals.len() as f32)
+    }
+
+    fn padded_csr(&self, slots: usize) -> CsrGraph {
+        self.with_slots(slots)
+    }
+
+    fn memo_key(&self) -> (usize, usize) {
+        // row_ptr is never empty (length real + 1 minimum), so its
+        // allocation address identifies this graph.
+        (self.real, self.row_ptr.as_ptr() as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::adjacency::ClusterGraph;
+    use super::*;
+    use crate::cluster::Fleet;
+
+    fn views_agree(fleet: &Fleet) {
+        let dense = ClusterGraph::from_fleet(fleet);
+        let csr = CsrGraph::from_fleet_direct(fleet);
+        let dv: &dyn GraphView = &dense;
+        let cv: &dyn GraphView = &csr;
+        assert_eq!(dv.n_nodes(), cv.n_nodes());
+        for i in 0..fleet.len() {
+            // Bit-identical, not approximately equal: the artifact gate
+            // depends on it.
+            assert_eq!(dv.mean_latency(i).map(f32::to_bits),
+                       cv.mean_latency(i).map(f32::to_bits),
+                       "mean_latency({i})");
+            for j in 0..fleet.len() {
+                assert_eq!(dv.weight(i, j).to_bits(),
+                           cv.weight(i, j).to_bits(),
+                           "weight({i},{j})");
+                assert_eq!(dv.has_edge(i, j), cv.has_edge(i, j));
+            }
+        }
+        let slots = fleet.len() + 9;
+        assert_eq!(dv.padded_csr(slots), cv.padded_csr(slots));
+        assert_eq!(dv.padded_mask(slots), cv.padded_mask(slots));
+    }
+
+    #[test]
+    fn dense_and_direct_csr_views_are_bit_identical() {
+        views_agree(&Fleet::paper_toy(0));
+        views_agree(&Fleet::paper_evaluation(0));
+        views_agree(&Fleet::synthetic(60, 7, 3));
+    }
+
+    #[test]
+    fn memo_keys_distinguish_graphs() {
+        let fleet = Fleet::paper_toy(0);
+        let a = ClusterGraph::from_fleet(&fleet);
+        let b = ClusterGraph::from_fleet(&fleet);
+        assert_ne!(GraphView::memo_key(&a), GraphView::memo_key(&b));
+        let c1 = CsrGraph::from_fleet_direct(&fleet);
+        let c2 = CsrGraph::from_fleet_direct(&fleet);
+        assert_ne!(GraphView::memo_key(&c1), GraphView::memo_key(&c2));
+    }
+}

@@ -18,12 +18,13 @@
 
 use anyhow::Result;
 
-use crate::cluster::Fleet;
+use crate::cluster::{Fleet, Machine};
 use crate::gnn::inference::GnnSplitter;
 use crate::gnn::Classifier;
-use crate::graph::ClusterGraph;
+use crate::graph::{CsrGraph, GraphView, HierarchicalGraph};
 use crate::models::ModelSpec;
 use crate::parallel::PipelinePlan;
+use crate::scheduler::oracle::grow_group;
 use crate::scheduler::{algorithm1, Algorithm1Error, Assignment,
                        TaskSplitter};
 
@@ -42,19 +43,18 @@ pub enum HulkSplitterKind<'a> {
 struct OracleSplitter;
 
 impl TaskSplitter for OracleSplitter {
-    fn split(&self, fleet: &Fleet, graph: &ClusterGraph,
+    fn split(&self, fleet: &Fleet, graph: &dyn GraphView,
              remaining: &[usize], task: &ModelSpec, _class: usize)
         -> Vec<usize>
     {
-        crate::scheduler::oracle::grow_group(fleet, graph, remaining, task,
-                                             1.3)
+        grow_group(&fleet.machines, graph, remaining, task, GROUP_HEADROOM)
     }
 }
 
 /// Order a group's machines into a pipeline chain by greedy
 /// nearest-neighbor on latency: adjacent stages end up in the same or
 /// nearby regions.
-pub fn chain_order(graph: &ClusterGraph, group: &[usize]) -> Vec<usize> {
+pub fn chain_order(graph: &dyn GraphView, group: &[usize]) -> Vec<usize> {
     if group.len() <= 2 {
         return group.to_vec();
     }
@@ -95,7 +95,7 @@ pub fn chain_order(graph: &ClusterGraph, group: &[usize]) -> Vec<usize> {
     chain
 }
 
-fn run_algorithm1(fleet: &Fleet, graph: &ClusterGraph, tasks: &[ModelSpec],
+fn run_algorithm1(fleet: &Fleet, graph: &dyn GraphView, tasks: &[ModelSpec],
                   f: &dyn TaskSplitter) -> Result<Assignment>
 {
     match algorithm1(fleet, graph, tasks, f) {
@@ -114,8 +114,247 @@ fn run_algorithm1(fleet: &Fleet, graph: &ClusterGraph, tasks: &[ModelSpec],
     }
 }
 
+/// Headroom factor the oracle splitter (and the two-phase refinement)
+/// grows groups to.
+const GROUP_HEADROOM: f64 = 1.3;
+
+/// Candidate-pool cap for in-region refinement, as a multiple of the
+/// task's memory need: enough slack for grow_group to be choosy, small
+/// enough that refinement cost is independent of fleet size.
+const CANDIDATE_POOL_FACTOR: f64 = 2.0;
+
+/// Phase 1 of the two-phase plan: rank/accumulate regions for one task
+/// until their free memory covers `need` GB. Oracle flavor — greedy on
+/// the coarse graph, mirroring [`grow_group`]'s seed + min-added-latency
+/// policy (region indices into `hier.summaries()`).
+fn rank_regions_oracle(hier: &HierarchicalGraph, free_mem: &[f64],
+                       need: f64) -> Vec<usize>
+{
+    let coarse = hier.coarse();
+    let avail: Vec<usize> =
+        (0..coarse.n).filter(|&r| free_mem[r] > 0.0).collect();
+    if avail.is_empty() {
+        return Vec::new();
+    }
+    let seed = *avail
+        .iter()
+        .max_by(|&&a, &&b| {
+            let score = |r: usize| {
+                let loc = coarse.mean_latency(r).unwrap_or(1e4) as f64;
+                free_mem[r] / loc.max(1.0)
+            };
+            score(a).partial_cmp(&score(b)).unwrap()
+        })
+        .unwrap();
+    let mut chosen = vec![seed];
+    let mut mem = free_mem[seed];
+    while mem < need {
+        let next = avail
+            .iter()
+            .copied()
+            .filter(|r| !chosen.contains(r))
+            .filter(|&r| chosen.iter().any(|&j| coarse.has_edge(r, j)))
+            .min_by(|&a, &b| {
+                let cost = |r: usize| -> f64 {
+                    chosen
+                        .iter()
+                        .map(|&j| {
+                            let w = coarse.weight(r, j);
+                            if w > 0.0 { w as f64 } else { 2e3 }
+                        })
+                        .sum()
+                };
+                cost(a).partial_cmp(&cost(b)).unwrap()
+            });
+        match next {
+            Some(r) => {
+                mem += free_mem[r];
+                chosen.push(r);
+            }
+            None => break,
+        }
+    }
+    chosen
+}
+
+/// Phase 1, GCN flavor: regions ranked by the coarse forward's class
+/// probability (descending, index-ascending ties — the same `total_cmp`
+/// convention as the flat [`GnnSplitter`]), accumulated until `need` GB.
+fn rank_regions_gnn(probs: &[f32], c: usize, class_idx: usize,
+                    free_mem: &[f64], need: f64) -> Vec<usize>
+{
+    let mut ranked: Vec<usize> =
+        (0..free_mem.len()).filter(|&r| free_mem[r] > 0.0).collect();
+    ranked.sort_by(|&a, &b| {
+        probs[b * c + class_idx]
+            .total_cmp(&probs[a * c + class_idx])
+            .then_with(|| a.cmp(&b))
+    });
+    let mut chosen = Vec::new();
+    let mut mem = 0.0;
+    for r in ranked {
+        chosen.push(r);
+        mem += free_mem[r];
+        if mem >= need {
+            break;
+        }
+    }
+    chosen
+}
+
+/// The two-phase Hulk plan for coarse (past-`HIER_THRESHOLD`) fleets:
+/// per task largest-first, (1) choose regions on the ~12-node coarse
+/// graph, (2) refine inside them — a capped candidate pool, a subset CSR
+/// whose weights come from **global** machine ids (so they equal what
+/// the dense oracle would assign those machines), then the same
+/// [`grow_group`] + [`chain_order`] pipeline as the flat path. Planning
+/// cost per task is O(candidates²), independent of fleet size.
+fn plan_two_phase(ctx: &PlanContext, hier: &HierarchicalGraph,
+                  splitter: &HulkSplitterKind) -> Result<Placement>
+{
+    // Coarse GCN forward: once per plan call, over one node per region.
+    let coarse_probs: Option<(Vec<f32>, usize)> = match splitter {
+        HulkSplitterKind::Gnn { classifier, params } => {
+            let reps = hier.region_representatives();
+            let probs =
+                classifier.probs_for_graph(params, &reps, hier.coarse())?;
+            Some((probs, classifier.n_classes()))
+        }
+        HulkSplitterKind::Oracle => None,
+    };
+
+    // Line-2 feasibility over the alive fleet.
+    let alive_gb: f64 = (0..hier.n_nodes())
+        .filter(|&m| hier.is_alive(m))
+        .map(|m| hier.machine(m).total_memory_gb())
+        .sum();
+    let required: f64 = ctx.workload.iter().map(|t| t.train_gb()).sum();
+    anyhow::ensure!(
+        alive_gb >= required,
+        "graph does not meet task requirements: need {required:.0} GB, \
+         have {alive_gb:.0} GB"
+    );
+
+    let mut used = vec![false; hier.n_nodes()];
+    let mut per_task = Vec::with_capacity(ctx.workload.len());
+    for (t, task) in ctx.workload.iter().enumerate() {
+        // Free members / free memory per region under the global used set.
+        let free: Vec<Vec<usize>> = hier
+            .summaries()
+            .iter()
+            .map(|s| {
+                s.members
+                    .iter()
+                    .copied()
+                    .filter(|&m| hier.is_alive(m) && !used[m])
+                    .collect()
+            })
+            .collect();
+        let free_mem: Vec<f64> = free
+            .iter()
+            .map(|ms| {
+                ms.iter().map(|&m| hier.machine(m).total_memory_gb()).sum()
+            })
+            .collect();
+        let need = task.train_gb() * GROUP_HEADROOM;
+        let regions = match &coarse_probs {
+            Some((probs, c)) => {
+                rank_regions_gnn(probs, *c, t, &free_mem, need)
+            }
+            None => rank_regions_oracle(hier, &free_mem, need),
+        };
+        anyhow::ensure!(!regions.is_empty(),
+                        "task {} found no candidate regions", task.name);
+
+        // Capped candidate pool: per chosen region, biggest-memory
+        // machines first (id-ascending ties), until ~2× the task's need.
+        let mut cands: Vec<usize> = Vec::new();
+        let mut cand_gb = 0.0;
+        'fill: for &r in &regions {
+            let mut members = free[r].clone();
+            members.sort_by(|&a, &b| {
+                hier.machine(b)
+                    .total_memory_gb()
+                    .total_cmp(&hier.machine(a).total_memory_gb())
+                    .then_with(|| a.cmp(&b))
+            });
+            for m in members {
+                cand_gb += hier.machine(m).total_memory_gb();
+                cands.push(m);
+                if cand_gb >= need * CANDIDATE_POOL_FACTOR
+                    && cands.len() >= 2
+                {
+                    break 'fill;
+                }
+            }
+        }
+
+        // Subset CSR over the candidates: weights looked up by global id
+        // (region latency × global-id jitter), local node k = cands[k].
+        let k = cands.len();
+        let machines: Vec<Machine> =
+            cands.iter().map(|&g| hier.machine(g)).collect();
+        let mut row_ptr = Vec::with_capacity(k + 1);
+        row_ptr.push(0);
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        for a in 0..k {
+            for b in 0..k {
+                if a == b {
+                    continue;
+                }
+                let w = hier.weight(cands[a], cands[b]);
+                if w > 0.0 {
+                    cols.push(b);
+                    vals.push(w);
+                }
+            }
+            row_ptr.push(cols.len());
+        }
+        let sub = CsrGraph { n: k, real: k, row_ptr, cols, vals };
+
+        let pool: Vec<usize> = (0..k).collect();
+        let local =
+            grow_group(&machines, &sub, &pool, task, GROUP_HEADROOM);
+        let got: f64 =
+            local.iter().map(|&l| machines[l].total_memory_gb()).sum();
+        anyhow::ensure!(
+            !local.is_empty() && got >= task.train_gb(),
+            "task {} refinement under-provisioned: {got:.0} GB of \
+             {:.0} GB from {k} candidates",
+            task.name,
+            task.train_gb()
+        );
+
+        let ordered_local = chain_order(&sub, &local);
+        let mut group: Vec<usize> =
+            local.iter().map(|&l| cands[l]).collect();
+        group.sort_unstable();
+        for &g in &group {
+            used[g] = true;
+        }
+        let ordered: Vec<usize> =
+            ordered_local.into_iter().map(|l| cands[l]).collect();
+        let n_stages = ordered.len().min(task.layers);
+        let stages: Vec<usize> =
+            ordered.into_iter().take(n_stages).collect();
+        let pipe = PipelinePlan::proportional(ctx.fleet, stages, task);
+        per_task.push(TaskPlacement::Grouped {
+            group,
+            chain: pipe.stages,
+            layers: pipe.layers,
+            microbatches: pipe.microbatches,
+        });
+    }
+    Ok(Placement { per_task })
+}
+
 /// The shared Hulk planning pipeline: Algorithm 1 with `splitter`, then a
-/// locality-ordered proportional GPipe plan inside every group.
+/// locality-ordered proportional GPipe plan inside every group. Contexts
+/// carrying a **coarse** hierarchical graph (fleet past `HIER_THRESHOLD`)
+/// take the region-first two-phase route instead; at or below the
+/// threshold the flat path runs unchanged, keeping every existing
+/// scenario's placements byte-identical.
 fn plan_with_splitter(ctx: &PlanContext, splitter: &HulkSplitterKind)
     -> Result<Placement>
 {
@@ -125,6 +364,11 @@ fn plan_with_splitter(ctx: &PlanContext, splitter: &HulkSplitterKind)
          (ModelSpec::sort_largest_first): Algorithm 1 consumes tasks \
          largest-first"
     );
+    if let Some(hier) = ctx.hier {
+        if hier.is_coarse() {
+            return plan_two_phase(ctx, hier, splitter);
+        }
+    }
     let assignment = match splitter {
         HulkSplitterKind::Gnn { classifier, params } => {
             let f = GnnSplitter::new(classifier, params);
@@ -200,7 +444,10 @@ impl Planner for HulkNoGcnPlanner {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
+    use crate::graph::ClusterGraph;
 
     fn setup() -> (Fleet, ClusterGraph) {
         let fleet = Fleet::paper_evaluation(0);
@@ -290,6 +537,49 @@ mod tests {
                                    HulkSplitterKind::Oracle);
         let err = HulkPlanner.plan(&ctx).unwrap_err();
         assert!(err.to_string().contains("canonical order"), "{err}");
+    }
+
+    #[test]
+    fn hier_context_below_threshold_keeps_flat_placements() {
+        // The parity pin: attaching a (non-coarse) hierarchical graph to
+        // the context must not change a single placement — the two-phase
+        // route only engages past HIER_THRESHOLD.
+        let fleet = Fleet::synthetic(220, 12, 0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let wl = sorted(ModelSpec::paper_four());
+        let flat_ctx = PlanContext::new(&fleet, &graph, &wl,
+                                        HulkSplitterKind::Oracle);
+        let flat = HulkPlanner.plan(&flat_ctx).unwrap();
+        let hier = HierarchicalGraph::from_fleet(Arc::new(fleet.clone()));
+        assert!(!hier.is_coarse());
+        let ctx = PlanContext::new(&fleet, &hier, &wl,
+                                   HulkSplitterKind::Oracle)
+            .with_hier(&hier);
+        assert_eq!(flat, HulkPlanner.plan(&ctx).unwrap());
+    }
+
+    #[test]
+    fn two_phase_plans_a_coarse_fleet_without_densifying() {
+        let fleet = Fleet::synthetic(1200, 12, 0);
+        let hier = HierarchicalGraph::from_fleet(Arc::new(fleet.clone()));
+        assert!(hier.is_coarse());
+        let wl = sorted(ModelSpec::paper_four());
+        let ctx = PlanContext::new(&fleet, &hier, &wl,
+                                   HulkSplitterKind::Oracle)
+            .with_hier(&hier);
+        let p = HulkPlanner.plan(&ctx).unwrap();
+        assert_eq!(p.n_tasks(), 4);
+        let a = p.to_assignment();
+        a.validate_disjoint(fleet.len()).unwrap();
+        a.validate_memory(&fleet, &wl).unwrap();
+        for g in &a.groups {
+            assert!(!g.is_empty());
+        }
+        // Deterministic.
+        assert_eq!(p, HulkPlanner.plan(&ctx).unwrap());
+        // The whole plan ran without any dense n×n build of this fleet.
+        assert!(crate::graph::max_dense_n()
+                    <= crate::graph::DENSE_ORACLE_MAX);
     }
 
     #[test]

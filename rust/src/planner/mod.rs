@@ -44,7 +44,7 @@ pub mod registry;
 use anyhow::Result;
 
 use crate::cluster::Fleet;
-use crate::graph::ClusterGraph;
+use crate::graph::{GraphView, HierarchicalGraph};
 use crate::models::ModelSpec;
 use crate::parallel::IterCost;
 
@@ -60,7 +60,10 @@ pub use registry::PlannerRegistry;
 /// [`Placement`] follow this order ([`is_canonical`] checks it).
 pub struct PlanContext<'a> {
     pub fleet: &'a Fleet,
-    pub graph: &'a ClusterGraph,
+    /// Any [`GraphView`]: the dense ≤1k-machine oracle, a direct-built
+    /// CSR, or a [`HierarchicalGraph`] — `&ClusterGraph` coerces here at
+    /// every historical call site.
+    pub graph: &'a dyn GraphView,
     pub workload: &'a [ModelSpec],
     /// Which splitter `F` Hulk-family planners drive Algorithm 1 with
     /// (baselines ignore it).
@@ -70,21 +73,35 @@ pub struct PlanContext<'a> {
     /// with shared WAN-link contention. `new` defaults to `Analytic`,
     /// keeping every pre-backend call site and artifact byte-identical.
     pub backend: CostBackend,
+    /// The two-level graph, when the caller has one. Hulk-family
+    /// planners go region-first **only** when this is set *and* lazy
+    /// (fleet past `HIER_THRESHOLD`) — every ≤220-machine scenario keeps
+    /// the flat plan path and its byte-identical artifacts.
+    pub hier: Option<&'a HierarchicalGraph>,
 }
 
 impl<'a> PlanContext<'a> {
-    pub fn new(fleet: &'a Fleet, graph: &'a ClusterGraph,
+    pub fn new(fleet: &'a Fleet, graph: &'a dyn GraphView,
                workload: &'a [ModelSpec], splitter: HulkSplitterKind<'a>)
         -> PlanContext<'a>
     {
         PlanContext { fleet, graph, workload, splitter,
-                      backend: CostBackend::Analytic }
+                      backend: CostBackend::Analytic, hier: None }
     }
 
     /// The same context priced by `backend` instead of the default
     /// analytic formulas.
     pub fn with_backend(mut self, backend: CostBackend) -> PlanContext<'a> {
         self.backend = backend;
+        self
+    }
+
+    /// The same context carrying a hierarchical graph for region-first
+    /// planning at scale.
+    pub fn with_hier(mut self, hier: &'a HierarchicalGraph)
+        -> PlanContext<'a>
+    {
+        self.hier = Some(hier);
         self
     }
 }
@@ -175,6 +192,7 @@ pub trait Planner: Send + Sync {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::ClusterGraph;
 
     #[test]
     fn canonical_order_check_matches_sorter() {

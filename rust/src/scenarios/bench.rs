@@ -19,7 +19,7 @@ use crate::cluster::{Fleet, WanModel};
 use crate::coordinator::{recover, RecoveryAction};
 use crate::gnn::{make_dataset, train_gcn, RefGcn, RefGcnConfig,
                  TrainerOptions};
-use crate::graph::ClusterGraph;
+use crate::graph::{ClusterGraph, CsrGraph, HierarchicalGraph};
 use crate::models::ModelSpec;
 use crate::parallel::{pipeline_cost, PipelinePlan};
 use crate::planner::{chain_order, CostBackend, HulkPlanner,
@@ -513,6 +513,48 @@ fn micro(cli: &Cli) -> Result<()> {
     b.bench("classify_planet_csr", || {
         planet_world.classify(&clf, &clf_params).expect("classify")
     });
+
+    // CSR-first construction (satellite of the hierarchical-graph PR):
+    // direct fleet → CSR vs the historical dense-then-compress route.
+    // Both emit bit-identical structures (csr.rs tests); the direct path
+    // skips the O(n²) intermediate entirely.
+    b.bench("csr_from_fleet_planet", || CsrGraph::from_fleet_direct(planet));
+    b.bench("csr_via_dense_planet", || {
+        CsrGraph::from_graph(&ClusterGraph::from_fleet(planet))
+    });
+
+    // Hierarchical graph construction across three fleet decades. The
+    // tentpole claim is near-linear growth: ≤~2× per 10× machines once
+    // normalized per machine (CI asserts the continent→global step).
+    let planet_arc = std::sync::Arc::new(planet.clone());
+    b.bench("graph_build_planet", || {
+        HierarchicalGraph::from_fleet(planet_arc.clone())
+    });
+    let continent =
+        std::sync::Arc::new(Fleet::synthetic(10_000, 12, seed));
+    b.bench("graph_build_continent", || {
+        HierarchicalGraph::from_fleet(continent.clone())
+    });
+    let global =
+        std::sync::Arc::new(Fleet::synthetic(100_000, 12, seed));
+    b.bench("graph_build_global", || {
+        HierarchicalGraph::from_fleet(global.clone())
+    });
+
+    // Two-phase region-first planning at scale: coarse region ranking +
+    // lazy in-region refinement only (no machine-level n×n anywhere).
+    let scale_plan = |fleet: &Fleet, hier: &HierarchicalGraph| {
+        let ctx = PlanContext::new(fleet, hier, &tasks,
+                                   HulkSplitterKind::Oracle)
+            .with_hier(hier);
+        HulkPlanner.plan(&ctx).expect("scale plan")
+    };
+    let continent_hier = HierarchicalGraph::from_fleet(continent.clone());
+    b.bench("plan_hulk_continent", || {
+        scale_plan(&continent, &continent_hier)
+    });
+    let global_hier = HierarchicalGraph::from_fleet(global.clone());
+    b.bench("plan_hulk_global", || scale_plan(&global, &global_hier));
 
     if cli.flag_bool("json") {
         let out = std::path::PathBuf::from(cli.flag("out").unwrap_or("."));

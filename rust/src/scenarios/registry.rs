@@ -24,6 +24,7 @@
 //! [--threads N]`.
 
 use std::collections::BTreeSet;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -32,7 +33,7 @@ use crate::cluster::paper_data::fig6_node_45;
 use crate::cluster::{Fleet, GpuModel, Machine, Region, WanModel};
 use crate::coordinator::{scale_out, Coordinator, CoordinatorEvent,
                          CoordinatorReply, RecoveryAction, TaskState};
-use crate::graph::ClusterGraph;
+use crate::graph::{ClusterGraph, HierarchicalGraph};
 use crate::models::ModelSpec;
 use crate::parallel::{pipeline_cost, IterCost};
 use crate::planner::{CostBackend, HulkSplitterKind, PlanContext, Planner,
@@ -67,6 +68,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
                 finish: table1_finish,
             },
             sim_only: false,
+            heavy: false,
         },
         ScenarioSpec {
             name: "wan_degradation",
@@ -75,6 +77,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
             seed: SeedPolicy::Global,
             body: ScenarioBody::Custom(wan_degradation),
             sim_only: false,
+            heavy: false,
         },
         ScenarioSpec {
             name: "hetero_gpu",
@@ -88,6 +91,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
                 finish: hetero_finish,
             },
             sim_only: false,
+            heavy: false,
         },
         ScenarioSpec {
             name: "fleet_growth",
@@ -96,6 +100,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
             seed: SeedPolicy::Global,
             body: ScenarioBody::Custom(fleet_growth),
             sim_only: false,
+            heavy: false,
         },
         ScenarioSpec {
             name: "failure_storm",
@@ -104,6 +109,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
             seed: SeedPolicy::Global,
             body: ScenarioBody::Custom(failure_storm),
             sim_only: false,
+            heavy: false,
         },
         ScenarioSpec {
             name: "multi_tenant",
@@ -112,6 +118,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
             seed: SeedPolicy::Global,
             body: ScenarioBody::Custom(multi_tenant),
             sim_only: false,
+            heavy: false,
         },
         ScenarioSpec {
             name: "planet_scale",
@@ -126,6 +133,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
                 finish: planet_finish,
             },
             sim_only: false,
+            heavy: false,
         },
         ScenarioSpec {
             name: "burst_arrivals",
@@ -134,6 +142,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
             seed: SeedPolicy::Tagged(0x4255_5253_5421), // "BURST!"
             body: ScenarioBody::Custom(burst_arrivals),
             sim_only: false,
+            heavy: false,
         },
         ScenarioSpec {
             name: "contended_links",
@@ -143,6 +152,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
             seed: SeedPolicy::Tagged(0x5041_4349_4649_43), // "PACIFIC"
             body: ScenarioBody::Custom(contended_links),
             sim_only: true,
+            heavy: false,
         },
         ScenarioSpec {
             name: "sim_vs_analytic",
@@ -152,6 +162,7 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
             seed: SeedPolicy::Global,
             body: ScenarioBody::Custom(sim_vs_analytic),
             sim_only: true,
+            heavy: false,
         },
         ScenarioSpec {
             name: "generated_sweep",
@@ -161,6 +172,29 @@ pub fn all_scenarios() -> Vec<ScenarioSpec> {
             seed: SeedPolicy::Tagged(0x4745_4E53_5745_4550), // "GENSWEEP"
             body: ScenarioBody::Custom(generated_sweep),
             sim_only: true,
+            heavy: false,
+        },
+        ScenarioSpec {
+            name: "continent_scale",
+            description: "Synthetic 10k-server fleet planned \
+                          region-first through the hierarchical graph — \
+                          the dense adjacency is never built (heavy: \
+                          excluded from `all`, run by name)",
+            seed: SeedPolicy::Tagged(0x434F_4E54_494E), // "CONTIN"
+            body: ScenarioBody::Custom(continent_scale),
+            sim_only: false,
+            heavy: true,
+        },
+        ScenarioSpec {
+            name: "global_scale",
+            description: "Synthetic 100k-server fleet: hierarchical \
+                          planning plus a machine-failure replan, never \
+                          densified (heavy: excluded from `all`, run by \
+                          name)",
+            seed: SeedPolicy::Tagged(0x474C_4F42_414C), // "GLOBAL"
+            body: ScenarioBody::Custom(global_scale),
+            sim_only: false,
+            heavy: true,
         },
     ]
 }
@@ -219,9 +253,13 @@ pub fn resolve_scenarios(names: &[String], backend: CostBackend)
         }
     }
     if names.is_empty() || names.iter().any(|n| n == "all") {
+        // Heavy scale scenarios never ride along with `all` (either
+        // backend) — their 10k–100k fleets would dwarf the rest of the
+        // suite; name them explicitly to run them.
         let specs: Vec<ScenarioSpec> = all
             .into_iter()
             .filter(|s| backend == CostBackend::Simulated || !s.sim_only)
+            .filter(|s| !s.heavy)
             .collect();
         return Ok((specs, true));
     }
@@ -1179,6 +1217,165 @@ fn generated_sweep(seed: u64, planners: &PlannerRegistry,
     })
 }
 
+/// Shared body of the heavy scale scenarios (`continent_scale`,
+/// `global_scale`): a synthetic `n_servers`-machine fleet over all 12
+/// regions is planned region-first through the [`HierarchicalGraph`] —
+/// past `HIER_THRESHOLD` the fine level stays lazy, so the dense n×n
+/// adjacency is never materialized. Only Hulk-family planners run (the
+/// baselines are all-pairs strategies that would densify by design);
+/// every entry is a deterministic placement digest — wall-clock scaling
+/// is `bench micro`'s job, not a scenario artifact's.
+fn scale_scenario(name: &'static str, n_servers: usize, seed: u64,
+                  planners: &PlannerRegistry, fail_one: bool)
+    -> Result<ScenarioResult>
+{
+    let fleet = Arc::new(Fleet::synthetic(n_servers, 12, seed));
+    let mut hier = HierarchicalGraph::from_fleet(fleet.clone());
+    anyhow::ensure!(
+        hier.is_coarse(),
+        "{name} exists to exercise region-first planning; {n_servers} \
+         servers must exceed HIER_THRESHOLD"
+    );
+    let mut workload = ModelSpec::paper_four();
+    ModelSpec::sort_largest_first(&mut workload);
+
+    let family: Vec<_> = planners
+        .iter()
+        .filter(|p| p.kind() != PlannerKind::Baseline)
+        .collect();
+    anyhow::ensure!(
+        !family.is_empty(),
+        "{name} needs a Hulk-family planner; the baselines are \
+         all-pairs strategies that cannot run at {n_servers} servers"
+    );
+
+    let mut entries = vec![
+        BenchEntry::new(format!("{name}/fleet_servers"),
+                        fleet.len() as f64, "count"),
+        BenchEntry::new(format!("{name}/fleet_regions"),
+                        region_count(&fleet) as f64, "count"),
+        BenchEntry::new(format!("{name}/fleet_total_memory_gb"),
+                        fleet.total_memory_gb(), "GB"),
+    ];
+    let mut placements = Vec::new();
+    let mut t = Table::new(&["planner", "model", "group", "iter"]);
+    let mut first_groups: Vec<Vec<usize>> = Vec::new();
+    for planner in &family {
+        let ctx = PlanContext::new(&fleet, &hier, &workload,
+                                   HulkSplitterKind::Oracle)
+            .with_hier(&hier);
+        let placement = planner.plan(&ctx)?;
+        placement
+            .validate_machines(&fleet)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let a = placement.to_assignment();
+        a.validate_disjoint(fleet.len()).map_err(|e| anyhow::anyhow!(e))?;
+        a.validate_memory(&fleet, &workload)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let summary = placement.summary(&fleet);
+        let prefix = format!("{name}/{}/placement", planner.slug());
+        placements.push(BenchEntry::new(format!("{prefix}/group_count"),
+                                        summary.groups as f64, "count"));
+        placements.push(BenchEntry::new(format!("{prefix}/stage_count"),
+                                        summary.stages as f64, "count"));
+        placements.push(BenchEntry::new(
+            format!("{prefix}/cross_region_edges"),
+            summary.cross_region_edges as f64,
+            "count",
+        ));
+        for (ti, model) in workload.iter().enumerate() {
+            let cost = planner.cost(&ctx, &placement, ti);
+            entries.push(BenchEntry::new(
+                format!("{name}/{}/{}/group_size", planner.slug(),
+                        slug(model.name)),
+                placement.machines(ti).len() as f64,
+                "count",
+            ));
+            if cost.is_feasible() {
+                entries.push(BenchEntry::new(
+                    format!("{name}/{}/{}/iter_ms", planner.slug(),
+                            slug(model.name)),
+                    cost.total_ms(),
+                    "ms",
+                ));
+            }
+            t.row(&[planner.slug().to_string(), model.name.to_string(),
+                    placement.machines(ti).len().to_string(),
+                    if cost.is_feasible() { fmt_ms(cost.total_ms()) }
+                    else { "infeasible".to_string() }]);
+        }
+        if first_groups.is_empty() {
+            first_groups = (0..placement.n_tasks())
+                .map(|ti| placement.machines(ti).to_vec())
+                .collect();
+        }
+    }
+
+    // Incremental delta: kill one planned machine, let the graph apply
+    // the failure in place (summaries + coarse rebuild, no fine-level
+    // rework), and replan — the victim must vanish from the placement.
+    let mut replan_note = String::new();
+    if fail_one {
+        let victim = first_groups
+            .iter()
+            .max_by_key(|g| g.len())
+            .and_then(|g| g.first())
+            .copied()
+            .expect("a planned group is never empty");
+        hier.apply_failure(victim);
+        let planner = family[0];
+        let ctx = PlanContext::new(&fleet, &hier, &workload,
+                                   HulkSplitterKind::Oracle)
+            .with_hier(&hier);
+        let replanned = planner.plan(&ctx)?;
+        anyhow::ensure!(
+            (0..replanned.n_tasks())
+                .all(|ti| !replanned.machines(ti).contains(&victim)),
+            "machine {victim} failed but was placed again"
+        );
+        let summary = replanned.summary(&fleet);
+        entries.push(BenchEntry::new(format!("{name}/replan/victim"),
+                                     victim as f64, "count"));
+        entries.push(BenchEntry::new(
+            format!("{name}/replan/group_count"),
+            summary.groups as f64,
+            "count",
+        ));
+        replan_note = format!(
+            "machine {victim} failed → {} replanned {} groups without \
+             touching the dense path\n",
+            planner.slug(),
+            summary.groups
+        );
+    }
+
+    let rendered = format!(
+        "{name}: {} servers / {} regions / {:.1} TB, planned \
+         region-first over the {}-node coarse graph\n{}{replan_note}",
+        fleet.len(),
+        region_count(&fleet),
+        fleet.total_memory_gb() / 1e3,
+        hier.coarse().n,
+        t.render()
+    );
+    Ok(ScenarioResult { scenario: name, entries, placements, rendered })
+}
+
+/// 10k servers planned through the hierarchical substrate.
+fn continent_scale(seed: u64, planners: &PlannerRegistry,
+                   _backend: CostBackend) -> Result<ScenarioResult>
+{
+    scale_scenario("continent_scale", 10_000, seed, planners, false)
+}
+
+/// 100k servers: hierarchical planning plus an incremental
+/// failure-delta replan.
+fn global_scale(seed: u64, planners: &PlannerRegistry,
+                _backend: CostBackend) -> Result<ScenarioResult>
+{
+    scale_scenario("global_scale", 100_000, seed, planners, true)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1195,7 +1392,7 @@ mod tests {
     #[test]
     fn registry_is_populated_with_unique_names() {
         let scenarios = all_scenarios();
-        assert!(scenarios.len() >= 11);
+        assert!(scenarios.len() >= 13);
         let mut names: Vec<&str> =
             scenarios.iter().map(|s| s.name).collect();
         names.sort_unstable();
@@ -1218,6 +1415,15 @@ mod tests {
         assert_eq!(sim_only,
                    vec!["contended_links", "sim_vs_analytic",
                         "generated_sweep"]);
+        // Exactly the scale studies are heavy (and never sim-only —
+        // they must stay runnable by name under the default backend).
+        let heavy: Vec<&str> = scenarios
+            .iter()
+            .filter(|s| s.heavy)
+            .map(|s| s.name)
+            .collect();
+        assert_eq!(heavy, vec!["continent_scale", "global_scale"]);
+        assert!(scenarios.iter().all(|s| !(s.heavy && s.sim_only)));
     }
 
     #[test]
@@ -1246,18 +1452,20 @@ mod tests {
         let (specs, ran_all) =
             resolve_scenarios(&[], CostBackend::Analytic).unwrap();
         assert!(ran_all);
-        assert_eq!(specs.len(), all_scenarios().len() - 3);
-        assert!(specs.iter().all(|s| !s.sim_only));
+        assert_eq!(specs.len(), all_scenarios().len() - 5);
+        assert!(specs.iter().all(|s| !s.sim_only && !s.heavy));
         let (specs, ran_all) = resolve_scenarios(&["all".to_string()],
                                                  CostBackend::Analytic)
             .unwrap();
         assert!(ran_all);
-        assert_eq!(specs.len(), all_scenarios().len() - 3);
-        // The simulated backend runs the complete registry.
+        assert_eq!(specs.len(), all_scenarios().len() - 5);
+        // The simulated backend runs the complete registry minus the
+        // heavy scale studies (those only ever run by name).
         let (specs, ran_all) =
             resolve_scenarios(&[], CostBackend::Simulated).unwrap();
         assert!(ran_all);
-        assert_eq!(specs.len(), all_scenarios().len());
+        assert_eq!(specs.len(), all_scenarios().len() - 2);
+        assert!(specs.iter().all(|s| !s.heavy));
         // Subsets keep the user's order.
         let names = vec!["hetero_gpu".to_string(),
                          "table1_fleet".to_string()];
@@ -1401,6 +1609,41 @@ mod tests {
         assert!(result.entries.iter().any(|e| e.name.contains("/system_b/")));
         assert!(!result.entries.iter().any(|e| e.name.contains("/system_a/")));
         assert!(!result.entries.iter().any(|e| e.name.contains("/system_c/")));
+    }
+
+    #[test]
+    fn continent_scale_plans_region_first_and_never_densifies() {
+        let planners = PlannerRegistry::standard();
+        let spec = find_scenario("continent_scale").unwrap();
+        assert!(spec.heavy);
+        let result = spec.run_with(7, &planners).unwrap();
+        let get = |name: &str| -> Option<f64> {
+            result
+                .entries
+                .iter()
+                .find(|e| e.name == name)
+                .map(|e| e.value)
+        };
+        assert_eq!(get("continent_scale/fleet_servers"), Some(10_000.0));
+        assert_eq!(get("continent_scale/fleet_regions"), Some(12.0));
+        // The big model got a real group, priced feasibly.
+        assert!(get("continent_scale/hulk/opt_175b/group_size")
+                    .expect("group size row") >= 2.0);
+        assert!(get("continent_scale/hulk/opt_175b/iter_ms").is_some());
+        assert!(result.placements.iter().any(|e| {
+            e.name == "continent_scale/hulk/placement/group_count"
+        }));
+        // Deterministic, and the whole run stayed off the dense path.
+        let again = find_scenario("continent_scale")
+            .unwrap()
+            .run_with(7, &planners)
+            .unwrap();
+        let rows = |r: &ScenarioResult| -> Vec<(String, f64)> {
+            r.entries.iter().map(|e| (e.name.clone(), e.value)).collect()
+        };
+        assert_eq!(rows(&result), rows(&again));
+        assert!(crate::graph::max_dense_n()
+                    <= crate::graph::DENSE_ORACLE_MAX);
     }
 
     #[test]

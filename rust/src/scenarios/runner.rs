@@ -108,6 +108,11 @@ pub struct ScenarioSpec {
     /// and rejected with a pointer to `--cost sim` when named
     /// explicitly under the analytic backend.
     pub sim_only: bool,
+    /// Scale scenarios (`continent_scale`, `global_scale`): fleets of
+    /// 10k–100k machines that plan through the hierarchical substrate
+    /// in seconds but would dwarf every other scenario's runtime.
+    /// Excluded from `all` under **both** backends — run them by name.
+    pub heavy: bool,
 }
 
 /// Output of one scenario run.
@@ -172,20 +177,30 @@ enum CellOut {
 /// `Shared` is the production mode: the world is a pure function of
 /// `(spec, seed)`, so sharing the one allocation across every planner
 /// cell (and the merge) changes no output byte — it only stops paying
-/// the fleet + O(n²) graph rebuild once per cell. `Rebuild` is the
-/// cache-off reference mode the determinism tests diff against.
+/// the fleet + graph rebuild once per cell. `Rebuild` is the cache-off
+/// reference mode the determinism tests diff against. `DenseOracle`
+/// plans every `Evaluate` cell on the demoted dense [`ClusterGraph`]
+/// (no hierarchical context) — the reference substrate
+/// `rust/tests/hier_parity.rs` diffs the hierarchical run against.
+///
+/// [`ClusterGraph`]: crate::graph::ClusterGraph
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WorldSharing {
     Shared,
     Rebuild,
+    DenseOracle,
 }
 
 /// Build the world of an `Evaluate` spec from the CLI seed.
-fn spec_world(spec: &ScenarioSpec, seed: u64) -> ScenarioWorld {
+fn spec_world(spec: &ScenarioSpec, seed: u64, dense: bool) -> ScenarioWorld {
     match &spec.body {
         ScenarioBody::Evaluate { fleet, workload, .. } => {
-            ScenarioWorld::for_evaluate(*fleet, *workload,
-                                        spec.seed.apply(seed))
+            let eff = spec.seed.apply(seed);
+            if dense {
+                ScenarioWorld::for_evaluate_dense(*fleet, *workload, eff)
+            } else {
+                ScenarioWorld::for_evaluate(*fleet, *workload, eff)
+            }
         }
         ScenarioBody::Custom(_) => {
             unreachable!("custom bodies build their own contexts")
@@ -377,9 +392,12 @@ pub fn run_specs_sharing(specs: &[ScenarioSpec], seed: u64,
         }
         Some(match sharing {
             WorldSharing::Shared => worlds[si]
-                .get_or_init(|| Arc::new(spec_world(spec, seed)))
+                .get_or_init(|| Arc::new(spec_world(spec, seed, false)))
                 .clone(),
-            WorldSharing::Rebuild => Arc::new(spec_world(spec, seed)),
+            WorldSharing::DenseOracle => worlds[si]
+                .get_or_init(|| Arc::new(spec_world(spec, seed, true)))
+                .clone(),
+            WorldSharing::Rebuild => Arc::new(spec_world(spec, seed, false)),
         })
     };
 
@@ -463,6 +481,7 @@ mod tests {
                 },
             },
             sim_only: false,
+            heavy: false,
         }
     }
 
@@ -513,6 +532,7 @@ mod tests {
                 seed: SeedPolicy::Tagged(0xBEEF),
                 body: ScenarioBody::Custom(custom),
                 sim_only: false,
+                heavy: false,
             },
         ];
         let planners = PlannerRegistry::standard();
@@ -570,6 +590,7 @@ mod tests {
                 seed: SeedPolicy::Global,
                 body: ScenarioBody::Custom(failing),
                 sim_only: false,
+                heavy: false,
             },
             ScenarioSpec {
                 name: "boom_b",
@@ -577,6 +598,7 @@ mod tests {
                 seed: SeedPolicy::Global,
                 body: ScenarioBody::Custom(also_failing),
                 sim_only: false,
+                heavy: false,
             },
         ];
         let planners = PlannerRegistry::standard();

@@ -1,28 +1,40 @@
 //! [`ScenarioWorld`] — the per-(scenario, seed) context cache.
 //!
 //! Every (scenario × planner × seed × backend) cell used to rebuild the
-//! same fleet, re-derive the O(n²) [`ClusterGraph`], and re-sort the
-//! workload from scratch; at planet scale that rebuild dominated the
-//! whole evaluation loop. A `ScenarioWorld` is built **once** per
+//! same fleet, re-derive the cluster graph, and re-sort the workload
+//! from scratch; at planet scale that rebuild dominated the whole
+//! evaluation loop. A `ScenarioWorld` is built **once** per
 //! (scenario, seed) and shared — the runner hands one `Arc` to every
 //! cell of a spec (`--parallel` workers share the same allocation, they
 //! do not clone it), `evaluate` consumes it directly, and custom
 //! scenario bodies reuse one world across their evaluation + DES steps.
 //!
+//! The planning substrate is a [`HierarchicalGraph`] built directly
+//! from the fleet — no dense n×n adjacency on the construction path.
+//! For fleets at or under [`crate::graph::HIER_THRESHOLD`] its fine
+//! level is a full CSR whose weights are bit-identical to the dense
+//! oracle's, so every historical artifact byte is preserved; past the
+//! threshold the fine level stays lazy and Hulk-family planners go
+//! region-first ([`PlanContext::hier`]).
+//!
 //! Everything inside is a pure function of `(fleet builder, workload
 //! builder, effective seed)`, so sharing cannot change any artifact
 //! byte: the runner's cache-off mode rebuilds a fresh world per cell
 //! and CI asserts the outputs are identical
-//! (`rust/tests/world_cache.rs`).
+//! (`rust/tests/world_cache.rs`), and the dense-oracle mode
+//! ([`ScenarioWorld::new_dense_oracle`]) re-plans everything on the
+//! demoted dense [`ClusterGraph`] so `rust/tests/hier_parity.rs` can
+//! assert the hierarchical substrate changes nothing either.
 //!
 //! Ownership (see DESIGN.md §ScenarioWorld for the full diagram):
 //!
 //! ```text
 //! ScenarioWorld (Arc, one per scenario × seed)
-//! ├── fleet:    Arc<Fleet>          built once from the effective seed
-//! ├── graph:    Arc<ClusterGraph>   O(n²) adjacency, built once
-//! ├── workload: Vec<ModelSpec>      canonical (largest-first) order
-//! └── padded:   Arc<Mutex<…>>       lazily, per artifact slot count:
+//! ├── fleet:    Arc<Fleet>               built once from the seed
+//! ├── hier:     Arc<HierarchicalGraph>   coarse + (≤1k) full-CSR fine
+//! ├── dense:    Option<Arc<ClusterGraph>>  oracle reference mode only
+//! ├── workload: Vec<ModelSpec>           canonical (largest-first)
+//! └── padded:   Arc<Mutex<…>>            LRU per artifact slot count:
 //!     └── PaddedWorld { csr, feats, mask }   GCN inference tensors
 //! ```
 //!
@@ -36,9 +48,15 @@ use anyhow::Result;
 
 use crate::cluster::Fleet;
 use crate::gnn::Classifier;
-use crate::graph::{node_features_csr, ClusterGraph, CsrGraph};
+use crate::graph::{node_features_csr, ClusterGraph, CsrGraph, GraphView,
+                   HierarchicalGraph};
 use crate::models::ModelSpec;
 use crate::planner::{HulkSplitterKind, PlanContext};
+
+/// How many [`PaddedWorld`]s a world retains, LRU — one or two artifact
+/// sizes per process is typical, so 4 leaves slack without letting a
+/// slot-count sweep hold every tensor set alive at once.
+pub const MAX_PADDED_WORLDS: usize = 4;
 
 /// Padded GCN-inference tensors for one artifact slot count: the CSR
 /// adjacency view plus features and node mask, all shaped `[slots, …]`.
@@ -66,25 +84,53 @@ impl PaddedWorld {
 #[derive(Clone, Debug)]
 pub struct ScenarioWorld {
     fleet: Arc<Fleet>,
-    graph: Arc<ClusterGraph>,
+    hier: Arc<HierarchicalGraph>,
+    /// Set only by [`ScenarioWorld::new_dense_oracle`]: plan on the
+    /// demoted dense graph instead of the hierarchical substrate, for
+    /// the hier-vs-dense byte-identity gate.
+    dense: Option<Arc<ClusterGraph>>,
     workload: Vec<ModelSpec>,
-    /// Lazily built padded tensors, keyed by slot count (tiny: one or
-    /// two artifact sizes per process). Shared across
-    /// `with_workload` forks.
+    /// Lazily built padded tensors, keyed by slot count, in LRU order
+    /// (front = coldest, capped at [`MAX_PADDED_WORLDS`]). Shared
+    /// across `with_workload` forks.
     padded: Arc<Mutex<Vec<Arc<PaddedWorld>>>>,
 }
 
 impl ScenarioWorld {
     /// Build a world from parts: sorts `workload` into canonical
-    /// (largest-first) order and derives the cluster graph once.
+    /// (largest-first) order and derives the two-level graph once —
+    /// directly from the fleet, never through a dense n×n intermediate.
     pub fn new(fleet: Fleet, mut workload: Vec<ModelSpec>)
         -> ScenarioWorld
     {
         ModelSpec::sort_largest_first(&mut workload);
-        let graph = ClusterGraph::from_fleet(&fleet);
+        let fleet = Arc::new(fleet);
+        let hier = Arc::new(HierarchicalGraph::from_fleet(fleet.clone()));
         ScenarioWorld {
-            fleet: Arc::new(fleet),
-            graph: Arc::new(graph),
+            fleet,
+            hier,
+            dense: None,
+            workload,
+            padded: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// The dense-oracle reference world: identical to [`Self::new`]
+    /// except planners consume the demoted dense [`ClusterGraph`]
+    /// (≤1k machines) with no hierarchical context attached. Exists so
+    /// the CI parity gate can prove the hierarchical substrate changes
+    /// no artifact byte.
+    pub fn new_dense_oracle(fleet: Fleet, mut workload: Vec<ModelSpec>)
+        -> ScenarioWorld
+    {
+        ModelSpec::sort_largest_first(&mut workload);
+        let dense = Arc::new(ClusterGraph::from_fleet(&fleet));
+        let fleet = Arc::new(fleet);
+        let hier = Arc::new(HierarchicalGraph::from_fleet(fleet.clone()));
+        ScenarioWorld {
+            fleet,
+            hier,
+            dense: Some(dense),
             workload,
             padded: Arc::new(Mutex::new(Vec::new())),
         }
@@ -101,12 +147,32 @@ impl ScenarioWorld {
         ScenarioWorld::new(fl, wl)
     }
 
+    /// [`Self::for_evaluate`] in dense-oracle reference mode.
+    pub fn for_evaluate_dense(fleet: fn(u64) -> Fleet,
+                              workload: fn(&Fleet) -> Vec<ModelSpec>,
+                              eff_seed: u64) -> ScenarioWorld
+    {
+        let fl = fleet(eff_seed);
+        let wl = workload(&fl);
+        ScenarioWorld::new_dense_oracle(fl, wl)
+    }
+
     pub fn fleet(&self) -> &Fleet {
         &self.fleet
     }
 
-    pub fn graph(&self) -> &ClusterGraph {
-        &self.graph
+    /// The two-level graph (always present, even in dense-oracle mode).
+    pub fn hier(&self) -> &HierarchicalGraph {
+        &self.hier
+    }
+
+    /// The graph planners see: the hierarchical substrate, or the
+    /// demoted dense oracle in reference mode.
+    pub fn view(&self) -> &dyn GraphView {
+        match &self.dense {
+            Some(d) => &**d,
+            None => &*self.hier,
+        }
     }
 
     /// The workload in canonical (largest-first) order.
@@ -115,7 +181,7 @@ impl ScenarioWorld {
     }
 
     /// A fork with a different workload that **shares** the fleet,
-    /// graph, and padded-tensor caches (cheap: three `Arc` clones plus
+    /// graph, and padded-tensor caches (cheap: a few `Arc` clones plus
     /// the sort).
     pub fn with_workload(&self, mut workload: Vec<ModelSpec>)
         -> ScenarioWorld
@@ -123,7 +189,8 @@ impl ScenarioWorld {
         ModelSpec::sort_largest_first(&mut workload);
         ScenarioWorld {
             fleet: self.fleet.clone(),
-            graph: self.graph.clone(),
+            hier: self.hier.clone(),
+            dense: self.dense.clone(),
             workload,
             padded: self.padded.clone(),
         }
@@ -131,12 +198,18 @@ impl ScenarioWorld {
 
     /// A [`PlanContext`] borrowing this world — the seam every planner
     /// and both cost backends consume. Analytic backend by default;
-    /// chain [`PlanContext::with_backend`] to switch.
+    /// chain [`PlanContext::with_backend`] to switch. The hierarchical
+    /// graph rides along (except in dense-oracle mode) so Hulk-family
+    /// planners can go region-first past `HIER_THRESHOLD`.
     pub fn context(&self, splitter: HulkSplitterKind<'_>)
         -> PlanContext<'_>
     {
-        PlanContext::new(&self.fleet, &self.graph, &self.workload,
-                         splitter)
+        let ctx = PlanContext::new(&self.fleet, self.view(),
+                                   &self.workload, splitter);
+        match &self.dense {
+            Some(_) => ctx,
+            None => ctx.with_hier(&self.hier),
+        }
     }
 
     /// Classify every machine through the **cached** padded tensors —
@@ -162,19 +235,27 @@ impl ScenarioWorld {
     }
 
     /// The padded GCN tensors for `slots` artifact slots, built on
-    /// first use and cached (thread-safe; `--parallel` cells share the
-    /// same build).
+    /// first use and LRU-cached (thread-safe; `--parallel` cells share
+    /// the same build; at most [`MAX_PADDED_WORLDS`] slot counts stay
+    /// resident and eviction only drops this cache's `Arc` — callers
+    /// holding one keep their tensors, and a rebuild is bit-identical
+    /// because every tensor is a pure function of (fleet, slots)).
     pub fn padded(&self, slots: usize) -> Arc<PaddedWorld> {
         let mut cache = self.padded.lock().expect("padded cache poisoned");
-        if let Some(hit) = cache.iter().find(|p| p.slots == slots) {
-            return hit.clone();
+        if let Some(pos) = cache.iter().position(|p| p.slots == slots) {
+            let hit = cache.remove(pos);
+            cache.push(hit.clone());
+            return hit;
         }
-        let csr = CsrGraph::padded(&self.graph, slots);
+        let csr = self.view().padded_csr(slots);
         let feats = node_features_csr(&self.fleet.machines, &csr);
-        let mask = self.graph.padded_mask(slots);
+        let mask = self.view().padded_mask(slots);
         let built = Arc::new(PaddedWorld { slots, csr, feats, mask,
                                            dense: OnceLock::new() });
         cache.push(built.clone());
+        if cache.len() > MAX_PADDED_WORLDS {
+            cache.remove(0);
+        }
         built
     }
 }
@@ -189,21 +270,23 @@ mod tests {
         let world = ScenarioWorld::new(Fleet::paper_evaluation(0),
                                        ModelSpec::paper_six());
         assert!(crate::planner::is_canonical(world.workload()));
-        assert_eq!(world.graph().n, world.fleet().len());
+        assert_eq!(world.hier().n_nodes(), world.fleet().len());
+        assert!(!world.hier().is_coarse(), "46 machines keep a full fine level");
     }
 
     #[test]
     fn padded_tensors_match_the_from_scratch_build() {
         let world = ScenarioWorld::new(Fleet::paper_evaluation(0),
                                        ModelSpec::paper_four());
+        // Reference: the demoted dense oracle, built independently.
+        let dense = ClusterGraph::from_fleet(world.fleet());
         let slots = world.fleet().len() + 18;
         let padded = world.padded(slots);
         assert_eq!(padded.feats,
-                   node_features(&world.fleet().machines, world.graph(),
-                                 slots));
-        assert_eq!(padded.mask, world.graph().padded_mask(slots));
-        assert_eq!(padded.csr, CsrGraph::padded(world.graph(), slots));
-        assert_eq!(padded.dense_adj(), world.graph().padded_adj(slots));
+                   node_features(&world.fleet().machines, &dense, slots));
+        assert_eq!(padded.mask, dense.padded_mask(slots));
+        assert_eq!(padded.csr, CsrGraph::padded(&dense, slots));
+        assert_eq!(padded.dense_adj(), dense.padded_adj(slots));
         // Second request is the cached allocation, not a rebuild.
         let again = world.padded(slots);
         assert!(Arc::ptr_eq(&padded, &again));
@@ -240,7 +323,7 @@ mod tests {
         let fork = world.with_workload(vec![ModelSpec::bert_large()]);
         assert_eq!(fork.workload().len(), 1);
         assert!(std::ptr::eq(world.fleet(), fork.fleet()));
-        assert!(std::ptr::eq(world.graph(), fork.graph()));
+        assert!(std::ptr::eq(world.hier(), fork.hier()));
         assert!(Arc::ptr_eq(&padded, &fork.padded(64)));
     }
 
@@ -264,7 +347,7 @@ mod tests {
             small.batch /= 2;
             wl.push(small);
             let fork = world.with_workload(wl.clone());
-            assert!(std::ptr::eq(world.graph(), fork.graph()),
+            assert!(std::ptr::eq(world.hier(), fork.hier()),
                     "fork must share the Arc'd graph");
             assert!(Arc::ptr_eq(&padded, &fork.padded(64)));
             // A fork growing the shared cache with a new slot count is
@@ -283,12 +366,75 @@ mod tests {
     }
 
     #[test]
+    fn lru_eviction_never_changes_artifacts() {
+        // Satellite: the padded cache is bounded. Walking more slot
+        // counts than the cap evicts the coldest entry, and a rebuild
+        // after eviction is bit-identical — eviction is a memory
+        // decision, never an artifact one.
+        let world = ScenarioWorld::new(Fleet::paper_evaluation(0),
+                                       ModelSpec::paper_four());
+        let base = 64;
+        let first = world.padded(base);
+        let feats = first.feats.clone();
+        let mask = first.mask.clone();
+        let csr = first.csr.clone();
+        // Touch `base` mid-walk: the LRU hit keeps it resident while
+        // older counts fall out.
+        for extra in 1..MAX_PADDED_WORLDS {
+            world.padded(base + 8 * extra);
+        }
+        assert!(Arc::ptr_eq(&first, &world.padded(base)),
+                "a touched entry survives a full-capacity walk");
+        // Now flood past capacity without touching `base`.
+        for extra in 0..=MAX_PADDED_WORLDS {
+            world.padded(base + 100 + 8 * extra);
+        }
+        let rebuilt = world.padded(base);
+        assert!(!Arc::ptr_eq(&first, &rebuilt),
+                "flooding {} fresh slot counts must evict the cold entry",
+                MAX_PADDED_WORLDS + 1);
+        assert_eq!(rebuilt.feats, feats);
+        assert_eq!(rebuilt.mask, mask);
+        assert_eq!(rebuilt.csr, csr);
+        // The evicted Arc the caller still holds is untouched.
+        assert_eq!(first.feats, feats);
+    }
+
+    #[test]
+    fn dense_oracle_world_plans_identically() {
+        use crate::planner::{HulkPlanner, Planner};
+        let hier_world = ScenarioWorld::new(Fleet::paper_evaluation(0),
+                                            ModelSpec::paper_four());
+        let dense_world =
+            ScenarioWorld::new_dense_oracle(Fleet::paper_evaluation(0),
+                                            ModelSpec::paper_four());
+        // The dense world plans with no hierarchical context…
+        let dctx = dense_world.context(HulkSplitterKind::Oracle);
+        assert!(dctx.hier.is_none());
+        let hctx = hier_world.context(HulkSplitterKind::Oracle);
+        assert!(hctx.hier.is_some());
+        // …and both substrates emit the same placements and tensors.
+        let p = HulkPlanner;
+        assert_eq!(p.plan(&hctx).unwrap(), p.plan(&dctx).unwrap());
+        let a = hier_world.padded(64);
+        let b = dense_world.padded(64);
+        assert_eq!(a.feats, b.feats);
+        assert_eq!(a.mask, b.mask);
+        assert_eq!(a.csr, b.csr);
+    }
+
+    #[test]
     fn context_borrows_the_world() {
         let world = ScenarioWorld::new(Fleet::paper_evaluation(0),
                                        ModelSpec::paper_four());
         let ctx = world.context(HulkSplitterKind::Oracle);
         assert_eq!(ctx.workload.len(), 4);
         assert!(std::ptr::eq(ctx.fleet, world.fleet()));
-        assert!(std::ptr::eq(ctx.graph, world.graph()));
+        // `ctx.graph` is a fat pointer — compare data addresses.
+        assert!(std::ptr::eq(
+            ctx.graph as *const dyn GraphView as *const u8,
+            world.view() as *const dyn GraphView as *const u8));
+        assert!(std::ptr::eq(ctx.hier.expect("hier rides along"),
+                             world.hier()));
     }
 }

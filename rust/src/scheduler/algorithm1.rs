@@ -17,16 +17,18 @@
 //! (`gnn::inference`) in the full system, the oracle in ablations.
 
 use crate::cluster::Fleet;
-use crate::graph::ClusterGraph;
+use crate::graph::GraphView;
 use crate::models::ModelSpec;
 
 use super::assignment::Assignment;
 
 /// The trained network `F` of Algorithm 1: given the remaining machine
-/// pool, split off the group for `task` (class index `class_idx`).
+/// pool, split off the group for `task` (class index `class_idx`). The
+/// graph is any [`GraphView`] — dense oracle, direct CSR, or a
+/// hierarchical refinement subset.
 pub trait TaskSplitter {
     /// Returns machine ids (⊆ `remaining`) proposed for `task`.
-    fn split(&self, fleet: &Fleet, graph: &ClusterGraph,
+    fn split(&self, fleet: &Fleet, graph: &dyn GraphView,
              remaining: &[usize], task: &ModelSpec, class_idx: usize)
         -> Vec<usize>;
 }
@@ -65,7 +67,7 @@ fn group_gb(fleet: &Fleet, group: &[usize]) -> f64 {
 /// Run Algorithm 1. Tasks are processed in the order given (the paper
 /// feeds them largest-first; the Hulk planner's `PlanContext` contract
 /// guarantees the sorting).
-pub fn algorithm1(fleet: &Fleet, graph: &ClusterGraph,
+pub fn algorithm1(fleet: &Fleet, graph: &dyn GraphView,
                   tasks: &[ModelSpec], splitter: &dyn TaskSplitter)
     -> Result<Assignment, Algorithm1Error>
 {
@@ -159,11 +161,12 @@ pub fn algorithm1(fleet: &Fleet, graph: &ClusterGraph,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::ClusterGraph;
 
     /// The pre-bitset implementation (O(n²) `contains` scans), kept
     /// verbatim as the behavioral reference: the bitset rewrite must
     /// produce byte-for-byte identical assignments.
-    fn algorithm1_reference(fleet: &Fleet, graph: &ClusterGraph,
+    fn algorithm1_reference(fleet: &Fleet, graph: &dyn GraphView,
                             tasks: &[ModelSpec], splitter: &dyn TaskSplitter)
         -> Result<Assignment, Algorithm1Error>
     {
@@ -223,12 +226,12 @@ mod tests {
     struct OracleSplitter;
 
     impl TaskSplitter for OracleSplitter {
-        fn split(&self, fleet: &Fleet, graph: &ClusterGraph,
+        fn split(&self, fleet: &Fleet, graph: &dyn GraphView,
                  remaining: &[usize], task: &ModelSpec, _class: usize)
             -> Vec<usize>
         {
-            crate::scheduler::oracle::grow_group(fleet, graph, remaining,
-                                                 task, 1.3)
+            crate::scheduler::oracle::grow_group(&fleet.machines, graph,
+                                                 remaining, task, 1.3)
         }
     }
 
@@ -262,7 +265,7 @@ mod tests {
     struct StingySplitter;
 
     impl TaskSplitter for StingySplitter {
-        fn split(&self, _f: &Fleet, _g: &ClusterGraph, remaining: &[usize],
+        fn split(&self, _f: &Fleet, _g: &dyn GraphView, remaining: &[usize],
                  _t: &ModelSpec, _c: usize) -> Vec<usize>
         {
             remaining.iter().copied().take(1).collect()

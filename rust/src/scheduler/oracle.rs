@@ -12,8 +12,8 @@
 //! §5.1), greedy growth minimizing added intra-group latency, then
 //! swap-based local search to a fixed point.
 
-use crate::cluster::Fleet;
-use crate::graph::ClusterGraph;
+use crate::cluster::{Fleet, Machine};
+use crate::graph::{ClusterGraph, GraphView};
 use crate::models::ModelSpec;
 
 use super::assignment::Assignment;
@@ -62,8 +62,13 @@ fn target_sizes(fleet: &Fleet, tasks: &[ModelSpec], headroom: f64)
 /// least added intra-group latency until the task's memory threshold (with
 /// headroom) is cleared. This is the "smaller graph Gᵢ" a splitter hands
 /// Algorithm 1 — it deliberately does NOT grab the whole pool.
-pub fn grow_group(fleet: &Fleet, graph: &ClusterGraph, pool: &[usize],
-                  task: &ModelSpec, headroom: f64) -> Vec<usize>
+///
+/// Takes machines + any [`GraphView`] (dense oracle, direct CSR, or a
+/// hierarchical refinement subset) — pool indices address `machines` and
+/// the graph's node space, which must agree.
+pub fn grow_group(machines: &[Machine], graph: &dyn GraphView,
+                  pool: &[usize], task: &ModelSpec, headroom: f64)
+    -> Vec<usize>
 {
     if pool.is_empty() {
         return Vec::new();
@@ -72,7 +77,7 @@ pub fn grow_group(fleet: &Fleet, graph: &ClusterGraph, pool: &[usize],
         .iter()
         .max_by(|&&a, &&b| {
             let score = |i: usize| {
-                let mem = fleet.machines[i].total_memory_gb();
+                let mem = machines[i].total_memory_gb();
                 let loc = graph.mean_latency(i).unwrap_or(1e4) as f64;
                 mem / loc.max(1.0)
             };
@@ -80,7 +85,7 @@ pub fn grow_group(fleet: &Fleet, graph: &ClusterGraph, pool: &[usize],
         })
         .unwrap();
     let mut group = vec![seed];
-    let mut mem = fleet.machines[seed].total_memory_gb();
+    let mut mem = machines[seed].total_memory_gb();
     while mem < task.train_gb() * headroom || group.len() < 2 {
         let next = pool
             .iter()
@@ -101,7 +106,7 @@ pub fn grow_group(fleet: &Fleet, graph: &ClusterGraph, pool: &[usize],
             });
         match next {
             Some(m) => {
-                mem += fleet.machines[m].total_memory_gb();
+                mem += machines[m].total_memory_gb();
                 group.push(m);
             }
             None => break,

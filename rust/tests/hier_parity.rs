@@ -1,0 +1,112 @@
+//! Hierarchical-substrate parity gates (the PR-5 cache-gate pattern,
+//! applied to the graph layer): planning every ≤220-machine scenario on
+//! the hierarchical substrate must write exactly the bytes the demoted
+//! dense oracle writes — and planning a 100k-machine fleet must never
+//! materialize a dense n×n adjacency anywhere in the process.
+
+use std::sync::Arc;
+
+use hulk::benchkit::BenchReport;
+use hulk::cluster::Fleet;
+use hulk::graph::{max_dense_n, HierarchicalGraph, DENSE_ORACLE_MAX};
+use hulk::models::ModelSpec;
+use hulk::planner::{CostBackend, HulkPlanner, HulkSplitterKind,
+                    PlanContext, Planner, PlannerRegistry};
+use hulk::scenarios::{resolve_scenarios, run_specs_sharing,
+                      ScenarioResult, ScenarioSpec, WorldSharing};
+
+fn report_bytes(results: &[ScenarioResult], suite: &str,
+                placements: bool) -> String
+{
+    let mut report = BenchReport::new(suite);
+    for r in results {
+        if placements {
+            report.extend(r.placements.iter().cloned());
+        } else {
+            report.extend(r.entries.iter().cloned());
+        }
+    }
+    let mut text = report.to_json().render();
+    text.push('\n');
+    text
+}
+
+fn assert_substrate_invisible(specs: &[ScenarioSpec], backend: CostBackend,
+                              suite: &str)
+{
+    let planners = PlannerRegistry::standard();
+    let hier =
+        run_specs_sharing(specs, 0, 1, &planners, backend,
+                          WorldSharing::Shared)
+            .expect("hierarchical-substrate run");
+    let dense =
+        run_specs_sharing(specs, 0, 1, &planners, backend,
+                          WorldSharing::DenseOracle)
+            .expect("dense-oracle run");
+    assert_eq!(report_bytes(&hier, suite, false),
+               report_bytes(&dense, suite, false),
+               "{suite}: scenarios artifact diverged hier vs dense");
+    assert_eq!(report_bytes(&hier, "placements", true),
+               report_bytes(&dense, "placements", true),
+               "{suite}: placements artifact diverged hier vs dense");
+    let rendered = |rs: &[ScenarioResult]| -> Vec<String> {
+        rs.iter().map(|r| r.rendered.clone()).collect()
+    };
+    assert_eq!(rendered(&hier), rendered(&dense),
+               "{suite}: rendered tables diverged hier vs dense");
+}
+
+#[test]
+fn analytic_artifacts_match_the_dense_oracle() {
+    // `all` excludes the heavy scale scenarios, so every spec here is a
+    // ≤220-machine fleet the dense oracle can still build.
+    let (specs, _) = resolve_scenarios(&[], CostBackend::Analytic)
+        .expect("resolve analytic all");
+    assert_substrate_invisible(&specs, CostBackend::Analytic, "scenarios");
+}
+
+#[test]
+fn sim_artifacts_match_the_dense_oracle() {
+    // The Evaluate-cell specs are where the substrate switch actually
+    // bites (the runner builds their worlds); same subset as the
+    // world_cache sim gate.
+    let (specs, _) = resolve_scenarios(
+        &["table1_fleet".to_string(), "planet_scale".to_string(),
+          "sim_vs_analytic".to_string()],
+        CostBackend::Simulated,
+    )
+    .expect("resolve sim subset");
+    assert_substrate_invisible(&specs, CostBackend::Simulated,
+                               "scenarios_cost_sim");
+}
+
+#[test]
+fn global_fleet_plans_without_a_dense_adjacency() {
+    // 100k machines: build the two-level graph, plan region-first, and
+    // prove no code path asked `ClusterGraph::from_fleet` for anything
+    // past the ≤1k oracle ceiling (`max_dense_n` is the process-wide
+    // high-water mark, so this holds across every test in this binary).
+    let fleet = Arc::new(Fleet::synthetic(100_000, 12, 0));
+    let hier = HierarchicalGraph::from_fleet(fleet.clone());
+    assert!(hier.is_coarse(), "100k fleet must stay lazily refined");
+    let mut workload = ModelSpec::paper_four();
+    ModelSpec::sort_largest_first(&mut workload);
+    let ctx = PlanContext::new(&fleet, &hier, &workload,
+                               HulkSplitterKind::Oracle)
+        .with_hier(&hier);
+    let placement = HulkPlanner.plan(&ctx).expect("100k plan");
+    placement.validate_machines(&fleet).expect("machines exist");
+    let assignment = placement.to_assignment();
+    assignment.validate_disjoint(fleet.len()).expect("disjoint");
+    assignment.validate_memory(&fleet, &workload).expect("memory fits");
+    for t in 0..workload.len() {
+        assert!(!placement.machines(t).is_empty(),
+                "task {t} got no machines");
+    }
+    assert!(
+        max_dense_n() <= DENSE_ORACLE_MAX,
+        "dense adjacency of {} nodes was materialized (ceiling {})",
+        max_dense_n(),
+        DENSE_ORACLE_MAX
+    );
+}

@@ -9,7 +9,7 @@
 //! ×4 WAN-degradation fleet.
 
 use hulk::cluster::Fleet;
-use hulk::graph::ClusterGraph;
+use hulk::graph::{ClusterGraph, GraphView};
 use hulk::models::ModelSpec;
 use hulk::parallel::data_parallel::{data_parallel_cost, replica_capable};
 use hulk::parallel::{pipeline_cost, tensor_parallel_cost, IterCost,
@@ -71,12 +71,12 @@ fn ref_system_c(fleet: &Fleet, model: &ModelSpec)
 struct RefOracleSplitter;
 
 impl TaskSplitter for RefOracleSplitter {
-    fn split(&self, fleet: &Fleet, graph: &ClusterGraph,
+    fn split(&self, fleet: &Fleet, graph: &dyn GraphView,
              remaining: &[usize], task: &ModelSpec, _class: usize)
         -> Vec<usize>
     {
-        hulk::scheduler::oracle::grow_group(fleet, graph, remaining, task,
-                                            1.3)
+        hulk::scheduler::oracle::grow_group(&fleet.machines, graph,
+                                            remaining, task, 1.3)
     }
 }
 
