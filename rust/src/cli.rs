@@ -64,6 +64,25 @@ usage: hulk <subcommand> [flags]
              failure is shrunk by halving fleet/workload and reported
              as a minimal seed+shape with the exact repro command,
              exiting non-zero.
+  serve      [--addr HOST:PORT] [--uds PATH] [--cost analytic|sim]
+                 [--batch-window-ms N] [--seed S] [--workers N]
+                 [--read-timeout-ms N]
+             Long-lived placement-as-a-service daemon on the
+             planet-scale fleet (default tcp://127.0.0.1:7711;
+             --uds serves a unix socket instead/in addition).
+             Length-prefixed JSON requests: Place (workload → placement
+             + predicted cost; concurrent requests within the batch
+             window share one GCN forward), Admin join/fail/revoke
+             (live fleet updates through the incremental graph seam —
+             never a world rebuild), Stats, Shutdown.
+  loadgen    [--addr HOST:PORT] --rps N --duration-s S [--seed K]
+                 [--connections C] [--systems a,b,hulk] [--out DIR]
+                 [--shutdown]
+             Drive a running serve daemon with seeded request mixes;
+             writes BENCH_serve.json (serve/p50_place_us,
+             serve/p99_place_us, serve/throughput_rps,
+             serve/batched_forward_speedup). --shutdown stops the
+             daemon afterwards.
   help       Print this grammar.
 
 Flags are `--key value`, `--key=value`, or bare `--key` for booleans."
@@ -81,7 +100,8 @@ pub struct Cli {
 /// argument, so `hulk scenarios run --json table1_fleet` keeps
 /// `table1_fleet` as a positional instead of treating it as the value
 /// of `--json`. (Use `--flag=value` to force a value for one of these.)
-const BOOL_FLAGS: [&str; 4] = ["gnn", "json", "parallel", "check"];
+const BOOL_FLAGS: [&str; 5] =
+    ["gnn", "json", "parallel", "check", "shutdown"];
 
 impl Cli {
     /// Parse `args` (without argv[0]). Flags are `--key value` or
@@ -90,7 +110,7 @@ impl Cli {
     pub fn parse(args: &[String]) -> Result<Cli> {
         let Some(command) = args.first() else {
             bail!("usage: hulk <info|assign|train-gnn|simulate|bench|\
-                   scenarios|help> … (see `hulk help`)");
+                   scenarios|serve|loadgen|help> … (see `hulk help`)");
         };
         let mut flags = HashMap::new();
         let mut positional = Vec::new();
@@ -217,7 +237,7 @@ mod tests {
     fn usage_covers_every_subcommand() {
         let text = usage();
         for sub in ["info", "assign", "train-gnn", "simulate", "bench",
-                    "scenarios", "help"] {
+                    "scenarios", "serve", "loadgen", "help"] {
             assert!(text.contains(sub), "usage() missing {sub}");
         }
         assert!(text.contains("BENCH_scenarios.json"));
@@ -230,5 +250,22 @@ mod tests {
         assert!(text.contains("generate") && text.contains("--check"),
                 "usage() missing the generate grammar");
         assert!(text.contains("generated_sweep"));
+        // The serve/loadgen grammar.
+        assert!(text.contains("--batch-window-ms")
+            && text.contains("--uds"),
+                "usage() missing the serve grammar");
+        assert!(text.contains("--rps") && text.contains("--duration-s")
+            && text.contains("--shutdown"),
+                "usage() missing the loadgen grammar");
+        assert!(text.contains("BENCH_serve.json"));
+    }
+
+    #[test]
+    fn shutdown_is_boolean_and_does_not_swallow_flags() {
+        let cli = Cli::parse(&argv(
+            "loadgen --shutdown --rps 200 --duration-s 5")).unwrap();
+        assert!(cli.flag_bool("shutdown"));
+        assert_eq!(cli.flag_u64("rps", 0).unwrap(), 200);
+        assert_eq!(cli.flag_u64("duration-s", 0).unwrap(), 5);
     }
 }

@@ -1,15 +1,139 @@
-//! Leader metrics: counters and timers exported by the coordinator (and
-//! printed by `hulk simulate`).
+//! Leader metrics: counters, gauges and latency histograms exported by
+//! the coordinator (printed by `hulk simulate`) and by the `hulk serve`
+//! daemon, whose `Stats` reply renders [`Metrics::to_json`] over the
+//! wire. [`SharedMetrics`] is the thread-safe handle the daemon's
+//! connection workers and batcher share.
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
 use crate::util::json::Json;
 
-/// Monotone counters + gauges. BTreeMap for stable rendering order.
+/// Log-bucketed latency histogram: bounded memory (fixed bucket count),
+/// mergeable, with quantiles interpolated inside the winning bucket.
+/// Bucket `i` covers `[GROWTH^i, GROWTH^(i+1))` with `GROWTH = 2^(1/4)`
+/// (~19% resolution per bucket) — values are dimensionless (the serve
+/// daemon feeds microseconds; batch sizes work just as well).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+/// Per-bucket growth factor: 2^(1/4).
+const GROWTH: f64 = 1.189_207_115_002_721;
+/// 160 buckets cover [1, 2^40) ≈ [1 µs, ~12.7 days in µs].
+const BUCKETS: usize = 160;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: vec![0; BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    fn bucket_of(value: f64) -> usize {
+        if value < 1.0 {
+            return 0;
+        }
+        ((value.log2() * 4.0) as usize).min(BUCKETS - 1)
+    }
+
+    pub fn observe(&mut self, value: f64) {
+        if !value.is_finite() {
+            return;
+        }
+        let value = value.max(0.0);
+        self.counts[Self::bucket_of(value)] += 1;
+        self.count += 1;
+        self.sum += value;
+        self.min = self.min.min(value);
+        self.max = self.max.max(value);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Quantile estimate, `q` in [0, 1]: walk buckets to the one holding
+    /// the target rank, interpolate linearly inside it. Clamped to the
+    /// observed min/max so tiny samples don't report bucket edges.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let target = target.max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let lo = GROWTH.powi(i as i32);
+                let hi = lo * GROWTH;
+                let frac = (target - seen) as f64 / c as f64;
+                let est = lo + (hi - lo) * frac;
+                return est.clamp(self.min, self.max);
+            }
+            seen += c;
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("count", Json::Num(self.count as f64));
+        obj.set("mean", Json::Num(self.mean()));
+        obj.set("p50", Json::Num(self.quantile(0.50)));
+        obj.set("p99", Json::Num(self.quantile(0.99)));
+        obj.set("max", Json::Num(if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }));
+        obj
+    }
+}
+
+/// Monotone counters + gauges + histograms. BTreeMap for stable
+/// rendering order.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
 }
 
 impl Metrics {
@@ -29,12 +153,21 @@ impl Metrics {
         self.gauges.insert(name.to_string(), value);
     }
 
+    /// Record one sample into the named histogram (created on first use).
+    pub fn observe(&mut self, name: &str, value: f64) {
+        self.histograms.entry(name.to_string()).or_default().observe(value);
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
     pub fn gauge(&self, name: &str) -> Option<f64> {
         self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
     }
 
     /// Machine-readable dump.
@@ -48,8 +181,13 @@ impl Metrics {
         for (k, v) in &self.gauges {
             gauges.set(k, Json::Num(*v));
         }
+        let mut histograms = Json::obj();
+        for (k, h) in &self.histograms {
+            histograms.set(k, h.to_json());
+        }
         obj.set("counters", counters);
         obj.set("gauges", gauges);
+        obj.set("histograms", histograms);
         obj
     }
 
@@ -62,7 +200,58 @@ impl Metrics {
         for (k, v) in &self.gauges {
             out.push_str(&format!("{k:<32} {v:.3}\n"));
         }
+        for (k, h) in &self.histograms {
+            out.push_str(&format!(
+                "{k:<32} n={} p50={:.1} p99={:.1}\n",
+                h.count(),
+                h.quantile(0.50),
+                h.quantile(0.99)
+            ));
+        }
         out
+    }
+}
+
+/// Thread-safe [`Metrics`] handle: clone freely across the serve
+/// daemon's worker and batcher threads. Every method takes `&self` —
+/// the mutex lives inside.
+#[derive(Clone, Debug, Default)]
+pub struct SharedMetrics(Arc<Mutex<Metrics>>);
+
+impl SharedMetrics {
+    pub fn new() -> SharedMetrics {
+        SharedMetrics::default()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Metrics> {
+        // A panic while holding the lock poisons it; metrics are
+        // monitoring, not correctness, so keep serving the data.
+        self.0.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.lock().inc(name);
+    }
+
+    pub fn add(&self, name: &str, delta: u64) {
+        self.lock().add(name, delta);
+    }
+
+    pub fn set_gauge(&self, name: &str, value: f64) {
+        self.lock().set_gauge(name, value);
+    }
+
+    pub fn observe(&self, name: &str, value: f64) {
+        self.lock().observe(name, value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.lock().counter(name)
+    }
+
+    /// A point-in-time copy (for rendering outside the lock).
+    pub fn snapshot(&self) -> Metrics {
+        self.lock().clone()
     }
 }
 
@@ -94,8 +283,88 @@ mod tests {
         let mut m = Metrics::new();
         m.inc("a");
         m.set_gauge("g", 1.5);
+        m.observe("lat_us", 100.0);
         let s = m.to_json().render();
         assert!(s.contains("\"a\":1"));
         assert!(s.contains("\"g\":1.5"));
+        assert!(s.contains("\"lat_us\":{\"count\":1"));
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_the_data() {
+        let mut h = Histogram::new();
+        for v in 1..=1000 {
+            h.observe(v as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.50);
+        let p99 = h.quantile(0.99);
+        // Log buckets are ~19% wide: generous but meaningful brackets.
+        assert!((400.0..620.0).contains(&p50), "p50 = {p50}");
+        assert!((850.0..=1000.0).contains(&p99), "p99 = {p99}");
+        assert!(p50 <= p99);
+        assert!((h.mean() - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_single_sample_reports_itself() {
+        let mut h = Histogram::new();
+        h.observe(137.0);
+        assert_eq!(h.quantile(0.5), 137.0);
+        assert_eq!(h.quantile(0.99), 137.0);
+        assert_eq!(h.mean(), 137.0);
+    }
+
+    #[test]
+    fn histogram_empty_and_degenerate_inputs() {
+        let mut h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        h.observe(f64::NAN);
+        h.observe(f64::INFINITY);
+        assert_eq!(h.count(), 0, "non-finite samples are dropped");
+        h.observe(0.0); // below bucket 1.0 floor
+        h.observe(-5.0); // clamped to 0
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_equals_sequential() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        for v in 1..500 {
+            let x = (v * 37 % 10_000) as f64;
+            if v % 2 == 0 {
+                a.observe(x);
+            } else {
+                b.observe(x);
+            }
+            all.observe(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.quantile(0.5), all.quantile(0.5));
+        assert_eq!(a.quantile(0.99), all.quantile(0.99));
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_metrics_is_send_sync_and_aggregates_across_threads() {
+        let shared = SharedMetrics::new();
+        std::thread::scope(|scope| {
+            for t in 0..4 {
+                let handle = shared.clone();
+                scope.spawn(move || {
+                    for i in 0..100 {
+                        handle.inc("requests");
+                        handle.observe("lat_us", (t * 100 + i) as f64);
+                    }
+                });
+            }
+        });
+        assert_eq!(shared.counter("requests"), 400);
+        let snap = shared.snapshot();
+        assert_eq!(snap.histogram("lat_us").unwrap().count(), 400);
     }
 }

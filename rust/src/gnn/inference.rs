@@ -154,6 +154,13 @@ pub fn classify_with_graph(classifier: &Classifier, params: &[f32],
 /// class probabilities depend only on those, not on the task, so the
 /// forward pass runs **once** and every per-task `split` reuses it
 /// (Algorithm 1 used to pay a full GCN forward per task).
+///
+/// The serve daemon's batcher stretches the same contract across a
+/// whole request batch: every `Place` in one batch window plans against
+/// the same frozen (fleet, graph), so one splitter instance — hence one
+/// forward — serves them all (`HulkSplitterKind::SharedGnn`). The memo
+/// is tagged with [`GraphView::memo_key`], so reuse across *different*
+/// graphs stays loud in debug builds and self-healing in release.
 pub struct GnnSplitter<'a> {
     pub classifier: &'a Classifier,
     pub params: &'a [f32],
@@ -176,6 +183,13 @@ impl<'a> GnnSplitter<'a> {
         -> GnnSplitter<'a>
     {
         GnnSplitter { classifier, params, probs: OnceLock::new() }
+    }
+
+    /// Has the memoized forward pass run? The serve batcher reads this
+    /// after a batch to count actual GCN forwards (a batch of non-GNN
+    /// requests never triggers one).
+    pub fn forward_ran(&self) -> bool {
+        self.probs.get().is_some()
     }
 
     fn cached_probs(&self, fleet: &Fleet, graph: &dyn GraphView)

@@ -18,6 +18,7 @@ pub mod trainer;
 
 pub use dataset::{make_dataset, LabeledGraph};
 pub use quality::{assignment_quality, cost_vs_random, AssignmentQuality};
-pub use inference::{classify, classify_with_graph, Classifier};
+pub use inference::{classify, classify_with_graph, Classifier,
+                    GnnSplitter};
 pub use reference::{RefGcn, RefGcnConfig};
 pub use trainer::{train_gcn, TrainCurvePoint, TrainerOptions};

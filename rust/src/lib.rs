@@ -8,9 +8,9 @@
 //!   labeling oracle, the paper's Algorithm 1 task assignment, the
 //!   [`planner`] seam (baseline Systems A/B/C, Hulk and its ablations as
 //!   `Planner` implementations behind a typed `Placement` IR), a
-//!   discrete-event execution simulator, disaster recovery and the
-//!   multi-task leader loop. The GCN is *trained and served from Rust*
-//!   through PJRT.
+//!   discrete-event execution simulator, disaster recovery, the
+//!   multi-task leader loop and the [`serve`] placement-as-a-service
+//!   daemon. The GCN is *trained and served from Rust* through PJRT.
 //! - **Layer 2 (python/compile/model.py, build-time only)** — the Hulk GCN
 //!   (edge pooling + GCN stack + masked softmax head), AOT-lowered to HLO
 //!   text artifacts.
@@ -38,6 +38,7 @@ pub mod prop;
 pub mod runtime;
 pub mod scenarios;
 pub mod scheduler;
+pub mod serve;
 pub mod sim;
 pub mod systems;
 pub mod util;

@@ -10,6 +10,9 @@
 //!   `BENCH_scenarios.json` through the benchkit reporting layer), or
 //!   `generate` seeded random property-test cases (`--check` runs the
 //!   planner invariants with shrinking-on-failure).
+//! - `serve`     — the placement-as-a-service daemon (batched GCN
+//!   forwards, live fleet updates over the wire).
+//! - `loadgen`   — drive a running daemon; writes `BENCH_serve.json`.
 //! - `help`      — print the CLI grammar.
 
 use std::path::PathBuf;
@@ -39,6 +42,8 @@ fn main() -> Result<()> {
         "simulate" => cmd_simulate(&cli),
         "bench" => hulk::scenarios::bench::run(&cli.positional, &cli),
         "scenarios" => cmd_scenarios(&cli),
+        "serve" => hulk::serve::run_serve(&cli),
+        "loadgen" => hulk::serve::run_loadgen(&cli),
         "help" | "--help" | "-h" => {
             println!("{}", hulk::cli::usage());
             Ok(())

@@ -102,6 +102,36 @@ impl ModelSpec {
         });
     }
 
+    /// Wire-protocol slug for this catalog model (`hulk serve` Place
+    /// requests name models by slug, not display name). Non-catalog
+    /// specs fall back to the display name.
+    pub fn slug(&self) -> &'static str {
+        match self.name {
+            "OPT (175B)" => "opt_175b",
+            "T5 (11B)" => "t5_11b",
+            "GPT-2 (1.5B)" => "gpt2_xl",
+            "BERT-large (340M)" => "bert_large",
+            "RoBERTa (355M)" => "roberta_large",
+            "XLNet (340M)" => "xlnet_large",
+            other => other,
+        }
+    }
+
+    /// Inverse of [`ModelSpec::slug`]: resolve a wire slug to the
+    /// catalog entry. Unknown slugs return `None` (the daemon turns
+    /// that into a typed `Error` reply rather than a panic).
+    pub fn from_slug(slug: &str) -> Option<ModelSpec> {
+        match slug {
+            "opt_175b" => Some(ModelSpec::opt_175b()),
+            "t5_11b" => Some(ModelSpec::t5_11b()),
+            "gpt2_xl" => Some(ModelSpec::gpt2_xl()),
+            "bert_large" => Some(ModelSpec::bert_large()),
+            "roberta_large" => Some(ModelSpec::roberta_large()),
+            "xlnet_large" => Some(ModelSpec::xlnet_large()),
+            _ => None,
+        }
+    }
+
     /// Fig. 8 workload: the four-model task set of §6.3.
     pub fn paper_four() -> Vec<ModelSpec> {
         vec![
@@ -183,6 +213,15 @@ mod tests {
         ModelSpec::sort_largest_first(&mut a);
         ModelSpec::sort_largest_first(&mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn slug_roundtrips_the_whole_catalog() {
+        for m in ModelSpec::paper_six() {
+            let back = ModelSpec::from_slug(m.slug()).expect("catalog slug");
+            assert_eq!(back, m, "{}", m.slug());
+        }
+        assert!(ModelSpec::from_slug("gpt5").is_none());
     }
 
     #[test]

@@ -25,7 +25,7 @@ use crate::graph::{CsrGraph, GraphView, HierarchicalGraph};
 use crate::models::ModelSpec;
 use crate::parallel::PipelinePlan;
 use crate::scheduler::oracle::grow_group;
-use crate::scheduler::{algorithm1, Algorithm1Error, Assignment,
+use crate::scheduler::{algorithm1_pool, Algorithm1Error, Assignment,
                        TaskSplitter};
 
 use super::{is_canonical, PlanContext, Placement, Planner, PlannerKind,
@@ -33,8 +33,16 @@ use super::{is_canonical, PlanContext, Placement, Planner, PlannerKind,
 
 /// Which splitter `F` drives Algorithm 1.
 pub enum HulkSplitterKind<'a> {
-    /// The trained GCN (production path).
+    /// The trained GCN (production path). A fresh [`GnnSplitter`] is
+    /// built per plan call — one forward pass per call.
     Gnn { classifier: &'a Classifier, params: &'a [f32] },
+    /// A caller-owned [`GnnSplitter`] shared across plan calls against
+    /// the **same frozen (fleet, graph)** — the serve batcher's seam:
+    /// one forward pass serves a whole batch of `Place` requests.
+    /// Placements are byte-identical to [`HulkSplitterKind::Gnn`] with
+    /// the same classifier/params (the probabilities are the same
+    /// memoized forward either way).
+    SharedGnn { splitter: &'a GnnSplitter<'a> },
     /// The oracle partitioner (ablation / artifact-free path).
     Oracle,
 }
@@ -96,9 +104,9 @@ pub fn chain_order(graph: &dyn GraphView, group: &[usize]) -> Vec<usize> {
 }
 
 fn run_algorithm1(fleet: &Fleet, graph: &dyn GraphView, tasks: &[ModelSpec],
-                  f: &dyn TaskSplitter) -> Result<Assignment>
+                  f: &dyn TaskSplitter, pool: &[usize]) -> Result<Assignment>
 {
-    match algorithm1(fleet, graph, tasks, f) {
+    match algorithm1_pool(fleet, graph, tasks, f, pool) {
         Ok(a) => Ok(a),
         Err(Algorithm1Error::MustWait { partial, deferred }) => {
             // The coordinator queues deferred tasks; for planning we
@@ -213,14 +221,25 @@ fn plan_two_phase(ctx: &PlanContext, hier: &HierarchicalGraph,
                   splitter: &HulkSplitterKind) -> Result<Placement>
 {
     // Coarse GCN forward: once per plan call, over one node per region.
-    let coarse_probs: Option<(Vec<f32>, usize)> = match splitter {
+    let gnn_config = match splitter {
         HulkSplitterKind::Gnn { classifier, params } => {
+            Some((*classifier, *params))
+        }
+        HulkSplitterKind::SharedGnn { splitter } => {
+            // The shared splitter memoizes the *fine* forward; the
+            // coarse (≤12-node) forward is cheap enough to run per call.
+            Some((splitter.classifier, splitter.params))
+        }
+        HulkSplitterKind::Oracle => None,
+    };
+    let coarse_probs: Option<(Vec<f32>, usize)> = match gnn_config {
+        Some((classifier, params)) => {
             let reps = hier.region_representatives();
             let probs =
                 classifier.probs_for_graph(params, &reps, hier.coarse())?;
             Some((probs, classifier.n_classes()))
         }
-        HulkSplitterKind::Oracle => None,
+        None => None,
     };
 
     // Line-2 feasibility over the alive fleet.
@@ -369,14 +388,29 @@ fn plan_with_splitter(ctx: &PlanContext, splitter: &HulkSplitterKind)
             return plan_two_phase(ctx, hier, splitter);
         }
     }
+    // The flat path's machine pool: everything, unless the context
+    // carries a hierarchical graph with liveness deltas — then failed
+    // machines are excluded up front, matching plan_two_phase's
+    // `is_alive` filter. All-alive contexts build the identity pool, so
+    // every historical placement is byte-identical.
+    let pool: Vec<usize> = match ctx.hier {
+        Some(h) => {
+            (0..ctx.fleet.len()).filter(|&m| h.is_alive(m)).collect()
+        }
+        None => (0..ctx.fleet.len()).collect(),
+    };
     let assignment = match splitter {
         HulkSplitterKind::Gnn { classifier, params } => {
             let f = GnnSplitter::new(classifier, params);
-            run_algorithm1(ctx.fleet, ctx.graph, ctx.workload, &f)?
+            run_algorithm1(ctx.fleet, ctx.graph, ctx.workload, &f, &pool)?
+        }
+        HulkSplitterKind::SharedGnn { splitter } => {
+            run_algorithm1(ctx.fleet, ctx.graph, ctx.workload, *splitter,
+                           &pool)?
         }
         HulkSplitterKind::Oracle => {
             run_algorithm1(ctx.fleet, ctx.graph, ctx.workload,
-                           &OracleSplitter)?
+                           &OracleSplitter, &pool)?
         }
     };
 

@@ -556,6 +556,67 @@ fn micro(cli: &Cli) -> Result<()> {
     let global_hier = HierarchicalGraph::from_fleet(global.clone());
     b.bench("plan_hulk_global", || scale_plan(&global, &global_hier));
 
+    // `hulk serve` hot path (serve PR satellite). Two rows:
+    // `serve_place_roundtrip_us` — a single Place through a real socket
+    // and an in-process daemon (framing + parse + plan + reply);
+    // `gcn_forward_batched_8_vs_1x8` — 8 Place requests through ONE
+    // shared GnnSplitter forward vs 8 fresh splitters (8 forwards) on
+    // the same live world: the batcher's coalescing win as a ratio,
+    // asserted < 1 so CI fails if batching ever stops paying.
+    use crate::gnn::GnnSplitter;
+    use crate::serve::{default_classifier, LiveWorld, PlaceRequest,
+                       ServeConfig, Server};
+    let serve_cfg = ServeConfig { seed,
+                                  batch_window_ms: 0,
+                                  ..ServeConfig::default() };
+    let server = Server::spawn(&serve_cfg)?;
+    let addr = server.addr().expect("tcp daemon has an address");
+    let place_req =
+        br#"{"op":"place","workload":[{"model":"bert_large","batch":256}]}"#;
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    let rt = |s: &mut std::net::TcpStream| {
+        crate::serve::roundtrip(s, place_req)
+            .map_err(|e| anyhow::anyhow!("serve round-trip: {e:?}"))
+    };
+    rt(&mut stream)?; // warmup: the first request pays the GCN forward
+    let iters = 64u32;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        rt(&mut stream)?;
+    }
+    let roundtrip_us =
+        t0.elapsed().as_secs_f64() * 1e6 / f64::from(iters);
+    drop(stream);
+    server.stop();
+    server.join();
+    println!("serve Place round-trip ≈ {roundtrip_us:.0} µs \
+              ({iters} iters, batch window 0)");
+
+    let live = LiveWorld::planet(seed, CostBackend::Analytic);
+    let (classifier, params) = default_classifier(seed);
+    let batch_req = PlaceRequest { workload: tasks.clone(),
+                                   systems: vec!["hulk".to_string()] };
+    let t0 = std::time::Instant::now();
+    let shared = GnnSplitter::new(&classifier, &params);
+    for _ in 0..8 {
+        std::hint::black_box(live.plan_place(&batch_req, &shared));
+    }
+    let batched = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    for _ in 0..8 {
+        let fresh = GnnSplitter::new(&classifier, &params);
+        std::hint::black_box(live.plan_place(&batch_req, &fresh));
+    }
+    let unbatched = t0.elapsed().as_secs_f64();
+    let batched_ratio = batched / unbatched;
+    println!("8 batched Place (1 forward) vs 8 unbatched (8 forwards): \
+              {:.1} ms vs {:.1} ms ({batched_ratio:.2}x)",
+             batched * 1e3, unbatched * 1e3);
+    anyhow::ensure!(
+        batched_ratio < 1.0,
+        "a coalesced batch of 8 must beat 8 sequential forwards \
+         (got {batched_ratio:.2}x)");
+
     if cli.flag_bool("json") {
         let out = std::path::PathBuf::from(cli.flag("out").unwrap_or("."));
         let mut report = BenchReport::new("micro");
@@ -566,6 +627,12 @@ fn micro(cli: &Cli) -> Result<()> {
                                     planet_events_per_sec, "events/s"));
         report.push(BenchEntry::new("micro/sim_planet_events",
                                     planet_events as f64, "count"));
+        // Serve hot-path rows (the loadgen-driven serve/* rows live in
+        // BENCH_serve.json; these two are daemon-free lower bounds).
+        report.push(BenchEntry::new("micro/serve_place_roundtrip_us",
+                                    roundtrip_us, "us"));
+        report.push(BenchEntry::new("micro/gcn_forward_batched_8_vs_1x8",
+                                    batched_ratio, "x"));
         let path = report.write(&out)?;
         println!("wrote {}", path.display());
     }

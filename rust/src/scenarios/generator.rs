@@ -200,34 +200,7 @@ pub fn generate_case(seed: u64, index: usize) -> GenCase {
     }
     let fleet = Fleet::new(machines, wan);
 
-    // Workload: bert_large always participates (it fits the smallest
-    // generatable machine, so every planner family has at least one
-    // placeable task), plus up to two more catalog models admitted
-    // under a 1.6× aggregate-memory budget — above Algorithm 1's 1.2×
-    // headroom, so declines stay the exception. Batch sizes shrink on
-    // some picks to decorrelate cases that drew the same models.
-    let catalog = [
-        ModelSpec::t5_11b(),
-        ModelSpec::gpt2_xl(),
-        ModelSpec::roberta_large(),
-        ModelSpec::xlnet_large(),
-        ModelSpec::bert_large(),
-    ];
-    let budget = fleet.total_memory_gb();
-    let mut workload = vec![ModelSpec::bert_large()];
-    let mut used = workload[0].train_gb();
-    for _ in 0..rng.range(0, 2) {
-        let pick = rng.choice(&catalog).clone();
-        if (used + pick.train_gb()) * 1.6 <= budget {
-            used += pick.train_gb();
-            workload.push(pick);
-        }
-    }
-    for m in workload.iter_mut() {
-        if rng.chance(0.3) {
-            m.batch = (m.batch / 2).max(8);
-        }
-    }
+    let workload = sample_workload(&mut rng, fleet.total_memory_gb());
 
     // Failure script: up to two spot revocations, capped so at least
     // three machines survive (replanning needs a fleet to plan on).
@@ -248,6 +221,45 @@ pub fn generate_case(seed: u64, index: usize) -> GenCase {
     sort_script(&mut failures);
 
     GenCase { seed, index, fleet, workload, failures }
+}
+
+/// Draw a seeded workload against an aggregate-memory budget (GB).
+///
+/// bert_large always participates (it fits the smallest generatable
+/// machine, so every planner family has at least one placeable task),
+/// plus up to two more catalog models admitted under a 1.6× budget —
+/// above Algorithm 1's 1.2× headroom, so declines stay the exception.
+/// Batch sizes shrink on some picks to decorrelate draws that picked
+/// the same models.
+///
+/// Extracted from [`generate_case`] so `hulk loadgen` can replay the
+/// exact same request mixes against a live daemon; the rng call
+/// sequence is part of the generator's determinism contract (the
+/// `bench-columns-vs-base` CI gate pins BENCH_scenarios.json
+/// byte-for-byte), so any reordering here is a breaking change.
+pub fn sample_workload(rng: &mut Rng, budget_gb: f64) -> Vec<ModelSpec> {
+    let catalog = [
+        ModelSpec::t5_11b(),
+        ModelSpec::gpt2_xl(),
+        ModelSpec::roberta_large(),
+        ModelSpec::xlnet_large(),
+        ModelSpec::bert_large(),
+    ];
+    let mut workload = vec![ModelSpec::bert_large()];
+    let mut used = workload[0].train_gb();
+    for _ in 0..rng.range(0, 2) {
+        let pick = rng.choice(&catalog).clone();
+        if (used + pick.train_gb()) * 1.6 <= budget_gb {
+            used += pick.train_gb();
+            workload.push(pick);
+        }
+    }
+    for m in workload.iter_mut() {
+        if rng.chance(0.3) {
+            m.batch = (m.batch / 2).max(8);
+        }
+    }
+    workload
 }
 
 /// Tunables for [`check_case`].

@@ -64,16 +64,30 @@ fn group_gb(fleet: &Fleet, group: &[usize]) -> f64 {
     group.iter().map(|&i| fleet.machines[i].total_memory_gb()).sum()
 }
 
-/// Run Algorithm 1. Tasks are processed in the order given (the paper
-/// feeds them largest-first; the Hulk planner's `PlanContext` contract
-/// guarantees the sorting).
+/// Run Algorithm 1 over the whole fleet. Tasks are processed in the
+/// order given (the paper feeds them largest-first; the Hulk planner's
+/// `PlanContext` contract guarantees the sorting).
 pub fn algorithm1(fleet: &Fleet, graph: &dyn GraphView,
                   tasks: &[ModelSpec], splitter: &dyn TaskSplitter)
     -> Result<Assignment, Algorithm1Error>
 {
-    // Line 2: global feasibility.
+    let pool: Vec<usize> = (0..fleet.len()).collect();
+    algorithm1_pool(fleet, graph, tasks, splitter, &pool)
+}
+
+/// [`algorithm1`] restricted to an initial machine pool — the seam the
+/// live-fleet serve path uses to keep failed machines out of every
+/// split. With the full pool `0..fleet.len()` the behavior (including
+/// the f64 summation order of the line-2 feasibility check) is
+/// byte-identical to the historical whole-fleet entry point.
+pub fn algorithm1_pool(fleet: &Fleet, graph: &dyn GraphView,
+                       tasks: &[ModelSpec], splitter: &dyn TaskSplitter,
+                       pool: &[usize])
+    -> Result<Assignment, Algorithm1Error>
+{
+    // Line 2: global feasibility over the pool.
     let required: f64 = tasks.iter().map(|t| t.train_gb()).sum();
-    let available = fleet.total_memory_gb();
+    let available = group_gb(fleet, pool);
     if available < required {
         return Err(Algorithm1Error::InsufficientResources {
             required_gb: required,
@@ -88,8 +102,11 @@ pub fn algorithm1(fleet: &Fleet, graph: &dyn GraphView,
     // ordered `remaining` list is kept in sync for the splitter API and
     // preserves exactly the iteration order the scan-based version had.
     let n = fleet.len();
-    let mut in_pool = vec![true; n];
-    let mut remaining: Vec<usize> = (0..n).collect();
+    let mut in_pool = vec![false; n];
+    for &m in pool {
+        in_pool[m] = true;
+    }
+    let mut remaining: Vec<usize> = pool.to_vec();
     let mut groups: Vec<Vec<usize>> = vec![Vec::new(); tasks.len()];
     let mut carry: Vec<usize> = Vec::new(); // the C of Algorithm 1
     let mut deferred: Vec<usize> = Vec::new();
@@ -317,6 +334,53 @@ mod tests {
                     assert_eq!(fast, slow, "divergence on {} servers",
                                fleet.len());
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn full_pool_matches_whole_fleet_entry_point() {
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let tasks = ModelSpec::paper_four();
+        let pool: Vec<usize> = (0..fleet.len()).collect();
+        assert_eq!(algorithm1(&fleet, &graph, &tasks, &OracleSplitter),
+                   algorithm1_pool(&fleet, &graph, &tasks, &OracleSplitter,
+                                   &pool));
+    }
+
+    #[test]
+    fn restricted_pool_never_assigns_excluded_machines() {
+        let fleet = Fleet::paper_evaluation(0);
+        let graph = ClusterGraph::from_fleet(&fleet);
+        let tasks = vec![ModelSpec::t5_11b(), ModelSpec::gpt2_xl()];
+        // Exclude machines 0..5 (a "failed" slice of the fleet).
+        let pool: Vec<usize> = (5..fleet.len()).collect();
+        let a = algorithm1_pool(&fleet, &graph, &tasks, &OracleSplitter,
+                                &pool)
+            .expect("46-machine fleet minus 5 still plans two mid tasks");
+        for g in &a.groups {
+            assert!(!g.is_empty());
+            assert!(g.iter().all(|&m| m >= 5),
+                    "excluded machine assigned: {g:?}");
+        }
+        // Even a splitter that proposes excluded ids gets them filtered.
+        struct DefiantSplitter;
+        impl TaskSplitter for DefiantSplitter {
+            fn split(&self, _f: &Fleet, _g: &dyn GraphView,
+                     remaining: &[usize], _t: &ModelSpec, _c: usize)
+                -> Vec<usize>
+            {
+                let mut v = vec![0, 1, 2]; // outside the pool
+                v.extend(remaining.iter().copied().take(12));
+                v
+            }
+        }
+        if let Ok(a) = algorithm1_pool(&fleet, &graph, &tasks,
+                                       &DefiantSplitter, &pool)
+        {
+            for g in &a.groups {
+                assert!(g.iter().all(|&m| m >= 5), "pool breached: {g:?}");
             }
         }
     }

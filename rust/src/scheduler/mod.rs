@@ -12,6 +12,7 @@ pub mod algorithm1;
 pub mod assignment;
 pub mod oracle;
 
-pub use algorithm1::{algorithm1, Algorithm1Error, TaskSplitter};
+pub use algorithm1::{algorithm1, algorithm1_pool, Algorithm1Error,
+                     TaskSplitter};
 pub use assignment::Assignment;
 pub use oracle::{oracle_partition, OracleOptions};

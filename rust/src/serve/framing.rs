@@ -1,0 +1,158 @@
+//! Length-prefixed frame I/O for the `hulk serve` wire protocol.
+//!
+//! Every message — request or reply — is one frame: a 4-byte big-endian
+//! `u32` payload length followed by that many bytes of UTF-8 JSON. The
+//! framing layer is deliberately dumb: it moves byte buffers and
+//! classifies failures; what the bytes *mean* is [`super::protocol`]'s
+//! job.
+//!
+//! Failure taxonomy (drives the daemon's keep-alive policy):
+//! - A frame that *arrives* but doesn't parse (empty payload, bad UTF-8,
+//!   malformed JSON, unknown op) is the client's problem, not the
+//!   stream's — the daemon answers with a typed `Error` reply and keeps
+//!   the connection open.
+//! - [`FrameError::Oversized`] means the declared length exceeds
+//!   [`MAX_FRAME`]. The payload is never read, so the stream position is
+//!   no longer trustworthy: the daemon sends one `Error` reply and
+//!   closes.
+//! - [`FrameError::Closed`] / [`FrameError::Timeout`] / io errors are
+//!   stream-fatal: close without a reply (there may be nobody listening,
+//!   and a half-read frame can't be resynchronized anyway).
+
+use std::io::{self, Read, Write};
+
+/// Largest accepted payload (1 MiB). Wire requests are small (a Place
+/// is a few hundred bytes); the cap exists so a corrupt or hostile
+/// length prefix cannot make the daemon allocate gigabytes.
+pub const MAX_FRAME: u32 = 1 << 20;
+
+/// Why a frame could not be read. See the module docs for which
+/// variants are recoverable (none — all four close the connection; the
+/// recoverable failures are *parse* failures, which yield a frame).
+#[derive(Debug)]
+pub enum FrameError {
+    /// Peer closed the stream mid-frame (clean EOF between frames is
+    /// `Ok(None)`, not an error).
+    Closed,
+    /// The read timed out — a stalled client must not pin a worker.
+    Timeout,
+    /// Declared payload length exceeds [`MAX_FRAME`]; the stream is
+    /// desynchronized from here on.
+    Oversized(u32),
+    Io(io::Error),
+}
+
+impl From<io::Error> for FrameError {
+    fn from(e: io::Error) -> FrameError {
+        match e.kind() {
+            io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+                FrameError::Timeout
+            }
+            _ => FrameError::Io(e),
+        }
+    }
+}
+
+/// Read one frame. `Ok(None)` is a clean end-of-stream (the peer closed
+/// between frames); a zero-length frame is `Ok(Some(vec![]))` — it
+/// arrives intact, so the protocol layer answers it with a typed error
+/// instead of dropping the connection. Partial reads (TCP segmentation,
+/// a client that writes the header and payload separately) are
+/// reassembled here.
+pub fn read_frame(stream: &mut impl Read)
+    -> Result<Option<Vec<u8>>, FrameError>
+{
+    let mut header = [0u8; 4];
+    let mut got = 0;
+    while got < header.len() {
+        match stream.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err(FrameError::Closed),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_be_bytes(header);
+    if len > MAX_FRAME {
+        return Err(FrameError::Oversized(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    let mut got = 0;
+    while got < payload.len() {
+        match stream.read(&mut payload[got..]) {
+            Ok(0) => return Err(FrameError::Closed),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Some(payload))
+}
+
+/// Write one frame (length prefix + payload) and flush.
+pub fn write_frame(stream: &mut impl Write, payload: &[u8])
+    -> io::Result<()>
+{
+    debug_assert!(payload.len() as u64 <= MAX_FRAME as u64,
+                  "daemon-built frames always fit MAX_FRAME");
+    stream.write_all(&(payload.len() as u32).to_be_bytes())?;
+    stream.write_all(payload)?;
+    stream.flush()
+}
+
+/// Client-side convenience: send one frame, wait for the reply frame.
+/// Used by `hulk loadgen` and the round-trip tests.
+pub fn roundtrip(stream: &mut (impl Read + Write), payload: &[u8])
+    -> Result<Vec<u8>, FrameError>
+{
+    write_frame(stream, payload)?;
+    match read_frame(stream)? {
+        Some(reply) => Ok(reply),
+        None => Err(FrameError::Closed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_roundtrip_through_a_buffer() {
+        let mut buf = Cursor::new(Vec::new());
+        write_frame(&mut buf, b"{\"op\":\"stats\"}").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        buf.set_position(0);
+        assert_eq!(read_frame(&mut buf).unwrap().unwrap(),
+                   b"{\"op\":\"stats\"}");
+        // Zero-length frames arrive intact (protocol-level error, not
+        // a framing error).
+        assert_eq!(read_frame(&mut buf).unwrap().unwrap(), b"");
+        // Clean EOF between frames.
+        assert!(read_frame(&mut buf).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_header_is_rejected_without_allocating() {
+        let mut bytes = (MAX_FRAME + 1).to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"xx");
+        let mut buf = Cursor::new(bytes);
+        match read_frame(&mut buf) {
+            Err(FrameError::Oversized(n)) => assert_eq!(n, MAX_FRAME + 1),
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_header_and_payload_are_closed_not_panics() {
+        // Two bytes of a four-byte header.
+        let mut buf = Cursor::new(vec![0u8, 0]);
+        assert!(matches!(read_frame(&mut buf), Err(FrameError::Closed)));
+        // Full header declaring 8 bytes, only 3 present.
+        let mut bytes = 8u32.to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"abc");
+        let mut buf = Cursor::new(bytes);
+        assert!(matches!(read_frame(&mut buf), Err(FrameError::Closed)));
+    }
+}

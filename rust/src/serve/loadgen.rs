@@ -1,0 +1,284 @@
+//! `hulk loadgen` — a seeded closed-loop load generator for the serve
+//! daemon, reporting latency/throughput rows in the standard benchkit
+//! shape (`BENCH_serve.json`).
+//!
+//! Request mix: each connection thread forks the seed and draws
+//! workloads from the same seeded sampler the scenario generator uses
+//! ([`sample_workload`]), budgeted by the daemon's actual fleet memory
+//! (probed via `Stats` up front) — so the mix scales with whatever
+//! fleet the daemon is serving.
+//!
+//! Pacing is open-ish: each thread targets `rps / connections` and
+//! sleeps to its schedule, but never skips a request — if the daemon
+//! falls behind, measured throughput drops below the target instead of
+//! silently thinning the load.
+//!
+//! Reported rows:
+//! - `serve/p50_place_us`, `serve/p99_place_us` — client-observed
+//!   round-trip latency (includes the batch window by design: that is
+//!   the price of coalescing).
+//! - `serve/throughput_rps` — successful replies / wall-clock.
+//! - `serve/batched_forward_speedup` — `place_requests / gcn_forwards`
+//!   from the daemon's own counters: how many placements each GCN
+//!   forward amortized over (1.0 = no coalescing benefit).
+
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::benchkit::{BenchEntry, BenchReport};
+use crate::cli::Cli;
+use crate::models::ModelSpec;
+use crate::scenarios::sample_workload;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile_sorted;
+
+use super::framing::roundtrip;
+
+/// Load-generator configuration (CLI: `hulk loadgen`).
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    pub addr: String,
+    pub rps: u64,
+    pub duration_s: u64,
+    pub seed: u64,
+    /// Directory `BENCH_serve.json` is written to.
+    pub out: PathBuf,
+    /// `--systems` CSV forwarded in every Place request (`None` = the
+    /// daemon default, hulk only).
+    pub systems: Option<String>,
+    /// Send `{"op":"shutdown"}` after the run (CI smoke uses this to
+    /// stop the background daemon).
+    pub shutdown: bool,
+    /// Client connections; `0` = auto (scales with rps, capped at 8).
+    pub connections: usize,
+}
+
+/// What one run measured; every field also lands in the JSON rows or
+/// the stdout summary.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadgenReport {
+    pub sent: u64,
+    pub ok: u64,
+    pub errors: u64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub throughput_rps: f64,
+    pub place_requests: f64,
+    pub gcn_forwards: f64,
+    pub batched_forward_speedup: f64,
+}
+
+/// Drive the daemon at `config.addr` and write `BENCH_serve.json`.
+pub fn run(config: &LoadgenConfig) -> Result<LoadgenReport> {
+    anyhow::ensure!(config.rps >= 1, "--rps must be >= 1");
+    anyhow::ensure!(config.duration_s >= 1, "--duration-s must be >= 1");
+
+    // Probe the daemon: fleet memory budgets the workload sampler.
+    let stats = fetch_stats(&config.addr)?;
+    let budget_gb = stats
+        .get("fleet_memory_gb")
+        .and_then(Json::as_f64)
+        .context("stats reply missing fleet_memory_gb")?;
+
+    let connections = if config.connections > 0 {
+        config.connections
+    } else {
+        ((config.rps / 200) as usize + 1).min(8)
+    };
+    let interval =
+        Duration::from_secs_f64(connections as f64 / config.rps as f64);
+    let duration = Duration::from_secs(config.duration_s);
+    let started = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..connections {
+        let addr = config.addr.clone();
+        let systems = config.systems.clone();
+        let seed = config.seed;
+        handles.push(thread::spawn(move || -> (Vec<f64>, u64, u64) {
+            let mut rng = Rng::new(seed ^ 0x4C4F_4144) // "LOAD"
+                .fork(c as u64);
+            let Ok(mut stream) = TcpStream::connect(&addr) else {
+                return (Vec::new(), 0, 1);
+            };
+            let mut latencies = Vec::new();
+            let (mut sent, mut errors) = (0u64, 0u64);
+            let thread_start = Instant::now();
+            let mut next = thread_start;
+            while thread_start.elapsed() < duration {
+                let workload = sample_workload(&mut rng, budget_gb);
+                let request = place_request(&workload, systems.as_deref());
+                let t0 = Instant::now();
+                sent += 1;
+                match roundtrip(&mut stream, request.as_bytes()) {
+                    Ok(reply) if reply.starts_with(b"{\"ok\":true") => {
+                        latencies.push(t0.elapsed().as_micros() as f64);
+                    }
+                    Ok(_) => errors += 1,
+                    Err(_) => {
+                        errors += 1;
+                        break; // connection gone; stop this thread
+                    }
+                }
+                next += interval;
+                let now = Instant::now();
+                if next > now {
+                    thread::sleep(next - now);
+                } else {
+                    next = now; // behind schedule: don't burst to catch up
+                }
+            }
+            (latencies, sent, errors)
+        }));
+    }
+
+    let mut latencies = Vec::new();
+    let (mut sent, mut errors) = (0u64, 0u64);
+    for h in handles {
+        let (lat, s, e) = h.join().expect("loadgen thread panicked");
+        latencies.extend(lat);
+        sent += s;
+        errors += e;
+    }
+    let elapsed = started.elapsed().as_secs_f64();
+    let ok = latencies.len() as u64;
+    latencies.sort_by(f64::total_cmp);
+    let (p50_us, p99_us) = if latencies.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (percentile_sorted(&latencies, 50.0),
+         percentile_sorted(&latencies, 99.0))
+    };
+    let throughput_rps = ok as f64 / elapsed.max(1e-9);
+
+    // The daemon's own counters give the coalescing ratio.
+    let stats = fetch_stats(&config.addr)?;
+    let counter = |name: &str| -> f64 {
+        stats
+            .get("metrics")
+            .and_then(|m| m.get("counters"))
+            .and_then(|c| c.get(name))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    let place_requests = counter("place_requests");
+    let gcn_forwards = counter("gcn_forwards");
+    let batched_forward_speedup =
+        place_requests / gcn_forwards.max(1.0);
+
+    if config.shutdown {
+        let mut stream = TcpStream::connect(&config.addr)?;
+        let _ = roundtrip(&mut stream, b"{\"op\":\"shutdown\"}");
+    }
+
+    let mut report = BenchReport::new("serve");
+    report.push(BenchEntry::new("serve/p50_place_us", p50_us, "us"));
+    report.push(BenchEntry::new("serve/p99_place_us", p99_us, "us"));
+    report.push(BenchEntry::new("serve/throughput_rps", throughput_rps,
+                                "req/s"));
+    report.push(BenchEntry::new("serve/batched_forward_speedup",
+                                batched_forward_speedup, "x"));
+    let path = report.write(&config.out)?;
+    println!("wrote {} ({} entries)", path.display(),
+             report.entries.len());
+
+    Ok(LoadgenReport { sent, ok, errors, p50_us, p99_us,
+                       throughput_rps, place_requests, gcn_forwards,
+                       batched_forward_speedup })
+}
+
+fn fetch_stats(addr: &str) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to hulk serve at {addr}"))?;
+    let reply = roundtrip(&mut stream, b"{\"op\":\"stats\"}")
+        .map_err(|e| anyhow::anyhow!("stats round-trip failed: {e:?}"))?;
+    let text = String::from_utf8(reply)
+        .context("stats reply is not UTF-8")?;
+    Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("stats reply unparsable: {e}"))
+}
+
+/// Render one Place request for `workload` (always shipping explicit
+/// batch sizes so the daemon replans exactly what the sampler drew).
+fn place_request(workload: &[ModelSpec], systems: Option<&str>) -> String {
+    let mut req = Json::obj();
+    req.set("op", Json::from("place"));
+    let mut wl = Json::arr();
+    for m in workload {
+        let mut item = Json::obj();
+        item.set("model", Json::from(m.slug()));
+        item.set("batch", Json::from(m.batch));
+        wl.push(item);
+    }
+    req.set("workload", wl);
+    if let Some(csv) = systems {
+        let mut arr = Json::arr();
+        for s in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            arr.push(Json::from(s));
+        }
+        req.set("systems", arr);
+    }
+    req.render()
+}
+
+/// `hulk loadgen` CLI entry.
+pub fn run_loadgen(cli: &Cli) -> Result<()> {
+    let config = LoadgenConfig {
+        addr: cli.flag("addr").unwrap_or("127.0.0.1:7711").to_string(),
+        rps: cli.flag_u64("rps", 200)?,
+        duration_s: cli.flag_u64("duration-s", 5)?,
+        seed: cli.flag_u64("seed", 0)?,
+        out: PathBuf::from(cli.flag("out").unwrap_or(".")),
+        systems: cli.flag("systems").map(str::to_string),
+        shutdown: cli.flag_bool("shutdown"),
+        connections: cli.flag_u64("connections", 0)? as usize,
+    };
+    let r = run(&config)?;
+    println!(
+        "loadgen: {} sent, {} ok, {} errors over {}s at target {} rps \
+         ({} connections)",
+        r.sent, r.ok, r.errors, config.duration_s, config.rps,
+        if config.connections > 0 {
+            config.connections
+        } else {
+            ((config.rps / 200) as usize + 1).min(8)
+        });
+    println!("  p50 {:.0}us  p99 {:.0}us  throughput {:.0} req/s",
+             r.p50_us, r.p99_us, r.throughput_rps);
+    println!("  daemon counters: {} placements / {} GCN forwards = \
+              {:.1}x batched-forward amortization",
+             r.place_requests, r.gcn_forwards, r.batched_forward_speedup);
+    if r.ok == 0 {
+        anyhow::bail!("loadgen got zero successful replies");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn place_request_renders_slugs_batches_and_systems() {
+        let wl = vec![ModelSpec::t5_11b(), ModelSpec::bert_large()];
+        let req = place_request(&wl, Some("hulk, a"));
+        let parsed = Json::parse(&req).unwrap();
+        assert_eq!(parsed.get("op").and_then(Json::as_str), Some("place"));
+        let items = parsed.get("workload").and_then(Json::as_arr).unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[0].get("model").and_then(Json::as_str),
+                   Some("t5_11b"));
+        assert_eq!(items[0].get("batch").and_then(Json::as_usize),
+                   Some(128));
+        let systems = parsed.get("systems").and_then(Json::as_arr).unwrap();
+        assert_eq!(systems.len(), 2);
+        assert_eq!(systems[1].as_str(), Some("a"));
+        // No systems field when not requested.
+        let req = place_request(&wl, None);
+        assert!(Json::parse(&req).unwrap().get("systems").is_none());
+    }
+}

@@ -1,0 +1,41 @@
+//! `hulk serve` — placement-as-a-service: a long-lived daemon that owns
+//! one live fleet world and answers placement queries over a
+//! length-prefixed JSON protocol, with request batching (one GCN
+//! forward per batch window) and live fleet updates through the
+//! incremental graph seam.
+//!
+//! - [`framing`]  — 4-byte big-endian length prefix + JSON payload;
+//!   the recoverable-vs-fatal error taxonomy.
+//! - [`protocol`] — `Place` / `Admin{Join,Fail,Revoke}` / `Stats` /
+//!   `Shutdown` parsing and the typed error reply.
+//! - [`state`]    — [`LiveWorld`]: fleet + [`HierarchicalGraph`]
+//!   mutated only through `apply_join`/`apply_failure` (never rebuilt),
+//!   and the deterministic `Place` reply builder.
+//! - [`server`]   — accept loop, worker pool, and the batcher thread
+//!   that coalesces concurrent `Place` requests onto one shared
+//!   [`GnnSplitter`] forward (`HulkSplitterKind::SharedGnn`).
+//! - [`loadgen`]  — `hulk loadgen`: seeded request mixes, µs latency
+//!   percentiles, `BENCH_serve.json`.
+//!
+//! The contract the round-trip tests pin: replies are deterministic in
+//! the world state (wall-clock lives only in metrics), so a batched
+//! answer is byte-identical to the unbatched answer, and a single
+//! served answer is byte-identical to calling the planner directly on
+//! an equal world.
+//!
+//! [`HierarchicalGraph`]: crate::graph::HierarchicalGraph
+//! [`GnnSplitter`]: crate::gnn::GnnSplitter
+
+pub mod framing;
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+pub mod state;
+
+pub use framing::{read_frame, roundtrip, write_frame, FrameError,
+                  MAX_FRAME};
+pub use loadgen::{run_loadgen, LoadgenConfig, LoadgenReport};
+pub use protocol::{error_reply, parse_request, AdminOp, PlaceRequest,
+                   Request};
+pub use server::{run_serve, ServeConfig, Server};
+pub use state::{default_classifier, LiveWorld, SERVE_SLOTS};

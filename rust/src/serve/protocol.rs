@@ -1,0 +1,298 @@
+//! The `hulk serve` wire protocol: JSON request parsing and typed
+//! replies.
+//!
+//! A request is one JSON object with an `"op"` field:
+//!
+//! | op         | fields                                               |
+//! |------------|------------------------------------------------------|
+//! | `place`    | `workload`: `[{"model": slug, "batch"?: N}]`, `systems`?: `[slug]` (default `["hulk"]`) |
+//! | `admin`    | `action`: `join` (`region`, `gpu`, `n_gpus`) \| `fail` / `revoke` (`machine`) |
+//! | `stats`    | —                                                    |
+//! | `shutdown` | —                                                    |
+//!
+//! Model slugs come from [`ModelSpec::slug`]; region and GPU names are
+//! the display names `hulk info` prints. Every parse failure is a
+//! `String` the daemon wraps into the typed error reply
+//! ([`error_reply`]) — the connection stays open, the daemon never
+//! panics on wire input.
+
+use crate::cluster::{GpuModel, Region};
+use crate::models::ModelSpec;
+use crate::util::json::Json;
+
+/// One parsed request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    Place(PlaceRequest),
+    Admin(AdminOp),
+    Stats,
+    Shutdown,
+}
+
+/// A placement query. The workload is already canonicalized
+/// ([`ModelSpec::sort_largest_first`]) so `PlanContext` accepts it
+/// as-is and task indices in the reply follow canonical order.
+#[derive(Clone, Debug)]
+pub struct PlaceRequest {
+    pub workload: Vec<ModelSpec>,
+    /// Planner slugs to answer with, catalog order (the registry
+    /// resolves shorthand like `a` for `system_a`).
+    pub systems: Vec<String>,
+}
+
+/// A live fleet mutation. `Revoke` is a spot-instance revocation —
+/// operationally identical to `Fail` (the machine keeps its id, drops
+/// out of every weight and pool), tracked under its own counter.
+#[derive(Clone, Copy, Debug)]
+pub enum AdminOp {
+    Join { region: Region, gpu: GpuModel, n_gpus: usize },
+    Fail { machine: usize },
+    Revoke { machine: usize },
+}
+
+/// Largest `n_gpus` a join may claim (matches the synthetic fleet
+/// generator's ceiling; a typo like `n_gpus: 80000` should be a typed
+/// error, not a fleet-distorting machine).
+pub const MAX_JOIN_GPUS: usize = 64;
+
+/// Parse one frame payload into a [`Request`]. Every failure mode —
+/// empty frame, bad UTF-8, malformed JSON, missing/unknown fields —
+/// returns a message for [`error_reply`].
+pub fn parse_request(payload: &[u8]) -> Result<Request, String> {
+    if payload.is_empty() {
+        return Err("empty frame (a request is a JSON object with an \
+                    \"op\" field)".to_string());
+    }
+    let text = std::str::from_utf8(payload)
+        .map_err(|_| "frame payload is not UTF-8".to_string())?;
+    let json = Json::parse(text).map_err(|e| format!("malformed JSON: {e}"))?;
+    let op = json
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "request needs a string \"op\" field \
+                        (place|admin|stats|shutdown)".to_string())?;
+    match op {
+        "place" => parse_place(&json).map(Request::Place),
+        "admin" => parse_admin(&json).map(Request::Admin),
+        "stats" => Ok(Request::Stats),
+        "shutdown" => Ok(Request::Shutdown),
+        other => Err(format!(
+            "unknown op {other:?} (place|admin|stats|shutdown)")),
+    }
+}
+
+fn parse_place(json: &Json) -> Result<PlaceRequest, String> {
+    let items = json
+        .get("workload")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "place needs a \"workload\" array of \
+                        {\"model\": slug} items".to_string())?;
+    if items.is_empty() {
+        return Err("\"workload\" must not be empty".to_string());
+    }
+    let mut workload = Vec::with_capacity(items.len());
+    for item in items {
+        let slug = item
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "every workload item needs a string \
+                            \"model\" slug".to_string())?;
+        let mut spec = ModelSpec::from_slug(slug).ok_or_else(|| {
+            let known: Vec<&str> =
+                ModelSpec::paper_six().iter().map(|m| m.slug()).collect();
+            format!("unknown model slug {slug:?} (known: {})",
+                    known.join(", "))
+        })?;
+        if let Some(batch) = item.get("batch") {
+            let b = batch.as_usize().ok_or_else(|| {
+                format!("\"batch\" for {slug} must be a positive integer")
+            })?;
+            if b == 0 {
+                return Err(format!("\"batch\" for {slug} must be >= 1"));
+            }
+            spec.batch = b;
+        }
+        workload.push(spec);
+    }
+    ModelSpec::sort_largest_first(&mut workload);
+    let systems = match json.get("systems") {
+        None => vec!["hulk".to_string()],
+        Some(v) => {
+            let arr = v.as_arr().ok_or_else(|| {
+                "\"systems\" must be an array of planner slugs".to_string()
+            })?;
+            if arr.is_empty() {
+                return Err("\"systems\" must not be empty".to_string());
+            }
+            arr.iter()
+                .map(|s| {
+                    s.as_str().map(str::to_string).ok_or_else(|| {
+                        "\"systems\" entries must be strings".to_string()
+                    })
+                })
+                .collect::<Result<Vec<String>, String>>()?
+        }
+    };
+    Ok(PlaceRequest { workload, systems })
+}
+
+fn parse_admin(json: &Json) -> Result<AdminOp, String> {
+    let action = json
+        .get("action")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "admin needs a string \"action\" field \
+                        (join|fail|revoke)".to_string())?;
+    match action {
+        "join" => {
+            let region = parse_region(
+                json.get("region").and_then(Json::as_str).ok_or_else(
+                    || "join needs a \"region\" name".to_string())?)?;
+            let gpu = parse_gpu(
+                json.get("gpu").and_then(Json::as_str).ok_or_else(
+                    || "join needs a \"gpu\" name".to_string())?)?;
+            let n_gpus = json
+                .get("n_gpus")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| "join needs a positive integer \
+                                \"n_gpus\"".to_string())?;
+            if n_gpus == 0 || n_gpus > MAX_JOIN_GPUS {
+                return Err(format!(
+                    "\"n_gpus\" must be in 1..={MAX_JOIN_GPUS}, \
+                     got {n_gpus}"));
+            }
+            Ok(AdminOp::Join { region, gpu, n_gpus })
+        }
+        "fail" | "revoke" => {
+            let machine = json
+                .get("machine")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!(
+                    "{action} needs a non-negative integer \"machine\""))?;
+            Ok(if action == "fail" {
+                AdminOp::Fail { machine }
+            } else {
+                AdminOp::Revoke { machine }
+            })
+        }
+        other => Err(format!(
+            "unknown admin action {other:?} (join|fail|revoke)")),
+    }
+}
+
+fn parse_region(name: &str) -> Result<Region, String> {
+    Region::ALL
+        .iter()
+        .copied()
+        .find(|r| r.name() == name)
+        .ok_or_else(|| {
+            let known: Vec<&str> =
+                Region::ALL.iter().map(|r| r.name()).collect();
+            format!("unknown region {name:?} (known: {})", known.join(", "))
+        })
+}
+
+fn parse_gpu(name: &str) -> Result<GpuModel, String> {
+    GpuModel::ALL
+        .iter()
+        .copied()
+        .find(|g| g.name() == name)
+        .ok_or_else(|| {
+            let known: Vec<&str> =
+                GpuModel::ALL.iter().map(|g| g.name()).collect();
+            format!("unknown gpu {name:?} (known: {})", known.join(", "))
+        })
+}
+
+/// The typed error reply: `{"ok":false,"error":"…"}`. Receiving one
+/// means the *request* was bad or declined — the connection is still
+/// usable unless the error was framing-fatal (oversized frame).
+pub fn error_reply(msg: &str) -> String {
+    let mut obj = Json::obj();
+    obj.set("ok", Json::Bool(false));
+    obj.set("error", Json::from(msg));
+    obj.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Request, String> {
+        parse_request(s.as_bytes())
+    }
+
+    #[test]
+    fn place_parses_sorts_and_defaults_systems() {
+        let req = parse(r#"{"op":"place","workload":[
+            {"model":"bert_large"},{"model":"t5_11b","batch":32}]}"#)
+            .unwrap();
+        let Request::Place(p) = req else { panic!("expected place") };
+        // Canonical order: largest model first.
+        assert_eq!(p.workload[0].slug(), "t5_11b");
+        assert_eq!(p.workload[0].batch, 32);
+        assert_eq!(p.workload[1].slug(), "bert_large");
+        assert_eq!(p.systems, vec!["hulk"]);
+    }
+
+    #[test]
+    fn admin_ops_parse_by_display_name() {
+        let region = Region::ALL[0].name();
+        let gpu = GpuModel::ALL[0].name();
+        let req = parse(&format!(
+            r#"{{"op":"admin","action":"join","region":"{region}",
+                 "gpu":"{gpu}","n_gpus":8}}"#)).unwrap();
+        assert!(matches!(req, Request::Admin(AdminOp::Join {
+            n_gpus: 8, .. })));
+        let req = parse(r#"{"op":"admin","action":"fail","machine":3}"#)
+            .unwrap();
+        assert!(matches!(req,
+            Request::Admin(AdminOp::Fail { machine: 3 })));
+        let req = parse(r#"{"op":"admin","action":"revoke","machine":0}"#)
+            .unwrap();
+        assert!(matches!(req,
+            Request::Admin(AdminOp::Revoke { machine: 0 })));
+    }
+
+    #[test]
+    fn malformed_requests_are_typed_errors_not_panics() {
+        for (payload, needle) in [
+            ("", "empty frame"),
+            ("{", "malformed JSON"),
+            ("[1,2]", "\"op\""),
+            (r#"{"op":"warp"}"#, "unknown op"),
+            (r#"{"op":"place"}"#, "\"workload\""),
+            (r#"{"op":"place","workload":[]}"#, "must not be empty"),
+            (r#"{"op":"place","workload":[{"model":"gpt5"}]}"#,
+             "unknown model slug"),
+            (r#"{"op":"place","workload":[{"model":"t5_11b",
+                "batch":0}]}"#, "batch"),
+            (r#"{"op":"place","workload":[{"model":"t5_11b"}],
+                "systems":[]}"#, "must not be empty"),
+            (r#"{"op":"admin","action":"evict","machine":1}"#,
+             "unknown admin action"),
+            (r#"{"op":"admin","action":"fail"}"#, "\"machine\""),
+            (r#"{"op":"admin","action":"fail","machine":-1}"#,
+             "\"machine\""),
+            (r#"{"op":"admin","action":"join","region":"Atlantis",
+                "gpu":"NVIDIA A100","n_gpus":8}"#, "unknown region"),
+            (r#"{"op":"admin","action":"join","region":"Atlantis"}"#,
+             "unknown region"),
+        ] {
+            let err = parse(payload).unwrap_err();
+            assert!(err.contains(needle),
+                    "payload {payload:?}: error {err:?} missing {needle:?}");
+        }
+        // Non-UTF-8 payloads likewise.
+        let err = parse_request(&[0xff, 0xfe, 0x00]).unwrap_err();
+        assert!(err.contains("UTF-8"), "{err}");
+    }
+
+    #[test]
+    fn error_reply_is_valid_json() {
+        let reply = error_reply("bad \"quoted\" thing");
+        let parsed = Json::parse(&reply).unwrap();
+        assert_eq!(parsed.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(parsed.get("error").and_then(Json::as_str),
+                   Some("bad \"quoted\" thing"));
+    }
+}

@@ -1,0 +1,593 @@
+//! The `hulk serve` daemon: accept loop, worker pool, and the request
+//! batcher that coalesces concurrent `Place` requests into one shared
+//! GCN forward.
+//!
+//! Threading (std only — no async runtime in the offline registry):
+//!
+//! ```text
+//!   accept loop (per listener, nonblocking + shutdown poll)
+//!        │ pushes accepted connections
+//!        ▼
+//!   Mutex<VecDeque<Conn>> + Condvar ──► N workers
+//!        each worker owns one connection at a time, frames requests,
+//!        answers Admin/Stats/Shutdown inline (short world lock) and
+//!        forwards Place jobs ──mpsc──► the batcher thread
+//!                                          │ drains the channel for one
+//!                                          │ batch window, locks the
+//!                                          │ world once, plans every job
+//!                                          │ against one GnnSplitter
+//!                                          ▼
+//!                               per-job reply channel back to the worker
+//! ```
+//!
+//! Batching semantics: all `Place` jobs collected within one
+//! `batch_window_ms` window plan against the same frozen world through
+//! one [`GnnSplitter`] (`HulkSplitterKind::SharedGnn`), so the batch
+//! pays **one** GCN forward no matter how many requests coalesced.
+//! Because class probabilities depend only on (graph, params) — never
+//! the workload — and replies carry only deterministic predicted costs,
+//! a batched answer is byte-identical to the unbatched answer for the
+//! same request (pinned by `tests/serve_roundtrip.rs`). The splitter is
+//! even reused *across* batches until an admin mutation re-keys the
+//! graph ([`LiveWorld::graph_key`]), so a quiet fleet pays one forward
+//! per mutation, not one per window.
+//!
+//! A stalled client cannot pin a worker: every connection carries a
+//! read timeout, and a timeout (like any framing-fatal error) drops the
+//! connection. Parse-level garbage gets a typed error reply and the
+//! connection lives on — see [`super::framing`] for the taxonomy.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::cli::Cli;
+use crate::coordinator::SharedMetrics;
+use crate::gnn::GnnSplitter;
+use crate::graph::max_dense_n;
+use crate::planner::CostBackend;
+use crate::util::json::Json;
+
+use super::framing::{read_frame, write_frame, FrameError, MAX_FRAME};
+use super::protocol::{error_reply, parse_request, AdminOp, PlaceRequest,
+                      Request};
+use super::state::{default_classifier, LiveWorld};
+
+/// Daemon configuration (CLI: `hulk serve`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// TCP listen address; `None` disables TCP (UDS-only daemon).
+    pub addr: Option<String>,
+    /// Unix-domain-socket path (unix only); stale socket files are
+    /// replaced on bind and removed on shutdown.
+    pub uds: Option<String>,
+    pub backend: CostBackend,
+    /// How long the batcher waits after the first `Place` of a batch
+    /// for more to coalesce. `0` disables batching (every request
+    /// plans alone — the parity baseline the tests compare against).
+    pub batch_window_ms: u64,
+    /// Seeds the fleet and the classifier weights.
+    pub seed: u64,
+    pub workers: usize,
+    /// Per-connection read timeout; a connection idle past it is
+    /// dropped so stalled clients cannot pin workers.
+    pub read_timeout_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: Some("127.0.0.1:0".to_string()),
+            uds: None,
+            backend: CostBackend::Analytic,
+            batch_window_ms: 2,
+            seed: 0,
+            workers: 8,
+            read_timeout_ms: 2000,
+        }
+    }
+}
+
+/// State shared by every daemon thread.
+struct Shared {
+    world: Mutex<LiveWorld>,
+    metrics: SharedMetrics,
+    shutdown: AtomicBool,
+    queue: Mutex<VecDeque<Conn>>,
+    queue_cv: Condvar,
+    read_timeout: Duration,
+}
+
+impl Shared {
+    fn world(&self) -> MutexGuard<'_, LiveWorld> {
+        // A poisoned world lock means a planner panicked; the state
+        // itself is append-only counters + the graph seam, safe to
+        // keep serving.
+        self.world.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+/// One `Place` awaiting the batcher.
+struct PlaceJob {
+    req: PlaceRequest,
+    reply: mpsc::Sender<String>,
+}
+
+/// A running daemon. `spawn` is the in-process entry point the tests
+/// use; [`run_serve`] is the CLI wrapper that blocks until shutdown.
+pub struct Server {
+    addr: Option<SocketAddr>,
+    shared: Arc<Shared>,
+    threads: Vec<thread::JoinHandle<()>>,
+    uds_path: Option<String>,
+}
+
+impl Server {
+    pub fn spawn(config: &ServeConfig) -> Result<Server> {
+        anyhow::ensure!(config.workers >= 1, "serve needs >= 1 worker");
+        anyhow::ensure!(config.addr.is_some() || config.uds.is_some(),
+                        "serve needs --addr or --uds");
+        let world = LiveWorld::planet(config.seed, config.backend);
+        let shared = Arc::new(Shared {
+            world: Mutex::new(world),
+            metrics: SharedMetrics::new(),
+            shutdown: AtomicBool::new(false),
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            read_timeout: Duration::from_millis(config.read_timeout_ms),
+        });
+        let mut threads = Vec::new();
+
+        // Listeners first: a bind failure must not leak threads.
+        let mut acceptors = Vec::new();
+        let mut addr = None;
+        if let Some(a) = &config.addr {
+            let listener = TcpListener::bind(a)?;
+            listener.set_nonblocking(true)?;
+            addr = Some(listener.local_addr()?);
+            acceptors.push(Acceptor::Tcp(listener));
+        }
+        let uds_path = config.uds.clone();
+        if let Some(path) = &uds_path {
+            acceptors.push(bind_uds(path)?);
+        }
+
+        let (place_tx, place_rx) = mpsc::channel::<PlaceJob>();
+        {
+            let shared = Arc::clone(&shared);
+            let window = config.batch_window_ms;
+            let seed = config.seed;
+            threads.push(thread::spawn(move || {
+                batcher_loop(&shared, &place_rx, window, seed);
+            }));
+        }
+        for _ in 0..config.workers {
+            let shared = Arc::clone(&shared);
+            let place_tx = place_tx.clone();
+            threads.push(thread::spawn(move || {
+                worker_loop(&shared, &place_tx);
+            }));
+        }
+        // Workers hold the only senders now: when they exit, the
+        // batcher's receiver disconnects and it exits too.
+        drop(place_tx);
+        for acceptor in acceptors {
+            let shared = Arc::clone(&shared);
+            threads.push(thread::spawn(move || {
+                accept_loop(&shared, &acceptor);
+            }));
+        }
+        Ok(Server { addr, shared, threads, uds_path })
+    }
+
+    /// The bound TCP address (the ephemeral port for `127.0.0.1:0`).
+    pub fn addr(&self) -> Option<SocketAddr> {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> &SharedMetrics {
+        &self.shared.metrics
+    }
+
+    /// Ask every thread to wind down (same effect as a wire
+    /// `Shutdown` request).
+    pub fn stop(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.queue_cv.notify_all();
+    }
+
+    /// Block until every daemon thread has exited.
+    pub fn join(self) {
+        for t in self.threads {
+            let _ = t.join();
+        }
+        if let Some(path) = &self.uds_path {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(unix)]
+fn bind_uds(path: &str) -> Result<Acceptor> {
+    // Replace a stale socket file from a crashed daemon.
+    let _ = std::fs::remove_file(path);
+    let listener = std::os::unix::net::UnixListener::bind(path)?;
+    listener.set_nonblocking(true)?;
+    Ok(Acceptor::Uds(listener))
+}
+
+#[cfg(not(unix))]
+fn bind_uds(_path: &str) -> Result<Acceptor> {
+    anyhow::bail!("--uds is only supported on unix platforms")
+}
+
+/// A listener of either flavor, nonblocking so the accept loop can
+/// poll the shutdown flag.
+enum Acceptor {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Uds(std::os::unix::net::UnixListener),
+}
+
+impl Acceptor {
+    fn accept(&self) -> io::Result<Conn> {
+        match self {
+            Acceptor::Tcp(l) => {
+                let (stream, _) = l.accept()?;
+                // The listener is nonblocking; the worker wants
+                // blocking reads bounded by the read timeout.
+                stream.set_nonblocking(false)?;
+                Ok(Conn::Tcp(stream))
+            }
+            #[cfg(unix)]
+            Acceptor::Uds(l) => {
+                let (stream, _) = l.accept()?;
+                stream.set_nonblocking(false)?;
+                Ok(Conn::Uds(stream))
+            }
+        }
+    }
+}
+
+/// An accepted connection of either flavor.
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Uds(std::os::unix::net::UnixStream),
+}
+
+impl Conn {
+    fn set_read_timeout(&self, dur: Duration) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(Some(dur)),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.set_read_timeout(Some(dur)),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.flush(),
+        }
+    }
+}
+
+fn accept_loop(shared: &Shared, acceptor: &Acceptor) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            shared.queue_cv.notify_all();
+            return;
+        }
+        match acceptor.accept() {
+            Ok(conn) => {
+                let mut q = shared
+                    .queue
+                    .lock()
+                    .unwrap_or_else(|p| p.into_inner());
+                q.push_back(conn);
+                drop(q);
+                shared.queue_cv.notify_one();
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, place_tx: &mpsc::Sender<PlaceJob>) {
+    loop {
+        let conn = {
+            let mut q = shared
+                .queue
+                .lock()
+                .unwrap_or_else(|p| p.into_inner());
+            loop {
+                if let Some(c) = q.pop_front() {
+                    break Some(c);
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break None;
+                }
+                q = shared
+                    .queue_cv
+                    .wait_timeout(q, Duration::from_millis(100))
+                    .unwrap_or_else(|p| p.into_inner())
+                    .0;
+            }
+        };
+        let Some(mut conn) = conn else { return };
+        serve_connection(&mut conn, shared, place_tx);
+    }
+}
+
+/// Frame requests off one connection until it closes, times out, or a
+/// framing-fatal error desynchronizes the stream.
+fn serve_connection(conn: &mut Conn, shared: &Shared,
+                    place_tx: &mpsc::Sender<PlaceJob>)
+{
+    shared.metrics.inc("connections");
+    let _ = conn.set_read_timeout(shared.read_timeout);
+    loop {
+        match read_frame(conn) {
+            Ok(None) => return, // clean EOF
+            Ok(Some(payload)) => {
+                let (reply, close) =
+                    handle_payload(&payload, shared, place_tx);
+                if write_frame(conn, reply.as_bytes()).is_err() {
+                    return;
+                }
+                if close {
+                    return;
+                }
+            }
+            Err(FrameError::Oversized(len)) => {
+                // The payload was never read; the stream cannot be
+                // resynchronized. One typed error, then close.
+                shared.metrics.inc("protocol_errors");
+                let reply = error_reply(&format!(
+                    "frame of {len} bytes exceeds the {MAX_FRAME}-byte \
+                     maximum; closing connection"));
+                let _ = write_frame(conn, reply.as_bytes());
+                return;
+            }
+            // Timeout (stalled client), mid-frame close, io error:
+            // nothing sensible to say on a desynced stream.
+            Err(_) => return,
+        }
+    }
+}
+
+/// Returns `(reply, close_connection)`.
+fn handle_payload(payload: &[u8], shared: &Shared,
+                  place_tx: &mpsc::Sender<PlaceJob>) -> (String, bool)
+{
+    let request = match parse_request(payload) {
+        Ok(r) => r,
+        Err(msg) => {
+            // Parse-level garbage: typed error, keep the connection.
+            shared.metrics.inc("protocol_errors");
+            return (error_reply(&msg), false);
+        }
+    };
+    match request {
+        Request::Place(req) => {
+            let started = Instant::now();
+            let (tx, rx) = mpsc::channel();
+            if place_tx.send(PlaceJob { req, reply: tx }).is_err() {
+                return (error_reply("daemon is shutting down"), true);
+            }
+            match rx.recv() {
+                Ok(reply) => {
+                    // Wall-clock lives in metrics only — the reply
+                    // bytes stay deterministic.
+                    shared.metrics.observe(
+                        "place_latency_us",
+                        started.elapsed().as_micros() as f64);
+                    (reply, false)
+                }
+                Err(_) => (error_reply("daemon is shutting down"), true),
+            }
+        }
+        Request::Admin(op) => (handle_admin(op, shared), false),
+        Request::Stats => {
+            shared.metrics.inc("stats_requests");
+            (stats_reply(shared), false)
+        }
+        Request::Shutdown => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            shared.queue_cv.notify_all();
+            let mut reply = Json::obj();
+            reply.set("ok", Json::Bool(true));
+            reply.set("type", Json::from("shutdown"));
+            (reply.render(), true)
+        }
+    }
+}
+
+fn handle_admin(op: AdminOp, shared: &Shared) -> String {
+    let mut world = shared.world();
+    let (op_name, outcome) = match op {
+        AdminOp::Join { region, gpu, n_gpus } => {
+            ("join", world.join(region, gpu, n_gpus))
+        }
+        AdminOp::Fail { machine } => {
+            ("fail", world.fail(machine).map(|()| machine))
+        }
+        AdminOp::Revoke { machine } => {
+            ("revoke", world.fail(machine).map(|()| machine))
+        }
+    };
+    match outcome {
+        Ok(machine) => {
+            shared.metrics.inc(&format!("admin_{op_name}s"));
+            let mut reply = Json::obj();
+            reply.set("ok", Json::Bool(true));
+            reply.set("type", Json::from("admin"));
+            reply.set("op", Json::from(op_name));
+            reply.set("machine", Json::from(machine));
+            reply.set("fleet_machines", Json::from(world.fleet.len()));
+            reply.set("alive_machines",
+                      Json::from(world.alive_machines()));
+            reply.render()
+        }
+        Err(msg) => {
+            shared.metrics.inc("admin_errors");
+            error_reply(&msg)
+        }
+    }
+}
+
+fn stats_reply(shared: &Shared) -> String {
+    let world = shared.world();
+    let mut reply = Json::obj();
+    reply.set("ok", Json::Bool(true));
+    reply.set("type", Json::from("stats"));
+    reply.set("fleet_machines", Json::from(world.fleet.len()));
+    reply.set("alive_machines", Json::from(world.alive_machines()));
+    reply.set("fleet_memory_gb",
+              Json::from(world.fleet.total_memory_gb()));
+    // The incremental-update proof: no admin mutation may ever rebuild
+    // the world or grow a dense adjacency past the oracle ceiling.
+    reply.set("dense_rebuilds", Json::from(world.dense_rebuilds as f64));
+    reply.set("max_dense_n", Json::from(max_dense_n()));
+    drop(world);
+    reply.set("metrics", shared.metrics.snapshot().to_json());
+    reply.render()
+}
+
+/// The batcher: owns the classifier and the batch-shared splitter.
+///
+/// One iteration = one batch: block for the first job, drain the
+/// channel until the window closes, lock the world once, answer every
+/// job through the shared splitter. The splitter survives across
+/// batches until the world's graph key changes, so `gcn_forwards`
+/// counts actual forward passes — the denominator of the
+/// `serve/batched_forward_speedup` loadgen row.
+fn batcher_loop(shared: &Shared, rx: &mpsc::Receiver<PlaceJob>,
+                window_ms: u64, seed: u64)
+{
+    let (classifier, params) = default_classifier(seed);
+    let mut splitter = GnnSplitter::new(&classifier, &params);
+    let mut splitter_key = None;
+    let mut forward_counted = false;
+    let window = Duration::from_millis(window_ms);
+    loop {
+        let first = match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(job) => job,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + window;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(job) => batch.push(job),
+                Err(_) => break,
+            }
+        }
+        let world = shared.world();
+        let key = world.graph_key();
+        if splitter_key != Some(key) {
+            // An admin mutation re-keyed the graph: fresh memo, fresh
+            // forward. (GnnSplitter pins one graph per instance.)
+            splitter = GnnSplitter::new(&classifier, &params);
+            splitter_key = Some(key);
+            forward_counted = false;
+        }
+        for job in &batch {
+            let reply = world.plan_place(&job.req, &splitter);
+            let _ = job.reply.send(reply);
+        }
+        drop(world);
+        if splitter.forward_ran() && !forward_counted {
+            shared.metrics.inc("gcn_forwards");
+            forward_counted = true;
+        }
+        shared.metrics.add("place_requests", batch.len() as u64);
+        shared.metrics.inc("batches");
+        shared.metrics.observe("batch_size", batch.len() as f64);
+    }
+}
+
+/// `hulk serve` CLI entry: spawn, announce, block until shutdown.
+pub fn run_serve(cli: &Cli) -> Result<()> {
+    let uds = cli.flag("uds").map(str::to_string);
+    let addr = match cli.flag("addr") {
+        Some(a) => Some(a.to_string()),
+        // Default TCP endpoint unless the daemon is UDS-only.
+        None if uds.is_none() => Some("127.0.0.1:7711".to_string()),
+        None => None,
+    };
+    let config = ServeConfig {
+        addr,
+        uds,
+        backend: match cli.flag("cost") {
+            Some(v) => CostBackend::parse(v)?,
+            None => CostBackend::Analytic,
+        },
+        batch_window_ms: cli.flag_u64("batch-window-ms", 2)?,
+        seed: cli.flag_u64("seed", 0)?,
+        workers: cli.flag_u64("workers", 8)? as usize,
+        read_timeout_ms: cli.flag_u64("read-timeout-ms", 2000)?,
+    };
+    let server = Server::spawn(&config)?;
+    {
+        let world = server.shared.world();
+        println!(
+            "hulk serve: {} machines alive, {} backend, {}ms batch \
+             window, {} workers",
+            world.alive_machines(), config.backend.name(),
+            config.batch_window_ms, config.workers);
+    }
+    if let Some(a) = server.addr() {
+        println!("listening on tcp://{a}");
+    }
+    if let Some(p) = &server.uds_path {
+        println!("listening on unix://{p}");
+    }
+    println!("send {{\"op\":\"shutdown\"}} (or run hulk loadgen \
+              --shutdown) to stop");
+    server.join();
+    println!("hulk serve: shut down cleanly");
+    Ok(())
+}

@@ -1,0 +1,321 @@
+//! The daemon's single live world: a fleet and its hierarchical graph
+//! kept in lockstep, mutated **only** through the incremental
+//! graph-update seam.
+//!
+//! Ownership: one [`LiveWorld`] lives behind one mutex for the whole
+//! daemon lifetime. `Place` requests read it (the batcher thread holds
+//! the lock for one batch); `Admin` requests mutate it. There is no
+//! rebuild path — joins and failures go through
+//! [`HierarchicalGraph::apply_join`] / [`apply_failure`]
+//! (coarse-level-only rebuilds), and [`LiveWorld::dense_rebuilds`]
+//! stays 0 by construction. The `Stats` reply exposes both the counter
+//! and [`max_dense_n`] so tests and operators can verify no admin
+//! mutation ever paid an O(n²) dense-oracle rebuild.
+//!
+//! The fleet grows in lockstep with the graph: a join appends to *both*
+//! ([`Fleet::add_machine`] and `apply_join` hand out the same dense id),
+//! because placement pricing ([`Placement::cost`]) and validation index
+//! `fleet.machines` directly — a graph-only join would panic the first
+//! time a placement lands on the new machine.
+
+use std::sync::Arc;
+
+use crate::cluster::{Fleet, GpuModel, Region};
+use crate::gnn::{Classifier, GnnSplitter, RefGcn, RefGcnConfig};
+use crate::graph::{GraphView, HierarchicalGraph, FEATURE_DIM};
+use crate::planner::{CostBackend, HulkSplitterKind, PlanContext,
+                     PlannerRegistry};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::protocol::{error_reply, PlaceRequest};
+
+/// Padded GCN slot count for the serving classifier: room for the
+/// 220-machine planet fleet plus live joins (the daemon declines joins
+/// past this, with a typed error).
+pub const SERVE_SLOTS: usize = 384;
+
+/// The serving classifier: the pure-Rust reference GCN at
+/// [`SERVE_SLOTS`] slots with seeded weights — same construction as the
+/// `bench micro` planet classifier, so serve latencies and micro rows
+/// measure the same forward.
+pub fn default_classifier(seed: u64) -> (Classifier, Vec<f32>) {
+    let cfg = RefGcnConfig { n: SERVE_SLOTS, f: FEATURE_DIM,
+                             h: 64, h2: 32, c: 8 };
+    let mut rng = Rng::new(seed ^ 0x4743_4E21); // "GCN!"
+    let params: Vec<f32> = (0..cfg.n_params())
+        .map(|_| (rng.normal() * 0.1) as f32)
+        .collect();
+    (Classifier::Reference(RefGcn::new(cfg, &params)), params)
+}
+
+/// The daemon's mutable world. See the module docs for the ownership
+/// and lockstep invariants.
+pub struct LiveWorld {
+    /// Grows on `Join`; never shrinks (failed machines keep their id —
+    /// jitter stability, and placements must stay indexable).
+    pub fleet: Fleet,
+    /// The plan graph *and* the mutation seam: alive mask, joined
+    /// machines, coarse level. All planning goes through it.
+    pub hier: HierarchicalGraph,
+    backend: CostBackend,
+    slots: usize,
+    /// World rebuilds from scratch. No code path increments it — the
+    /// field exists so the `Stats` reply can prove that, and so any
+    /// future rebuild path has to show up in the serve round-trip test.
+    pub dense_rebuilds: u64,
+}
+
+impl LiveWorld {
+    pub fn new(fleet: Fleet, backend: CostBackend, slots: usize)
+        -> Result<LiveWorld, String>
+    {
+        if fleet.len() > slots {
+            return Err(format!(
+                "fleet of {} machines exceeds the classifier's {slots} \
+                 slots", fleet.len()));
+        }
+        let hier = HierarchicalGraph::from_fleet(Arc::new(fleet.clone()));
+        Ok(LiveWorld { fleet, hier, backend, slots, dense_rebuilds: 0 })
+    }
+
+    /// The serving default: the planet_scale synthetic fleet
+    /// (220 machines, 12 regions) under [`SERVE_SLOTS`].
+    pub fn planet(seed: u64, backend: CostBackend) -> LiveWorld {
+        LiveWorld::new(Fleet::synthetic(220, 12, seed), backend,
+                       SERVE_SLOTS)
+            .expect("220 machines fit 384 slots")
+    }
+
+    /// The graph identity the batcher keys its shared splitter on —
+    /// changes on every admin mutation, so a stale forward can never
+    /// serve a mutated world.
+    pub fn graph_key(&self) -> (usize, usize) {
+        self.hier.memo_key()
+    }
+
+    pub fn alive_machines(&self) -> usize {
+        (0..self.fleet.len())
+            .filter(|&m| self.hier.is_alive(m))
+            .count()
+    }
+
+    /// Scale-out: append to fleet and graph in lockstep. Declined (not
+    /// panicked) past classifier capacity.
+    pub fn join(&mut self, region: Region, gpu: GpuModel, n_gpus: usize)
+        -> Result<usize, String>
+    {
+        if self.fleet.len() >= self.slots {
+            return Err(format!(
+                "fleet is at classifier capacity ({} slots); join \
+                 declined", self.slots));
+        }
+        let id = self.fleet.add_machine(region, gpu, n_gpus);
+        let hier_id = self.hier.apply_join(region, gpu, n_gpus);
+        assert_eq!(id, hier_id, "fleet and graph must stay in lockstep");
+        Ok(id)
+    }
+
+    /// Failure / spot revocation: the machine keeps its id but drops
+    /// out of every edge weight and planning pool. Pre-validated so
+    /// wire input can never hit `apply_failure`'s alive assertion.
+    pub fn fail(&mut self, machine: usize) -> Result<(), String> {
+        if machine >= self.fleet.len() {
+            return Err(format!(
+                "machine {machine} out of range (fleet has machines \
+                 0..{})", self.fleet.len()));
+        }
+        if !self.hier.is_alive(machine) {
+            return Err(format!("machine {machine} already failed"));
+        }
+        self.hier.apply_failure(machine);
+        Ok(())
+    }
+
+    /// Answer one `Place` request: plan the workload with every
+    /// requested system and render the reply.
+    ///
+    /// The reply is **deterministic in the world state** — placements,
+    /// digests and predicted per-iteration costs, never wall-clock —
+    /// which is what makes "batched and unbatched answers are
+    /// byte-identical" a testable contract. `splitter` is the caller's
+    /// (possibly batch-shared) forward-pass memo; a batch of requests
+    /// against one frozen world pays one GCN forward total.
+    pub fn plan_place(&self, req: &PlaceRequest, splitter: &GnnSplitter)
+        -> String
+    {
+        match self.place_json(req, splitter) {
+            Ok(reply) => reply.render(),
+            Err(msg) => error_reply(&msg),
+        }
+    }
+
+    fn place_json(&self, req: &PlaceRequest, splitter: &GnnSplitter)
+        -> Result<Json, String>
+    {
+        let max_tasks = splitter.classifier.n_classes();
+        if req.workload.len() > max_tasks {
+            return Err(format!(
+                "workload has {} tasks but the classifier supports at \
+                 most {max_tasks}", req.workload.len()));
+        }
+        let registry = PlannerRegistry::resolve(&req.systems.join(","))
+            .map_err(|e| e.to_string())?;
+        let mut results = Json::arr();
+        for planner in registry.iter() {
+            let ctx = PlanContext::new(
+                &self.fleet, &self.hier, &req.workload,
+                HulkSplitterKind::SharedGnn { splitter })
+                .with_backend(self.backend)
+                .with_hier(&self.hier);
+            let mut entry = Json::obj();
+            entry.set("system", Json::from(planner.slug()));
+            match planner.plan(&ctx) {
+                Ok(placement) => {
+                    placement
+                        .validate_machines(&self.fleet)
+                        .map_err(|e| format!(
+                            "{} produced an invalid placement: {e}",
+                            planner.slug()))?;
+                    let summary = placement.summary(&self.fleet);
+                    let priced = planner.price(&ctx, &placement);
+                    entry.set("ok", Json::Bool(true));
+                    entry.set("groups", Json::from(summary.groups));
+                    entry.set("stages", Json::from(summary.stages));
+                    entry.set("cross_region_edges",
+                              Json::from(summary.cross_region_edges));
+                    let mut tasks = Json::arr();
+                    for (t, model) in req.workload.iter().enumerate() {
+                        let cost = &priced.per_task[t];
+                        let mut tj = Json::obj();
+                        tj.set("model", Json::from(model.slug()));
+                        let mut machines = Json::arr();
+                        for &m in placement.machines(t) {
+                            machines.push(Json::from(m));
+                        }
+                        tj.set("machines", machines);
+                        tj.set("comm_ms", Json::from(cost.comm_ms));
+                        tj.set("comp_ms", Json::from(cost.comp_ms));
+                        tj.set("total_ms", Json::from(cost.total_ms()));
+                        tasks.push(tj);
+                    }
+                    entry.set("tasks", tasks);
+                }
+                Err(e) => {
+                    // A planner declining (infeasible workload, empty
+                    // pool) is a per-system answer, not a request
+                    // failure — other systems still reply.
+                    entry.set("ok", Json::Bool(false));
+                    entry.set("error", Json::from(e.to_string().as_str()));
+                }
+            }
+            results.push(entry);
+        }
+        let mut reply = Json::obj();
+        reply.set("ok", Json::Bool(true));
+        reply.set("type", Json::from("place"));
+        reply.set("results", results);
+        Ok(reply)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::ModelSpec;
+
+    fn place_req(workload: Vec<ModelSpec>, systems: &[&str])
+        -> PlaceRequest
+    {
+        let mut workload = workload;
+        ModelSpec::sort_largest_first(&mut workload);
+        PlaceRequest {
+            workload,
+            systems: systems.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    #[test]
+    fn plan_place_is_deterministic_and_valid_json() {
+        let world = LiveWorld::planet(0, CostBackend::Analytic);
+        let (classifier, params) = default_classifier(0);
+        let req = place_req(vec![ModelSpec::bert_large(),
+                                 ModelSpec::gpt2_xl()], &["hulk"]);
+        let a = {
+            let s = GnnSplitter::new(&classifier, &params);
+            world.plan_place(&req, &s)
+        };
+        let b = {
+            let s = GnnSplitter::new(&classifier, &params);
+            world.plan_place(&req, &s)
+        };
+        // Fresh splitters, identical world → byte-identical replies.
+        assert_eq!(a, b);
+        let parsed = Json::parse(&a).unwrap();
+        assert_eq!(parsed.get("ok").and_then(Json::as_bool), Some(true));
+        let results = parsed.get("results").and_then(Json::as_arr).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("system").and_then(Json::as_str),
+                   Some("hulk"));
+        assert_eq!(results[0].get("ok").and_then(Json::as_bool),
+                   Some(true));
+        let tasks = results[0].get("tasks").and_then(Json::as_arr).unwrap();
+        assert_eq!(tasks.len(), 2);
+        // Canonical order: largest model first.
+        assert_eq!(tasks[0].get("model").and_then(Json::as_str),
+                   Some("gpt2_xl"));
+        assert!(tasks[0].get("total_ms").and_then(Json::as_f64).unwrap()
+                > 0.0);
+        assert!(!tasks[0].get("machines").and_then(Json::as_arr).unwrap()
+                .is_empty());
+    }
+
+    #[test]
+    fn joins_and_failures_stay_in_lockstep() {
+        let mut world = LiveWorld::planet(0, CostBackend::Analytic);
+        let n0 = world.fleet.len();
+        let key0 = world.graph_key();
+        let id = world
+            .join(Region::ALL[0], GpuModel::A100, 8)
+            .unwrap();
+        assert_eq!(id, n0);
+        assert_eq!(world.fleet.len(), n0 + 1);
+        assert_eq!(world.hier.n_nodes(), n0 + 1);
+        assert_ne!(world.graph_key(), key0, "mutations must re-key memos");
+        world.fail(id).unwrap();
+        assert!(world.fail(id).unwrap_err().contains("already"));
+        assert!(world.fail(n0 + 50).is_err(), "out of range declined");
+        assert_eq!(world.alive_machines(), n0);
+        assert_eq!(world.dense_rebuilds, 0);
+    }
+
+    #[test]
+    fn join_declined_at_classifier_capacity() {
+        let fleet = Fleet::synthetic(10, 3, 1);
+        let mut world =
+            LiveWorld::new(fleet, CostBackend::Analytic, 11).unwrap();
+        world.join(Region::ALL[0], GpuModel::V100, 4).unwrap();
+        let err = world
+            .join(Region::ALL[0], GpuModel::V100, 4)
+            .unwrap_err();
+        assert!(err.contains("capacity"), "{err}");
+        // And a too-big seed fleet is rejected up front.
+        assert!(LiveWorld::new(Fleet::synthetic(12, 3, 1),
+                               CostBackend::Analytic, 11).is_err());
+    }
+
+    #[test]
+    fn oversized_workloads_and_unknown_systems_decline() {
+        let world = LiveWorld::planet(0, CostBackend::Analytic);
+        let (classifier, params) = default_classifier(0);
+        let s = GnnSplitter::new(&classifier, &params);
+        let nine = vec![ModelSpec::bert_large(); 9];
+        let reply = world.plan_place(&place_req(nine, &["hulk"]), &s);
+        assert!(reply.contains("\"ok\":false"), "{reply}");
+        assert!(reply.contains("at most"), "{reply}");
+        let reply = world.plan_place(
+            &place_req(vec![ModelSpec::bert_large()], &["warp"]), &s);
+        assert!(reply.contains("\"ok\":false"), "{reply}");
+        assert!(reply.contains("unknown planner"), "{reply}");
+    }
+}

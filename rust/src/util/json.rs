@@ -1,6 +1,8 @@
-//! Tiny JSON *writer* (no parser — nothing at runtime consumes JSON; the
-//! writer exists so benches and the coordinator can dump machine-readable
-//! metrics for plotting). Substitute for serde_json (offline registry).
+//! Tiny JSON writer + parser. The writer exists so benches and the
+//! coordinator can dump machine-readable metrics for plotting; the parser
+//! ([`Json::parse`]) exists for the `hulk serve` wire protocol — the first
+//! runtime surface that *consumes* JSON. Substitute for serde_json
+//! (offline registry).
 
 use std::fmt::Write as _;
 
@@ -51,6 +53,71 @@ impl Json {
         let mut out = String::new();
         self.write(&mut out);
         out
+    }
+
+    /// Parse one JSON value from `text` (the whole string must be that
+    /// value plus optional whitespace). Errors carry a byte offset so
+    /// wire-protocol rejections can point at the garbage.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing garbage at byte {pos}"));
+        }
+        Ok(value)
+    }
+
+    /// Object field lookup (first occurrence); `None` on non-objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => {
+                fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Numeric field as a non-negative integer (rejects fractions and
+    /// negatives — machine ids and GPU counts are exact).
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(x)
+                if x.fract() == 0.0 && *x >= 0.0 && *x < 2.0_f64.powi(53) =>
+            {
+                Some(*x as usize)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
     }
 
     fn write(&self, out: &mut String) {
@@ -112,6 +179,166 @@ impl Json {
     }
 }
 
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r')
+    {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, lit: &str) -> Result<(), String> {
+    if bytes[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        Err(format!("expected {lit:?} at byte {pos}", pos = *pos))
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        None => Err("unexpected end of input".to_string()),
+        Some(b'n') => expect(bytes, pos, "null").map(|()| Json::Null),
+        Some(b't') => expect(bytes, pos, "true").map(|()| Json::Bool(true)),
+        Some(b'f') => {
+            expect(bytes, pos, "false").map(|()| Json::Bool(false))
+        }
+        Some(b'"') => parse_string(bytes, pos).map(Json::Str),
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(bytes, pos)?);
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => {
+                        return Err(format!(
+                            "expected ',' or ']' at byte {pos}",
+                            pos = *pos
+                        ))
+                    }
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(bytes, pos);
+                let key = parse_string(bytes, pos)?;
+                skip_ws(bytes, pos);
+                expect(bytes, pos, ":")?;
+                let value = parse_value(bytes, pos)?;
+                fields.push((key, value));
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => {
+                        return Err(format!(
+                            "expected ',' or '}}' at byte {pos}",
+                            pos = *pos
+                        ))
+                    }
+                }
+            }
+        }
+        Some(_) => parse_number(bytes, pos),
+    }
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String, String> {
+    if bytes.get(*pos) != Some(&b'"') {
+        return Err(format!("expected string at byte {pos}", pos = *pos));
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        match bytes.get(*pos) {
+            None => return Err("unterminated string".to_string()),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match bytes.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = bytes
+                            .get(*pos + 1..*pos + 5)
+                            .and_then(|h| std::str::from_utf8(h).ok())
+                            .ok_or_else(|| {
+                                "truncated \\u escape".to_string()
+                            })?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .map_err(|_| format!("bad \\u escape {hex:?}"))?;
+                        // Surrogates (paired or lone) are replaced — the
+                        // wire protocol never emits them.
+                        out.push(
+                            char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    other => {
+                        return Err(format!("bad escape {other:?}"));
+                    }
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // Multi-byte UTF-8 sequences pass through unchanged:
+                // find the char boundary from the source slice.
+                let s = std::str::from_utf8(&bytes[*pos..])
+                    .map_err(|_| "invalid UTF-8 in string".to_string())?;
+                let ch = s.chars().next().unwrap();
+                out.push(ch);
+                *pos += ch.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    while *pos < bytes.len()
+        && matches!(bytes[*pos],
+                    b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&bytes[start..*pos]).unwrap();
+    text.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("bad number {text:?} at byte {start}"))
+}
+
 impl From<f64> for Json {
     fn from(x: f64) -> Json {
         Json::Num(x)
@@ -168,5 +395,58 @@ mod tests {
     #[should_panic]
     fn set_on_array_panics() {
         Json::arr().set("k", Json::Null);
+    }
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let mut obj = Json::obj();
+        obj.set("name", "hulk \"serve\"\n".into());
+        obj.set("n", 46usize.into());
+        obj.set("x", 3.25.into());
+        obj.set("flag", Json::Bool(true));
+        obj.set("none", Json::Null);
+        let mut arr = Json::arr();
+        arr.push(1.5.into());
+        arr.push(Json::Str("é漢".to_string()));
+        obj.set("xs", arr);
+        let text = obj.render();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed, obj);
+        // And the accessors see through it.
+        assert_eq!(parsed.get("n").and_then(Json::as_usize), Some(46));
+        assert_eq!(parsed.get("x").and_then(Json::as_f64), Some(3.25));
+        assert_eq!(parsed.get("flag").and_then(Json::as_bool), Some(true));
+        assert_eq!(parsed.get("xs").and_then(Json::as_arr).map(<[_]>::len),
+                   Some(2));
+        assert_eq!(parsed.get("missing"), None);
+    }
+
+    #[test]
+    fn parse_handles_whitespace_escapes_and_nesting() {
+        let j = Json::parse(
+            " { \"a\" : [ 1 , -2.5e1 , \"x\\u0041\\t\" ] , \"b\" : { } } ",
+        )
+        .unwrap();
+        let xs = j.get("a").and_then(Json::as_arr).unwrap();
+        assert_eq!(xs[0].as_f64(), Some(1.0));
+        assert_eq!(xs[1].as_f64(), Some(-25.0));
+        assert_eq!(xs[2].as_str(), Some("xA\t"));
+        assert_eq!(j.get("b"), Some(&Json::obj()));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_input() {
+        for bad in ["", "{", "[1,", "{\"a\":}", "nul", "1 2",
+                    "\"unterminated", "{\"a\" 1}", "[1] extra"] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn as_usize_rejects_fractions_and_negatives() {
+        assert_eq!(Json::Num(3.5).as_usize(), None);
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(7.0).as_usize(), Some(7));
+        assert_eq!(Json::Str("7".into()).as_usize(), None);
     }
 }

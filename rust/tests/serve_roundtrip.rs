@@ -1,0 +1,333 @@
+//! End-to-end pins for `hulk serve`: an in-process daemon on an
+//! ephemeral port, exercised over real sockets.
+//!
+//! The load-bearing contracts:
+//! 1. A served `Place` answer is **byte-identical** to planning
+//!    directly on an equal world — and the machines in the reply match
+//!    a direct `Planner::plan` exactly.
+//! 2. Batched answers are byte-identical to unbatched answers, and a
+//!    concurrent burst pays **one** GCN forward.
+//! 3. Admin mutations flow through the incremental graph seam only:
+//!    a failed machine disappears from subsequent placements, the
+//!    dense-rebuild counter stays 0 and `max_dense_n` stays under the
+//!    oracle ceiling.
+//! 4. Framing hardening: garbage gets typed errors on a live
+//!    connection; oversized frames error-then-close; partial writes
+//!    reassemble; stalled clients are disconnected; the daemon never
+//!    panics or wedges.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+use hulk::gnn::GnnSplitter;
+use hulk::planner::{CostBackend, HulkSplitterKind, PlanContext,
+                    PlannerRegistry};
+use hulk::serve::{default_classifier, parse_request, read_frame,
+                  roundtrip, write_frame, LiveWorld, Request,
+                  ServeConfig, Server, MAX_FRAME};
+use hulk::util::json::Json;
+
+fn spawn(seed: u64, batch_window_ms: u64) -> (Server, TcpStream) {
+    let config = ServeConfig {
+        seed,
+        batch_window_ms,
+        ..ServeConfig::default()
+    };
+    let server = Server::spawn(&config).expect("daemon spawns");
+    let stream = TcpStream::connect(server.addr().unwrap())
+        .expect("daemon accepts");
+    (server, stream)
+}
+
+fn rpc(stream: &mut TcpStream, request: &str) -> String {
+    let reply =
+        roundtrip(stream, request.as_bytes()).expect("round-trip");
+    String::from_utf8(reply).expect("replies are UTF-8 JSON")
+}
+
+fn reply_machines(reply: &str) -> Vec<Vec<usize>> {
+    let parsed = Json::parse(reply).expect("reply parses");
+    assert_eq!(parsed.get("ok").and_then(Json::as_bool), Some(true),
+               "{reply}");
+    let results = parsed.get("results").and_then(Json::as_arr).unwrap();
+    let tasks = results[0].get("tasks").and_then(Json::as_arr).unwrap();
+    tasks
+        .iter()
+        .map(|t| {
+            t.get("machines")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .map(|m| m.as_usize().unwrap())
+                .collect()
+        })
+        .collect()
+}
+
+const PLACE: &str = r#"{"op":"place","workload":[
+    {"model":"bert_large"},{"model":"gpt2_xl","batch":32}],
+    "systems":["hulk"]}"#;
+
+#[test]
+fn served_place_is_byte_identical_to_direct_planning() {
+    let (_server, mut stream) = spawn(7, 0);
+    let served = rpc(&mut stream, PLACE);
+
+    // An equal world, planned without any daemon in the way.
+    let world = LiveWorld::planet(7, CostBackend::Analytic);
+    let (classifier, params) = default_classifier(7);
+    let splitter = GnnSplitter::new(&classifier, &params);
+    let Ok(Request::Place(req)) = parse_request(PLACE.as_bytes()) else {
+        panic!("fixture request parses")
+    };
+    assert_eq!(served, world.plan_place(&req, &splitter),
+               "served reply must be byte-identical to direct planning");
+
+    // And the reply's machine lists match Planner::plan exactly (the
+    // per-request Gnn splitter arm, not SharedGnn — pinning that the
+    // two arms agree).
+    let hulk_planner = PlannerRegistry::standard();
+    let hulk_planner = hulk_planner.find("hulk").unwrap();
+    let ctx = PlanContext::new(
+        &world.fleet, &world.hier, &req.workload,
+        HulkSplitterKind::Gnn { classifier: &classifier,
+                                params: &params })
+        .with_hier(&world.hier);
+    let placement = hulk_planner.plan(&ctx).unwrap();
+    let machines = reply_machines(&served);
+    assert_eq!(machines.len(), 2);
+    for (t, got) in machines.iter().enumerate() {
+        assert_eq!(got.as_slice(), placement.machines(t), "task {t}");
+    }
+}
+
+#[test]
+fn batched_replies_match_unbatched_and_share_one_forward() {
+    // Unbatched baseline.
+    let (_plain, mut stream) = spawn(11, 0);
+    let expected = rpc(&mut stream, PLACE);
+
+    // Batching daemon: a 25ms window easily covers a concurrent burst.
+    // (Drop the helper connection so it doesn't pin a worker: each
+    // worker owns one connection until it closes or times out.)
+    let (server, keepalive) = spawn(11, 25);
+    drop(keepalive);
+    let addr = server.addr().unwrap();
+    let burst = 8;
+    let mut handles = Vec::new();
+    for _ in 0..burst {
+        handles.push(thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            rpc(&mut s, PLACE)
+        }));
+    }
+    for h in handles {
+        assert_eq!(h.join().unwrap(), expected,
+                   "batched reply must be byte-identical to unbatched");
+    }
+
+    // The whole burst shared one GCN forward (the splitter survives
+    // across batch windows until an admin mutation re-keys the graph).
+    let mut s = TcpStream::connect(addr).unwrap();
+    let stats = Json::parse(&rpc(&mut s, r#"{"op":"stats"}"#)).unwrap();
+    let counter = |name: &str| {
+        stats.get("metrics").unwrap().get("counters").unwrap()
+            .get(name).and_then(Json::as_f64).unwrap_or(0.0)
+    };
+    assert_eq!(counter("place_requests"), burst as f64);
+    assert_eq!(counter("gcn_forwards"), 1.0,
+               "a burst against a frozen world pays one forward");
+    assert!(counter("batches") >= 1.0);
+}
+
+#[test]
+fn admin_mutations_use_the_incremental_seam_only() {
+    let (_server, mut stream) = spawn(3, 0);
+
+    // Fail machine 5.
+    let reply =
+        rpc(&mut stream, r#"{"op":"admin","action":"fail","machine":5}"#);
+    let parsed = Json::parse(&reply).unwrap();
+    assert_eq!(parsed.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(parsed.get("alive_machines").and_then(Json::as_usize),
+               Some(219));
+    // Double-fail is a typed decline, not a panic.
+    let reply =
+        rpc(&mut stream, r#"{"op":"admin","action":"fail","machine":5}"#);
+    assert!(reply.contains("already failed"), "{reply}");
+
+    // Every subsequent placement avoids the dead machine.
+    let reply = rpc(&mut stream, PLACE);
+    for (t, machines) in reply_machines(&reply).iter().enumerate() {
+        assert!(!machines.contains(&5),
+                "task {t} placed on failed machine: {machines:?}");
+        assert!(machines.iter().all(|&m| m < 220));
+    }
+
+    // A join extends the dense id range, fleet and graph in lockstep.
+    let region = hulk::cluster::Region::ALL[0].name();
+    let gpu = hulk::cluster::GpuModel::ALL[0].name();
+    let reply = rpc(&mut stream, &format!(
+        r#"{{"op":"admin","action":"join","region":"{region}",
+             "gpu":"{gpu}","n_gpus":8}}"#));
+    let parsed = Json::parse(&reply).unwrap();
+    assert_eq!(parsed.get("ok").and_then(Json::as_bool), Some(true),
+               "{reply}");
+    assert_eq!(parsed.get("machine").and_then(Json::as_usize), Some(220));
+    assert_eq!(parsed.get("fleet_machines").and_then(Json::as_usize),
+               Some(221));
+
+    // Still planning fine; still no machine 5; ids stay in range.
+    let reply = rpc(&mut stream, PLACE);
+    for machines in reply_machines(&reply) {
+        assert!(!machines.contains(&5));
+        assert!(machines.iter().all(|&m| m < 221));
+    }
+
+    // The incremental-update proof: zero world rebuilds, and nothing
+    // allocated a dense adjacency past the oracle ceiling.
+    let stats = Json::parse(&rpc(&mut stream, r#"{"op":"stats"}"#))
+        .unwrap();
+    assert_eq!(stats.get("dense_rebuilds").and_then(Json::as_usize),
+               Some(0));
+    assert!(stats.get("max_dense_n").and_then(Json::as_usize).unwrap()
+            <= 1000);
+    let counters = stats.get("metrics").unwrap().get("counters").unwrap();
+    assert_eq!(counters.get("admin_fails").and_then(Json::as_usize),
+               Some(1));
+    assert_eq!(counters.get("admin_joins").and_then(Json::as_usize),
+               Some(1));
+    assert_eq!(counters.get("admin_errors").and_then(Json::as_usize),
+               Some(1));
+}
+
+#[test]
+fn garbage_gets_typed_errors_on_a_live_connection() {
+    let (_server, mut stream) = spawn(0, 0);
+
+    // Zero-length frame: typed error, connection survives.
+    write_frame(&mut stream, b"").unwrap();
+    let reply = read_frame(&mut stream).unwrap().unwrap();
+    let reply = String::from_utf8(reply).unwrap();
+    assert!(reply.contains("\"ok\":false") && reply.contains("empty"),
+            "{reply}");
+
+    // Malformed JSON, wrong op, bad fields — all keep-alive.
+    for (garbage, needle) in [
+        ("{nope", "malformed JSON"),
+        (r#"{"op":"warp"}"#, "unknown op"),
+        (r#"{"op":"place","workload":[{"model":"gpt5"}]}"#,
+         "unknown model slug"),
+        (r#"{"op":"place","workload":[{"model":"bert_large"}],
+            "systems":["warp"]}"#, "unknown planner"),
+        (r#"{"op":"admin","action":"fail","machine":100000}"#,
+         "out of range"),
+    ] {
+        let reply = rpc(&mut stream, garbage);
+        assert!(reply.contains("\"ok\":false"), "{garbage}: {reply}");
+        assert!(reply.contains(needle), "{garbage}: {reply}");
+    }
+
+    // The same connection still serves real requests.
+    let reply = rpc(&mut stream, r#"{"op":"stats"}"#);
+    assert!(reply.contains("\"ok\":true"), "{reply}");
+}
+
+#[test]
+fn partial_writes_reassemble_and_oversized_frames_close() {
+    let (_server, mut stream) = spawn(0, 0);
+
+    // Dribble a request out in four fragments with pauses: the daemon
+    // must reassemble across partial reads.
+    let payload = br#"{"op":"stats"}"#;
+    let header = (payload.len() as u32).to_be_bytes();
+    stream.write_all(&header[..2]).unwrap();
+    stream.flush().unwrap();
+    thread::sleep(Duration::from_millis(30));
+    stream.write_all(&header[2..]).unwrap();
+    stream.write_all(&payload[..5]).unwrap();
+    stream.flush().unwrap();
+    thread::sleep(Duration::from_millis(30));
+    stream.write_all(&payload[5..]).unwrap();
+    stream.flush().unwrap();
+    let reply = read_frame(&mut stream).unwrap().unwrap();
+    assert!(String::from_utf8(reply).unwrap().contains("\"ok\":true"));
+
+    // An oversized length prefix: one typed error, then the daemon
+    // closes (the stream cannot be resynchronized).
+    stream.write_all(&(MAX_FRAME + 1).to_be_bytes()).unwrap();
+    stream.flush().unwrap();
+    let reply = read_frame(&mut stream).unwrap().unwrap();
+    let reply = String::from_utf8(reply).unwrap();
+    assert!(reply.contains("\"ok\":false") && reply.contains("exceeds"),
+            "{reply}");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    match read_frame(&mut stream) {
+        Ok(None) => {}                  // clean close observed
+        Ok(Some(other)) => panic!(
+            "daemon kept talking on a desynced stream: {other:?}"),
+        Err(_) => {}                    // reset also counts as closed
+    }
+}
+
+#[test]
+fn stalled_clients_are_disconnected_by_the_read_timeout() {
+    let config = ServeConfig {
+        seed: 0,
+        batch_window_ms: 0,
+        read_timeout_ms: 150,
+        ..ServeConfig::default()
+    };
+    let server = Server::spawn(&config).unwrap();
+    let mut stream = TcpStream::connect(server.addr().unwrap()).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    // Send nothing: within ~150ms the daemon should hang up.
+    match read_frame(&mut stream) {
+        Ok(None) | Err(_) => {}
+        Ok(Some(bytes)) => {
+            panic!("unexpected unsolicited frame: {bytes:?}")
+        }
+    }
+}
+
+#[test]
+fn shutdown_reply_then_every_thread_exits() {
+    let (server, mut stream) = spawn(0, 2);
+    let reply = rpc(&mut stream, r#"{"op":"shutdown"}"#);
+    assert!(reply.contains("\"ok\":true")
+        && reply.contains("shutdown"), "{reply}");
+    drop(stream);
+    // join() hangs forever if any worker/batcher/acceptor wedges —
+    // the test timing out IS the failure signal.
+    server.join();
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_domain_socket_serves_the_same_protocol() {
+    let path = std::env::temp_dir()
+        .join(format!("hulk-serve-test-{}.sock", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    let config = ServeConfig {
+        addr: None,
+        uds: Some(path.clone()),
+        batch_window_ms: 0,
+        ..ServeConfig::default()
+    };
+    let server = Server::spawn(&config).unwrap();
+    assert!(server.addr().is_none(), "UDS-only daemon has no TCP addr");
+    let mut stream =
+        std::os::unix::net::UnixStream::connect(&path).unwrap();
+    let reply = roundtrip(&mut stream, r#"{"op":"stats"}"#.as_bytes())
+        .unwrap();
+    let reply = String::from_utf8(reply).unwrap();
+    assert!(reply.contains("\"ok\":true"), "{reply}");
+    assert!(reply.contains("fleet_machines"), "{reply}");
+    let _ = std::fs::remove_file(&path);
+}
