@@ -66,22 +66,31 @@ usage: hulk <subcommand> [flags]
              exiting non-zero.
   serve      [--addr HOST:PORT] [--uds PATH] [--cost analytic|sim]
                  [--batch-window-ms N] [--seed S] [--workers N]
-                 [--read-timeout-ms N]
+                 [--read-timeout-ms N] [--shards N]
+                 [--cache-capacity N]
              Long-lived placement-as-a-service daemon on the
              planet-scale fleet (default tcp://127.0.0.1:7711;
              --uds serves a unix socket instead/in addition).
              Length-prefixed JSON requests: Place (workload → placement
-             + predicted cost; concurrent requests within the batch
-             window share one GCN forward), Admin join/fail/revoke
-             (live fleet updates through the incremental graph seam —
-             never a world rebuild), Stats, Shutdown.
+             + predicted cost; requests are digest-routed across
+             --shards batcher shards — default 0 = min(4, cores) — and
+             concurrent requests within a shard's batch window share
+             one GCN forward), Admin join/fail/revoke (live fleet
+             updates through the incremental graph seam — never a world
+             rebuild; every mutation invalidates the per-shard
+             placement caches, --cache-capacity entries each, 0 = off),
+             Stats, Shutdown. Replies are byte-identical across shard
+             counts and cache settings.
   loadgen    [--addr HOST:PORT] --rps N --duration-s S [--seed K]
                  [--connections C] [--systems a,b,hulk] [--out DIR]
-                 [--shutdown]
+                 [--repeat-mix F] [--shutdown]
              Drive a running serve daemon with seeded request mixes;
-             writes BENCH_serve.json (serve/p50_place_us,
-             serve/p99_place_us, serve/throughput_rps,
-             serve/batched_forward_speedup). --shutdown stops the
+             --repeat-mix F resends an earlier workload with
+             probability F (cache-hit traffic). Writes
+             BENCH_serve.json (serve/p50_place_us, serve/p99_place_us,
+             serve/throughput_rps, serve/batched_forward_speedup,
+             serve/cache_hit_rate, serve/p50_cached_place_us,
+             serve/p50_uncached_place_us). --shutdown stops the
              daemon afterwards.
   help       Print this grammar.
 
@@ -258,6 +267,14 @@ mod tests {
             && text.contains("--shutdown"),
                 "usage() missing the loadgen grammar");
         assert!(text.contains("BENCH_serve.json"));
+        // The sharded-batcher + placement-cache grammar.
+        assert!(text.contains("--shards")
+            && text.contains("--cache-capacity"),
+                "usage() missing the serve sharding grammar");
+        assert!(text.contains("--repeat-mix")
+            && text.contains("serve/cache_hit_rate")
+            && text.contains("serve/p50_cached_place_us"),
+                "usage() missing the loadgen cache grammar");
     }
 
     #[test]

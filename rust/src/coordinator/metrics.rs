@@ -2,7 +2,10 @@
 //! the coordinator (printed by `hulk simulate`) and by the `hulk serve`
 //! daemon, whose `Stats` reply renders [`Metrics::to_json`] over the
 //! wire. [`SharedMetrics`] is the thread-safe handle the daemon's
-//! connection workers and batcher share.
+//! connection workers share; [`ShardedMetrics`] splits the serve hot
+//! path across per-shard instances so a `place` observation never
+//! takes a daemon-global lock — the shards are merged
+//! ([`Metrics::merge`]) only when a `Stats` request asks for them.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -191,6 +194,22 @@ impl Metrics {
         obj
     }
 
+    /// Fold `other` into `self`: counters add, histograms merge
+    /// bucket-wise, gauges **sum** (the sharded-serve convention — a
+    /// per-shard level like `cache_entries` aggregates to the daemon
+    /// total; a gauge present on one side only carries over unchanged).
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            *self.gauges.entry(k.clone()).or_insert(0.0) += v;
+        }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
     /// Human-readable dump.
     pub fn render(&self) -> String {
         let mut out = String::new();
@@ -252,6 +271,67 @@ impl SharedMetrics {
     /// A point-in-time copy (for rendering outside the lock).
     pub fn snapshot(&self) -> Metrics {
         self.lock().clone()
+    }
+}
+
+/// Hot-path metrics for the sharded serve daemon: one [`SharedMetrics`]
+/// per batcher shard plus one `global` instance for connection-level
+/// bookkeeping (accepts, protocol errors, admin/stats counters).
+///
+/// The point is lock locality, not lock-freedom: a `place` routed to
+/// shard k only ever touches `shard(k)`'s mutex — contended by that
+/// shard's batcher and the workers whose requests hashed there, never
+/// by the other shards. The merged view ([`merged`](Self::merged)) is
+/// built on demand at `Stats` time, so observing a latency sample never
+/// serializes the whole worker pool the way one daemon-global
+/// `SharedMetrics` did.
+#[derive(Clone, Debug)]
+pub struct ShardedMetrics {
+    global: SharedMetrics,
+    shards: Vec<SharedMetrics>,
+}
+
+impl ShardedMetrics {
+    pub fn new(n_shards: usize) -> ShardedMetrics {
+        assert!(n_shards >= 1, "ShardedMetrics needs >= 1 shard");
+        ShardedMetrics {
+            global: SharedMetrics::new(),
+            shards: (0..n_shards).map(|_| SharedMetrics::new()).collect(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The daemon-global instance (connection/admin/stats counters —
+    /// off the place hot path).
+    pub fn global(&self) -> &SharedMetrics {
+        &self.global
+    }
+
+    /// Shard `i`'s instance. Panics on an out-of-range shard index —
+    /// routing bugs should be loud.
+    pub fn shard(&self, i: usize) -> &SharedMetrics {
+        &self.shards[i]
+    }
+
+    /// Global + every shard folded into one [`Metrics`]
+    /// ([`Metrics::merge`] semantics: counters add, gauges sum,
+    /// histograms merge). This is what the `Stats` reply renders, so
+    /// the wire shape is unchanged from the single-batcher daemon.
+    pub fn merged(&self) -> Metrics {
+        let mut m = self.global.snapshot();
+        for s in &self.shards {
+            m.merge(&s.snapshot());
+        }
+        m
+    }
+
+    /// Per-shard snapshots, shard order (for the `Stats` reply's
+    /// `per_shard` breakdown).
+    pub fn shard_snapshots(&self) -> Vec<Metrics> {
+        self.shards.iter().map(SharedMetrics::snapshot).collect()
     }
 }
 
@@ -347,6 +427,51 @@ mod tests {
         assert_eq!(a.quantile(0.5), all.quantile(0.5));
         assert_eq!(a.quantile(0.99), all.quantile(0.99));
         assert!((a.mean() - all.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_merge_adds_counters_sums_gauges_merges_histograms() {
+        let mut a = Metrics::new();
+        a.add("place_requests", 3);
+        a.set_gauge("cache_entries", 2.0);
+        a.observe("lat_us", 100.0);
+        let mut b = Metrics::new();
+        b.add("place_requests", 4);
+        b.inc("cache_hits");
+        b.set_gauge("cache_entries", 5.0);
+        b.observe("lat_us", 400.0);
+        b.observe("other_us", 7.0);
+        a.merge(&b);
+        assert_eq!(a.counter("place_requests"), 7);
+        assert_eq!(a.counter("cache_hits"), 1);
+        assert_eq!(a.gauge("cache_entries"), Some(7.0));
+        let h = a.histogram("lat_us").unwrap();
+        assert_eq!(h.count(), 2);
+        assert!((h.mean() - 250.0).abs() < 1e-9);
+        assert_eq!(a.histogram("other_us").unwrap().count(), 1);
+    }
+
+    #[test]
+    fn sharded_metrics_merged_equals_the_sum_of_its_parts() {
+        let sharded = ShardedMetrics::new(3);
+        sharded.global().inc("connections");
+        for i in 0..3 {
+            sharded.shard(i).add("place_requests", (i + 1) as u64);
+            sharded.shard(i).observe("place_latency_us",
+                                     ((i + 1) * 100) as f64);
+            sharded.shard(i).set_gauge("cache_entries", 1.0);
+        }
+        let merged = sharded.merged();
+        assert_eq!(merged.counter("connections"), 1);
+        assert_eq!(merged.counter("place_requests"), 6);
+        assert_eq!(merged.gauge("cache_entries"), Some(3.0));
+        assert_eq!(merged.histogram("place_latency_us").unwrap().count(),
+                   3);
+        assert_eq!(sharded.shard_snapshots().len(), 3);
+        assert_eq!(sharded.n_shards(), 3);
+        // Per-shard instances stayed independent.
+        assert_eq!(sharded.shard(0).counter("place_requests"), 1);
+        assert_eq!(sharded.shard(2).counter("place_requests"), 3);
     }
 
     #[test]

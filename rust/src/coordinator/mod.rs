@@ -19,7 +19,7 @@ pub mod tasks;
 
 pub use checkpoint::{load_checkpoint, parse_checkpoint, render_checkpoint, save_checkpoint};
 pub use leader::{Coordinator, CoordinatorEvent, CoordinatorReply};
-pub use metrics::{Histogram, Metrics, SharedMetrics};
+pub use metrics::{Histogram, Metrics, ShardedMetrics, SharedMetrics};
 pub use recovery::{recover, RecoveryAction};
 pub use scale::{scale_in, scale_out};
 pub use tasks::{TaskState, TrainingTask};

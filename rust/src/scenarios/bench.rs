@@ -565,9 +565,12 @@ fn micro(cli: &Cli) -> Result<()> {
     // asserted < 1 so CI fails if batching ever stops paying.
     use crate::gnn::GnnSplitter;
     use crate::serve::{default_classifier, LiveWorld, PlaceRequest,
-                       ServeConfig, Server};
+                       PlacementCache, ServeConfig, Server};
+    // Cache off: this row is the *planning* round-trip lower bound;
+    // the cache's own economics get their own rows below.
     let serve_cfg = ServeConfig { seed,
                                   batch_window_ms: 0,
+                                  cache_capacity: 0,
                                   ..ServeConfig::default() };
     let server = Server::spawn(&serve_cfg)?;
     let addr = server.addr().expect("tcp daemon has an address");
@@ -617,6 +620,33 @@ fn micro(cli: &Cli) -> Result<()> {
         "a coalesced batch of 8 must beat 8 sequential forwards \
          (got {batched_ratio:.2}x)");
 
+    // Placement-cache economics on the same live world: a miss plans
+    // and stores the reply; a hit returns the stored bytes. Timed
+    // steady-state (splitter forward already memoized), i.e. exactly
+    // what a shard saves per repeated workload. Asserted hit < miss so
+    // CI fails if a lookup ever costs more than planning.
+    let scope = live.cache_scope();
+    let mut cache = PlacementCache::new(1024);
+    let digest = batch_req.digest();
+    let t0 = std::time::Instant::now();
+    let reply = live.plan_place(&batch_req, &shared);
+    cache.insert(scope, digest, &reply);
+    let cache_miss_us = t0.elapsed().as_secs_f64() * 1e6;
+    let hit_iters = 256u32;
+    let t0 = std::time::Instant::now();
+    for _ in 0..hit_iters {
+        std::hint::black_box(
+            cache.get(scope, digest).expect("warmed cache must hit"));
+    }
+    let cache_hit_us =
+        t0.elapsed().as_secs_f64() * 1e6 / f64::from(hit_iters);
+    println!("place cache: miss (plan+insert) {cache_miss_us:.0} µs vs \
+              hit {cache_hit_us:.1} µs ({hit_iters} iters)");
+    anyhow::ensure!(
+        cache_hit_us < cache_miss_us,
+        "a cache hit ({cache_hit_us:.1} µs) must be cheaper than \
+         planning ({cache_miss_us:.0} µs)");
+
     if cli.flag_bool("json") {
         let out = std::path::PathBuf::from(cli.flag("out").unwrap_or("."));
         let mut report = BenchReport::new("micro");
@@ -633,6 +663,10 @@ fn micro(cli: &Cli) -> Result<()> {
                                     roundtrip_us, "us"));
         report.push(BenchEntry::new("micro/gcn_forward_batched_8_vs_1x8",
                                     batched_ratio, "x"));
+        report.push(BenchEntry::new("micro/place_cache_miss_us",
+                                    cache_miss_us, "us"));
+        report.push(BenchEntry::new("micro/place_cache_hit_us",
+                                    cache_hit_us, "us"));
         let path = report.write(&out)?;
         println!("wrote {}", path.display());
     }

@@ -6,7 +6,11 @@
 //! workloads from the same seeded sampler the scenario generator uses
 //! ([`sample_workload`]), budgeted by the daemon's actual fleet memory
 //! (probed via `Stats` up front) — so the mix scales with whatever
-//! fleet the daemon is serving.
+//! fleet the daemon is serving. `--repeat-mix F` makes each request
+//! resend an earlier workload from the connection's history with
+//! probability `F` instead of drawing fresh — the knob that exercises
+//! the daemon's placement cache (repeats share a digest, so they hash
+//! to the same shard and hit its cache).
 //!
 //! Pacing is open-ish: each thread targets `rps / connections` and
 //! sleeps to its schedule, but never skips a request — if the daemon
@@ -21,6 +25,13 @@
 //! - `serve/batched_forward_speedup` — `place_requests / gcn_forwards`
 //!   from the daemon's own counters: how many placements each GCN
 //!   forward amortized over (1.0 = no coalescing benefit).
+//! - `serve/cache_hit_rate` — `cache_hits / (cache_hits +
+//!   cache_misses)` from the daemon's counters (0.0 when the cache is
+//!   disabled or the mix never repeats).
+//! - `serve/p50_cached_place_us`, `serve/p50_uncached_place_us` —
+//!   shard-side handling time for hits vs misses (daemon histograms;
+//!   excludes queue + batch-window wait so the pair isolates what the
+//!   cache actually saves).
 
 use std::net::TcpStream;
 use std::path::PathBuf;
@@ -39,6 +50,11 @@ use crate::util::stats::percentile_sorted;
 
 use super::framing::roundtrip;
 
+/// Each connection remembers this many past workloads for
+/// `--repeat-mix` resends (bounded so long runs don't grow without
+/// limit — and a bounded pool keeps repeats actually repeating).
+const REPEAT_HISTORY: usize = 64;
+
 /// Load-generator configuration (CLI: `hulk loadgen`).
 #[derive(Clone, Debug)]
 pub struct LoadgenConfig {
@@ -56,6 +72,11 @@ pub struct LoadgenConfig {
     pub shutdown: bool,
     /// Client connections; `0` = auto (scales with rps, capped at 8).
     pub connections: usize,
+    /// Probability in `[0, 1]` that a request repeats an earlier
+    /// workload from this connection instead of drawing fresh. `0.0`
+    /// (default) keeps the all-fresh mix; higher values manufacture
+    /// cache-hit traffic.
+    pub repeat_mix: f64,
 }
 
 /// What one run measured; every field also lands in the JSON rows or
@@ -71,12 +92,20 @@ pub struct LoadgenReport {
     pub place_requests: f64,
     pub gcn_forwards: f64,
     pub batched_forward_speedup: f64,
+    pub cache_hits: f64,
+    pub cache_misses: f64,
+    pub cache_hit_rate: f64,
+    pub p50_cached_us: f64,
+    pub p50_uncached_us: f64,
 }
 
 /// Drive the daemon at `config.addr` and write `BENCH_serve.json`.
 pub fn run(config: &LoadgenConfig) -> Result<LoadgenReport> {
     anyhow::ensure!(config.rps >= 1, "--rps must be >= 1");
     anyhow::ensure!(config.duration_s >= 1, "--duration-s must be >= 1");
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&config.repeat_mix),
+        "--repeat-mix must be in [0, 1], got {}", config.repeat_mix);
 
     // Probe the daemon: fleet memory budgets the workload sampler.
     let stats = fetch_stats(&config.addr)?;
@@ -99,6 +128,7 @@ pub fn run(config: &LoadgenConfig) -> Result<LoadgenReport> {
         let addr = config.addr.clone();
         let systems = config.systems.clone();
         let seed = config.seed;
+        let repeat_mix = config.repeat_mix;
         handles.push(thread::spawn(move || -> (Vec<f64>, u64, u64) {
             let mut rng = Rng::new(seed ^ 0x4C4F_4144) // "LOAD"
                 .fork(c as u64);
@@ -107,10 +137,23 @@ pub fn run(config: &LoadgenConfig) -> Result<LoadgenReport> {
             };
             let mut latencies = Vec::new();
             let (mut sent, mut errors) = (0u64, 0u64);
+            let mut history: Vec<Vec<ModelSpec>> = Vec::new();
             let thread_start = Instant::now();
             let mut next = thread_start;
             while thread_start.elapsed() < duration {
-                let workload = sample_workload(&mut rng, budget_gb);
+                // Repeat an earlier workload (cache-hit traffic) or
+                // draw fresh and remember it for later repeats.
+                let workload = if !history.is_empty()
+                    && rng.f64() < repeat_mix
+                {
+                    history[rng.below(history.len())].clone()
+                } else {
+                    let fresh = sample_workload(&mut rng, budget_gb);
+                    if history.len() < REPEAT_HISTORY {
+                        history.push(fresh.clone());
+                    }
+                    fresh
+                };
                 let request = place_request(&workload, systems.as_deref());
                 let t0 = Instant::now();
                 sent += 1;
@@ -155,7 +198,8 @@ pub fn run(config: &LoadgenConfig) -> Result<LoadgenReport> {
     };
     let throughput_rps = ok as f64 / elapsed.max(1e-9);
 
-    // The daemon's own counters give the coalescing ratio.
+    // The daemon's own counters give the coalescing ratio and the
+    // cache economics (merged across shards in the stats reply).
     let stats = fetch_stats(&config.addr)?;
     let counter = |name: &str| -> f64 {
         stats
@@ -165,10 +209,25 @@ pub fn run(config: &LoadgenConfig) -> Result<LoadgenReport> {
             .and_then(Json::as_f64)
             .unwrap_or(0.0)
     };
+    let histogram_p50 = |name: &str| -> f64 {
+        stats
+            .get("metrics")
+            .and_then(|m| m.get("histograms"))
+            .and_then(|h| h.get(name))
+            .and_then(|h| h.get("p50"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
     let place_requests = counter("place_requests");
     let gcn_forwards = counter("gcn_forwards");
     let batched_forward_speedup =
         place_requests / gcn_forwards.max(1.0);
+    let cache_hits = counter("cache_hits");
+    let cache_misses = counter("cache_misses");
+    let cache_hit_rate =
+        cache_hits / (cache_hits + cache_misses).max(1.0);
+    let p50_cached_us = histogram_p50("place_cached_us");
+    let p50_uncached_us = histogram_p50("place_uncached_us");
 
     if config.shutdown {
         let mut stream = TcpStream::connect(&config.addr)?;
@@ -182,13 +241,21 @@ pub fn run(config: &LoadgenConfig) -> Result<LoadgenReport> {
                                 "req/s"));
     report.push(BenchEntry::new("serve/batched_forward_speedup",
                                 batched_forward_speedup, "x"));
+    report.push(BenchEntry::new("serve/cache_hit_rate", cache_hit_rate,
+                                "ratio"));
+    report.push(BenchEntry::new("serve/p50_cached_place_us",
+                                p50_cached_us, "us"));
+    report.push(BenchEntry::new("serve/p50_uncached_place_us",
+                                p50_uncached_us, "us"));
     let path = report.write(&config.out)?;
     println!("wrote {} ({} entries)", path.display(),
              report.entries.len());
 
     Ok(LoadgenReport { sent, ok, errors, p50_us, p99_us,
                        throughput_rps, place_requests, gcn_forwards,
-                       batched_forward_speedup })
+                       batched_forward_speedup, cache_hits,
+                       cache_misses, cache_hit_rate, p50_cached_us,
+                       p50_uncached_us })
 }
 
 fn fetch_stats(addr: &str) -> Result<Json> {
@@ -236,22 +303,28 @@ pub fn run_loadgen(cli: &Cli) -> Result<()> {
         systems: cli.flag("systems").map(str::to_string),
         shutdown: cli.flag_bool("shutdown"),
         connections: cli.flag_u64("connections", 0)? as usize,
+        repeat_mix: cli.flag_f64("repeat-mix", 0.0)?,
     };
     let r = run(&config)?;
     println!(
         "loadgen: {} sent, {} ok, {} errors over {}s at target {} rps \
-         ({} connections)",
+         ({} connections, repeat-mix {:.2})",
         r.sent, r.ok, r.errors, config.duration_s, config.rps,
         if config.connections > 0 {
             config.connections
         } else {
             ((config.rps / 200) as usize + 1).min(8)
-        });
+        },
+        config.repeat_mix);
     println!("  p50 {:.0}us  p99 {:.0}us  throughput {:.0} req/s",
              r.p50_us, r.p99_us, r.throughput_rps);
     println!("  daemon counters: {} placements / {} GCN forwards = \
               {:.1}x batched-forward amortization",
              r.place_requests, r.gcn_forwards, r.batched_forward_speedup);
+    println!("  cache: {} hits / {} misses = {:.2} hit rate \
+              (shard-side p50: {:.0}us cached vs {:.0}us uncached)",
+             r.cache_hits, r.cache_misses, r.cache_hit_rate,
+             r.p50_cached_us, r.p50_uncached_us);
     if r.ok == 0 {
         anyhow::bail!("loadgen got zero successful replies");
     }

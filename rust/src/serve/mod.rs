@@ -1,27 +1,36 @@
 //! `hulk serve` — placement-as-a-service: a long-lived daemon that owns
 //! one live fleet world and answers placement queries over a
-//! length-prefixed JSON protocol, with request batching (one GCN
-//! forward per batch window) and live fleet updates through the
-//! incremental graph seam.
+//! length-prefixed JSON protocol, with sharded request batching (one
+//! GCN forward per shard per batch window), per-shard placement caches
+//! keyed on canonical workload digests, and live fleet updates through
+//! the incremental graph seam published as epoch snapshots.
 //!
 //! - [`framing`]  — 4-byte big-endian length prefix + JSON payload;
 //!   the recoverable-vs-fatal error taxonomy.
 //! - [`protocol`] — `Place` / `Admin{Join,Fail,Revoke}` / `Stats` /
-//!   `Shutdown` parsing and the typed error reply.
+//!   `Shutdown` parsing, the typed error reply, and the canonical
+//!   workload digest ([`PlaceRequest::digest`]) that both routes a
+//!   request to its shard and keys that shard's cache.
 //! - [`state`]    — [`LiveWorld`]: fleet + [`HierarchicalGraph`]
-//!   mutated only through `apply_join`/`apply_failure` (never rebuilt),
-//!   and the deterministic `Place` reply builder.
-//! - [`server`]   — accept loop, worker pool, and the batcher thread
-//!   that coalesces concurrent `Place` requests onto one shared
-//!   [`GnnSplitter`] forward (`HulkSplitterKind::SharedGnn`).
-//! - [`loadgen`]  — `hulk loadgen`: seeded request mixes, µs latency
+//!   mutated only through `apply_join`/`apply_failure` (never rebuilt)
+//!   and epoch-stamped per mutation; [`WorldCell`], the
+//!   clone-mutate-publish cell the request plane reads as `Arc`
+//!   snapshots; [`PlacementCache`], the LRU reply cache whose
+//!   [`CacheScope`] dies with every fleet mutation; and the
+//!   deterministic `Place` reply builder.
+//! - [`server`]   — accept loop, worker pool, and N batcher shards
+//!   (`--shards`), each coalescing digest-routed `Place` requests onto
+//!   its own shared [`GnnSplitter`] forward and its own cache.
+//! - [`loadgen`]  — `hulk loadgen`: seeded request mixes with a
+//!   `--repeat-mix` knob for cache-hit traffic, µs latency
 //!   percentiles, `BENCH_serve.json`.
 //!
 //! The contract the round-trip tests pin: replies are deterministic in
 //! the world state (wall-clock lives only in metrics), so a batched
-//! answer is byte-identical to the unbatched answer, and a single
-//! served answer is byte-identical to calling the planner directly on
-//! an equal world.
+//! answer is byte-identical to the unbatched answer, a sharded+cached
+//! answer is byte-identical to the single-shard uncached answer, and a
+//! single served answer is byte-identical to calling the planner
+//! directly on an equal world.
 //!
 //! [`HierarchicalGraph`]: crate::graph::HierarchicalGraph
 //! [`GnnSplitter`]: crate::gnn::GnnSplitter
@@ -38,4 +47,5 @@ pub use loadgen::{run_loadgen, LoadgenConfig, LoadgenReport};
 pub use protocol::{error_reply, parse_request, AdminOp, PlaceRequest,
                    Request};
 pub use server::{run_serve, ServeConfig, Server};
-pub use state::{default_classifier, LiveWorld, SERVE_SLOTS};
+pub use state::{default_classifier, CacheScope, LiveWorld,
+                PlacementCache, WorldCell, SERVE_SLOTS};

@@ -40,6 +40,40 @@ pub struct PlaceRequest {
     pub systems: Vec<String>,
 }
 
+impl PlaceRequest {
+    /// Canonical request digest: FNV-1a over the (already
+    /// largest-first-sorted) workload's `(slug, batch)` pairs and the
+    /// systems list, with separators so field boundaries can't alias.
+    ///
+    /// Two requests digest equal iff they plan identically against any
+    /// given world, which is what makes the digest double duty safe:
+    /// it is both the shard-routing hash (identical workloads land on
+    /// the same batcher shard) and the placement-cache key (a hit
+    /// returns the byte-identical reply the planner would render).
+    pub fn digest(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        for m in &self.workload {
+            eat(m.slug().as_bytes());
+            eat(&[0x00]);
+            eat(&(m.batch as u64).to_le_bytes());
+        }
+        eat(&[0xff]);
+        for s in &self.systems {
+            eat(s.as_bytes());
+            eat(&[0x00]);
+        }
+        h
+    }
+}
+
 /// A live fleet mutation. `Revoke` is a spot-instance revocation —
 /// operationally identical to `Fail` (the machine keeps its id, drops
 /// out of every weight and pool), tracked under its own counter.
@@ -285,6 +319,34 @@ mod tests {
         // Non-UTF-8 payloads likewise.
         let err = parse_request(&[0xff, 0xfe, 0x00]).unwrap_err();
         assert!(err.contains("UTF-8"), "{err}");
+    }
+
+    #[test]
+    fn digest_separates_workload_batch_and_systems() {
+        let place = |json: &str| -> PlaceRequest {
+            let Ok(Request::Place(p)) = parse_request(json.as_bytes())
+            else { panic!("fixture parses: {json}") };
+            p
+        };
+        let base = place(r#"{"op":"place","workload":[
+            {"model":"bert_large"},{"model":"t5_11b","batch":32}]}"#);
+        // Same request (even written in the other order — the parser
+        // canonicalizes) digests the same.
+        let reordered = place(r#"{"op":"place","workload":[
+            {"model":"t5_11b","batch":32},{"model":"bert_large"}]}"#);
+        assert_eq!(base.digest(), reordered.digest());
+        // Different batch, different systems, different workload: all
+        // distinct digests.
+        let batch = place(r#"{"op":"place","workload":[
+            {"model":"bert_large"},{"model":"t5_11b","batch":64}]}"#);
+        let systems = place(r#"{"op":"place","workload":[
+            {"model":"bert_large"},{"model":"t5_11b","batch":32}],
+            "systems":["hulk","a"]}"#);
+        let workload = place(r#"{"op":"place","workload":[
+            {"model":"t5_11b","batch":32}]}"#);
+        assert_ne!(base.digest(), batch.digest());
+        assert_ne!(base.digest(), systems.digest());
+        assert_ne!(base.digest(), workload.digest());
     }
 
     #[test]

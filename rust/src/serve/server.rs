@@ -1,6 +1,7 @@
-//! The `hulk serve` daemon: accept loop, worker pool, and the request
-//! batcher that coalesces concurrent `Place` requests into one shared
-//! GCN forward.
+//! The `hulk serve` daemon: accept loop, worker pool, and N batcher
+//! shards that coalesce concurrent `Place` requests onto shared GCN
+//! forwards and serve repeated workloads from per-shard placement
+//! caches.
 //!
 //! Threading (std only — no async runtime in the offline registry):
 //!
@@ -10,27 +11,39 @@
 //!        ▼
 //!   Mutex<VecDeque<Conn>> + Condvar ──► N workers
 //!        each worker owns one connection at a time, frames requests,
-//!        answers Admin/Stats/Shutdown inline (short world lock) and
-//!        forwards Place jobs ──mpsc──► the batcher thread
-//!                                          │ drains the channel for one
-//!                                          │ batch window, locks the
-//!                                          │ world once, plans every job
-//!                                          │ against one GnnSplitter
+//!        answers Admin (WorldCell::mutate) / Stats (epoch snapshot) /
+//!        Shutdown inline, and routes Place jobs by workload digest:
+//!            shard = digest % n_shards ──mpsc──► batcher shard k
+//!                                          │ drains its channel for one
+//!                                          │ batch window, snapshots the
+//!                                          │ world (Arc clone, no lock
+//!                                          │ held), answers cache hits
+//!                                          │ from its PlacementCache and
+//!                                          │ plans misses against its
+//!                                          │ own GnnSplitter
 //!                                          ▼
 //!                               per-job reply channel back to the worker
 //! ```
 //!
-//! Batching semantics: all `Place` jobs collected within one
-//! `batch_window_ms` window plan against the same frozen world through
-//! one [`GnnSplitter`] (`HulkSplitterKind::SharedGnn`), so the batch
-//! pays **one** GCN forward no matter how many requests coalesced.
-//! Because class probabilities depend only on (graph, params) — never
-//! the workload — and replies carry only deterministic predicted costs,
-//! a batched answer is byte-identical to the unbatched answer for the
-//! same request (pinned by `tests/serve_roundtrip.rs`). The splitter is
-//! even reused *across* batches until an admin mutation re-keys the
-//! graph ([`LiveWorld::graph_key`]), so a quiet fleet pays one forward
-//! per mutation, not one per window.
+//! Sharding semantics: each shard owns a private classifier (identical
+//! weights — [`default_classifier`] is deterministic in the seed), a
+//! private batch-shared [`GnnSplitter`], and a private
+//! [`PlacementCache`]. Requests are hash-routed by
+//! [`PlaceRequest::digest`], so identical workloads always land on the
+//! same shard — its cache needs no cross-shard coherence, and a burst
+//! of identical requests still pays **one** GCN forward on one shard.
+//! Because planning is deterministic in the world snapshot and cached
+//! replies are stored bytes, a sharded + cached daemon answers
+//! byte-identically to the single-shard uncached daemon (pinned by
+//! `tests/serve_roundtrip.rs`).
+//!
+//! The world is read through epoch snapshots ([`WorldCell`]): `place`
+//! and `stats` clone an `Arc` instead of holding a state mutex, so
+//! admin mutations never stall the request plane. Every successful
+//! mutation publishes a new generation, which re-keys each shard's
+//! splitter memo ([`LiveWorld::graph_key`]) and invalidates its cache
+//! scope ([`LiveWorld::cache_scope`]) — a quiet fleet pays one forward
+//! per shard per mutation, not one per window.
 //!
 //! A stalled client cannot pin a worker: every connection carries a
 //! read timeout, and a timeout (like any framing-fatal error) drops the
@@ -42,14 +55,14 @@ use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::cli::Cli;
-use crate::coordinator::SharedMetrics;
+use crate::coordinator::{Metrics, ShardedMetrics, SharedMetrics};
 use crate::gnn::GnnSplitter;
 use crate::graph::max_dense_n;
 use crate::planner::CostBackend;
@@ -58,7 +71,8 @@ use crate::util::json::Json;
 use super::framing::{read_frame, write_frame, FrameError, MAX_FRAME};
 use super::protocol::{error_reply, parse_request, AdminOp, PlaceRequest,
                       Request};
-use super::state::{default_classifier, LiveWorld};
+use super::state::{default_classifier, LiveWorld, PlacementCache,
+                   WorldCell};
 
 /// Daemon configuration (CLI: `hulk serve`).
 #[derive(Clone, Debug)]
@@ -69,16 +83,22 @@ pub struct ServeConfig {
     /// replaced on bind and removed on shutdown.
     pub uds: Option<String>,
     pub backend: CostBackend,
-    /// How long the batcher waits after the first `Place` of a batch
-    /// for more to coalesce. `0` disables batching (every request
-    /// plans alone — the parity baseline the tests compare against).
+    /// How long a shard waits after the first `Place` of a batch for
+    /// more to coalesce. `0` disables batching (every request plans
+    /// alone — the parity baseline the tests compare against).
     pub batch_window_ms: u64,
-    /// Seeds the fleet and the classifier weights.
+    /// Seeds the fleet and the classifier weights (every shard builds
+    /// the same classifier from it — replies cannot depend on routing).
     pub seed: u64,
     pub workers: usize,
     /// Per-connection read timeout; a connection idle past it is
     /// dropped so stalled clients cannot pin workers.
     pub read_timeout_ms: u64,
+    /// Batcher shards; `0` = auto (`min(4, available cores)`).
+    pub shards: usize,
+    /// Per-shard placement-cache entries; `0` disables caching (the
+    /// uncached parity baseline).
+    pub cache_capacity: usize,
 }
 
 impl Default for ServeConfig {
@@ -91,32 +111,42 @@ impl Default for ServeConfig {
             seed: 0,
             workers: 8,
             read_timeout_ms: 2000,
+            shards: 0,
+            cache_capacity: 1024,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// The shard count `spawn` will actually use: `shards` verbatim, or
+    /// `min(4, available cores)` (at least 1) for the `0` auto default.
+    pub fn resolved_shards(&self) -> usize {
+        if self.shards > 0 {
+            self.shards
+        } else {
+            thread::available_parallelism()
+                .map(std::num::NonZeroUsize::get)
+                .unwrap_or(1)
+                .clamp(1, 4)
         }
     }
 }
 
 /// State shared by every daemon thread.
 struct Shared {
-    world: Mutex<LiveWorld>,
-    metrics: SharedMetrics,
+    world: WorldCell,
+    metrics: ShardedMetrics,
     shutdown: AtomicBool,
     queue: Mutex<VecDeque<Conn>>,
     queue_cv: Condvar,
     read_timeout: Duration,
 }
 
-impl Shared {
-    fn world(&self) -> MutexGuard<'_, LiveWorld> {
-        // A poisoned world lock means a planner panicked; the state
-        // itself is append-only counters + the graph seam, safe to
-        // keep serving.
-        self.world.lock().unwrap_or_else(|p| p.into_inner())
-    }
-}
-
-/// One `Place` awaiting the batcher.
+/// One `Place` awaiting a batcher shard. The digest rides along so the
+/// shard's cache lookup doesn't recompute what routing already hashed.
 struct PlaceJob {
     req: PlaceRequest,
+    digest: u64,
     reply: mpsc::Sender<String>,
 }
 
@@ -127,6 +157,7 @@ pub struct Server {
     shared: Arc<Shared>,
     threads: Vec<thread::JoinHandle<()>>,
     uds_path: Option<String>,
+    n_shards: usize,
 }
 
 impl Server {
@@ -134,10 +165,11 @@ impl Server {
         anyhow::ensure!(config.workers >= 1, "serve needs >= 1 worker");
         anyhow::ensure!(config.addr.is_some() || config.uds.is_some(),
                         "serve needs --addr or --uds");
+        let n_shards = config.resolved_shards();
         let world = LiveWorld::planet(config.seed, config.backend);
         let shared = Arc::new(Shared {
-            world: Mutex::new(world),
-            metrics: SharedMetrics::new(),
+            world: WorldCell::new(world),
+            metrics: ShardedMetrics::new(n_shards),
             shutdown: AtomicBool::new(false),
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
@@ -159,32 +191,36 @@ impl Server {
             acceptors.push(bind_uds(path)?);
         }
 
-        let (place_tx, place_rx) = mpsc::channel::<PlaceJob>();
-        {
+        let mut shard_txs = Vec::with_capacity(n_shards);
+        for shard_idx in 0..n_shards {
+            let (tx, rx) = mpsc::channel::<PlaceJob>();
+            shard_txs.push(tx);
             let shared = Arc::clone(&shared);
             let window = config.batch_window_ms;
             let seed = config.seed;
+            let cache_capacity = config.cache_capacity;
             threads.push(thread::spawn(move || {
-                batcher_loop(&shared, &place_rx, window, seed);
+                shard_loop(&shared, shard_idx, &rx, window, seed,
+                           cache_capacity);
             }));
         }
         for _ in 0..config.workers {
             let shared = Arc::clone(&shared);
-            let place_tx = place_tx.clone();
+            let shard_txs = shard_txs.clone();
             threads.push(thread::spawn(move || {
-                worker_loop(&shared, &place_tx);
+                worker_loop(&shared, &shard_txs);
             }));
         }
-        // Workers hold the only senders now: when they exit, the
-        // batcher's receiver disconnects and it exits too.
-        drop(place_tx);
+        // Workers hold the only senders now: when they exit, every
+        // shard's receiver disconnects and the shards exit too.
+        drop(shard_txs);
         for acceptor in acceptors {
             let shared = Arc::clone(&shared);
             threads.push(thread::spawn(move || {
                 accept_loop(&shared, &acceptor);
             }));
         }
-        Ok(Server { addr, shared, threads, uds_path })
+        Ok(Server { addr, shared, threads, uds_path, n_shards })
     }
 
     /// The bound TCP address (the ephemeral port for `127.0.0.1:0`).
@@ -192,8 +228,15 @@ impl Server {
         self.addr
     }
 
-    pub fn metrics(&self) -> &SharedMetrics {
-        &self.shared.metrics
+    /// The shard count this daemon is actually running.
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// A merged point-in-time metrics view (global + every shard) —
+    /// what a wire `Stats` request renders.
+    pub fn metrics(&self) -> Metrics {
+        self.shared.metrics.merged()
     }
 
     /// Ask every thread to wind down (same effect as a wire
@@ -325,7 +368,7 @@ fn accept_loop(shared: &Shared, acceptor: &Acceptor) {
     }
 }
 
-fn worker_loop(shared: &Shared, place_tx: &mpsc::Sender<PlaceJob>) {
+fn worker_loop(shared: &Shared, shard_txs: &[mpsc::Sender<PlaceJob>]) {
     loop {
         let conn = {
             let mut q = shared
@@ -347,23 +390,23 @@ fn worker_loop(shared: &Shared, place_tx: &mpsc::Sender<PlaceJob>) {
             }
         };
         let Some(mut conn) = conn else { return };
-        serve_connection(&mut conn, shared, place_tx);
+        serve_connection(&mut conn, shared, shard_txs);
     }
 }
 
 /// Frame requests off one connection until it closes, times out, or a
 /// framing-fatal error desynchronizes the stream.
 fn serve_connection(conn: &mut Conn, shared: &Shared,
-                    place_tx: &mpsc::Sender<PlaceJob>)
+                    shard_txs: &[mpsc::Sender<PlaceJob>])
 {
-    shared.metrics.inc("connections");
+    shared.metrics.global().inc("connections");
     let _ = conn.set_read_timeout(shared.read_timeout);
     loop {
         match read_frame(conn) {
             Ok(None) => return, // clean EOF
             Ok(Some(payload)) => {
                 let (reply, close) =
-                    handle_payload(&payload, shared, place_tx);
+                    handle_payload(&payload, shared, shard_txs);
                 if write_frame(conn, reply.as_bytes()).is_err() {
                     return;
                 }
@@ -374,7 +417,7 @@ fn serve_connection(conn: &mut Conn, shared: &Shared,
             Err(FrameError::Oversized(len)) => {
                 // The payload was never read; the stream cannot be
                 // resynchronized. One typed error, then close.
-                shared.metrics.inc("protocol_errors");
+                shared.metrics.global().inc("protocol_errors");
                 let reply = error_reply(&format!(
                     "frame of {len} bytes exceeds the {MAX_FRAME}-byte \
                      maximum; closing connection"));
@@ -390,28 +433,35 @@ fn serve_connection(conn: &mut Conn, shared: &Shared,
 
 /// Returns `(reply, close_connection)`.
 fn handle_payload(payload: &[u8], shared: &Shared,
-                  place_tx: &mpsc::Sender<PlaceJob>) -> (String, bool)
+                  shard_txs: &[mpsc::Sender<PlaceJob>]) -> (String, bool)
 {
     let request = match parse_request(payload) {
         Ok(r) => r,
         Err(msg) => {
             // Parse-level garbage: typed error, keep the connection.
-            shared.metrics.inc("protocol_errors");
+            shared.metrics.global().inc("protocol_errors");
             return (error_reply(&msg), false);
         }
     };
     match request {
         Request::Place(req) => {
             let started = Instant::now();
+            let digest = req.digest();
+            // Digest routing: identical workloads always hit the same
+            // shard (its cache + splitter), distinct workloads spread.
+            let shard = (digest % shard_txs.len() as u64) as usize;
             let (tx, rx) = mpsc::channel();
-            if place_tx.send(PlaceJob { req, reply: tx }).is_err() {
+            let job = PlaceJob { req, digest, reply: tx };
+            if shard_txs[shard].send(job).is_err() {
                 return (error_reply("daemon is shutting down"), true);
             }
             match rx.recv() {
                 Ok(reply) => {
                     // Wall-clock lives in metrics only — the reply
-                    // bytes stay deterministic.
-                    shared.metrics.observe(
+                    // bytes stay deterministic. The shard's instance,
+                    // not a daemon-global lock: place observations only
+                    // contend within their own shard.
+                    shared.metrics.shard(shard).observe(
                         "place_latency_us",
                         started.elapsed().as_micros() as f64);
                     (reply, false)
@@ -421,7 +471,7 @@ fn handle_payload(payload: &[u8], shared: &Shared,
         }
         Request::Admin(op) => (handle_admin(op, shared), false),
         Request::Stats => {
-            shared.metrics.inc("stats_requests");
+            shared.metrics.global().inc("stats_requests");
             (stats_reply(shared), false)
         }
         Request::Shutdown => {
@@ -436,40 +486,48 @@ fn handle_payload(payload: &[u8], shared: &Shared,
 }
 
 fn handle_admin(op: AdminOp, shared: &Shared) -> String {
-    let mut world = shared.world();
-    let (op_name, outcome) = match op {
-        AdminOp::Join { region, gpu, n_gpus } => {
-            ("join", world.join(region, gpu, n_gpus))
-        }
-        AdminOp::Fail { machine } => {
-            ("fail", world.fail(machine).map(|()| machine))
-        }
-        AdminOp::Revoke { machine } => {
-            ("revoke", world.fail(machine).map(|()| machine))
-        }
-    };
+    // Clone-mutate-publish: the request plane keeps reading the old
+    // generation until the new one is swapped in whole.
+    let (op_name, outcome, fleet_machines, alive_machines, epoch) =
+        shared.world.mutate(|world| {
+            let (op_name, outcome) = match op {
+                AdminOp::Join { region, gpu, n_gpus } => {
+                    ("join", world.join(region, gpu, n_gpus))
+                }
+                AdminOp::Fail { machine } => {
+                    ("fail", world.fail(machine).map(|()| machine))
+                }
+                AdminOp::Revoke { machine } => {
+                    ("revoke", world.fail(machine).map(|()| machine))
+                }
+            };
+            (op_name, outcome, world.fleet.len(),
+             world.alive_machines(), world.epoch())
+        });
     match outcome {
         Ok(machine) => {
-            shared.metrics.inc(&format!("admin_{op_name}s"));
+            shared.metrics.global().inc(&format!("admin_{op_name}s"));
             let mut reply = Json::obj();
             reply.set("ok", Json::Bool(true));
             reply.set("type", Json::from("admin"));
             reply.set("op", Json::from(op_name));
             reply.set("machine", Json::from(machine));
-            reply.set("fleet_machines", Json::from(world.fleet.len()));
-            reply.set("alive_machines",
-                      Json::from(world.alive_machines()));
+            reply.set("fleet_machines", Json::from(fleet_machines));
+            reply.set("alive_machines", Json::from(alive_machines));
+            reply.set("epoch", Json::from(epoch as f64));
             reply.render()
         }
         Err(msg) => {
-            shared.metrics.inc("admin_errors");
+            shared.metrics.global().inc("admin_errors");
             error_reply(&msg)
         }
     }
 }
 
 fn stats_reply(shared: &Shared) -> String {
-    let world = shared.world();
+    // The epoch snapshot, not a world lock: stats never contends with
+    // admin traffic (the only shared lock is the Arc swap itself).
+    let world = shared.world.snapshot();
     let mut reply = Json::obj();
     reply.set("ok", Json::Bool(true));
     reply.set("type", Json::from("stats"));
@@ -477,30 +535,52 @@ fn stats_reply(shared: &Shared) -> String {
     reply.set("alive_machines", Json::from(world.alive_machines()));
     reply.set("fleet_memory_gb",
               Json::from(world.fleet.total_memory_gb()));
+    reply.set("epoch", Json::from(world.epoch() as f64));
+    reply.set("shards", Json::from(shared.metrics.n_shards()));
     // The incremental-update proof: no admin mutation may ever rebuild
     // the world or grow a dense adjacency past the oracle ceiling.
     reply.set("dense_rebuilds", Json::from(world.dense_rebuilds as f64));
     reply.set("max_dense_n", Json::from(max_dense_n()));
     drop(world);
-    reply.set("metrics", shared.metrics.snapshot().to_json());
+    // `metrics` keeps the pre-sharding wire shape (merged view);
+    // `per_shard` adds the breakdown, shard order.
+    reply.set("metrics", shared.metrics.merged().to_json());
+    let mut per_shard = Json::arr();
+    for m in shared.metrics.shard_snapshots() {
+        per_shard.push(m.to_json());
+    }
+    reply.set("per_shard", per_shard);
     reply.render()
 }
 
-/// The batcher: owns the classifier and the batch-shared splitter.
+/// One batcher shard: owns a private classifier, batch-shared splitter,
+/// and placement cache.
 ///
 /// One iteration = one batch: block for the first job, drain the
-/// channel until the window closes, lock the world once, answer every
-/// job through the shared splitter. The splitter survives across
-/// batches until the world's graph key changes, so `gcn_forwards`
-/// counts actual forward passes — the denominator of the
+/// channel until the window closes, snapshot the world (an `Arc`
+/// clone — no lock held while planning), answer cache hits from the
+/// shard's [`PlacementCache`] and plan misses through the shared
+/// splitter. The splitter survives across batches until a mutation
+/// publishes a re-keyed generation, so `gcn_forwards` counts actual
+/// forward passes — the denominator of the
 /// `serve/batched_forward_speedup` loadgen row.
-fn batcher_loop(shared: &Shared, rx: &mpsc::Receiver<PlaceJob>,
-                window_ms: u64, seed: u64)
+///
+/// Per-request latency here is *shard-side handling time* (cache
+/// lookup or planning + reply send), deliberately excluding queue and
+/// batch-window wait — that is what makes `place_cached_us` vs
+/// `place_uncached_us` a meaningful cache-speedup comparison. The
+/// client-observed round trip (window included) lands in
+/// `place_latency_us` at the worker.
+fn shard_loop(shared: &Shared, shard_idx: usize,
+              rx: &mpsc::Receiver<PlaceJob>, window_ms: u64, seed: u64,
+              cache_capacity: usize)
 {
+    let metrics: SharedMetrics = shared.metrics.shard(shard_idx).clone();
     let (classifier, params) = default_classifier(seed);
     let mut splitter = GnnSplitter::new(&classifier, &params);
     let mut splitter_key = None;
     let mut forward_counted = false;
+    let mut cache = PlacementCache::new(cache_capacity);
     let window = Duration::from_millis(window_ms);
     loop {
         let first = match rx.recv_timeout(Duration::from_millis(50)) {
@@ -525,27 +605,51 @@ fn batcher_loop(shared: &Shared, rx: &mpsc::Receiver<PlaceJob>,
                 Err(_) => break,
             }
         }
-        let world = shared.world();
+        let world = shared.world.snapshot();
         let key = world.graph_key();
         if splitter_key != Some(key) {
-            // An admin mutation re-keyed the graph: fresh memo, fresh
-            // forward. (GnnSplitter pins one graph per instance.)
+            // A mutation published a re-keyed generation: fresh memo,
+            // fresh forward. (GnnSplitter pins one graph per instance.)
             splitter = GnnSplitter::new(&classifier, &params);
             splitter_key = Some(key);
             forward_counted = false;
         }
+        let scope = world.cache_scope();
         for job in &batch {
-            let reply = world.plan_place(&job.req, &splitter);
-            let _ = job.reply.send(reply);
+            let t0 = Instant::now();
+            match cache.get(scope, job.digest) {
+                Some(reply) => {
+                    // Stored bytes verbatim: byte-identity for free.
+                    let _ = job.reply.send(reply);
+                    metrics.inc("cache_hits");
+                    metrics.observe("place_cached_us",
+                                    t0.elapsed().as_micros() as f64);
+                }
+                None => {
+                    let reply = world.plan_place(&job.req, &splitter);
+                    // Only deterministic ok replies are worth pinning;
+                    // error replies are cheap to recompute.
+                    if reply.starts_with("{\"ok\":true")
+                        && cache.insert(scope, job.digest, &reply)
+                    {
+                        metrics.inc("cache_evictions");
+                    }
+                    let _ = job.reply.send(reply);
+                    metrics.inc("cache_misses");
+                    metrics.observe("place_uncached_us",
+                                    t0.elapsed().as_micros() as f64);
+                }
+            }
         }
         drop(world);
         if splitter.forward_ran() && !forward_counted {
-            shared.metrics.inc("gcn_forwards");
+            metrics.inc("gcn_forwards");
             forward_counted = true;
         }
-        shared.metrics.add("place_requests", batch.len() as u64);
-        shared.metrics.inc("batches");
-        shared.metrics.observe("batch_size", batch.len() as f64);
+        metrics.add("place_requests", batch.len() as u64);
+        metrics.inc("batches");
+        metrics.observe("batch_size", batch.len() as f64);
+        metrics.set_gauge("cache_entries", cache.len() as f64);
     }
 }
 
@@ -569,15 +673,23 @@ pub fn run_serve(cli: &Cli) -> Result<()> {
         seed: cli.flag_u64("seed", 0)?,
         workers: cli.flag_u64("workers", 8)? as usize,
         read_timeout_ms: cli.flag_u64("read-timeout-ms", 2000)?,
+        shards: cli.flag_u64("shards", 0)? as usize,
+        cache_capacity: cli.flag_u64("cache-capacity", 1024)? as usize,
     };
     let server = Server::spawn(&config)?;
     {
-        let world = server.shared.world();
+        let world = server.shared.world.snapshot();
         println!(
             "hulk serve: {} machines alive, {} backend, {}ms batch \
-             window, {} workers",
+             window, {} workers, {} shard{}, cache {}",
             world.alive_machines(), config.backend.name(),
-            config.batch_window_ms, config.workers);
+            config.batch_window_ms, config.workers, server.n_shards(),
+            if server.n_shards() == 1 { "" } else { "s" },
+            if config.cache_capacity == 0 {
+                "off".to_string()
+            } else {
+                format!("{} entries/shard", config.cache_capacity)
+            });
     }
     if let Some(a) = server.addr() {
         println!("listening on tcp://{a}");

@@ -1,11 +1,18 @@
-//! The daemon's single live world: a fleet and its hierarchical graph
-//! kept in lockstep, mutated **only** through the incremental
-//! graph-update seam.
+//! The daemon's live world: a fleet and its hierarchical graph kept in
+//! lockstep, mutated **only** through the incremental graph-update
+//! seam, published to the request plane as immutable epoch snapshots.
 //!
-//! Ownership: one [`LiveWorld`] lives behind one mutex for the whole
-//! daemon lifetime. `Place` requests read it (the batcher thread holds
-//! the lock for one batch); `Admin` requests mutate it. There is no
-//! rebuild path — joins and failures go through
+//! Ownership: the current world lives inside a [`WorldCell`] as an
+//! `Arc<LiveWorld>`. `Place` and `Stats` requests take a
+//! [`snapshot`](WorldCell::snapshot) — an `Arc` clone, never a lock
+//! held across planning — while `Admin` requests go through
+//! [`mutate`](WorldCell::mutate): clone the current world, apply the
+//! join/failure, publish the clone as the next epoch. A batcher shard
+//! mid-plan keeps its old snapshot alive through the `Arc`, so admin
+//! mutations never stall the request plane and readers never observe a
+//! half-applied mutation.
+//!
+//! There is no rebuild path — joins and failures go through
 //! [`HierarchicalGraph::apply_join`] / [`apply_failure`]
 //! (coarse-level-only rebuilds), and [`LiveWorld::dense_rebuilds`]
 //! stays 0 by construction. The `Stats` reply exposes both the counter
@@ -17,8 +24,16 @@
 //! because placement pricing ([`Placement::cost`]) and validation index
 //! `fleet.machines` directly — a graph-only join would panic the first
 //! time a placement lands on the new machine.
+//!
+//! [`PlacementCache`] closes the loop: rendered `Place` replies keyed
+//! on the canonical workload digest, scoped to one
+//! `(epoch, graph memo key)` generation. Every successful mutation
+//! bumps [`LiveWorld::epoch`], so a cached placement can never outlive
+//! the world it was planned against — stale entries are cleared on the
+//! first lookup under the new scope, before anything can be served.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::cluster::{Fleet, GpuModel, Region};
 use crate::gnn::{Classifier, GnnSplitter, RefGcn, RefGcnConfig};
@@ -50,7 +65,11 @@ pub fn default_classifier(seed: u64) -> (Classifier, Vec<f32>) {
 }
 
 /// The daemon's mutable world. See the module docs for the ownership
-/// and lockstep invariants.
+/// and lockstep invariants. `Clone` is the mutation primitive: the
+/// [`WorldCell`] clones the published world, mutates the clone, and
+/// publishes it as the next epoch (a 220-machine clone is a few small
+/// vectors — cheap at admin rates).
+#[derive(Clone)]
 pub struct LiveWorld {
     /// Grows on `Join`; never shrinks (failed machines keep their id —
     /// jitter stability, and placements must stay indexable).
@@ -60,6 +79,10 @@ pub struct LiveWorld {
     pub hier: HierarchicalGraph,
     backend: CostBackend,
     slots: usize,
+    /// Bumped by every *successful* `join`/`fail` — the scope token
+    /// placement caches and stats key on. Declined mutations (capacity,
+    /// double-fail) leave it unchanged, so they invalidate nothing.
+    epoch: u64,
     /// World rebuilds from scratch. No code path increments it — the
     /// field exists so the `Stats` reply can prove that, and so any
     /// future rebuild path has to show up in the serve round-trip test.
@@ -76,7 +99,8 @@ impl LiveWorld {
                  slots", fleet.len()));
         }
         let hier = HierarchicalGraph::from_fleet(Arc::new(fleet.clone()));
-        Ok(LiveWorld { fleet, hier, backend, slots, dense_rebuilds: 0 })
+        Ok(LiveWorld { fleet, hier, backend, slots, epoch: 0,
+                       dense_rebuilds: 0 })
     }
 
     /// The serving default: the planet_scale synthetic fleet
@@ -87,11 +111,23 @@ impl LiveWorld {
             .expect("220 machines fit 384 slots")
     }
 
-    /// The graph identity the batcher keys its shared splitter on —
-    /// changes on every admin mutation, so a stale forward can never
-    /// serve a mutated world.
+    /// The graph identity a batcher shard keys its shared splitter on —
+    /// changes on every admin mutation *and* on every world clone (the
+    /// coarse adjacency reallocates), so a stale forward can never
+    /// serve a different world generation.
     pub fn graph_key(&self) -> (usize, usize) {
         self.hier.memo_key()
+    }
+
+    /// Monotone world generation: 0 at construction, +1 per successful
+    /// mutation. See the field docs.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The token one [`PlacementCache`] generation is scoped to.
+    pub fn cache_scope(&self) -> CacheScope {
+        (self.epoch, self.graph_key())
     }
 
     pub fn alive_machines(&self) -> usize {
@@ -113,6 +149,7 @@ impl LiveWorld {
         let id = self.fleet.add_machine(region, gpu, n_gpus);
         let hier_id = self.hier.apply_join(region, gpu, n_gpus);
         assert_eq!(id, hier_id, "fleet and graph must stay in lockstep");
+        self.epoch += 1;
         Ok(id)
     }
 
@@ -129,6 +166,7 @@ impl LiveWorld {
             return Err(format!("machine {machine} already failed"));
         }
         self.hier.apply_failure(machine);
+        self.epoch += 1;
         Ok(())
     }
 
@@ -219,6 +257,176 @@ impl LiveWorld {
     }
 }
 
+/// The epoch-swapped world holder: readers clone an `Arc` (microseconds
+/// under the `published` mutex), mutators serialize on `admin` and
+/// publish copy-on-write.
+///
+/// Why two locks: `published` is held only long enough to clone or swap
+/// one `Arc`, so a `place` snapshot never waits behind a mutation in
+/// flight. `admin` is held across the whole clone-mutate-publish
+/// sequence, so concurrent admin requests cannot lose updates to each
+/// other. Nothing ever holds both for longer than the swap itself.
+pub struct WorldCell {
+    published: Mutex<Arc<LiveWorld>>,
+    admin: Mutex<()>,
+}
+
+impl WorldCell {
+    pub fn new(world: LiveWorld) -> WorldCell {
+        WorldCell {
+            published: Mutex::new(Arc::new(world)),
+            admin: Mutex::new(()),
+        }
+    }
+
+    /// The current world generation. The returned `Arc` stays valid (and
+    /// immutable) for as long as the caller holds it, no matter how many
+    /// mutations publish newer generations meanwhile.
+    pub fn snapshot(&self) -> Arc<LiveWorld> {
+        // Poisoning can't corrupt an Arc swap; keep serving.
+        Arc::clone(&self.published.lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner))
+    }
+
+    /// Clone-mutate-publish. The clone is published as the next
+    /// generation only if `f` actually advanced the epoch — a declined
+    /// mutation (capacity, double-fail) publishes nothing, so readers'
+    /// splitter memos and caches are not invalidated for a no-op.
+    pub fn mutate<T>(&self, f: impl FnOnce(&mut LiveWorld) -> T) -> T {
+        let _admin = self.admin.lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let current = self.snapshot();
+        let mut next = (*current).clone();
+        let out = f(&mut next);
+        if next.epoch != current.epoch {
+            *self.published.lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner) =
+                Arc::new(next);
+        }
+        out
+    }
+}
+
+/// The scope one placement-cache generation is valid for:
+/// `(epoch, graph memo key)` of the world the cached replies were
+/// planned against. Both components change on every successful admin
+/// mutation; either changing invalidates the whole generation.
+pub type CacheScope = (u64, (usize, usize));
+
+struct CacheEntry {
+    reply: String,
+    last_used: u64,
+}
+
+/// A bounded, epoch-scoped cache of rendered `Place` replies, keyed on
+/// the canonical workload digest ([`PlaceRequest::digest`]).
+///
+/// Each batcher shard owns one instance privately — requests are
+/// hash-routed by the same digest, so a given workload always lands on
+/// the same shard and no cross-shard coherence is needed. A hit returns
+/// the cached reply string verbatim, which makes "cached replies are
+/// byte-identical to planned replies" true by construction.
+///
+/// Scoping: every `get`/`insert` carries the caller's current
+/// [`CacheScope`]; the first call under a new scope clears the previous
+/// generation wholesale. A cached placement referencing a machine that
+/// later failed is therefore unreachable — the `fail` bumped the epoch,
+/// and the entry is gone before the next lookup can return it.
+///
+/// Callers must only insert deterministic `{"ok":true…}` replies
+/// (error replies are cheap to recompute and some are not worth
+/// pinning). Eviction is LRU by last-use tick, scanned linearly — at
+/// the default capacity (1024) the scan is microseconds and only runs
+/// when the cache is full.
+pub struct PlacementCache {
+    capacity: usize,
+    scope: Option<CacheScope>,
+    entries: HashMap<u64, CacheEntry>,
+    tick: u64,
+}
+
+impl PlacementCache {
+    /// `capacity == 0` disables the cache: every `get` misses, every
+    /// `insert` is a no-op (the uncached-parity configuration).
+    pub fn new(capacity: usize) -> PlacementCache {
+        PlacementCache {
+            capacity,
+            scope: None,
+            entries: HashMap::new(),
+            tick: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Drop the previous generation if `scope` moved on.
+    fn roll_scope(&mut self, scope: CacheScope) {
+        if self.scope != Some(scope) {
+            self.entries.clear();
+            self.scope = Some(scope);
+        }
+    }
+
+    /// Look up `digest` under `scope`. A scope change clears the cache
+    /// and misses; a hit refreshes the entry's LRU tick and returns the
+    /// reply bytes verbatim.
+    pub fn get(&mut self, scope: CacheScope, digest: u64)
+        -> Option<String>
+    {
+        if self.capacity == 0 {
+            return None;
+        }
+        self.roll_scope(scope);
+        self.tick += 1;
+        let tick = self.tick;
+        self.entries.get_mut(&digest).map(|e| {
+            e.last_used = tick;
+            e.reply.clone()
+        })
+    }
+
+    /// Insert `reply` for `digest` under `scope`. Returns `true` if a
+    /// least-recently-used entry was evicted to make room.
+    pub fn insert(&mut self, scope: CacheScope, digest: u64, reply: &str)
+        -> bool
+    {
+        if self.capacity == 0 {
+            return false;
+        }
+        self.roll_scope(scope);
+        self.tick += 1;
+        let mut evicted = false;
+        if self.entries.len() >= self.capacity
+            && !self.entries.contains_key(&digest)
+        {
+            if let Some(lru) = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k)
+            {
+                self.entries.remove(&lru);
+                evicted = true;
+            }
+        }
+        self.entries.insert(digest, CacheEntry {
+            reply: reply.to_string(),
+            last_used: self.tick,
+        });
+        evicted
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -275,6 +483,7 @@ mod tests {
         let mut world = LiveWorld::planet(0, CostBackend::Analytic);
         let n0 = world.fleet.len();
         let key0 = world.graph_key();
+        assert_eq!(world.epoch(), 0);
         let id = world
             .join(Region::ALL[0], GpuModel::A100, 8)
             .unwrap();
@@ -282,11 +491,72 @@ mod tests {
         assert_eq!(world.fleet.len(), n0 + 1);
         assert_eq!(world.hier.n_nodes(), n0 + 1);
         assert_ne!(world.graph_key(), key0, "mutations must re-key memos");
+        assert_eq!(world.epoch(), 1, "a join advances the epoch");
         world.fail(id).unwrap();
+        assert_eq!(world.epoch(), 2, "a failure advances the epoch");
         assert!(world.fail(id).unwrap_err().contains("already"));
         assert!(world.fail(n0 + 50).is_err(), "out of range declined");
+        assert_eq!(world.epoch(), 2,
+                   "declined mutations leave the epoch alone");
         assert_eq!(world.alive_machines(), n0);
         assert_eq!(world.dense_rebuilds, 0);
+    }
+
+    #[test]
+    fn world_cell_snapshots_survive_mutations_and_noops_do_not_publish() {
+        let cell = WorldCell::new(
+            LiveWorld::planet(0, CostBackend::Analytic));
+        let before = cell.snapshot();
+        let key_before = before.graph_key();
+        // A successful mutation publishes a new generation…
+        cell.mutate(|w| w.fail(3)).unwrap();
+        let after = cell.snapshot();
+        assert_eq!(after.epoch(), 1);
+        assert_eq!(after.alive_machines(), 219);
+        assert_ne!(after.graph_key(), key_before,
+                   "published generations must re-key splitter memos");
+        // …while the old snapshot is untouched and still usable.
+        assert_eq!(before.epoch(), 0);
+        assert_eq!(before.alive_machines(), 220);
+        assert_eq!(before.graph_key(), key_before);
+        // A declined mutation publishes nothing: same Arc, same key.
+        let err = cell.mutate(|w| w.fail(3));
+        assert!(err.unwrap_err().contains("already"));
+        let still = cell.snapshot();
+        assert!(Arc::ptr_eq(&after, &still),
+                "a no-op admin must not re-key the request plane");
+    }
+
+    #[test]
+    fn placement_cache_scopes_bounds_and_evicts_lru() {
+        let mut cache = PlacementCache::new(2);
+        let scope_a: CacheScope = (0, (220, 1));
+        assert!(cache.get(scope_a, 1).is_none());
+        assert!(!cache.insert(scope_a, 1, "{\"ok\":true,\"r\":1}"));
+        assert_eq!(cache.get(scope_a, 1).as_deref(),
+                   Some("{\"ok\":true,\"r\":1}"));
+        assert!(!cache.insert(scope_a, 2, "{\"ok\":true,\"r\":2}"));
+        // Touch 1 so digest 2 is the LRU victim, then overflow.
+        assert!(cache.get(scope_a, 1).is_some());
+        assert!(cache.insert(scope_a, 3, "{\"ok\":true,\"r\":3}"),
+                "inserting past capacity must evict");
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(scope_a, 2).is_none(), "LRU entry evicted");
+        assert!(cache.get(scope_a, 1).is_some());
+        assert!(cache.get(scope_a, 3).is_some());
+        // A scope change (epoch bump) clears the whole generation.
+        let scope_b: CacheScope = (1, (220, 7));
+        assert!(cache.get(scope_b, 1).is_none());
+        assert!(cache.is_empty());
+        // Re-inserting the same digest twice is an update, not an evict.
+        assert!(!cache.insert(scope_b, 1, "x"));
+        assert!(!cache.insert(scope_b, 1, "y"));
+        assert_eq!(cache.get(scope_b, 1).as_deref(), Some("y"));
+        // Capacity 0 = disabled.
+        let mut off = PlacementCache::new(0);
+        assert!(!off.insert(scope_a, 1, "z"));
+        assert!(off.get(scope_a, 1).is_none());
+        assert_eq!(off.capacity(), 0);
     }
 
     #[test]

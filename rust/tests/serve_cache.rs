@@ -1,0 +1,167 @@
+//! Placement-cache invalidation pins: a cached placement must never
+//! outlive the fleet it was planned against.
+//!
+//! Two layers:
+//! 1. Property-style, library-level: over generator-drawn fleets
+//!    (`scenarios::generate_case`), plan → cache → fail a machine the
+//!    placement uses → the cache scope dies, the lookup misses, and the
+//!    replan never references the dead machine.
+//! 2. End-to-end over a real socket: place twice (second is a hit),
+//!    `admin fail` a machine from the reply, and the next place is a
+//!    replanned miss that excludes the victim.
+
+use std::net::TcpStream;
+
+use hulk::gnn::GnnSplitter;
+use hulk::models::ModelSpec;
+use hulk::planner::CostBackend;
+use hulk::scenarios::generate_case;
+use hulk::serve::{default_classifier, roundtrip, LiveWorld,
+                  PlaceRequest, PlacementCache, ServeConfig, Server,
+                  SERVE_SLOTS};
+use hulk::util::json::Json;
+
+/// Machine ids per task from a `Place` reply's first (only) system
+/// entry; `None` when that system declined the workload.
+fn reply_machines(reply: &str) -> Option<Vec<Vec<usize>>> {
+    let parsed = Json::parse(reply).expect("reply parses");
+    assert_eq!(parsed.get("ok").and_then(Json::as_bool), Some(true),
+               "{reply}");
+    let results = parsed.get("results").and_then(Json::as_arr).unwrap();
+    if results[0].get("ok").and_then(Json::as_bool) != Some(true) {
+        return None;
+    }
+    let tasks = results[0].get("tasks").and_then(Json::as_arr).unwrap();
+    Some(tasks.iter()
+        .map(|t| {
+            t.get("machines")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .map(|m| m.as_usize().unwrap())
+                .collect()
+        })
+        .collect())
+}
+
+#[test]
+fn failed_machines_never_leak_out_of_the_cache() {
+    let (classifier, params) = default_classifier(9);
+    let mut exercised = 0;
+    for index in 0..16 {
+        let mut case = generate_case(42, index);
+        // The serving classifier caps both dimensions: fleet at
+        // SERVE_SLOTS nodes, workload at its 8 output classes.
+        let Ok(mut world) = LiveWorld::new(
+            case.fleet.clone(), CostBackend::Analytic, SERVE_SLOTS)
+        else {
+            continue;
+        };
+        case.workload.truncate(8);
+        ModelSpec::sort_largest_first(&mut case.workload);
+        let req = PlaceRequest {
+            workload: case.workload.clone(),
+            systems: vec!["hulk".to_string()],
+        };
+        let digest = req.digest();
+        let mut cache = PlacementCache::new(64);
+
+        let splitter = GnnSplitter::new(&classifier, &params);
+        let scope = world.cache_scope();
+        let reply = world.plan_place(&req, &splitter);
+        // Infeasible draws (workload too big for the fleet) can't
+        // exercise invalidation — skip them, the count below keeps the
+        // test honest.
+        let Some(machines) = reply_machines(&reply) else { continue };
+        let victim = machines[0][0];
+        cache.insert(scope, digest, &reply);
+        assert_eq!(cache.get(scope, digest).as_deref(), Some(&*reply));
+
+        // The victim fails: the epoch advances, the scope dies, and
+        // the stale placement is unreachable before anything can
+        // serve it.
+        world.fail(victim).unwrap();
+        let scope_after = world.cache_scope();
+        assert_ne!(scope, scope_after,
+                   "a failure must move the cache scope");
+        assert!(cache.get(scope_after, digest).is_none(),
+                "a cached placement survived the machine it uses \
+                 failing (case {})", case.repro());
+
+        // The replan (fresh splitter: the graph re-keyed) avoids the
+        // dead machine in every task.
+        let splitter = GnnSplitter::new(&classifier, &params);
+        let replanned = world.plan_place(&req, &splitter);
+        if let Some(machines) = reply_machines(&replanned) {
+            for (t, ms) in machines.iter().enumerate() {
+                assert!(!ms.contains(&victim),
+                        "task {t} replanned onto failed machine \
+                         {victim} (case {})", case.repro());
+            }
+        }
+        exercised += 1;
+    }
+    assert!(exercised >= 5,
+            "only {exercised} generated cases were plannable — the \
+             property needs more coverage");
+}
+
+fn rpc(stream: &mut TcpStream, request: &str) -> String {
+    let reply =
+        roundtrip(stream, request.as_bytes()).expect("round-trip");
+    String::from_utf8(reply).expect("replies are UTF-8 JSON")
+}
+
+#[test]
+fn admin_fail_invalidates_cached_placements_end_to_end() {
+    let config = ServeConfig {
+        seed: 5,
+        batch_window_ms: 0,
+        ..ServeConfig::default() // cache on, shards auto
+    };
+    let server = Server::spawn(&config).expect("daemon spawns");
+    let mut conn = TcpStream::connect(server.addr().unwrap()).unwrap();
+    const PLACE: &str = r#"{"op":"place","workload":[
+        {"model":"bert_large"},{"model":"gpt2_xl","batch":32}],
+        "systems":["hulk"]}"#;
+
+    let first = rpc(&mut conn, PLACE);
+    let second = rpc(&mut conn, PLACE);
+    assert_eq!(first, second, "a cache hit must be byte-identical");
+    let victim = reply_machines(&first)
+        .expect("planet fleet places the fixture")[0][0];
+
+    let counters = |conn: &mut TcpStream| -> (f64, f64) {
+        let stats =
+            Json::parse(&rpc(conn, r#"{"op":"stats"}"#)).unwrap();
+        let get = |name: &str| {
+            stats.get("metrics").unwrap().get("counters").unwrap()
+                .get(name).and_then(Json::as_f64).unwrap_or(0.0)
+        };
+        (get("cache_hits"), get("cache_misses"))
+    };
+    let (hits, misses) = counters(&mut conn);
+    assert_eq!((hits, misses), (1.0, 1.0),
+               "one miss then one hit for a repeated workload");
+
+    let reply = rpc(&mut conn, &format!(
+        r#"{{"op":"admin","action":"fail","machine":{victim}}}"#));
+    assert!(reply.contains("\"ok\":true"), "{reply}");
+
+    // Same workload again: the epoch moved, so this must be a
+    // replanned miss that avoids the failed machine.
+    let third = rpc(&mut conn, PLACE);
+    assert_ne!(third, first,
+               "the placement was served stale after its machine died");
+    for (t, ms) in reply_machines(&third)
+        .expect("survivors still place the fixture")
+        .iter()
+        .enumerate()
+    {
+        assert!(!ms.contains(&victim),
+                "task {t} still placed on failed machine {victim}");
+    }
+    let (hits, misses) = counters(&mut conn);
+    assert_eq!((hits, misses), (1.0, 2.0),
+               "the post-failure place must miss, not hit");
+}

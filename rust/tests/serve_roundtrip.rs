@@ -143,6 +143,84 @@ fn batched_replies_match_unbatched_and_share_one_forward() {
 }
 
 #[test]
+fn sharded_cached_replies_match_single_shard_uncached() {
+    // Baseline: one shard, cache off, no batch window — the slowest,
+    // simplest configuration. Subject: 4 shards, cache on, 2ms window
+    // — the full PR-9 fast path. Byte-identity across the two is the
+    // non-negotiable contract: perf knobs must never change answers.
+    let base_cfg = ServeConfig {
+        seed: 21,
+        batch_window_ms: 0,
+        shards: 1,
+        cache_capacity: 0,
+        ..ServeConfig::default()
+    };
+    let base = Server::spawn(&base_cfg).expect("baseline spawns");
+    let mut base_conn =
+        TcpStream::connect(base.addr().unwrap()).unwrap();
+
+    let fast_cfg = ServeConfig {
+        seed: 21,
+        batch_window_ms: 2,
+        shards: 4,
+        cache_capacity: 1024,
+        ..ServeConfig::default()
+    };
+    let fast = Server::spawn(&fast_cfg).expect("sharded daemon spawns");
+    assert_eq!(fast.n_shards(), 4);
+    let mut fast_conn =
+        TcpStream::connect(fast.addr().unwrap()).unwrap();
+
+    // Distinct workloads exercise digest routing across shards;
+    // repeats exercise the per-shard caches.
+    const PLACE_B: &str = r#"{"op":"place","workload":[
+        {"model":"gpt2_xl","batch":64}],"systems":["hulk"]}"#;
+    const PLACE_C: &str = r#"{"op":"place","workload":[
+        {"model":"bert_large","batch":128},{"model":"t5_11b"}],
+        "systems":["hulk"]}"#;
+    let stream = [PLACE, PLACE_B, PLACE_C, PLACE, PLACE_B, PLACE,
+                  PLACE_C, PLACE_B];
+    let repeats = 5; // requests 4..8 all repeat an earlier workload
+    for req in stream {
+        let fast_reply = rpc(&mut fast_conn, req);
+        let base_reply = rpc(&mut base_conn, req);
+        assert!(fast_reply.starts_with("{\"ok\":true"), "{fast_reply}");
+        assert_eq!(fast_reply, base_reply,
+                   "sharded+cached reply must be byte-identical to \
+                    single-shard uncached");
+    }
+
+    // The fast daemon's own accounting: every repeat hit a cache, and
+    // forwards never exceeded the distinct-workload count (each shard
+    // pays at most one forward against a frozen world).
+    let stats =
+        Json::parse(&rpc(&mut fast_conn, r#"{"op":"stats"}"#)).unwrap();
+    assert_eq!(stats.get("shards").and_then(Json::as_usize), Some(4));
+    let counter = |name: &str| {
+        stats.get("metrics").unwrap().get("counters").unwrap()
+            .get(name).and_then(Json::as_f64).unwrap_or(0.0)
+    };
+    assert_eq!(counter("place_requests"), stream.len() as f64);
+    assert_eq!(counter("cache_hits"), f64::from(repeats));
+    assert_eq!(counter("cache_misses"),
+               (stream.len() - repeats as usize) as f64);
+    assert!(counter("gcn_forwards") <= 3.0,
+            "at most one forward per distinct workload's shard, got {}",
+            counter("gcn_forwards"));
+    // Per-shard breakdown is present and sums to the merged view.
+    let per_shard = stats.get("per_shard").and_then(Json::as_arr)
+        .expect("stats reply carries per_shard");
+    assert_eq!(per_shard.len(), 4);
+    let shard_sum: f64 = per_shard.iter()
+        .map(|m| m.get("counters")
+            .and_then(|c| c.get("place_requests"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0))
+        .sum();
+    assert_eq!(shard_sum, stream.len() as f64);
+}
+
+#[test]
 fn admin_mutations_use_the_incremental_seam_only() {
     let (_server, mut stream) = spawn(3, 0);
 
