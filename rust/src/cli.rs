@@ -67,7 +67,8 @@ usage: hulk <subcommand> [flags]
   serve      [--addr HOST:PORT] [--uds PATH] [--cost analytic|sim]
                  [--batch-window-ms N] [--seed S] [--workers N]
                  [--read-timeout-ms N] [--shards N]
-                 [--cache-capacity N]
+                 [--cache-capacity N] [--queue-depth N]
+                 [--fault-injection]
              Long-lived placement-as-a-service daemon on the
              planet-scale fleet (default tcp://127.0.0.1:7711;
              --uds serves a unix socket instead/in addition).
@@ -75,23 +76,44 @@ usage: hulk <subcommand> [flags]
              + predicted cost; requests are digest-routed across
              --shards batcher shards — default 0 = min(4, cores) — and
              concurrent requests within a shard's batch window share
-             one GCN forward), Admin join/fail/revoke (live fleet
-             updates through the incremental graph seam — never a world
-             rebuild; every mutation invalidates the per-shard
-             placement caches, --cache-capacity entries each, 0 = off),
-             Stats, Shutdown. Replies are byte-identical across shard
-             counts and cache settings.
+             one GCN forward), Admin join/fail/revoke/fail_region/wan
+             (live fleet updates through the incremental graph seam —
+             never a world rebuild; every mutation invalidates the
+             per-shard placement caches, --cache-capacity entries each,
+             0 = off), Stats, Shutdown. Replies are byte-identical
+             across shard counts and cache settings. Workers and
+             batcher shards are panic-supervised (restarts counted in
+             worker_restarts); past --queue-depth waiting connections
+             (default 1024) new arrivals are shed with a typed
+             `overloaded` reply; --fault-injection arms the `panic`
+             admin op for the chaos harness.
   loadgen    [--addr HOST:PORT] --rps N --duration-s S [--seed K]
                  [--connections C] [--systems a,b,hulk] [--out DIR]
-                 [--repeat-mix F] [--shutdown]
+                 [--repeat-mix F] [--max-error-rate F] [--shutdown]
              Drive a running serve daemon with seeded request mixes;
              --repeat-mix F resends an earlier workload with
-             probability F (cache-hit traffic). Writes
+             probability F (cache-hit traffic). Connects retry with
+             capped backoff (failed attempts count as errors);
+             --max-error-rate F exits non-zero when
+             errors/(ok+errors) exceeds F. Writes
              BENCH_serve.json (serve/p50_place_us, serve/p99_place_us,
              serve/throughput_rps, serve/batched_forward_speedup,
              serve/cache_hit_rate, serve/p50_cached_place_us,
              serve/p50_uncached_place_us). --shutdown stops the
              daemon afterwards.
+  chaos      --script region_outage|revocation_wave|link_flap|
+                 join_storm [--addr HOST:PORT] [--seed S] [--out DIR]
+                 [--probe-interval-ms N] [--recovery-timeout-ms N]
+             Seeded fault injection against a RUNNING serve daemon via
+             its admin surface, with continuous place probes. First
+             proves supervision (one worker + one shard panic, skipped
+             unless the daemon runs --fault-injection), then runs the
+             script and measures recovery: time from injection to the
+             first placement excluding every failed machine. Fails if
+             recovery times out or any post-recovery placement uses a
+             dead machine. Writes BENCH_serve_chaos.json
+             (serve/availability_pct, serve/error_rate,
+             serve/recovery_ms).
   help       Print this grammar.
 
 Flags are `--key value`, `--key=value`, or bare `--key` for booleans."
@@ -109,8 +131,8 @@ pub struct Cli {
 /// argument, so `hulk scenarios run --json table1_fleet` keeps
 /// `table1_fleet` as a positional instead of treating it as the value
 /// of `--json`. (Use `--flag=value` to force a value for one of these.)
-const BOOL_FLAGS: [&str; 5] =
-    ["gnn", "json", "parallel", "check", "shutdown"];
+const BOOL_FLAGS: [&str; 6] =
+    ["gnn", "json", "parallel", "check", "shutdown", "fault-injection"];
 
 impl Cli {
     /// Parse `args` (without argv[0]). Flags are `--key value` or
@@ -119,7 +141,8 @@ impl Cli {
     pub fn parse(args: &[String]) -> Result<Cli> {
         let Some(command) = args.first() else {
             bail!("usage: hulk <info|assign|train-gnn|simulate|bench|\
-                   scenarios|serve|loadgen|help> … (see `hulk help`)");
+                   scenarios|serve|loadgen|chaos|help> … \
+                   (see `hulk help`)");
         };
         let mut flags = HashMap::new();
         let mut positional = Vec::new();
@@ -246,7 +269,7 @@ mod tests {
     fn usage_covers_every_subcommand() {
         let text = usage();
         for sub in ["info", "assign", "train-gnn", "simulate", "bench",
-                    "scenarios", "serve", "loadgen", "help"] {
+                    "scenarios", "serve", "loadgen", "chaos", "help"] {
             assert!(text.contains(sub), "usage() missing {sub}");
         }
         assert!(text.contains("BENCH_scenarios.json"));
@@ -275,6 +298,36 @@ mod tests {
             && text.contains("serve/cache_hit_rate")
             && text.contains("serve/p50_cached_place_us"),
                 "usage() missing the loadgen cache grammar");
+        // The self-healing + chaos grammar.
+        assert!(text.contains("--queue-depth")
+            && text.contains("--fault-injection")
+            && text.contains("worker_restarts"),
+                "usage() missing the serve supervision grammar");
+        assert!(text.contains("--max-error-rate"),
+                "usage() missing the loadgen error-rate gate");
+        assert!(text.contains("--script")
+            && text.contains("region_outage")
+            && text.contains("revocation_wave")
+            && text.contains("link_flap")
+            && text.contains("join_storm"),
+                "usage() missing the chaos script catalog");
+        assert!(text.contains("--probe-interval-ms")
+            && text.contains("--recovery-timeout-ms"),
+                "usage() missing the chaos probe knobs");
+        assert!(text.contains("BENCH_serve_chaos.json")
+            && text.contains("serve/availability_pct")
+            && text.contains("serve/error_rate")
+            && text.contains("serve/recovery_ms"),
+                "usage() missing the chaos SLO rows");
+    }
+
+    #[test]
+    fn fault_injection_is_boolean_and_does_not_swallow_flags() {
+        let cli = Cli::parse(&argv(
+            "serve --fault-injection --workers 2 --shards 1")).unwrap();
+        assert!(cli.flag_bool("fault-injection"));
+        assert_eq!(cli.flag_u64("workers", 0).unwrap(), 2);
+        assert_eq!(cli.flag_u64("shards", 0).unwrap(), 1);
     }
 
     #[test]

@@ -335,6 +335,99 @@ impl ShardedMetrics {
     }
 }
 
+/// Counter names the serve SLO window reads. The daemon increments
+/// these; the chaos harness diffs them across a fault window.
+const SLO_REQUESTS: &str = "place_requests";
+const SLO_ERRORS: &str = "place_errors";
+const SLO_SHED: &str = "connections_shed";
+
+/// A serve-plane SLO measurement window: capture a [`Metrics`] snapshot
+/// when the window opens (`begin`), diff against a later snapshot
+/// (`close`) and get availability / error-rate over exactly the traffic
+/// that fell inside the window. Built for the chaos harness, where the
+/// interesting interval is "from fault injection to recovery", not
+/// "since daemon start" — a daemon that served a million healthy
+/// replies before the outage must not dilute the outage's error rate.
+///
+/// Demand is `place_requests + connections_shed`: a connection the
+/// daemon refused at the door never reaches the batcher, so it never
+/// counts as a `place_requests`, but the client still experienced it —
+/// shed load is unavailability, not invisibility.
+#[derive(Clone, Copy, Debug)]
+pub struct SloWindow {
+    requests: u64,
+    errors: u64,
+    shed: u64,
+}
+
+impl SloWindow {
+    /// Open a window at `before`'s counter values.
+    pub fn begin(before: &Metrics) -> SloWindow {
+        SloWindow {
+            requests: before.counter(SLO_REQUESTS),
+            errors: before.counter(SLO_ERRORS),
+            shed: before.counter(SLO_SHED),
+        }
+    }
+
+    /// Close the window against a later snapshot of the *same* daemon.
+    /// Saturating diffs: a daemon restart resets counters to zero, and
+    /// a window spanning the restart should report the post-restart
+    /// traffic rather than wrap.
+    pub fn close(&self, after: &Metrics) -> SloReport {
+        let requests =
+            after.counter(SLO_REQUESTS).saturating_sub(self.requests);
+        let errors = after.counter(SLO_ERRORS).saturating_sub(self.errors);
+        let shed = after.counter(SLO_SHED).saturating_sub(self.shed);
+        SloReport { requests, errors, shed }
+    }
+}
+
+/// Traffic deltas over one [`SloWindow`], with the derived SLO numbers
+/// the chaos gate consumes (`serve/availability_pct`,
+/// `serve/error_rate` BENCH rows).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloReport {
+    /// `place` requests the batcher answered (ok or error) in-window.
+    pub requests: u64,
+    /// `place` requests answered with an error reply in-window.
+    pub errors: u64,
+    /// Connections refused at the accept queue in-window.
+    pub shed: u64,
+}
+
+impl SloReport {
+    /// Total demand: answered requests plus connections shed at the
+    /// door.
+    pub fn demand(&self) -> u64 {
+        self.requests + self.shed
+    }
+
+    /// Failed demand: error replies plus shed connections.
+    pub fn failed(&self) -> u64 {
+        self.errors + self.shed
+    }
+
+    /// Percentage of demand that got a successful reply. An empty
+    /// window is vacuously 100% available — no demand went unmet.
+    pub fn availability_pct(&self) -> f64 {
+        let demand = self.demand();
+        if demand == 0 {
+            return 100.0;
+        }
+        100.0 * (demand - self.failed().min(demand)) as f64 / demand as f64
+    }
+
+    /// Fraction of demand that failed, in [0, 1].
+    pub fn error_rate(&self) -> f64 {
+        let demand = self.demand();
+        if demand == 0 {
+            return 0.0;
+        }
+        self.failed().min(demand) as f64 / demand as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -472,6 +565,56 @@ mod tests {
         // Per-shard instances stayed independent.
         assert_eq!(sharded.shard(0).counter("place_requests"), 1);
         assert_eq!(sharded.shard(2).counter("place_requests"), 3);
+    }
+
+    #[test]
+    fn slo_window_diffs_only_in_window_traffic() {
+        let mut m = Metrics::new();
+        m.add("place_requests", 1_000_000); // healthy pre-outage traffic
+        m.add("place_errors", 10);
+        let window = SloWindow::begin(&m);
+        // Outage: 200 requests, 4 errors, 6 shed connections.
+        m.add("place_requests", 200);
+        m.add("place_errors", 4);
+        m.add("connections_shed", 6);
+        let report = window.close(&m);
+        assert_eq!(report.requests, 200);
+        assert_eq!(report.errors, 4);
+        assert_eq!(report.shed, 6);
+        assert_eq!(report.demand(), 206);
+        assert_eq!(report.failed(), 10);
+        let availability = report.availability_pct();
+        assert!((availability - 100.0 * 196.0 / 206.0).abs() < 1e-12,
+                "availability = {availability}");
+        assert!((report.error_rate() - 10.0 / 206.0).abs() < 1e-12);
+        // The million pre-window requests never entered the math.
+    }
+
+    #[test]
+    fn slo_report_edge_cases() {
+        let empty = SloWindow::begin(&Metrics::new())
+            .close(&Metrics::new());
+        assert_eq!(empty.availability_pct(), 100.0);
+        assert_eq!(empty.error_rate(), 0.0);
+
+        // Shed-only window: refused connections count as failed demand.
+        let mut m = Metrics::new();
+        let window = SloWindow::begin(&m);
+        m.add("connections_shed", 5);
+        let report = window.close(&m);
+        assert_eq!(report.availability_pct(), 0.0);
+        assert_eq!(report.error_rate(), 1.0);
+
+        // A counter reset (daemon restart) saturates instead of
+        // wrapping to u64::MAX deltas.
+        let mut before = Metrics::new();
+        before.add("place_requests", 500);
+        let window = SloWindow::begin(&before);
+        let mut after = Metrics::new();
+        after.add("place_requests", 40);
+        let report = window.close(&after);
+        assert_eq!(report.requests, 0);
+        assert_eq!(report.availability_pct(), 100.0);
     }
 
     #[test]

@@ -19,7 +19,8 @@ pub mod tasks;
 
 pub use checkpoint::{load_checkpoint, parse_checkpoint, render_checkpoint, save_checkpoint};
 pub use leader::{Coordinator, CoordinatorEvent, CoordinatorReply};
-pub use metrics::{Histogram, Metrics, ShardedMetrics, SharedMetrics};
+pub use metrics::{Histogram, Metrics, ShardedMetrics, SharedMetrics,
+                  SloReport, SloWindow};
 pub use recovery::{recover, RecoveryAction};
 pub use scale::{scale_in, scale_out};
 pub use tasks::{TaskState, TrainingTask};

@@ -30,7 +30,7 @@ use std::sync::Arc;
 use super::adjacency::{pair_jitter, ClusterGraph, DENSE_ORACLE_MAX};
 use super::csr::CsrGraph;
 use super::view::GraphView;
-use crate::cluster::{Fleet, GpuModel, Machine, Region};
+use crate::cluster::{Fleet, GpuModel, Machine, Region, WanModel};
 
 /// Machine counts above this plan on the coarse level first and refine
 /// lazily; at or below it the fine CSR is built eagerly and planning is
@@ -205,6 +205,26 @@ impl HierarchicalGraph {
         self.coarse = build_coarse(&self.summaries, &self.fleet);
         self.version += 1;
         id
+    }
+
+    /// Swap in a new WAN model (link brownout / flap injection): every
+    /// weight the graph serves — coarse region pairs, eager fine CSR,
+    /// on-demand [`demand_weight`](Self::demand_weight) — reads
+    /// `fleet.wan`, so the whole fleet snapshot is re-`Arc`ed with the
+    /// new matrix. Machines, ids, the alive mask, and joins are
+    /// untouched (jitter never shifts); only the ≤12-node coarse level
+    /// and (when eager) the fine CSR are rebuilt, and the version bump
+    /// invalidates every forward-pass memo.
+    pub fn apply_wan(&mut self, wan: WanModel) {
+        let mut fleet = (*self.fleet).clone();
+        fleet.wan = wan;
+        let fleet = Arc::new(fleet);
+        self.coarse = build_coarse(&self.summaries, &fleet);
+        if matches!(self.fine, FineLevel::Full(_)) {
+            self.fine = FineLevel::Full(CsrGraph::from_fleet_direct(&fleet));
+        }
+        self.fleet = fleet;
+        self.version += 1;
     }
 
     fn has_deltas(&self) -> bool {
@@ -514,6 +534,69 @@ mod tests {
     }
 
     #[test]
+    fn apply_wan_matches_a_rebuild_with_the_degraded_matrix() {
+        let fleet = Fleet::synthetic(40, 5, 2);
+        let degraded = fleet.wan.scaled(3.0);
+        let mut h = hier(fleet.clone());
+        h.apply_wan(degraded.clone());
+        let rebuilt = hier(Fleet::new(fleet.machines.clone(),
+                                      degraded.clone()));
+        for i in 0..h.n_nodes() {
+            assert_eq!(
+                GraphView::mean_latency(&h, i).map(f32::to_bits),
+                GraphView::mean_latency(&rebuilt, i).map(f32::to_bits)
+            );
+            for j in 0..h.n_nodes() {
+                assert_eq!(GraphView::weight(&h, i, j).to_bits(),
+                           GraphView::weight(&rebuilt, i, j).to_bits());
+            }
+        }
+        let slots = h.n_nodes() + 3;
+        assert_eq!(GraphView::padded_csr(&h, slots),
+                   GraphView::padded_csr(&rebuilt, slots));
+        // Coarse weights picked up the multiplier too.
+        for a in 0..h.coarse().n {
+            for b in 0..h.coarse().n {
+                assert_eq!(h.coarse().weight(a, b),
+                           rebuilt.coarse().weight(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn apply_wan_preserves_deltas_and_restores_cleanly() {
+        let fleet = Fleet::synthetic(30, 4, 1);
+        let base = fleet.wan.clone();
+        let mut h = hier(fleet.clone());
+        h.apply_failure(3);
+        let id = h.apply_join(Region::Tokyo, GpuModel::A100, 8);
+        h.apply_wan(base.scaled(4.0));
+        assert!(!h.is_alive(3));
+        assert!(h.is_alive(id));
+        // Dead rows stay isolated; alive pairs follow the new matrix.
+        for j in 0..h.n_nodes() {
+            assert_eq!(GraphView::weight(&h, 3, j), 0.0);
+        }
+        let (ra, rb) = (h.machine(0).region, h.machine(1).region);
+        if let Some(lat) = base.scaled(4.0).latency_ms(ra, rb) {
+            assert_eq!(GraphView::weight(&h, 0, 1).to_bits(),
+                       (lat as f32 * pair_jitter(0, 1)).to_bits());
+        }
+        // Flap back to the pristine matrix: weights equal a graph that
+        // never browned out (same failure + join applied).
+        h.apply_wan(base.clone());
+        let mut clean = hier(fleet);
+        clean.apply_failure(3);
+        clean.apply_join(Region::Tokyo, GpuModel::A100, 8);
+        for i in 0..h.n_nodes() {
+            for j in 0..h.n_nodes() {
+                assert_eq!(GraphView::weight(&h, i, j).to_bits(),
+                           GraphView::weight(&clean, i, j).to_bits());
+            }
+        }
+    }
+
+    #[test]
     fn mutations_change_the_memo_key() {
         let mut h = hier(Fleet::synthetic(20, 3, 0));
         let k0 = GraphView::memo_key(&h);
@@ -523,6 +606,10 @@ mod tests {
         h.apply_join(Region::Tokyo, GpuModel::V100, 8);
         let k2 = GraphView::memo_key(&h);
         assert_ne!(k1, k2);
+        let wan = Fleet::synthetic(20, 3, 0).wan.scaled(2.0);
+        h.apply_wan(wan);
+        let k3 = GraphView::memo_key(&h);
+        assert_ne!(k2, k3);
     }
 
     #[test]

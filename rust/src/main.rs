@@ -13,6 +13,9 @@
 //! - `serve`     — the placement-as-a-service daemon (batched GCN
 //!   forwards, live fleet updates over the wire).
 //! - `loadgen`   — drive a running daemon; writes `BENCH_serve.json`.
+//! - `chaos`     — seeded fault injection against a running daemon
+//!   (region outage, revocation wave, link flap, join storm) with
+//!   recovery probing; writes `BENCH_serve_chaos.json`.
 //! - `help`      — print the CLI grammar.
 
 use std::path::PathBuf;
@@ -44,6 +47,7 @@ fn main() -> Result<()> {
         "scenarios" => cmd_scenarios(&cli),
         "serve" => hulk::serve::run_serve(&cli),
         "loadgen" => hulk::serve::run_loadgen(&cli),
+        "chaos" => hulk::serve::run_chaos(&cli),
         "help" | "--help" | "-h" => {
             println!("{}", hulk::cli::usage());
             Ok(())

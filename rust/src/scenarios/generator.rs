@@ -262,6 +262,23 @@ pub fn sample_workload(rng: &mut Rng, budget_gb: f64) -> Vec<ModelSpec> {
     workload
 }
 
+/// Draw a seeded spot-revocation wave: `count` distinct machines out of
+/// `n_machines`, staggered `gap_ms` apart starting at `start_ms` — the
+/// same `sample_indices` + canonical-sort machinery [`generate_case`]
+/// uses for its failure scripts, packaged for `hulk chaos` to replay
+/// against a *live* daemon instead of the simulator. A fresh rng keeps
+/// this off [`generate_case`]'s rng-call-order determinism contract.
+pub fn sample_failure_wave(rng: &mut Rng, n_machines: usize, count: usize,
+                           start_ms: f64, gap_ms: f64) -> Vec<FailurePlan>
+{
+    let count = count.min(n_machines);
+    let mut picks = rng.sample_indices(n_machines, count);
+    rng.shuffle(&mut picks);
+    let mut wave = crate::sim::staggered_script(&picks, start_ms, gap_ms);
+    sort_script(&mut wave);
+    wave
+}
+
 /// Tunables for [`check_case`].
 #[derive(Clone, Copy, Debug)]
 pub struct CheckOptions {
@@ -864,6 +881,30 @@ mod tests {
                     "policy-blocked region pair generated");
             assert!(case.survivor_fleet().len() >= 2);
         }
+    }
+
+    #[test]
+    fn failure_wave_is_seeded_distinct_and_canonical() {
+        let wave = sample_failure_wave(&mut Rng::new(7), 220, 12,
+                                       100.0, 40.0);
+        assert_eq!(wave.len(), 12);
+        let mut ids: Vec<usize> =
+            wave.iter().map(|f| f.machine).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 12, "revoked machines must be distinct");
+        assert!(wave.iter().all(|f| f.machine < 220));
+        // Canonically ordered and staggered at the requested cadence.
+        for (k, f) in wave.iter().enumerate() {
+            assert_eq!(f.at_ms, 100.0 + k as f64 * 40.0);
+        }
+        // Pure function of the seed.
+        assert_eq!(wave, sample_failure_wave(&mut Rng::new(7), 220, 12,
+                                             100.0, 40.0));
+        // Count is clamped to the fleet.
+        assert_eq!(sample_failure_wave(&mut Rng::new(1), 3, 9, 0.0, 1.0)
+                       .len(),
+                   3);
     }
 
     #[test]

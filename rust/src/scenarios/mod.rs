@@ -42,9 +42,9 @@ pub use evaluate::{evaluate_all, evaluate_with, evaluate_with_backend,
                    evaluate_world, SystemEval};
 pub use generator::{check_case, check_generator_determinism,
                     exhaustive_best, generate_case, run_generated,
-                    sample_workload, shrink_case, shrink_report,
-                    CaseReport, CheckOptions, GenCase, GenShape,
-                    GeneratedRun, Violation};
+                    sample_failure_wave, sample_workload, shrink_case,
+                    shrink_report, CaseReport, CheckOptions, GenCase,
+                    GenShape, GeneratedRun, Violation};
 pub use registry::{all_scenarios, find_scenario, resolve_scenarios,
                    run_all};
 pub use runner::{run_specs, run_specs_sharing, ScenarioBody,

@@ -1,0 +1,680 @@
+//! `hulk chaos` — a seeded fault-script driver for a **live** serve
+//! daemon. Where `tests/serve_roundtrip.rs` proves the state machine
+//! and `hulk loadgen` proves throughput, chaos proves *recovery*: it
+//! injects faults through the admin surface (the same wire ops an
+//! operator would use), keeps probing the request plane throughout,
+//! and reports SLOs over exactly the fault window.
+//!
+//! Scripts (`--script`), all seeded (`--seed`) and reusing the
+//! scenario generator's failure-script machinery:
+//!
+//! - `region_outage` — one correlated whole-region kill (a single
+//!   `fail_region` admin op: one epoch, no half-dead region ever
+//!   visible), then probe until placements exclude every dead machine.
+//! - `revocation_wave` — a staggered spot-revocation wave
+//!   ([`sample_failure_wave`]): seeded machine picks revoked one by
+//!   one on the wave's cadence.
+//! - `link_flap` — WAN brownout (`wan` admin op with a seeded factor)
+//!   probed under degradation, then flapped back to `1.0`; the world
+//!   is restored bit-for-bit, so post-flap replies match a daemon that
+//!   never degraded.
+//! - `join_storm` — a burst of seeded `join` ops; recovery is the
+//!   first successful placement on the grown fleet.
+//!
+//! Before the script, chaos attempts a supervision proof: inject one
+//! worker panic and one shard panic (`panic` admin op — requires the
+//! daemon to be started with `--fault-injection`) and verify via
+//! `stats` that `worker_restarts` advanced while `uptime_s` kept
+//! climbing — the crash was recovered *in place*, not respawned. An
+//! unarmed daemon declines the op and the proof is skipped, never
+//! failed.
+//!
+//! SLOs are measured as stats-counter deltas over the run
+//! ([`SloWindow`]) and written as `BENCH_serve_chaos.json` rows
+//! (`serve/availability_pct`, `serve/error_rate`,
+//! `serve/recovery_ms`) — a separate file from loadgen's
+//! `BENCH_serve.json` so a concurrent background load run can't
+//! clobber them. `recovery_ms` is the time from fault injection to the
+//! first placement that excludes every failed machine (for the outage
+//! scripts) or the first healthy reply after restore (flap/storm).
+
+use std::collections::BTreeSet;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::benchkit::{BenchEntry, BenchReport};
+use crate::cli::Cli;
+use crate::cluster::{GpuModel, Region};
+use crate::coordinator::{Metrics, SloWindow};
+use crate::scenarios::{sample_failure_wave, sample_workload};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::framing::roundtrip;
+use super::loadgen::place_request;
+
+/// Which fault script to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosScript {
+    RegionOutage,
+    RevocationWave,
+    LinkFlap,
+    JoinStorm,
+}
+
+impl ChaosScript {
+    pub const ALL: [ChaosScript; 4] = [
+        ChaosScript::RegionOutage,
+        ChaosScript::RevocationWave,
+        ChaosScript::LinkFlap,
+        ChaosScript::JoinStorm,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ChaosScript::RegionOutage => "region_outage",
+            ChaosScript::RevocationWave => "revocation_wave",
+            ChaosScript::LinkFlap => "link_flap",
+            ChaosScript::JoinStorm => "join_storm",
+        }
+    }
+
+    pub fn parse(name: &str) -> Result<ChaosScript> {
+        ChaosScript::ALL
+            .into_iter()
+            .find(|s| s.name() == name)
+            .with_context(|| {
+                let known: Vec<&str> =
+                    ChaosScript::ALL.iter().map(|s| s.name()).collect();
+                format!("unknown chaos script {name:?} (known: {})",
+                        known.join(", "))
+            })
+    }
+}
+
+/// Chaos-run configuration (CLI: `hulk chaos`).
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    pub addr: String,
+    pub script: ChaosScript,
+    pub seed: u64,
+    /// Directory `BENCH_serve_chaos.json` is written to.
+    pub out: PathBuf,
+    /// Sleep between recovery probes.
+    pub probe_interval_ms: u64,
+    /// Hard deadline for recovery; exceeding it fails the run.
+    pub recovery_timeout_ms: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig {
+            addr: "127.0.0.1:7711".to_string(),
+            script: ChaosScript::RegionOutage,
+            seed: 0,
+            out: PathBuf::from("."),
+            probe_interval_ms: 25,
+            recovery_timeout_ms: 20_000,
+        }
+    }
+}
+
+/// What one chaos run measured.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    pub script: &'static str,
+    /// Admin mutations the script landed (machines failed/revoked,
+    /// joins accepted, wan ops applied).
+    pub injected: usize,
+    /// Injection → first recovered placement, milliseconds.
+    pub recovery_ms: f64,
+    /// Post-recovery placements re-verified to exclude every failed
+    /// machine (0 for scripts where exclusion doesn't apply).
+    pub exclusion_checks: usize,
+    pub availability_pct: f64,
+    pub error_rate: f64,
+    pub probes_ok: u64,
+    pub probes_err: u64,
+    /// `worker_restarts` from the final stats reply.
+    pub worker_restarts: u64,
+    /// `Some(n)` when the supervision proof ran (n = restarts seen);
+    /// `None` when the daemon wasn't started with `--fault-injection`.
+    pub supervision_proof: Option<u64>,
+}
+
+/// One admin/stats/probe connection to the daemon, with a single
+/// reconnect retry per call — an injected worker panic legitimately
+/// drops the connection right after its reply.
+struct Daemon {
+    addr: String,
+    stream: TcpStream,
+}
+
+impl Daemon {
+    fn connect(addr: &str) -> Result<Daemon> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to hulk serve at {addr}"))?;
+        Ok(Daemon { addr: addr.to_string(), stream })
+    }
+
+    fn call(&mut self, payload: &str) -> Result<Json> {
+        for attempt in 0..2 {
+            match roundtrip(&mut self.stream, payload.as_bytes()) {
+                Ok(reply) => {
+                    let text = String::from_utf8(reply)
+                        .context("daemon reply is not UTF-8")?;
+                    return Json::parse(&text).map_err(|e| {
+                        anyhow::anyhow!("daemon reply unparsable: {e}")
+                    });
+                }
+                Err(_) if attempt == 0 => {
+                    // The connection died (e.g. the worker we were
+                    // pinned to took an injected panic). Reconnect
+                    // once; a daemon that's actually down fails the
+                    // retry too.
+                    self.stream = TcpStream::connect(&self.addr)
+                        .with_context(|| format!(
+                            "reconnecting to hulk serve at {}", self.addr))?;
+                }
+                Err(e) => {
+                    anyhow::bail!("daemon round-trip failed: {e:?}");
+                }
+            }
+        }
+        unreachable!("the retry loop always returns")
+    }
+
+    fn stats(&mut self) -> Result<Json> {
+        let reply = self.call("{\"op\":\"stats\"}")?;
+        anyhow::ensure!(is_ok(&reply), "stats reply not ok: {}",
+                        reply.render());
+        Ok(reply)
+    }
+}
+
+fn is_ok(reply: &Json) -> bool {
+    reply.get("ok").and_then(Json::as_bool) == Some(true)
+}
+
+/// Rebuild the SLO-relevant counters from a wire stats reply, so
+/// [`SloWindow`] can diff two of them.
+fn counters_from_stats(stats: &Json) -> Metrics {
+    let mut m = Metrics::new();
+    if let Some(counters) =
+        stats.get("metrics").and_then(|x| x.get("counters"))
+    {
+        for name in ["place_requests", "place_errors",
+                     "connections_shed"]
+        {
+            if let Some(v) = counters.get(name).and_then(Json::as_f64) {
+                m.add(name, v as u64);
+            }
+        }
+    }
+    m
+}
+
+fn stat_f64(stats: &Json, field: &str) -> f64 {
+    stats.get(field).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+/// All machine ids referenced by successful per-system placements in a
+/// place reply; `None` when no system produced a placement (the reply
+/// can be top-level ok while every system declined).
+fn placed_machines(reply: &Json) -> Option<BTreeSet<usize>> {
+    let results = reply.get("results").and_then(Json::as_arr)?;
+    let mut machines = BTreeSet::new();
+    let mut any_ok = false;
+    for entry in results {
+        if entry.get("ok").and_then(Json::as_bool) != Some(true) {
+            continue;
+        }
+        any_ok = true;
+        let tasks = entry.get("tasks").and_then(Json::as_arr);
+        for task in tasks.into_iter().flatten() {
+            let ids = task.get("machines").and_then(Json::as_arr);
+            for m in ids.into_iter().flatten() {
+                if let Some(id) = m.as_usize() {
+                    machines.insert(id);
+                }
+            }
+        }
+    }
+    any_ok.then_some(machines)
+}
+
+/// Seeded place-probe generator: every probe draws a fresh workload
+/// (distinct digests, so cache hits can't mask a stale epoch) against
+/// a conservative memory budget — half the healthy fleet's, so probes
+/// stay plannable even after a region dies.
+struct Prober {
+    rng: Rng,
+    budget_gb: f64,
+    ok: u64,
+    err: u64,
+}
+
+impl Prober {
+    fn new(rng: Rng, fleet_memory_gb: f64) -> Prober {
+        Prober { rng, budget_gb: fleet_memory_gb * 0.5, ok: 0, err: 0 }
+    }
+
+    /// One place probe; returns the reply plus the machines a
+    /// successful placement used (`None` = no system placed).
+    fn place(&mut self, daemon: &mut Daemon)
+        -> Result<(Json, Option<BTreeSet<usize>>)>
+    {
+        let workload = sample_workload(&mut self.rng, self.budget_gb);
+        let request = place_request(&workload, Some("hulk"));
+        let reply = daemon.call(&request)?;
+        let machines =
+            if is_ok(&reply) { placed_machines(&reply) } else { None };
+        if machines.is_some() {
+            self.ok += 1;
+        } else {
+            self.err += 1;
+        }
+        Ok((reply, machines))
+    }
+}
+
+/// What a script injected and how fast the daemon recovered.
+struct ScriptOutcome {
+    injected: usize,
+    recovery_ms: f64,
+    exclusion_checks: usize,
+}
+
+/// Poll probes until a placement excludes every machine in `failed`;
+/// returns injection-to-recovery milliseconds.
+fn await_exclusion(daemon: &mut Daemon, probe: &mut Prober,
+                   failed: &BTreeSet<usize>, t0: Instant,
+                   config: &ChaosConfig) -> Result<f64>
+{
+    let deadline = t0 + Duration::from_millis(config.recovery_timeout_ms);
+    loop {
+        let (_, machines) = probe.place(daemon)?;
+        if let Some(machines) = machines {
+            if machines.is_disjoint(failed) {
+                return Ok(t0.elapsed().as_secs_f64() * 1000.0);
+            }
+        }
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "recovery timed out after {}ms: placements still include \
+             failed machines (or no system can place)",
+            config.recovery_timeout_ms);
+        thread::sleep(Duration::from_millis(config.probe_interval_ms));
+    }
+}
+
+/// Poll probes until any successful placement appears (scripts where
+/// machine exclusion doesn't apply); returns t0-to-recovery ms.
+fn await_placement(daemon: &mut Daemon, probe: &mut Prober, t0: Instant,
+                   config: &ChaosConfig) -> Result<f64>
+{
+    await_exclusion(daemon, probe, &BTreeSet::new(), t0, config)
+}
+
+/// Re-probe `n` times post-recovery: **every** successful placement
+/// must exclude the failed machines — recovery that flickers back to
+/// placing on dead machines is a cache-invalidation bug, and this is
+/// where it would surface.
+fn verify_exclusion(daemon: &mut Daemon, probe: &mut Prober,
+                    failed: &BTreeSet<usize>, n: usize) -> Result<usize>
+{
+    let mut checked = 0;
+    for _ in 0..n {
+        let (reply, machines) = probe.place(daemon)?;
+        if let Some(machines) = machines {
+            anyhow::ensure!(
+                machines.is_disjoint(failed),
+                "post-recovery placement used failed machines {:?}: {}",
+                machines.intersection(failed).collect::<Vec<_>>(),
+                reply.render());
+            checked += 1;
+        }
+    }
+    anyhow::ensure!(checked > 0,
+                    "no post-recovery probe produced a placement");
+    Ok(checked)
+}
+
+fn script_region_outage(daemon: &mut Daemon, rng: &mut Rng,
+                        probe: &mut Prober, config: &ChaosConfig)
+    -> Result<ScriptOutcome>
+{
+    // Seeded region pick; the daemon declines regions that are empty
+    // or whose loss would kill the whole fleet, so walk a shuffled
+    // order until one lands.
+    let mut order: Vec<usize> = (0..Region::ALL.len()).collect();
+    rng.shuffle(&mut order);
+    for idx in order {
+        let name = Region::ALL[idx].name();
+        let request = format!(
+            "{{\"op\":\"admin\",\"action\":\"fail_region\",\
+             \"region\":\"{name}\"}}");
+        let t0 = Instant::now();
+        let reply = daemon.call(&request)?;
+        if !is_ok(&reply) {
+            continue;
+        }
+        let failed: BTreeSet<usize> = reply
+            .get("machines")
+            .and_then(Json::as_arr)
+            .map(|arr| arr.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default();
+        anyhow::ensure!(!failed.is_empty(),
+                        "fail_region reply listed no machines: {}",
+                        reply.render());
+        println!("chaos: region {name} down ({} machines, epoch {})",
+                 failed.len(), stat_f64(&reply, "epoch"));
+        let recovery_ms =
+            await_exclusion(daemon, probe, &failed, t0, config)?;
+        let exclusion_checks =
+            verify_exclusion(daemon, probe, &failed, 5)?;
+        return Ok(ScriptOutcome { injected: failed.len(), recovery_ms,
+                                  exclusion_checks });
+    }
+    anyhow::bail!("no region could be failed (fleet already too \
+                   degraded for a correlated outage)")
+}
+
+fn script_revocation_wave(daemon: &mut Daemon, rng: &mut Rng,
+                          probe: &mut Prober, config: &ChaosConfig)
+    -> Result<ScriptOutcome>
+{
+    let stats = daemon.stats()?;
+    let n_machines = stats
+        .get("fleet_machines")
+        .and_then(Json::as_usize)
+        .context("stats reply missing fleet_machines")?;
+    // A seeded, staggered wave on the generator's canonical cadence.
+    let gap_ms = (config.probe_interval_ms * 2) as f64;
+    let wave = sample_failure_wave(rng, n_machines, 8, 0.0, gap_ms);
+    let t0 = Instant::now();
+    let mut revoked = BTreeSet::new();
+    let mut last_at = 0.0;
+    for plan in &wave {
+        let wait_ms = plan.at_ms - last_at;
+        last_at = plan.at_ms;
+        if wait_ms > 0.0 {
+            thread::sleep(Duration::from_secs_f64(wait_ms / 1000.0));
+        }
+        let request = format!(
+            "{{\"op\":\"admin\",\"action\":\"revoke\",\
+             \"machine\":{}}}", plan.machine);
+        let reply = daemon.call(&request)?;
+        // Declines (machine already dead from an earlier script) are
+        // fine — chaos runs compose against one daemon.
+        if is_ok(&reply) {
+            revoked.insert(plan.machine);
+        }
+    }
+    anyhow::ensure!(!revoked.is_empty(),
+                    "revocation wave: every revoke was declined");
+    println!("chaos: revoked {} of {} targeted machines",
+             revoked.len(), wave.len());
+    let recovery_ms = await_exclusion(daemon, probe, &revoked, t0,
+                                      config)?;
+    let exclusion_checks = verify_exclusion(daemon, probe, &revoked, 5)?;
+    Ok(ScriptOutcome { injected: revoked.len(), recovery_ms,
+                       exclusion_checks })
+}
+
+fn script_link_flap(daemon: &mut Daemon, rng: &mut Rng,
+                    probe: &mut Prober, config: &ChaosConfig)
+    -> Result<ScriptOutcome>
+{
+    // Brownout at a seeded factor, probe under degradation, then flap
+    // back to 1.0. Recovery is the first placement on the restored
+    // matrix (which state.rs guarantees is bit-for-bit pristine).
+    let factor = [2.0, 4.0, 8.0, 16.0][rng.below(4)];
+    let brown = daemon.call(&format!(
+        "{{\"op\":\"admin\",\"action\":\"wan\",\"factor\":{factor}}}"))?;
+    anyhow::ensure!(is_ok(&brown), "wan brownout declined: {}",
+                    brown.render());
+    println!("chaos: wan brownout x{factor} (epoch {})",
+             stat_f64(&brown, "epoch"));
+    // The daemon must keep placing *through* the brownout.
+    let browned = Instant::now();
+    await_placement(daemon, probe, browned, config)?;
+    let restore = daemon.call(
+        "{\"op\":\"admin\",\"action\":\"wan\",\"factor\":1.0}")?;
+    anyhow::ensure!(is_ok(&restore), "wan restore declined: {}",
+                    restore.render());
+    let t0 = Instant::now();
+    let recovery_ms = await_placement(daemon, probe, t0, config)?;
+    Ok(ScriptOutcome { injected: 2, recovery_ms, exclusion_checks: 0 })
+}
+
+fn script_join_storm(daemon: &mut Daemon, rng: &mut Rng,
+                     probe: &mut Prober, config: &ChaosConfig)
+    -> Result<ScriptOutcome>
+{
+    let t0 = Instant::now();
+    let mut joined = 0usize;
+    for _ in 0..6 {
+        let region = Region::ALL[rng.below(Region::ALL.len())].name();
+        let gpu = GpuModel::ALL[rng.below(GpuModel::ALL.len())].name();
+        let n_gpus = 1usize << rng.below(4); // 1, 2, 4 or 8
+        let request = format!(
+            "{{\"op\":\"admin\",\"action\":\"join\",\
+             \"region\":\"{region}\",\"gpu\":\"{gpu}\",\
+             \"n_gpus\":{n_gpus}}}");
+        let reply = daemon.call(&request)?;
+        // A capacity decline is legal; the storm keeps going.
+        if is_ok(&reply) {
+            joined += 1;
+        }
+    }
+    anyhow::ensure!(joined >= 1,
+                    "join storm: every join was declined");
+    println!("chaos: join storm landed {joined} machines");
+    let recovery_ms = await_placement(daemon, probe, t0, config)?;
+    Ok(ScriptOutcome { injected: joined, recovery_ms,
+                       exclusion_checks: 0 })
+}
+
+/// Inject one worker and one shard panic and verify supervision
+/// recovered both: `worker_restarts` advances while `uptime_s` keeps
+/// climbing (same process took the hit — not a silent respawn).
+/// Returns `Ok(None)` (a skip, not a failure) when the daemon isn't
+/// armed with `--fault-injection`.
+fn prove_supervision(daemon: &mut Daemon) -> Result<Option<u64>> {
+    let before = daemon.stats()?;
+    let restarts0 = stat_f64(&before, "worker_restarts");
+    let uptime0 = stat_f64(&before, "uptime_s");
+    let worker = daemon.call(
+        "{\"op\":\"admin\",\"action\":\"panic\",\"scope\":\"worker\"}")?;
+    if !is_ok(&worker) {
+        println!("chaos: supervision proof skipped (daemon not started \
+                  with --fault-injection)");
+        return Ok(None);
+    }
+    let shard = daemon.call(
+        "{\"op\":\"admin\",\"action\":\"panic\",\"scope\":\"shard\"}")?;
+    anyhow::ensure!(is_ok(&shard), "shard panic injection declined: {}",
+                    shard.render());
+    // Both crashes land asynchronously; poll until the supervisor has
+    // logged both restarts.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let stats = daemon.stats()?;
+        let restarts = stat_f64(&stats, "worker_restarts");
+        let uptime = stat_f64(&stats, "uptime_s");
+        anyhow::ensure!(
+            uptime >= uptime0,
+            "uptime went backwards ({uptime0}s -> {uptime}s): the \
+             daemon was restarted from outside, not supervised");
+        if restarts >= restarts0 + 2.0 {
+            println!("chaos: supervision proof ok — {} restarts \
+                      recovered in place", restarts - restarts0);
+            return Ok(Some(restarts as u64));
+        }
+        anyhow::ensure!(Instant::now() < deadline,
+                        "supervision proof timed out: worker_restarts \
+                         stuck at {restarts} (started at {restarts0})");
+        thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Run one chaos script against a live daemon and write the SLO rows.
+pub fn run(config: &ChaosConfig) -> Result<ChaosReport> {
+    let mut daemon = Daemon::connect(&config.addr)?;
+    let stats0 = daemon.stats()?;
+    let budget_gb = stats0
+        .get("fleet_memory_gb")
+        .and_then(Json::as_f64)
+        .context("stats reply missing fleet_memory_gb")?;
+    let uptime0 = stat_f64(&stats0, "uptime_s");
+    let window = SloWindow::begin(&counters_from_stats(&stats0));
+
+    let mut rng = Rng::new(config.seed ^ 0x4348_414F); // "CHAO"
+    let mut probe = Prober::new(rng.fork(1), budget_gb);
+
+    let supervision_proof = prove_supervision(&mut daemon)?;
+
+    let outcome = match config.script {
+        ChaosScript::RegionOutage => {
+            script_region_outage(&mut daemon, &mut rng, &mut probe,
+                                 config)?
+        }
+        ChaosScript::RevocationWave => {
+            script_revocation_wave(&mut daemon, &mut rng, &mut probe,
+                                   config)?
+        }
+        ChaosScript::LinkFlap => {
+            script_link_flap(&mut daemon, &mut rng, &mut probe, config)?
+        }
+        ChaosScript::JoinStorm => {
+            script_join_storm(&mut daemon, &mut rng, &mut probe,
+                              config)?
+        }
+    };
+
+    let stats1 = daemon.stats()?;
+    anyhow::ensure!(
+        stat_f64(&stats1, "uptime_s") >= uptime0,
+        "uptime went backwards across the run: the daemon process was \
+         replaced, so the SLO window spans two daemons");
+    let slo = window.close(&counters_from_stats(&stats1));
+    let worker_restarts = stat_f64(&stats1, "worker_restarts") as u64;
+
+    let mut bench = BenchReport::new("serve_chaos");
+    bench.push(BenchEntry::new("serve/availability_pct",
+                               slo.availability_pct(), "%"));
+    bench.push(BenchEntry::new("serve/error_rate", slo.error_rate(),
+                               "ratio"));
+    bench.push(BenchEntry::new("serve/recovery_ms", outcome.recovery_ms,
+                               "ms"));
+    let path = bench.write(&config.out)?;
+    println!("wrote {} ({} entries)", path.display(),
+             bench.entries.len());
+
+    Ok(ChaosReport {
+        script: config.script.name(),
+        injected: outcome.injected,
+        recovery_ms: outcome.recovery_ms,
+        exclusion_checks: outcome.exclusion_checks,
+        availability_pct: slo.availability_pct(),
+        error_rate: slo.error_rate(),
+        probes_ok: probe.ok,
+        probes_err: probe.err,
+        worker_restarts,
+        supervision_proof,
+    })
+}
+
+/// `hulk chaos` CLI entry.
+pub fn run_chaos(cli: &Cli) -> Result<()> {
+    let script = ChaosScript::parse(cli.flag("script").context(
+        "--script is required \
+         (region_outage|revocation_wave|link_flap|join_storm)")?)?;
+    let config = ChaosConfig {
+        addr: cli.flag("addr").unwrap_or("127.0.0.1:7711").to_string(),
+        script,
+        seed: cli.flag_u64("seed", 0)?,
+        out: PathBuf::from(cli.flag("out").unwrap_or(".")),
+        probe_interval_ms: cli.flag_u64("probe-interval-ms", 25)?,
+        recovery_timeout_ms: cli.flag_u64("recovery-timeout-ms",
+                                          20_000)?,
+    };
+    let r = run(&config)?;
+    println!(
+        "chaos {}: {} injected, recovered in {:.0}ms, {} exclusion \
+         checks",
+        r.script, r.injected, r.recovery_ms, r.exclusion_checks);
+    println!(
+        "  window SLO: {:.3}% available, error rate {:.4} \
+         ({} probes ok, {} err)",
+        r.availability_pct, r.error_rate, r.probes_ok, r.probes_err);
+    match r.supervision_proof {
+        Some(n) => println!(
+            "  supervision: proven ({n} total worker_restarts, all \
+             recovered)"),
+        None => println!(
+            "  supervision: not proven (daemon unarmed; start it with \
+             --fault-injection)"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripts_parse_by_name_and_reject_unknowns() {
+        for script in ChaosScript::ALL {
+            assert_eq!(ChaosScript::parse(script.name()).unwrap(),
+                       script);
+        }
+        let err = ChaosScript::parse("meteor_strike").unwrap_err();
+        assert!(err.to_string().contains("region_outage"),
+                "error should list known scripts: {err}");
+    }
+
+    #[test]
+    fn placed_machines_reads_successful_systems_only() {
+        let reply = Json::parse(
+            r#"{"ok":true,"type":"place","results":[
+                {"system":"hulk","ok":true,"tasks":[
+                    {"model":"bert_large","machines":[3,4]},
+                    {"model":"resnet152","machines":[9]}]},
+                {"system":"system_a","ok":false,"error":"nope"}]}"#)
+            .unwrap();
+        let machines = placed_machines(&reply).unwrap();
+        assert_eq!(machines.into_iter().collect::<Vec<_>>(),
+                   vec![3, 4, 9]);
+        // All systems failing -> None, even though the envelope is ok.
+        let none = Json::parse(
+            r#"{"ok":true,"results":[{"ok":false,"error":"x"}]}"#)
+            .unwrap();
+        assert!(placed_machines(&none).is_none());
+        // No results field at all -> None.
+        assert!(placed_machines(&Json::parse("{\"ok\":true}").unwrap())
+                    .is_none());
+    }
+
+    #[test]
+    fn slo_counters_rebuild_from_a_stats_reply() {
+        let stats = Json::parse(
+            r#"{"ok":true,"metrics":{"counters":{
+                "place_requests":120,"place_errors":3,
+                "connections_shed":2,"unrelated":9}}}"#)
+            .unwrap();
+        let m = counters_from_stats(&stats);
+        assert_eq!(m.counter("place_requests"), 120);
+        assert_eq!(m.counter("place_errors"), 3);
+        assert_eq!(m.counter("connections_shed"), 2);
+        assert_eq!(m.counter("unrelated"), 0, "only SLO counters copy");
+        // Degenerate stats (no metrics) -> all-zero counters.
+        let empty = counters_from_stats(&Json::parse("{}").unwrap());
+        assert_eq!(empty.counter("place_requests"), 0);
+    }
+}

@@ -17,6 +17,13 @@
 //! falls behind, measured throughput drops below the target instead of
 //! silently thinning the load.
 //!
+//! Fault tolerance (chaos harness): connects — initial and mid-run
+//! reconnects after a dropped connection — retry with capped
+//! exponential backoff, and every failed attempt counts as an error,
+//! so a flapping daemon's unavailability stays visible in the totals.
+//! `--max-error-rate F` turns the observed `errors / (ok + errors)`
+//! into a nonzero exit for CI gating.
+//!
 //! Reported rows:
 //! - `serve/p50_place_us`, `serve/p99_place_us` — client-observed
 //!   round-trip latency (includes the batch window by design: that is
@@ -55,6 +62,29 @@ use super::framing::roundtrip;
 /// limit — and a bounded pool keeps repeats actually repeating).
 const REPEAT_HISTORY: usize = 64;
 
+/// Connect attempts per [`connect_with_retry`] call; backoff doubles
+/// from 10ms and caps at 160ms (~310ms worst case per call).
+const CONNECT_ATTEMPTS: u32 = 6;
+
+/// Connect with capped exponential backoff. Every failed attempt is
+/// counted in `errors` — the client experienced it, so a flapping
+/// daemon cannot launder unavailability through silent retries.
+fn connect_with_retry(addr: &str, errors: &mut u64) -> Option<TcpStream> {
+    for attempt in 0..CONNECT_ATTEMPTS {
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Some(stream),
+            Err(_) => {
+                *errors += 1;
+                if attempt + 1 < CONNECT_ATTEMPTS {
+                    thread::sleep(Duration::from_millis(
+                        10 << attempt.min(4)));
+                }
+            }
+        }
+    }
+    None
+}
+
 /// Load-generator configuration (CLI: `hulk loadgen`).
 #[derive(Clone, Debug)]
 pub struct LoadgenConfig {
@@ -77,6 +107,10 @@ pub struct LoadgenConfig {
     /// (default) keeps the all-fresh mix; higher values manufacture
     /// cache-hit traffic.
     pub repeat_mix: f64,
+    /// `--max-error-rate`: if set, `run_loadgen` exits nonzero when
+    /// `errors / (ok + errors)` exceeds it — the chaos-smoke SLO gate.
+    /// `None` keeps the old behavior (only all-errors fails).
+    pub max_error_rate: Option<f64>,
 }
 
 /// What one run measured; every field also lands in the JSON rows or
@@ -132,11 +166,12 @@ pub fn run(config: &LoadgenConfig) -> Result<LoadgenReport> {
         handles.push(thread::spawn(move || -> (Vec<f64>, u64, u64) {
             let mut rng = Rng::new(seed ^ 0x4C4F_4144) // "LOAD"
                 .fork(c as u64);
-            let Ok(mut stream) = TcpStream::connect(&addr) else {
-                return (Vec::new(), 0, 1);
-            };
             let mut latencies = Vec::new();
             let (mut sent, mut errors) = (0u64, 0u64);
+            let Some(mut stream) = connect_with_retry(&addr, &mut errors)
+            else {
+                return (Vec::new(), sent, errors);
+            };
             let mut history: Vec<Vec<ModelSpec>> = Vec::new();
             let thread_start = Instant::now();
             let mut next = thread_start;
@@ -164,7 +199,15 @@ pub fn run(config: &LoadgenConfig) -> Result<LoadgenReport> {
                     Ok(_) => errors += 1,
                     Err(_) => {
                         errors += 1;
-                        break; // connection gone; stop this thread
+                        // Connection gone — the daemon may be
+                        // mid-recovery (restarted worker, brief accept
+                        // stall). Reconnect with backoff instead of
+                        // abandoning this thread's share of the load;
+                        // only a daemon that stays down kills it.
+                        match connect_with_retry(&addr, &mut errors) {
+                            Some(s) => stream = s,
+                            None => break,
+                        }
                     }
                 }
                 next += interval;
@@ -271,7 +314,10 @@ fn fetch_stats(addr: &str) -> Result<Json> {
 
 /// Render one Place request for `workload` (always shipping explicit
 /// batch sizes so the daemon replans exactly what the sampler drew).
-fn place_request(workload: &[ModelSpec], systems: Option<&str>) -> String {
+/// Shared with the chaos harness's recovery probes.
+pub(crate) fn place_request(workload: &[ModelSpec], systems: Option<&str>)
+    -> String
+{
     let mut req = Json::obj();
     req.set("op", Json::from("place"));
     let mut wl = Json::arr();
@@ -304,6 +350,10 @@ pub fn run_loadgen(cli: &Cli) -> Result<()> {
         shutdown: cli.flag_bool("shutdown"),
         connections: cli.flag_u64("connections", 0)? as usize,
         repeat_mix: cli.flag_f64("repeat-mix", 0.0)?,
+        max_error_rate: match cli.flag("max-error-rate") {
+            Some(_) => Some(cli.flag_f64("max-error-rate", 0.0)?),
+            None => None,
+        },
     };
     let r = run(&config)?;
     println!(
@@ -327,6 +377,15 @@ pub fn run_loadgen(cli: &Cli) -> Result<()> {
              r.p50_cached_us, r.p50_uncached_us);
     if r.ok == 0 {
         anyhow::bail!("loadgen got zero successful replies");
+    }
+    if let Some(max) = config.max_error_rate {
+        anyhow::ensure!((0.0..=1.0).contains(&max),
+                        "--max-error-rate must be in [0, 1], got {max}");
+        let rate = r.errors as f64 / (r.ok + r.errors).max(1) as f64;
+        println!("  error rate {rate:.4} (gate: <= {max})");
+        anyhow::ensure!(
+            rate <= max,
+            "error rate {rate:.4} exceeds --max-error-rate {max}");
     }
     Ok(())
 }

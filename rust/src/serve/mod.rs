@@ -23,7 +23,16 @@
 //!   its own shared [`GnnSplitter`] forward and its own cache.
 //! - [`loadgen`]  — `hulk loadgen`: seeded request mixes with a
 //!   `--repeat-mix` knob for cache-hit traffic, µs latency
-//!   percentiles, `BENCH_serve.json`.
+//!   percentiles, `BENCH_serve.json`; connects retry with capped
+//!   backoff and `--max-error-rate` turns the observed error rate
+//!   into a CI gate.
+//! - [`chaos`]    — `hulk chaos`: seeded fault scripts (correlated
+//!   region outage, staggered revocation wave, WAN brownout/flap,
+//!   join storm) injected through the admin surface of a *live*
+//!   daemon, with recovery probing, a supervision proof (panic
+//!   injection behind `--fault-injection`), and SLO rows
+//!   (`serve/availability_pct`, `serve/error_rate`,
+//!   `serve/recovery_ms`) in `BENCH_serve_chaos.json`.
 //!
 //! The contract the round-trip tests pin: replies are deterministic in
 //! the world state (wall-clock lives only in metrics), so a batched
@@ -32,20 +41,30 @@
 //! single served answer is byte-identical to calling the planner
 //! directly on an equal world.
 //!
+//! Degradation ladder (chaos hardening, DESIGN.md §Degradation): a
+//! healthy daemon answers everything; under overload it sheds at the
+//! accept queue with typed `overloaded` replies; when the GCN path
+//! cannot plan the surviving fleet it falls back to the oracle
+//! splitter and flags the reply `degraded`; only when even that fails
+//! does a request get a typed planning error. Worker/shard panics are
+//! supervised-and-restarted (`worker_restarts`), never fatal.
+//!
 //! [`HierarchicalGraph`]: crate::graph::HierarchicalGraph
 //! [`GnnSplitter`]: crate::gnn::GnnSplitter
 
+pub mod chaos;
 pub mod framing;
 pub mod loadgen;
 pub mod protocol;
 pub mod server;
 pub mod state;
 
+pub use chaos::{run_chaos, ChaosConfig, ChaosReport, ChaosScript};
 pub use framing::{read_frame, roundtrip, write_frame, FrameError,
                   MAX_FRAME};
 pub use loadgen::{run_loadgen, LoadgenConfig, LoadgenReport};
-pub use protocol::{error_reply, parse_request, AdminOp, PlaceRequest,
-                   Request};
+pub use protocol::{error_reply, parse_request, AdminOp, PanicScope,
+                   PlaceRequest, Request, MAX_WAN_FACTOR};
 pub use server::{run_serve, ServeConfig, Server};
 pub use state::{default_classifier, CacheScope, LiveWorld,
                 PlacementCache, WorldCell, SERVE_SLOTS};

@@ -6,9 +6,16 @@
 //! | op         | fields                                               |
 //! |------------|------------------------------------------------------|
 //! | `place`    | `workload`: `[{"model": slug, "batch"?: N}]`, `systems`?: `[slug]` (default `["hulk"]`) |
-//! | `admin`    | `action`: `join` (`region`, `gpu`, `n_gpus`) \| `fail` / `revoke` (`machine`) |
+//! | `admin`    | `action`: `join` (`region`, `gpu`, `n_gpus`) \| `fail` / `revoke` (`machine`) \| `fail_region` (`region`) \| `wan` (`factor`) \| `panic` (`scope`) |
 //! | `stats`    | —                                                    |
 //! | `shutdown` | —                                                    |
+//!
+//! `fail_region` is the chaos harness's correlated-outage injection
+//! (every alive machine of the region dies in one epoch); `wan` swaps
+//! in a degraded WAN multiplier (`factor` ≥ 1, `1.0` restores the
+//! pristine matrix); `panic` deliberately crashes one worker or
+//! batcher shard to exercise supervision and is refused unless the
+//! daemon was started with `--fault-injection`.
 //!
 //! Model slugs come from [`ModelSpec::slug`]; region and GPU names are
 //! the display names `hulk info` prints. Every parse failure is a
@@ -77,12 +84,34 @@ impl PlaceRequest {
 /// A live fleet mutation. `Revoke` is a spot-instance revocation —
 /// operationally identical to `Fail` (the machine keeps its id, drops
 /// out of every weight and pool), tracked under its own counter.
+/// `FailRegion` and `Wan` are the chaos harness's correlated-outage
+/// and link-brownout injections; `Panic` is supervised-crash fault
+/// injection (worker/shard scope), gated behind `--fault-injection`.
 #[derive(Clone, Copy, Debug)]
 pub enum AdminOp {
     Join { region: Region, gpu: GpuModel, n_gpus: usize },
     Fail { machine: usize },
     Revoke { machine: usize },
+    FailRegion { region: Region },
+    Wan { factor: f64 },
+    Panic { scope: PanicScope },
 }
+
+/// Which thread class a `panic` admin op crashes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PanicScope {
+    /// The worker thread handling the connection (after the reply is
+    /// written, so the injector sees an acknowledgment).
+    Worker,
+    /// A batcher shard (a poison job makes the shard loop panic
+    /// mid-batch).
+    Shard,
+}
+
+/// Ceiling for the `wan` admin op's degradation factor — large enough
+/// for any brownout sweep, small enough that a typo (`factor: 4000`)
+/// is a typed error instead of an unplannable world.
+pub const MAX_WAN_FACTOR: f64 = 64.0;
 
 /// Largest `n_gpus` a join may claim (matches the synthetic fleet
 /// generator's ceiling; a typo like `n_gpus: 80000` should be a typed
@@ -175,7 +204,8 @@ fn parse_admin(json: &Json) -> Result<AdminOp, String> {
         .get("action")
         .and_then(Json::as_str)
         .ok_or_else(|| "admin needs a string \"action\" field \
-                        (join|fail|revoke)".to_string())?;
+                        (join|fail|revoke|fail_region|wan|panic)"
+                        .to_string())?;
     match action {
         "join" => {
             let region = parse_region(
@@ -208,8 +238,38 @@ fn parse_admin(json: &Json) -> Result<AdminOp, String> {
                 AdminOp::Revoke { machine }
             })
         }
+        "fail_region" => {
+            let region = parse_region(
+                json.get("region").and_then(Json::as_str).ok_or_else(
+                    || "fail_region needs a \"region\" name".to_string())?)?;
+            Ok(AdminOp::FailRegion { region })
+        }
+        "wan" => {
+            let factor = json
+                .get("factor")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| "wan needs a numeric \"factor\"".to_string())?;
+            if !factor.is_finite() || factor < 1.0
+                || factor > MAX_WAN_FACTOR
+            {
+                return Err(format!(
+                    "\"factor\" must be in 1.0..={MAX_WAN_FACTOR}, \
+                     got {factor}"));
+            }
+            Ok(AdminOp::Wan { factor })
+        }
+        "panic" => {
+            let scope = match json.get("scope").and_then(Json::as_str) {
+                Some("worker") => PanicScope::Worker,
+                Some("shard") => PanicScope::Shard,
+                _ => return Err("panic needs a \"scope\" of \
+                                 \"worker\" or \"shard\"".to_string()),
+            };
+            Ok(AdminOp::Panic { scope })
+        }
         other => Err(format!(
-            "unknown admin action {other:?} (join|fail|revoke)")),
+            "unknown admin action {other:?} \
+             (join|fail|revoke|fail_region|wan|panic)")),
     }
 }
 
@@ -285,6 +345,50 @@ mod tests {
             .unwrap();
         assert!(matches!(req,
             Request::Admin(AdminOp::Revoke { machine: 0 })));
+    }
+
+    #[test]
+    fn chaos_admin_ops_parse_and_validate() {
+        let region = Region::ALL[2].name();
+        let req = parse(&format!(
+            r#"{{"op":"admin","action":"fail_region","region":"{region}"}}"#))
+            .unwrap();
+        assert!(matches!(req,
+            Request::Admin(AdminOp::FailRegion { .. })));
+        let req = parse(r#"{"op":"admin","action":"wan","factor":4.5}"#)
+            .unwrap();
+        let Request::Admin(AdminOp::Wan { factor }) = req else {
+            panic!("expected wan op")
+        };
+        assert_eq!(factor, 4.5);
+        // factor 1.0 (restore) is legal.
+        assert!(parse(r#"{"op":"admin","action":"wan","factor":1.0}"#)
+                    .is_ok());
+        let req = parse(r#"{"op":"admin","action":"panic",
+                            "scope":"worker"}"#).unwrap();
+        assert!(matches!(req, Request::Admin(AdminOp::Panic {
+            scope: PanicScope::Worker })));
+        let req = parse(r#"{"op":"admin","action":"panic",
+                            "scope":"shard"}"#).unwrap();
+        assert!(matches!(req, Request::Admin(AdminOp::Panic {
+            scope: PanicScope::Shard })));
+        // Out-of-range, missing, and malformed chaos fields are typed
+        // errors.
+        for (payload, needle) in [
+            (r#"{"op":"admin","action":"wan","factor":0.5}"#, "factor"),
+            (r#"{"op":"admin","action":"wan","factor":1000}"#, "factor"),
+            (r#"{"op":"admin","action":"wan"}"#, "factor"),
+            (r#"{"op":"admin","action":"fail_region"}"#, "region"),
+            (r#"{"op":"admin","action":"fail_region",
+                 "region":"Atlantis"}"#, "unknown region"),
+            (r#"{"op":"admin","action":"panic"}"#, "scope"),
+            (r#"{"op":"admin","action":"panic","scope":"daemon"}"#,
+             "scope"),
+        ] {
+            let err = parse(payload).unwrap_err();
+            assert!(err.contains(needle),
+                    "payload {payload:?}: error {err:?} missing {needle:?}");
+        }
     }
 
     #[test]

@@ -49,11 +49,25 @@
 //! read timeout, and a timeout (like any framing-fatal error) drops the
 //! connection. Parse-level garbage gets a typed error reply and the
 //! connection lives on — see [`super::framing`] for the taxonomy.
+//!
+//! Self-healing (chaos hardening): worker and shard threads run under a
+//! panic supervisor ([`supervised`]) — a panicking iteration is counted
+//! (`worker_restarts`) and the loop restarted, so no single bad request
+//! or injected fault permanently shrinks the pool. The accept queue is
+//! depth-bounded: past [`ServeConfig::queue_depth`] waiting
+//! connections, new arrivals are shed with a typed
+//! `{"ok":false,"error":"overloaded"}` reply instead of queueing into a
+//! hang. Admin mutations publish optimistically
+//! ([`WorldCell::publish_if_current`]) and retry epoch-race losses with
+//! capped exponential backoff + seeded jitter. `--fault-injection` arms
+//! the `panic` admin op so the chaos harness can prove the supervisor
+//! recovers, not merely that nothing happened to die.
 
 use std::collections::VecDeque;
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -67,10 +81,11 @@ use crate::gnn::GnnSplitter;
 use crate::graph::max_dense_n;
 use crate::planner::CostBackend;
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 use super::framing::{read_frame, write_frame, FrameError, MAX_FRAME};
-use super::protocol::{error_reply, parse_request, AdminOp, PlaceRequest,
-                      Request};
+use super::protocol::{error_reply, parse_request, AdminOp, PanicScope,
+                      PlaceRequest, Request};
 use super::state::{default_classifier, LiveWorld, PlacementCache,
                    WorldCell};
 
@@ -99,6 +114,15 @@ pub struct ServeConfig {
     /// Per-shard placement-cache entries; `0` disables caching (the
     /// uncached parity baseline).
     pub cache_capacity: usize,
+    /// Accept-queue depth bound: connections arriving while this many
+    /// are already waiting for a worker are shed with a typed
+    /// `overloaded` reply and closed — overload degrades to fast
+    /// refusals, never to an unbounded queue.
+    pub queue_depth: usize,
+    /// Arms the `panic` admin op (worker/shard crash injection) for
+    /// the chaos harness. Off by default: an unarmed daemon declines
+    /// the op with a typed error.
+    pub fault_injection: bool,
 }
 
 impl Default for ServeConfig {
@@ -113,6 +137,8 @@ impl Default for ServeConfig {
             read_timeout_ms: 2000,
             shards: 0,
             cache_capacity: 1024,
+            queue_depth: 1024,
+            fault_injection: false,
         }
     }
 }
@@ -140,6 +166,17 @@ struct Shared {
     queue: Mutex<VecDeque<Conn>>,
     queue_cv: Condvar,
     read_timeout: Duration,
+    /// Accept-queue bound; see [`ServeConfig::queue_depth`].
+    queue_depth: usize,
+    /// Whether the `panic` admin op is armed.
+    fault_injection: bool,
+    /// Daemon start time — `uptime_s` in the `Stats` reply.
+    started: Instant,
+    /// Config seed: de-correlates the admin-retry jitter streams.
+    seed: u64,
+    /// Per-admin-call nonce: seeds each call's jitter rng distinctly
+    /// and round-robins shard-scope panic injection.
+    admin_seq: AtomicU64,
 }
 
 /// One `Place` awaiting a batcher shard. The digest rides along so the
@@ -148,6 +185,22 @@ struct PlaceJob {
     req: PlaceRequest,
     digest: u64,
     reply: mpsc::Sender<String>,
+}
+
+/// What rides a shard channel: real work, or an injected fault.
+enum ShardJob {
+    Place(PlaceJob),
+    /// Fault injection: the shard panics on receipt, so the supervisor
+    /// restart path gets exercised by a genuine mid-batch crash.
+    Poison,
+}
+
+/// Unwrap a shard job at a receive site; poison is the injected fault.
+fn open_job(job: ShardJob) -> PlaceJob {
+    match job {
+        ShardJob::Place(job) => job,
+        ShardJob::Poison => panic!("injected fault: shard poison"),
+    }
 }
 
 /// A running daemon. `spawn` is the in-process entry point the tests
@@ -163,6 +216,8 @@ pub struct Server {
 impl Server {
     pub fn spawn(config: &ServeConfig) -> Result<Server> {
         anyhow::ensure!(config.workers >= 1, "serve needs >= 1 worker");
+        anyhow::ensure!(config.queue_depth >= 1,
+                        "serve needs --queue-depth >= 1");
         anyhow::ensure!(config.addr.is_some() || config.uds.is_some(),
                         "serve needs --addr or --uds");
         let n_shards = config.resolved_shards();
@@ -174,6 +229,11 @@ impl Server {
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
             read_timeout: Duration::from_millis(config.read_timeout_ms),
+            queue_depth: config.queue_depth,
+            fault_injection: config.fault_injection,
+            started: Instant::now(),
+            seed: config.seed,
+            admin_seq: AtomicU64::new(0),
         });
         let mut threads = Vec::new();
 
@@ -193,22 +253,30 @@ impl Server {
 
         let mut shard_txs = Vec::with_capacity(n_shards);
         for shard_idx in 0..n_shards {
-            let (tx, rx) = mpsc::channel::<PlaceJob>();
+            let (tx, rx) = mpsc::channel::<ShardJob>();
             shard_txs.push(tx);
             let shared = Arc::clone(&shared);
             let window = config.batch_window_ms;
             let seed = config.seed;
             let cache_capacity = config.cache_capacity;
             threads.push(thread::spawn(move || {
-                shard_loop(&shared, shard_idx, &rx, window, seed,
-                           cache_capacity);
+                // `rx` lives out here, outside the supervised scope: a
+                // panicking shard drops its in-flight batch (those
+                // workers get typed errors) but never its receiver, so
+                // the workers' senders stay valid across restarts.
+                supervised(&shared, "shard", || {
+                    shard_loop(&shared, shard_idx, &rx, window, seed,
+                               cache_capacity);
+                });
             }));
         }
         for _ in 0..config.workers {
             let shared = Arc::clone(&shared);
             let shard_txs = shard_txs.clone();
             threads.push(thread::spawn(move || {
-                worker_loop(&shared, &shard_txs);
+                supervised(&shared, "worker", || {
+                    worker_loop(&shared, &shard_txs);
+                });
             }));
         }
         // Workers hold the only senders now: when they exit, every
@@ -257,11 +325,50 @@ impl Server {
     }
 }
 
+/// Panic supervision for worker and shard threads: a panicking
+/// iteration is counted and the loop restarted; a clean return is a
+/// deliberate exit (shutdown, channel disconnect) and ends the thread.
+///
+/// `AssertUnwindSafe` is sound here because everything `body` shares
+/// lives behind mutexes whose lock sites recover from poisoning
+/// (`PoisonError::into_inner`) or behind channels, and everything else
+/// (connections, batches, splitters, caches) is thread-local state the
+/// restarted iteration rebuilds from scratch.
+fn supervised(shared: &Shared, role: &str, body: impl Fn()) {
+    loop {
+        if panic::catch_unwind(AssertUnwindSafe(&body)).is_ok() {
+            return;
+        }
+        // `worker_restarts` is the total the stats reply and the chaos
+        // gate read; the per-role counter says *what* restarted.
+        shared.metrics.global().inc("worker_restarts");
+        shared.metrics.global().inc(&format!("restarts_{role}"));
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
 #[cfg(unix)]
 fn bind_uds(path: &str) -> Result<Acceptor> {
-    // Replace a stale socket file from a crashed daemon.
-    let _ = std::fs::remove_file(path);
-    let listener = std::os::unix::net::UnixListener::bind(path)?;
+    use std::os::unix::net::{UnixListener, UnixStream};
+    // A leftover socket file is only removable if it is actually
+    // stale: probe-connect first, and refuse to evict a live daemon —
+    // silently unlinking its socket would strand it serving a path no
+    // client can reach.
+    if std::fs::metadata(path).is_ok() {
+        match UnixStream::connect(path) {
+            Ok(_) => anyhow::bail!(
+                "refusing to bind {path}: a live daemon is answering on \
+                 it; shut it down first or pick another --uds path"),
+            // Nothing answered (connection refused / not a socket):
+            // stale file from a crashed daemon, safe to replace.
+            Err(_) => {
+                let _ = std::fs::remove_file(path);
+            }
+        }
+    }
+    let listener = UnixListener::bind(path)?;
     listener.set_nonblocking(true)?;
     Ok(Acceptor::Uds(listener))
 }
@@ -314,6 +421,14 @@ impl Conn {
             Conn::Uds(s) => s.set_read_timeout(Some(dur)),
         }
     }
+
+    fn set_write_timeout(&self, dur: Duration) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_write_timeout(Some(dur)),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.set_write_timeout(Some(dur)),
+        }
+    }
 }
 
 impl Read for Conn {
@@ -356,9 +471,18 @@ fn accept_loop(shared: &Shared, acceptor: &Acceptor) {
                     .queue
                     .lock()
                     .unwrap_or_else(|p| p.into_inner());
-                q.push_back(conn);
-                drop(q);
-                shared.queue_cv.notify_one();
+                if q.len() >= shared.queue_depth {
+                    // Bounded queue: overload degrades to a fast typed
+                    // refusal at the door, never an unbounded backlog
+                    // that turns into client hangs.
+                    drop(q);
+                    shared.metrics.global().inc("connections_shed");
+                    shed_connection(conn);
+                } else {
+                    q.push_back(conn);
+                    drop(q);
+                    shared.queue_cv.notify_one();
+                }
             }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
                 thread::sleep(Duration::from_millis(5));
@@ -368,7 +492,15 @@ fn accept_loop(shared: &Shared, acceptor: &Acceptor) {
     }
 }
 
-fn worker_loop(shared: &Shared, shard_txs: &[mpsc::Sender<PlaceJob>]) {
+/// Best-effort `overloaded` reply, then drop (close) the connection.
+/// The short write timeout keeps a slow client from pinning the accept
+/// loop — the reply is a courtesy, the close is the contract.
+fn shed_connection(mut conn: Conn) {
+    let _ = conn.set_write_timeout(Duration::from_millis(100));
+    let _ = write_frame(&mut conn, error_reply("overloaded").as_bytes());
+}
+
+fn worker_loop(shared: &Shared, shard_txs: &[mpsc::Sender<ShardJob>]) {
     loop {
         let conn = {
             let mut q = shared
@@ -394,10 +526,21 @@ fn worker_loop(shared: &Shared, shard_txs: &[mpsc::Sender<PlaceJob>]) {
     }
 }
 
+/// What the worker does with the connection after writing a reply.
+enum Disposition {
+    /// Keep framing requests off this connection.
+    Keep,
+    /// Close the connection (shutdown, desynced stream).
+    Close,
+    /// Fault injection accepted: reply first, then panic this worker
+    /// so the supervisor has a genuine crash to recover from.
+    PanicAfterReply,
+}
+
 /// Frame requests off one connection until it closes, times out, or a
 /// framing-fatal error desynchronizes the stream.
 fn serve_connection(conn: &mut Conn, shared: &Shared,
-                    shard_txs: &[mpsc::Sender<PlaceJob>])
+                    shard_txs: &[mpsc::Sender<ShardJob>])
 {
     shared.metrics.global().inc("connections");
     let _ = conn.set_read_timeout(shared.read_timeout);
@@ -405,13 +548,17 @@ fn serve_connection(conn: &mut Conn, shared: &Shared,
         match read_frame(conn) {
             Ok(None) => return, // clean EOF
             Ok(Some(payload)) => {
-                let (reply, close) =
+                let (reply, disposition) =
                     handle_payload(&payload, shared, shard_txs);
                 if write_frame(conn, reply.as_bytes()).is_err() {
                     return;
                 }
-                if close {
-                    return;
+                match disposition {
+                    Disposition::Keep => {}
+                    Disposition::Close => return,
+                    Disposition::PanicAfterReply => {
+                        panic!("injected fault: worker panic")
+                    }
                 }
             }
             Err(FrameError::Oversized(len)) => {
@@ -431,16 +578,16 @@ fn serve_connection(conn: &mut Conn, shared: &Shared,
     }
 }
 
-/// Returns `(reply, close_connection)`.
 fn handle_payload(payload: &[u8], shared: &Shared,
-                  shard_txs: &[mpsc::Sender<PlaceJob>]) -> (String, bool)
+                  shard_txs: &[mpsc::Sender<ShardJob>])
+    -> (String, Disposition)
 {
     let request = match parse_request(payload) {
         Ok(r) => r,
         Err(msg) => {
             // Parse-level garbage: typed error, keep the connection.
             shared.metrics.global().inc("protocol_errors");
-            return (error_reply(&msg), false);
+            return (error_reply(&msg), Disposition::Keep);
         }
     };
     match request {
@@ -451,9 +598,12 @@ fn handle_payload(payload: &[u8], shared: &Shared,
             // shard (its cache + splitter), distinct workloads spread.
             let shard = (digest % shard_txs.len() as u64) as usize;
             let (tx, rx) = mpsc::channel();
-            let job = PlaceJob { req, digest, reply: tx };
+            let job = ShardJob::Place(PlaceJob { req, digest, reply: tx });
             if shard_txs[shard].send(job).is_err() {
-                return (error_reply("daemon is shutting down"), true);
+                // Receivers outlive shard panics (they sit outside the
+                // supervised scope) — a dead channel is real teardown.
+                return (error_reply("daemon is shutting down"),
+                        Disposition::Close);
             }
             match rx.recv() {
                 Ok(reply) => {
@@ -464,15 +614,32 @@ fn handle_payload(payload: &[u8], shared: &Shared,
                     shared.metrics.shard(shard).observe(
                         "place_latency_us",
                         started.elapsed().as_micros() as f64);
-                    (reply, false)
+                    (reply, Disposition::Keep)
                 }
-                Err(_) => (error_reply("daemon is shutting down"), true),
+                Err(_) if shared.shutdown.load(Ordering::SeqCst) => {
+                    (error_reply("daemon is shutting down"),
+                     Disposition::Close)
+                }
+                Err(_) => {
+                    // The shard panicked mid-batch and dropped our
+                    // reply sender; the supervisor is already
+                    // restarting it. The connection stays usable — a
+                    // retried request will land on the fresh shard.
+                    shared.metrics.global().inc("place_errors");
+                    (error_reply("batcher restarted; retry"),
+                     Disposition::Keep)
+                }
             }
         }
-        Request::Admin(op) => (handle_admin(op, shared), false),
+        Request::Admin(AdminOp::Panic { scope }) => {
+            handle_panic_op(scope, shared, shard_txs)
+        }
+        Request::Admin(op) => {
+            (handle_admin(op, shared), Disposition::Keep)
+        }
         Request::Stats => {
             shared.metrics.global().inc("stats_requests");
-            (stats_reply(shared), false)
+            (stats_reply(shared), Disposition::Keep)
         }
         Request::Shutdown => {
             shared.shutdown.store(true, Ordering::SeqCst);
@@ -480,48 +647,160 @@ fn handle_payload(payload: &[u8], shared: &Shared,
             let mut reply = Json::obj();
             reply.set("ok", Json::Bool(true));
             reply.set("type", Json::from("shutdown"));
-            (reply.render(), true)
+            (reply.render(), Disposition::Close)
+        }
+    }
+}
+
+/// The `panic` admin op: gated behind `--fault-injection`, never
+/// touches the world. Worker scope panics *this* thread after the
+/// reply is on the wire; shard scope poisons a batcher channel
+/// (round-robin) so the crash lands mid-batch on the far side.
+fn handle_panic_op(scope: PanicScope, shared: &Shared,
+                   shard_txs: &[mpsc::Sender<ShardJob>])
+    -> (String, Disposition)
+{
+    if !shared.fault_injection {
+        shared.metrics.global().inc("admin_errors");
+        return (error_reply(
+            "fault injection is disabled; start the daemon with \
+             --fault-injection"), Disposition::Keep);
+    }
+    let mut reply = Json::obj();
+    reply.set("ok", Json::Bool(true));
+    reply.set("type", Json::from("admin"));
+    reply.set("op", Json::from("panic"));
+    match scope {
+        PanicScope::Worker => {
+            shared.metrics.global().inc("admin_panics");
+            reply.set("scope", Json::from("worker"));
+            (reply.render(), Disposition::PanicAfterReply)
+        }
+        PanicScope::Shard => {
+            let shard = shared.admin_seq.fetch_add(1, Ordering::Relaxed)
+                as usize
+                % shard_txs.len();
+            if shard_txs[shard].send(ShardJob::Poison).is_err() {
+                return (error_reply("daemon is shutting down"),
+                        Disposition::Close);
+            }
+            shared.metrics.global().inc("admin_panics");
+            reply.set("scope", Json::from("shard"));
+            reply.set("shard", Json::from(shard));
+            (reply.render(), Disposition::Keep)
+        }
+    }
+}
+
+/// Optimistic-publish attempts before an admin op reports contention.
+/// With the capped backoff below this bounds a call to ~100ms of
+/// retrying under pathological contention.
+const MAX_ADMIN_ATTEMPTS: u32 = 32;
+
+/// Outcome payload of a successful admin mutation (shapes the reply:
+/// `machine` for join/fail/revoke — the pre-chaos wire bytes,
+/// unchanged — `machines` for fail_region, `wan_factor` for wan).
+enum AdminDetail {
+    Machine(usize),
+    Machines(Vec<usize>),
+    WanFactor(f64),
+}
+
+fn apply_admin(op: AdminOp, world: &mut LiveWorld)
+    -> (&'static str, Result<AdminDetail, String>)
+{
+    match op {
+        AdminOp::Join { region, gpu, n_gpus } => {
+            ("join",
+             world.join(region, gpu, n_gpus).map(AdminDetail::Machine))
+        }
+        AdminOp::Fail { machine } => {
+            ("fail",
+             world.fail(machine).map(|()| AdminDetail::Machine(machine)))
+        }
+        AdminOp::Revoke { machine } => {
+            ("revoke",
+             world.fail(machine).map(|()| AdminDetail::Machine(machine)))
+        }
+        AdminOp::FailRegion { region } => {
+            ("fail_region",
+             world.fail_region(region).map(AdminDetail::Machines))
+        }
+        AdminOp::Wan { factor } => {
+            ("wan",
+             world.set_wan_factor(factor).map(AdminDetail::WanFactor))
+        }
+        AdminOp::Panic { .. } => {
+            unreachable!("panic ops never reach the world path")
         }
     }
 }
 
 fn handle_admin(op: AdminOp, shared: &Shared) -> String {
-    // Clone-mutate-publish: the request plane keeps reading the old
-    // generation until the new one is swapped in whole.
-    let (op_name, outcome, fleet_machines, alive_machines, epoch) =
-        shared.world.mutate(|world| {
-            let (op_name, outcome) = match op {
-                AdminOp::Join { region, gpu, n_gpus } => {
-                    ("join", world.join(region, gpu, n_gpus))
-                }
-                AdminOp::Fail { machine } => {
-                    ("fail", world.fail(machine).map(|()| machine))
-                }
-                AdminOp::Revoke { machine } => {
-                    ("revoke", world.fail(machine).map(|()| machine))
-                }
-            };
-            (op_name, outcome, world.fleet.len(),
-             world.alive_machines(), world.epoch())
-        });
-    match outcome {
-        Ok(machine) => {
+    // Optimistic clone-mutate-publish: snapshot, mutate a clone, and
+    // publish only if nothing else published first
+    // ([`WorldCell::publish_if_current`]). The request plane keeps
+    // reading the old generation until the new one is swapped in
+    // whole. Losing the epoch race costs a retry against the winner's
+    // world, with capped exponential backoff and seeded jitter so two
+    // racing admins don't re-collide in lockstep.
+    let mut rng = Rng::new(
+        shared.seed ^ shared.admin_seq.fetch_add(1, Ordering::Relaxed));
+    for attempt in 0..MAX_ADMIN_ATTEMPTS {
+        let snapshot = shared.world.snapshot();
+        let mut next = (*snapshot).clone();
+        let (op_name, outcome) = apply_admin(op, &mut next);
+        let detail = match outcome {
+            Ok(detail) => detail,
+            Err(msg) => {
+                // Declines are deterministic in the snapshot the op
+                // validated against; retrying cannot change them.
+                shared.metrics.global().inc("admin_errors");
+                return error_reply(&msg);
+            }
+        };
+        let fleet_machines = next.fleet.len();
+        let alive_machines = next.alive_machines();
+        let epoch = next.epoch();
+        if shared.world.publish_if_current(&snapshot, next) {
             shared.metrics.global().inc(&format!("admin_{op_name}s"));
+            if attempt > 0 {
+                shared.metrics.global().add("admin_retries",
+                                            u64::from(attempt));
+            }
             let mut reply = Json::obj();
             reply.set("ok", Json::Bool(true));
             reply.set("type", Json::from("admin"));
             reply.set("op", Json::from(op_name));
-            reply.set("machine", Json::from(machine));
+            match detail {
+                AdminDetail::Machine(machine) => {
+                    reply.set("machine", Json::from(machine));
+                }
+                AdminDetail::Machines(machines) => {
+                    let mut arr = Json::arr();
+                    for m in machines {
+                        arr.push(Json::from(m));
+                    }
+                    reply.set("machines", arr);
+                }
+                AdminDetail::WanFactor(factor) => {
+                    reply.set("wan_factor", Json::Num(factor));
+                }
+            }
             reply.set("fleet_machines", Json::from(fleet_machines));
             reply.set("alive_machines", Json::from(alive_machines));
             reply.set("epoch", Json::from(epoch as f64));
-            reply.render()
+            return reply.render();
         }
-        Err(msg) => {
-            shared.metrics.global().inc("admin_errors");
-            error_reply(&msg)
-        }
+        // Lost the publish race: another mutation landed first. Sleep
+        // a jittered slice of an exponentially growing (capped) window
+        // and re-validate against the new world.
+        let cap_us = 200usize << attempt.min(5); // 200µs .. 6.4ms
+        let jitter_us = rng.below(cap_us + 1) as u64;
+        thread::sleep(Duration::from_micros(jitter_us));
     }
+    shared.metrics.global().inc("admin_errors");
+    error_reply("admin contention: publish retries exhausted; retry")
 }
 
 fn stats_reply(shared: &Shared) -> String {
@@ -542,9 +821,19 @@ fn stats_reply(shared: &Shared) -> String {
     reply.set("dense_rebuilds", Json::from(world.dense_rebuilds as f64));
     reply.set("max_dense_n", Json::from(max_dense_n()));
     drop(world);
+    // The self-healing proof pair: a restart that happened is visible
+    // (`worker_restarts` > 0) *and* the daemon that reports it is the
+    // same process that took the hit (`uptime_s` never reset) — so the
+    // chaos gate can distinguish recovered-from from never-crashed and
+    // from silently-respawned.
+    reply.set("uptime_s",
+              Json::Num(shared.started.elapsed().as_secs_f64()));
+    let merged = shared.metrics.merged();
+    reply.set("worker_restarts",
+              Json::from(merged.counter("worker_restarts") as f64));
     // `metrics` keeps the pre-sharding wire shape (merged view);
     // `per_shard` adds the breakdown, shard order.
-    reply.set("metrics", shared.metrics.merged().to_json());
+    reply.set("metrics", merged.to_json());
     let mut per_shard = Json::arr();
     for m in shared.metrics.shard_snapshots() {
         per_shard.push(m.to_json());
@@ -572,7 +861,7 @@ fn stats_reply(shared: &Shared) -> String {
 /// client-observed round trip (window included) lands in
 /// `place_latency_us` at the worker.
 fn shard_loop(shared: &Shared, shard_idx: usize,
-              rx: &mpsc::Receiver<PlaceJob>, window_ms: u64, seed: u64,
+              rx: &mpsc::Receiver<ShardJob>, window_ms: u64, seed: u64,
               cache_capacity: usize)
 {
     let metrics: SharedMetrics = shared.metrics.shard(shard_idx).clone();
@@ -584,7 +873,7 @@ fn shard_loop(shared: &Shared, shard_idx: usize,
     let window = Duration::from_millis(window_ms);
     loop {
         let first = match rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(job) => job,
+            Ok(job) => open_job(job),
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -601,7 +890,7 @@ fn shard_loop(shared: &Shared, shard_idx: usize,
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(job) => batch.push(job),
+                Ok(job) => batch.push(open_job(job)),
                 Err(_) => break,
             }
         }
@@ -627,11 +916,17 @@ fn shard_loop(shared: &Shared, shard_idx: usize,
                 }
                 None => {
                     let reply = world.plan_place(&job.req, &splitter);
+                    let ok = reply.starts_with("{\"ok\":true");
+                    if !ok {
+                        metrics.inc("place_errors");
+                    } else if reply.contains("\"degraded\":true") {
+                        // Oracle-fallback replies are successes for
+                        // the SLO, but the degradation is observable.
+                        metrics.inc("degraded_replies");
+                    }
                     // Only deterministic ok replies are worth pinning;
                     // error replies are cheap to recompute.
-                    if reply.starts_with("{\"ok\":true")
-                        && cache.insert(scope, job.digest, &reply)
-                    {
+                    if ok && cache.insert(scope, job.digest, &reply) {
                         metrics.inc("cache_evictions");
                     }
                     let _ = job.reply.send(reply);
@@ -675,6 +970,8 @@ pub fn run_serve(cli: &Cli) -> Result<()> {
         read_timeout_ms: cli.flag_u64("read-timeout-ms", 2000)?,
         shards: cli.flag_u64("shards", 0)? as usize,
         cache_capacity: cli.flag_u64("cache-capacity", 1024)? as usize,
+        queue_depth: cli.flag_u64("queue-depth", 1024)? as usize,
+        fault_injection: cli.flag_bool("fault-injection"),
     };
     let server = Server::spawn(&config)?;
     {
@@ -690,6 +987,10 @@ pub fn run_serve(cli: &Cli) -> Result<()> {
             } else {
                 format!("{} entries/shard", config.cache_capacity)
             });
+    }
+    if config.fault_injection {
+        println!("fault injection ARMED: admin panic ops will crash \
+                  (and supervision will restart) daemon threads");
     }
     if let Some(a) = server.addr() {
         println!("listening on tcp://{a}");

@@ -35,15 +35,15 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use crate::cluster::{Fleet, GpuModel, Region};
+use crate::cluster::{Fleet, GpuModel, Region, WanModel};
 use crate::gnn::{Classifier, GnnSplitter, RefGcn, RefGcnConfig};
 use crate::graph::{GraphView, HierarchicalGraph, FEATURE_DIM};
-use crate::planner::{CostBackend, HulkSplitterKind, PlanContext,
-                     PlannerRegistry};
+use crate::planner::{CostBackend, HulkSplitterKind, Placement,
+                     PlanContext, PlannerKind, PlannerRegistry};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-use super::protocol::{error_reply, PlaceRequest};
+use super::protocol::{error_reply, PlaceRequest, MAX_WAN_FACTOR};
 
 /// Padded GCN slot count for the serving classifier: room for the
 /// 220-machine planet fleet plus live joins (the daemon declines joins
@@ -79,9 +79,17 @@ pub struct LiveWorld {
     pub hier: HierarchicalGraph,
     backend: CostBackend,
     slots: usize,
-    /// Bumped by every *successful* `join`/`fail` — the scope token
-    /// placement caches and stats key on. Declined mutations (capacity,
-    /// double-fail) leave it unchanged, so they invalidate nothing.
+    /// The pristine WAN matrix from construction — `wan` admin ops
+    /// always scale *this*, never the current matrix, so brownout
+    /// factors replace each other instead of compounding and
+    /// `factor: 1.0` restores the exact original latencies.
+    base_wan: WanModel,
+    /// The currently applied degradation factor (1.0 = healthy).
+    wan_factor: f64,
+    /// Bumped by every *successful* mutation (`join`/`fail`/
+    /// `fail_region`/`wan`) — the scope token placement caches and
+    /// stats key on. Declined mutations (capacity, double-fail) leave
+    /// it unchanged, so they invalidate nothing.
     epoch: u64,
     /// World rebuilds from scratch. No code path increments it — the
     /// field exists so the `Stats` reply can prove that, and so any
@@ -99,8 +107,9 @@ impl LiveWorld {
                  slots", fleet.len()));
         }
         let hier = HierarchicalGraph::from_fleet(Arc::new(fleet.clone()));
-        Ok(LiveWorld { fleet, hier, backend, slots, epoch: 0,
-                       dense_rebuilds: 0 })
+        let base_wan = fleet.wan.clone();
+        Ok(LiveWorld { fleet, hier, backend, slots, base_wan,
+                       wan_factor: 1.0, epoch: 0, dense_rebuilds: 0 })
     }
 
     /// The serving default: the planet_scale synthetic fleet
@@ -170,6 +179,64 @@ impl LiveWorld {
         Ok(())
     }
 
+    /// Correlated regional outage: every alive machine of `region` dies
+    /// in **one** epoch (one cache invalidation, one snapshot swap —
+    /// readers never observe a half-dead region). Returns the failed
+    /// ids. Declined if the region has no alive machines, or if the
+    /// outage would leave the daemon with nothing to plan on.
+    pub fn fail_region(&mut self, region: Region)
+        -> Result<Vec<usize>, String>
+    {
+        let doomed: Vec<usize> = (0..self.fleet.len())
+            .filter(|&m| self.hier.is_alive(m)
+                         && self.hier.machine(m).region == region)
+            .collect();
+        if doomed.is_empty() {
+            return Err(format!(
+                "no alive machines in region {:?}", region.name()));
+        }
+        if doomed.len() == self.alive_machines() {
+            return Err(format!(
+                "failing region {:?} would kill every alive machine; \
+                 declined", region.name()));
+        }
+        for &m in &doomed {
+            self.hier.apply_failure(m);
+        }
+        self.epoch += 1;
+        Ok(doomed)
+    }
+
+    /// Link brownout / flap: swap in `base_wan` scaled by `factor`
+    /// (inter-region latencies only; `1.0` restores the pristine
+    /// matrix bit-for-bit, so a restored world plans byte-identically
+    /// to one that never browned out). Fleet and graph swap in
+    /// lockstep — pricing reads `fleet.wan`, planning reads the
+    /// graph's copy. Declined when the factor is already applied (a
+    /// no-op must not invalidate caches).
+    pub fn set_wan_factor(&mut self, factor: f64) -> Result<f64, String> {
+        if !factor.is_finite() || !(1.0..=MAX_WAN_FACTOR).contains(&factor)
+        {
+            return Err(format!(
+                "wan factor must be in 1.0..={MAX_WAN_FACTOR}, \
+                 got {factor}"));
+        }
+        if factor == self.wan_factor {
+            return Err(format!("wan factor is already {factor}"));
+        }
+        let wan = self.base_wan.scaled(factor);
+        self.fleet.wan = wan.clone();
+        self.hier.apply_wan(wan);
+        self.wan_factor = factor;
+        self.epoch += 1;
+        Ok(factor)
+    }
+
+    /// The currently applied WAN degradation factor (1.0 = healthy).
+    pub fn wan_factor(&self) -> f64 {
+        self.wan_factor
+    }
+
     /// Answer one `Place` request: plan the workload with every
     /// requested system and render the reply.
     ///
@@ -200,6 +267,7 @@ impl LiveWorld {
         let registry = PlannerRegistry::resolve(&req.systems.join(","))
             .map_err(|e| e.to_string())?;
         let mut results = Json::arr();
+        let mut any_degraded = false;
         for planner in registry.iter() {
             let ctx = PlanContext::new(
                 &self.fleet, &self.hier, &req.workload,
@@ -208,7 +276,25 @@ impl LiveWorld {
                 .with_hier(&self.hier);
             let mut entry = Json::obj();
             entry.set("system", Json::from(planner.slug()));
-            match planner.plan(&ctx) {
+            // Degraded-mode rung: only the full Hulk planner consults
+            // the shared GCN forward, so only it has an oracle path to
+            // fall back to when that forward fails (or grouped the
+            // surviving fleet unplannably). Everything else keeps its
+            // plain decline.
+            let (planned, degraded) = plan_or_degrade(
+                planner.plan(&ctx),
+                || {
+                    anyhow::ensure!(
+                        matches!(planner.kind(), PlannerKind::Hulk),
+                        "no oracle fallback for {}", planner.slug());
+                    let oracle_ctx = PlanContext::new(
+                        &self.fleet, &self.hier, &req.workload,
+                        HulkSplitterKind::Oracle)
+                        .with_backend(self.backend)
+                        .with_hier(&self.hier);
+                    planner.plan(&oracle_ctx)
+                });
+            match planned {
                 Ok(placement) => {
                     placement
                         .validate_machines(&self.fleet)
@@ -238,6 +324,10 @@ impl LiveWorld {
                         tasks.push(tj);
                     }
                     entry.set("tasks", tasks);
+                    if degraded {
+                        entry.set("degraded", Json::Bool(true));
+                        any_degraded = true;
+                    }
                 }
                 Err(e) => {
                     // A planner declining (infeasible workload, empty
@@ -253,7 +343,30 @@ impl LiveWorld {
         reply.set("ok", Json::Bool(true));
         reply.set("type", Json::from("place"));
         reply.set("results", results);
+        if any_degraded {
+            reply.set("degraded", Json::Bool(true));
+        }
         Ok(reply)
+    }
+}
+
+/// The degraded-planning decision, factored out so the ladder rung is
+/// testable without a failing classifier in hand: a primary plan that
+/// succeeded is served as-is (`degraded = false`, fallback never runs —
+/// the healthy path stays byte-identical); a failed primary retries
+/// through `fallback`, and only a fallback that actually served flags
+/// `degraded`. If both fail, the *primary* error is reported (it names
+/// the real decline; the fallback's is usually a duplicate).
+fn plan_or_degrade(
+    primary: anyhow::Result<Placement>,
+    fallback: impl FnOnce() -> anyhow::Result<Placement>,
+) -> (anyhow::Result<Placement>, bool) {
+    match primary {
+        Ok(p) => (Ok(p), false),
+        Err(primary_err) => match fallback() {
+            Ok(p) => (Ok(p), true),
+            Err(_) => (Err(primary_err), false),
+        },
     }
 }
 
@@ -304,6 +417,27 @@ impl WorldCell {
                 Arc::new(next);
         }
         out
+    }
+
+    /// Optimistic publish (the admin retry path): install `next` as the
+    /// new generation **iff** `expected` is still the published `Arc`.
+    /// Returns `false` — publishing nothing — when another mutation won
+    /// the epoch race first; the caller re-snapshots, re-applies its op
+    /// against the newer world, and retries (with backoff — see
+    /// `handle_admin`). Unlike [`mutate`](Self::mutate) this never
+    /// holds the `admin` lock, so N concurrent admins make progress
+    /// lock-free: exactly one wins each round.
+    pub fn publish_if_current(&self, expected: &Arc<LiveWorld>,
+                              next: LiveWorld) -> bool
+    {
+        let mut published = self.published.lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        if Arc::ptr_eq(&published, expected) {
+            *published = Arc::new(next);
+            true
+        } else {
+            false
+        }
     }
 }
 
@@ -525,6 +659,139 @@ mod tests {
         let still = cell.snapshot();
         assert!(Arc::ptr_eq(&after, &still),
                 "a no-op admin must not re-key the request plane");
+    }
+
+    #[test]
+    fn fail_region_is_one_correlated_epoch() {
+        let mut world = LiveWorld::planet(0, CostBackend::Analytic);
+        let region = world.fleet.machines[0].region;
+        let expected: Vec<usize> = world
+            .fleet
+            .machines
+            .iter()
+            .filter(|m| m.region == region)
+            .map(|m| m.id)
+            .collect();
+        let doomed = world.fail_region(region).unwrap();
+        assert_eq!(doomed, expected);
+        assert!(doomed.len() > 1, "planet regions hold many machines");
+        assert_eq!(world.epoch(), 1,
+                   "a whole-region outage is one epoch, not one per \
+                    machine");
+        for &m in &doomed {
+            assert!(!world.hier.is_alive(m));
+        }
+        assert_eq!(world.alive_machines(), 220 - doomed.len());
+        // Second outage of the same region: nothing left to kill.
+        let err = world.fail_region(region).unwrap_err();
+        assert!(err.contains("no alive machines"), "{err}");
+        // A single-region world declines a total blackout.
+        let mut one = LiveWorld::new(Fleet::synthetic(8, 1, 3),
+                                     CostBackend::Analytic, 16)
+            .unwrap();
+        let r = one.fleet.machines[0].region;
+        let err = one.fail_region(r).unwrap_err();
+        assert!(err.contains("every alive machine"), "{err}");
+        assert_eq!(one.epoch(), 0);
+    }
+
+    #[test]
+    fn wan_factor_swaps_scales_and_restores_bit_for_bit() {
+        let mut world = LiveWorld::planet(0, CostBackend::Analytic);
+        let (classifier, params) = default_classifier(0);
+        let req = place_req(vec![ModelSpec::bert_large()], &["hulk"]);
+        let healthy = {
+            let s = GnnSplitter::new(&classifier, &params);
+            world.plan_place(&req, &s)
+        };
+        let (ra, rb) = (Region::ALL[0], Region::ALL[2]);
+        let base = world.fleet.wan.latency_ms(ra, rb).unwrap();
+        world.set_wan_factor(4.0).unwrap();
+        assert_eq!(world.epoch(), 1);
+        assert_eq!(world.wan_factor(), 4.0);
+        assert_eq!(world.fleet.wan.latency_ms(ra, rb), Some(base * 4.0));
+        // Factors replace each other (scale from base, not compound).
+        world.set_wan_factor(2.0).unwrap();
+        assert_eq!(world.fleet.wan.latency_ms(ra, rb), Some(base * 2.0));
+        assert_eq!(world.epoch(), 2);
+        // Same factor again is a declined no-op.
+        let err = world.set_wan_factor(2.0).unwrap_err();
+        assert!(err.contains("already"), "{err}");
+        assert_eq!(world.epoch(), 2);
+        // Out-of-range factors are typed declines.
+        assert!(world.set_wan_factor(0.5).is_err());
+        assert!(world.set_wan_factor(f64::NAN).is_err());
+        assert!(world.set_wan_factor(1e9).is_err());
+        // Restore: the world is value-identical to one that never
+        // browned out, so the (deterministic) reply is byte-identical.
+        world.set_wan_factor(1.0).unwrap();
+        assert_eq!(world.fleet.wan.latency_ms(ra, rb), Some(base));
+        let restored = {
+            let s = GnnSplitter::new(&classifier, &params);
+            world.plan_place(&req, &s)
+        };
+        assert_eq!(healthy, restored,
+                   "a flapped-and-restored link must not change \
+                    placements");
+    }
+
+    #[test]
+    fn plan_or_degrade_only_flags_actual_fallbacks() {
+        let plan = || Placement { per_task: Vec::new() };
+        // Healthy primary: served as-is, fallback never consulted.
+        let (out, degraded) = plan_or_degrade(Ok(plan()), || {
+            panic!("fallback must not run when the primary planned")
+        });
+        assert!(out.is_ok());
+        assert!(!degraded);
+        // Failed primary, fallback serves: degraded.
+        let (out, degraded) = plan_or_degrade(
+            Err(anyhow::anyhow!("forward failed")), || Ok(plan()));
+        assert!(out.is_ok());
+        assert!(degraded);
+        // Both fail: the primary's error surfaces, not the fallback's.
+        let (out, degraded) = plan_or_degrade(
+            Err(anyhow::anyhow!("primary decline")),
+            || Err(anyhow::anyhow!("fallback decline")));
+        assert!(out.unwrap_err().to_string().contains("primary"));
+        assert!(!degraded);
+    }
+
+    #[test]
+    fn healthy_replies_never_carry_a_degraded_flag() {
+        let world = LiveWorld::planet(0, CostBackend::Analytic);
+        let (classifier, params) = default_classifier(0);
+        let s = GnnSplitter::new(&classifier, &params);
+        let req = place_req(vec![ModelSpec::bert_large(),
+                                 ModelSpec::gpt2_xl()], &["hulk"]);
+        let reply = world.plan_place(&req, &s);
+        assert!(!reply.contains("degraded"),
+                "the non-degraded path must stay byte-identical: \
+                 {reply}");
+    }
+
+    #[test]
+    fn publish_if_current_loses_cleanly_to_a_newer_generation() {
+        let cell = WorldCell::new(
+            LiveWorld::planet(0, CostBackend::Analytic));
+        let stale = cell.snapshot();
+        // Someone else wins the race first.
+        cell.mutate(|w| w.fail(7)).unwrap();
+        let mut attempt = (*stale).clone();
+        attempt.fail(9).unwrap();
+        assert!(!cell.publish_if_current(&stale, attempt),
+                "a stale expected snapshot must not publish");
+        assert_eq!(cell.snapshot().epoch(), 1,
+                   "the loser published nothing");
+        // Retry against the fresh snapshot wins.
+        let current = cell.snapshot();
+        let mut retry = (*current).clone();
+        retry.fail(9).unwrap();
+        assert!(cell.publish_if_current(&current, retry));
+        let now = cell.snapshot();
+        assert_eq!(now.epoch(), 2);
+        assert!(!now.hier.is_alive(7));
+        assert!(!now.hier.is_alive(9));
     }
 
     #[test]

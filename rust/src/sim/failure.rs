@@ -33,6 +33,34 @@ pub fn sort_script(script: &mut [FailurePlan]) {
     });
 }
 
+/// A correlated outage: every machine dies at the same instant (one
+/// regional blast radius), canonically ordered.
+pub fn correlated_script(at_ms: f64, machines: &[usize])
+    -> Vec<FailurePlan>
+{
+    let mut script: Vec<FailurePlan> = machines
+        .iter()
+        .map(|&machine| FailurePlan { at_ms, machine })
+        .collect();
+    sort_script(&mut script);
+    script
+}
+
+/// A staggered wave: machine k dies at `start_ms + k * gap_ms` in the
+/// order given (spot-revocation notices arriving one by one).
+pub fn staggered_script(machines: &[usize], start_ms: f64, gap_ms: f64)
+    -> Vec<FailurePlan>
+{
+    machines
+        .iter()
+        .enumerate()
+        .map(|(k, &machine)| FailurePlan {
+            at_ms: start_ms + k as f64 * gap_ms,
+            machine,
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -47,6 +75,30 @@ mod tests {
         sort_script(&mut script);
         let order: Vec<usize> = script.iter().map(|f| f.machine).collect();
         assert_eq!(order, vec![7, 1, 3]);
+    }
+
+    #[test]
+    fn correlated_script_shares_one_instant_and_sorts_by_id() {
+        let script = correlated_script(120.0, &[9, 2, 5]);
+        assert!(script.iter().all(|f| f.at_ms == 120.0));
+        let ids: Vec<usize> = script.iter().map(|f| f.machine).collect();
+        assert_eq!(ids, vec![2, 5, 9]);
+    }
+
+    #[test]
+    fn staggered_script_spaces_failures_by_gap() {
+        let script = staggered_script(&[4, 8, 1], 100.0, 40.0);
+        assert_eq!(script.len(), 3);
+        assert_eq!(script[0],
+                   FailurePlan { at_ms: 100.0, machine: 4 });
+        assert_eq!(script[1],
+                   FailurePlan { at_ms: 140.0, machine: 8 });
+        assert_eq!(script[2],
+                   FailurePlan { at_ms: 180.0, machine: 1 });
+        // Already canonical when the wave is ascending in time.
+        let mut sorted = script.clone();
+        sort_script(&mut sorted);
+        assert_eq!(sorted, script);
     }
 
     #[test]

@@ -33,6 +33,7 @@ pub use cluster::{execute_placement, execute_placement_with,
                   ClusterExecution, ExecOptions, ExecReport, LinkUse,
                   TaskExec};
 pub use engine::{Engine, Event};
-pub use failure::{sort_script, FailureOutcome, FailurePlan};
+pub use failure::{correlated_script, sort_script, staggered_script,
+                  FailureOutcome, FailurePlan};
 pub use pipeline_sim::{simulate_pipeline, PipelineSimResult};
 pub use trace::{Trace, TraceEvent};

@@ -15,6 +15,13 @@
 //!    connection; oversized frames error-then-close; partial writes
 //!    reassemble; stalled clients are disconnected; the daemon never
 //!    panics or wedges.
+//! 5. Self-healing: injected worker/shard panics are supervised and
+//!    restarted in-process (`worker_restarts` visible in stats, and
+//!    only when `--fault-injection` armed them); overload sheds at the
+//!    accept door with a typed `overloaded` reply; shutdown drains the
+//!    in-flight batch before any thread exits; chaos admin ops
+//!    (`fail_region`, `wan`) mutate the world through the same
+//!    incremental seam as `fail`/`join`.
 
 use std::io::Write;
 use std::net::TcpStream;
@@ -384,6 +391,270 @@ fn shutdown_reply_then_every_thread_exits() {
     // join() hangs forever if any worker/batcher/acceptor wedges —
     // the test timing out IS the failure signal.
     server.join();
+}
+
+#[test]
+fn shutdown_drains_the_in_flight_batch() {
+    // A 300ms batch window guarantees the place below is still sitting
+    // in its shard's open batch when the shutdown lands.
+    let (server, mut place_conn) = spawn(5, 300);
+    write_frame(&mut place_conn, PLACE.as_bytes()).unwrap();
+    // Let the place reach its shard and open the batch window.
+    thread::sleep(Duration::from_millis(100));
+    let mut admin = TcpStream::connect(server.addr().unwrap()).unwrap();
+    let reply = rpc(&mut admin, r#"{"op":"shutdown"}"#);
+    assert!(reply.contains("\"ok\":true"), "{reply}");
+    // The in-flight batch must drain: the already-accepted place gets
+    // its full reply, not a dropped connection.
+    place_conn
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    let reply = read_frame(&mut place_conn)
+        .expect("read survives shutdown")
+        .expect("in-flight place is answered before exit");
+    let reply = String::from_utf8(reply).unwrap();
+    assert!(reply.starts_with("{\"ok\":true"), "{reply}");
+    assert_eq!(reply_machines(&reply).len(), 2);
+    drop(place_conn);
+    drop(admin);
+    server.join();
+}
+
+#[test]
+fn overload_sheds_at_the_door_with_a_typed_reply() {
+    let config = ServeConfig {
+        seed: 0,
+        batch_window_ms: 0,
+        workers: 1,
+        queue_depth: 1,
+        ..ServeConfig::default()
+    };
+    let server = Server::spawn(&config).unwrap();
+    let addr = server.addr().unwrap();
+    // The only worker claims this connection and holds it mid-session.
+    let mut held = TcpStream::connect(addr).unwrap();
+    thread::sleep(Duration::from_millis(100));
+    // The single queue slot fills.
+    let mut queued = TcpStream::connect(addr).unwrap();
+    thread::sleep(Duration::from_millis(100));
+    // The third arrival finds the queue full: typed refusal, then
+    // close — never a silent hang.
+    let mut shed = TcpStream::connect(addr).unwrap();
+    shed.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let reply = read_frame(&mut shed).unwrap().expect("shed reply");
+    let reply = String::from_utf8(reply).unwrap();
+    assert!(reply.contains("\"ok\":false")
+        && reply.contains("overloaded"), "{reply}");
+    match read_frame(&mut shed) {
+        Ok(None) | Err(_) => {} // closed, as promised
+        Ok(Some(other)) => {
+            panic!("shed connection kept talking: {other:?}")
+        }
+    }
+    // The held connection is unharmed and the shed is accounted.
+    let stats = Json::parse(&rpc(&mut held, r#"{"op":"stats"}"#)).unwrap();
+    let shed_count = stats.get("metrics").unwrap().get("counters")
+        .unwrap().get("connections_shed").and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    assert_eq!(shed_count, 1.0);
+    // Releasing the worker drains the queued connection normally.
+    drop(held);
+    queued.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let reply = rpc(&mut queued, r#"{"op":"stats"}"#);
+    assert!(reply.contains("\"ok\":true"), "{reply}");
+}
+
+#[test]
+fn injected_panics_are_supervised_and_recovered_in_process() {
+    let config = ServeConfig {
+        seed: 2,
+        batch_window_ms: 0,
+        shards: 1,
+        fault_injection: true,
+        ..ServeConfig::default()
+    };
+    let server = Server::spawn(&config).unwrap();
+    let addr = server.addr().unwrap();
+
+    // Worker scope: the acknowledgment arrives *before* the crash,
+    // then the handling worker dies and this connection drops.
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let reply = rpc(&mut conn,
+                    r#"{"op":"admin","action":"panic","scope":"worker"}"#);
+    assert!(reply.contains("\"ok\":true")
+        && reply.contains("\"scope\":\"worker\""), "{reply}");
+    conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    match read_frame(&mut conn) {
+        Ok(None) | Err(_) => {} // the panicking worker hung up
+        Ok(Some(other)) => {
+            panic!("worker survived an injected panic: {other:?}")
+        }
+    }
+
+    // Shard scope: poison the (single) batcher shard's channel.
+    let mut conn = TcpStream::connect(addr).unwrap();
+    let reply = rpc(&mut conn,
+                    r#"{"op":"admin","action":"panic","scope":"shard"}"#);
+    assert!(reply.contains("\"ok\":true")
+        && reply.contains("\"scope\":\"shard\""), "{reply}");
+
+    // Both crashes are recovered by the supervisor, visibly: the
+    // restart counter reaches 2 and the same process keeps serving.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let stats =
+            Json::parse(&rpc(&mut conn, r#"{"op":"stats"}"#)).unwrap();
+        let restarts = stats.get("worker_restarts")
+            .and_then(Json::as_f64).unwrap_or(0.0);
+        if restarts >= 2.0 {
+            let counters =
+                stats.get("metrics").unwrap().get("counters").unwrap();
+            let role = |name: &str| counters.get(name)
+                .and_then(Json::as_f64).unwrap_or(0.0);
+            assert!(role("restarts_worker") >= 1.0,
+                    "worker restart not attributed");
+            assert!(role("restarts_shard") >= 1.0,
+                    "shard restart not attributed");
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline,
+                "supervisor never recovered both panics \
+                 (worker_restarts = {restarts})");
+        thread::sleep(Duration::from_millis(50));
+    }
+    // The restarted pool still places — the crash cost nothing lasting.
+    let reply = rpc(&mut conn, PLACE);
+    assert!(reply.starts_with("{\"ok\":true"), "{reply}");
+}
+
+#[test]
+fn unarmed_daemons_decline_panic_injection() {
+    // No --fault-injection: the panic op is a typed refusal on a
+    // connection that stays alive, never a crash.
+    let (_server, mut stream) = spawn(0, 0);
+    let reply = rpc(&mut stream,
+                    r#"{"op":"admin","action":"panic","scope":"worker"}"#);
+    assert!(reply.contains("\"ok\":false")
+        && reply.contains("fault injection is disabled"), "{reply}");
+    let reply = rpc(&mut stream, r#"{"op":"stats"}"#);
+    assert!(reply.contains("\"ok\":true"), "{reply}");
+    let stats = Json::parse(&reply).unwrap();
+    assert_eq!(stats.get("worker_restarts").and_then(Json::as_f64),
+               Some(0.0));
+}
+
+#[test]
+fn region_outages_and_wan_brownouts_flow_through_admin() {
+    let (_server, mut stream) = spawn(13, 0);
+    let stats = Json::parse(&rpc(&mut stream, r#"{"op":"stats"}"#))
+        .unwrap();
+    let alive0 = stats.get("alive_machines").and_then(Json::as_usize)
+        .unwrap();
+
+    // Fail the first region that actually has machines: one admin op,
+    // one epoch, every doomed id reported.
+    let mut doomed: Vec<usize> = Vec::new();
+    let mut dead_region = "";
+    for region in hulk::cluster::Region::ALL {
+        let reply = rpc(&mut stream, &format!(
+            r#"{{"op":"admin","action":"fail_region","region":"{}"}}"#,
+            region.name()));
+        let parsed = Json::parse(&reply).unwrap();
+        if parsed.get("ok").and_then(Json::as_bool) == Some(true) {
+            doomed = parsed.get("machines").and_then(Json::as_arr)
+                .unwrap().iter().map(|m| m.as_usize().unwrap())
+                .collect();
+            assert!(!doomed.is_empty(), "{reply}");
+            assert_eq!(
+                parsed.get("alive_machines").and_then(Json::as_usize),
+                Some(alive0 - doomed.len()), "{reply}");
+            dead_region = region.name();
+            break;
+        }
+        assert!(reply.contains("no alive machines"), "{reply}");
+    }
+    assert!(!doomed.is_empty(),
+            "the planet fleet has at least one populated region");
+
+    // Re-failing the same region is a typed decline, not a panic.
+    let reply = rpc(&mut stream, &format!(
+        r#"{{"op":"admin","action":"fail_region","region":"{dead_region}"}}"#));
+    assert!(reply.contains("no alive machines"), "{reply}");
+
+    // Every subsequent placement avoids the dead region wholesale.
+    let reply = rpc(&mut stream, PLACE);
+    for (t, machines) in reply_machines(&reply).iter().enumerate() {
+        for m in machines {
+            assert!(!doomed.contains(m),
+                    "task {t} placed on dead-region machine {m}");
+        }
+    }
+
+    // WAN brownout: the factor lands, placements still answer.
+    let reply =
+        rpc(&mut stream, r#"{"op":"admin","action":"wan","factor":8}"#);
+    let parsed = Json::parse(&reply).unwrap();
+    assert_eq!(parsed.get("ok").and_then(Json::as_bool), Some(true),
+               "{reply}");
+    assert_eq!(parsed.get("wan_factor").and_then(Json::as_f64),
+               Some(8.0));
+    let reply = rpc(&mut stream, PLACE);
+    assert!(reply.starts_with("{\"ok\":true"), "{reply}");
+
+    // Restore is factor 1.0; a repeated restore is a typed no-op
+    // decline (a no-op must not invalidate caches), and an absurd
+    // factor is refused at the parse boundary.
+    let reply =
+        rpc(&mut stream, r#"{"op":"admin","action":"wan","factor":1}"#);
+    assert!(reply.contains("\"ok\":true"), "{reply}");
+    let reply =
+        rpc(&mut stream, r#"{"op":"admin","action":"wan","factor":1}"#);
+    assert!(reply.contains("already"), "{reply}");
+    let reply = rpc(&mut stream,
+                    r#"{"op":"admin","action":"wan","factor":1000}"#);
+    assert!(reply.contains("\"ok\":false") && reply.contains("factor"),
+            "{reply}");
+}
+
+#[cfg(unix)]
+#[test]
+fn stale_sockets_are_reclaimed_but_live_daemons_are_not_clobbered() {
+    let path = std::env::temp_dir().join(format!(
+        "hulk-serve-stale-{}.sock", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    // A stale socket file: a listener once lived here and died without
+    // unlinking. A fresh daemon must probe, find nobody answering, and
+    // reclaim the path.
+    let dead = std::os::unix::net::UnixListener::bind(&path).unwrap();
+    drop(dead);
+    assert!(std::fs::metadata(&path).is_ok(), "stale file persists");
+    let config = ServeConfig {
+        addr: None,
+        uds: Some(path.clone()),
+        batch_window_ms: 0,
+        ..ServeConfig::default()
+    };
+    let server = Server::spawn(&config).expect("stale socket reclaimed");
+    let mut stream =
+        std::os::unix::net::UnixStream::connect(&path).unwrap();
+    let reply = roundtrip(&mut stream, r#"{"op":"stats"}"#.as_bytes())
+        .unwrap();
+    assert!(String::from_utf8(reply).unwrap().contains("\"ok\":true"));
+    // But a *live* daemon on the path is never clobbered: the second
+    // spawn probes, gets an answer, and refuses with a typed error.
+    let err = match Server::spawn(&config) {
+        Err(err) => err,
+        Ok(_) => panic!("binding over a live daemon must refuse"),
+    };
+    assert!(format!("{err:#}").contains("refusing to bind"), "{err:#}");
+    // The refusal did not unlink the live daemon's socket.
+    let mut stream =
+        std::os::unix::net::UnixStream::connect(&path).unwrap();
+    let reply = roundtrip(&mut stream, r#"{"op":"stats"}"#.as_bytes())
+        .unwrap();
+    assert!(String::from_utf8(reply).unwrap().contains("\"ok\":true"));
+    drop(server);
+    let _ = std::fs::remove_file(&path);
 }
 
 #[cfg(unix)]
